@@ -1,0 +1,45 @@
+//! One-shot full reproduction: collect → train → cross-validate →
+//! evaluate selection → FCN experiments — prints every table and figure
+//! of the paper's evaluation section and writes them under `results/`.
+//!
+//!     cargo run --release --example paper_pipeline
+
+use mtnn::dataset::{collect_paper_dataset, save_csv, to_ml_dataset};
+use mtnn::experiments::{classifiers, emit, fcn_eval, fig1, fig23, mtnn_eval, results_dir};
+use mtnn::selector::Selector;
+
+fn main() -> anyhow::Result<()> {
+    let t0 = std::time::Instant::now();
+
+    println!("=== MTNN paper pipeline ===\n");
+
+    // §II motivation: Fig 1.
+    let (f1, csv1) = fig1::run();
+    emit("fig1_nn_vs_nt.txt", &f1);
+    csv1.save(results_dir().join("fig1_nn_vs_nt.csv"))?;
+
+    // §IV: Fig 2, Fig 3, Table II.
+    let (f23, sweep) = fig23::run();
+    emit("fig2_fig3_table2.txt", &f23);
+    sweep.save(results_dir().join("sweep_nt_tnn.csv"))?;
+
+    // §V.A data collection → persisted dataset.
+    let records = collect_paper_dataset();
+    save_csv(&records, results_dir().join("samples.csv"))?;
+    println!("dataset: {} samples → results/samples.csv\n", records.len());
+
+    // §VI.A: Table IV, Table VI, Fig 4.
+    emit("table4_table6_fig4.txt", &classifiers::run(42));
+
+    // §VI.B: Fig 5, Fig 6, Table VIII.
+    let selector = Selector::train_default(&records);
+    selector.save(results_dir().join("mtnn_selector.json"))?;
+    emit("fig5_fig6_table8.txt", &mtnn_eval::run(&selector));
+
+    // §VI.C: Table IX, Fig 7, Fig 8, Table X.
+    emit("fig7_fig8_table9_table10.txt", &fcn_eval::run(&selector));
+
+    println!("\npaper pipeline complete in {:.2?}; outputs in results/", t0.elapsed());
+    let _ = to_ml_dataset(&records); // (kept: symmetry with the bench layer)
+    Ok(())
+}

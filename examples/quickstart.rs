@@ -1,0 +1,74 @@
+//! Quickstart: train the MTNN selector, select an algorithm for one NT
+//! operation, execute it for real on PJRT, and verify the numerics.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! (Requires `make artifacts` once beforehand.)
+
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::gemm::cpu::{matmul_nt, Matrix};
+use mtnn::gemm::xla::XlaBackend;
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::{GTX1080, TITANX};
+use mtnn::runtime::Runtime;
+use mtnn::selector::Selector;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Benchmark both NT implementations on the simulated GPUs and train
+    //    the paper's GBDT selector on the labeled results.
+    println!("[1/4] collecting the paper's benchmark dataset (2 GPUs × sweep)…");
+    let records = collect_paper_dataset();
+    println!("       {} labeled samples", records.len());
+    let selector = Selector::train_default(&records);
+
+    // 2. Ask MTNN what to run for a few shapes on each GPU.
+    println!("[2/4] per-shape selections (Algorithm 2):");
+    for gpu in [&GTX1080, &TITANX] {
+        for (m, n, k) in [(128u64, 128u64, 128u64), (512, 512, 512), (8192, 8192, 16384)] {
+            let (algo, reason) = selector.select(gpu, m, n, k);
+            println!("       {:>8} {m:>6}x{n:<6}k={k:<6} → {:<4} ({reason:?})", gpu.name, algo.name());
+        }
+    }
+
+    // 3. Execute the selected implementation for real on the PJRT CPU
+    //    client via the AOT-compiled Pallas artifacts.
+    println!("[3/4] real execution on PJRT:");
+    let backend = XlaBackend::new(Runtime::new(Runtime::default_dir())?);
+    let shape = GemmShape::new(512, 512, 512);
+    let a = Matrix::random(512, 512, 1);
+    let b = Matrix::random(512, 512, 2);
+    let (algo, _) = selector.select(&GTX1080, shape.m, shape.n, shape.k);
+    let chosen = backend.execute(shape, algo, &a, &b)?;
+    let other = backend.execute(
+        shape,
+        if algo == Algorithm::Nt { Algorithm::Tnn } else { Algorithm::Nt },
+        &a,
+        &b,
+    )?;
+    println!(
+        "       selected {} ran in {:?} (artifact {})",
+        algo.name(),
+        chosen.elapsed,
+        chosen.artifact
+    );
+    println!(
+        "       alternative {} ran in {:?}",
+        if algo == Algorithm::Nt { "TNN" } else { "NT" },
+        other.elapsed
+    );
+
+    // 4. Verify against the naive CPU oracle.
+    println!("[4/4] verifying numerics against the CPU oracle…");
+    let expect = matmul_nt(&a, &b);
+    let max_err = chosen
+        .output
+        .data
+        .iter()
+        .zip(&expect.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    anyhow::ensure!(max_err < 1e-2, "max abs error {max_err}");
+    println!("       max abs error vs oracle: {max_err:.2e} — OK");
+    println!("quickstart OK");
+    Ok(())
+}

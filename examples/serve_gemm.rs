@@ -1,0 +1,101 @@
+//! Serving example: the coordinator (engine thread + router + selector)
+//! serves a trace of NT-operation requests with MTNN selection on, and
+//! compares latency/throughput against a forced-NT baseline.
+//!
+//!     cargo run --release --example serve_gemm -- --requests 64 --clients 4
+
+use mtnn::coordinator::{Engine, GemmRequest, Router, RouterConfig};
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::gemm::cpu::Matrix;
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::GTX1080;
+use mtnn::runtime::Runtime;
+use mtnn::selector::Selector;
+use mtnn::util::cli::Args;
+use mtnn::util::rng::Xoshiro256pp;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Serving trace: shapes an FCN-heavy workload would issue, restricted to
+/// the artifact catalog buckets.
+fn trace(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
+    let buckets = [
+        (128u64, 128u64, 128u64),
+        (256, 256, 256),
+        (512, 512, 512),
+        (256, 512, 128),
+        (128, 1024, 256),
+    ];
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n)
+        .map(|_| buckets[rng.next_range(0, buckets.len())])
+        .collect()
+}
+
+fn run_mode(
+    name: &str,
+    force: Option<Algorithm>,
+    requests: usize,
+    clients: usize,
+) -> anyhow::Result<()> {
+    let engine = Engine::spawn(Runtime::default_dir(), 128)?;
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let router = Arc::new(Router::new(
+        selector,
+        engine.handle(),
+        RouterConfig { force },
+    ));
+    // Warm the executables outside the timed window.
+    engine.handle().warmup(
+        &trace(requests, 1)
+            .iter()
+            .flat_map(|&(m, n, k)| {
+                vec![format!("nt_{m}x{n}x{k}"), format!("tnn_{m}x{n}x{k}")]
+            })
+            .collect::<Vec<_>>(),
+    )?;
+
+    let t0 = Instant::now();
+    let per_client = requests / clients;
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let router = router.clone();
+        joins.push(std::thread::spawn(move || {
+            for (i, (m, n, k)) in trace(per_client, 100 + c as u64).into_iter().enumerate() {
+                let req = GemmRequest {
+                    gpu: &GTX1080,
+                    shape: GemmShape::new(m, n, k),
+                    a: Matrix::random(m as usize, k as usize, (c * 1000 + i) as u64),
+                    b: Matrix::random(n as usize, k as usize, (c * 2000 + i) as u64),
+                };
+                router.serve(req).expect("serve");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    let wall = t0.elapsed();
+    let snap = router.metrics.snapshot();
+    println!(
+        "{name:>10}: {} reqs in {wall:.2?} → {:.1} req/s | {}",
+        snap.completed,
+        snap.completed as f64 / wall.as_secs_f64(),
+        snap.render()
+    );
+    engine.shutdown();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(false);
+    let requests: usize = args.get_num("requests", 64);
+    let clients: usize = args.get_num("clients", 4);
+    args.finish()?;
+    println!("serving {requests} NT-operation requests from {clients} concurrent clients");
+    run_mode("MTNN", None, requests, clients)?;
+    run_mode("force-NT", Some(Algorithm::Nt), requests, clients)?;
+    run_mode("force-TNN", Some(Algorithm::Tnn), requests, clients)?;
+    println!("serve_gemm OK");
+    Ok(())
+}

@@ -1,0 +1,3 @@
+"""Build-time Python package: L1 Pallas kernels, the L2 JAX model, and the
+AOT pipeline that lowers the catalog to HLO-text artifacts for the Rust
+runtime. Never imported on the request path."""

@@ -1,0 +1,230 @@
+"""AOT pipeline: lower the artifact catalog to HLO **text** + manifest.
+
+Interchange is HLO text, not serialized protos: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the Rust `xla` crate) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md and
+aot_recipe).
+
+Catalog (DESIGN.md §4 row 14):
+
+* GEMM service entry points — ``nt`` / ``tnn`` / ``nn`` / ``transpose``
+  (+ a pure-jnp ``nn_jnp`` for the perf comparison) for a bucket set of
+  shapes the Rust coordinator serves;
+* FCN artifacts — forward and train-step for the end-to-end example's
+  network, one artifact per per-layer {nt, tnn} plan, so the Rust-side
+  selector can pick any mixed plan at runtime without touching Python.
+
+Run:  cd python && python -m compile.aot --out-dir ../artifacts
+The Makefile invokes this once; it is a no-op when artifacts are newer
+than the sources.
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import gemm_tiles, vmem_bytes_gemm
+
+# ---------------------------------------------------------------------------
+# Catalog definition
+# ---------------------------------------------------------------------------
+
+# GEMM service shape buckets (m, n, k) — power-of-two core plus two
+# rectangular cases exercising tile asymmetry.
+GEMM_SHAPES = [
+    (128, 128, 128),
+    (256, 256, 256),
+    (512, 512, 512),
+    (256, 512, 128),
+    (128, 1024, 256),
+]
+
+# The end-to-end FCN of examples/train_fcn.rs: a scaled-down MNIST MLP.
+FCN_DIMS = (784, 512, 256, 10)
+FCN_BATCH = 128
+FCN_LR = 0.05
+
+F32 = "f32"
+
+
+def spec(shape):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def to_hlo_text(fn, arg_specs) -> str:
+    lowered = jax.jit(fn).lower(*arg_specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def fcn_param_shapes(dims):
+    out = []
+    for fan_in, fan_out in zip(dims[:-1], dims[1:]):
+        out.append((fan_out, fan_in))  # W
+        out.append((fan_out,))  # b
+    return out
+
+
+def build_catalog(quick: bool = False):
+    """Yield (name, fn, input_shapes, n_outputs, meta) entries."""
+    entries = []
+
+    shapes = GEMM_SHAPES[:2] if quick else GEMM_SHAPES
+    for m, n, k in shapes:
+        bm, bn, bk = gemm_tiles(m, n, k)
+        meta = {
+            "op": "gemm",
+            "m": m,
+            "n": n,
+            "k": k,
+            "tiles": [bm, bn, bk],
+            "vmem_bytes_per_step": vmem_bytes_gemm(bm, bn, bk),
+        }
+        entries.append(
+            (f"nt_{m}x{n}x{k}", model.make_gemm_fn("nt"),
+             [(m, k), (n, k)], 1, {**meta, "algo": "nt"})
+        )
+        entries.append(
+            (f"tnn_{m}x{n}x{k}", model.make_gemm_fn("tnn"),
+             [(m, k), (n, k)], 1, {**meta, "algo": "tnn"})
+        )
+        entries.append(
+            (f"nn_{m}x{n}x{k}", model.make_gemm_fn("nn"),
+             [(m, k), (k, n)], 1, {**meta, "algo": "nn"})
+        )
+
+    # Transposes for the distinct B shapes (n, k).
+    seen = set()
+    for _, n, k in shapes:
+        if (n, k) in seen:
+            continue
+        seen.add((n, k))
+        entries.append(
+            (f"transpose_{n}x{k}", model.make_gemm_fn("transpose"),
+             [(n, k)], 1, {"op": "transpose", "n": n, "k": k})
+        )
+
+    # Pure-jnp NN for the L1-vs-native perf comparison.
+    for m, n, k in ([(256, 256, 256)] if quick else [(256, 256, 256), (512, 512, 512)]):
+        entries.append(
+            (f"nnjnp_{m}x{n}x{k}", model.make_gemm_fn("nn_jnp"),
+             [(m, k), (k, n)], 1, {"op": "gemm", "algo": "nn_jnp", "m": m, "n": n, "k": k})
+        )
+
+    # Fused FC-layer forward (extension kernel): relu(x·wᵀ+b) in one kernel.
+    from .kernels import linear_relu
+
+    for mb, out, k in [(128, 512, 784)]:
+        entries.append(
+            (
+                f"linrelu_{mb}x{out}x{k}",
+                lambda x, w, b: (linear_relu(x, w, b),),
+                [(mb, k), (out, k), (out,)],
+                1,
+                {"op": "linear_relu", "m": mb, "n": out, "k": k},
+            )
+        )
+
+    # FCN artifacts: every per-layer plan over {nt, tnn}.
+    n_layers = len(FCN_DIMS) - 1
+    pshapes = fcn_param_shapes(FCN_DIMS)
+    plans = (
+        [("nt",) * n_layers, ("tnn",) * n_layers]
+        if quick
+        else list(itertools.product(("nt", "tnn"), repeat=n_layers))
+    )
+    for plan in plans:
+        tag = "-".join(plan)
+        fcn_meta = {
+            "op": "fcn",
+            "dims": list(FCN_DIMS),
+            "batch": FCN_BATCH,
+            "plan": list(plan),
+            "lr": FCN_LR,
+        }
+        entries.append(
+            (
+                f"fcn_train_{tag}",
+                model.make_train_step_fn(plan, FCN_LR),
+                pshapes + [(FCN_BATCH, FCN_DIMS[0]), (FCN_BATCH, FCN_DIMS[-1])],
+                len(pshapes) + 1,
+                {**fcn_meta, "entry": "train_step"},
+            )
+        )
+    # Forward-only artifacts for the two pure plans.
+    for plan in [("nt",) * n_layers, ("tnn",) * n_layers]:
+        tag = "-".join(plan)
+        entries.append(
+            (
+                f"fcn_fwd_{tag}",
+                model.make_forward_fn(plan),
+                pshapes + [(FCN_BATCH, FCN_DIMS[0])],
+                1,
+                {
+                    "op": "fcn",
+                    "dims": list(FCN_DIMS),
+                    "batch": FCN_BATCH,
+                    "plan": list(plan),
+                    "entry": "forward",
+                },
+            )
+        )
+    return entries
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def emit(out_dir: str, quick: bool = False, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": "mtnn-artifacts-v1", "entries": []}
+    for name, fn, in_shapes, n_out, meta in build_catalog(quick):
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        text = to_hlo_text(fn, [spec(s) for s in in_shapes])
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [{"shape": list(s), "dtype": F32} for s in in_shapes],
+                "n_outputs": n_out,
+                "meta": meta,
+            }
+        )
+        if verbose:
+            print(f"  lowered {name:28s} ({len(text) / 1024:.0f} KiB)")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    if verbose:
+        print(f"wrote {len(manifest['entries'])} artifacts to {out_dir}")
+    return manifest
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument("--quick", action="store_true", help="small catalog (tests)")
+    args = p.parse_args(argv)
+    emit(args.out_dir, quick=args.quick)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,22 @@
+"""L1 — Pallas kernels for the paper's compute hot-spots, plus their
+pure-jnp oracles (`ref`). Build-time only; never imported at runtime."""
+
+from . import ref
+from .common import gemm_tiles, pick_tile, vmem_bytes_gemm
+from .gemm_nn import matmul_nn
+from .gemm_nt import matmul_nt
+from .linear_relu import linear_relu
+from .tnn import matmul_tnn
+from .transpose import transpose
+
+__all__ = [
+    "ref",
+    "pick_tile",
+    "gemm_tiles",
+    "vmem_bytes_gemm",
+    "linear_relu",
+    "matmul_nn",
+    "matmul_nt",
+    "matmul_tnn",
+    "transpose",
+]

@@ -1,0 +1,43 @@
+"""Shared Pallas kernel utilities.
+
+Tile-size selection: Pallas BlockSpecs here require block shapes that
+divide the array dims exactly (we never rely on implicit padding so the
+same kernels lower identically for every catalog shape). `pick_tile`
+returns the largest divisor of `dim` not exceeding `cap`.
+
+TPU-shape notes (DESIGN.md §8): caps default to 128/256 so that on a real
+TPU the blocks align with the 128-lane registers and the 128×128 MXU; on
+CPU (interpret=True) the numbers only affect the emulated grid.
+"""
+
+from __future__ import annotations
+
+
+def pick_tile(dim: int, cap: int = 128) -> int:
+    """Largest divisor of ``dim`` that is ≤ ``cap``.
+
+    >>> pick_tile(512)
+    128
+    >>> pick_tile(784, 64)
+    56
+    >>> pick_tile(10)
+    10
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    for t in range(min(dim, cap), 0, -1):
+        if dim % t == 0:
+            return t
+    return 1  # unreachable: t=1 always divides
+
+
+def gemm_tiles(m: int, n: int, k: int, cap_mn: int = 128, cap_k: int = 128):
+    """Block shape (bm, bn, bk) for a tiled GEMM over (m, n, k)."""
+    return pick_tile(m, cap_mn), pick_tile(n, cap_mn), pick_tile(k, cap_k)
+
+
+def vmem_bytes_gemm(bm: int, bn: int, bk: int, bytes_per_el: int = 4) -> int:
+    """Estimated VMEM footprint of one GEMM grid step: the A block, the
+    B block and the C accumulator block (double-buffering would add the
+    next A/B blocks; reported by aot.py for the DESIGN.md §Perf budget)."""
+    return bytes_per_el * (bm * bk + bk * bn + bm * bn)

@@ -1,0 +1,54 @@
+"""L1 Pallas kernel: tiled NN matmul `C[m,n] = A[m,k] @ B[k,n]`.
+
+Hardware adaptation (DESIGN.md §8): the CUDA 128×128 threadblock GEMM
+becomes a Pallas grid over (m/bm, n/bn, k/bk) with K innermost. Each grid
+step stages an A block (bm×bk) and a B block (bk×bn) in VMEM and issues
+one `jnp.dot` — on a real TPU that is an MXU systolic-array contraction
+(f32 accumulate via ``preferred_element_type``); the C block lives in the
+output VMEM window across the K sweep, playing the role of the CUDA
+register accumulator.
+
+Default caps bm=bn=bk=128 keep each step's VMEM at
+3·128²·4 B = 192 KiB (plus double-buffer headroom) and match the MXU's
+native 128×128 shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import gemm_tiles
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_cap", "interpret"))
+def matmul_nn(a, b, tile_cap: int = 128, interpret: bool = True):
+    """Tiled Pallas NN matmul; shapes must be tileable (always true for the
+    catalog's power-of-two and FCN dims via divisor tiles)."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"NN shape mismatch: {a.shape} x {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm, bn, bk = gemm_tiles(m, n, k, tile_cap, tile_cap)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

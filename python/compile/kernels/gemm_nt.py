@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: direct NT matmul `C[m,n] = A[m,k] @ B[n,k].T`.
+
+This is the reproduction's stand-in for the cuBLAS NT kernel: the B block
+is fetched in its stored (n, k) layout and transposed *inside* the kernel
+before the MXU contraction. On a real TPU that in-register transpose is a
+lane/sublane-crossing relayout on every K step — structurally the same
+cost the paper attributes to cuBLAS's uncoalesced column reads, which is
+exactly why TNN (transpose once, then stream NN) can win for large K.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import gemm_tiles
+
+
+def _matmul_nt_kernel(x_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # In-kernel transpose of the B tile: the "transposed access" path.
+    o_ref[...] += jnp.dot(
+        x_ref[...], b_ref[...].T, preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_cap", "interpret"))
+def matmul_nt(a, b, tile_cap: int = 128, interpret: bool = True):
+    """Direct NT product (B stored n×k, never materialized transposed)."""
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[1]:
+        raise ValueError(f"NT shape mismatch: {a.shape} x {b.shape} (B is n, k)")
+    m, k = a.shape
+    n, _ = b.shape
+    bm, bn, bk = gemm_tiles(m, n, k, tile_cap, tile_cap)
+    return pl.pallas_call(
+        _matmul_nt_kernel,
+        grid=(m // bm, n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(a, b)

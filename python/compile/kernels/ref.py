@@ -1,0 +1,48 @@
+"""Pure-jnp correctness oracles for every Pallas kernel (L1).
+
+These are the ground truth the pytest suite compares the kernels against,
+and the "cuBLAS functional contract" of the reproduction: NT and TNN must
+agree with these up to f32 accumulation-order tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_nn(a, b):
+    """C[m,n] = A[m,k] @ B[k,n]."""
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32)
+
+
+def matmul_nt(a, b):
+    """C[m,n] = A[m,k] @ B[n,k].T — the paper's NT operation."""
+    return jnp.matmul(a, b.T, preferred_element_type=jnp.float32)
+
+
+def transpose(x):
+    """Out-of-place transpose."""
+    return x.T
+
+
+def tnn(a, b):
+    """Algorithm 1: transpose B first, then NN."""
+    return matmul_nn(a, transpose(b))
+
+
+def fcn_forward(params, x):
+    """Reference FCN forward: per layer h = relu(h @ W.T + b); the last
+    layer is linear (logits). ``params`` is [(W[out,in], b[out]), ...]."""
+    h = x
+    for i, (w, b) in enumerate(params):
+        h = matmul_nt(h, w) + b
+        if i + 1 < len(params):
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def softmax_cross_entropy(logits, labels_onehot):
+    """Mean softmax cross-entropy."""
+    logz = jnp.log(jnp.sum(jnp.exp(logits - logits.max(-1, keepdims=True)), -1))
+    logp = logits - logits.max(-1, keepdims=True) - logz[..., None]
+    return -jnp.mean(jnp.sum(labels_onehot * logp, axis=-1))

@@ -1,0 +1,14 @@
+"""L1 composition: TNN = out-of-place transpose kernel + NN matmul kernel
+(the paper's Algorithm 1, with both steps as Pallas kernels so the whole
+path lowers into one HLO module)."""
+
+from __future__ import annotations
+
+from .gemm_nn import matmul_nn
+from .transpose import transpose
+
+
+def matmul_tnn(a, b, tile_cap: int = 128, interpret: bool = True):
+    """`C = A @ B.T` via explicit transpose of B (n×k → k×n) then NN."""
+    bt = transpose(b, interpret=interpret)
+    return matmul_nn(a, bt, tile_cap=tile_cap, interpret=interpret)

@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: out-of-place tiled matrix transpose.
+
+Hardware adaptation of the paper's Ruetsch–Micikevicius shared-memory
+transpose (DESIGN.md §8): each grid program stages one T×T tile of the
+source through VMEM (the TPU analogue of the CUDA shared-memory tile),
+transposes it in-register, and writes the mirrored destination tile. The
+BlockSpec index maps express the HBM↔VMEM schedule the CUDA version
+expressed with threadblocks; like the original, the kernel is purely
+bandwidth-bound (2 × bytes moved, zero FLOPs).
+
+VMEM budget per program: 2 · T² · 4 B = 512 KiB at T = 256 — comfortably
+inside a TPU core's ~16 MiB VMEM, leaving room for double buffering.
+
+interpret=True everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_tile
+
+
+def _transpose_kernel(x_ref, o_ref):
+    # One VMEM-resident tile: read T_r×T_c, write T_c×T_r.
+    o_ref[...] = x_ref[...].T
+
+
+def transpose(x, tile_cap: int = 256, interpret: bool = True):
+    """Out-of-place transpose of a 2-D array via the tiled Pallas kernel.
+
+    Tile sizes are the largest divisors of each dim ≤ ``tile_cap`` so the
+    grid covers the array exactly (no padding logic to diverge between
+    interpret and compiled paths).
+    """
+    if x.ndim != 2:
+        raise ValueError(f"transpose kernel expects 2-D input, got {x.shape}")
+    rows, cols = x.shape
+    tr = pick_tile(rows, tile_cap)
+    tc = pick_tile(cols, tile_cap)
+    return pl.pallas_call(
+        _transpose_kernel,
+        grid=(rows // tr, cols // tc),
+        in_specs=[pl.BlockSpec((tr, tc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((tc, tr), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((cols, rows), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+def vmem_bytes(rows: int, cols: int, tile_cap: int = 256) -> int:
+    """VMEM footprint of one grid step (input tile + output tile)."""
+    tr = pick_tile(rows, tile_cap)
+    tc = pick_tile(cols, tile_cap)
+    return 2 * tr * tc * jnp.dtype(jnp.float32).itemsize

@@ -1,0 +1,173 @@
+"""L2 — the fully connected network (the paper's Caffe workload) in JAX.
+
+Every dense product routes through the L1 Pallas kernels, in the forward
+AND the backward pass, via ``jax.custom_vjp``:
+
+* forward  `Y = X · Wᵀ` — the paper's NT operation, computed either by the
+  direct NT kernel or by TNN (transpose kernel + NN kernel) according to
+  the per-layer *plan* — the L2 realization of MTNN's per-call selection;
+* backward `dX = dY · W`  — an NN product (kernel);
+* backward `dW = dYᵀ · X` — transpose kernel + NN kernel (Caffe's TN call;
+  the paper's Table X shows the backward phase is NT-free, which is why
+  MTNN only accelerates the forward pass).
+
+The training step (forward → softmax CE → SGD update) is a single jittable
+function of flat tensors, AOT-lowered by `aot.py` into one HLO artifact per
+plan so the Rust runtime never touches Python.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul_nn, matmul_nt, matmul_tnn, ref, transpose
+
+# ---------------------------------------------------------------------------
+# Kernel-backed linear primitives with custom VJPs
+# ---------------------------------------------------------------------------
+
+
+def _linear_bwd_shared(res, dy):
+    """Shared backward: dX = dY·W (NN kernel), dW = dYᵀ·X (transpose + NN)."""
+    x, w = res
+    dx = matmul_nn(dy, w)
+    dw = matmul_nn(transpose(dy), x)
+    return dx, dw
+
+
+@jax.custom_vjp
+def linear_nt(x, w):
+    """`x[mb,in] · w[out,in]ᵀ` via the direct NT kernel."""
+    return matmul_nt(x, w)
+
+
+def _linear_nt_fwd(x, w):
+    return linear_nt(x, w), (x, w)
+
+
+linear_nt.defvjp(_linear_nt_fwd, _linear_bwd_shared)
+
+
+@jax.custom_vjp
+def linear_tnn(x, w):
+    """`x[mb,in] · w[out,in]ᵀ` via TNN (transpose kernel + NN kernel)."""
+    return matmul_tnn(x, w)
+
+
+def _linear_tnn_fwd(x, w):
+    return linear_tnn(x, w), (x, w)
+
+
+linear_tnn.defvjp(_linear_tnn_fwd, _linear_bwd_shared)
+
+_LINEAR = {"nt": linear_nt, "tnn": linear_tnn}
+
+# ---------------------------------------------------------------------------
+# FCN model
+# ---------------------------------------------------------------------------
+
+
+def init_params(layer_dims: Sequence[int], seed: int = 0):
+    """He-initialized FCN parameters: [(W[out,in], b[out]), ...]."""
+    keys = jax.random.split(jax.random.PRNGKey(seed), len(layer_dims) - 1)
+    params = []
+    for key, fan_in, fan_out in zip(keys, layer_dims[:-1], layer_dims[1:]):
+        w = jax.random.normal(key, (fan_out, fan_in), jnp.float32) * jnp.sqrt(
+            2.0 / fan_in
+        )
+        b = jnp.zeros((fan_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def forward(params, x, plan: Sequence[str]):
+    """FCN forward through the kernel-backed linears. ``plan`` holds one of
+    'nt' / 'tnn' per layer — the static analogue of MTNN's per-call choice."""
+    assert len(plan) == len(params), f"plan arity {len(plan)} != layers {len(params)}"
+    h = x
+    for i, ((w, b), algo) in enumerate(zip(params, plan)):
+        h = _LINEAR[algo](h, w) + b
+        if i + 1 < len(params):
+            h = jnp.maximum(h, 0.0)
+    return h
+
+
+def loss_fn(params, x, y_onehot, plan):
+    """Mean softmax cross-entropy of the kernel-backed forward."""
+    return ref.softmax_cross_entropy(forward(params, x, plan), y_onehot)
+
+
+def train_step(params, x, y_onehot, lr: float, plan):
+    """One SGD step; returns (new_params, loss)."""
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y_onehot, plan)
+    new_params = [
+        (w - lr * dw, b - lr * db) for (w, b), (dw, db) in zip(params, grads)
+    ]
+    return new_params, loss
+
+
+# ---------------------------------------------------------------------------
+# Flat-tensor entry points for AOT lowering (HLO has no pytrees)
+# ---------------------------------------------------------------------------
+
+
+def flatten_params(params):
+    out = []
+    for w, b in params:
+        out.extend([w, b])
+    return out
+
+
+def unflatten_params(flat):
+    assert len(flat) % 2 == 0
+    return [(flat[i], flat[i + 1]) for i in range(0, len(flat), 2)]
+
+
+def make_forward_fn(plan):
+    """Flat-signature forward: (W1, b1, ..., x) → (logits,)."""
+
+    def fn(*args):
+        *flat, x = args
+        return (forward(unflatten_params(flat), x, plan),)
+
+    return fn
+
+
+def make_train_step_fn(plan, lr: float):
+    """Flat-signature train step:
+    (W1, b1, ..., x, y_onehot) → (W1', b1', ..., loss)."""
+
+    def fn(*args):
+        *flat, x, y = args
+        new_params, loss = train_step(unflatten_params(flat), x, y, lr, plan)
+        return tuple(flatten_params(new_params)) + (loss,)
+
+    return fn
+
+
+def make_gemm_fn(kind: str):
+    """Flat GEMM entry points for the runtime GEMM service."""
+    table = {
+        "nt": lambda a, b: (matmul_nt(a, b),),
+        "tnn": lambda a, b: (matmul_tnn(a, b),),
+        "nn": lambda a, b: (matmul_nn(a, b),),
+        "transpose": lambda a: (transpose(a),),
+        # Pure-jnp NN for L1-vs-XLA-native comparisons in the perf pass.
+        "nn_jnp": lambda a, b: (ref.matmul_nn(a, b),),
+    }
+    return table[kind]
+
+
+@functools.lru_cache(maxsize=None)
+def paper_fcn_dims(dataset: str, hidden_layers: int):
+    """Table IX network configurations."""
+    if dataset == "mnist":
+        hidden = {2: [2048, 1024], 3: [2048, 2048, 1024], 4: [2048, 2048, 2048, 1024]}
+        return tuple([784] + hidden[hidden_layers] + [10])
+    if dataset == "synthetic":
+        return tuple([26752] + [4096] * hidden_layers + [26752])
+    raise ValueError(f"unknown dataset {dataset}")

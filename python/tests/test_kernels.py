@@ -1,0 +1,209 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-power-of-two and degenerate dims)
+and both f32 and bf16 inputs, asserting allclose against ref.py — the CORE
+correctness signal of the kernel layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(seed), shape, jnp.float32).astype(
+        dtype
+    )
+
+
+dims = st.integers(min_value=1, max_value=96)
+
+
+# ---------------------------------------------------------------------------
+# transpose
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(r=dims, c=dims, seed=st.integers(0, 2**31 - 1))
+def test_transpose_matches_ref(r, c, seed):
+    x = rand((r, c), seed)
+    out = kernels.transpose(x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref.transpose(x)))
+
+
+def test_transpose_rejects_non_2d():
+    with pytest.raises(ValueError):
+        kernels.transpose(jnp.zeros((2, 3, 4)))
+
+
+def test_transpose_large_pow2_tiles():
+    x = rand((512, 256), 7)
+    np.testing.assert_array_equal(np.asarray(kernels.transpose(x)), np.asarray(x.T))
+
+
+def test_transpose_vmem_budget():
+    # T=256 tiles: 2 buffers of 256² f32 = 512 KiB, within the 16 MiB VMEM.
+    assert kernels.transpose.__module__  # sanity of import
+    from compile.kernels.transpose import vmem_bytes
+
+    assert vmem_bytes(4096, 4096) == 2 * 256 * 256 * 4
+    assert vmem_bytes(4096, 4096) <= 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# NN matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_nn_matches_ref(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((k, n), seed ^ 0xFFFF)
+    out = kernels.matmul_nn(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_nn(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_matmul_nn_multi_k_tile_accumulation():
+    # k spanning several tiles exercises the @pl.when init + accumulate path.
+    a = rand((64, 384), 1)
+    b = rand((384, 64), 2)
+    np.testing.assert_allclose(
+        np.asarray(kernels.matmul_nn(a, b)),
+        np.asarray(ref.matmul_nn(a, b)),
+        rtol=2e-5,
+        atol=2e-5,
+    )
+
+
+def test_matmul_nn_shape_mismatch():
+    with pytest.raises(ValueError):
+        kernels.matmul_nn(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+# ---------------------------------------------------------------------------
+# NT matmul (direct) and TNN (transpose-then-NN)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_nt_matches_ref(m, k, n, seed):
+    a = rand((m, k), seed)
+    b = rand((n, k), seed ^ 0xABC)
+    out = kernels.matmul_nt(a, b)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(ref.matmul_nt(a, b)), rtol=2e-5, atol=2e-5
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_tnn_equals_nt(m, k, n, seed):
+    """The paper's functional contract: TNN and NT compute the same thing."""
+    a = rand((m, k), seed)
+    b = rand((n, k), seed ^ 0x123)
+    nt = kernels.matmul_nt(a, b)
+    tnn = kernels.matmul_tnn(a, b)
+    np.testing.assert_allclose(np.asarray(nt), np.asarray(tnn), rtol=2e-5, atol=2e-5)
+
+
+def test_nt_shape_mismatch():
+    with pytest.raises(ValueError):
+        kernels.matmul_nt(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gemm_dtypes(dtype):
+    a = rand((32, 48), 3, dtype)
+    b = rand((24, 48), 4, dtype)
+    out = kernels.matmul_nt(a, b)
+    expect = ref.matmul_nt(a, b)
+    # bf16 inputs, f32 accumulate: tolerance scaled to input precision.
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), rtol=tol, atol=tol
+    )
+    assert out.dtype == jnp.float32  # preferred_element_type
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(dim=st.integers(1, 10_000), cap=st.integers(1, 512))
+def test_pick_tile_divides_and_bounded(dim, cap):
+    t = kernels.pick_tile(dim, cap)
+    assert 1 <= t <= min(dim, cap)
+    assert dim % t == 0
+
+
+def test_pick_tile_prefers_large():
+    assert kernels.pick_tile(512, 128) == 128
+    assert kernels.pick_tile(784, 64) == 56
+    assert kernels.pick_tile(10, 128) == 10
+
+
+def test_vmem_estimate_matches_formula():
+    assert kernels.vmem_bytes_gemm(128, 128, 128) == 3 * 128 * 128 * 4
+
+
+# ---------------------------------------------------------------------------
+# fused linear + bias + relu (extension kernel)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(mb=dims, k=dims, out=dims, seed=st.integers(0, 2**31 - 1))
+def test_linear_relu_matches_ref(mb, k, out, seed):
+    x = rand((mb, k), seed)
+    w = rand((out, k), seed ^ 0x77)
+    b = rand((out,), seed ^ 0x99)
+    got = kernels.linear_relu(x, w, b)
+    expect = jnp.maximum(ref.matmul_nt(x, w) + b, 0.0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(expect), rtol=2e-5, atol=2e-5
+    )
+
+
+def test_linear_relu_epilogue_fires_once_across_k_tiles():
+    # K spanning multiple tiles: bias must be added exactly once.
+    x = rand((32, 384), 5)
+    w = rand((16, 384), 6)
+    b = jnp.full((16,), 100.0, jnp.float32)  # large bias exposes double-adds
+    got = kernels.linear_relu(x, w, b)
+    expect = jnp.maximum(ref.matmul_nt(x, w) + b, 0.0)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(expect), rtol=2e-5, atol=2e-4
+    )
+
+
+def test_linear_relu_clamps_negative():
+    x = -jnp.ones((8, 8), jnp.float32)
+    w = jnp.ones((4, 8), jnp.float32)
+    b = jnp.zeros((4,), jnp.float32)
+    out = kernels.linear_relu(x, w, b)
+    assert bool(jnp.all(out == 0.0)), "all-negative pre-activations must clamp"
+
+
+def test_linear_relu_shape_validation():
+    with pytest.raises(ValueError):
+        kernels.linear_relu(
+            jnp.zeros((2, 3)), jnp.zeros((4, 5)), jnp.zeros((4,))
+        )
+    with pytest.raises(ValueError):
+        kernels.linear_relu(
+            jnp.zeros((2, 3)), jnp.zeros((4, 3)), jnp.zeros((5,))
+        )

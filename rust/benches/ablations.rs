@@ -1,0 +1,139 @@
+//! Ablations over the design choices DESIGN.md calls out:
+//!
+//! 1. GBDT depth / estimator count (the paper fixes 8/8 — how sensitive?)
+//! 2. Feature ablation: drop the 5 GPU features (train per-GPU-agnostic)
+//!    vs drop the matrix sizes — which side carries the signal?
+//! 3. Simulator noise sensitivity: accuracy ceiling vs noise sigma.
+//! 4. Memory-fallback rate across the sweep.
+//!
+//! Run: `cargo bench --bench ablations`.
+
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
+use mtnn::experiments::emit;
+use mtnn::gpusim::{ModelParams, Simulator, PAPER_GPUS};
+use mtnn::ml::data::Dataset;
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::metrics::accuracy;
+use mtnn::ml::Classifier;
+use mtnn::util::table::{fnum, TextTable};
+
+fn holdout_acc(data: &Dataset, params: GbdtParams, seed: u64) -> f64 {
+    let (train, test) = data.split_by_group(0.8, seed);
+    let mut g = Gbdt::new(params);
+    g.fit(&train.x, &train.y);
+    accuracy(&g.predict(&test.x), &test.y).total
+}
+
+fn main() {
+    let records = collect_paper_dataset();
+    let data = to_ml_dataset(&records);
+    let mut out = String::new();
+
+    // 1. depth × estimators sweep.
+    let mut t = TextTable::new(
+        "Ablation 1 — GBDT hyper-parameters (holdout accuracy, paper uses depth 8 / 8 trees)",
+        &["max_depth", "n_estimators", "accuracy (%)"],
+    );
+    for depth in [2usize, 4, 6, 8, 10] {
+        for n_est in [1usize, 4, 8, 16] {
+            let mut p = GbdtParams::default();
+            p.tree.max_depth = depth;
+            p.n_estimators = n_est;
+            t.row(vec![
+                depth.to_string(),
+                n_est.to_string(),
+                fnum(holdout_acc(&data, p, 7) * 100.0, 2),
+            ]);
+        }
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // 2. feature ablation.
+    let mut t = TextTable::new(
+        "Ablation 2 — feature groups (holdout accuracy)",
+        &["features", "accuracy (%)"],
+    );
+    let subset = |keep: &[usize]| -> Dataset {
+        let mut d = Dataset::new();
+        for (row, (&y, &g)) in data.x.iter().zip(data.y.iter().zip(&data.group)) {
+            d.push(keep.iter().map(|&i| row[i]).collect(), y, g);
+        }
+        d
+    };
+    for (name, keep) in [
+        ("all 8 (paper)", vec![0usize, 1, 2, 3, 4, 5, 6, 7]),
+        ("sizes only (m,n,k)", vec![5, 6, 7]),
+        ("gpu only (gm,sm,cc,mbw,l2c)", vec![0, 1, 2, 3, 4]),
+        ("sizes + l2c", vec![4, 5, 6, 7]),
+    ] {
+        let d = subset(&keep);
+        t.row(vec![
+            name.to_string(),
+            fnum(holdout_acc(&d, GbdtParams::default(), 7) * 100.0, 2),
+        ]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // 3. noise sensitivity: the accuracy ceiling is set by label noise.
+    let mut t = TextTable::new(
+        "Ablation 3 — simulator noise sigma vs attainable accuracy (full-train protocol)",
+        &["noise_sigma", "full-train accuracy (%)"],
+    );
+    for sigma in [0.0, 0.02, 0.06, 0.12] {
+        let mut d = Dataset::new();
+        for gpu in PAPER_GPUS {
+            let mut params = ModelParams::default();
+            params.noise_sigma = sigma;
+            let sim = Simulator::with_params(gpu, params);
+            for c in sim.sweep() {
+                let feats = gpu
+                    .features()
+                    .iter()
+                    .copied()
+                    .chain([c.m as f64, c.n as f64, c.k as f64])
+                    .collect();
+                d.push(feats, c.label() as f64, gpu.id);
+            }
+        }
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&d.x, &d.y);
+        let acc = accuracy(&g.predict(&d.x), &d.y).total;
+        t.row(vec![format!("{sigma:.2}"), fnum(acc * 100.0, 2)]);
+    }
+    out.push_str(&t.render());
+    out.push('\n');
+
+    // 4. memory-fallback rate over the unfiltered grid.
+    let mut t = TextTable::new(
+        "Ablation 4 — memory-fit outcomes over the full 1000-case grid",
+        &["GPU", "TNN fits", "NT-only (fallback)", "neither"],
+    );
+    for gpu in PAPER_GPUS {
+        let sim = Simulator::new(gpu);
+        let (mut fits, mut nt_only, mut neither) = (0, 0, 0);
+        for &m in &mtnn::gpusim::SIZE_GRID {
+            for &n in &mtnn::gpusim::SIZE_GRID {
+                for &k in &mtnn::gpusim::SIZE_GRID {
+                    if sim.fits(m, n, k) {
+                        fits += 1;
+                    } else if sim.fits_nt_only(m, n, k) {
+                        nt_only += 1;
+                    } else {
+                        neither += 1;
+                    }
+                }
+            }
+        }
+        t.row(vec![
+            gpu.name.into(),
+            fits.to_string(),
+            nt_only.to_string(),
+            neither.to_string(),
+        ]);
+    }
+    out.push_str(&t.render());
+
+    emit("ablations.txt", &out);
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 1 (P_NN/P_NT frequency histograms) + the
+//! calibration-vs-paper table. Run: `cargo bench --bench fig1_nn_vs_nt`.
+
+use mtnn::experiments::{emit, fig1, results_dir};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (text, csv) = fig1::run();
+    emit("fig1_nn_vs_nt.txt", &text);
+    csv.save(results_dir().join("fig1_nn_vs_nt.csv"))
+        .expect("save csv");
+    println!("[fig1] done in {:.2?}", t0.elapsed());
+}

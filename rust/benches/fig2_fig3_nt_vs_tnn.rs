@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 2 (NT-vs-TNN winner grids), Fig 3 (ratio
+//! histograms) and Table II (sample distribution).
+//! Run: `cargo bench --bench fig2_fig3_nt_vs_tnn`.
+
+use mtnn::experiments::{emit, fig23, results_dir};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let (text, csv) = fig23::run();
+    emit("fig2_fig3_table2.txt", &text);
+    csv.save(results_dir().join("sweep_nt_tnn.csv"))
+        .expect("save csv");
+    println!("[fig2/3] done in {:.2?}", t0.elapsed());
+}

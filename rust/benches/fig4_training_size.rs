@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig 4 (training accuracy vs training-set fraction).
+//! Run: `cargo bench --bench fig4_training_size`.
+
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
+use mtnn::experiments::{classifiers, emit, results_dir};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let (text, csv) = classifiers::fig4(&data, 42);
+    emit("fig4_training_size.txt", &text);
+    csv.save(results_dir().join("fig4_training_size.csv"))
+        .expect("save csv");
+    println!("[fig4] done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 5 (NT-vs-MTNN grids), Fig 6 (ratio histogram)
+//! and Table VIII (GOW/LUB selection metrics).
+//! Run: `cargo bench --bench fig5_fig6_table8_mtnn`.
+
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::experiments::{emit, mtnn_eval};
+use mtnn::selector::Selector;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    // §VI.B: the integrated predictor trains on the FULL dataset.
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let text = mtnn_eval::run(&selector);
+    emit("fig5_fig6_table8.txt", &text);
+    println!("[fig5/6, table8] done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,15 @@
+//! Bench: regenerate Fig 7 (MNIST FCN), Fig 8 (synthetic FCN), Table IX
+//! (configs) and Table X (phase breakdown) on the simulated GPUs.
+//! Run: `cargo bench --bench fig7_fig8_table10_fcn`.
+
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::experiments::{emit, fcn_eval};
+use mtnn::selector::Selector;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let text = fcn_eval::run(&selector);
+    emit("fig7_fig8_table9_table10.txt", &text);
+    println!("[fig7/8, table9/10] done in {:.2?}", t0.elapsed());
+}

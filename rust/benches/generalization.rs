@@ -1,0 +1,11 @@
+//! Bench (extension): the seven-learner panel and the cross-GPU
+//! zero-shot generalization study on the held-out GTX 1070.
+//! Run: `cargo bench --bench generalization`.
+
+use mtnn::experiments::{emit, generalization};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    emit("generalization.txt", &generalization::run(42));
+    println!("[generalization] done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,86 @@
+//! Bench: hot-path microbenchmarks for the §Perf pass — predictor latency
+//! (paper: 0.005 ms), GBDT train time (paper: 7 ms), selection+dispatch
+//! overhead, and real PJRT GEMM execution times.
+//! Run: `cargo bench --bench perf_hotpath`.
+
+use mtnn::coordinator::{Engine, GemmRequest, Router, RouterConfig};
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
+use mtnn::experiments::emit;
+use mtnn::gemm::cpu::Matrix;
+use mtnn::gemm::GemmShape;
+use mtnn::gpusim::{Simulator, GTX1080};
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::Classifier;
+use mtnn::runtime::Runtime;
+use mtnn::selector::{features, Selector};
+use mtnn::util::bench::{bench, bench_batched};
+
+fn main() {
+    let mut report = String::from("== §Perf hot-path microbenchmarks ==\n");
+    let records = collect_paper_dataset();
+    let data = to_ml_dataset(&records);
+    let selector = Selector::train_default(&records);
+
+    // 1. GBDT training (paper Table VI: 7 ms on an i7-3820).
+    let r = bench("gbdt.fit (full 1828-sample dataset)", 2, 10, || {
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&data.x, &data.y);
+        g
+    });
+    report.push_str(&format!("{}\n", r.report()));
+
+    // 2. Predictor latency (paper: 0.005 ms = 5 us per call).
+    let row = features(&GTX1080, 4096, 2048, 8192);
+    let r = bench_batched("selector.predict_label (hot path)", 10, 50, 1000, || {
+        selector.model.predict_label(&row)
+    });
+    report.push_str(&format!("{}\n", r.report()));
+
+    // 3. Full Algorithm-2 selection incl. O(1) feature build + fallback.
+    let r = bench_batched("selector.select (features+predict+fallback)", 10, 50, 1000, || {
+        selector.select(&GTX1080, 4096, 2048, 8192)
+    });
+    report.push_str(&format!("{}\n", r.report()));
+
+    // 4. Simulated case timing (drives the experiment sweeps).
+    let sim = Simulator::new(&GTX1080);
+    let r = bench_batched("gpusim.time_case", 10, 50, 1000, || {
+        sim.time_case(2048, 2048, 2048)
+    });
+    report.push_str(&format!("{}\n", r.report()));
+
+    // 5. Real PJRT GEMM execution + coordinator dispatch overhead.
+    let dir = Runtime::default_dir();
+    if dir.join("manifest.json").exists() {
+        let engine = Engine::spawn(dir, 64).expect("engine");
+        engine
+            .handle()
+            .warmup(&["nt_128x128x128".into(), "nt_512x512x512".into()])
+            .unwrap();
+        let router = Router::new(selector, engine.handle(), RouterConfig::default());
+        for (m, n, k) in [(128u64, 128u64, 128u64), (512, 512, 512)] {
+            let a = Matrix::random(m as usize, k as usize, 1);
+            let b = Matrix::random(n as usize, k as usize, 2);
+            let r = bench(&format!("router.serve NT {m}x{n}x{k} (PJRT)"), 3, 15, || {
+                router
+                    .serve(GemmRequest {
+                        gpu: &GTX1080,
+                        shape: GemmShape::new(m, n, k),
+                        a: a.clone(),
+                        b: b.clone(),
+                    })
+                    .unwrap()
+            });
+            report.push_str(&format!("{}\n", r.report()));
+        }
+        report.push_str(&format!(
+            "coordinator metrics: {}\n",
+            router.metrics.snapshot().render()
+        ));
+        engine.shutdown();
+    } else {
+        report.push_str("(PJRT rows skipped: run `make artifacts` first)\n");
+    }
+
+    emit("perf_hotpath.txt", &report);
+}

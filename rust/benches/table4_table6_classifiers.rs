@@ -1,0 +1,15 @@
+//! Bench: regenerate Table IV (5-fold CV) and Table VI (classifier
+//! comparison with train/predict timing).
+//! Run: `cargo bench --bench table4_table6_classifiers`.
+
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
+use mtnn::experiments::{classifiers, emit};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let (t4, _) = classifiers::table4(&data, 42);
+    let (t6, _) = classifiers::table6(&data, 42);
+    emit("table4_table6.txt", &format!("{t4}\n{t6}"));
+    println!("[table4/6] done in {:.2?}", t0.elapsed());
+}

@@ -1,0 +1,144 @@
+//! The execution engine: a dedicated thread owning the PJRT [`Runtime`]
+//! (the `xla` crate's client is `Rc`-based and therefore `!Send`), fed by
+//! a bounded command channel. Batches submitted together are executed
+//! back-to-back, amortizing dispatch.
+
+use crate::gemm::cpu::Matrix;
+use crate::runtime::Runtime;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// One unit of engine work: run `artifact` on `inputs`, reply on `respond`.
+pub struct EngineJob {
+    pub artifact: String,
+    pub inputs: Vec<Matrix>,
+    pub respond: mpsc::Sender<anyhow::Result<Vec<Matrix>>>,
+}
+
+enum Cmd {
+    Run(Box<EngineJob>),
+    /// Eagerly compile artifacts.
+    Warmup(Vec<String>, mpsc::Sender<anyhow::Result<()>>),
+    Shutdown,
+}
+
+/// Cloneable, thread-safe handle to the engine.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::SyncSender<Cmd>,
+}
+
+impl EngineHandle {
+    /// Submit one job; returns the receiver for its result.
+    pub fn submit(
+        &self,
+        artifact: String,
+        inputs: Vec<Matrix>,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Run(Box::new(EngineJob {
+                artifact,
+                inputs,
+                respond: tx,
+            })))
+            .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+        Ok(rx)
+    }
+
+    /// Submit and wait (convenience for synchronous callers).
+    pub fn run(&self, artifact: &str, inputs: Vec<Matrix>) -> anyhow::Result<Vec<Matrix>> {
+        let rx = self.submit(artifact.to_string(), inputs)?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped the response"))?
+    }
+
+    /// Compile artifacts ahead of traffic.
+    pub fn warmup(&self, names: &[String]) -> anyhow::Result<()> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Warmup(names.to_vec(), tx))
+            .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+        rx.recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped the warmup ack"))?
+    }
+}
+
+/// The engine: spawn with an artifact dir, drop (or call shutdown) to stop.
+pub struct Engine {
+    handle: EngineHandle,
+    join: Option<JoinHandle<()>>,
+    tx: mpsc::SyncSender<Cmd>,
+}
+
+impl Engine {
+    /// Spawn the engine thread. `queue_depth` bounds the command channel —
+    /// the backpressure surface of the whole coordinator.
+    pub fn spawn(artifact_dir: std::path::PathBuf, queue_depth: usize) -> anyhow::Result<Engine> {
+        let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
+        // Fail fast on a bad artifact dir: probe the manifest on the caller
+        // thread (cheap), then hand the dir to the engine thread which
+        // builds the actual PJRT client.
+        crate::runtime::Manifest::load(&artifact_dir)?;
+        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("mtnn-engine".into())
+            .spawn(move || {
+                let rt = match Runtime::new(&artifact_dir) {
+                    Ok(rt) => {
+                        let _ = ready_tx.send(Ok(()));
+                        rt
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(cmd) = rx.recv() {
+                    match cmd {
+                        Cmd::Run(job) => {
+                            let refs: Vec<&Matrix> = job.inputs.iter().collect();
+                            let result = rt.execute(&job.artifact, &refs);
+                            // Receiver may have given up; that's fine.
+                            let _ = job.respond.send(result);
+                        }
+                        Cmd::Warmup(names, ack) => {
+                            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                            let _ = ack.send(rt.warmup(&refs));
+                        }
+                        Cmd::Shutdown => break,
+                    }
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        let handle = EngineHandle { tx: tx.clone() };
+        Ok(Engine {
+            handle,
+            join: Some(join),
+            tx,
+        })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    /// Graceful stop: drain queued commands, then join.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Coordinator metrics: selection counts, fallbacks, latency distribution,
+//! throughput. Lock-free-enough (atomics + a mutex-guarded latency buffer).
+
+use crate::util::stats::percentile;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Shared metrics sink.
+#[derive(Default)]
+pub struct CoordinatorMetrics {
+    pub requests: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub selected_nt: AtomicU64,
+    pub selected_tnn: AtomicU64,
+    pub memory_fallbacks: AtomicU64,
+    latencies_us: Mutex<Vec<f64>>,
+}
+
+/// Point-in-time snapshot for reporting.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub selected_nt: u64,
+    pub selected_tnn: u64,
+    pub memory_fallbacks: u64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+}
+
+impl CoordinatorMetrics {
+    pub fn record_selection(&self, algo: crate::gemm::Algorithm, fallback: bool) {
+        match algo {
+            crate::gemm::Algorithm::Nt => self.selected_nt.fetch_add(1, Ordering::Relaxed),
+            crate::gemm::Algorithm::Tnn => self.selected_tnn.fetch_add(1, Ordering::Relaxed),
+            crate::gemm::Algorithm::Nn => 0,
+        };
+        if fallback {
+            self.memory_fallbacks.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn record_latency_us(&self, us: f64) {
+        self.latencies_us.lock().unwrap().push(us);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let lat = self.latencies_us.lock().unwrap();
+        let mean = if lat.is_empty() {
+            f64::NAN
+        } else {
+            lat.iter().sum::<f64>() / lat.len() as f64
+        };
+        MetricsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            selected_nt: self.selected_nt.load(Ordering::Relaxed),
+            selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
+            memory_fallbacks: self.memory_fallbacks.load(Ordering::Relaxed),
+            p50_us: percentile(&lat, 50.0),
+            p95_us: percentile(&lat, 95.0),
+            p99_us: percentile(&lat, 99.0),
+            mean_us: mean,
+        }
+    }
+}
+
+impl MetricsSnapshot {
+    pub fn render(&self) -> String {
+        format!(
+            "requests={} completed={} failed={} | NT={} TNN={} fallback={} | \
+             latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+            self.requests,
+            self.completed,
+            self.failed,
+            self.selected_nt,
+            self.selected_tnn,
+            self.memory_fallbacks,
+            self.p50_us,
+            self.p95_us,
+            self.p99_us,
+            self.mean_us
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::Algorithm;
+
+    #[test]
+    fn selection_counters() {
+        let m = CoordinatorMetrics::default();
+        m.record_selection(Algorithm::Nt, false);
+        m.record_selection(Algorithm::Tnn, false);
+        m.record_selection(Algorithm::Nt, true);
+        let s = m.snapshot();
+        assert_eq!(s.selected_nt, 2);
+        assert_eq!(s.selected_tnn, 1);
+        assert_eq!(s.memory_fallbacks, 1);
+    }
+
+    #[test]
+    fn latency_percentiles() {
+        let m = CoordinatorMetrics::default();
+        for i in 1..=100 {
+            m.record_latency_us(i as f64);
+        }
+        let s = m.snapshot();
+        assert!((s.p50_us - 50.5).abs() < 1.0);
+        assert!(s.p99_us > 98.0);
+        assert!(s.render().contains("p50"));
+    }
+
+    #[test]
+    fn empty_latencies_are_nan_not_panic() {
+        let s = CoordinatorMetrics::default().snapshot();
+        assert!(s.p50_us.is_nan());
+        assert!(s.mean_us.is_nan());
+    }
+}

@@ -1,0 +1,26 @@
+//! L3 coordinator: the serving layer that turns MTNN into a GEMM service.
+//!
+//! Architecture (vLLM-router-like, adapted to a single-host PJRT engine):
+//!
+//! ```text
+//!   clients ──► Router (Send + Sync handle)
+//!                 │  per-request: selector.select(gpu, m, n, k)
+//!                 ▼
+//!               bounded queue ──► Batcher (groups by artifact)
+//!                                     │
+//!                                     ▼
+//!                             Engine thread (owns the PJRT Runtime,
+//!                             which is Rc-based and !Send — hence a
+//!                             dedicated thread, not a pool)
+//! ```
+//!
+//! Responses travel back through per-request channels; metrics count
+//! selections, fallbacks, batching efficiency and latency percentiles.
+
+pub mod engine;
+pub mod metrics;
+pub mod router;
+
+pub use engine::{Engine, EngineHandle};
+pub use metrics::CoordinatorMetrics;
+pub use router::{GemmRequest, GemmResponse, Router, RouterConfig};

@@ -1,0 +1,204 @@
+//! The router: the client-facing API of the GEMM service. For each
+//! request it runs Algorithm 2 (O(1) features → GBDT predict → memory
+//! fallback), maps (shape, algorithm) onto a catalog artifact, and hands
+//! the job to the engine. A micro-batcher groups same-artifact requests
+//! submitted together so the engine executes them back-to-back.
+
+use super::engine::EngineHandle;
+use super::metrics::CoordinatorMetrics;
+use crate::gemm::cpu::Matrix;
+use crate::gemm::xla::XlaBackend;
+use crate::gemm::{Algorithm, GemmShape};
+use crate::gpusim::GpuSpec;
+use crate::selector::{SelectionReason, Selector};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One NT-operation request: `C = A × Bᵀ` on (virtual) GPU `gpu`.
+pub struct GemmRequest {
+    pub gpu: &'static GpuSpec,
+    pub shape: GemmShape,
+    /// A is m×k.
+    pub a: Matrix,
+    /// B is n×k.
+    pub b: Matrix,
+}
+
+/// The response: the product plus what the coordinator decided and why.
+#[derive(Debug)]
+pub struct GemmResponse {
+    pub output: Matrix,
+    pub algorithm: Algorithm,
+    pub reason: SelectionReason,
+    pub artifact: String,
+    pub latency: std::time::Duration,
+}
+
+/// Router configuration.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Force a fixed algorithm instead of MTNN (baseline modes).
+    pub force: Option<Algorithm>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        RouterConfig { force: None }
+    }
+}
+
+/// The router. Cheap to share via `Arc`; submission is thread-safe.
+pub struct Router {
+    selector: Selector,
+    engine: EngineHandle,
+    pub metrics: Arc<CoordinatorMetrics>,
+    config: RouterConfig,
+}
+
+impl Router {
+    pub fn new(selector: Selector, engine: EngineHandle, config: RouterConfig) -> Router {
+        Router {
+            selector,
+            engine,
+            metrics: Arc::new(CoordinatorMetrics::default()),
+            config,
+        }
+    }
+
+    /// Decide the algorithm for a request (Algorithm 2 + config override).
+    pub fn decide(&self, req: &GemmRequest) -> (Algorithm, SelectionReason) {
+        if let Some(forced) = self.config.force {
+            return (forced, SelectionReason::PredictedNt);
+        }
+        let GemmShape { m, n, k } = req.shape;
+        self.selector.select(req.gpu, m, n, k)
+    }
+
+    /// Serve one request synchronously.
+    pub fn serve(&self, req: GemmRequest) -> anyhow::Result<GemmResponse> {
+        let t0 = Instant::now();
+        self.metrics
+            .requests
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let (algo, reason) = self.decide(&req);
+        self.metrics
+            .record_selection(algo, reason == SelectionReason::MemoryFallback);
+        let artifact = XlaBackend::artifact_name(req.shape, algo);
+        let result = self.engine.run(&artifact, vec![req.a, req.b]);
+        match result {
+            Ok(mut outs) => {
+                anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
+                let latency = t0.elapsed();
+                self.metrics
+                    .completed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics
+                    .record_latency_us(latency.as_secs_f64() * 1e6);
+                Ok(GemmResponse {
+                    output: outs.remove(0),
+                    algorithm: algo,
+                    reason,
+                    artifact,
+                    latency,
+                })
+            }
+            Err(e) => {
+                self.metrics
+                    .failed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                Err(e)
+            }
+        }
+    }
+
+    /// Serve a batch: requests are grouped by decided artifact so the
+    /// engine runs same-shape executables back-to-back (dispatch
+    /// amortization); responses come back in submission order.
+    pub fn serve_batch(&self, reqs: Vec<GemmRequest>) -> Vec<anyhow::Result<GemmResponse>> {
+        let n = reqs.len();
+        // Decide everything first.
+        let mut decided: Vec<(usize, GemmRequest, Algorithm, SelectionReason, String)> = reqs
+            .into_iter()
+            .enumerate()
+            .map(|(i, r)| {
+                self.metrics
+                    .requests
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let (algo, reason) = self.decide(&r);
+                self.metrics
+                    .record_selection(algo, reason == SelectionReason::MemoryFallback);
+                let artifact = XlaBackend::artifact_name(r.shape, algo);
+                (i, r, algo, reason, artifact)
+            })
+            .collect();
+        // Group by artifact (stable sort keeps submission order per group).
+        decided.sort_by(|a, b| a.4.cmp(&b.4).then(a.0.cmp(&b.0)));
+
+        // Pipeline: submit each group's jobs, then collect.
+        let mut pending: Vec<(
+            usize,
+            Algorithm,
+            SelectionReason,
+            String,
+            Instant,
+            mpsc::Receiver<anyhow::Result<Vec<Matrix>>>,
+        )> = Vec::with_capacity(n);
+        for (i, r, algo, reason, artifact) in decided {
+            let t0 = Instant::now();
+            match self.engine.submit(artifact.clone(), vec![r.a, r.b]) {
+                Ok(rx) => pending.push((i, algo, reason, artifact, t0, rx)),
+                Err(e) => {
+                    self.metrics
+                        .failed
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    // Represent the submission failure in-order below.
+                    let (tx, rx) = mpsc::channel();
+                    let _ = tx.send(Err(e));
+                    pending.push((i, algo, reason, artifact, t0, rx));
+                }
+            }
+        }
+        let mut out: Vec<Option<anyhow::Result<GemmResponse>>> =
+            (0..n).map(|_| None).collect();
+        for (i, algo, reason, artifact, t0, rx) in pending {
+            let res = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine dropped response"))
+                .and_then(|r| r)
+                .and_then(|mut outs| {
+                    anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
+                    let latency = t0.elapsed();
+                    self.metrics
+                        .completed
+                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    self.metrics.record_latency_us(latency.as_secs_f64() * 1e6);
+                    Ok(GemmResponse {
+                        output: outs.remove(0),
+                        algorithm: algo,
+                        reason,
+                        artifact: artifact.clone(),
+                        latency,
+                    })
+                });
+            if res.is_err() {
+                self.metrics
+                    .failed
+                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            }
+            out[i] = Some(res);
+        }
+        out.into_iter().map(|o| o.expect("all slots filled")).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_uses_selector() {
+        let c = RouterConfig::default();
+        assert!(c.force.is_none());
+    }
+}

@@ -1,0 +1,202 @@
+//! Data-collection pipeline (§V.A of the paper): benchmark NT and TNN over
+//! the size grid on each GPU, apply the memory-fit rule, attach the GPU's
+//! five characteristics, and emit labeled records
+//! `(gm, sm, cc, mbw, l2c, m, n, k) → label`.
+
+use crate::gpusim::{GpuSpec, Simulator, PAPER_GPUS};
+use crate::ml::data::Dataset;
+use crate::util::csv::CsvTable;
+
+/// One benchmarked case with its label and both measured performances
+/// (the performances are kept so the selection experiments — GOW / LUB,
+/// Table VIII — can be computed without re-running the sweep).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Record {
+    pub gpu: String,
+    /// The paper's 5 GPU features (gm, sm, cc, mbw, l2c).
+    pub gpu_features: [f64; 5],
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// GFLOPS of each algorithm on this case.
+    pub p_nn: f64,
+    pub p_nt: f64,
+    pub p_tnn: f64,
+    /// +1 ⇔ P_NT ≥ P_TNN (choose NT); −1 ⇔ choose TNN.
+    pub label: i8,
+}
+
+impl Record {
+    /// The 8-dimensional MTNN input vector.
+    pub fn features(&self) -> Vec<f64> {
+        let g = &self.gpu_features;
+        vec![
+            g[0], g[1], g[2], g[3], g[4], self.m as f64, self.n as f64, self.k as f64,
+        ]
+    }
+}
+
+/// Benchmark one GPU (the paper's per-GPU sweep of §V.A).
+pub fn collect_gpu(sim: &Simulator) -> Vec<Record> {
+    let spec = sim.spec();
+    sim.sweep()
+        .into_iter()
+        .map(|c| Record {
+            gpu: spec.name.to_string(),
+            gpu_features: spec.features(),
+            m: c.m,
+            n: c.n,
+            k: c.k,
+            p_nn: c.p_nn,
+            p_nt: c.p_nt,
+            p_tnn: c.p_tnn,
+            label: c.label(),
+        })
+        .collect()
+}
+
+/// The paper's full two-GPU dataset (Table II: 891 + ~941 records).
+pub fn collect_paper_dataset() -> Vec<Record> {
+    let mut out = Vec::new();
+    for gpu in PAPER_GPUS {
+        out.extend(collect_gpu(&Simulator::new(gpu)));
+    }
+    out
+}
+
+/// Convert records to an ML dataset (8 features, ±1 labels, grouped by GPU
+/// so splits can stratify per GPU as the paper does).
+pub fn to_ml_dataset(records: &[Record]) -> Dataset {
+    let mut d = Dataset::new();
+    for r in records {
+        d.push(r.features(), r.label as f64, gpu_group_id(&r.gpu));
+    }
+    d
+}
+
+fn gpu_group_id(name: &str) -> u64 {
+    GpuSpec::by_name(name).map(|g| g.id).unwrap_or(0)
+}
+
+// ---- CSV persistence -------------------------------------------------------
+
+const COLS: [&str; 12] = [
+    "gpu", "gm", "sm", "cc", "mbw", "l2c", "m", "n", "k", "p_nt", "p_tnn", "label",
+];
+
+/// Save records to CSV (schema documented in DESIGN.md §7).
+pub fn save_csv(records: &[Record], path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+    let mut t = CsvTable::new(&COLS);
+    for r in records {
+        t.push_row(vec![
+            r.gpu.clone(),
+            format!("{}", r.gpu_features[0]),
+            format!("{}", r.gpu_features[1]),
+            format!("{}", r.gpu_features[2]),
+            format!("{}", r.gpu_features[3]),
+            format!("{}", r.gpu_features[4]),
+            r.m.to_string(),
+            r.n.to_string(),
+            r.k.to_string(),
+            format!("{:.6}", r.p_nt),
+            format!("{:.6}", r.p_tnn),
+            r.label.to_string(),
+        ]);
+    }
+    t.save(path)
+}
+
+/// Load records back (p_nn is not persisted; it is reconstructable from the
+/// simulator and unused by the selection experiments).
+pub fn load_csv(path: impl AsRef<std::path::Path>) -> anyhow::Result<Vec<Record>> {
+    let t = CsvTable::load(path)?;
+    for c in COLS {
+        anyhow::ensure!(t.col(c).is_some(), "missing column {c}");
+    }
+    let mut out = Vec::with_capacity(t.rows.len());
+    for i in 0..t.rows.len() {
+        let f = |name: &str| -> anyhow::Result<f64> {
+            t.get_f64(i, name)
+                .ok_or_else(|| anyhow::anyhow!("row {i}: bad {name}"))
+        };
+        out.push(Record {
+            gpu: t.get(i, "gpu").unwrap().to_string(),
+            gpu_features: [f("gm")?, f("sm")?, f("cc")?, f("mbw")?, f("l2c")?],
+            m: f("m")? as u64,
+            n: f("n")? as u64,
+            k: f("k")? as u64,
+            p_nn: f64::NAN,
+            p_nt: f("p_nt")?,
+            p_tnn: f("p_tnn")?,
+            label: if f("label")? >= 0.0 { 1 } else { -1 },
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{GTX1080, TITANX};
+
+    #[test]
+    fn collection_counts_match_table2() {
+        let data = collect_paper_dataset();
+        let gtx = data.iter().filter(|r| r.gpu == "GTX1080").count();
+        let titan = data.iter().filter(|r| r.gpu == "TitanX").count();
+        assert_eq!(gtx, 891);
+        assert!((930..=945).contains(&titan));
+        // Paper total: 1832; ours is 891 + 937 = 1828 (see EXPERIMENTS.md).
+        assert!((1820..=1836).contains(&data.len()));
+    }
+
+    #[test]
+    fn labels_match_performance_ordering() {
+        for r in collect_gpu(&Simulator::new(&GTX1080)).iter().take(200) {
+            assert_eq!(r.label == 1, r.p_nt >= r.p_tnn, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn features_are_8d_and_o1() {
+        let r = &collect_gpu(&Simulator::new(&TITANX))[0];
+        let f = r.features();
+        assert_eq!(f.len(), 8);
+        assert_eq!(f[0], 10.0); // gm
+        assert_eq!(f[4], 3072.0); // l2c
+        assert_eq!(f[5], r.m as f64);
+    }
+
+    #[test]
+    fn ml_dataset_groups_by_gpu() {
+        let data = collect_paper_dataset();
+        let d = to_ml_dataset(&data);
+        assert_eq!(d.len(), data.len());
+        let g1 = d.group.iter().filter(|&&g| g == 1).count();
+        assert_eq!(g1, 891);
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let records = collect_gpu(&Simulator::new(&GTX1080));
+        let path = std::env::temp_dir().join("mtnn_dataset_test.csv");
+        save_csv(&records, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.len(), records.len());
+        for (a, b) in records.iter().zip(&back) {
+            assert_eq!(a.gpu, b.gpu);
+            assert_eq!((a.m, a.n, a.k), (b.m, b.n, b.k));
+            assert_eq!(a.label, b.label);
+            assert!((a.p_nt - b.p_nt).abs() < 1e-3);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_missing_columns() {
+        let path = std::env::temp_dir().join("mtnn_dataset_bad.csv");
+        std::fs::write(&path, "gpu,m\nGTX1080,128\n").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

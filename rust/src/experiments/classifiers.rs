@@ -1,0 +1,175 @@
+//! Table IV (5-fold CV per-class accuracy), Table VI (classifier
+//! comparison incl. train/predict times) and Fig 4 (accuracy vs training
+//! fraction) — the learning-side evaluation of §VI.A.
+
+use crate::dataset::{collect_paper_dataset, to_ml_dataset};
+use crate::ml::cv::{cross_validate, fold_stats};
+use crate::ml::data::Dataset;
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::metrics::accuracy;
+use crate::ml::scaler::MinMaxScaler;
+use crate::ml::svm::{Svm, SvmParams};
+use crate::ml::tree::DecisionTreeClassifier;
+use crate::ml::Classifier;
+use crate::util::csv::CsvTable;
+use crate::util::table::{fnum, TextTable};
+use std::time::Instant;
+
+/// Table IV: 5-fold CV of the GBDT with per-class breakdown.
+pub fn table4(data: &Dataset, seed: u64) -> (String, [f64; 3]) {
+    let folds = cross_validate(data, 5, seed, || Gbdt::new(GbdtParams::default()));
+    let mut t = TextTable::new(
+        "Table IV — 5-fold CV accuracies (paper avg: neg 92.05, pos 88.39, total 90.51)",
+        &["Class", "Minimum", "Maximum", "Average"],
+    );
+    let rows: [(&str, fn(&crate::ml::metrics::Accuracy) -> f64); 3] = [
+        ("Negative", |a| a.negative),
+        ("Positive", |a| a.positive),
+        ("Total", |a| a.total),
+    ];
+    let mut avgs = [0.0; 3];
+    for (i, (name, field)) in rows.iter().enumerate() {
+        let (min, max, avg) = fold_stats(&folds, field);
+        avgs[i] = avg;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}%", min * 100.0),
+            format!("{:.2}%", max * 100.0),
+            format!("{:.2}%", avg * 100.0),
+        ]);
+    }
+    (t.render(), avgs)
+}
+
+/// One Table VI row: classifier name, accuracy, train ms, predict ms.
+#[derive(Debug, Clone)]
+pub struct ClassifierRow {
+    pub name: String,
+    pub accuracy: f64,
+    pub train_ms: f64,
+    pub predict_ms: f64,
+}
+
+fn time_classifier<C: Classifier>(
+    mut model: C,
+    train: &Dataset,
+    test: &Dataset,
+    scale: bool,
+) -> ClassifierRow {
+    let (train_x, test_x) = if scale {
+        let scaler = MinMaxScaler::fit(&train.x);
+        (scaler.transform(&train.x), scaler.transform(&test.x))
+    } else {
+        (train.x.clone(), test.x.clone())
+    };
+    let t0 = Instant::now();
+    model.fit(&train_x, &train.y);
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // Predict-time is per single sample (the paper reports per-call
+    // latency — 0.005 ms for GBDT), averaged over the test set.
+    let t1 = Instant::now();
+    let pred = model.predict(&test_x);
+    let predict_ms = t1.elapsed().as_secs_f64() * 1e3 / test_x.len() as f64;
+    ClassifierRow {
+        name: model.name(),
+        accuracy: accuracy(&pred, &test.y).total,
+        train_ms,
+        predict_ms,
+    }
+}
+
+/// Table VI: GBDT vs SVM-RBF vs SVM-Poly vs DT on an 80/20 split.
+pub fn table6(data: &Dataset, seed: u64) -> (String, Vec<ClassifierRow>) {
+    let (train, test) = data.split_by_group(0.8, seed);
+    let rows = vec![
+        time_classifier(Gbdt::new(GbdtParams::default()), &train, &test, false),
+        time_classifier(Svm::new(SvmParams::rbf()), &train, &test, true),
+        time_classifier(Svm::new(SvmParams::poly()), &train, &test, true),
+        time_classifier(DecisionTreeClassifier::default(), &train, &test, false),
+    ];
+    let mut t = TextTable::new(
+        "Table VI — classifier comparison (paper: GBDT 90.51 / SVM-RBF 81.66 / SVM-Poly 77.68 / DT 87.84)",
+        &["Classifier", "Accuracy (%)", "Train Time (ms)", "Predict Time (ms)"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            fnum(r.accuracy * 100.0, 2),
+            fnum(r.train_ms, 1),
+            fnum(r.predict_ms, 4),
+        ]);
+    }
+    (t.render(), rows)
+}
+
+/// Fig 4: training accuracy (on ALL samples as test set, per the paper's
+/// protocol) vs training fraction 10%..100% step 5.
+pub fn fig4(data: &Dataset, seed: u64) -> (String, CsvTable) {
+    let mut csv = CsvTable::new(&["train_pct", "accuracy"]);
+    let mut out = String::from(
+        "Fig 4 — training accuracy vs training-set size (paper: 96.39% at 100%)\n",
+    );
+    let mut final_acc = 0.0;
+    for pct in (10..=100).step_by(5) {
+        let (train, _) = data.split(pct as f64 / 100.0, seed);
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&train.x, &train.y);
+        let acc = accuracy(&g.predict(&data.x), &data.y).total;
+        final_acc = acc;
+        let bar = "#".repeat(((acc - 0.80).max(0.0) * 250.0) as usize);
+        out.push_str(&format!("  {pct:>3}% | {bar:<50} {:.2}%\n", acc * 100.0));
+        csv.push_row(vec![pct.to_string(), format!("{acc:.6}")]);
+    }
+    out.push_str(&format!(
+        "  measured at 100%: {:.2}% (paper 96.39%)\n",
+        final_acc * 100.0
+    ));
+    (out, csv)
+}
+
+/// Everything in §VI.A, on the standard dataset.
+pub fn run(seed: u64) -> String {
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let (t4, _) = table4(&data, seed);
+    let (t6, _) = table6(&data, seed);
+    let (f4, csv) = fig4(&data, seed);
+    csv.save(super::results_dir().join("fig4_training_size.csv"))
+        .expect("save fig4 csv");
+    format!("{t4}\n{t6}\n{f4}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_data() -> Dataset {
+        // Down-sampled paper dataset for fast tests.
+        let d = to_ml_dataset(&collect_paper_dataset());
+        let idx: Vec<usize> = (0..d.len()).step_by(4).collect();
+        d.subset(&idx)
+    }
+
+    #[test]
+    fn table4_reports_three_classes() {
+        let (text, avgs) = table4(&small_data(), 3);
+        assert!(text.contains("Negative") && text.contains("Positive"));
+        assert!(avgs[2] > 0.8, "total CV accuracy {avgs:?}");
+    }
+
+    #[test]
+    fn table6_contains_all_classifiers() {
+        let (text, rows) = table6(&small_data(), 3);
+        for name in ["GBDT", "SVM-RBF", "SVM-Poly", "DT"] {
+            assert!(text.contains(name), "{text}");
+        }
+        assert_eq!(rows.len(), 4);
+        let gbdt = &rows[0];
+        assert!(gbdt.predict_ms < 1.0, "GBDT predict {}ms", gbdt.predict_ms);
+    }
+
+    #[test]
+    fn fig4_is_19_points() {
+        let (_, csv) = fig4(&small_data(), 3);
+        assert_eq!(csv.rows.len(), 19);
+    }
+}

@@ -1,0 +1,220 @@
+//! Fig 7 (MNIST FCN), Fig 8 (synthetic FCN) and Table X (forward/backward
+//! breakdown) — the Caffe-integration evaluation of §VI.C, on the
+//! simulated GPUs.
+
+use crate::fcn::config::{mnist_configs, synthetic_configs, FcnConfig, MINI_BATCHES};
+use crate::fcn::sim_trainer::{iteration_times, PhaseTimes, Policy};
+use crate::gpusim::{GpuSpec, PAPER_GPUS};
+use crate::selector::Selector;
+use crate::util::csv::CsvTable;
+use crate::util::table::{fnum, TextTable};
+
+/// Fig 7 / Fig 8: per-iteration time of CaffeNT vs CaffeMTNN for every
+/// (config, mini-batch) pair on one GPU.
+pub fn fig(
+    title: &str,
+    configs: &[FcnConfig],
+    gpu: &'static GpuSpec,
+    selector: &Selector,
+) -> (String, CsvTable) {
+    let mut t = TextTable::new(
+        title,
+        &["network", "mb", "CaffeNT (ms)", "CaffeMTNN (ms)", "speedup"],
+    );
+    let mut csv = CsvTable::new(&["gpu", "network", "mb", "nt_ms", "mtnn_ms"]);
+    for cfg in configs {
+        for &mb in &MINI_BATCHES {
+            let nt = iteration_times(gpu, None, &cfg.dims, mb, Policy::AlwaysNt);
+            let mt = iteration_times(gpu, Some(selector), &cfg.dims, mb, Policy::Mtnn);
+            t.row(vec![
+                cfg.name.clone(),
+                mb.to_string(),
+                fnum(nt.total_ms(), 2),
+                fnum(mt.total_ms(), 2),
+                format!("{:.3}x", nt.total_ms() / mt.total_ms()),
+            ]);
+            csv.push_row(vec![
+                gpu.name.into(),
+                cfg.name.clone(),
+                mb.to_string(),
+                format!("{:.4}", nt.total_ms()),
+                format!("{:.4}", mt.total_ms()),
+            ]);
+        }
+    }
+    (t.render(), csv)
+}
+
+/// Table X: average forward/backward/total times over all mini-batches and
+/// layer counts, per dataset and GPU.
+pub fn table10(selector: &Selector) -> String {
+    let mut t = TextTable::new(
+        "Table X — breakdown of average running time (ms) and speedups \
+         (paper synthetic fwd speedups: 2.44x G.1080, 2.15x TitanX; bwd ~1.0)",
+        &["Data set", "GPU", "Phase", "CaffeNT", "CaffeMTNN", "Speedup"],
+    );
+    for (ds_name, configs) in [
+        ("MNIST", mnist_configs()),
+        ("Synthetic", synthetic_configs()),
+    ] {
+        for gpu in PAPER_GPUS {
+            let mut nt_sum = PhaseTimes::default();
+            let mut mt_sum = PhaseTimes::default();
+            let mut n = 0.0;
+            for cfg in &configs {
+                for &mb in &MINI_BATCHES {
+                    let nt = iteration_times(gpu, None, &cfg.dims, mb, Policy::AlwaysNt);
+                    let mt =
+                        iteration_times(gpu, Some(selector), &cfg.dims, mb, Policy::Mtnn);
+                    nt_sum.forward_ms += nt.forward_ms;
+                    nt_sum.backward_ms += nt.backward_ms;
+                    mt_sum.forward_ms += mt.forward_ms;
+                    mt_sum.backward_ms += mt.backward_ms;
+                    n += 1.0;
+                }
+            }
+            let rows: [(&str, f64, f64); 3] = [
+                ("Forward", nt_sum.forward_ms / n, mt_sum.forward_ms / n),
+                ("Backward", nt_sum.backward_ms / n, mt_sum.backward_ms / n),
+                (
+                    "Total",
+                    nt_sum.total_ms() / n,
+                    mt_sum.total_ms() / n,
+                ),
+            ];
+            for (phase, nt_ms, mt_ms) in rows {
+                t.row(vec![
+                    ds_name.into(),
+                    gpu.name.into(),
+                    phase.into(),
+                    fnum(nt_ms, 2),
+                    fnum(mt_ms, 2),
+                    format!("{:.2}", nt_ms / mt_ms),
+                ]);
+            }
+        }
+    }
+    t.render()
+}
+
+/// Table IX rendering (configuration constants, for completeness).
+pub fn table9() -> String {
+    let mut t = TextTable::new(
+        "Table IX — FCN configurations",
+        &["Data set", "network", "dims"],
+    );
+    for cfg in mnist_configs() {
+        t.row(vec![
+            "MNIST".into(),
+            cfg.name.clone(),
+            format!("{:?}", cfg.dims),
+        ]);
+    }
+    for cfg in synthetic_configs() {
+        t.row(vec![
+            "Synthetic".into(),
+            cfg.name.clone(),
+            format!("{:?}", cfg.dims),
+        ]);
+    }
+    t.render()
+}
+
+/// Summary statistic the paper quotes in the abstract: average MTNN
+/// speedup over all (config, mb) pairs per dataset on a GPU.
+pub fn avg_speedup(
+    configs: &[FcnConfig],
+    gpu: &'static GpuSpec,
+    selector: &Selector,
+) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0.0;
+    for cfg in configs {
+        for &mb in &MINI_BATCHES {
+            let nt = iteration_times(gpu, None, &cfg.dims, mb, Policy::AlwaysNt);
+            let mt = iteration_times(gpu, Some(selector), &cfg.dims, mb, Policy::Mtnn);
+            sum += nt.total_ms() / mt.total_ms();
+            n += 1.0;
+        }
+    }
+    sum / n
+}
+
+/// Full §VI.C output.
+pub fn run(selector: &Selector) -> String {
+    let mut out = table9();
+    out.push('\n');
+    for gpu in PAPER_GPUS {
+        let (f7, csv7) = fig(
+            &format!("Fig 7 — MNIST FCN per-iteration time on {} (paper: ~parity, +1.74%)", gpu.name),
+            &mnist_configs(),
+            gpu,
+            selector,
+        );
+        out.push_str(&f7);
+        csv7.save(super::results_dir().join(format!("fig7_{}.csv", gpu.name)))
+            .expect("save fig7");
+        let (f8, csv8) = fig(
+            &format!("Fig 8 — synthetic FCN per-iteration time on {} (paper: +28.2%)", gpu.name),
+            &synthetic_configs(),
+            gpu,
+            selector,
+        );
+        out.push_str(&f8);
+        csv8.save(super::results_dir().join(format!("fig8_{}.csv", gpu.name)))
+            .expect("save fig8");
+    }
+    out.push_str(&table10(selector));
+    for gpu in PAPER_GPUS {
+        out.push_str(&format!(
+            "\navg MTNN speedup on {}: MNIST {:.3}x (paper ~1.02x), synthetic {:.3}x (paper ~1.28x)",
+            gpu.name,
+            avg_speedup(&mnist_configs(), gpu, selector),
+            avg_speedup(&synthetic_configs(), gpu, selector),
+        ));
+    }
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gpusim::GTX1080;
+    use std::sync::OnceLock;
+
+    fn selector() -> &'static Selector {
+        static SEL: OnceLock<Selector> = OnceLock::new();
+        SEL.get_or_init(|| Selector::train_default(&collect_paper_dataset()))
+    }
+
+    #[test]
+    fn synthetic_speedup_exceeds_mnist_speedup() {
+        // The paper's key contrast: big nets gain (28%), MNIST ~parity.
+        let syn = avg_speedup(&synthetic_configs(), &GTX1080, selector());
+        let mni = avg_speedup(&mnist_configs(), &GTX1080, selector());
+        assert!(
+            syn > mni + 0.05,
+            "synthetic {syn:.3}x should clearly exceed MNIST {mni:.3}x"
+        );
+        assert!(syn > 1.08, "synthetic avg speedup {syn:.3}");
+        assert!(mni > 0.97, "MNIST should not regress: {mni:.3}");
+    }
+
+    #[test]
+    fn table10_backward_speedup_is_one() {
+        let text = table10(selector());
+        // All Backward rows must show speedup 1.00.
+        for line in text.lines().filter(|l| l.contains("Backward")) {
+            assert!(line.contains("1.00"), "{line}");
+        }
+    }
+
+    #[test]
+    fn fig_tables_cover_all_cells() {
+        let (text, csv) = fig("t", &mnist_configs(), &GTX1080, selector());
+        assert_eq!(csv.rows.len(), 3 * MINI_BATCHES.len());
+        assert!(text.contains("mnist-4h"));
+    }
+}

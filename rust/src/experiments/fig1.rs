@@ -1,0 +1,83 @@
+//! Fig 1: frequency of `P_NN / P_NT` over the benchmark sweep, per GPU —
+//! the paper's motivation figure (NT is usually slower; ~20% of cases at
+//! ratio ≥ 2).
+
+use crate::gpusim::{calib, GpuSpec, Simulator, PAPER_GPUS};
+use crate::util::csv::CsvTable;
+use crate::util::stats::Histogram;
+
+/// Results for one GPU.
+pub struct Fig1Gpu {
+    pub gpu: &'static str,
+    pub hist: Histogram,
+    pub frac_gt_1: f64,
+    pub frac_ge_2: f64,
+    pub n: usize,
+}
+
+/// Compute Fig 1 for one GPU (paper bins: 0.6 … 2.0 step 0.1, plus 2.0+).
+pub fn compute(gpu: &'static GpuSpec) -> Fig1Gpu {
+    let sim = Simulator::new(gpu);
+    let ratios: Vec<f64> = sim.sweep().iter().map(|c| c.p_nn / c.p_nt).collect();
+    let mut hist = Histogram::new(0.6, 2.0, 14);
+    hist.add_all(&ratios);
+    Fig1Gpu {
+        gpu: gpu.name,
+        frac_gt_1: crate::util::stats::fraction_where(&ratios, |x| x > 1.0),
+        frac_ge_2: crate::util::stats::fraction_where(&ratios, |x| x >= 2.0),
+        n: ratios.len(),
+        hist,
+    }
+}
+
+/// Full Fig 1 text output (both GPUs + calibration targets).
+pub fn run() -> (String, CsvTable) {
+    let mut out = String::new();
+    let mut csv = CsvTable::new(&["gpu", "bin", "frequency"]);
+    for gpu in PAPER_GPUS {
+        let r = compute(gpu);
+        out.push_str(&r.hist.render(&format!(
+            "Fig 1 — frequency of P_NN/P_NT on {} (paper: {}% of cases > 1.0, ~20% >= 2.0)",
+            r.gpu,
+            if r.gpu == "GTX1080" { 71 } else { 62 }
+        )));
+        out.push_str(&format!(
+            "  measured: {:.1}% > 1.0, {:.1}% >= 2.0 (n={})\n\n",
+            r.frac_gt_1 * 100.0,
+            r.frac_ge_2 * 100.0,
+            r.n
+        ));
+        for (label, freq) in r.hist.labels().iter().zip(r.hist.frequencies()) {
+            csv.push_row(vec![r.gpu.into(), label.clone(), format!("{freq:.6}")]);
+        }
+        // Calibration table against every published Fig-1/Table-II target.
+        let sim = Simulator::new(gpu);
+        let (_, targets) = calib::report(&sim);
+        out.push_str(&calib::render_report(gpu.name, &targets));
+        out.push('\n');
+    }
+    (out, csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GTX1080;
+
+    #[test]
+    fn histogram_covers_all_cases() {
+        let r = compute(&GTX1080);
+        assert_eq!(r.n, 891);
+        let total: usize = r.hist.counts.iter().sum::<usize>() + r.hist.underflow;
+        assert_eq!(total, r.n);
+    }
+
+    #[test]
+    fn run_emits_both_gpus() {
+        let (text, csv) = run();
+        assert!(text.contains("GTX1080"));
+        assert!(text.contains("TitanX"));
+        // 15 bins × 2 GPUs.
+        assert_eq!(csv.rows.len(), 30);
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig 2 (NT-vs-TNN winner grids per K), Fig 3 (P_TNN/P_NT histogram) and
+//! Table II (sample distribution) — the TNN-motivation experiments.
+
+use super::fig_grid::{classify, render, Cell};
+use crate::gpusim::{GpuSpec, Simulator, PAPER_GPUS, SIZE_GRID};
+use crate::util::csv::CsvTable;
+use crate::util::stats::{fraction_where, Histogram};
+use crate::util::table::TextTable;
+use std::collections::HashMap;
+
+pub struct Fig23Gpu {
+    pub gpu: &'static str,
+    pub grid: String,
+    pub hist: Histogram,
+    pub frac_tnn_lt_nt: f64,
+    pub max_tnn_over_nt: f64,
+    pub max_nt_over_tnn: f64,
+    pub n_neg: usize,
+    pub n_pos: usize,
+    pub n: usize,
+}
+
+pub fn compute(gpu: &'static GpuSpec) -> Fig23Gpu {
+    let sim = Simulator::new(gpu);
+    let cases = sim.sweep();
+    let mut cells = HashMap::new();
+    for &m in &SIZE_GRID {
+        for &n in &SIZE_GRID {
+            for &k in &SIZE_GRID {
+                if !sim.fits(m, n, k) {
+                    cells.insert((m, n, k), Cell::Excluded);
+                }
+            }
+        }
+    }
+    let mut ratios = Vec::with_capacity(cases.len());
+    let (mut max_tnn, mut max_nt) = (0.0f64, 0.0f64);
+    let mut n_neg = 0;
+    for c in &cases {
+        // Fig 2's symbols compare NT (first) against TNN (second).
+        cells.insert((c.m, c.n, c.k), classify(c.p_nt, c.p_tnn));
+        let r = c.p_tnn / c.p_nt;
+        ratios.push(r);
+        max_tnn = max_tnn.max(r);
+        max_nt = max_nt.max(1.0 / r);
+        if c.label() == -1 {
+            n_neg += 1;
+        }
+    }
+    let mut hist = Histogram::new(0.6, 2.0, 14);
+    hist.add_all(&ratios);
+    Fig23Gpu {
+        gpu: gpu.name,
+        grid: render(
+            &format!("Fig 2 — NT vs TNN winners on {}", gpu.name),
+            "NT",
+            "TNN",
+            &cells,
+        ),
+        hist,
+        frac_tnn_lt_nt: fraction_where(&ratios, |x| x < 1.0),
+        max_tnn_over_nt: max_tnn,
+        max_nt_over_tnn: max_nt,
+        n_neg,
+        n_pos: cases.len() - n_neg,
+        n: cases.len(),
+    }
+}
+
+/// Full Fig 2 + Fig 3 + Table II output.
+pub fn run() -> (String, CsvTable) {
+    let mut out = String::new();
+    let mut csv = CsvTable::new(&["gpu", "m", "n", "k", "p_nt", "p_tnn"]);
+    let mut table2 = TextTable::new(
+        "Table II — sample distribution (paper: GTX1080 649/242/891, TitanX 535/406/941)",
+        &["GPU", "# of -1", "# of 1", "# of samples"],
+    );
+    let mut total = 0usize;
+    for gpu in PAPER_GPUS {
+        let r = compute(gpu);
+        out.push_str(&r.grid);
+        out.push('\n');
+        out.push_str(&r.hist.render(&format!(
+            "Fig 3 — frequency of P_TNN/P_NT on {} (paper: {:.1}% below 1.0)",
+            r.gpu,
+            if r.gpu == "GTX1080" { 41.5 } else { 43.0 }
+        )));
+        out.push_str(&format!(
+            "  measured: {:.1}% < 1.0 | max TNN speedup {:.2}x (paper 4.7x) | \
+             max NT speedup {:.2}x (paper 15.39x)\n\n",
+            r.frac_tnn_lt_nt * 100.0,
+            r.max_tnn_over_nt,
+            r.max_nt_over_tnn
+        ));
+        table2.row(vec![
+            r.gpu.into(),
+            r.n_neg.to_string(),
+            r.n_pos.to_string(),
+            r.n.to_string(),
+        ]);
+        total += r.n;
+        for c in Simulator::new(gpu).sweep() {
+            csv.push_row(vec![
+                gpu.name.into(),
+                c.m.to_string(),
+                c.n.to_string(),
+                c.k.to_string(),
+                format!("{:.4}", c.p_nt),
+                format!("{:.4}", c.p_tnn),
+            ]);
+        }
+    }
+    table2.row(vec![
+        "Total".into(),
+        "-".into(),
+        "-".into(),
+        total.to_string(),
+    ]);
+    out.push_str(&table2.render());
+    (out, csv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GTX1080;
+
+    #[test]
+    fn grids_mark_oom_cases() {
+        let r = compute(&GTX1080);
+        assert!(r.grid.contains('.'), "largest cases must be excluded");
+        assert!(r.grid.contains('#') && r.grid.contains('o'));
+        assert_eq!(r.n_neg + r.n_pos, 891);
+    }
+
+    #[test]
+    fn extremes_in_paper_ballpark() {
+        let r = compute(&GTX1080);
+        assert!(r.max_tnn_over_nt > 2.5 && r.max_tnn_over_nt < 7.0);
+        assert!(r.max_nt_over_tnn > 7.0 && r.max_nt_over_tnn < 23.0);
+    }
+}

@@ -1,0 +1,86 @@
+//! ASCII winner-grid rendering shared by Fig 2 and Fig 5: for each K, a
+//! 10×10 (M × N) grid of symbols — the text analogue of the paper's
+//! scatter plots. `#` = first algorithm wins ≥5%, `o` = second wins ≥5%,
+//! `-` = within 5%, `.` = case excluded by the memory rule.
+
+use crate::gpusim::SIZE_GRID;
+use std::collections::HashMap;
+
+/// Outcome of one grid cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Cell {
+    FirstWins(f64),
+    SecondWins(f64),
+    Tie,
+    Excluded,
+}
+
+/// Render the per-K grids. `cells` maps (m, n, k) → Cell.
+pub fn render(
+    title: &str,
+    first: &str,
+    second: &str,
+    cells: &HashMap<(u64, u64, u64), Cell>,
+) -> String {
+    let mut out = format!(
+        "== {title} ==\n  legend: '#' {first} wins, 'o' {second} wins, '-' tie(±5%), '.' OOM\n"
+    );
+    for &k in &SIZE_GRID {
+        out.push_str(&format!("  K={k}\n       N: "));
+        for (j, _) in SIZE_GRID.iter().enumerate() {
+            out.push_str(&format!("2^{:<3}", 7 + j));
+        }
+        out.push('\n');
+        for (i, &m) in SIZE_GRID.iter().enumerate() {
+            out.push_str(&format!("  M=2^{:<2} | ", 7 + i));
+            for &n in &SIZE_GRID {
+                let c = cells.get(&(m, n, k)).copied().unwrap_or(Cell::Excluded);
+                let ch = match c {
+                    Cell::FirstWins(_) => '#',
+                    Cell::SecondWins(_) => 'o',
+                    Cell::Tie => '-',
+                    Cell::Excluded => '.',
+                };
+                out.push_str(&format!("{ch}    "));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Classify a performance pair into a cell with a ±5% tie band.
+pub fn classify(p_first: f64, p_second: f64) -> Cell {
+    let ratio = p_first / p_second;
+    if ratio > 1.05 {
+        Cell::FirstWins(ratio)
+    } else if ratio < 1.0 / 1.05 {
+        Cell::SecondWins(1.0 / ratio)
+    } else {
+        Cell::Tie
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classify_bands() {
+        assert!(matches!(classify(2.0, 1.0), Cell::FirstWins(_)));
+        assert!(matches!(classify(1.0, 2.0), Cell::SecondWins(_)));
+        assert!(matches!(classify(1.0, 1.01), Cell::Tie));
+    }
+
+    #[test]
+    fn render_contains_all_k_sections() {
+        let mut cells = HashMap::new();
+        cells.insert((128, 128, 128), Cell::FirstWins(2.0));
+        let s = render("t", "NT", "TNN", &cells);
+        for k in SIZE_GRID {
+            assert!(s.contains(&format!("K={k}")), "missing K={k}");
+        }
+        assert!(s.contains('#'));
+        assert!(s.contains('.'));
+    }
+}

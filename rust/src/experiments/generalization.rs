@@ -1,0 +1,255 @@
+//! Extension experiments beyond the paper's evaluation:
+//!
+//! 1. **Extended classifier panel** — the paper motivates GBDT by citing
+//!    Caruana & Niculescu-Mizil's 10-algorithm study; we extend Table VI
+//!    with random forest, kNN and logistic regression.
+//! 2. **Cross-GPU generalization** — the paper trains one model over both
+//!    GPUs "so the model is equipped with robustness to different GPU
+//!    hardware" but never tests on an *unseen* GPU. We hold out a GTX 1070
+//!    (same Pascal generation, different SM count / clock / bandwidth)
+//!    and measure zero-shot selection quality on it.
+
+use super::classifiers::ClassifierRow;
+use crate::dataset::{collect_gpu, collect_paper_dataset, to_ml_dataset, Record};
+use crate::gemm::Algorithm;
+use crate::gpusim::{GpuSpec, Simulator, GTX1070, GTX1080, TITANX};
+use crate::ml::data::Dataset;
+use crate::ml::forest::{ForestParams, RandomForest};
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::knn::Knn;
+use crate::ml::linear::{LogReg, LogRegParams};
+use crate::ml::metrics::accuracy;
+use crate::ml::scaler::MinMaxScaler;
+use crate::ml::svm::{Svm, SvmParams};
+use crate::ml::tree::DecisionTreeClassifier;
+use crate::ml::Classifier;
+use crate::selector::{Selector, TrainedModel};
+use crate::util::table::{fnum, TextTable};
+use std::time::Instant;
+
+fn bench_one<C: Classifier>(
+    mut model: C,
+    train: &Dataset,
+    test: &Dataset,
+    scale: bool,
+) -> ClassifierRow {
+    let (tx, sx) = if scale {
+        let s = MinMaxScaler::fit(&train.x);
+        (s.transform(&train.x), s.transform(&test.x))
+    } else {
+        (train.x.clone(), test.x.clone())
+    };
+    let t0 = Instant::now();
+    model.fit(&tx, &train.y);
+    let train_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t1 = Instant::now();
+    let pred = model.predict(&sx);
+    let predict_ms = t1.elapsed().as_secs_f64() * 1e3 / sx.len() as f64;
+    ClassifierRow {
+        name: model.name(),
+        accuracy: accuracy(&pred, &test.y).total,
+        train_ms,
+        predict_ms,
+    }
+}
+
+/// Extended Table VI: seven learners on the paper's 80/20 protocol.
+pub fn extended_table6(seed: u64) -> String {
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let (train, test) = data.split_by_group(0.8, seed);
+    let rows = vec![
+        bench_one(Gbdt::new(GbdtParams::default()), &train, &test, false),
+        bench_one(DecisionTreeClassifier::default(), &train, &test, false),
+        bench_one(RandomForest::new(ForestParams::default()), &train, &test, false),
+        bench_one(Svm::new(SvmParams::rbf()), &train, &test, true),
+        bench_one(Svm::new(SvmParams::poly()), &train, &test, true),
+        bench_one(Knn::new(5), &train, &test, true),
+        bench_one(LogReg::new(LogRegParams::default()), &train, &test, true),
+    ];
+    let mut t = TextTable::new(
+        "Extended Table VI — seven-learner panel (paper compares 4; Caruana-style extension)",
+        &["Classifier", "Accuracy (%)", "Train Time (ms)", "Predict Time (ms)"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.name.clone(),
+            fnum(r.accuracy * 100.0, 2),
+            fnum(r.train_ms, 1),
+            fnum(r.predict_ms, 4),
+        ]);
+    }
+    t.render()
+}
+
+/// Accuracy + selection quality of a selector on one GPU's records.
+fn eval_on(selector: &Selector, gpu: &'static GpuSpec, records: &[Record]) -> (f64, f64, f64) {
+    let mut correct = 0usize;
+    let (mut gain_nt, mut lub) = (0.0, 0.0);
+    for r in records {
+        let chosen = selector.select(gpu, r.m, r.n, r.k).0;
+        if chosen.label() == r.label {
+            correct += 1;
+        }
+        let p = match chosen {
+            Algorithm::Nt => r.p_nt,
+            Algorithm::Tnn => r.p_tnn,
+            Algorithm::Nn => unreachable!(),
+        };
+        gain_nt += (p - r.p_nt) / r.p_nt;
+        lub += (p - r.p_nt.max(r.p_tnn)) / r.p_nt.max(r.p_tnn);
+    }
+    let n = records.len() as f64;
+    (correct as f64 / n, gain_nt / n, lub / n)
+}
+
+/// Cross-GPU generalization: several training regimes, all tested
+/// zero-shot on the held-out GTX 1070.
+pub fn cross_gpu() -> String {
+    let r1080 = collect_gpu(&Simulator::new(&GTX1080));
+    let rtitan = collect_gpu(&Simulator::new(&TITANX));
+    let r1070 = collect_gpu(&Simulator::new(&GTX1070));
+
+    let train_selector = |records: &[Record]| -> Selector {
+        let d = to_ml_dataset(records);
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&d.x, &d.y);
+        Selector::new(TrainedModel::Gbdt(g))
+    };
+
+    let both: Vec<Record> = r1080.iter().chain(rtitan.iter()).cloned().collect();
+    let regimes: Vec<(&str, Selector)> = vec![
+        ("trained on GTX1080 only", train_selector(&r1080)),
+        ("trained on TitanX only", train_selector(&rtitan)),
+        ("trained on both (paper protocol)", train_selector(&both)),
+        ("oracle upper bound", {
+            // Selector trained ON the test GPU: the attainable ceiling.
+            train_selector(&r1070)
+        }),
+    ];
+
+    let mut t = TextTable::new(
+        "Generalization — zero-shot selection on the unseen GTX 1070",
+        &["training regime", "accuracy (%)", "gain vs NT (%)", "LUB (%)"],
+    );
+    for (name, sel) in &regimes {
+        let (acc, gain, lub) = eval_on(sel, &GTX1070, &r1070);
+        t.row(vec![
+            name.to_string(),
+            fnum(acc * 100.0, 2),
+            fnum(gain * 100.0, 2),
+            fnum(lub * 100.0, 2),
+        ]);
+    }
+    let mut out = t.render();
+    out.push_str(&format!(
+        "  ({} valid samples on the GTX 1070 grid)\n",
+        r1070.len()
+    ));
+    out
+}
+
+/// §VII future work, implemented: three-way selection with the in-place
+/// transpose variant. Compares policy-average times over the NT-feasible
+/// grid (which is larger than the paper's TNN-feasible grid — the whole
+/// point of in-place).
+pub fn future_work() -> String {
+    use crate::gpusim::SIZE_GRID;
+    use crate::selector::three_way::{time_case3, ThreeWay, ThreeWaySelector};
+    let sel3 = ThreeWaySelector::train_default();
+    let sel2 = Selector::train_default(&collect_paper_dataset());
+    let mut t = TextTable::new(
+        "Future work (§VII) — in-place transpose & three-way selection \
+         (policy-average ms over the NT-feasible grid)",
+        &["GPU", "always NT", "2-way MTNN", "3-way MTNN", "oracle", "cases unlocked"],
+    );
+    for gpu in crate::gpusim::PAPER_GPUS {
+        let sim = Simulator::new(gpu);
+        let (mut t_nt, mut t_2, mut t_3, mut t_best) = (0.0f64, 0.0, 0.0, 0.0);
+        let (mut n, mut unlocked) = (0usize, 0usize);
+        for &m in &SIZE_GRID {
+            for &nn in &SIZE_GRID {
+                for &k in &SIZE_GRID {
+                    let Some(c) = time_case3(&sim, m, nn, k) else {
+                        continue;
+                    };
+                    n += 1;
+                    t_nt += c.t_nt;
+                    // 2-way policy with the paper's memory fallback.
+                    let a2 = sel2.select(gpu, m, nn, k).0;
+                    t_2 += match a2 {
+                        Algorithm::Tnn => c.t_tnn_oop.unwrap_or(c.t_nt),
+                        _ => c.t_nt,
+                    };
+                    let a3 = sel3.select(gpu, m, nn, k);
+                    t_3 += c.time_of(a3).unwrap_or(c.t_nt);
+                    t_best += [Some(c.t_nt), c.t_tnn_oop, Some(c.t_tnn_ip)]
+                        .iter()
+                        .flatten()
+                        .cloned()
+                        .fold(f64::INFINITY, f64::min);
+                    // "Unlocked": oop cannot run, but in-place beats NT.
+                    if c.t_tnn_oop.is_none()
+                        && a3 == ThreeWay::TnnInPlace
+                        && c.t_tnn_ip < c.t_nt
+                    {
+                        unlocked += 1;
+                    }
+                }
+            }
+        }
+        let ms = |x: f64| fnum(x / n as f64 * 1e3, 2);
+        t.row(vec![
+            gpu.name.into(),
+            ms(t_nt),
+            ms(t_2),
+            ms(t_3),
+            ms(t_best),
+            unlocked.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+pub fn run(seed: u64) -> String {
+    format!(
+        "{}\n{}\n{}",
+        extended_table6(seed),
+        cross_gpu(),
+        future_work()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn two_gpu_training_generalizes_to_unseen_gpu() {
+        // The headline claim of the extension: the paper-protocol model
+        // (trained on 1080 + TitanX) transfers to the unseen 1070 with a
+        // clearly positive gain over always-NT and small LUB.
+        let both: Vec<Record> = collect_gpu(&Simulator::new(&GTX1080))
+            .into_iter()
+            .chain(collect_gpu(&Simulator::new(&TITANX)))
+            .collect();
+        let d = to_ml_dataset(&both);
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&d.x, &d.y);
+        let sel = Selector::new(TrainedModel::Gbdt(g));
+        let r1070 = collect_gpu(&Simulator::new(&GTX1070));
+        let (acc, gain, lub) = eval_on(&sel, &GTX1070, &r1070);
+        assert!(acc > 0.80, "zero-shot accuracy {acc:.3}");
+        assert!(gain > 0.10, "zero-shot gain vs NT {gain:.3}");
+        assert!(lub > -0.10, "zero-shot LUB {lub:.3}");
+    }
+
+    #[test]
+    fn extended_panel_renders_all_learners() {
+        // Use the cheap learners only via the full function on a seed —
+        // rendering includes all names.
+        let text = extended_table6(3);
+        for name in ["GBDT", "DT", "RF", "SVM-RBF", "kNN(k=5)", "LogReg"] {
+            assert!(text.contains(name), "missing {name} in:\n{text}");
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Experiment drivers — one module per paper table/figure family. Each
+//! driver returns structured results, renders the paper-style tables /
+//! ASCII histograms, and writes CSV + text into `results/`.
+//!
+//! | module        | regenerates                                   |
+//! |---------------|-----------------------------------------------|
+//! | [`fig1`]      | Fig 1 (P_NN/P_NT histograms)                  |
+//! | [`fig23`]     | Fig 2 (winner grids), Fig 3, Table II         |
+//! | [`classifiers`]| Table IV, Table VI, Fig 4                    |
+//! | [`mtnn_eval`] | Fig 5, Fig 6, Table VIII                      |
+//! | [`fcn_eval`]  | Fig 7, Fig 8, Table IX, Table X               |
+
+pub mod classifiers;
+pub mod fcn_eval;
+pub mod fig1;
+pub mod fig23;
+pub mod fig_grid;
+pub mod generalization;
+pub mod mtnn_eval;
+
+use std::path::{Path, PathBuf};
+
+/// Results directory (created on demand).
+pub fn results_dir() -> PathBuf {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("results");
+    std::fs::create_dir_all(&dir).expect("create results dir");
+    dir
+}
+
+/// Write text output both to stdout and `results/<name>`.
+pub fn emit(name: &str, text: &str) {
+    println!("{text}");
+    let path = results_dir().join(name);
+    std::fs::write(&path, text).expect("write results file");
+}

@@ -1,0 +1,211 @@
+//! Fig 5 (NT-vs-MTNN winner grids), Fig 6 (P_MTNN/P_NT histogram) and
+//! Table VIII (selection-quality metrics incl. GOW / LUB) — §VI.B.
+
+use super::fig_grid::{classify, render, Cell};
+use crate::dataset::{collect_gpu, Record};
+use crate::gemm::Algorithm;
+use crate::gpusim::{GpuSpec, Simulator, PAPER_GPUS, SIZE_GRID};
+use crate::selector::Selector;
+use crate::util::stats::{fraction_where, Histogram};
+use crate::util::table::TextTable;
+use std::collections::HashMap;
+
+/// Per-GPU Table VIII metrics (all as fractions, not %).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SelectionMetrics {
+    pub mtnn_vs_nt: f64,
+    pub mtnn_vs_tnn: f64,
+    pub gow_avg: f64,
+    pub gow_max: f64,
+    pub lub_avg: f64,
+    pub lub_min: f64,
+    pub n: usize,
+}
+
+/// MTNN's achieved performance on a benchmarked record.
+fn p_mtnn(selector: &Selector, gpu: &GpuSpec, r: &Record) -> f64 {
+    match selector.select(gpu, r.m, r.n, r.k).0 {
+        Algorithm::Nt => r.p_nt,
+        Algorithm::Tnn => r.p_tnn,
+        Algorithm::Nn => unreachable!(),
+    }
+}
+
+/// Compute Table VIII metrics over one GPU's records (Eq. 6 and Eq. 7).
+pub fn metrics(selector: &Selector, gpu: &'static GpuSpec, records: &[Record]) -> SelectionMetrics {
+    let mut m = SelectionMetrics {
+        gow_max: f64::NEG_INFINITY,
+        lub_min: f64::INFINITY,
+        ..Default::default()
+    };
+    for r in records {
+        let p = p_mtnn(selector, gpu, r);
+        let worst = r.p_nt.min(r.p_tnn);
+        let best = r.p_nt.max(r.p_tnn);
+        let gow = (p - worst) / worst;
+        let lub = (p - best) / best;
+        m.mtnn_vs_nt += (p - r.p_nt) / r.p_nt;
+        m.mtnn_vs_tnn += (p - r.p_tnn) / r.p_tnn;
+        m.gow_avg += gow;
+        m.gow_max = m.gow_max.max(gow);
+        m.lub_avg += lub;
+        m.lub_min = m.lub_min.min(lub);
+        m.n += 1;
+    }
+    let n = m.n as f64;
+    m.mtnn_vs_nt /= n;
+    m.mtnn_vs_tnn /= n;
+    m.gow_avg /= n;
+    m.lub_avg /= n;
+    m
+}
+
+/// Fig 5 + Fig 6 for one GPU.
+pub fn figs56(selector: &Selector, gpu: &'static GpuSpec) -> (String, Histogram, f64, f64) {
+    let sim = Simulator::new(gpu);
+    let records = collect_gpu(&sim);
+    let mut cells = HashMap::new();
+    for &m in &SIZE_GRID {
+        for &n in &SIZE_GRID {
+            for &k in &SIZE_GRID {
+                if !sim.fits(m, n, k) {
+                    cells.insert((m, n, k), Cell::Excluded);
+                }
+            }
+        }
+    }
+    let mut ratios = Vec::with_capacity(records.len());
+    let mut max_nt_over_mtnn = 0.0f64;
+    for r in &records {
+        let p = p_mtnn(selector, gpu, r);
+        cells.insert((r.m, r.n, r.k), classify(r.p_nt, p));
+        ratios.push(p / r.p_nt);
+        max_nt_over_mtnn = max_nt_over_mtnn.max(r.p_nt / p);
+    }
+    let grid = render(
+        &format!("Fig 5 — NT vs MTNN winners on {}", gpu.name),
+        "NT",
+        "MTNN",
+        &cells,
+    );
+    let mut hist = Histogram::new(0.6, 2.0, 14);
+    hist.add_all(&ratios);
+    let frac_gt_1 = fraction_where(&ratios, |x| x > 1.05);
+    (grid, hist, frac_gt_1, max_nt_over_mtnn)
+}
+
+/// Full §VI.B output: Fig 5, Fig 6, Table VIII (per GPU + Total).
+pub fn run(selector: &Selector) -> String {
+    let mut out = String::new();
+    let mut table8 = TextTable::new(
+        "Table VIII — MTNN performance metrics in % (paper Total: 54.03 / 21.92 / 76.23 / 1439.39 / -0.28 / -71.62)",
+        &["Metric", "GTX1080", "TitanX", "Total"],
+    );
+    let mut per_gpu: Vec<SelectionMetrics> = Vec::new();
+    let mut all_records: Vec<(usize, Vec<Record>)> = Vec::new();
+    for (gi, gpu) in PAPER_GPUS.iter().enumerate() {
+        let (grid, hist, frac, max_ratio) = figs56(selector, gpu);
+        out.push_str(&grid);
+        out.push('\n');
+        out.push_str(&hist.render(&format!(
+            "Fig 6 — frequency of P_MTNN/P_NT on {} (paper: {:.2}% of cases MTNN > NT)",
+            gpu.name,
+            if gpu.name == "GTX1080" { 47.81 } else { 43.35 }
+        )));
+        out.push_str(&format!(
+            "  measured: {:.1}% of cases MTNN wins by >5% | max P_NT/P_MTNN {:.2} (paper ~1.6)\n\n",
+            frac * 100.0,
+            max_ratio
+        ));
+        let records = collect_gpu(&Simulator::new(gpu));
+        per_gpu.push(metrics(selector, gpu, &records));
+        all_records.push((gi, records));
+    }
+    // Total = pooled over both GPUs.
+    let mut pooled = SelectionMetrics {
+        gow_max: f64::NEG_INFINITY,
+        lub_min: f64::INFINITY,
+        ..Default::default()
+    };
+    {
+        let mut sum = |m: &SelectionMetrics| {
+            let n = m.n as f64;
+            pooled.mtnn_vs_nt += m.mtnn_vs_nt * n;
+            pooled.mtnn_vs_tnn += m.mtnn_vs_tnn * n;
+            pooled.gow_avg += m.gow_avg * n;
+            pooled.lub_avg += m.lub_avg * n;
+            pooled.gow_max = pooled.gow_max.max(m.gow_max);
+            pooled.lub_min = pooled.lub_min.min(m.lub_min);
+            pooled.n += m.n;
+        };
+        for m in &per_gpu {
+            sum(m);
+        }
+    }
+    let n = pooled.n as f64;
+    pooled.mtnn_vs_nt /= n;
+    pooled.mtnn_vs_tnn /= n;
+    pooled.gow_avg /= n;
+    pooled.lub_avg /= n;
+
+    let pct = |x: f64| format!("{:.2}", x * 100.0);
+    let rows: [(&str, fn(&SelectionMetrics) -> f64); 6] = [
+        ("MTNN vs NT", |m| m.mtnn_vs_nt),
+        ("MTNN vs TNN", |m| m.mtnn_vs_tnn),
+        ("GOW_avg", |m| m.gow_avg),
+        ("GOW_max", |m| m.gow_max),
+        ("LUB_avg", |m| m.lub_avg),
+        ("LUB_min", |m| m.lub_min),
+    ];
+    for (name, f) in rows {
+        table8.row(vec![
+            name.to_string(),
+            pct(f(&per_gpu[0])),
+            pct(f(&per_gpu[1])),
+            pct(f(&pooled)),
+        ]);
+    }
+    out.push_str(&table8.render());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gpusim::GTX1080;
+
+    #[test]
+    fn table8_shape_holds() {
+        let selector = Selector::train_default(&collect_paper_dataset());
+        let records = collect_gpu(&Simulator::new(&GTX1080));
+        let m = metrics(&selector, &GTX1080, &records);
+        assert!(m.mtnn_vs_nt > 0.10, "MTNN vs NT {:.3}", m.mtnn_vs_nt);
+        assert!(m.mtnn_vs_tnn > 0.0, "MTNN vs TNN {:.3}", m.mtnn_vs_tnn);
+        assert!(m.gow_avg > m.mtnn_vs_nt, "GOW should dominate vs-NT gain");
+        assert!(m.gow_max > 1.0, "GOW_max {:.2} should be large", m.gow_max);
+        assert!(
+            m.lub_avg > -0.03 && m.lub_avg <= 0.0,
+            "LUB_avg {:.4} should be tiny",
+            m.lub_avg
+        );
+        assert!(m.lub_min >= -1.0 && m.lub_min < 0.0);
+    }
+
+    #[test]
+    fn fig5_reduces_nt_wins_vs_fig2() {
+        // The point of MTNN: far fewer '#' (NT-wins) cells than Fig 2.
+        let selector = Selector::train_default(&collect_paper_dataset());
+        let (grid5, _, _, max_ratio) = figs56(&selector, &GTX1080);
+        let fig2 = super::super::fig23::compute(&GTX1080);
+        let count = |s: &str| s.matches('#').count();
+        assert!(
+            count(&grid5) < count(&fig2.grid) / 2,
+            "MTNN should eliminate most NT-better cells: fig5 {} vs fig2 {}",
+            count(&grid5),
+            count(&fig2.grid)
+        );
+        // Paper: max P_NT/P_MTNN drops from 15.39 to ~1.6.
+        assert!(max_ratio < 3.0, "max NT/MTNN {max_ratio:.2}");
+    }
+}

@@ -1,0 +1,97 @@
+//! Table IX: the fully connected network configurations of the paper's
+//! Caffe evaluation.
+
+/// An FCN configuration: layer dimensionalities including input and output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FcnConfig {
+    /// e.g. "mnist-2h" (MNIST data, 2 hidden layers).
+    pub name: String,
+    pub dims: Vec<u64>,
+}
+
+impl FcnConfig {
+    pub fn new(name: &str, dims: Vec<u64>) -> FcnConfig {
+        assert!(dims.len() >= 2, "need at least input and output dims");
+        FcnConfig {
+            name: name.to_string(),
+            dims,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// (in_dim, out_dim) per layer.
+    pub fn layers(&self) -> Vec<(u64, u64)> {
+        self.dims.windows(2).map(|w| (w[0], w[1])).collect()
+    }
+
+    pub fn n_params(&self) -> u64 {
+        self.layers().iter().map(|(i, o)| i * o + o).sum()
+    }
+}
+
+/// Table IX, MNIST column: input 784, output 10.
+pub fn mnist_configs() -> Vec<FcnConfig> {
+    vec![
+        FcnConfig::new("mnist-2h", vec![784, 2048, 1024, 10]),
+        FcnConfig::new("mnist-3h", vec![784, 2048, 2048, 1024, 10]),
+        FcnConfig::new("mnist-4h", vec![784, 2048, 2048, 2048, 1024, 10]),
+    ]
+}
+
+/// Table IX, synthetic column: input = output = 26752, hidden 4096.
+pub fn synthetic_configs() -> Vec<FcnConfig> {
+    vec![
+        FcnConfig::new("synth-2h", vec![26752, 4096, 4096, 26752]),
+        FcnConfig::new("synth-3h", vec![26752, 4096, 4096, 4096, 26752]),
+        FcnConfig::new("synth-4h", vec![26752, 4096, 4096, 4096, 4096, 26752]),
+    ]
+}
+
+/// Mini-batch sizes swept in Figs 7–8.
+pub const MINI_BATCHES: [u64; 6] = [128, 256, 512, 1024, 2048, 4096];
+
+/// The small end-to-end config of examples/train_fcn.rs — must match
+/// `python/compile/aot.py::FCN_DIMS`.
+pub fn e2e_config() -> FcnConfig {
+    FcnConfig::new("e2e-mnist-small", vec![784, 512, 256, 10])
+}
+
+pub const E2E_BATCH: u64 = 128;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table9_shapes() {
+        let m = mnist_configs();
+        assert_eq!(m[0].dims, vec![784, 2048, 1024, 10]);
+        assert_eq!(m[2].n_layers(), 5);
+        let s = synthetic_configs();
+        assert_eq!(s[1].dims, vec![26752, 4096, 4096, 4096, 26752]);
+    }
+
+    #[test]
+    fn layer_decomposition() {
+        let c = FcnConfig::new("t", vec![8, 4, 2]);
+        assert_eq!(c.layers(), vec![(8, 4), (4, 2)]);
+        assert_eq!(c.n_params(), 8 * 4 + 4 + 4 * 2 + 2);
+    }
+
+    #[test]
+    fn synthetic_is_large() {
+        // The synthetic nets are the ones where the paper sees 28% gains —
+        // parameter counts in the hundreds of millions.
+        let s = synthetic_configs();
+        assert!(s[0].n_params() > 200_000_000);
+    }
+
+    #[test]
+    #[should_panic]
+    fn degenerate_config_rejected() {
+        FcnConfig::new("bad", vec![10]);
+    }
+}

@@ -1,0 +1,133 @@
+//! InnerProduct-layer → GEMM-call decomposition, exactly as Caffe performs
+//! it (and as the paper's Table X breakdown assumes):
+//!
+//! * forward:  `Y[mb,out] = X[mb,in] · W[out,in]ᵀ`   — an **NT** call
+//!   (the only place MTNN applies);
+//! * backward-data:    `dX[mb,in] = dY[mb,out] · W[out,in]`  — **NN**;
+//! * backward-weights: `dW[out,in] = dY[mb,out]ᵀ · X[mb,in]` — **TN**
+//!   (transpose on A; cuBLAS handles this layout efficiently, which is
+//!   why the paper's backward phase shows no speedup).
+
+use crate::gemm::GemmShape;
+
+/// Which SGEMM variant a call uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmKind {
+    /// NT — selectable between direct NT and TNN by the selector.
+    Nt,
+    /// Plain NN.
+    Nn,
+    /// TN (Aᵀ·B) — not an NT op; never rerouted.
+    Tn,
+}
+
+/// One GEMM call in a training iteration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmCall {
+    pub kind: GemmKind,
+    pub shape: GemmShape,
+    /// Layer index this call belongs to.
+    pub layer: usize,
+    /// True if the call is part of the forward phase.
+    pub forward: bool,
+}
+
+/// All GEMM calls of one forward pass over `dims` with mini-batch `mb`.
+pub fn forward_calls(dims: &[u64], mb: u64) -> Vec<GemmCall> {
+    dims.windows(2)
+        .enumerate()
+        .map(|(layer, w)| GemmCall {
+            kind: GemmKind::Nt,
+            // C[mb, out] = X[mb, in] × W[out, in]ᵀ  →  m=mb, n=out, k=in.
+            shape: GemmShape::new(mb, w[1], w[0]),
+            layer,
+            forward: true,
+        })
+        .collect()
+}
+
+/// All GEMM calls of one backward pass (data + weight gradients).
+pub fn backward_calls(dims: &[u64], mb: u64) -> Vec<GemmCall> {
+    let mut out = Vec::new();
+    for (layer, w) in dims.windows(2).enumerate() {
+        let (fan_in, fan_out) = (w[0], w[1]);
+        // dW[out,in] = dYᵀ[out,mb] × X[mb,in]  →  m=out, n=in, k=mb (TN).
+        out.push(GemmCall {
+            kind: GemmKind::Tn,
+            shape: GemmShape::new(fan_out, fan_in, mb),
+            layer,
+            forward: false,
+        });
+        // dX[mb,in] = dY[mb,out] × W[out,in]  →  m=mb, n=in, k=out (NN).
+        // Caffe skips dX for the first layer (no upstream consumer).
+        if layer > 0 {
+            out.push(GemmCall {
+                kind: GemmKind::Nn,
+                shape: GemmShape::new(mb, fan_in, fan_out),
+                layer,
+                forward: false,
+            });
+        }
+    }
+    out
+}
+
+/// Forward + backward calls of one training iteration.
+pub fn training_calls(dims: &[u64], mb: u64) -> Vec<GemmCall> {
+    let mut calls = forward_calls(dims, mb);
+    calls.extend(backward_calls(dims, mb));
+    calls
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DIMS: [u64; 4] = [784, 2048, 1024, 10];
+
+    #[test]
+    fn forward_shapes_are_nt() {
+        let calls = forward_calls(&DIMS, 256);
+        assert_eq!(calls.len(), 3);
+        assert!(calls.iter().all(|c| c.kind == GemmKind::Nt && c.forward));
+        // Layer 0: [256,784] × [2048,784]ᵀ.
+        assert_eq!(calls[0].shape, GemmShape::new(256, 2048, 784));
+        assert_eq!(calls[2].shape, GemmShape::new(256, 10, 1024));
+    }
+
+    #[test]
+    fn backward_has_no_nt_calls() {
+        // The paper's Table X: backward is NT-free, hence no MTNN effect.
+        let calls = backward_calls(&DIMS, 256);
+        assert!(calls.iter().all(|c| c.kind != GemmKind::Nt));
+        // 3 dW (TN) + 2 dX (NN, first layer skipped).
+        assert_eq!(
+            calls.iter().filter(|c| c.kind == GemmKind::Tn).count(),
+            3
+        );
+        assert_eq!(
+            calls.iter().filter(|c| c.kind == GemmKind::Nn).count(),
+            2
+        );
+    }
+
+    #[test]
+    fn weight_grad_shape() {
+        let calls = backward_calls(&DIMS, 64);
+        // dW for layer 0: [2048, 784] with k = mb.
+        let dw0 = calls
+            .iter()
+            .find(|c| c.kind == GemmKind::Tn && c.layer == 0)
+            .unwrap();
+        assert_eq!(dw0.shape, GemmShape::new(2048, 784, 64));
+    }
+
+    #[test]
+    fn training_is_concatenation() {
+        let t = training_calls(&DIMS, 32);
+        assert_eq!(
+            t.len(),
+            forward_calls(&DIMS, 32).len() + backward_calls(&DIMS, 32).len()
+        );
+    }
+}

@@ -1,0 +1,14 @@
+//! The FCN engine — the reproduction's stand-in for Caffe (§VI.C):
+//!
+//! * [`config`] — the Table IX network configurations;
+//! * [`gemm_seq`] — the exact InnerProduct-layer → GEMM-call decomposition
+//!   Caffe performs in forward/backward;
+//! * [`sim_trainer`] — per-minibatch timing of CaffeNT vs CaffeMTNN on the
+//!   simulated GPUs (Figs 7–8, Table X);
+//! * [`real_trainer`] — actual training of the small e2e FCN through the
+//!   AOT train-step artifacts on PJRT (examples/train_fcn.rs).
+
+pub mod config;
+pub mod gemm_seq;
+pub mod real_trainer;
+pub mod sim_trainer;

@@ -1,0 +1,165 @@
+//! Simulated FCN training timing: CaffeNT (always the direct cuBLAS NT
+//! call) vs CaffeMTNN (per-call MTNN selection) on the calibrated GPU
+//! models — regenerates Figs 7–8 and Table X.
+
+use super::gemm_seq::{training_calls, GemmCall, GemmKind};
+use crate::gemm::{Algorithm, GemmShape};
+use crate::gpusim::{GpuSpec, Simulator};
+use crate::selector::Selector;
+
+/// Forward/backward/total per-iteration times in milliseconds.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PhaseTimes {
+    pub forward_ms: f64,
+    pub backward_ms: f64,
+}
+
+impl PhaseTimes {
+    pub fn total_ms(&self) -> f64 {
+        self.forward_ms + self.backward_ms
+    }
+}
+
+/// Which NT policy the simulated Caffe uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    /// Original Caffe: every NT op calls the direct NT kernel.
+    AlwaysNt,
+    /// Original Caffe with TNN unconditionally (ablation).
+    AlwaysTnn,
+    /// The revised Caffe: MTNN selects per call (with memory fallback).
+    Mtnn,
+}
+
+/// Time one GEMM call on the simulator under a policy.
+fn call_time(
+    sim: &Simulator,
+    sel: Option<&Selector>,
+    gpu: &'static GpuSpec,
+    call: &GemmCall,
+    policy: Policy,
+) -> f64 {
+    let GemmShape { m, n, k } = call.shape;
+    match call.kind {
+        // TN and NN calls are not NT ops: both run as plain NN-cost GEMMs
+        // (cuBLAS's TN kernel streams A rows exactly like NN).
+        GemmKind::Nn | GemmKind::Tn => sim.model.t_nn(m, n, k),
+        GemmKind::Nt => {
+            let algo = match policy {
+                Policy::AlwaysNt => Algorithm::Nt,
+                Policy::AlwaysTnn => {
+                    if sim.fits(m, n, k) {
+                        Algorithm::Tnn
+                    } else {
+                        Algorithm::Nt
+                    }
+                }
+                Policy::Mtnn => {
+                    sel.expect("MTNN policy needs a selector")
+                        .select(gpu, m, n, k)
+                        .0
+                }
+            };
+            match algo {
+                Algorithm::Nt => sim.model.t_nt(m, n, k),
+                Algorithm::Tnn => sim.model.t_tnn(m, n, k),
+                Algorithm::Nn => unreachable!(),
+            }
+        }
+    }
+}
+
+/// Simulate one training iteration of `dims` with mini-batch `mb`.
+pub fn iteration_times(
+    gpu: &'static GpuSpec,
+    sel: Option<&Selector>,
+    dims: &[u64],
+    mb: u64,
+    policy: Policy,
+) -> PhaseTimes {
+    let sim = Simulator::new(gpu);
+    let mut t = PhaseTimes::default();
+    for call in training_calls(dims, mb) {
+        let secs = call_time(&sim, sel, gpu, &call, policy);
+        if call.forward {
+            t.forward_ms += secs * 1e3;
+        } else {
+            t.backward_ms += secs * 1e3;
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::fcn::config::{mnist_configs, synthetic_configs};
+    use crate::gpusim::GTX1080;
+    use std::sync::OnceLock;
+
+    fn selector() -> &'static Selector {
+        static SEL: OnceLock<Selector> = OnceLock::new();
+        SEL.get_or_init(|| Selector::train_default(&collect_paper_dataset()))
+    }
+
+    #[test]
+    fn mtnn_never_much_worse_than_nt() {
+        // LUB-style bound: across configs, MTNN total should be within a
+        // few percent of NT even when predictions err.
+        for cfg in mnist_configs().iter().chain(synthetic_configs().iter()) {
+            for &mb in &[256u64, 1024] {
+                let nt = iteration_times(&GTX1080, None, &cfg.dims, mb, Policy::AlwaysNt);
+                let mt =
+                    iteration_times(&GTX1080, Some(selector()), &cfg.dims, mb, Policy::Mtnn);
+                assert!(
+                    mt.total_ms() < nt.total_ms() * 1.10,
+                    "{} mb={mb}: MTNN {:.1}ms vs NT {:.1}ms",
+                    cfg.name,
+                    mt.total_ms(),
+                    nt.total_ms()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn synthetic_large_batch_shows_speedup() {
+        // The paper's headline: ~28% on the synthetic nets at large mb.
+        let cfg = &synthetic_configs()[1];
+        let nt = iteration_times(&GTX1080, None, &cfg.dims, 4096, Policy::AlwaysNt);
+        let mt = iteration_times(&GTX1080, Some(selector()), &cfg.dims, 4096, Policy::Mtnn);
+        let speedup = nt.total_ms() / mt.total_ms();
+        assert!(
+            speedup > 1.10,
+            "expected a clear speedup on synth-3h@4096, got {speedup:.3}"
+        );
+    }
+
+    #[test]
+    fn backward_unaffected_by_policy() {
+        // Table X: backward has no NT calls, so policies agree there.
+        let cfg = &mnist_configs()[0];
+        let nt = iteration_times(&GTX1080, None, &cfg.dims, 1024, Policy::AlwaysNt);
+        let mt = iteration_times(&GTX1080, Some(selector()), &cfg.dims, 1024, Policy::Mtnn);
+        assert!((nt.backward_ms - mt.backward_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn forward_speedup_is_where_the_gain_lives() {
+        let cfg = &synthetic_configs()[0];
+        let nt = iteration_times(&GTX1080, None, &cfg.dims, 2048, Policy::AlwaysNt);
+        let mt = iteration_times(&GTX1080, Some(selector()), &cfg.dims, 2048, Policy::Mtnn);
+        let fwd_speedup = nt.forward_ms / mt.forward_ms;
+        let bwd_speedup = nt.backward_ms / mt.backward_ms;
+        assert!(fwd_speedup > 1.2, "fwd speedup {fwd_speedup:.2}");
+        assert!((bwd_speedup - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn always_tnn_policy_runs_and_obeys_memory() {
+        let cfg = &synthetic_configs()[2];
+        let t = iteration_times(&GTX1080, None, &cfg.dims, 4096, Policy::AlwaysTnn);
+        assert!(t.total_ms() > 0.0);
+    }
+}

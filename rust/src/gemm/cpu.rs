@@ -1,0 +1,187 @@
+//! Row-major f32 matrices and naive reference GEMM — the numeric oracle
+//! every execution backend is validated against (the Rust-side analogue of
+//! `python/compile/kernels/ref.py`).
+
+use crate::util::rng::Xoshiro256pp;
+
+/// Dense row-major f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Matrix {
+        Matrix {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Matrix {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Deterministic uniform [-1, 1) fill.
+    pub fn random(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Xoshiro256pp::new(seed);
+        Matrix {
+            rows,
+            cols,
+            data: (0..rows * cols)
+                .map(|_| rng.next_f32() * 2.0 - 1.0)
+                .collect(),
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// Out-of-place transpose (the reference for the Pallas kernel).
+    pub fn transpose(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+}
+
+/// `C[m,n] = A[m,k] × B[k,n]` — naive triple loop (f32 accumulate in f64
+/// would diverge from the XLA f32 path; accumulate in f32 like the kernels).
+pub fn matmul_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "NN inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for l in 0..k {
+            let av = a.at(i, l);
+            if av == 0.0 {
+                continue;
+            }
+            for j in 0..n {
+                c.data[i * n + j] += av * b.at(l, j);
+            }
+        }
+    }
+    c
+}
+
+/// `C[m,n] = A[m,k] × B[n,k]ᵀ` — the paper's NT operation, computed
+/// directly (no materialized transpose).
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "NT inner-dim mismatch (B is n×k)");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += a.at(i, l) * b.at(j, l);
+            }
+            c.data[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// TNN reference: materialize `Bᵀ` then run NN (Algorithm 1 of the paper).
+pub fn matmul_tnn(a: &Matrix, b: &Matrix) -> Matrix {
+    let bt = b.transpose();
+    matmul_nn(a, &bt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::assert_allclose;
+    use crate::testutil::prop::check;
+
+    #[test]
+    fn known_product() {
+        // A = [[1,2],[3,4]], B(kxn) = [[5,6],[7,8]] → AB = [[19,22],[43,50]]
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(matmul_nn(&a, &b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn nt_equals_tnn_exactly_in_structure() {
+        let a = Matrix::random(7, 5, 1);
+        let b = Matrix::random(9, 5, 2); // n×k
+        let nt = matmul_nt(&a, &b);
+        let tnn = matmul_tnn(&a, &b);
+        assert_eq!(nt.rows, 7);
+        assert_eq!(nt.cols, 9);
+        // Different summation orders ⇒ allow f32 tolerance.
+        assert_allclose(&nt.data, &tnn.data, 1e-5, 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let m = Matrix::random(13, 4, 3);
+        assert_eq!(m.transpose().transpose(), m);
+    }
+
+    #[test]
+    fn transpose_layout() {
+        let m = Matrix::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = m.transpose();
+        assert_eq!(t.rows, 3);
+        assert_eq!(t.data, vec![1.0, 4.0, 2.0, 5.0, 3.0, 6.0]);
+    }
+
+    #[test]
+    fn prop_nt_matches_tnn_on_random_shapes() {
+        check("nt == tnn (cpu oracle)", 25, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let k = g.usize_in(1, 12);
+            let seed = g.i64_in(0, 1 << 30) as u64;
+            let a = Matrix::random(m, k, seed);
+            let b = Matrix::random(n, k, seed ^ 0xABCD);
+            let nt = matmul_nt(&a, &b);
+            let tnn = matmul_tnn(&a, &b);
+            assert_allclose(&nt.data, &tnn.data, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn prop_identity_is_neutral() {
+        check("A × I = A", 20, |g| {
+            let m = g.usize_in(1, 10);
+            let k = g.usize_in(1, 10);
+            let a = Matrix::random(m, k, 9);
+            let mut eye = Matrix::zeros(k, k);
+            for i in 0..k {
+                eye.set(i, i, 1.0);
+            }
+            let c = matmul_nn(&a, &eye);
+            assert_allclose(&c.data, &a.data, 1e-6, 1e-6);
+            // NT with identity (k×k, symmetric) is also neutral.
+            let c2 = matmul_nt(&a, &eye);
+            assert_allclose(&c2.data, &a.data, 1e-6, 1e-6);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 4);
+        matmul_nn(&a, &b);
+    }
+}

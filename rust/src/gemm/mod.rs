@@ -1,0 +1,87 @@
+//! The GEMM service: algorithm definitions, the naive CPU oracle, and the
+//! execution backends (simulated GPU timing / real PJRT execution).
+
+pub mod cpu;
+pub mod sim;
+pub mod xla;
+
+/// The two implementations MTNN selects between (§V of the paper), plus NN
+/// for the underlying plain product.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    /// Direct `C = A × Bᵀ` (the cuBLAS NT call in the paper).
+    Nt,
+    /// Transpose-then-multiply (the paper's Algorithm 1).
+    Tnn,
+    /// Plain `C = A × B` (not selectable; used by NN workloads).
+    Nn,
+}
+
+impl Algorithm {
+    /// The paper's class encoding: NT = +1, TNN = −1.
+    pub fn label(self) -> i8 {
+        match self {
+            Algorithm::Nt => 1,
+            Algorithm::Tnn => -1,
+            Algorithm::Nn => panic!("NN is not a selectable NT implementation"),
+        }
+    }
+
+    pub fn from_label(label: i8) -> Algorithm {
+        if label >= 0 {
+            Algorithm::Nt
+        } else {
+            Algorithm::Tnn
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Nt => "NT",
+            Algorithm::Tnn => "TNN",
+            Algorithm::Nn => "NN",
+        }
+    }
+}
+
+/// Shape of an NT-operation request: `C[m,n] = A[m,k] × B[n,k]ᵀ`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GemmShape {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+impl GemmShape {
+    pub fn new(m: u64, n: u64, k: u64) -> GemmShape {
+        GemmShape { m, n, k }
+    }
+
+    pub fn flops(&self) -> f64 {
+        2.0 * self.m as f64 * self.n as f64 * self.k as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn label_encoding_matches_paper() {
+        assert_eq!(Algorithm::Nt.label(), 1);
+        assert_eq!(Algorithm::Tnn.label(), -1);
+        assert_eq!(Algorithm::from_label(1), Algorithm::Nt);
+        assert_eq!(Algorithm::from_label(-1), Algorithm::Tnn);
+    }
+
+    #[test]
+    #[should_panic]
+    fn nn_has_no_label() {
+        Algorithm::Nn.label();
+    }
+
+    #[test]
+    fn shape_flops() {
+        assert_eq!(GemmShape::new(10, 20, 30).flops(), 12000.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Simulated execution backend: answers "how long would this GEMM take on
+//! GPU G with algorithm X" from the calibrated timing model. Drives every
+//! paper experiment (the physical-testbed plane of DESIGN.md §9).
+
+use super::{Algorithm, GemmShape};
+use crate::gpusim::{GpuSpec, Simulator};
+
+/// Simulated timing backend for one GPU.
+#[derive(Debug, Clone)]
+pub struct SimBackend {
+    pub sim: Simulator,
+}
+
+impl SimBackend {
+    pub fn new(gpu: &'static GpuSpec) -> SimBackend {
+        SimBackend {
+            sim: Simulator::new(gpu),
+        }
+    }
+
+    /// Seconds to execute `shape` with `algo`; `None` if the workspace does
+    /// not fit in GPU memory.
+    pub fn execute_time(&self, shape: GemmShape, algo: Algorithm) -> Option<f64> {
+        let GemmShape { m, n, k } = shape;
+        match algo {
+            Algorithm::Nt => {
+                if Simulator::nt_workspace_bytes(m, n, k) > self.sim.spec().global_mem_bytes()
+                {
+                    return None;
+                }
+                Some(self.sim.model.t_nt(m, n, k))
+            }
+            Algorithm::Tnn => {
+                if !self.sim.fits(m, n, k) {
+                    return None;
+                }
+                Some(self.sim.model.t_tnn(m, n, k))
+            }
+            Algorithm::Nn => {
+                if Simulator::nt_workspace_bytes(m, n, k) > self.sim.spec().global_mem_bytes()
+                {
+                    return None;
+                }
+                Some(self.sim.model.t_nn(m, n, k))
+            }
+        }
+    }
+
+    /// GFLOPS for the given execution.
+    pub fn perf_gflops(&self, shape: GemmShape, algo: Algorithm) -> Option<f64> {
+        self.execute_time(shape, algo)
+            .map(|t| shape.flops() / t / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GTX1080;
+
+    #[test]
+    fn oom_cases_return_none() {
+        let b = SimBackend::new(&GTX1080);
+        let huge = GemmShape::new(65536, 65536, 65536);
+        assert_eq!(b.execute_time(huge, Algorithm::Nt), None);
+        assert_eq!(b.execute_time(huge, Algorithm::Tnn), None);
+    }
+
+    #[test]
+    fn tnn_oom_before_nt() {
+        // A shape where NT fits but the extra Bᵀ does not.
+        let b = SimBackend::new(&GTX1080);
+        // 4*(mk+nk+mn) ≤ 8 GiB < 4*(mk+2nk+mn) requires nk huge vs mk, mn:
+        let s = GemmShape::new(128, 32768, 16384);
+        // NT: 4*(2^21 + 2^29 + 2^22) ≈ 2.17 GB fits; TNN adds 2 GB more.
+        assert!(b.execute_time(s, Algorithm::Nt).is_some());
+        let tnn_bytes = Simulator::tnn_workspace_bytes(128, 32768, 16384);
+        if tnn_bytes > GTX1080.global_mem_bytes() {
+            assert!(b.execute_time(s, Algorithm::Tnn).is_none());
+        }
+    }
+
+    #[test]
+    fn timing_consistent_with_simulator() {
+        let b = SimBackend::new(&GTX1080);
+        let s = GemmShape::new(1024, 2048, 512);
+        let t = b.execute_time(s, Algorithm::Nt).unwrap();
+        assert_eq!(t, b.sim.model.t_nt(1024, 2048, 512));
+        let p = b.perf_gflops(s, Algorithm::Nt).unwrap();
+        assert!((p - s.flops() / t / 1e9).abs() < 1e-9);
+    }
+}

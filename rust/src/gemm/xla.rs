@@ -1,0 +1,91 @@
+//! Real execution backend: runs the AOT-compiled Pallas/JAX artifacts on
+//! the PJRT CPU client. This is the *functional* plane of the GEMM service
+//! — numerics are real; GPU timing comes from [`super::sim::SimBackend`].
+//!
+//! NOTE: `xla::PjRtClient` is not `Send` (it is `Rc`-based), so an
+//! `XlaBackend` lives on one thread; the coordinator owns one inside its
+//! engine thread (see `coordinator::engine`).
+
+use super::cpu::Matrix;
+use super::{Algorithm, GemmShape};
+use crate::runtime::Runtime;
+use std::time::Instant;
+
+/// Result of one real execution.
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub output: Matrix,
+    /// Wall time of the PJRT execution (not a GPU estimate!).
+    pub elapsed: std::time::Duration,
+    pub artifact: String,
+}
+
+/// PJRT-backed GEMM execution over the artifact catalog.
+pub struct XlaBackend {
+    pub rt: Runtime,
+}
+
+impl XlaBackend {
+    pub fn new(rt: Runtime) -> XlaBackend {
+        XlaBackend { rt }
+    }
+
+    /// Artifact name for a shape + algorithm (must be in the catalog).
+    pub fn artifact_name(shape: GemmShape, algo: Algorithm) -> String {
+        let GemmShape { m, n, k } = shape;
+        match algo {
+            Algorithm::Nt => format!("nt_{m}x{n}x{k}"),
+            Algorithm::Tnn => format!("tnn_{m}x{n}x{k}"),
+            Algorithm::Nn => format!("nn_{m}x{n}x{k}"),
+        }
+    }
+
+    /// Shapes available in the catalog for a given algorithm.
+    pub fn catalog_shapes(&self, algo: Algorithm) -> Vec<GemmShape> {
+        let tag = match algo {
+            Algorithm::Nt => "nt",
+            Algorithm::Tnn => "tnn",
+            Algorithm::Nn => "nn",
+        };
+        self.rt
+            .manifest
+            .gemm_entries(tag)
+            .iter()
+            .map(|e| {
+                GemmShape::new(
+                    e.meta.get("m").as_usize().unwrap_or(0) as u64,
+                    e.meta.get("n").as_usize().unwrap_or(0) as u64,
+                    e.meta.get("k").as_usize().unwrap_or(0) as u64,
+                )
+            })
+            .collect()
+    }
+
+    /// Whether the catalog can serve this (shape, algo).
+    pub fn supports(&self, shape: GemmShape, algo: Algorithm) -> bool {
+        self.rt
+            .manifest
+            .get(&Self::artifact_name(shape, algo))
+            .is_ok()
+    }
+
+    /// Execute `C = A × Bᵀ` (or plain NN for [`Algorithm::Nn`]) for real.
+    /// `a` is m×k; `b` is n×k for NT/TNN and k×n for NN.
+    pub fn execute(
+        &self,
+        shape: GemmShape,
+        algo: Algorithm,
+        a: &Matrix,
+        b: &Matrix,
+    ) -> anyhow::Result<ExecOutcome> {
+        let name = Self::artifact_name(shape, algo);
+        let t0 = Instant::now();
+        let mut outs = self.rt.execute(&name, &[a, b])?;
+        anyhow::ensure!(outs.len() == 1, "{name}: expected 1 output");
+        Ok(ExecOutcome {
+            output: outs.remove(0),
+            elapsed: t0.elapsed(),
+            artifact: name,
+        })
+    }
+}

@@ -1,0 +1,165 @@
+//! GPU hardware descriptions — the paper's Table I / Table III.
+//!
+//! These five characteristics (global memory, #SMs, core clock, memory bus
+//! width, L2 size) are exactly the GPU-side features of the MTNN input
+//! vector `(gm, sm, cc, mbw, l2c, m, n, k)`.
+
+/// Static description of a GPU, mirroring the paper's Table III plus the
+/// core count from Table I (used to derive peak FLOPS).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Stable id used to seed deterministic measurement noise.
+    pub id: u64,
+    pub compute_capability: f64,
+    /// Global memory in GiB (paper writes "8 GB" / "10 GB").
+    pub global_mem_gib: u64,
+    /// Number of streaming multiprocessors.
+    pub sms: u64,
+    /// CUDA cores (Table I).
+    pub cuda_cores: u64,
+    /// Core clock in MHz.
+    pub core_clock_mhz: f64,
+    /// Memory clock in MHz (DDR: effective transfer rate is 2×).
+    pub mem_clock_mhz: f64,
+    /// Memory bus width in bits.
+    pub mem_bus_width_bits: u64,
+    /// L2 cache in KiB.
+    pub l2_cache_kb: u64,
+}
+
+/// NVIDIA GeForce GTX 1080 (Pascal), as characterized in Tables I & III.
+pub const GTX1080: GpuSpec = GpuSpec {
+    name: "GTX1080",
+    id: 1,
+    compute_capability: 6.1,
+    global_mem_gib: 8,
+    sms: 20,
+    cuda_cores: 2560,
+    core_clock_mhz: 1607.0,
+    mem_clock_mhz: 5005.0,
+    mem_bus_width_bits: 256,
+    l2_cache_kb: 2048,
+};
+
+/// NVIDIA Titan X (Pascal), as characterized in Tables I & III.
+pub const TITANX: GpuSpec = GpuSpec {
+    name: "TitanX",
+    id: 2,
+    compute_capability: 6.1,
+    global_mem_gib: 10,
+    sms: 28,
+    cuda_cores: 3584,
+    core_clock_mhz: 1417.0,
+    mem_clock_mhz: 5005.0,
+    mem_bus_width_bits: 384,
+    l2_cache_kb: 3072,
+};
+
+/// NVIDIA GeForce GTX 1070 (Pascal) — NOT part of the paper's testbed.
+/// Used by the cross-GPU generalization study (EXPERIMENTS.md §Gen):
+/// train the selector on the paper's two GPUs, test on this unseen one.
+pub const GTX1070: GpuSpec = GpuSpec {
+    name: "GTX1070",
+    id: 3,
+    compute_capability: 6.1,
+    global_mem_gib: 8,
+    sms: 15,
+    cuda_cores: 1920,
+    core_clock_mhz: 1506.0,
+    mem_clock_mhz: 4004.0, // 8 Gbps GDDR5 → 256 GB/s on a 256-bit bus
+    mem_bus_width_bits: 256,
+    l2_cache_kb: 2048,
+};
+
+/// Both GPUs of the paper's testbed, in paper order.
+pub const PAPER_GPUS: [&GpuSpec; 2] = [&GTX1080, &TITANX];
+
+/// Testbed + the held-out GPU for the generalization study.
+pub const ALL_GPUS: [&GpuSpec; 3] = [&GTX1080, &TITANX, &GTX1070];
+
+impl GpuSpec {
+    /// Theoretical single-precision peak in GFLOPS (2 FLOPs/core/cycle FMA).
+    pub fn peak_sp_gflops(&self) -> f64 {
+        2.0 * self.cuda_cores as f64 * self.core_clock_mhz / 1e3
+    }
+
+    /// Peak memory bandwidth in GB/s (DDR: 2 transfers/clock).
+    pub fn peak_bw_gbs(&self) -> f64 {
+        self.mem_clock_mhz * 1e6 * 2.0 * (self.mem_bus_width_bits as f64 / 8.0) / 1e9
+    }
+
+    /// Usable global memory in bytes.
+    pub fn global_mem_bytes(&self) -> u64 {
+        self.global_mem_gib * (1 << 30)
+    }
+
+    /// L2 size in bytes.
+    pub fn l2_bytes(&self) -> u64 {
+        self.l2_cache_kb * 1024
+    }
+
+    /// The paper's 5 GPU-side input features `(gm, sm, cc, mbw, l2c)`.
+    /// Feature generation is O(1) as the paper requires.
+    pub fn features(&self) -> [f64; 5] {
+        [
+            self.global_mem_gib as f64,
+            self.sms as f64,
+            self.core_clock_mhz,
+            self.mem_bus_width_bits as f64,
+            self.l2_cache_kb as f64,
+        ]
+    }
+
+    /// Look up a known GPU by (case-insensitive) name.
+    pub fn by_name(name: &str) -> Option<&'static GpuSpec> {
+        ALL_GPUS
+            .iter()
+            .copied()
+            .find(|g| g.name.eq_ignore_ascii_case(name))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derived_peaks_match_datasheets() {
+        // GTX1080: 2×2560×1.607 GHz ≈ 8228 GFLOPS, 320 GB/s.
+        assert!((GTX1080.peak_sp_gflops() - 8227.8).abs() < 1.0);
+        assert!((GTX1080.peak_bw_gbs() - 320.3).abs() < 1.0);
+        // TitanX: ≈ 10157 GFLOPS, 480 GB/s.
+        assert!((TITANX.peak_sp_gflops() - 10157.0).abs() < 5.0);
+        assert!((TITANX.peak_bw_gbs() - 480.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn features_are_the_papers_five() {
+        let f = GTX1080.features();
+        assert_eq!(f, [8.0, 20.0, 1607.0, 256.0, 2048.0]);
+        assert_eq!(TITANX.features()[4], 3072.0);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(GpuSpec::by_name("gtx1080").unwrap().id, 1);
+        assert_eq!(GpuSpec::by_name("TITANX").unwrap().id, 2);
+        assert!(GpuSpec::by_name("a100").is_none());
+    }
+
+    #[test]
+    fn ids_are_distinct() {
+        assert_ne!(GTX1080.id, TITANX.id);
+        assert_ne!(GTX1070.id, GTX1080.id);
+        assert_ne!(GTX1070.id, TITANX.id);
+    }
+
+    #[test]
+    fn gtx1070_derived_peaks() {
+        // 2×1920×1.506 GHz ≈ 5783 GFLOPS, 256 GB/s.
+        assert!((GTX1070.peak_sp_gflops() - 5783.0).abs() < 5.0);
+        assert!((GTX1070.peak_bw_gbs() - 256.3).abs() < 1.0);
+        assert!(GpuSpec::by_name("gtx1070").is_some());
+    }
+}

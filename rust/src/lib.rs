@@ -1,0 +1,29 @@
+//! # MTNN — supervised-learning-based algorithm selection for DNN GEMM
+//!
+//! A full reproduction of *"Supervised Learning Based Algorithm Selection
+//! for Deep Neural Networks"* (Shi, Xu, Chu — 2017) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L1** (`python/compile/kernels/`) — Pallas kernels for the tiled NN
+//!   matmul, the direct NT matmul, and the out-of-place transpose.
+//! * **L2** (`python/compile/model.py`) — the FCN forward/backward/train
+//!   step in JAX, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate) — the coordination contribution: the MTNN
+//!   selector (GBDT trained on GPU features + matrix sizes), the GEMM
+//!   service, the PJRT runtime that executes the artifacts, the GPU timing
+//!   simulator substrate, and the experiment harness reproducing every
+//!   table and figure of the paper.
+//!
+//! See `DESIGN.md` for the system inventory and experiment index.
+
+pub mod coordinator;
+pub mod dataset;
+pub mod experiments;
+pub mod fcn;
+pub mod gemm;
+pub mod gpusim;
+pub mod ml;
+pub mod runtime;
+pub mod selector;
+pub mod testutil;
+pub mod util;

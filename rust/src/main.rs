@@ -1,0 +1,134 @@
+//! `mtnn` — leader entrypoint / CLI for the MTNN reproduction.
+//!
+//! Subcommands:
+//!   collect     benchmark the simulated GPUs and write the labeled dataset
+//!   train       train the GBDT selector from a dataset CSV and save it
+//!   predict     one Algorithm-2 selection for (gpu, m, n, k)
+//!   calibrate   print the simulator-vs-paper calibration report
+//!   pipeline    run the full paper reproduction (all tables/figures)
+//!   info        show artifact catalog + runtime status
+
+use mtnn::dataset;
+use mtnn::experiments;
+use mtnn::gpusim::{calib, GpuSpec, Simulator, GTX1080, PAPER_GPUS};
+use mtnn::runtime::Runtime;
+use mtnn::selector::Selector;
+use mtnn::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: mtnn <collect|train|predict|calibrate|pipeline|info> [options]\n\
+         \n\
+         mtnn collect   [--out results/samples.csv]\n\
+         mtnn train     [--data results/samples.csv] [--out results/mtnn_selector.json]\n\
+         mtnn predict   --m M --n N --k K [--gpu gtx1080] [--model results/mtnn_selector.json]\n\
+         mtnn calibrate\n\
+         mtnn pipeline\n\
+         mtnn info      [--artifacts <dir>]"
+    );
+    std::process::exit(2);
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(true);
+    match args.subcommand.as_deref() {
+        Some("collect") => {
+            let out = args.get("out", "results/samples.csv");
+            args.finish()?;
+            let records = dataset::collect_paper_dataset();
+            dataset::save_csv(&records, &out)?;
+            for gpu in PAPER_GPUS {
+                let n = records.iter().filter(|r| r.gpu == gpu.name).count();
+                let neg = records
+                    .iter()
+                    .filter(|r| r.gpu == gpu.name && r.label == -1)
+                    .count();
+                println!("{:>8}: {n} samples ({neg} × label -1, {} × label +1)", gpu.name, n - neg);
+            }
+            println!("wrote {} records to {out}", records.len());
+        }
+        Some("train") => {
+            let data = args.get("data", "results/samples.csv");
+            let out = args.get("out", "results/mtnn_selector.json");
+            args.finish()?;
+            let records = if std::path::Path::new(&data).exists() {
+                dataset::load_csv(&data)?
+            } else {
+                println!("{data} not found — collecting fresh");
+                dataset::collect_paper_dataset()
+            };
+            let selector = Selector::train_default(&records);
+            selector.save(&out)?;
+            println!("trained GBDT selector on {} samples → {out}", records.len());
+        }
+        Some("predict") => {
+            let m: u64 = args.get_num("m", 0);
+            let n: u64 = args.get_num("n", 0);
+            let k: u64 = args.get_num("k", 0);
+            let gpu_name = args.get("gpu", "gtx1080");
+            let model = args.opt("model");
+            args.finish()?;
+            if m == 0 || n == 0 || k == 0 {
+                usage();
+            }
+            let gpu: &'static GpuSpec =
+                GpuSpec::by_name(&gpu_name).unwrap_or_else(|| usage());
+            let selector = match model {
+                Some(path) => Selector::load(path)?,
+                None => Selector::train_default(&dataset::collect_paper_dataset()),
+            };
+            let (algo, reason) = selector.select(gpu, m, n, k);
+            let sim = Simulator::new(if gpu.id == GTX1080.id { &GTX1080 } else { gpu });
+            let c = sim.time_case(m, n, k);
+            println!(
+                "{} {m}x{n} k={k} → {} ({reason:?}); simulated P_NT={:.0} P_TNN={:.0} GFLOPS",
+                gpu.name,
+                algo.name(),
+                c.p_nt,
+                c.p_tnn
+            );
+        }
+        Some("calibrate") => {
+            args.finish()?;
+            for gpu in PAPER_GPUS {
+                let sim = Simulator::new(gpu);
+                let (_, targets) = calib::report(&sim);
+                println!("{}", calib::render_report(gpu.name, &targets));
+            }
+        }
+        Some("pipeline") => {
+            args.finish()?;
+            let records = dataset::collect_paper_dataset();
+            let selector = Selector::train_default(&records);
+            let (f1, _) = experiments::fig1::run();
+            experiments::emit("fig1_nn_vs_nt.txt", &f1);
+            let (f23, _) = experiments::fig23::run();
+            experiments::emit("fig2_fig3_table2.txt", &f23);
+            experiments::emit("table4_table6_fig4.txt", &experiments::classifiers::run(42));
+            experiments::emit("fig5_fig6_table8.txt", &experiments::mtnn_eval::run(&selector));
+            experiments::emit(
+                "fig7_fig8_table9_table10.txt",
+                &experiments::fcn_eval::run(&selector),
+            );
+        }
+        Some("info") => {
+            let dir = args.get(
+                "artifacts",
+                Runtime::default_dir().to_string_lossy().as_ref(),
+            );
+            args.finish()?;
+            let rt = Runtime::new(&dir)?;
+            println!("platform: {}", rt.platform());
+            println!("artifacts ({}):", rt.manifest.entries.len());
+            for (name, e) in &rt.manifest.entries {
+                println!(
+                    "  {name:<28} {} inputs, {} outputs",
+                    e.inputs.len(),
+                    e.n_outputs
+                );
+            }
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

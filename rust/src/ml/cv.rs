@@ -1,0 +1,122 @@
+//! k-fold cross-validation — the paper's 5-fold protocol (§V.B, Table IV).
+
+use super::data::Dataset;
+use super::metrics::{accuracy, Accuracy};
+use super::Classifier;
+
+/// Deterministic k-fold index split of `n` rows (shuffle first with
+/// [`Dataset::shuffled`] if the data has order structure).
+pub fn kfold_indices(n: usize, k: usize) -> Vec<(Vec<usize>, Vec<usize>)> {
+    assert!(k >= 2 && k <= n, "need 2 <= k <= n");
+    let mut folds: Vec<Vec<usize>> = vec![Vec::new(); k];
+    for i in 0..n {
+        folds[i % k].push(i);
+    }
+    (0..k)
+        .map(|f| {
+            let test = folds[f].clone();
+            let train: Vec<usize> = (0..k)
+                .filter(|&g| g != f)
+                .flat_map(|g| folds[g].iter().copied())
+                .collect();
+            (train, test)
+        })
+        .collect()
+}
+
+/// Run k-fold CV of a classifier factory over a dataset; returns one
+/// [`Accuracy`] per fold. The dataset is shuffled once with `seed`,
+/// mirroring the paper's random 80/20 protocol.
+pub fn cross_validate<C: Classifier>(
+    data: &Dataset,
+    k: usize,
+    seed: u64,
+    mut make: impl FnMut() -> C,
+) -> Vec<Accuracy> {
+    let d = data.shuffled(seed);
+    kfold_indices(d.len(), k)
+        .into_iter()
+        .map(|(train_idx, test_idx)| {
+            let train = d.subset(&train_idx);
+            let test = d.subset(&test_idx);
+            let mut model = make();
+            model.fit(&train.x, &train.y);
+            let pred = model.predict(&test.x);
+            accuracy(&pred, &test.y)
+        })
+        .collect()
+}
+
+/// Min / max / average over folds for one field, the layout of Table IV.
+pub fn fold_stats(folds: &[Accuracy], field: impl Fn(&Accuracy) -> f64) -> (f64, f64, f64) {
+    let vals: Vec<f64> = folds.iter().map(field).filter(|v| !v.is_nan()).collect();
+    let min = vals.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let avg = vals.iter().sum::<f64>() / vals.len() as f64;
+    (min, max, avg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::gbdt::{Gbdt, GbdtParams};
+
+    #[test]
+    fn kfold_partitions_disjointly() {
+        let folds = kfold_indices(23, 5);
+        assert_eq!(folds.len(), 5);
+        let mut all_test: Vec<usize> = folds.iter().flat_map(|(_, t)| t.clone()).collect();
+        all_test.sort_unstable();
+        assert_eq!(all_test, (0..23).collect::<Vec<_>>());
+        for (train, test) in &folds {
+            assert_eq!(train.len() + test.len(), 23);
+            assert!(test.iter().all(|i| !train.contains(i)));
+        }
+    }
+
+    #[test]
+    fn fold_sizes_balanced() {
+        let folds = kfold_indices(10, 5);
+        for (_, test) in &folds {
+            assert_eq!(test.len(), 2);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_larger_than_n_panics() {
+        kfold_indices(3, 5);
+    }
+
+    #[test]
+    fn cv_on_learnable_data_scores_high() {
+        // Simple threshold dataset — every fold should be ~perfect.
+        let mut d = Dataset::new();
+        for i in 0..100 {
+            d.push(
+                vec![i as f64],
+                if i < 50 { -1.0 } else { 1.0 },
+                0,
+            );
+        }
+        let folds = cross_validate(&d, 5, 42, || Gbdt::new(GbdtParams::default()));
+        assert_eq!(folds.len(), 5);
+        let (min, max, avg) = fold_stats(&folds, |a| a.total);
+        assert!(min > 0.85, "min fold accuracy {min}");
+        assert!(avg > 0.9, "avg {avg}");
+        assert!(max <= 1.0);
+    }
+
+    #[test]
+    fn cv_deterministic_for_seed() {
+        let mut d = Dataset::new();
+        for i in 0..60 {
+            d.push(vec![(i % 7) as f64, i as f64], if i % 2 == 0 { 1.0 } else { -1.0 }, 0);
+        }
+        let a = cross_validate(&d, 3, 9, || Gbdt::new(GbdtParams::default()));
+        let b = cross_validate(&d, 3, 9, || Gbdt::new(GbdtParams::default()));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.total, y.total);
+        }
+    }
+}

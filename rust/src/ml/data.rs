@@ -1,0 +1,176 @@
+//! Dense dataset container with deterministic splitting utilities.
+
+use crate::util::rng::Xoshiro256pp;
+
+/// A dense binary-classification dataset: rows of f64 features, labels
+/// −1.0 / +1.0, and an optional group id per row (used for per-GPU
+/// stratification, mirroring the paper's "80% samples *from each GPU*"
+/// split protocol).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Dataset {
+    pub x: Vec<Vec<f64>>,
+    pub y: Vec<f64>,
+    pub group: Vec<u64>,
+}
+
+impl Dataset {
+    pub fn new() -> Dataset {
+        Dataset::default()
+    }
+
+    pub fn push(&mut self, features: Vec<f64>, label: f64, group: u64) {
+        debug_assert!(label == -1.0 || label == 1.0, "label must be ±1");
+        if let Some(first) = self.x.first() {
+            assert_eq!(first.len(), features.len(), "feature arity mismatch");
+        }
+        self.x.push(features);
+        self.y.push(label);
+        self.group.push(group);
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn n_features(&self) -> usize {
+        self.x.first().map_or(0, Vec::len)
+    }
+
+    /// Count of labels equal to `label`.
+    pub fn count_label(&self, label: f64) -> usize {
+        self.y.iter().filter(|&&v| v == label).count()
+    }
+
+    /// Select a subset by row indices.
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        Dataset {
+            x: idx.iter().map(|&i| self.x[i].clone()).collect(),
+            y: idx.iter().map(|&i| self.y[i]).collect(),
+            group: idx.iter().map(|&i| self.group[i]).collect(),
+        }
+    }
+
+    /// Concatenate two datasets (arity-checked).
+    pub fn concat(&self, other: &Dataset) -> Dataset {
+        if !self.is_empty() && !other.is_empty() {
+            assert_eq!(self.n_features(), other.n_features());
+        }
+        let mut out = self.clone();
+        out.x.extend(other.x.iter().cloned());
+        out.y.extend(other.y.iter().cloned());
+        out.group.extend(other.group.iter().cloned());
+        out
+    }
+
+    /// The paper's split: shuffle, take `train_frac` of the rows *within
+    /// each group* for training, the remainder for testing.
+    pub fn split_by_group(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut train_idx = Vec::new();
+        let mut test_idx = Vec::new();
+        let mut groups: Vec<u64> = self.group.clone();
+        groups.sort_unstable();
+        groups.dedup();
+        for g in groups {
+            let mut idx: Vec<usize> = (0..self.len()).filter(|&i| self.group[i] == g).collect();
+            rng.shuffle(&mut idx);
+            let cut = (idx.len() as f64 * train_frac).round() as usize;
+            train_idx.extend_from_slice(&idx[..cut]);
+            test_idx.extend_from_slice(&idx[cut..]);
+        }
+        (self.subset(&train_idx), self.subset(&test_idx))
+    }
+
+    /// Plain shuffled split ignoring groups.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        let mut rng = Xoshiro256pp::new(seed);
+        let mut idx: Vec<usize> = (0..self.len()).collect();
+        rng.shuffle(&mut idx);
+        let cut = (idx.len() as f64 * train_frac).round() as usize;
+        (self.subset(&idx[..cut]), self.subset(&idx[cut..]))
+    }
+
+    /// A shuffled copy (used before k-fold splitting).
+    pub fn shuffled(&self, seed: u64) -> Dataset {
+        let mut rng = Xoshiro256pp::new(seed);
+        let idx = rng.permutation(self.len());
+        self.subset(&idx)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize) -> Dataset {
+        let mut d = Dataset::new();
+        for i in 0..n {
+            let g = (i % 2) as u64;
+            d.push(vec![i as f64, (i * 2) as f64], if i % 3 == 0 { 1.0 } else { -1.0 }, g);
+        }
+        d
+    }
+
+    #[test]
+    fn push_and_count() {
+        let d = toy(9);
+        assert_eq!(d.len(), 9);
+        assert_eq!(d.n_features(), 2);
+        assert_eq!(d.count_label(1.0), 3);
+        assert_eq!(d.count_label(-1.0), 6);
+    }
+
+    #[test]
+    fn split_partitions_everything() {
+        let d = toy(100);
+        let (tr, te) = d.split(0.8, 7);
+        assert_eq!(tr.len(), 80);
+        assert_eq!(te.len(), 20);
+        // Each original row's feature vector appears exactly once overall.
+        let mut seen: Vec<f64> = tr.x.iter().chain(te.x.iter()).map(|r| r[0]).collect();
+        seen.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(seen, (0..100).map(|i| i as f64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn group_split_is_per_group() {
+        let d = toy(100); // 50 rows per group
+        let (tr, te) = d.split_by_group(0.8, 3);
+        for g in [0u64, 1] {
+            let tr_g = tr.group.iter().filter(|&&x| x == g).count();
+            let te_g = te.group.iter().filter(|&&x| x == g).count();
+            assert_eq!(tr_g, 40, "group {g} train");
+            assert_eq!(te_g, 10, "group {g} test");
+        }
+    }
+
+    #[test]
+    fn split_deterministic_per_seed() {
+        let d = toy(50);
+        let (a, _) = d.split(0.5, 11);
+        let (b, _) = d.split(0.5, 11);
+        assert_eq!(a, b);
+        let (c, _) = d.split(0.5, 12);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn concat_appends() {
+        let d = toy(4);
+        let e = toy(6);
+        let c = d.concat(&e);
+        assert_eq!(c.len(), 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "feature arity")]
+    fn arity_checked() {
+        let mut d = toy(2);
+        d.push(vec![1.0], 1.0, 0);
+    }
+}

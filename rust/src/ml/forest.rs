@@ -1,0 +1,155 @@
+//! Random forest: bagged CART trees with per-split feature subsampling —
+//! an extended-comparison baseline (the paper cites Caruana's 10-algorithm
+//! study when motivating boosted trees; bagging is the natural contrast).
+
+use super::tree::{DecisionTree, TreeParams};
+use super::Classifier;
+use crate::util::rng::Xoshiro256pp;
+
+/// Random-forest hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample fraction.
+    pub sample_frac: f64,
+    pub seed: u64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams {
+            n_trees: 32,
+            tree: TreeParams {
+                max_depth: 12,
+                ..TreeParams::default()
+            },
+            sample_frac: 1.0,
+            seed: 2017,
+        }
+    }
+}
+
+/// A bagged ensemble of gini CART trees voting by majority.
+#[derive(Debug, Clone, Default)]
+pub struct RandomForest {
+    pub params: ForestParams,
+    pub trees: Vec<DecisionTree>,
+}
+
+impl RandomForest {
+    pub fn new(params: ForestParams) -> RandomForest {
+        RandomForest {
+            params,
+            trees: Vec::new(),
+        }
+    }
+
+    /// Fraction of trees voting +1.
+    pub fn vote_fraction(&self, row: &[f64]) -> f64 {
+        if self.trees.is_empty() {
+            return 0.5;
+        }
+        let pos = self
+            .trees
+            .iter()
+            .filter(|t| t.predict_value(row) > 0.0)
+            .count();
+        pos as f64 / self.trees.len() as f64
+    }
+}
+
+impl Classifier for RandomForest {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let n = x.len();
+        let take = ((n as f64) * self.params.sample_frac).round().max(1.0) as usize;
+        let mut rng = Xoshiro256pp::new(self.params.seed);
+        self.trees.clear();
+        for _ in 0..self.params.n_trees {
+            // Bootstrap resample (with replacement).
+            let mut bx = Vec::with_capacity(take);
+            let mut by = Vec::with_capacity(take);
+            for _ in 0..take {
+                let i = rng.next_range(0, n);
+                bx.push(x[i].clone());
+                by.push(y[i]);
+            }
+            self.trees
+                .push(DecisionTree::fit_gini(&bx, &by, &self.params.tree));
+        }
+    }
+
+    fn predict_one(&self, row: &[f64]) -> f64 {
+        if self.vote_fraction(row) >= 0.5 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> String {
+        "RF".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blob_data(n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Xoshiro256pp::new(5);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n {
+            let label = if i % 2 == 0 { 1.0 } else { -1.0 };
+            let cx = if label > 0.0 { 1.0 } else { -1.0 };
+            x.push(vec![cx + rng.next_gaussian() * 0.4, rng.next_gaussian()]);
+            y.push(label);
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_blobs() {
+        let (x, y) = blob_data(200);
+        let mut f = RandomForest::new(ForestParams::default());
+        f.fit(&x, &y);
+        let acc = f
+            .predict(&x)
+            .iter()
+            .zip(&y)
+            .filter(|(a, b)| a == b)
+            .count() as f64
+            / y.len() as f64;
+        assert!(acc > 0.95, "forest accuracy {acc}");
+    }
+
+    #[test]
+    fn vote_fraction_bounded() {
+        let (x, y) = blob_data(50);
+        let mut f = RandomForest::new(ForestParams {
+            n_trees: 7,
+            ..Default::default()
+        });
+        f.fit(&x, &y);
+        assert_eq!(f.trees.len(), 7);
+        for row in &x {
+            let v = f.vote_fraction(row);
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = blob_data(80);
+        let mut a = RandomForest::new(ForestParams::default());
+        let mut b = RandomForest::new(ForestParams::default());
+        a.fit(&x, &y);
+        b.fit(&x, &y);
+        for row in x.iter().take(20) {
+            assert_eq!(a.predict_one(row), b.predict_one(row));
+        }
+    }
+}

@@ -1,0 +1,321 @@
+//! Gradient-boosted decision trees with binomial log-loss — the paper's
+//! chosen learner (§V.B): CART base learners in an XGBoost-style boosting
+//! loop, max depth 8, 8 estimators, step size (eta) 1, minimum loss
+//! reduction (gamma) 0.
+//!
+//! Labels are −1/+1 at the API; internally y ∈ {0, 1} with
+//! `p = sigmoid(F)`, gradient `p − y`, hessian `p(1 − p)`, leaf weights by
+//! one Newton step `−G/(H + λ)`.
+
+use super::tree::{DecisionTree, TreeParams};
+use super::Classifier;
+use crate::util::json::Json;
+
+/// GBDT hyper-parameters (defaults = the paper's configuration).
+#[derive(Debug, Clone)]
+pub struct GbdtParams {
+    pub n_estimators: usize,
+    /// Step size shrinkage — the paper sets eta = 1 ("more progressive").
+    pub eta: f64,
+    pub tree: TreeParams,
+}
+
+impl Default for GbdtParams {
+    fn default() -> Self {
+        GbdtParams {
+            n_estimators: 8,
+            eta: 1.0,
+            tree: TreeParams {
+                max_depth: 8,
+                min_samples_leaf: 1,
+                min_split_gain: 0.0, // gamma = 0
+                lambda: 1.0,
+                min_child_weight: 1.0,
+            },
+        }
+    }
+}
+
+/// A fitted gradient-boosted tree ensemble.
+#[derive(Debug, Clone, Default)]
+pub struct Gbdt {
+    pub params: GbdtParams,
+    /// Initial log-odds F0.
+    pub base_score: f64,
+    pub trees: Vec<DecisionTree>,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl Gbdt {
+    pub fn new(params: GbdtParams) -> Gbdt {
+        Gbdt {
+            params,
+            base_score: 0.0,
+            trees: Vec::new(),
+        }
+    }
+
+    /// Raw additive score F(x) (log-odds of the +1 class).
+    pub fn decision_function(&self, row: &[f64]) -> f64 {
+        let mut f = self.base_score;
+        for t in &self.trees {
+            f += self.params.eta * t.predict_value(row);
+        }
+        f
+    }
+
+    /// P(label = +1 | x).
+    pub fn predict_proba(&self, row: &[f64]) -> f64 {
+        sigmoid(self.decision_function(row))
+    }
+
+    /// Mean binomial log-loss on a labeled set (training diagnostic).
+    pub fn log_loss(&self, x: &[Vec<f64>], y: &[f64]) -> f64 {
+        let mut s = 0.0;
+        for (row, &label) in x.iter().zip(y) {
+            let p = self.predict_proba(row).clamp(1e-12, 1.0 - 1e-12);
+            let t = if label > 0.0 { p } else { 1.0 - p };
+            s -= t.ln();
+        }
+        s / y.len() as f64
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("kind", "gbdt")
+            .set("base_score", self.base_score)
+            .set("eta", self.params.eta)
+            .set("n_estimators", self.params.n_estimators)
+            .set("max_depth", self.params.tree.max_depth)
+            .set(
+                "trees",
+                Json::Arr(self.trees.iter().map(|t| t.to_json()).collect()),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Gbdt> {
+        if j.get("kind").as_str() != Some("gbdt") {
+            anyhow::bail!("not a gbdt model");
+        }
+        let mut params = GbdtParams::default();
+        params.eta = j
+            .get("eta")
+            .as_f64()
+            .ok_or_else(|| anyhow::anyhow!("gbdt json: missing eta"))?;
+        if let Some(d) = j.get("max_depth").as_usize() {
+            params.tree.max_depth = d;
+        }
+        if let Some(n) = j.get("n_estimators").as_usize() {
+            params.n_estimators = n;
+        }
+        let trees_j = j
+            .get("trees")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("gbdt json: missing trees"))?;
+        let trees = trees_j
+            .iter()
+            .map(DecisionTree::from_json)
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Gbdt {
+            params,
+            base_score: j
+                .get("base_score")
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("gbdt json: missing base_score"))?,
+            trees,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Gbdt> {
+        let text = std::fs::read_to_string(&path)?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+impl Classifier for Gbdt {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "empty training set");
+        let n = x.len();
+        let pos = y.iter().filter(|&&v| v > 0.0).count() as f64;
+        let neg = n as f64 - pos;
+        // F0 = log-odds of the positive class (clamped for degenerate sets).
+        self.base_score = (pos.max(0.5) / neg.max(0.5)).ln();
+        self.trees.clear();
+
+        let mut f: Vec<f64> = vec![self.base_score; n];
+        let mut grad = vec![0.0; n];
+        let mut hess = vec![0.0; n];
+        for _ in 0..self.params.n_estimators {
+            for i in 0..n {
+                let p = sigmoid(f[i]);
+                let t = if y[i] > 0.0 { 1.0 } else { 0.0 };
+                grad[i] = p - t;
+                hess[i] = (p * (1.0 - p)).max(1e-16);
+            }
+            let tree = DecisionTree::fit_grad_hess(x, &grad, &hess, &self.params.tree);
+            for i in 0..n {
+                f[i] += self.params.eta * tree.predict_value(&x[i]);
+            }
+            self.trees.push(tree);
+        }
+    }
+
+    fn predict_one(&self, row: &[f64]) -> f64 {
+        if self.decision_function(row) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> String {
+        "GBDT".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Xoshiro256pp;
+
+    fn xor_data(n_side: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..n_side {
+            for j in 0..n_side {
+                let (a, b) = (i as f64 / n_side as f64, j as f64 / n_side as f64);
+                x.push(vec![a, b]);
+                y.push(if (a < 0.5) ^ (b < 0.5) { 1.0 } else { -1.0 });
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn learns_xor_perfectly() {
+        let (x, y) = xor_data(12);
+        let mut m = Gbdt::new(GbdtParams::default());
+        m.fit(&x, &y);
+        let acc = m
+            .predict(&x)
+            .iter()
+            .zip(&y)
+            .filter(|(p, t)| p == t)
+            .count() as f64
+            / y.len() as f64;
+        assert_eq!(acc, 1.0);
+    }
+
+    #[test]
+    fn boosting_reduces_log_loss_monotonically_on_train() {
+        let (x, y) = xor_data(10);
+        let mut prev = f64::INFINITY;
+        for rounds in 1..=6 {
+            let mut p = GbdtParams::default();
+            p.n_estimators = rounds;
+            p.tree.max_depth = 2;
+            let mut m = Gbdt::new(p);
+            m.fit(&x, &y);
+            let ll = m.log_loss(&x, &y);
+            assert!(
+                ll <= prev + 1e-9,
+                "round {rounds}: loss {ll} should not exceed {prev}"
+            );
+            prev = ll;
+        }
+    }
+
+    #[test]
+    fn probabilities_are_calibrated_on_separable_data() {
+        let x: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..40).map(|i| if i < 20 { -1.0 } else { 1.0 }).collect();
+        let mut m = Gbdt::new(GbdtParams::default());
+        m.fit(&x, &y);
+        assert!(m.predict_proba(&[0.0]) < 0.05);
+        assert!(m.predict_proba(&[39.0]) > 0.95);
+    }
+
+    #[test]
+    fn imbalanced_base_score_sign() {
+        // 90% negative: with zero trees the base score must lean negative.
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..100).map(|i| if i < 10 { 1.0 } else { -1.0 }).collect();
+        let mut p = GbdtParams::default();
+        p.n_estimators = 0;
+        let mut m = Gbdt::new(p);
+        m.fit(&x, &y);
+        assert!(m.base_score < 0.0);
+        assert_eq!(m.predict_one(&[50.0]), -1.0);
+    }
+
+    #[test]
+    fn noisy_labels_still_mostly_learned() {
+        let (x, mut y) = xor_data(14);
+        let mut rng = Xoshiro256pp::new(5);
+        // Flip 5% of labels.
+        let flips = y.len() / 20;
+        for _ in 0..flips {
+            let i = rng.next_range(0, y.len());
+            y[i] = -y[i];
+        }
+        let mut m = Gbdt::new(GbdtParams::default());
+        m.fit(&x, &y);
+        // Against the CLEAN labels we should still be well above 90%.
+        let (_, clean) = xor_data(14);
+        let acc = m
+            .predict(&x)
+            .iter()
+            .zip(&clean)
+            .filter(|(p, t)| p == t)
+            .count() as f64
+            / clean.len() as f64;
+        assert!(acc > 0.9, "accuracy {acc}");
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_predictions() {
+        let (x, y) = xor_data(8);
+        let mut m = Gbdt::new(GbdtParams::default());
+        m.fit(&x, &y);
+        let back = Gbdt::from_json(&m.to_json()).unwrap();
+        for row in &x {
+            assert_eq!(m.predict_one(row), back.predict_one(row));
+            assert!((m.decision_function(row) - back.decision_function(row)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn save_load_file() {
+        let (x, y) = xor_data(6);
+        let mut m = Gbdt::new(GbdtParams::default());
+        m.fit(&x, &y);
+        let path = std::env::temp_dir().join("mtnn_gbdt_test.json");
+        m.save(&path).unwrap();
+        let back = Gbdt::load(&path).unwrap();
+        assert_eq!(back.trees.len(), m.trees.len());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn respects_paper_hyperparameters() {
+        let p = GbdtParams::default();
+        assert_eq!(p.n_estimators, 8);
+        assert_eq!(p.eta, 1.0);
+        assert_eq!(p.tree.max_depth, 8);
+        assert_eq!(p.tree.min_split_gain, 0.0);
+    }
+}

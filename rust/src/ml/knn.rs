@@ -1,0 +1,91 @@
+//! k-nearest-neighbours baseline (extended Table VI comparison). Features
+//! should be min-max scaled by the caller, as for the SVMs.
+
+use super::Classifier;
+
+/// kNN over Euclidean distance, majority vote.
+#[derive(Debug, Clone)]
+pub struct Knn {
+    pub k: usize,
+    train_x: Vec<Vec<f64>>,
+    train_y: Vec<f64>,
+}
+
+impl Knn {
+    pub fn new(k: usize) -> Knn {
+        assert!(k >= 1);
+        Knn {
+            k,
+            train_x: Vec::new(),
+            train_y: Vec::new(),
+        }
+    }
+}
+
+fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+impl Classifier for Knn {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        self.train_x = x.to_vec();
+        self.train_y = y.to_vec();
+    }
+
+    fn predict_one(&self, row: &[f64]) -> f64 {
+        assert!(!self.train_x.is_empty(), "kNN not fitted");
+        let k = self.k.min(self.train_x.len());
+        // Partial selection of the k smallest distances.
+        let mut d: Vec<(f64, f64)> = self
+            .train_x
+            .iter()
+            .zip(&self.train_y)
+            .map(|(tx, &ty)| (dist2(row, tx), ty))
+            .collect();
+        d.select_nth_unstable_by(k - 1, |a, b| a.0.total_cmp(&b.0));
+        let vote: f64 = d[..k].iter().map(|&(_, y)| y).sum();
+        if vote >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("kNN(k={})", self.k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nearest_neighbour_memorizes() {
+        let x = vec![vec![0.0, 0.0], vec![1.0, 1.0], vec![0.1, 0.0]];
+        let y = vec![-1.0, 1.0, -1.0];
+        let mut m = Knn::new(1);
+        m.fit(&x, &y);
+        assert_eq!(m.predict_one(&[0.05, 0.0]), -1.0);
+        assert_eq!(m.predict_one(&[0.9, 1.0]), 1.0);
+    }
+
+    #[test]
+    fn k_larger_than_train_clamps() {
+        let mut m = Knn::new(99);
+        m.fit(&[vec![0.0], vec![1.0]], &[1.0, 1.0]);
+        assert_eq!(m.predict_one(&[0.5]), 1.0);
+    }
+
+    #[test]
+    fn majority_vote() {
+        // 2 of 3 neighbours negative → negative.
+        let x = vec![vec![0.0], vec![0.2], vec![0.4], vec![10.0]];
+        let y = vec![-1.0, -1.0, 1.0, 1.0];
+        let mut m = Knn::new(3);
+        m.fit(&x, &y);
+        assert_eq!(m.predict_one(&[0.1]), -1.0);
+    }
+}

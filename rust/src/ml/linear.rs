@@ -1,0 +1,155 @@
+//! L2-regularized logistic regression via gradient descent — the linear
+//! baseline of the extended comparison (fails on this task's non-linear
+//! decision surface, which is exactly the point).
+
+use super::Classifier;
+
+/// Logistic-regression hyper-parameters.
+#[derive(Debug, Clone)]
+pub struct LogRegParams {
+    pub lr: f64,
+    pub l2: f64,
+    pub epochs: usize,
+}
+
+impl Default for LogRegParams {
+    fn default() -> Self {
+        LogRegParams {
+            lr: 0.1,
+            l2: 1e-4,
+            epochs: 300,
+        }
+    }
+}
+
+/// Fitted logistic regression (weights + bias). Scale features first.
+#[derive(Debug, Clone, Default)]
+pub struct LogReg {
+    pub params: LogRegParams,
+    pub w: Vec<f64>,
+    pub b: f64,
+}
+
+fn sigmoid(z: f64) -> f64 {
+    1.0 / (1.0 + (-z).exp())
+}
+
+impl LogReg {
+    pub fn new(params: LogRegParams) -> LogReg {
+        LogReg {
+            params,
+            w: Vec::new(),
+            b: 0.0,
+        }
+    }
+
+    pub fn decision_function(&self, row: &[f64]) -> f64 {
+        self.b + self.w.iter().zip(row).map(|(w, x)| w * x).sum::<f64>()
+    }
+}
+
+impl Classifier for LogReg {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let (n, d) = (x.len(), x[0].len());
+        self.w = vec![0.0; d];
+        self.b = 0.0;
+        let p = self.params.clone();
+        for _ in 0..p.epochs {
+            // Full-batch gradient (n ≈ 1.5k → cheap).
+            let mut gw = vec![0.0; d];
+            let mut gb = 0.0;
+            for (row, &label) in x.iter().zip(y) {
+                let t = if label > 0.0 { 1.0 } else { 0.0 };
+                let e = sigmoid(self.decision_function(row)) - t;
+                for (g, &v) in gw.iter_mut().zip(row) {
+                    *g += e * v;
+                }
+                gb += e;
+            }
+            for (w, g) in self.w.iter_mut().zip(&gw) {
+                *w -= p.lr * (g / n as f64 + p.l2 * *w);
+            }
+            self.b -= p.lr * gb / n as f64;
+        }
+    }
+
+    fn predict_one(&self, row: &[f64]) -> f64 {
+        if self.decision_function(row) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> String {
+        "LogReg".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn separates_linear_data() {
+        let x: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64 / 100.0]).collect();
+        let y: Vec<f64> = (0..100).map(|i| if i < 50 { -1.0 } else { 1.0 }).collect();
+        let mut m = LogReg::new(LogRegParams::default());
+        m.fit(&x, &y);
+        assert_eq!(m.predict_one(&[0.1]), -1.0);
+        assert_eq!(m.predict_one(&[0.9]), 1.0);
+    }
+
+    #[test]
+    fn fails_on_xor_as_expected() {
+        // A linear model cannot express XOR — documents why the paper
+        // needs trees. Accuracy should hover near chance.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..20 {
+            for j in 0..20 {
+                let (a, b) = (i as f64 / 20.0, j as f64 / 20.0);
+                x.push(vec![a, b]);
+                y.push(if (a < 0.5) ^ (b < 0.5) { 1.0 } else { -1.0 });
+            }
+        }
+        let mut m = LogReg::new(LogRegParams::default());
+        m.fit(&x, &y);
+        let acc = m
+            .predict(&x)
+            .iter()
+            .zip(&y)
+            .filter(|(p, t)| p == t)
+            .count() as f64
+            / y.len() as f64;
+        assert!(acc < 0.65, "linear model should not solve XOR: {acc}");
+    }
+
+    #[test]
+    fn regularization_shrinks_weights() {
+        // Scaled features (like the real pipeline); heavy L2 must yield a
+        // smaller weight than no L2 on the same separable data.
+        let x: Vec<Vec<f64>> = (0..40).map(|i| vec![i as f64 / 40.0]).collect();
+        let y: Vec<f64> = (0..40).map(|i| if i < 20 { -1.0 } else { 1.0 }).collect();
+        let mut regularized = LogReg::new(LogRegParams {
+            lr: 0.5,
+            l2: 0.5,
+            epochs: 2000,
+        });
+        let mut free = LogReg::new(LogRegParams {
+            lr: 0.5,
+            l2: 0.0,
+            epochs: 2000,
+        });
+        regularized.fit(&x, &y);
+        free.fit(&x, &y);
+        assert!(
+            regularized.w[0].abs() < free.w[0].abs(),
+            "regularized {} vs free {}",
+            regularized.w[0],
+            free.w[0]
+        );
+    }
+}

@@ -1,0 +1,111 @@
+//! Classification metrics in the paper's vocabulary: total accuracy plus
+//! per-class ("negative" = −1, "positive" = +1) accuracies, as reported in
+//! Table IV for the imbalanced test sets.
+
+/// Accuracy breakdown of a prediction run.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Accuracy {
+    /// Overall fraction correct.
+    pub total: f64,
+    /// Recall of the −1 class ("Negative" row of Table IV).
+    pub negative: f64,
+    /// Recall of the +1 class ("Positive" row of Table IV).
+    pub positive: f64,
+    pub n: usize,
+    pub n_neg: usize,
+    pub n_pos: usize,
+}
+
+/// Compute accuracy metrics from predictions vs truth (labels ±1).
+pub fn accuracy(pred: &[f64], truth: &[f64]) -> Accuracy {
+    assert_eq!(pred.len(), truth.len());
+    assert!(!pred.is_empty(), "empty evaluation set");
+    let mut correct = 0usize;
+    let (mut n_neg, mut neg_ok, mut n_pos, mut pos_ok) = (0usize, 0usize, 0usize, 0usize);
+    for (&p, &t) in pred.iter().zip(truth) {
+        debug_assert!(t == 1.0 || t == -1.0);
+        if p == t {
+            correct += 1;
+        }
+        if t < 0.0 {
+            n_neg += 1;
+            if p == t {
+                neg_ok += 1;
+            }
+        } else {
+            n_pos += 1;
+            if p == t {
+                pos_ok += 1;
+            }
+        }
+    }
+    let frac = |a: usize, b: usize| {
+        if b == 0 {
+            f64::NAN
+        } else {
+            a as f64 / b as f64
+        }
+    };
+    Accuracy {
+        total: frac(correct, pred.len()),
+        negative: frac(neg_ok, n_neg),
+        positive: frac(pos_ok, n_pos),
+        n: pred.len(),
+        n_neg,
+        n_pos,
+    }
+}
+
+/// 2×2 confusion counts (rows: truth −1/+1; cols: predicted −1/+1).
+pub fn confusion(pred: &[f64], truth: &[f64]) -> [[usize; 2]; 2] {
+    let mut m = [[0usize; 2]; 2];
+    for (&p, &t) in pred.iter().zip(truth) {
+        let r = usize::from(t > 0.0);
+        let c = usize::from(p > 0.0);
+        m[r][c] += 1;
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_predictions() {
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let a = accuracy(&y, &y);
+        assert_eq!(a.total, 1.0);
+        assert_eq!(a.negative, 1.0);
+        assert_eq!(a.positive, 1.0);
+        assert_eq!(a.n_neg, 2);
+        assert_eq!(a.n_pos, 2);
+    }
+
+    #[test]
+    fn per_class_breakdown() {
+        let truth = vec![-1.0, -1.0, -1.0, 1.0];
+        let pred = vec![-1.0, 1.0, -1.0, 1.0];
+        let a = accuracy(&pred, &truth);
+        assert!((a.total - 0.75).abs() < 1e-12);
+        assert!((a.negative - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(a.positive, 1.0);
+    }
+
+    #[test]
+    fn single_class_gives_nan_for_absent() {
+        let truth = vec![-1.0, -1.0];
+        let pred = vec![-1.0, 1.0];
+        let a = accuracy(&pred, &truth);
+        assert!(a.positive.is_nan());
+        assert_eq!(a.n_pos, 0);
+    }
+
+    #[test]
+    fn confusion_counts() {
+        let truth = vec![-1.0, -1.0, 1.0, 1.0];
+        let pred = vec![-1.0, 1.0, -1.0, 1.0];
+        let m = confusion(&pred, &truth);
+        assert_eq!(m, [[1, 1], [1, 1]]);
+    }
+}

@@ -1,0 +1,43 @@
+//! From-scratch supervised learning library — the substrate replacing
+//! XGBoost / libSVM / sklearn in the paper's pipeline (DESIGN.md §2).
+//!
+//! Implements exactly the learners the paper evaluates in Table VI:
+//!
+//! * [`tree::DecisionTree`] — CART (gini for classification, variance for
+//!   the regression trees inside boosting);
+//! * [`gbdt::Gbdt`] — gradient-boosted decision trees with binomial
+//!   log-loss, the paper's chosen model (depth 8, 8 estimators, eta 1,
+//!   gamma 0);
+//! * [`svm::Svm`] — C-SVM trained by SMO with RBF and polynomial kernels
+//!   (the paper's libSVM baselines, C = 1000, gamma = 0.01);
+//!
+//! plus the shared machinery: [`data::Dataset`], [`scaler::MinMaxScaler`],
+//! [`cv`] (k-fold cross-validation) and [`metrics`].
+
+pub mod cv;
+pub mod data;
+pub mod forest;
+pub mod gbdt;
+pub mod knn;
+pub mod linear;
+pub mod metrics;
+pub mod scaler;
+pub mod svm;
+pub mod tree;
+
+/// A binary classifier over dense f64 features with labels −1 / +1.
+pub trait Classifier {
+    /// Fit on rows `x` with labels `y` (each −1.0 or +1.0).
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]);
+
+    /// Predict the label (−1.0 or +1.0) for one row.
+    fn predict_one(&self, row: &[f64]) -> f64;
+
+    /// Predict labels for many rows.
+    fn predict(&self, x: &[Vec<f64>]) -> Vec<f64> {
+        x.iter().map(|r| self.predict_one(r)).collect()
+    }
+
+    /// Short display name ("GBDT", "SVM-RBF", ...).
+    fn name(&self) -> String;
+}

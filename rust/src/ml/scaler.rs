@@ -1,0 +1,85 @@
+//! Min-max feature scaling to (0, 1) — required by the paper for the SVM
+//! baselines ("each dimension of the input feature should be normalized to
+//! the range of (0, 1) when training SVMs"); explicitly NOT applied for
+//! the tree learners.
+
+/// Per-feature min/max learned from a training set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MinMaxScaler {
+    pub mins: Vec<f64>,
+    pub maxs: Vec<f64>,
+}
+
+impl MinMaxScaler {
+    /// Learn ranges from rows. Constant features map to 0.5.
+    pub fn fit(x: &[Vec<f64>]) -> MinMaxScaler {
+        assert!(!x.is_empty(), "cannot fit scaler on empty data");
+        let d = x[0].len();
+        let mut mins = vec![f64::INFINITY; d];
+        let mut maxs = vec![f64::NEG_INFINITY; d];
+        for row in x {
+            assert_eq!(row.len(), d);
+            for (j, &v) in row.iter().enumerate() {
+                mins[j] = mins[j].min(v);
+                maxs[j] = maxs[j].max(v);
+            }
+        }
+        MinMaxScaler { mins, maxs }
+    }
+
+    /// Scale one row into [0, 1] (values outside the fitted range clamp
+    /// so test-time extrapolation cannot explode the kernel).
+    pub fn transform_row(&self, row: &[f64]) -> Vec<f64> {
+        row.iter()
+            .enumerate()
+            .map(|(j, &v)| {
+                let range = self.maxs[j] - self.mins[j];
+                if range <= 0.0 {
+                    0.5
+                } else {
+                    ((v - self.mins[j]) / range).clamp(0.0, 1.0)
+                }
+            })
+            .collect()
+    }
+
+    pub fn transform(&self, x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        x.iter().map(|r| self.transform_row(r)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_to_unit_interval() {
+        let x = vec![vec![0.0, 100.0], vec![10.0, 200.0], vec![5.0, 150.0]];
+        let s = MinMaxScaler::fit(&x);
+        let t = s.transform(&x);
+        assert_eq!(t[0], vec![0.0, 0.0]);
+        assert_eq!(t[1], vec![1.0, 1.0]);
+        assert_eq!(t[2], vec![0.5, 0.5]);
+    }
+
+    #[test]
+    fn constant_feature_maps_to_half() {
+        let x = vec![vec![7.0], vec![7.0]];
+        let s = MinMaxScaler::fit(&x);
+        assert_eq!(s.transform_row(&[7.0]), vec![0.5]);
+    }
+
+    #[test]
+    fn out_of_range_clamps() {
+        let x = vec![vec![0.0], vec![10.0]];
+        let s = MinMaxScaler::fit(&x);
+        assert_eq!(s.transform_row(&[-5.0]), vec![0.0]);
+        assert_eq!(s.transform_row(&[50.0]), vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_fit_panics() {
+        MinMaxScaler::fit(&[]);
+    }
+}

@@ -1,0 +1,565 @@
+//! CART decision trees: exact greedy splits, gini impurity for standalone
+//! classification, and XGBoost-style gradient/hessian regression for the
+//! boosting stages of [`crate::ml::gbdt`].
+
+use crate::util::json::Json;
+
+/// Hyper-parameters shared by classification and regression trees.
+#[derive(Debug, Clone)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Minimum gain to accept a split — the paper's `gamma` (set to 0).
+    pub min_split_gain: f64,
+    /// L2 regularization on leaf weights (XGBoost `lambda`), regression only.
+    pub lambda: f64,
+    /// Minimum hessian mass per child (XGBoost `min_child_weight`),
+    /// regression only — the regularizer that keeps eta=1 boosting from
+    /// memorizing label noise.
+    pub min_child_weight: f64,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 8,
+            min_samples_leaf: 1,
+            min_split_gain: 0.0,
+            lambda: 1.0,
+            min_child_weight: 1.0,
+        }
+    }
+}
+
+/// A tree node in the flat arena. `left == NO_CHILD` marks a leaf.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Node {
+    pub feature: u32,
+    pub threshold: f64,
+    pub left: u32,
+    pub right: u32,
+    pub value: f64,
+}
+
+const NO_CHILD: u32 = u32::MAX;
+
+/// Row-major → column-major copy (one allocation per fit; the split
+/// search is columnar).
+fn to_columns(x: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let d = x[0].len();
+    let mut cols = vec![Vec::with_capacity(x.len()); d];
+    for row in x {
+        debug_assert_eq!(row.len(), d);
+        for (c, &v) in cols.iter_mut().zip(row) {
+            c.push(v);
+        }
+    }
+    cols
+}
+
+impl Node {
+    pub fn is_leaf(&self) -> bool {
+        self.left == NO_CHILD
+    }
+}
+
+/// A single CART tree.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct DecisionTree {
+    pub nodes: Vec<Node>,
+    pub n_features: usize,
+}
+
+impl DecisionTree {
+    /// Depth of the tree (leaf-only tree has depth 0).
+    pub fn depth(&self) -> usize {
+        fn walk(nodes: &[Node], i: u32) -> usize {
+            let n = &nodes[i as usize];
+            if n.is_leaf() {
+                0
+            } else {
+                1 + walk(nodes, n.left).max(walk(nodes, n.right))
+            }
+        }
+        if self.nodes.is_empty() {
+            0
+        } else {
+            walk(&self.nodes, 0)
+        }
+    }
+
+    pub fn n_leaves(&self) -> usize {
+        self.nodes.iter().filter(|n| n.is_leaf()).count()
+    }
+
+    /// Raw value at the leaf reached by `row` (class score or regression
+    /// weight depending on how the tree was fitted).
+    #[inline]
+    pub fn predict_value(&self, row: &[f64]) -> f64 {
+        debug_assert_eq!(row.len(), self.n_features);
+        let mut i = 0u32;
+        loop {
+            let n = &self.nodes[i as usize];
+            if n.is_leaf() {
+                return n.value;
+            }
+            i = if row[n.feature as usize] <= n.threshold {
+                n.left
+            } else {
+                n.right
+            };
+        }
+    }
+
+    // ---- fitting -----------------------------------------------------------
+
+    /// Fit a gini-impurity classification tree on labels ±1.
+    /// Leaf values are the signed class majority (±1).
+    pub fn fit_gini(x: &[Vec<f64>], y: &[f64], params: &TreeParams) -> DecisionTree {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty(), "empty training set");
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            n_features: x[0].len(),
+        };
+        // Column-major copy: split search sorts/scans one feature at a
+        // time, so columnar access is the cache-friendly layout (§Perf).
+        let cols = to_columns(x);
+        let idx: Vec<usize> = (0..x.len()).collect();
+        tree.grow_gini(&cols, y, idx, 0, params);
+        tree
+    }
+
+    /// Fit an XGBoost-style regression tree on per-sample gradients and
+    /// hessians: leaf weight = −G/(H+λ), split gain is the standard
+    /// structure-score improvement.
+    pub fn fit_grad_hess(
+        x: &[Vec<f64>],
+        grad: &[f64],
+        hess: &[f64],
+        params: &TreeParams,
+    ) -> DecisionTree {
+        assert_eq!(x.len(), grad.len());
+        assert_eq!(x.len(), hess.len());
+        assert!(!x.is_empty(), "empty training set");
+        let mut tree = DecisionTree {
+            nodes: Vec::new(),
+            n_features: x[0].len(),
+        };
+        let cols = to_columns(x);
+        let idx: Vec<usize> = (0..x.len()).collect();
+        tree.grow_gh(&cols, grad, hess, idx, 0, params);
+        tree
+    }
+
+    fn push_leaf(&mut self, value: f64) -> u32 {
+        self.nodes.push(Node {
+            feature: 0,
+            threshold: 0.0,
+            left: NO_CHILD,
+            right: NO_CHILD,
+            value,
+        });
+        (self.nodes.len() - 1) as u32
+    }
+
+    fn grow_gini(
+        &mut self,
+        cols: &[Vec<f64>],
+        y: &[f64],
+        idx: Vec<usize>,
+        depth: usize,
+        params: &TreeParams,
+    ) -> u32 {
+        let n = idx.len() as f64;
+        let pos = idx.iter().filter(|&&i| y[i] > 0.0).count() as f64;
+        let majority = if pos * 2.0 >= n { 1.0 } else { -1.0 };
+        let gini = |p: f64, total: f64| {
+            if total <= 0.0 {
+                0.0
+            } else {
+                let q = p / total;
+                2.0 * q * (1.0 - q) * total
+            }
+        };
+        let node_impurity = gini(pos, n);
+        if depth >= params.max_depth
+            || idx.len() < 2 * params.min_samples_leaf
+            || node_impurity == 0.0
+        {
+            return self.push_leaf(majority);
+        }
+
+        // Exact greedy search: best (feature, threshold) by gini decrease.
+        let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, gain)
+        let mut order = idx.clone();
+        for (f, col) in cols.iter().enumerate() {
+            order.sort_unstable_by(|&a, &b| col[a].total_cmp(&col[b]));
+            let mut pos_l = 0.0;
+            for (cut, &i) in order.iter().enumerate().take(order.len() - 1) {
+                if y[i] > 0.0 {
+                    pos_l += 1.0;
+                }
+                let nl = (cut + 1) as f64;
+                // Can't split between equal feature values.
+                if col[i] == col[order[cut + 1]] {
+                    continue;
+                }
+                if (cut + 1) < params.min_samples_leaf
+                    || (order.len() - cut - 1) < params.min_samples_leaf
+                {
+                    continue;
+                }
+                let gain = node_impurity - gini(pos_l, nl) - gini(pos - pos_l, n - nl);
+                // `>=`: zero-gain splits are allowed (sklearn semantics) —
+                // greedy CART cannot learn XOR-shaped data otherwise.
+                if gain >= params.min_split_gain
+                    && best.map_or(true, |(_, _, g)| gain > g)
+                {
+                    let thr = 0.5 * (col[i] + col[order[cut + 1]]);
+                    best = Some((f, thr, gain));
+                }
+            }
+        }
+
+        match best {
+            None => self.push_leaf(majority),
+            Some((f, thr, _)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.into_iter().partition(|&i| cols[f][i] <= thr);
+                let me = self.push_leaf(0.0); // reserve slot
+                let l = self.grow_gini(cols, y, li, depth + 1, params);
+                let r = self.grow_gini(cols, y, ri, depth + 1, params);
+                self.nodes[me as usize] = Node {
+                    feature: f as u32,
+                    threshold: thr,
+                    left: l,
+                    right: r,
+                    value: majority,
+                };
+                me
+            }
+        }
+    }
+
+    fn grow_gh(
+        &mut self,
+        cols: &[Vec<f64>],
+        grad: &[f64],
+        hess: &[f64],
+        idx: Vec<usize>,
+        depth: usize,
+        params: &TreeParams,
+    ) -> u32 {
+        let g_sum: f64 = idx.iter().map(|&i| grad[i]).sum();
+        let h_sum: f64 = idx.iter().map(|&i| hess[i]).sum();
+        let leaf_weight = -g_sum / (h_sum + params.lambda);
+        if depth >= params.max_depth || idx.len() < 2 * params.min_samples_leaf {
+            return self.push_leaf(leaf_weight);
+        }
+        let score = |g: f64, h: f64| g * g / (h + params.lambda);
+        let parent_score = score(g_sum, h_sum);
+
+        let mut best: Option<(usize, f64, f64)> = None;
+        let mut order = idx.clone();
+        for (f, col) in cols.iter().enumerate() {
+            order.sort_unstable_by(|&a, &b| col[a].total_cmp(&col[b]));
+            let (mut gl, mut hl) = (0.0, 0.0);
+            for (cut, &i) in order.iter().enumerate().take(order.len() - 1) {
+                gl += grad[i];
+                hl += hess[i];
+                if col[i] == col[order[cut + 1]] {
+                    continue;
+                }
+                if (cut + 1) < params.min_samples_leaf
+                    || (order.len() - cut - 1) < params.min_samples_leaf
+                    || hl < params.min_child_weight
+                    || (h_sum - hl) < params.min_child_weight
+                {
+                    continue;
+                }
+                let gain =
+                    0.5 * (score(gl, hl) + score(g_sum - gl, h_sum - hl) - parent_score);
+                // `>=` as above: gamma = 0 admits zero-gain splits so the
+                // boosting stages can carve XOR-like balanced regions.
+                if gain >= params.min_split_gain
+                    && best.map_or(true, |(_, _, g)| gain > g)
+                {
+                    let thr = 0.5 * (col[i] + col[order[cut + 1]]);
+                    best = Some((f, thr, gain));
+                }
+            }
+        }
+
+        match best {
+            None => self.push_leaf(leaf_weight),
+            Some((f, thr, _)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) =
+                    idx.into_iter().partition(|&i| cols[f][i] <= thr);
+                let me = self.push_leaf(0.0);
+                let l = self.grow_gh(cols, grad, hess, li, depth + 1, params);
+                let r = self.grow_gh(cols, grad, hess, ri, depth + 1, params);
+                self.nodes[me as usize] = Node {
+                    feature: f as u32,
+                    threshold: thr,
+                    left: l,
+                    right: r,
+                    value: leaf_weight,
+                };
+                me
+            }
+        }
+    }
+
+    // ---- persistence -------------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n_features", self.n_features)
+            .set(
+                "nodes",
+                Json::Arr(
+                    self.nodes
+                        .iter()
+                        .map(|n| {
+                            Json::Arr(vec![
+                                Json::Num(n.feature as f64),
+                                Json::Num(n.threshold),
+                                Json::Num(if n.left == NO_CHILD {
+                                    -1.0
+                                } else {
+                                    n.left as f64
+                                }),
+                                Json::Num(if n.right == NO_CHILD {
+                                    -1.0
+                                } else {
+                                    n.right as f64
+                                }),
+                                Json::Num(n.value),
+                            ])
+                        })
+                        .collect(),
+                ),
+            )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<DecisionTree> {
+        let n_features = j
+            .get("n_features")
+            .as_usize()
+            .ok_or_else(|| anyhow::anyhow!("tree json: missing n_features"))?;
+        let nodes_j = j
+            .get("nodes")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("tree json: missing nodes"))?;
+        let mut nodes = Vec::with_capacity(nodes_j.len());
+        for nj in nodes_j {
+            let a = nj
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("tree json: node not an array"))?;
+            if a.len() != 5 {
+                anyhow::bail!("tree json: node arity {}", a.len());
+            }
+            let num = |i: usize| a[i].as_f64().ok_or_else(|| anyhow::anyhow!("bad node"));
+            let child = |v: f64| if v < 0.0 { NO_CHILD } else { v as u32 };
+            nodes.push(Node {
+                feature: num(0)? as u32,
+                threshold: num(1)?,
+                left: child(num(2)?),
+                right: child(num(3)?),
+                value: num(4)?,
+            });
+        }
+        let tree = DecisionTree { nodes, n_features };
+        // Validate child indices.
+        for n in &tree.nodes {
+            if !n.is_leaf()
+                && (n.left as usize >= tree.nodes.len()
+                    || n.right as usize >= tree.nodes.len())
+            {
+                anyhow::bail!("tree json: child index out of range");
+            }
+        }
+        Ok(tree)
+    }
+}
+
+/// Standalone CART classifier (the paper's "DT" baseline in Table VI).
+#[derive(Debug, Clone, Default)]
+pub struct DecisionTreeClassifier {
+    pub params: TreeParams,
+    pub tree: Option<DecisionTree>,
+}
+
+impl DecisionTreeClassifier {
+    pub fn new(params: TreeParams) -> Self {
+        Self {
+            params,
+            tree: None,
+        }
+    }
+}
+
+impl crate::ml::Classifier for DecisionTreeClassifier {
+    fn fit(&mut self, x: &[Vec<f64>], y: &[f64]) {
+        self.tree = Some(DecisionTree::fit_gini(x, y, &self.params));
+    }
+
+    fn predict_one(&self, row: &[f64]) -> f64 {
+        let t = self.tree.as_ref().expect("DecisionTree not fitted");
+        if t.predict_value(row) >= 0.0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+
+    fn name(&self) -> String {
+        "DT".into()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::Classifier;
+
+    fn xor_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // 2D XOR grid with margin — requires depth ≥ 2 to separate.
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..10 {
+            for j in 0..10 {
+                let (a, b) = (i as f64 / 10.0, j as f64 / 10.0);
+                x.push(vec![a, b]);
+                y.push(if (a < 0.5) ^ (b < 0.5) { 1.0 } else { -1.0 });
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn gini_tree_learns_xor() {
+        let (x, y) = xor_data();
+        let t = DecisionTree::fit_gini(&x, &y, &TreeParams::default());
+        for (row, &label) in x.iter().zip(&y) {
+            assert_eq!(t.predict_value(row).signum(), label, "row {row:?}");
+        }
+        assert!(t.depth() >= 2);
+    }
+
+    #[test]
+    fn depth_limit_respected() {
+        let (x, y) = xor_data();
+        for d in 0..5 {
+            let t = DecisionTree::fit_gini(
+                &x,
+                &y,
+                &TreeParams {
+                    max_depth: d,
+                    ..TreeParams::default()
+                },
+            );
+            assert!(t.depth() <= d, "depth {} > limit {d}", t.depth());
+        }
+    }
+
+    #[test]
+    fn pure_node_becomes_leaf() {
+        let x = vec![vec![0.0], vec![1.0], vec![2.0]];
+        let y = vec![1.0, 1.0, 1.0];
+        let t = DecisionTree::fit_gini(&x, &y, &TreeParams::default());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict_value(&[5.0]), 1.0);
+    }
+
+    #[test]
+    fn grad_hess_tree_fits_residuals() {
+        // Regression toward -g/(h+λ): single feature step function.
+        let x: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let grad: Vec<f64> = (0..20).map(|i| if i < 10 { -1.0 } else { 1.0 }).collect();
+        let hess = vec![1.0; 20];
+        let t = DecisionTree::fit_grad_hess(
+            &x,
+            &grad,
+            &hess,
+            &TreeParams {
+                max_depth: 1,
+                ..TreeParams::default()
+            },
+        );
+        // Left leaf ≈ 10/(10+1), right ≈ -10/11.
+        let l = t.predict_value(&[0.0]);
+        let r = t.predict_value(&[19.0]);
+        assert!((l - 10.0 / 11.0).abs() < 1e-9, "left {l}");
+        assert!((r + 10.0 / 11.0).abs() < 1e-9, "right {r}");
+    }
+
+    #[test]
+    fn min_samples_leaf_enforced() {
+        let x: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..10).map(|i| if i == 0 { 1.0 } else { -1.0 }).collect();
+        let t = DecisionTree::fit_gini(
+            &x,
+            &y,
+            &TreeParams {
+                min_samples_leaf: 3,
+                ..TreeParams::default()
+            },
+        );
+        // No leaf may hold fewer than 3 samples → the lone positive cannot
+        // be isolated, so at least one side misclassifies it; but structure
+        // must respect the constraint (≤ 2 internal splits for n=10).
+        assert!(t.n_leaves() <= 3, "leaves {}", t.n_leaves());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let (x, y) = xor_data();
+        let t = DecisionTree::fit_gini(&x, &y, &TreeParams::default());
+        let j = t.to_json();
+        let back = DecisionTree::from_json(&j).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn json_rejects_corrupt() {
+        assert!(DecisionTree::from_json(&Json::Null).is_err());
+        let j = Json::obj().set("n_features", 2usize).set(
+            "nodes",
+            Json::Arr(vec![Json::Arr(vec![
+                Json::Num(0.0),
+                Json::Num(0.5),
+                Json::Num(99.0), // out-of-range child
+                Json::Num(100.0),
+                Json::Num(0.0),
+            ])]),
+        );
+        assert!(DecisionTree::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn classifier_wrapper_api() {
+        let (x, y) = xor_data();
+        let mut c = DecisionTreeClassifier::new(TreeParams::default());
+        c.fit(&x, &y);
+        let preds = c.predict(&x);
+        let acc = preds
+            .iter()
+            .zip(&y)
+            .filter(|(p, t)| p == t)
+            .count() as f64
+            / y.len() as f64;
+        assert_eq!(acc, 1.0);
+        assert_eq!(c.name(), "DT");
+    }
+
+    #[test]
+    fn duplicate_feature_values_never_split_between() {
+        // All feature values identical → no valid split → single leaf.
+        let x = vec![vec![3.0]; 8];
+        let y = vec![1.0, -1.0, 1.0, -1.0, 1.0, -1.0, 1.0, -1.0];
+        let t = DecisionTree::fit_gini(&x, &y, &TreeParams::default());
+        assert_eq!(t.nodes.len(), 1);
+    }
+}

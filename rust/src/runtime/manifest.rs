@@ -1,0 +1,182 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime. Parsed from `artifacts/manifest.json`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Shape + dtype of one artifact input.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT-lowered HLO module.
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub n_outputs: usize,
+    /// Free-form metadata from the catalog (op kind, plan, tiles, ...).
+    pub meta: Json,
+}
+
+/// The full manifest, indexed by artifact name.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> anyhow::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts`)", path.display()))?;
+        let j = Json::parse(&text)?;
+        anyhow::ensure!(
+            j.get("format").as_str() == Some("mtnn-artifacts-v1"),
+            "unknown manifest format"
+        );
+        let mut entries = BTreeMap::new();
+        let arr = j
+            .get("entries")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("manifest: entries missing"))?;
+        for e in arr {
+            let name = e
+                .get("name")
+                .as_str()
+                .ok_or_else(|| anyhow::anyhow!("manifest: entry without name"))?
+                .to_string();
+            let file = dir.join(
+                e.get("file")
+                    .as_str()
+                    .ok_or_else(|| anyhow::anyhow!("manifest: {name} without file"))?,
+            );
+            let mut inputs = Vec::new();
+            for inp in e
+                .get("inputs")
+                .as_arr()
+                .ok_or_else(|| anyhow::anyhow!("manifest: {name} without inputs"))?
+            {
+                let shape = inp
+                    .get("shape")
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("manifest: bad shape in {name}"))?
+                    .iter()
+                    .map(|v| v.as_usize().unwrap_or(0))
+                    .collect();
+                inputs.push(TensorSpec {
+                    shape,
+                    dtype: inp.get("dtype").as_str().unwrap_or("f32").to_string(),
+                });
+            }
+            let n_outputs = e
+                .get("n_outputs")
+                .as_usize()
+                .ok_or_else(|| anyhow::anyhow!("manifest: {name} without n_outputs"))?;
+            entries.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name,
+                    file,
+                    inputs,
+                    n_outputs,
+                    meta: e.get("meta").clone(),
+                },
+            );
+        }
+        Ok(Manifest { dir, entries })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&ArtifactEntry> {
+        self.entries.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{name}' not in manifest ({} entries); run `make artifacts`",
+                self.entries.len()
+            )
+        })
+    }
+
+    /// Names of GEMM-service artifacts of a given algorithm kind.
+    pub fn gemm_entries(&self, algo: &str) -> Vec<&ArtifactEntry> {
+        self.entries
+            .values()
+            .filter(|e| {
+                e.meta.get("op").as_str() == Some("gemm")
+                    && e.meta.get("algo").as_str() == Some(algo)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("mtnn_manifest_test");
+        write_manifest(
+            &dir,
+            r#"{"format": "mtnn-artifacts-v1", "entries": [
+                {"name": "nt_2x2x2", "file": "nt.hlo.txt",
+                 "inputs": [{"shape": [2,2], "dtype": "f32"}],
+                 "n_outputs": 1,
+                 "meta": {"op": "gemm", "algo": "nt"}}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let e = m.get("nt_2x2x2").unwrap();
+        assert_eq!(e.inputs[0].shape, vec![2, 2]);
+        assert_eq!(e.inputs[0].elements(), 4);
+        assert_eq!(e.n_outputs, 1);
+        assert_eq!(m.gemm_entries("nt").len(), 1);
+        assert!(m.gemm_entries("tnn").is_empty());
+        assert!(m.get("missing").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("mtnn_manifest_bad");
+        write_manifest(&dir, r#"{"format": "v999", "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_mentions_make_artifacts() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn real_manifest_loads_if_built() {
+        // Exercised against the actual artifacts when present (CI runs
+        // `make artifacts` first; unit tests skip gracefully otherwise).
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.entries.len() >= 20);
+            assert!(m.get("nt_128x128x128").is_ok());
+            assert!(m.get("fcn_train_nt-nt-nt").is_ok());
+        }
+    }
+}

@@ -1,0 +1,153 @@
+//! PJRT runtime: load AOT-lowered HLO-text artifacts and execute them on
+//! the CPU PJRT client from the L3 request path (no Python anywhere).
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. Compiled
+//! executables are cached per artifact name; compilation happens at most
+//! once per process (or eagerly via [`Runtime::warmup`]).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+
+use crate::gemm::cpu::Matrix;
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// Execution statistics (exposed to the coordinator's metrics).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub cache_hits: u64,
+}
+
+/// The PJRT runtime: client + artifact manifest + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime over an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> anyhow::Result<Runtime> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            stats: Mutex::new(RuntimeStats::default()),
+        })
+    }
+
+    /// Default artifact location relative to the repo root.
+    pub fn default_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact.
+    pub fn executable(&self, name: &str) -> anyhow::Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            self.stats.lock().unwrap().cache_hits += 1;
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(&entry.file)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", entry.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {name}: {e:?}"))?;
+        let exe = Arc::new(exe);
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        self.stats.lock().unwrap().compiles += 1;
+        Ok(exe)
+    }
+
+    /// Eagerly compile a set of artifacts (e.g. at server start).
+    pub fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute an artifact on row-major f32 matrices. 1-D inputs (biases)
+    /// are passed as matrices with `rows == 1` and reshaped per manifest.
+    pub fn execute(&self, name: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        let entry = self.manifest.get(name)?.clone();
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "{name}: expected {} inputs, got {}",
+            entry.inputs.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (m, spec)) in inputs.iter().zip(&entry.inputs).enumerate() {
+            anyhow::ensure!(
+                m.data.len() == spec.elements(),
+                "{name}: input {i} has {} elements, manifest says {:?}",
+                m.data.len(),
+                spec.shape
+            );
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&m.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("{name}: reshaping input {i}: {e:?}"))?;
+            literals.push(lit);
+        }
+        let exe = self.executable(name)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow::anyhow!("executing {name}: {e:?}"))?;
+        self.stats.lock().unwrap().executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("{name}: fetching result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → always a tuple literal.
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow::anyhow!("{name}: untupling result: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == entry.n_outputs,
+            "{name}: manifest says {} outputs, got {}",
+            entry.n_outputs,
+            parts.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let shape = p
+                .array_shape()
+                .map_err(|e| anyhow::anyhow!("{name}: output {i} shape: {e:?}"))?;
+            let dims = shape.dims();
+            let (rows, cols) = match dims.len() {
+                0 => (1usize, 1usize),
+                1 => (1, dims[0] as usize),
+                2 => (dims[0] as usize, dims[1] as usize),
+                d => anyhow::bail!("{name}: output {i} has rank {d} > 2"),
+            };
+            let data = p
+                .to_vec::<f32>()
+                .map_err(|e| anyhow::anyhow!("{name}: output {i} data: {e:?}"))?;
+            out.push(Matrix::from_vec(rows, cols, data));
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,255 @@
+//! MTNN — the supervised-learning algorithm selector (§V, Algorithm 2).
+//!
+//! Given the GPU's five characteristics and the matrix sizes, predict which
+//! NT implementation is faster and dispatch accordingly, with the paper's
+//! memory-fit fallback: if `Bᵀ` would not fit in GPU memory, always choose
+//! the direct NT call.
+
+pub mod three_way;
+
+use crate::gemm::Algorithm;
+use crate::gpusim::{GpuSpec, Simulator};
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::scaler::MinMaxScaler;
+use crate::ml::svm::Svm;
+use crate::ml::tree::DecisionTreeClassifier;
+use crate::ml::Classifier;
+use crate::util::json::Json;
+
+/// Build the 8-dimensional input vector `(gm, sm, cc, mbw, l2c, m, n, k)`.
+/// O(1), as the paper requires for negligible runtime overhead.
+#[inline]
+pub fn features(gpu: &GpuSpec, m: u64, n: u64, k: u64) -> [f64; 8] {
+    let g = gpu.features();
+    [g[0], g[1], g[2], g[3], g[4], m as f64, n as f64, k as f64]
+}
+
+/// A trained predictor of the paper's label (+1 → NT, −1 → TNN).
+///
+/// SVM variants carry their min-max scaler since the paper normalizes
+/// features to (0, 1) for SVMs only.
+pub enum TrainedModel {
+    Gbdt(Gbdt),
+    Dt(DecisionTreeClassifier),
+    Svm { model: Svm, scaler: MinMaxScaler },
+}
+
+impl TrainedModel {
+    pub fn name(&self) -> String {
+        match self {
+            TrainedModel::Gbdt(m) => m.name(),
+            TrainedModel::Dt(m) => m.name(),
+            TrainedModel::Svm { model, .. } => model.name(),
+        }
+    }
+
+    /// Predict the label for a raw (unscaled) feature row.
+    #[inline]
+    pub fn predict_label(&self, row: &[f64]) -> i8 {
+        let v = match self {
+            TrainedModel::Gbdt(m) => m.predict_one(row),
+            TrainedModel::Dt(m) => m.predict_one(row),
+            TrainedModel::Svm { model, scaler } => {
+                model.predict_one(&scaler.transform_row(row))
+            }
+        };
+        if v >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+/// The MTNN selection system: a trained model + the memory-fallback policy.
+pub struct Selector {
+    pub model: TrainedModel,
+}
+
+/// Why the selector chose what it chose (exposed for metrics/logging).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SelectionReason {
+    /// Model predicted NT (+1).
+    PredictedNt,
+    /// Model predicted TNN (−1).
+    PredictedTnn,
+    /// `Bᵀ` does not fit in GPU memory — forced NT (paper §II).
+    MemoryFallback,
+}
+
+impl Selector {
+    pub fn new(model: TrainedModel) -> Selector {
+        Selector { model }
+    }
+
+    /// Train the paper's production model: GBDT on the FULL dataset
+    /// (§VI.B — "the integrated predictor is trained with all the data
+    /// set"), with the paper's hyper-parameters.
+    pub fn train_default(records: &[crate::dataset::Record]) -> Selector {
+        let d = crate::dataset::to_ml_dataset(records);
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&d.x, &d.y);
+        Selector::new(TrainedModel::Gbdt(g))
+    }
+
+    /// Algorithm 2 of the paper: O(1) feature build, model predict,
+    /// memory-fit fallback.
+    #[inline]
+    pub fn select(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> (Algorithm, SelectionReason) {
+        if Simulator::tnn_workspace_bytes(m, n, k) > gpu.global_mem_bytes() {
+            return (Algorithm::Nt, SelectionReason::MemoryFallback);
+        }
+        let row = features(gpu, m, n, k);
+        match self.model.predict_label(&row) {
+            1 => (Algorithm::Nt, SelectionReason::PredictedNt),
+            _ => (Algorithm::Tnn, SelectionReason::PredictedTnn),
+        }
+    }
+
+    /// Plain predicted algorithm (no fallback), for classifier evaluation.
+    #[inline]
+    pub fn predict(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> Algorithm {
+        Algorithm::from_label(self.model.predict_label(&features(gpu, m, n, k)))
+    }
+
+    // ---- persistence (GBDT models only — the shipped production format) ----
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
+        match &self.model {
+            TrainedModel::Gbdt(g) => {
+                let j = Json::obj()
+                    .set("format", "mtnn-selector-v1")
+                    .set("model", g.to_json());
+                if let Some(dir) = path.as_ref().parent() {
+                    std::fs::create_dir_all(dir)?;
+                }
+                std::fs::write(path, j.to_pretty())?;
+                Ok(())
+            }
+            other => anyhow::bail!(
+                "only GBDT selectors are persisted (got {}); \
+                 retrain baselines from the dataset instead",
+                other.name()
+            ),
+        }
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> anyhow::Result<Selector> {
+        let text = std::fs::read_to_string(&path)?;
+        let j = Json::parse(&text)?;
+        anyhow::ensure!(
+            j.get("format").as_str() == Some("mtnn-selector-v1"),
+            "unknown selector format in {}",
+            path.as_ref().display()
+        );
+        Ok(Selector::new(TrainedModel::Gbdt(Gbdt::from_json(
+            j.get("model"),
+        )?)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gpusim::{GTX1080, TITANX};
+    use crate::ml::metrics::accuracy;
+
+    fn trained() -> (Selector, Vec<crate::dataset::Record>) {
+        let records = collect_paper_dataset();
+        let s = Selector::train_default(&records);
+        (s, records)
+    }
+
+    #[test]
+    fn features_layout() {
+        let f = features(&GTX1080, 128, 256, 512);
+        assert_eq!(f, [8.0, 20.0, 1607.0, 256.0, 2048.0, 128.0, 256.0, 512.0]);
+    }
+
+    #[test]
+    fn full_train_accuracy_matches_paper_ballpark() {
+        // Paper Fig 4: training on 100% of the data reaches 96.39% on the
+        // full set. Noise-flipped boundary labels cap us similarly.
+        let (s, records) = trained();
+        let pred: Vec<f64> = records
+            .iter()
+            .map(|r| {
+                let gpu = GpuSpec::by_name(&r.gpu).unwrap();
+                s.predict(gpu, r.m, r.n, r.k).label() as f64
+            })
+            .collect();
+        let truth: Vec<f64> = records.iter().map(|r| r.label as f64).collect();
+        let acc = accuracy(&pred, &truth);
+        assert!(
+            acc.total > 0.90 && acc.total <= 1.0,
+            "full-train accuracy {:.4} out of expected band",
+            acc.total
+        );
+    }
+
+    #[test]
+    fn memory_fallback_forces_nt() {
+        let (s, _) = trained();
+        // 32768×32768 with k=32768: Bᵀ extra 4 GiB pushes beyond 8 GiB.
+        let (algo, reason) = s.select(&GTX1080, 32768, 32768, 32768);
+        assert_eq!(algo, Algorithm::Nt);
+        assert_eq!(reason, SelectionReason::MemoryFallback);
+        // Small case goes through the model.
+        let (_, reason) = s.select(&GTX1080, 128, 128, 128);
+        assert_ne!(reason, SelectionReason::MemoryFallback);
+    }
+
+    #[test]
+    fn selector_is_gpu_sensitive() {
+        // The model must read GPU features: predictions over the sweep
+        // should not be identical across GPUs.
+        let (s, _) = trained();
+        let mut diff = 0;
+        for &m in &crate::gpusim::SIZE_GRID[..6] {
+            for &n in &crate::gpusim::SIZE_GRID[..6] {
+                for &k in &crate::gpusim::SIZE_GRID[..6] {
+                    if s.predict(&GTX1080, m, n, k) != s.predict(&TITANX, m, n, k) {
+                        diff += 1;
+                    }
+                }
+            }
+        }
+        assert!(diff > 0, "predictions identical across GPUs — GPU features unused");
+    }
+
+    #[test]
+    fn save_load_roundtrip_preserves_selection() {
+        let (s, _) = trained();
+        let path = std::env::temp_dir().join("mtnn_selector_test.json");
+        s.save(&path).unwrap();
+        let back = Selector::load(&path).unwrap();
+        for &m in &[128u64, 1024, 8192] {
+            for &n in &[256u64, 4096] {
+                for &k in &[128u64, 16384] {
+                    assert_eq!(
+                        s.select(&GTX1080, m, n, k),
+                        back.select(&GTX1080, m, n, k)
+                    );
+                }
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn non_gbdt_models_refuse_to_persist() {
+        let mut dt = DecisionTreeClassifier::default();
+        dt.fit(&[vec![0.0], vec![1.0]], &[-1.0, 1.0]);
+        let s = Selector::new(TrainedModel::Dt(dt));
+        assert!(s.save(std::env::temp_dir().join("x.json")).is_err());
+    }
+
+    #[test]
+    fn load_rejects_wrong_format() {
+        let path = std::env::temp_dir().join("mtnn_selector_bad.json");
+        std::fs::write(&path, r#"{"format": "something-else"}"#).unwrap();
+        assert!(Selector::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

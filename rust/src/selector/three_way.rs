@@ -1,0 +1,240 @@
+//! Three-way selection — the paper's §VII future work, implemented:
+//! choose among {direct NT, TNN with out-of-place transpose, TNN with
+//! in-place transpose}. The in-place variant needs no Bᵀ buffer, so it
+//! extends TNN-class wins into the memory region where the 2-way MTNN is
+//! forced back to NT.
+//!
+//! Architecture: two binary GBDTs in a gate/variant cascade —
+//! `gate` predicts "direct NT vs any TNN" (the paper's original label),
+//! `variant` predicts "out-of-place vs in-place" among TNN-better cases —
+//! keeping each learner exactly the paper's model class.
+
+use crate::gpusim::{GpuSpec, Simulator, PAPER_GPUS};
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::Classifier;
+
+/// The three implementations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ThreeWay {
+    Nt,
+    TnnOutOfPlace,
+    TnnInPlace,
+}
+
+impl ThreeWay {
+    pub fn name(self) -> &'static str {
+        match self {
+            ThreeWay::Nt => "NT",
+            ThreeWay::TnnOutOfPlace => "TNN-oop",
+            ThreeWay::TnnInPlace => "TNN-ip",
+        }
+    }
+}
+
+/// Simulated timings of all three implementations for one case.
+#[derive(Debug, Clone, Copy)]
+pub struct Case3 {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub t_nt: f64,
+    /// None when Bᵀ does not fit.
+    pub t_tnn_oop: Option<f64>,
+    pub t_tnn_ip: f64,
+}
+
+impl Case3 {
+    pub fn best(&self) -> ThreeWay {
+        let mut best = (ThreeWay::Nt, self.t_nt);
+        if let Some(t) = self.t_tnn_oop {
+            if t < best.1 {
+                best = (ThreeWay::TnnOutOfPlace, t);
+            }
+        }
+        if self.t_tnn_ip < best.1 {
+            best = (ThreeWay::TnnInPlace, self.t_tnn_ip);
+        }
+        best.0
+    }
+
+    pub fn time_of(&self, algo: ThreeWay) -> Option<f64> {
+        match algo {
+            ThreeWay::Nt => Some(self.t_nt),
+            ThreeWay::TnnOutOfPlace => self.t_tnn_oop,
+            ThreeWay::TnnInPlace => Some(self.t_tnn_ip),
+        }
+    }
+}
+
+/// Time all three implementations on a simulated GPU. Valid whenever the
+/// plain NT workspace fits (in-place needs nothing extra).
+pub fn time_case3(sim: &Simulator, m: u64, n: u64, k: u64) -> Option<Case3> {
+    if Simulator::nt_workspace_bytes(m, n, k) > sim.spec().global_mem_bytes() {
+        return None;
+    }
+    let t_tnn_oop = sim.fits(m, n, k).then(|| sim.model.t_tnn(m, n, k));
+    Some(Case3 {
+        m,
+        n,
+        k,
+        t_nt: sim.model.t_nt(m, n, k),
+        t_tnn_oop,
+        t_tnn_ip: sim.model.t_tnn_inplace(m, n, k),
+    })
+}
+
+/// The cascade selector.
+pub struct ThreeWaySelector {
+    /// +1 → NT, −1 → some TNN variant.
+    gate: Gbdt,
+    /// +1 → out-of-place, −1 → in-place (among TNN-better cases).
+    variant: Gbdt,
+}
+
+impl ThreeWaySelector {
+    /// Train both stages from simulated sweeps over the paper's GPUs.
+    pub fn train_default() -> ThreeWaySelector {
+        let mut gate_x = Vec::new();
+        let mut gate_y = Vec::new();
+        let mut var_x = Vec::new();
+        let mut var_y = Vec::new();
+        for gpu in PAPER_GPUS {
+            let sim = Simulator::new(gpu);
+            for &m in &crate::gpusim::SIZE_GRID {
+                for &n in &crate::gpusim::SIZE_GRID {
+                    for &k in &crate::gpusim::SIZE_GRID {
+                        let Some(c) = time_case3(&sim, m, n, k) else {
+                            continue;
+                        };
+                        let row = super::features(gpu, m, n, k).to_vec();
+                        let best = c.best();
+                        gate_x.push(row.clone());
+                        gate_y.push(if best == ThreeWay::Nt { 1.0 } else { -1.0 });
+                        if best != ThreeWay::Nt {
+                            var_x.push(row);
+                            var_y.push(if best == ThreeWay::TnnOutOfPlace {
+                                1.0
+                            } else {
+                                -1.0
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        let mut gate = Gbdt::new(GbdtParams::default());
+        gate.fit(&gate_x, &gate_y);
+        let mut variant = Gbdt::new(GbdtParams::default());
+        variant.fit(&var_x, &var_y);
+        ThreeWaySelector { gate, variant }
+    }
+
+    /// Select among the three implementations with memory awareness:
+    /// out-of-place is only offered when Bᵀ fits.
+    pub fn select(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> ThreeWay {
+        let row = super::features(gpu, m, n, k);
+        if self.gate.predict_one(&row) > 0.0 {
+            return ThreeWay::Nt;
+        }
+        let oop_fits =
+            Simulator::tnn_workspace_bytes(m, n, k) <= gpu.global_mem_bytes();
+        if oop_fits && self.variant.predict_one(&row) > 0.0 {
+            ThreeWay::TnnOutOfPlace
+        } else {
+            ThreeWay::TnnInPlace
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GTX1080;
+
+    #[test]
+    fn inplace_is_slower_than_outofplace_when_both_fit() {
+        let sim = Simulator::new(&GTX1080);
+        // Double in-place pass at ~23% BW vs single out-of-place at 72%.
+        let c = time_case3(&sim, 1024, 4096, 4096).unwrap();
+        assert!(c.t_tnn_ip > c.t_tnn_oop.unwrap());
+    }
+
+    #[test]
+    fn inplace_available_where_oop_is_not() {
+        let sim = Simulator::new(&GTX1080);
+        // From ablation 4: NT-only region (oop OOM, NT fits).
+        let mut found = false;
+        for &m in &crate::gpusim::SIZE_GRID {
+            for &n in &crate::gpusim::SIZE_GRID {
+                for &k in &crate::gpusim::SIZE_GRID {
+                    if sim.fits_nt_only(m, n, k) {
+                        let c = time_case3(&sim, m, n, k).unwrap();
+                        assert!(c.t_tnn_oop.is_none());
+                        assert!(c.t_tnn_ip.is_finite());
+                        found = true;
+                    }
+                }
+            }
+        }
+        assert!(found, "grid should contain NT-only cases");
+    }
+
+    #[test]
+    fn selector_respects_memory() {
+        let sel = ThreeWaySelector::train_default();
+        let mut oop_in_oom_region = 0;
+        let sim = Simulator::new(&GTX1080);
+        for &m in &crate::gpusim::SIZE_GRID {
+            for &n in &crate::gpusim::SIZE_GRID {
+                for &k in &crate::gpusim::SIZE_GRID {
+                    if sim.fits_nt_only(m, n, k)
+                        && sel.select(&GTX1080, m, n, k) == ThreeWay::TnnOutOfPlace
+                    {
+                        oop_in_oom_region += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(oop_in_oom_region, 0, "must never pick oop where Bᵀ cannot fit");
+    }
+
+    #[test]
+    fn three_way_beats_two_way_on_average() {
+        // The future-work claim: the 3-way selector's average time over the
+        // NT-feasible grid is no worse than the 2-way (oop-or-NT) policy.
+        let sel = ThreeWaySelector::train_default();
+        let sim = Simulator::new(&GTX1080);
+        let (mut t3, mut t2, mut n) = (0.0, 0.0, 0);
+        for &m in &crate::gpusim::SIZE_GRID {
+            for &nn in &crate::gpusim::SIZE_GRID {
+                for &k in &crate::gpusim::SIZE_GRID {
+                    let Some(c) = time_case3(&sim, m, nn, k) else {
+                        continue;
+                    };
+                    let choice3 = sel.select(&GTX1080, m, nn, k);
+                    t3 += c.time_of(choice3).unwrap_or(c.t_nt);
+                    // 2-way policy: oracle-free gate + forced NT when oop OOM.
+                    let choice2 = if super_gate(&sel, m, nn, k) {
+                        ThreeWay::Nt
+                    } else if c.t_tnn_oop.is_some() {
+                        ThreeWay::TnnOutOfPlace
+                    } else {
+                        ThreeWay::Nt
+                    };
+                    t2 += c.time_of(choice2).unwrap_or(c.t_nt);
+                    n += 1;
+                }
+            }
+        }
+        assert!(n > 800);
+        assert!(
+            t3 <= t2 * 1.01,
+            "3-way total {t3:.3}s should not exceed 2-way {t2:.3}s"
+        );
+    }
+
+    fn super_gate(sel: &ThreeWaySelector, m: u64, n: u64, k: u64) -> bool {
+        let row = crate::selector::features(&GTX1080, m, n, k);
+        sel.gate.predict_one(&row) > 0.0
+    }
+}

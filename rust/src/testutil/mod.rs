@@ -1,0 +1,40 @@
+//! Test-only utilities: a minimal property-based testing harness
+//! (replacing `proptest`, unavailable offline) and numeric assert helpers.
+
+pub mod prop;
+
+/// Assert two f32 slices are elementwise close with combined abs/rel
+/// tolerance — the Rust analogue of `np.testing.assert_allclose`.
+pub fn assert_allclose(actual: &[f32], expected: &[f32], atol: f32, rtol: f32) {
+    assert_eq!(
+        actual.len(),
+        expected.len(),
+        "length mismatch: {} vs {}",
+        actual.len(),
+        expected.len()
+    );
+    for (i, (&a, &e)) in actual.iter().zip(expected).enumerate() {
+        let tol = atol + rtol * e.abs();
+        assert!(
+            (a - e).abs() <= tol,
+            "element {i}: {a} vs {e} (|diff|={} > tol={tol})",
+            (a - e).abs()
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allclose_accepts_within_tol() {
+        assert_allclose(&[1.0, 2.0], &[1.0001, 1.9999], 1e-3, 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "element 1")]
+    fn allclose_rejects_outside_tol() {
+        assert_allclose(&[1.0, 2.1], &[1.0, 2.0], 1e-3, 1e-3);
+    }
+}

@@ -1,0 +1,259 @@
+//! Minimal property-based testing, standing in for `proptest` (offline).
+//!
+//! Usage (`no_run`: doctest binaries lack the xla rpath in this image):
+//! ```no_run
+//! use mtnn::testutil::prop::{check, Gen};
+//! check("addition commutes", 200, |g| {
+//!     let a = g.i64_in(-1000, 1000);
+//!     let b = g.i64_in(-1000, 1000);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case gets a fresh deterministic [`Gen`] derived from the property
+//! name and the case index. On failure the harness retries the failing case
+//! with the *same* seed to confirm determinism, then panics with the seed so
+//! the case can be replayed via [`replay`]. Shrinking is "restart-lite": the
+//! generator records every draw, and on failure the harness re-runs with
+//! each recorded integer draw halved toward its minimum, keeping the
+//! smallest still-failing assignment — cruder than proptest's integrated
+//! shrinking but effective for the size-shaped inputs this repo generates.
+
+use crate::util::rng::{mix_parts, Xoshiro256pp};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Draw recorder: (min, value) per integer draw, enabling shrinking.
+#[derive(Debug, Clone, Default)]
+struct Trace {
+    draws: Vec<(i64, i64)>,
+}
+
+/// The value generator handed to properties.
+pub struct Gen {
+    rng: Xoshiro256pp,
+    trace: Trace,
+    /// When replaying a shrunk trace, draws come from here instead of rng.
+    replay: Option<Vec<i64>>,
+    cursor: usize,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Gen {
+        Gen {
+            rng: Xoshiro256pp::new(seed),
+            trace: Trace::default(),
+            replay: None,
+            cursor: 0,
+        }
+    }
+
+    fn with_replay(seed: u64, draws: Vec<i64>) -> Gen {
+        Gen {
+            rng: Xoshiro256pp::new(seed),
+            trace: Trace::default(),
+            replay: Some(draws),
+            cursor: 0,
+        }
+    }
+
+    fn draw(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = if let Some(replayed) = &self.replay {
+            // Replay a recorded (possibly shrunk) value; fall back to fresh
+            // randomness if the trace is shorter than the draw sequence.
+            match replayed.get(self.cursor) {
+                Some(&v) => v.clamp(lo, hi),
+                None => lo + self.rng.next_bounded((hi - lo + 1) as u64) as i64,
+            }
+        } else {
+            lo + self.rng.next_bounded((hi - lo + 1) as u64) as i64
+        };
+        self.cursor += 1;
+        self.trace.draws.push((lo, v));
+        v
+    }
+
+    /// Uniform i64 in [lo, hi] inclusive.
+    pub fn i64_in(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        self.draw(lo, hi)
+    }
+
+    /// Uniform usize in [lo, hi] inclusive.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.draw(lo as i64, hi as i64) as usize
+    }
+
+    /// A power of two 2^e with e in [elo, ehi] — matches the paper's size
+    /// grid S = {2^7 .. 2^16}.
+    pub fn pow2(&mut self, elo: u32, ehi: u32) -> usize {
+        1usize << self.draw(elo as i64, ehi as i64) as u32
+    }
+
+    /// Uniform f64 in [lo, hi) with 1e-6 granularity (recorded as integer
+    /// so it can shrink).
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        let steps = 1_000_000i64;
+        let t = self.draw(0, steps) as f64 / steps as f64;
+        lo + t * (hi - lo)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty());
+        let i = self.draw(0, items.len() as i64 - 1) as usize;
+        &items[i]
+    }
+
+    /// Bernoulli.
+    pub fn bool(&mut self) -> bool {
+        self.draw(0, 1) == 1
+    }
+
+    /// A vector of f32 in [-1, 1) of the given length (not shrunk
+    /// element-wise; length should come from a shrinkable draw).
+    pub fn f32_vec(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.rng.next_f32() * 2.0 - 1.0).collect()
+    }
+}
+
+/// Outcome of running one case.
+fn run_case(
+    prop: &mut dyn FnMut(&mut Gen),
+    seed: u64,
+    replay: Option<Vec<i64>>,
+) -> Result<Trace, Trace> {
+    let mut g = match replay {
+        Some(d) => Gen::with_replay(seed, d),
+        None => Gen::new(seed),
+    };
+    let result = catch_unwind(AssertUnwindSafe(|| prop(&mut g)));
+    match result {
+        Ok(()) => Ok(g.trace),
+        Err(_) => Err(g.trace),
+    }
+}
+
+/// Run `cases` random cases of `prop`. Panics with a replayable seed and the
+/// shrunk draw assignment on the first failure.
+pub fn check(name: &str, cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    let base = mix_parts(&name.bytes().map(|b| b as u64).collect::<Vec<_>>());
+    for case in 0..cases {
+        let seed = mix_parts(&[base, case as u64]);
+        if let Err(trace) = run_case(&mut prop, seed, None) {
+            let shrunk = shrink(&mut prop, seed, trace);
+            let draws: Vec<i64> = shrunk.draws.iter().map(|&(_, v)| v).collect();
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}).\n\
+                 shrunk draws: {draws:?}\n\
+                 replay with: mtnn::testutil::prop::replay(\"{name}\", {seed:#x}, &{draws:?}, prop)"
+            );
+        }
+    }
+}
+
+/// Re-run a specific failing case (from a `check` panic message).
+pub fn replay(name: &str, seed: u64, draws: &[i64], mut prop: impl FnMut(&mut Gen)) {
+    let _ = name;
+    if run_case(&mut prop, seed, Some(draws.to_vec())).is_ok() {
+        panic!("replay did not fail — property may be flaky or fixed");
+    }
+}
+
+/// Restart-lite shrinking: repeatedly try halving each draw toward its
+/// minimum; keep any variant that still fails. Bounded effort.
+fn shrink(prop: &mut dyn FnMut(&mut Gen), seed: u64, mut failing: Trace) -> Trace {
+    let mut budget = 400usize;
+    loop {
+        let mut improved = false;
+        for i in 0..failing.draws.len() {
+            if budget == 0 {
+                return failing;
+            }
+            let (lo, v) = failing.draws[i];
+            if v == lo {
+                continue;
+            }
+            // Candidate: halve the distance to the minimum.
+            let candidate_v = lo + (v - lo) / 2;
+            let mut draws: Vec<i64> = failing.draws.iter().map(|&(_, x)| x).collect();
+            draws[i] = candidate_v;
+            budget -= 1;
+            if let Err(trace) = run_case(prop, seed, Some(draws)) {
+                failing = trace;
+                improved = true;
+            }
+        }
+        if !improved {
+            return failing;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("abs is nonneg", 100, |g| {
+            let x = g.i64_in(-1_000_000, 1_000_000);
+            assert!(x.abs() >= 0);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_and_shrinks() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            check("find big", 200, |g| {
+                let x = g.i64_in(0, 10_000);
+                assert!(x < 500, "x={x}");
+            });
+        }));
+        let msg = match result {
+            Ok(()) => panic!("property should have failed"),
+            Err(e) => e
+                .downcast_ref::<String>()
+                .cloned()
+                .unwrap_or_else(|| "?".into()),
+        };
+        assert!(msg.contains("find big"), "{msg}");
+        // Shrinker should have pulled the counterexample near the boundary.
+        let draws_part = msg.split("shrunk draws: ").nth(1).unwrap();
+        let v: i64 = draws_part
+            .trim_start_matches('[')
+            .split(']')
+            .next()
+            .unwrap()
+            .trim()
+            .parse()
+            .unwrap();
+        assert!((500..1000).contains(&v), "shrunk to {v}, expected near 500");
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 300, |g| {
+            let p = g.pow2(7, 16);
+            assert!(p >= 128 && p <= 65536 && p.is_power_of_two());
+            let f = g.f64_in(-2.5, 3.5);
+            assert!((-2.5..=3.5).contains(&f));
+            let c = *g.choose(&[1, 2, 3]);
+            assert!((1..=3).contains(&c));
+            let n = g.usize_in(0, 5);
+            assert_eq!(g.f32_vec(n).len(), n);
+        });
+    }
+
+    #[test]
+    fn determinism_same_name_same_stream() {
+        let mut first: Vec<i64> = Vec::new();
+        check("det", 5, |g| {
+            first.push(g.i64_in(0, 1_000_000));
+        });
+        let mut second: Vec<i64> = Vec::new();
+        check("det", 5, |g| {
+            second.push(g.i64_in(0, 1_000_000));
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,159 @@
+//! In-tree micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + repeated timed runs with mean/std/percentiles, plus a
+//! one-line report format shared by `rust/benches/*` and the §Perf pass.
+
+use super::stats::{percentile, Summary};
+use std::time::Instant;
+
+/// Result of one benchmark: per-iteration wall times in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ns: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        Summary::of(&self.samples_ns).mean
+    }
+
+    pub fn std_ns(&self) -> f64 {
+        Summary::of(&self.samples_ns).std
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 50.0)
+    }
+
+    pub fn p99_ns(&self) -> f64 {
+        percentile(&self.samples_ns, 99.0)
+    }
+
+    /// "name  mean ± std  [p50 p99]  (n)" with human units.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12} ± {:>10}  p50 {:>12}  p99 {:>12}  n={}",
+            self.name,
+            human_ns(self.mean_ns()),
+            human_ns(self.std_ns()),
+            human_ns(self.p50_ns()),
+            human_ns(self.p99_ns()),
+            self.samples_ns.len()
+        )
+    }
+}
+
+/// Render nanoseconds with an adaptive unit.
+pub fn human_ns(ns: f64) -> String {
+    if ns.is_nan() {
+        "-".into()
+    } else if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Benchmark `f`, discarding `warmup` runs then timing `iters` runs.
+/// `f` should return something observable to stop the optimizer from
+/// deleting the body; the return value is black-boxed here.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+    }
+}
+
+/// Benchmark where each timed sample runs `batch` calls (for sub-microsecond
+/// bodies whose individual timing would be clock-noise dominated).
+/// Reported samples are per-call (divided by `batch`).
+pub fn bench_batched<T>(
+    name: &str,
+    warmup: usize,
+    iters: usize,
+    batch: usize,
+    mut f: impl FnMut() -> T,
+) -> BenchResult {
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        samples.push(t0.elapsed().as_nanos() as f64 / batch as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        samples_ns: samples,
+    }
+}
+
+/// Optimizer barrier (stable-rust version of `std::hint::black_box`).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let r = bench("noop", 2, 10, || 1 + 1);
+        assert_eq!(r.samples_ns.len(), 10);
+        assert!(r.mean_ns() >= 0.0);
+        assert!(r.report().contains("noop"));
+    }
+
+    #[test]
+    fn batched_bench_reports_per_call() {
+        let r = bench_batched("add", 1, 5, 1000, || std::hint::black_box(3u64) * 7);
+        assert_eq!(r.samples_ns.len(), 5);
+        // Per-call cost of a multiply must be well under a microsecond.
+        assert!(r.mean_ns() < 1e3, "mean {}ns", r.mean_ns());
+    }
+
+    #[test]
+    fn timing_reflects_work() {
+        let quick = bench("q", 1, 5, || 0u64);
+        let slow = bench("s", 1, 5, || {
+            let mut acc = 0u64;
+            for i in 0..200_000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(
+            slow.mean_ns() > quick.mean_ns(),
+            "slow {} vs quick {}",
+            slow.mean_ns(),
+            quick.mean_ns()
+        );
+    }
+
+    #[test]
+    fn human_units() {
+        assert!(human_ns(5.0).ends_with("ns"));
+        assert!(human_ns(5.0e3).ends_with("us"));
+        assert!(human_ns(5.0e6).ends_with("ms"));
+        assert!(human_ns(5.0e9).ends_with('s'));
+    }
+}

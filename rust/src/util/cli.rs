@@ -1,0 +1,188 @@
+//! Minimal command-line parsing (no `clap` offline).
+//!
+//! Grammar: `prog [subcommand] [--flag] [--key value]... [positional]...`
+//! Flags may also be written `--key=value`. Unknown keys are collected and
+//! reported by [`Args::finish`] so typos fail loudly.
+//!
+//! Ambiguity rule (no schema): a bare `--key` followed by a token that does
+//! not start with `--` binds as a key/value pair. Boolean flags therefore
+//! go last, before another `--option`, or use the explicit `--flag=true`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub program: String,
+    pub subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    consumed: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from the process arguments. `expect_subcommand` controls
+    /// whether the first bare word is treated as a subcommand.
+    pub fn from_env(expect_subcommand: bool) -> Args {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv, expect_subcommand)
+    }
+
+    pub fn parse(argv: &[String], expect_subcommand: bool) -> Args {
+        let mut out = Args {
+            program: argv.first().cloned().unwrap_or_default(),
+            ..Default::default()
+        };
+        let mut i = 1;
+        if expect_subcommand {
+            if let Some(first) = argv.get(1) {
+                if !first.starts_with("--") {
+                    out.subcommand = Some(first.clone());
+                    i = 2;
+                }
+            }
+        }
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.values
+                        .insert(stripped.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    fn mark(&self, key: &str) {
+        self.consumed.borrow_mut().push(key.to_string());
+    }
+
+    /// String option with default.
+    pub fn get(&self, key: &str, default: &str) -> String {
+        self.mark(key);
+        self.values
+            .get(key)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Optional string.
+    pub fn opt(&self, key: &str) -> Option<String> {
+        self.mark(key);
+        self.values.get(key).cloned()
+    }
+
+    /// Parsed numeric option with default; panics with a clear message on
+    /// malformed input (CLI misuse should fail fast, not silently default).
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.mark(key);
+        match self.values.get(key) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {v:?}")),
+        }
+    }
+
+    /// Boolean flag (`--verbose`) or `--verbose=true/false`.
+    pub fn flag(&self, key: &str) -> bool {
+        self.mark(key);
+        if self.flags.iter().any(|f| f == key) {
+            return true;
+        }
+        matches!(
+            self.values.get(key).map(String::as_str),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any provided `--key` was never consumed by the program —
+    /// catches typos like `--estimtors 8`.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let consumed = self.consumed.borrow();
+        let mut unknown: Vec<String> = Vec::new();
+        for k in self.values.keys().chain(self.flags.iter()) {
+            if !consumed.iter().any(|c| c == k) {
+                unknown.push(format!("--{k}"));
+            }
+        }
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            anyhow::bail!("unknown options: {}", unknown.join(", "))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_kv_flags_positional() {
+        let a = Args::parse(
+            &argv("prog collect --gpu gtx1080 --cases=500 data.csv --verbose"),
+            true,
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("collect"));
+        assert_eq!(a.get("gpu", "x"), "gtx1080");
+        assert_eq!(a.get_num::<usize>("cases", 0), 500);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["data.csv".to_string()]);
+        assert!(a.finish().is_ok());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv("prog"), false);
+        assert_eq!(a.get("seed", "42"), "42");
+        assert_eq!(a.get_num::<u64>("seed", 42), 42);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn unknown_keys_detected() {
+        let a = Args::parse(&argv("prog --good 1 --typo 2"), false);
+        let _ = a.get_num::<usize>("good", 0);
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--typo"), "{err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn malformed_number_panics() {
+        let a = Args::parse(&argv("prog --n abc"), false);
+        let _: usize = a.get_num("n", 0);
+    }
+
+    #[test]
+    fn no_subcommand_when_flag_first() {
+        let a = Args::parse(&argv("prog --x 1"), true);
+        assert_eq!(a.subcommand, None);
+        assert_eq!(a.get_num::<i64>("x", 0), 1);
+    }
+
+    #[test]
+    fn boolean_via_equals() {
+        let a = Args::parse(&argv("prog --fast=true --slow=false"), false);
+        assert!(a.flag("fast"));
+        assert!(!a.flag("slow"));
+    }
+}

@@ -1,0 +1,241 @@
+//! Tiny CSV reader/writer for dataset and result persistence.
+//!
+//! Scope: comma-separated, first row is a header, fields may be quoted with
+//! `"` (doubling escapes the quote), no embedded newlines in unquoted
+//! fields. This covers everything the repo writes; it is not a general
+//! dialect-sniffing CSV engine.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// An in-memory CSV table: header + rows of strings.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct CsvTable {
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Index of a column by name.
+    pub fn col(&self, name: &str) -> Option<usize> {
+        self.header.iter().position(|h| h == name)
+    }
+
+    /// Push a row of displayable values; panics if arity mismatches.
+    pub fn push_row(&mut self, fields: Vec<String>) {
+        assert_eq!(
+            fields.len(),
+            self.header.len(),
+            "row arity {} != header arity {}",
+            fields.len(),
+            self.header.len()
+        );
+        self.rows.push(fields);
+    }
+
+    /// Fetch field by (row, column name); None if the column is unknown.
+    pub fn get(&self, row: usize, name: &str) -> Option<&str> {
+        let c = self.col(name)?;
+        self.rows.get(row).map(|r| r[c].as_str())
+    }
+
+    /// Typed fetch helper.
+    pub fn get_f64(&self, row: usize, name: &str) -> Option<f64> {
+        self.get(row, name)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, row: usize, name: &str) -> Option<usize> {
+        self.get(row, name)?.parse().ok()
+    }
+
+    // ---- serialization ----------------------------------------------------
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        write_record(&mut out, &self.header);
+        for row in &self.rows {
+            write_record(&mut out, row);
+        }
+        out
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_string())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("reading {}: {e}", path.as_ref().display())
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let mut records = parse_records(text)?;
+        if records.is_empty() {
+            anyhow::bail!("csv: empty input (no header)");
+        }
+        let header = records.remove(0);
+        for (i, r) in records.iter().enumerate() {
+            if r.len() != header.len() {
+                anyhow::bail!(
+                    "csv: row {} has {} fields, header has {}",
+                    i + 1,
+                    r.len(),
+                    header.len()
+                );
+            }
+        }
+        Ok(Self {
+            header,
+            rows: records,
+        })
+    }
+}
+
+fn needs_quoting(field: &str) -> bool {
+    field.contains(',') || field.contains('"') || field.contains('\n') || field.contains('\r')
+}
+
+fn write_record(out: &mut String, fields: &[String]) {
+    for (i, f) in fields.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        if needs_quoting(f) {
+            out.push('"');
+            for c in f.chars() {
+                if c == '"' {
+                    out.push('"');
+                }
+                out.push(c);
+            }
+            out.push('"');
+        } else {
+            let _ = write!(out, "{f}");
+        }
+    }
+    out.push('\n');
+}
+
+fn parse_records(text: &str) -> anyhow::Result<Vec<Vec<String>>> {
+    let mut records = Vec::new();
+    let mut field = String::new();
+    let mut record: Vec<String> = Vec::new();
+    let mut chars = text.chars().peekable();
+    let mut in_quotes = false;
+    let mut any = false;
+
+    while let Some(c) = chars.next() {
+        any = true;
+        if in_quotes {
+            match c {
+                '"' => {
+                    if chars.peek() == Some(&'"') {
+                        chars.next();
+                        field.push('"');
+                    } else {
+                        in_quotes = false;
+                    }
+                }
+                c => field.push(c),
+            }
+        } else {
+            match c {
+                '"' => in_quotes = true,
+                ',' => {
+                    record.push(std::mem::take(&mut field));
+                }
+                '\r' => {
+                    // swallow; \n handles the record break
+                }
+                '\n' => {
+                    record.push(std::mem::take(&mut field));
+                    records.push(std::mem::take(&mut record));
+                }
+                c => field.push(c),
+            }
+        }
+    }
+    if in_quotes {
+        anyhow::bail!("csv: unterminated quoted field");
+    }
+    // Final record without trailing newline.
+    if any && (!field.is_empty() || !record.is_empty()) {
+        record.push(field);
+        records.push(record);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut t = CsvTable::new(&["m", "n", "k", "label"]);
+        t.push_row(vec!["128".into(), "256".into(), "512".into(), "-1".into()]);
+        t.push_row(vec!["1024".into(), "1".into(), "2".into(), "1".into()]);
+        let back = CsvTable::parse(&t.to_string()).unwrap();
+        assert_eq!(back, t);
+        assert_eq!(back.get_usize(0, "k"), Some(512));
+        assert_eq!(back.get_f64(1, "label"), Some(1.0));
+    }
+
+    #[test]
+    fn quoting_roundtrip() {
+        let mut t = CsvTable::new(&["name", "note"]);
+        t.push_row(vec!["a,b".into(), "says \"hi\"\nsecond line".into()]);
+        let text = t.to_string();
+        let back = CsvTable::parse(&text).unwrap();
+        assert_eq!(back.get(0, "note"), Some("says \"hi\"\nsecond line"));
+        assert_eq!(back.get(0, "name"), Some("a,b"));
+    }
+
+    #[test]
+    fn crlf_and_missing_trailing_newline() {
+        let t = CsvTable::parse("a,b\r\n1,2\r\n3,4").unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.get(1, "b"), Some("4"));
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        assert!(CsvTable::parse("a,b\n1,2,3\n").is_err());
+        assert!(CsvTable::parse("").is_err());
+    }
+
+    #[test]
+    fn unterminated_quote_rejected() {
+        assert!(CsvTable::parse("a\n\"oops\n").is_err());
+    }
+
+    #[test]
+    #[should_panic]
+    fn push_row_arity_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn save_and_load_tempfile() {
+        let mut t = CsvTable::new(&["x"]);
+        t.push_row(vec!["42".into()]);
+        let path = std::env::temp_dir().join("mtnn_csv_test.csv");
+        t.save(&path).unwrap();
+        let back = CsvTable::load(&path).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_file(&path).ok();
+    }
+}

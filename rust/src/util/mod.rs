@@ -1,0 +1,11 @@
+//! Shared substrates built in-tree because the offline environment vendors
+//! only the `xla` dependency closure (no serde / clap / rand / criterion /
+//! tokio / proptest). See DESIGN.md §4 row 10.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,252 @@
+//! Descriptive statistics and histograms for the experiment harness.
+//!
+//! The paper reports ratio histograms (Figs 1, 3, 6), averages and extrema
+//! (Table VIII) and latency percentiles (serving example); this module is
+//! the shared vocabulary for all of them.
+
+/// Basic summary of a sample: n, mean, std, min, max.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn of(xs: &[f64]) -> Summary {
+        if xs.is_empty() {
+            return Summary {
+                n: 0,
+                mean: f64::NAN,
+                std: f64::NAN,
+                min: f64::NAN,
+                max: f64::NAN,
+            };
+        }
+        let n = xs.len();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let (mut min, mut max) = (f64::INFINITY, f64::NEG_INFINITY);
+        for &x in xs {
+            min = min.min(x);
+            max = max.max(x);
+        }
+        Summary {
+            n,
+            mean,
+            std: var.sqrt(),
+            min,
+            max,
+        }
+    }
+}
+
+/// Mean of a slice; NaN on empty.
+pub fn mean(xs: &[f64]) -> f64 {
+    Summary::of(xs).mean
+}
+
+/// Linear-interpolation percentile, `p` in [0, 100]. NaN on empty input.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        let w = rank - lo as f64;
+        v[lo] * (1.0 - w) + v[hi] * w
+    }
+}
+
+/// Fraction of samples satisfying a predicate.
+pub fn fraction_where(xs: &[f64], pred: impl Fn(f64) -> bool) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().filter(|&&x| pred(x)).count() as f64 / xs.len() as f64
+}
+
+/// A fixed-bin histogram in the paper's style: uniform bins over
+/// `[lo, hi)` plus a final overflow bin `>= hi` (the "2.0+" bar).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub lo: f64,
+    pub hi: f64,
+    pub width: f64,
+    /// counts[0..nbins] are the uniform bins; counts[nbins] is overflow.
+    pub counts: Vec<usize>,
+    pub underflow: usize,
+    pub total: usize,
+}
+
+impl Histogram {
+    /// `nbins` uniform bins over [lo, hi) + one overflow bin.
+    pub fn new(lo: f64, hi: f64, nbins: usize) -> Histogram {
+        assert!(hi > lo && nbins > 0);
+        Histogram {
+            lo,
+            hi,
+            width: (hi - lo) / nbins as f64,
+            counts: vec![0; nbins + 1],
+            underflow: 0,
+            total: 0,
+        }
+    }
+
+    pub fn nbins(&self) -> usize {
+        self.counts.len() - 1
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.total += 1;
+        if x < self.lo {
+            self.underflow += 1;
+        } else if x >= self.hi {
+            let last = self.counts.len() - 1;
+            self.counts[last] += 1;
+        } else {
+            let i = ((x - self.lo) / self.width) as usize;
+            let i = i.min(self.nbins() - 1); // guard fp edge
+            self.counts[i] += 1;
+        }
+    }
+
+    pub fn add_all(&mut self, xs: &[f64]) {
+        for &x in xs {
+            self.add(x);
+        }
+    }
+
+    /// Frequency (fraction of total) of each bin, overflow last.
+    pub fn frequencies(&self) -> Vec<f64> {
+        if self.total == 0 {
+            return vec![0.0; self.counts.len()];
+        }
+        self.counts
+            .iter()
+            .map(|&c| c as f64 / self.total as f64)
+            .collect()
+    }
+
+    /// Bin labels like "0.6", "0.8", ..., "2.0+" matching the paper's axes.
+    pub fn labels(&self) -> Vec<String> {
+        let mut out: Vec<String> = (0..self.nbins())
+            .map(|i| format!("{:.1}", self.lo + (i as f64 + 1.0) * self.width))
+            .collect();
+        out.push(format!("{:.1}+", self.hi));
+        out
+    }
+
+    /// Render as an ASCII bar chart (one row per bin), the repo's stand-in
+    /// for the paper's matplotlib figures.
+    pub fn render(&self, title: &str) -> String {
+        let freqs = self.frequencies();
+        let labels = self.labels();
+        let maxf = freqs.iter().cloned().fold(0.0, f64::max).max(1e-12);
+        let mut out = format!("{title}  (n={})\n", self.total);
+        for (label, f) in labels.iter().zip(&freqs) {
+            let bar_len = ((f / maxf) * 50.0).round() as usize;
+            out.push_str(&format!(
+                "  {label:>6} | {:<50} {:5.1}%\n",
+                "#".repeat(bar_len),
+                f * 100.0
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.n, 4);
+        assert!((s.mean - 2.5).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - (1.25f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn summary_empty_is_nan() {
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert!(s.mean.is_nan());
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [10.0, 20.0, 30.0, 40.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 40.0);
+        assert!((percentile(&xs, 50.0) - 25.0).abs() < 1e-12);
+        // unsorted input works too
+        let ys = [40.0, 10.0, 30.0, 20.0];
+        assert!((percentile(&ys, 50.0) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fraction_where_counts() {
+        let xs = [0.5, 1.5, 2.5, 3.5];
+        assert!((fraction_where(&xs, |x| x > 1.0) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_binning_matches_paper_axes() {
+        // Paper Fig 1 style: bins of width 0.1 from 0.6 to 2.0 plus "2.0+".
+        let mut h = Histogram::new(0.6, 2.0, 14);
+        h.add(0.65); // bin 0
+        h.add(1.05); // bin 4
+        h.add(2.0); // overflow
+        h.add(5.0); // overflow
+        h.add(0.1); // underflow
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[4], 1);
+        assert_eq!(*h.counts.last().unwrap(), 2);
+        assert_eq!(h.underflow, 1);
+        assert_eq!(h.total, 5);
+        assert_eq!(h.labels().last().unwrap(), "2.0+");
+    }
+
+    #[test]
+    fn histogram_edge_values() {
+        let mut h = Histogram::new(0.0, 1.0, 10);
+        h.add(0.0);
+        h.add(0.999999999);
+        h.add(1.0);
+        assert_eq!(h.counts[0], 1);
+        assert_eq!(h.counts[9], 1);
+        assert_eq!(*h.counts.last().unwrap(), 1);
+    }
+
+    #[test]
+    fn histogram_render_contains_bars() {
+        let mut h = Histogram::new(0.0, 2.0, 4);
+        h.add_all(&[0.1, 0.2, 1.9, 3.0]);
+        let text = h.render("test");
+        assert!(text.contains("test"));
+        assert!(text.contains('#'));
+        assert!(text.contains("2.0+"));
+    }
+
+    #[test]
+    fn frequencies_sum_to_one_ignoring_underflow() {
+        let mut h = Histogram::new(0.0, 1.0, 5);
+        for i in 0..100 {
+            h.add(i as f64 / 100.0);
+        }
+        let sum: f64 = h.frequencies().iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+    }
+}

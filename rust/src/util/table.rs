@@ -1,0 +1,141 @@
+//! Aligned ASCII table rendering — every paper table is printed through
+//! this so bench output is uniform and diffable.
+
+/// A simple column-aligned text table with a title row.
+#[derive(Debug, Clone, Default)]
+pub struct TextTable {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, fields: Vec<String>) -> &mut Self {
+        assert_eq!(fields.len(), self.header.len(), "table row arity");
+        self.rows.push(fields);
+        self
+    }
+
+    /// Render with per-column width = max cell width, ` | ` separators and
+    /// a rule under the header.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let render_row = |cells: &[String]| -> String {
+            let mut line = String::from("| ");
+            for i in 0..ncol {
+                let cell = &cells[i];
+                let pad = widths[i] - cell.chars().count();
+                line.push_str(cell);
+                line.push_str(&" ".repeat(pad));
+                line.push_str(" | ");
+            }
+            line.trim_end().to_string()
+        };
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        out.push_str(&render_row(&self.header));
+        out.push('\n');
+        let rule: String = widths
+            .iter()
+            .map(|w| format!("|{}", "-".repeat(w + 2)))
+            .collect::<String>()
+            + "|";
+        out.push_str(&rule);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&render_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write to a results file (creating parent dirs) and also return text.
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<String> {
+        let text = self.render();
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, &text)?;
+        Ok(text)
+    }
+}
+
+/// Format an f64 with fixed decimals; the shared number style of all tables.
+pub fn fnum(x: f64, decimals: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{x:.decimals$}")
+    }
+}
+
+/// Format a percentage ("54.03%").
+pub fn fpct(x: f64, decimals: usize) -> String {
+    if x.is_nan() {
+        "-".to_string()
+    } else {
+        format!("{:.decimals$}%", x * 100.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_columns() {
+        let mut t = TextTable::new("Table X", &["Metric", "GTX1080", "TitanX"]);
+        t.row(vec!["MTNN vs NT".into(), "57.78".into(), "50.48".into()]);
+        t.row(vec!["GOW_max".into(), "1439.39".into(), "957.44".into()]);
+        let s = t.render();
+        assert!(s.contains("== Table X =="));
+        let lines: Vec<&str> = s.lines().collect();
+        // All body lines have equal length (alignment check).
+        let lens: Vec<usize> = lines[1..].iter().map(|l| l.chars().count()).collect();
+        assert!(lens.windows(2).all(|w| w[0] == w[1]), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = TextTable::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn number_formatting() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(f64::NAN, 2), "-");
+        assert_eq!(fpct(0.5403, 2), "54.03%");
+    }
+
+    #[test]
+    fn unicode_width_alignment() {
+        let mut t = TextTable::new("", &["col"]);
+        t.row(vec!["αβγ".into()]);
+        t.row(vec!["abcdef".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(
+            lines[0].chars().count(),
+            lines[2].chars().count(),
+            "greek letters should count as width 1:\n{s}"
+        );
+    }
+}

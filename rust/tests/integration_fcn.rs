@@ -1,0 +1,70 @@
+//! Integration: real FCN training through the AOT train-step artifacts —
+//! the loss must fall, and MTNN's per-layer plan must be servable.
+
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::fcn::config::e2e_config;
+use mtnn::fcn::real_trainer::{plan_artifact, select_plan, train};
+use mtnn::gemm::Algorithm;
+use mtnn::gpusim::{GTX1080, TITANX};
+use mtnn::runtime::Runtime;
+use mtnn::selector::Selector;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts — run `make artifacts`");
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime"))
+}
+
+#[test]
+fn training_reduces_loss_nt_plan() {
+    let Some(rt) = runtime() else { return };
+    let plan = vec![Algorithm::Nt; 3];
+    let report = train(&rt, &plan, 40, 7).unwrap();
+    assert_eq!(report.losses.len(), 40);
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    assert!(
+        last < first * 0.7,
+        "loss should fall clearly: {first} → {last}"
+    );
+}
+
+#[test]
+fn nt_and_tnn_plans_train_identically_in_float_tolerance() {
+    let Some(rt) = runtime() else { return };
+    let nt = train(&rt, &vec![Algorithm::Nt; 3], 10, 3).unwrap();
+    let tnn = train(&rt, &vec![Algorithm::Tnn; 3], 10, 3).unwrap();
+    for (i, (a, b)) in nt.losses.iter().zip(&tnn.losses).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-2 * (1.0 + a.abs()),
+            "step {i}: NT loss {a} vs TNN loss {b}"
+        );
+    }
+}
+
+#[test]
+fn selector_driven_mixed_plan_is_servable() {
+    let Some(rt) = runtime() else { return };
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let cfg = e2e_config();
+    for gpu in [&GTX1080, &TITANX] {
+        let plan = select_plan(&selector, gpu, &cfg, 128);
+        let artifact = plan_artifact("fcn_train", &plan);
+        assert!(
+            rt.manifest.get(&artifact).is_ok(),
+            "selected plan {artifact} missing from catalog"
+        );
+        let report = train(&rt, &plan, 5, 11).unwrap();
+        assert!(report.losses.iter().all(|l| l.is_finite()));
+    }
+}
+
+#[test]
+fn plan_arity_is_validated() {
+    let Some(rt) = runtime() else { return };
+    let err = train(&rt, &[Algorithm::Nt], 1, 1).unwrap_err().to_string();
+    assert!(err.contains("plan arity"), "{err}");
+}

@@ -1,0 +1,131 @@
+//! Integration: the full paper pipeline on the simulated plane —
+//! collect → train → cross-validate → evaluate selection quality
+//! (no PJRT required; this is the Table IV / VI / VIII machinery).
+
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
+use mtnn::gpusim::GpuSpec;
+use mtnn::ml::cv::{cross_validate, fold_stats};
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::metrics::accuracy;
+use mtnn::ml::scaler::MinMaxScaler;
+use mtnn::ml::svm::{Svm, SvmParams};
+use mtnn::ml::tree::DecisionTreeClassifier;
+use mtnn::ml::Classifier;
+use mtnn::selector::Selector;
+
+#[test]
+fn gbdt_cv_accuracy_in_paper_band() {
+    // Paper Table IV: 5-fold CV average 90.51% (range ~89–92%).
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let folds = cross_validate(&data, 5, 42, || Gbdt::new(GbdtParams::default()));
+    let (min, max, avg) = fold_stats(&folds, |a| a.total);
+    assert!(avg > 0.86 && avg < 0.99, "CV avg accuracy {avg:.4}");
+    assert!(min > 0.82, "worst fold {min:.4}");
+    assert!(max <= 1.0);
+}
+
+#[test]
+fn classifier_ordering_matches_table6() {
+    // Paper Table VI ordering: GBDT > DT > SVM-RBF > SVM-Poly. On the
+    // simulated labels GBDT and DT are within noise of each other (the
+    // paper's 2.7-point gap is data-specific — see EXPERIMENTS.md), so we
+    // assert the robust part across seeds: GBDT ≈ DT (within 2 points on
+    // average) and GBDT clearly beats the SVMs.
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let (mut sum_gbdt, mut sum_dt, mut sum_rbf) = (0.0, 0.0, 0.0);
+    let seeds = [7u64, 19, 31];
+    for &seed in &seeds {
+        let (train, test) = data.split_by_group(0.8, seed);
+
+        let mut gbdt = Gbdt::new(GbdtParams::default());
+        gbdt.fit(&train.x, &train.y);
+        sum_gbdt += accuracy(&gbdt.predict(&test.x), &test.y).total;
+
+        let mut dt = DecisionTreeClassifier::default();
+        dt.fit(&train.x, &train.y);
+        sum_dt += accuracy(&dt.predict(&test.x), &test.y).total;
+
+        let scaler = MinMaxScaler::fit(&train.x);
+        let (sx, tx) = (scaler.transform(&train.x), scaler.transform(&test.x));
+        let mut rbf = Svm::new(SvmParams::rbf());
+        rbf.fit(&sx, &train.y);
+        sum_rbf += accuracy(&rbf.predict(&tx), &test.y).total;
+    }
+    let n = seeds.len() as f64;
+    let (acc_gbdt, acc_dt, acc_rbf) = (sum_gbdt / n, sum_dt / n, sum_rbf / n);
+    assert!(
+        acc_gbdt >= acc_dt - 0.02,
+        "GBDT {acc_gbdt:.3} should be within 2pts of DT {acc_dt:.3}"
+    );
+    assert!(
+        acc_gbdt > acc_rbf,
+        "GBDT {acc_gbdt:.3} should beat SVM-RBF {acc_rbf:.3}"
+    );
+    assert!(acc_gbdt > 0.85, "GBDT holdout accuracy {acc_gbdt:.3}");
+}
+
+#[test]
+fn selection_gains_match_table8_shape() {
+    // MTNN vs always-NT improvement should be large and positive; vs
+    // always-TNN smaller but positive; LUB (loss under oracle) tiny.
+    let records = collect_paper_dataset();
+    let selector = Selector::train_default(&records);
+    let (mut gain_nt, mut gain_tnn, mut lub, mut n) = (0.0, 0.0, 0.0, 0);
+    for r in &records {
+        let gpu = GpuSpec::by_name(&r.gpu).unwrap();
+        let chosen = selector.select(gpu, r.m, r.n, r.k).0;
+        let p_mtnn = match chosen {
+            mtnn::gemm::Algorithm::Nt => r.p_nt,
+            mtnn::gemm::Algorithm::Tnn => r.p_tnn,
+            mtnn::gemm::Algorithm::Nn => unreachable!(),
+        };
+        gain_nt += (p_mtnn - r.p_nt) / r.p_nt;
+        gain_tnn += (p_mtnn - r.p_tnn) / r.p_tnn;
+        lub += (p_mtnn - r.p_nt.max(r.p_tnn)) / r.p_nt.max(r.p_tnn);
+        n += 1;
+    }
+    let (gain_nt, gain_tnn, lub) = (gain_nt / n as f64, gain_tnn / n as f64, lub / n as f64);
+    // Paper: +54.03% vs NT, +21.92% vs TNN, −0.28% LUB.
+    assert!(gain_nt > 0.15, "MTNN vs NT gain {gain_nt:.3}");
+    assert!(gain_tnn > 0.02, "MTNN vs TNN gain {gain_tnn:.3}");
+    assert!(gain_nt > gain_tnn, "NT gain should dominate TNN gain");
+    assert!(lub > -0.05 && lub <= 0.0, "LUB {lub:.4} should be tiny");
+}
+
+#[test]
+fn dataset_roundtrip_preserves_training_signal() {
+    let records = collect_paper_dataset();
+    let path = std::env::temp_dir().join("mtnn_pipeline_roundtrip.csv");
+    mtnn::dataset::save_csv(&records, &path).unwrap();
+    let back = mtnn::dataset::load_csv(&path).unwrap();
+    let d1 = to_ml_dataset(&records);
+    let d2 = to_ml_dataset(&back);
+    let mut m1 = Gbdt::new(GbdtParams::default());
+    let mut m2 = Gbdt::new(GbdtParams::default());
+    m1.fit(&d1.x, &d1.y);
+    m2.fit(&d2.x, &d2.y);
+    // Same data (modulo CSV float printing) ⇒ same predictions.
+    for row in d1.x.iter().step_by(97) {
+        assert_eq!(m1.predict_one(row), m2.predict_one(row));
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn training_size_curve_is_nondecreasing_ish() {
+    // Fig 4 shape: accuracy grows with training fraction.
+    let data = to_ml_dataset(&collect_paper_dataset());
+    let mut accs = Vec::new();
+    for pct in [10, 40, 70, 100] {
+        let (train, _) = data.split(pct as f64 / 100.0, 5);
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&train.x, &train.y);
+        let acc = accuracy(&g.predict(&data.x), &data.y).total;
+        accs.push(acc);
+    }
+    assert!(
+        accs.last().unwrap() > accs.first().unwrap(),
+        "100% training should beat 10%: {accs:?}"
+    );
+    assert!(*accs.last().unwrap() > 0.90, "full-data accuracy {accs:?}");
+}

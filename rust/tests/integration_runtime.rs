@@ -1,0 +1,166 @@
+//! Integration: the PJRT runtime executes real AOT artifacts and matches
+//! the naive CPU oracle — the Rust-side half of the L1/L2 correctness
+//! story (the Python half is pytest vs ref.py).
+//!
+//! Requires `make artifacts` (the Makefile `test` target guarantees it);
+//! tests skip loudly if the catalog is absent.
+
+use mtnn::gemm::cpu::{matmul_nn, matmul_nt, Matrix};
+use mtnn::gemm::xla::XlaBackend;
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::runtime::Runtime;
+use mtnn::testutil::assert_allclose;
+
+fn runtime() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP: no artifacts at {} — run `make artifacts`", dir.display());
+        return None;
+    }
+    Some(Runtime::new(dir).expect("runtime construction"))
+}
+
+#[test]
+fn nt_artifact_matches_cpu_oracle() {
+    let Some(rt) = runtime() else { return };
+    let a = Matrix::random(128, 128, 11);
+    let b = Matrix::random(128, 128, 22);
+    let out = rt.execute("nt_128x128x128", &[&a, &b]).unwrap();
+    assert_eq!(out.len(), 1);
+    let expect = matmul_nt(&a, &b);
+    assert_allclose(&out[0].data, &expect.data, 1e-3, 1e-3);
+}
+
+#[test]
+fn tnn_and_nt_artifacts_agree() {
+    let Some(rt) = runtime() else { return };
+    for shape in [(256u64, 512u64, 128u64), (128, 1024, 256)] {
+        let (m, n, k) = shape;
+        let a = Matrix::random(m as usize, k as usize, 1);
+        let b = Matrix::random(n as usize, k as usize, 2);
+        let nt = rt
+            .execute(&format!("nt_{m}x{n}x{k}"), &[&a, &b])
+            .unwrap();
+        let tnn = rt
+            .execute(&format!("tnn_{m}x{n}x{k}"), &[&a, &b])
+            .unwrap();
+        assert_allclose(&nt[0].data, &tnn[0].data, 1e-3, 1e-3);
+    }
+}
+
+#[test]
+fn nn_artifact_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let a = Matrix::random(256, 256, 5);
+    let b = Matrix::random(256, 256, 6);
+    let out = rt.execute("nn_256x256x256", &[&a, &b]).unwrap();
+    let expect = matmul_nn(&a, &b);
+    assert_allclose(&out[0].data, &expect.data, 1e-3, 1e-3);
+}
+
+#[test]
+fn transpose_artifact_is_exact() {
+    let Some(rt) = runtime() else { return };
+    let b = Matrix::random(128, 128, 7);
+    let out = rt.execute("transpose_128x128", &[&b]).unwrap();
+    let expect = b.transpose();
+    assert_eq!(out[0].data, expect.data, "transpose must be bit-exact");
+    assert_eq!((out[0].rows, out[0].cols), (128, 128));
+}
+
+#[test]
+fn executable_cache_hits_on_reuse() {
+    let Some(rt) = runtime() else { return };
+    let a = Matrix::random(128, 128, 1);
+    let b = Matrix::random(128, 128, 2);
+    rt.execute("nt_128x128x128", &[&a, &b]).unwrap();
+    rt.execute("nt_128x128x128", &[&a, &b]).unwrap();
+    let stats = rt.stats();
+    assert_eq!(stats.compiles, 1, "second call must reuse the executable");
+    assert!(stats.cache_hits >= 1);
+    assert_eq!(stats.executions, 2);
+}
+
+#[test]
+fn input_validation_errors_are_clear() {
+    let Some(rt) = runtime() else { return };
+    let a = Matrix::random(128, 128, 1);
+    // Wrong arity.
+    let err = rt.execute("nt_128x128x128", &[&a]).unwrap_err().to_string();
+    assert!(err.contains("expected 2 inputs"), "{err}");
+    // Wrong element count.
+    let small = Matrix::random(2, 2, 1);
+    let err = rt
+        .execute("nt_128x128x128", &[&a, &small])
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("elements"), "{err}");
+    // Unknown artifact.
+    let err = rt.execute("nope", &[&a]).unwrap_err().to_string();
+    assert!(err.contains("not in manifest"), "{err}");
+}
+
+#[test]
+fn xla_backend_catalog_and_execution() {
+    let Some(rt) = runtime() else { return };
+    let backend = XlaBackend::new(rt);
+    let shapes = backend.catalog_shapes(Algorithm::Nt);
+    assert!(shapes.contains(&GemmShape::new(512, 512, 512)));
+    assert!(backend.supports(GemmShape::new(128, 128, 128), Algorithm::Tnn));
+    assert!(!backend.supports(GemmShape::new(3, 3, 3), Algorithm::Nt));
+
+    let s = GemmShape::new(512, 512, 512);
+    let a = Matrix::random(512, 512, 3);
+    let b = Matrix::random(512, 512, 4);
+    let nt = backend.execute(s, Algorithm::Nt, &a, &b).unwrap();
+    let tnn = backend.execute(s, Algorithm::Tnn, &a, &b).unwrap();
+    assert_allclose(&nt.output.data, &tnn.output.data, 2e-3, 2e-3);
+    assert_eq!(nt.artifact, "nt_512x512x512");
+    assert!(nt.elapsed.as_nanos() > 0);
+}
+
+#[test]
+fn fcn_train_artifact_executes_and_returns_loss() {
+    let Some(rt) = runtime() else { return };
+    use mtnn::fcn::config::e2e_config;
+    use mtnn::fcn::real_trainer::{init_params, SyntheticMnist};
+    let cfg = e2e_config();
+    let params = init_params(&cfg, 1);
+    let data = SyntheticMnist::generate(128, 784, 10, 2);
+    let (x, y) = data.batch(0, 128);
+    let mut inputs: Vec<&Matrix> = params.iter().collect();
+    inputs.push(&x);
+    inputs.push(&y);
+    let outs = rt.execute("fcn_train_nt-nt-nt", &inputs).unwrap();
+    assert_eq!(outs.len(), 7); // 6 params + loss
+    let loss = outs[6].data[0];
+    assert!(loss.is_finite() && loss > 0.0, "loss {loss}");
+    // Roughly ln(10) at init for 10-way classification.
+    assert!(loss < 10.0, "loss {loss} looks broken");
+}
+
+#[test]
+fn fused_linear_relu_artifact_matches_oracle() {
+    // Extension kernel through the full AOT → PJRT path: one fused kernel
+    // computing relu(X·Wᵀ + b) for the e2e FCN's first layer shape.
+    let Some(rt) = runtime() else { return };
+    if rt.manifest.get("linrelu_128x512x784").is_err() {
+        eprintln!("SKIP: fused artifact not in catalog — rerun `make artifacts`");
+        return;
+    }
+    let x = Matrix::random(128, 784, 31);
+    let w = Matrix::random(512, 784, 32);
+    let b = Matrix::random(1, 512, 33);
+    let out = rt
+        .execute("linrelu_128x512x784", &[&x, &w, &b])
+        .unwrap();
+    // Oracle: NT product + bias broadcast + relu.
+    let mut expect = matmul_nt(&x, &w);
+    for r in 0..128 {
+        for c in 0..512 {
+            let v = expect.at(r, c) + b.at(0, c);
+            expect.set(r, c, if v > 0.0 { v } else { 0.0 });
+        }
+    }
+    assert_allclose(&out[0].data, &expect.data, 1e-3, 1e-3);
+}

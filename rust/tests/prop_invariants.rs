@@ -1,0 +1,135 @@
+//! Property-based invariants over the coordinator-side logic (selection,
+//! routing policy, simulator physics, dataset encoding) using the in-tree
+//! prop harness — the proptest-equivalent coverage of DESIGN.md §4 row 11.
+
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::gemm::cpu::{matmul_nn, matmul_nt, matmul_tnn, Matrix};
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::{Simulator, GTX1080, PAPER_GPUS, TITANX};
+use mtnn::selector::{features, SelectionReason, Selector};
+use mtnn::testutil::assert_allclose;
+use mtnn::testutil::prop::check;
+use std::sync::OnceLock;
+
+fn selector() -> &'static Selector {
+    static SEL: OnceLock<Selector> = OnceLock::new();
+    SEL.get_or_init(|| Selector::train_default(&collect_paper_dataset()))
+}
+
+#[test]
+fn prop_selection_is_deterministic_and_total() {
+    check("selection deterministic", 300, |g| {
+        let gpu = *g.choose(&PAPER_GPUS);
+        let m = g.pow2(7, 16) as u64;
+        let n = g.pow2(7, 16) as u64;
+        let k = g.pow2(7, 16) as u64;
+        let s = selector();
+        let a = s.select(gpu, m, n, k);
+        let b = s.select(gpu, m, n, k);
+        assert_eq!(a, b, "same inputs must select identically");
+        assert!(matches!(a.0, Algorithm::Nt | Algorithm::Tnn));
+    });
+}
+
+#[test]
+fn prop_tnn_selected_implies_it_fits() {
+    // The paper's safety invariant: MTNN never chooses TNN when Bᵀ
+    // cannot be allocated.
+    check("tnn implies fits", 400, |g| {
+        let gpu = *g.choose(&PAPER_GPUS);
+        let m = g.pow2(7, 16) as u64;
+        let n = g.pow2(7, 16) as u64;
+        let k = g.pow2(7, 16) as u64;
+        let (algo, reason) = selector().select(gpu, m, n, k);
+        if algo == Algorithm::Tnn {
+            assert!(
+                Simulator::tnn_workspace_bytes(m, n, k) <= gpu.global_mem_bytes(),
+                "selected TNN for {m}x{n}x{k} on {} which cannot fit",
+                gpu.name
+            );
+        }
+        if Simulator::tnn_workspace_bytes(m, n, k) > gpu.global_mem_bytes() {
+            assert_eq!(reason, SelectionReason::MemoryFallback);
+            assert_eq!(algo, Algorithm::Nt);
+        }
+    });
+}
+
+#[test]
+fn prop_simulator_times_positive_and_deterministic() {
+    check("sim times sane", 300, |g| {
+        let gpu = *g.choose(&[&GTX1080, &TITANX]);
+        let sim = Simulator::new(gpu);
+        let m = g.pow2(7, 14) as u64;
+        let n = g.pow2(7, 14) as u64;
+        let k = g.pow2(7, 14) as u64;
+        let c1 = sim.time_case(m, n, k);
+        let c2 = sim.time_case(m, n, k);
+        assert!(c1.t_nn > 0.0 && c1.t_nt > 0.0 && c1.t_tnn > 0.0);
+        assert_eq!(c1.t_tnn, c2.t_tnn, "noise must be case-keyed");
+        // TNN includes the same NN run plus nonnegative overhead.
+        assert!(c1.t_tnn > c1.t_nn, "TNN must cost more than bare NN");
+        // Label consistency with D.
+        assert_eq!(c1.label() == 1, c1.d() >= 0.0);
+    });
+}
+
+#[test]
+fn prop_perf_metric_inverts_time() {
+    check("perf inverts time", 200, |g| {
+        let m = g.pow2(7, 12) as u64;
+        let n = g.pow2(7, 12) as u64;
+        let k = g.pow2(7, 12) as u64;
+        let sim = Simulator::new(&GTX1080);
+        let c = sim.time_case(m, n, k);
+        let flops = GemmShape::new(m, n, k).flops();
+        assert!((c.p_nt - flops / c.t_nt / 1e9).abs() / c.p_nt < 1e-9);
+    });
+}
+
+#[test]
+fn prop_feature_vector_faithful() {
+    check("features faithful", 200, |g| {
+        let gpu = *g.choose(&PAPER_GPUS);
+        let m = g.i64_in(1, 1 << 20) as u64;
+        let n = g.i64_in(1, 1 << 20) as u64;
+        let k = g.i64_in(1, 1 << 20) as u64;
+        let f = features(gpu, m, n, k);
+        assert_eq!(f[5..], [m as f64, n as f64, k as f64]);
+        assert_eq!(f[..5], gpu.features());
+    });
+}
+
+#[test]
+fn prop_gemm_oracles_consistent() {
+    // NT == TNN == NN∘transpose on random small shapes (f32 tolerance).
+    check("gemm oracles consistent", 40, |g| {
+        let m = g.usize_in(1, 16);
+        let n = g.usize_in(1, 16);
+        let k = g.usize_in(1, 16);
+        let seed = g.i64_in(0, 1 << 40) as u64;
+        let a = Matrix::random(m, k, seed);
+        let b = Matrix::random(n, k, seed ^ 0xF00D);
+        let nt = matmul_nt(&a, &b);
+        let tnn = matmul_tnn(&a, &b);
+        let via_nn = matmul_nn(&a, &b.transpose());
+        assert_allclose(&nt.data, &tnn.data, 1e-4, 1e-4);
+        assert_eq!(tnn.data, via_nn.data, "TNN is literally transpose+NN");
+    });
+}
+
+#[test]
+fn prop_memory_rule_monotone() {
+    // If a case fits, any case with smaller m, n, k also fits.
+    check("memory rule monotone", 300, |g| {
+        let sim = Simulator::new(&GTX1080);
+        let m = g.pow2(7, 16) as u64;
+        let n = g.pow2(7, 16) as u64;
+        let k = g.pow2(7, 16) as u64;
+        if sim.fits(m, n, k) {
+            assert!(sim.fits(m / 2, n, k) || m == 128);
+            assert!(sim.fits(m, n / 2, k) || n == 128);
+            assert!(sim.fits(m, n, k / 2) || k == 128);
+        }
+    });
+}
