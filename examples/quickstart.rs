@@ -3,7 +3,8 @@
 //!
 //!     cargo run --release --example quickstart
 //!
-//! (Requires `make artifacts` once beforehand.)
+//! (Runs PJRT execution after `make artifacts`; falls back to the blocked
+//! native CPU backend otherwise.)
 
 use mtnn::dataset::collect_paper_dataset;
 use mtnn::gemm::cpu::{matmul_nt, Matrix};
@@ -30,38 +31,49 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // 3. Execute the selected implementation for real on the PJRT CPU
-    //    client via the AOT-compiled Pallas artifacts.
-    println!("[3/4] real execution on PJRT:");
-    let backend = XlaBackend::new(Runtime::new(Runtime::default_dir())?);
+    // 3. Execute the selected implementation for real — on the PJRT CPU
+    //    client via the AOT-compiled Pallas artifacts when the catalog
+    //    exists, otherwise on the blocked native CPU backend.
     let shape = GemmShape::new(512, 512, 512);
     let a = Matrix::random(512, 512, 1);
     let b = Matrix::random(512, 512, 2);
     let (algo, _) = selector.select(&GTX1080, shape.m, shape.n, shape.k);
-    let chosen = backend.execute(shape, algo, &a, &b)?;
-    let other = backend.execute(
-        shape,
-        if algo == Algorithm::Nt { Algorithm::Tnn } else { Algorithm::Nt },
-        &a,
-        &b,
-    )?;
-    println!(
-        "       selected {} ran in {:?} (artifact {})",
-        algo.name(),
-        chosen.elapsed,
-        chosen.artifact
-    );
-    println!(
-        "       alternative {} ran in {:?}",
-        if algo == Algorithm::Nt { "TNN" } else { "NT" },
-        other.elapsed
-    );
+    let alt = if algo == Algorithm::Nt { Algorithm::Tnn } else { Algorithm::Nt };
+    let dir = Runtime::default_dir();
+    let run_native = |which: Algorithm| {
+        let t0 = std::time::Instant::now();
+        let out = match which {
+            Algorithm::Nt => mtnn::gemm::blocked::matmul_nt(&a, &b),
+            Algorithm::Tnn => mtnn::gemm::blocked::matmul_tnn(&a, &b),
+            Algorithm::Nn => unreachable!("quickstart issues NT ops only"),
+        };
+        (out, t0.elapsed())
+    };
+    let (chosen_out, _chosen_t, other_t) = if dir.join("manifest.json").exists() {
+        println!("[3/4] real execution on PJRT:");
+        let backend = XlaBackend::new(Runtime::new(dir)?);
+        let chosen = backend.execute(shape, algo, &a, &b)?;
+        let other = backend.execute(shape, alt, &a, &b)?;
+        println!(
+            "       selected {} ran in {:?} (artifact {})",
+            algo.name(),
+            chosen.elapsed,
+            chosen.artifact
+        );
+        (chosen.output, chosen.elapsed, other.elapsed)
+    } else {
+        println!("[3/4] no PJRT artifacts — executing on the blocked native backend:");
+        let (chosen_out, chosen_t) = run_native(algo);
+        let (_, other_t) = run_native(alt);
+        println!("       selected {} ran in {chosen_t:?}", algo.name());
+        (chosen_out, chosen_t, other_t)
+    };
+    println!("       alternative {} ran in {other_t:?}", alt.name());
 
     // 4. Verify against the naive CPU oracle.
     println!("[4/4] verifying numerics against the CPU oracle…");
     let expect = matmul_nt(&a, &b);
-    let max_err = chosen
-        .output
+    let max_err = chosen_out
         .data
         .iter()
         .zip(&expect.data)

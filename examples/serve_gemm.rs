@@ -38,12 +38,22 @@ fn run_mode(
     requests: usize,
     clients: usize,
 ) -> anyhow::Result<()> {
-    let engine = Engine::spawn(Runtime::default_dir(), 128)?;
+    // PJRT when the compiled catalog exists, the blocked native backend
+    // otherwise — the example serves real numerics either way.
+    let dir = Runtime::default_dir();
+    let engine = if dir.join("manifest.json").exists() {
+        Engine::spawn(dir, 128)?
+    } else {
+        Engine::native(128)?
+    };
     let selector = Selector::train_default(&collect_paper_dataset());
     let router = Arc::new(Router::new(
         selector,
         engine.handle(),
-        RouterConfig { force },
+        RouterConfig {
+            force,
+            ..RouterConfig::default()
+        },
     ));
     // Warm the executables outside the timed window.
     engine.handle().warmup(

@@ -10,7 +10,7 @@
 
 use mtnn::dataset::collect_paper_dataset;
 use mtnn::fcn::config::e2e_config;
-use mtnn::fcn::real_trainer::{plan_artifact, select_plan, train};
+use mtnn::fcn::real_trainer::{plan_artifact, select_plan, train, train_native};
 use mtnn::gemm::Algorithm;
 use mtnn::gpusim::GTX1080;
 use mtnn::runtime::Runtime;
@@ -33,7 +33,19 @@ fn main() -> anyhow::Result<()> {
         cfg.n_params()
     );
 
-    let rt = Runtime::new(Runtime::default_dir())?;
+    // PJRT train-step artifacts when compiled, the native blocked-GEMM
+    // trainer otherwise.
+    let dir = Runtime::default_dir();
+    let rt = if dir.join("manifest.json").exists() {
+        Some(Runtime::new(dir)?)
+    } else {
+        println!("(no PJRT artifacts — training on the native blocked-GEMM backend)");
+        None
+    };
+    let run = |plan: &[Algorithm], steps: usize, seed: u64| match &rt {
+        Some(rt) => train(rt, plan, steps, seed),
+        None => train_native(plan, steps, seed),
+    };
 
     // MTNN plan: the selector picks per layer from the simulated GTX1080.
     println!("[1/3] training MTNN selector + choosing the per-layer plan…");
@@ -45,8 +57,8 @@ fn main() -> anyhow::Result<()> {
         plan_artifact("fcn_train", &plan)
     );
 
-    println!("[2/3] training with the MTNN plan on PJRT…");
-    let mtnn_report = train(&rt, &plan, steps, seed)?;
+    println!("[2/3] training with the MTNN plan…");
+    let mtnn_report = run(&plan, steps, seed)?;
     let first = mtnn_report.losses[0];
     let last = *mtnn_report.losses.last().unwrap();
     println!(
@@ -59,7 +71,7 @@ fn main() -> anyhow::Result<()> {
 
     println!("[3/3] baseline: the same training with the all-NT plan…");
     let nt_plan = vec![Algorithm::Nt; cfg.n_layers()];
-    let nt_report = train(&rt, &nt_plan, steps, seed)?;
+    let nt_report = run(&nt_plan, steps, seed)?;
     println!(
         "      all-NT plan: loss {:.4} → {:.4} ({:.2} ms/step)",
         nt_report.losses[0],

@@ -1,19 +1,30 @@
-//! Bench: hot-path microbenchmarks for the §Perf pass — predictor latency
-//! (paper: 0.005 ms), GBDT train time (paper: 7 ms), selection+dispatch
-//! overhead, and real PJRT GEMM execution times.
+//! Bench: hot-path microbenchmarks for the §Perf pass — naive vs blocked
+//! native GEMM, flat vs recursive GBDT inference, cached vs uncached
+//! routing decisions, predictor latency (paper: 0.005 ms), GBDT train time
+//! (paper: 7 ms), and GEMM serving through the coordinator (PJRT when the
+//! artifact catalog exists, the native blocked backend otherwise).
 //! Run: `cargo bench --bench perf_hotpath`.
 
 use mtnn::coordinator::{Engine, GemmRequest, Router, RouterConfig};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::experiments::emit;
 use mtnn::gemm::cpu::Matrix;
-use mtnn::gemm::GemmShape;
+use mtnn::gemm::{blocked, cpu, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
 use mtnn::runtime::Runtime;
 use mtnn::selector::{features, Selector};
-use mtnn::util::bench::{bench, bench_batched};
+use mtnn::util::bench::{bench, bench_batched, BenchResult};
+
+fn speedup_line(name: &str, slow: &BenchResult, fast: &BenchResult) -> String {
+    format!(
+        "  ↳ speedup {name}: {:.2}x (slow {:.3}ms vs fast {:.3}ms)\n",
+        slow.mean_ns() / fast.mean_ns(),
+        slow.mean_ns() / 1e6,
+        fast.mean_ns() / 1e6
+    )
+}
 
 fn main() {
     let mut report = String::from("== §Perf hot-path microbenchmarks ==\n");
@@ -21,7 +32,35 @@ fn main() {
     let data = to_ml_dataset(&records);
     let selector = Selector::train_default(&records);
 
-    // 1. GBDT training (paper Table VI: 7 ms on an i7-3820).
+    // 1. Native GEMM backend: naive oracle vs blocked/threaded kernels at
+    //    the acceptance shape 512x512x512 (NT, the paper's operation) plus
+    //    NN for the plain product.
+    let a512 = Matrix::random(512, 512, 1);
+    let b512 = Matrix::random(512, 512, 2);
+    let naive_nt = bench("gemm.naive matmul_nt 512^3 (oracle)", 1, 5, || {
+        cpu::matmul_nt(&a512, &b512)
+    });
+    report.push_str(&format!("{}\n", naive_nt.report()));
+    let blocked_nt = bench("gemm.blocked matmul_nt 512^3", 2, 10, || {
+        blocked::matmul_nt(&a512, &b512)
+    });
+    report.push_str(&format!("{}\n", blocked_nt.report()));
+    report.push_str(&speedup_line("blocked/naive NT 512^3", &naive_nt, &blocked_nt));
+    let naive_nn = bench("gemm.naive matmul_nn 512^3 (oracle)", 1, 5, || {
+        cpu::matmul_nn(&a512, &b512)
+    });
+    report.push_str(&format!("{}\n", naive_nn.report()));
+    let blocked_nn = bench("gemm.blocked matmul_nn 512^3", 2, 10, || {
+        blocked::matmul_nn(&a512, &b512)
+    });
+    report.push_str(&format!("{}\n", blocked_nn.report()));
+    report.push_str(&speedup_line("blocked/naive NN 512^3", &naive_nn, &blocked_nn));
+    let blocked_tnn = bench("gemm.blocked matmul_tnn 512^3 (Algorithm 1)", 2, 10, || {
+        blocked::matmul_tnn(&a512, &b512)
+    });
+    report.push_str(&format!("{}\n", blocked_tnn.report()));
+
+    // 2. GBDT training (paper Table VI: 7 ms on an i7-3820).
     let r = bench("gbdt.fit (full 1828-sample dataset)", 2, 10, || {
         let mut g = Gbdt::new(GbdtParams::default());
         g.fit(&data.x, &data.y);
@@ -29,58 +68,114 @@ fn main() {
     });
     report.push_str(&format!("{}\n", r.report()));
 
-    // 2. Predictor latency (paper: 0.005 ms = 5 us per call).
+    // 3. Predictor latency (paper: 0.005 ms = 5 us per call): recursive
+    //    tree walk vs the flattened SoA forest actually used in serving.
     let row = features(&GTX1080, 4096, 2048, 8192);
-    let r = bench_batched("selector.predict_label (hot path)", 10, 50, 1000, || {
+    let gbdt = selector.model.as_gbdt().expect("production model is GBDT");
+    let rec = bench_batched("gbdt.predict recursive walk", 10, 50, 1000, || {
+        gbdt.decision_function_recursive(&row)
+    });
+    report.push_str(&format!("{}\n", rec.report()));
+    let flat = bench_batched("gbdt.predict flat SoA forest", 10, 50, 1000, || {
         selector.model.predict_label(&row)
     });
-    report.push_str(&format!("{}\n", r.report()));
+    report.push_str(&format!("{}\n", flat.report()));
+    report.push_str(&speedup_line("flat/recursive predict", &rec, &flat));
 
-    // 3. Full Algorithm-2 selection incl. O(1) feature build + fallback.
-    let r = bench_batched("selector.select (features+predict+fallback)", 10, 50, 1000, || {
-        selector.select(&GTX1080, 4096, 2048, 8192)
-    });
-    report.push_str(&format!("{}\n", r.report()));
+    // 4. Full Algorithm-2 selection incl. O(1) feature build + fallback.
+    let sel_uncached = bench_batched(
+        "selector.select (features+predict+fallback)",
+        10,
+        50,
+        1000,
+        || selector.select(&GTX1080, 4096, 2048, 8192),
+    );
+    report.push_str(&format!("{}\n", sel_uncached.report()));
 
-    // 4. Simulated case timing (drives the experiment sweeps).
+    // 5. Routing decisions: uncached Algorithm 2 vs the shape-keyed
+    //    decision cache (the steady-state FCN-training configuration).
+    {
+        let engine = Engine::native(16).expect("native engine");
+        let req = GemmRequest {
+            gpu: &GTX1080,
+            shape: GemmShape::new(4096, 2048, 8192),
+            a: Matrix::zeros(1, 1), // decide() reads only gpu + shape
+            b: Matrix::zeros(1, 1),
+        };
+        let uncached_router = Router::new(
+            Selector::train_default(&records),
+            engine.handle(),
+            RouterConfig {
+                cache_decisions: false,
+                ..RouterConfig::default()
+            },
+        );
+        let dec_uncached = bench_batched("router.decide uncached", 10, 50, 1000, || {
+            uncached_router.decide(&req)
+        });
+        report.push_str(&format!("{}\n", dec_uncached.report()));
+        let cached_router = Router::new(
+            Selector::train_default(&records),
+            engine.handle(),
+            RouterConfig::default(),
+        );
+        cached_router.decide(&req); // warm the single hot entry
+        let dec_cached = bench_batched("router.decide cached (shape-keyed)", 10, 50, 1000, || {
+            cached_router.decide(&req)
+        });
+        report.push_str(&format!("{}\n", dec_cached.report()));
+        report.push_str(&speedup_line(
+            "cached/uncached selector.select",
+            &dec_uncached,
+            &dec_cached,
+        ));
+        engine.shutdown();
+    }
+
+    // 6. Simulated case timing (drives the experiment sweeps).
     let sim = Simulator::new(&GTX1080);
     let r = bench_batched("gpusim.time_case", 10, 50, 1000, || {
         sim.time_case(2048, 2048, 2048)
     });
     report.push_str(&format!("{}\n", r.report()));
 
-    // 5. Real PJRT GEMM execution + coordinator dispatch overhead.
+    // 7. GEMM serving through the coordinator: PJRT when the compiled
+    //    catalog exists, otherwise the native blocked backend (same
+    //    router/engine path, so dispatch overhead is measured either way).
     let dir = Runtime::default_dir();
-    if dir.join("manifest.json").exists() {
-        let engine = Engine::spawn(dir, 64).expect("engine");
-        engine
-            .handle()
-            .warmup(&["nt_128x128x128".into(), "nt_512x512x512".into()])
-            .unwrap();
-        let router = Router::new(selector, engine.handle(), RouterConfig::default());
-        for (m, n, k) in [(128u64, 128u64, 128u64), (512, 512, 512)] {
-            let a = Matrix::random(m as usize, k as usize, 1);
-            let b = Matrix::random(n as usize, k as usize, 2);
-            let r = bench(&format!("router.serve NT {m}x{n}x{k} (PJRT)"), 3, 15, || {
-                router
-                    .serve(GemmRequest {
-                        gpu: &GTX1080,
-                        shape: GemmShape::new(m, n, k),
-                        a: a.clone(),
-                        b: b.clone(),
-                    })
-                    .unwrap()
-            });
-            report.push_str(&format!("{}\n", r.report()));
-        }
-        report.push_str(&format!(
-            "coordinator metrics: {}\n",
-            router.metrics.snapshot().render()
-        ));
-        engine.shutdown();
+    let pjrt = dir.join("manifest.json").exists();
+    let engine = if pjrt {
+        Engine::spawn(dir, 64).expect("engine")
     } else {
-        report.push_str("(PJRT rows skipped: run `make artifacts` first)\n");
+        report.push_str("(no PJRT artifacts — serving rows use the native blocked backend)\n");
+        Engine::native(64).expect("native engine")
+    };
+    engine
+        .handle()
+        .warmup(&["nt_128x128x128".into(), "nt_512x512x512".into()])
+        .unwrap();
+    let router = Router::new(selector, engine.handle(), RouterConfig::default());
+    let backend = if pjrt { "PJRT" } else { "native" };
+    for (m, n, k) in [(128u64, 128u64, 128u64), (512, 512, 512)] {
+        let a = Matrix::random(m as usize, k as usize, 1);
+        let b = Matrix::random(n as usize, k as usize, 2);
+        let r = bench(&format!("router.serve NT {m}x{n}x{k} ({backend})"), 3, 15, || {
+            router
+                .serve(GemmRequest {
+                    gpu: &GTX1080,
+                    shape: GemmShape::new(m, n, k),
+                    a: a.clone(),
+                    b: b.clone(),
+                })
+                .unwrap()
+        });
+        report.push_str(&format!("{}\n", r.report()));
     }
+    report.push_str(&format!(
+        "coordinator metrics: {}\n",
+        router.metrics.snapshot().render()
+    ));
+    engine.shutdown();
 
     emit("perf_hotpath.txt", &report);
 }

@@ -1,9 +1,18 @@
-//! The execution engine: a dedicated thread owning the PJRT [`Runtime`]
-//! (the `xla` crate's client is `Rc`-based and therefore `!Send`), fed by
-//! a bounded command channel. Batches submitted together are executed
-//! back-to-back, amortizing dispatch.
+//! The execution engine: a dedicated thread owning the execution backend,
+//! fed by a bounded command channel. Batches submitted together are
+//! executed back-to-back, amortizing dispatch.
+//!
+//! Two backends share the same engine loop and handle type:
+//!
+//! * **PJRT** ([`Engine::spawn`]) — the `xla` crate's client is `Rc`-based
+//!   and therefore `!Send`, hence a dedicated thread rather than a pool;
+//! * **native** ([`Engine::native`]) — the blocked CPU kernels from
+//!   [`crate::gemm::blocked`] via [`NativeExecutor`]; no artifact catalog
+//!   required, so the coordinator serves real numerics even without
+//!   `make artifacts`.
 
 use crate::gemm::cpu::Matrix;
+use crate::gemm::native::NativeExecutor;
 use crate::runtime::Runtime;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -20,6 +29,29 @@ enum Cmd {
     /// Eagerly compile artifacts.
     Warmup(Vec<String>, mpsc::Sender<anyhow::Result<()>>),
     Shutdown,
+}
+
+/// What actually executes artifacts on the engine thread.
+enum Backend {
+    Pjrt(Runtime),
+    Native(NativeExecutor),
+}
+
+impl Backend {
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        match self {
+            Backend::Pjrt(rt) => rt.execute(artifact, inputs),
+            Backend::Native(nx) => nx.execute(artifact, inputs),
+        }
+    }
+
+    fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        match self {
+            Backend::Pjrt(rt) => rt.warmup(names),
+            // Native kernels have no compile step.
+            Backend::Native(_) => Ok(()),
+        }
+    }
 }
 
 /// Cloneable, thread-safe handle to the engine.
@@ -53,7 +85,7 @@ impl EngineHandle {
             .map_err(|_| anyhow::anyhow!("engine dropped the response"))?
     }
 
-    /// Compile artifacts ahead of traffic.
+    /// Compile artifacts ahead of traffic (no-op on the native backend).
     pub fn warmup(&self, names: &[String]) -> anyhow::Result<()> {
         let (tx, rx) = mpsc::channel();
         self.tx
@@ -64,16 +96,35 @@ impl EngineHandle {
     }
 }
 
-/// The engine: spawn with an artifact dir, drop (or call shutdown) to stop.
+/// The engine: spawn with an artifact dir (PJRT) or [`Engine::native`],
+/// drop (or call shutdown) to stop.
 pub struct Engine {
     handle: EngineHandle,
     join: Option<JoinHandle<()>>,
     tx: mpsc::SyncSender<Cmd>,
 }
 
+fn engine_loop(backend: Backend, rx: mpsc::Receiver<Cmd>) {
+    while let Ok(cmd) = rx.recv() {
+        match cmd {
+            Cmd::Run(job) => {
+                let refs: Vec<&Matrix> = job.inputs.iter().collect();
+                let result = backend.execute(&job.artifact, &refs);
+                // Receiver may have given up; that's fine.
+                let _ = job.respond.send(result);
+            }
+            Cmd::Warmup(names, ack) => {
+                let refs: Vec<&str> = names.iter().map(String::as_str).collect();
+                let _ = ack.send(backend.warmup(&refs));
+            }
+            Cmd::Shutdown => break,
+        }
+    }
+}
+
 impl Engine {
-    /// Spawn the engine thread. `queue_depth` bounds the command channel —
-    /// the backpressure surface of the whole coordinator.
+    /// Spawn the PJRT engine thread. `queue_depth` bounds the command
+    /// channel — the backpressure surface of the whole coordinator.
     pub fn spawn(artifact_dir: std::path::PathBuf, queue_depth: usize) -> anyhow::Result<Engine> {
         let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
         // Fail fast on a bad artifact dir: probe the manifest on the caller
@@ -94,25 +145,26 @@ impl Engine {
                         return;
                     }
                 };
-                while let Ok(cmd) = rx.recv() {
-                    match cmd {
-                        Cmd::Run(job) => {
-                            let refs: Vec<&Matrix> = job.inputs.iter().collect();
-                            let result = rt.execute(&job.artifact, &refs);
-                            // Receiver may have given up; that's fine.
-                            let _ = job.respond.send(result);
-                        }
-                        Cmd::Warmup(names, ack) => {
-                            let refs: Vec<&str> = names.iter().map(String::as_str).collect();
-                            let _ = ack.send(rt.warmup(&refs));
-                        }
-                        Cmd::Shutdown => break,
-                    }
-                }
+                engine_loop(Backend::Pjrt(rt), rx);
             })?;
         ready_rx
             .recv()
             .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
+        let handle = EngineHandle { tx: tx.clone() };
+        Ok(Engine {
+            handle,
+            join: Some(join),
+            tx,
+        })
+    }
+
+    /// Spawn the native engine thread: blocked CPU kernels, no artifact
+    /// catalog. The default backend when PJRT artifacts are absent.
+    pub fn native(queue_depth: usize) -> anyhow::Result<Engine> {
+        let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
+        let join = std::thread::Builder::new()
+            .name("mtnn-engine-native".into())
+            .spawn(move || engine_loop(Backend::Native(NativeExecutor), rx))?;
         let handle = EngineHandle { tx: tx.clone() };
         Ok(Engine {
             handle,
@@ -140,5 +192,50 @@ impl Drop for Engine {
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu::matmul_nt;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn native_engine_serves_gemm_jobs() {
+        let engine = Engine::native(16).unwrap();
+        let a = Matrix::random(32, 48, 1);
+        let b = Matrix::random(24, 48, 2);
+        let expect = matmul_nt(&a, &b);
+        let out = engine
+            .handle()
+            .run("nt_32x24x48", vec![a, b])
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn native_engine_warmup_is_noop_ok() {
+        let engine = Engine::native(4).unwrap();
+        engine
+            .handle()
+            .warmup(&["nt_128x128x128".to_string()])
+            .unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn native_engine_propagates_errors() {
+        let engine = Engine::native(4).unwrap();
+        let a = Matrix::zeros(2, 2);
+        let err = engine
+            .handle()
+            .run("fcn_train_nt-nt-nt", vec![a])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("native backend"), "{err}");
+        engine.shutdown();
     }
 }

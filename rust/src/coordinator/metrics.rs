@@ -1,6 +1,7 @@
 //! Coordinator metrics: selection counts, fallbacks, latency distribution,
 //! throughput. Lock-free-enough (atomics + a mutex-guarded latency buffer).
 
+use crate::selector::SelectionReason;
 use crate::util::stats::percentile;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -14,6 +15,11 @@ pub struct CoordinatorMetrics {
     pub selected_nt: AtomicU64,
     pub selected_tnn: AtomicU64,
     pub memory_fallbacks: AtomicU64,
+    /// Selections dictated by `RouterConfig::force` (MTNN bypassed).
+    /// Forced traffic still counts toward the per-algorithm NT/TNN split
+    /// (those are execution counts); this counter is what lets a reader
+    /// tell a forced baseline run from genuine MTNN predictions.
+    pub forced: AtomicU64,
     latencies_us: Mutex<Vec<f64>>,
 }
 
@@ -26,6 +32,7 @@ pub struct MetricsSnapshot {
     pub selected_nt: u64,
     pub selected_tnn: u64,
     pub memory_fallbacks: u64,
+    pub forced: u64,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -33,14 +40,20 @@ pub struct MetricsSnapshot {
 }
 
 impl CoordinatorMetrics {
-    pub fn record_selection(&self, algo: crate::gemm::Algorithm, fallback: bool) {
+    pub fn record_selection(&self, algo: crate::gemm::Algorithm, reason: SelectionReason) {
         match algo {
             crate::gemm::Algorithm::Nt => self.selected_nt.fetch_add(1, Ordering::Relaxed),
             crate::gemm::Algorithm::Tnn => self.selected_tnn.fetch_add(1, Ordering::Relaxed),
             crate::gemm::Algorithm::Nn => 0,
         };
-        if fallback {
-            self.memory_fallbacks.fetch_add(1, Ordering::Relaxed);
+        match reason {
+            SelectionReason::MemoryFallback => {
+                self.memory_fallbacks.fetch_add(1, Ordering::Relaxed);
+            }
+            SelectionReason::Forced => {
+                self.forced.fetch_add(1, Ordering::Relaxed);
+            }
+            SelectionReason::PredictedNt | SelectionReason::PredictedTnn => {}
         }
     }
 
@@ -62,6 +75,7 @@ impl CoordinatorMetrics {
             selected_nt: self.selected_nt.load(Ordering::Relaxed),
             selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
             memory_fallbacks: self.memory_fallbacks.load(Ordering::Relaxed),
+            forced: self.forced.load(Ordering::Relaxed),
             p50_us: percentile(&lat, 50.0),
             p95_us: percentile(&lat, 95.0),
             p99_us: percentile(&lat, 99.0),
@@ -73,7 +87,7 @@ impl CoordinatorMetrics {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} completed={} failed={} | NT={} TNN={} fallback={} | \
+            "requests={} completed={} failed={} | NT={} TNN={} fallback={} forced={} | \
              latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
             self.requests,
             self.completed,
@@ -81,6 +95,7 @@ impl MetricsSnapshot {
             self.selected_nt,
             self.selected_tnn,
             self.memory_fallbacks,
+            self.forced,
             self.p50_us,
             self.p95_us,
             self.p99_us,
@@ -97,13 +112,28 @@ mod tests {
     #[test]
     fn selection_counters() {
         let m = CoordinatorMetrics::default();
-        m.record_selection(Algorithm::Nt, false);
-        m.record_selection(Algorithm::Tnn, false);
-        m.record_selection(Algorithm::Nt, true);
+        m.record_selection(Algorithm::Nt, SelectionReason::PredictedNt);
+        m.record_selection(Algorithm::Tnn, SelectionReason::PredictedTnn);
+        m.record_selection(Algorithm::Nt, SelectionReason::MemoryFallback);
         let s = m.snapshot();
         assert_eq!(s.selected_nt, 2);
         assert_eq!(s.selected_tnn, 1);
         assert_eq!(s.memory_fallbacks, 1);
+        assert_eq!(s.forced, 0);
+    }
+
+    #[test]
+    fn forced_selections_counted_separately() {
+        let m = CoordinatorMetrics::default();
+        m.record_selection(Algorithm::Tnn, SelectionReason::Forced);
+        m.record_selection(Algorithm::Nt, SelectionReason::Forced);
+        let s = m.snapshot();
+        assert_eq!(s.forced, 2);
+        assert_eq!(s.memory_fallbacks, 0);
+        // Forced traffic still counts toward the per-algorithm split.
+        assert_eq!(s.selected_nt, 1);
+        assert_eq!(s.selected_tnn, 1);
+        assert!(s.render().contains("forced=2"), "{}", s.render());
     }
 
     #[test]

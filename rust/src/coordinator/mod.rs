@@ -9,13 +9,19 @@
 //!               bounded queue ──► Batcher (groups by artifact)
 //!                                     │
 //!                                     ▼
-//!                             Engine thread (owns the PJRT Runtime,
-//!                             which is Rc-based and !Send — hence a
-//!                             dedicated thread, not a pool)
+//!                             Engine thread (owns the backend: the PJRT
+//!                             Runtime — Rc-based and !Send, hence a
+//!                             dedicated thread, not a pool — or the
+//!                             native blocked-GEMM executor when no
+//!                             artifact catalog is present)
 //! ```
 //!
 //! Responses travel back through per-request channels; metrics count
-//! selections, fallbacks, batching efficiency and latency percentiles.
+//! selections, fallbacks, forced overrides, batching efficiency and
+//! latency percentiles. Routing decisions are memoized per
+//! `(gpu, m, n, k)` in a lock-free shape-keyed cache
+//! ([`crate::selector::cache::DecisionCache`]), so steady-state traffic
+//! pays a table lookup instead of a GBDT descent.
 
 pub mod engine;
 pub mod metrics;

@@ -10,6 +10,7 @@ use crate::gemm::cpu::Matrix;
 use crate::gemm::xla::XlaBackend;
 use crate::gemm::{Algorithm, GemmShape};
 use crate::gpusim::GpuSpec;
+use crate::selector::cache::DecisionCache;
 use crate::selector::{SelectionReason, Selector};
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -40,11 +41,19 @@ pub struct GemmResponse {
 pub struct RouterConfig {
     /// Force a fixed algorithm instead of MTNN (baseline modes).
     pub force: Option<Algorithm>,
+    /// Memoize decisions by `(gpu, m, n, k)` — steady-state traffic
+    /// (FCN training re-issues identical shapes every iteration) then
+    /// pays a lock-free table lookup instead of a GBDT descent. On by
+    /// default; disable for selection microbenchmarks.
+    pub cache_decisions: bool,
 }
 
 impl Default for RouterConfig {
     fn default() -> Self {
-        RouterConfig { force: None }
+        RouterConfig {
+            force: None,
+            cache_decisions: true,
+        }
     }
 }
 
@@ -54,6 +63,7 @@ pub struct Router {
     engine: EngineHandle,
     pub metrics: Arc<CoordinatorMetrics>,
     config: RouterConfig,
+    cache: DecisionCache,
 }
 
 impl Router {
@@ -63,16 +73,27 @@ impl Router {
             engine,
             metrics: Arc::new(CoordinatorMetrics::default()),
             config,
+            cache: DecisionCache::default(),
         }
     }
 
-    /// Decide the algorithm for a request (Algorithm 2 + config override).
+    /// Decide the algorithm for a request (Algorithm 2 + config override),
+    /// memoized by shape when `cache_decisions` is on. Selection is
+    /// deterministic, so caching is transparent.
     pub fn decide(&self, req: &GemmRequest) -> (Algorithm, SelectionReason) {
         if let Some(forced) = self.config.force {
-            return (forced, SelectionReason::PredictedNt);
+            return (forced, SelectionReason::Forced);
         }
         let GemmShape { m, n, k } = req.shape;
-        self.selector.select(req.gpu, m, n, k)
+        if !self.config.cache_decisions {
+            return self.selector.select(req.gpu, m, n, k);
+        }
+        if let Some(hit) = self.cache.get(req.gpu, m, n, k) {
+            return hit;
+        }
+        let dec = self.selector.select(req.gpu, m, n, k);
+        self.cache.insert(req.gpu, m, n, k, dec);
+        dec
     }
 
     /// Serve one request synchronously.
@@ -82,8 +103,7 @@ impl Router {
             .requests
             .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let (algo, reason) = self.decide(&req);
-        self.metrics
-            .record_selection(algo, reason == SelectionReason::MemoryFallback);
+        self.metrics.record_selection(algo, reason);
         let artifact = XlaBackend::artifact_name(req.shape, algo);
         let result = self.engine.run(&artifact, vec![req.a, req.b]);
         match result {
@@ -126,8 +146,7 @@ impl Router {
                     .requests
                     .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
                 let (algo, reason) = self.decide(&r);
-                self.metrics
-                    .record_selection(algo, reason == SelectionReason::MemoryFallback);
+                self.metrics.record_selection(algo, reason);
                 let artifact = XlaBackend::artifact_name(r.shape, algo);
                 (i, r, algo, reason, artifact)
             })
@@ -195,10 +214,99 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Engine;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gemm::cpu::matmul_nt;
+    use crate::gpusim::GTX1080;
+    use crate::testutil::assert_allclose;
+
+    fn native_router(config: RouterConfig) -> (Engine, Router) {
+        let engine = Engine::native(32).unwrap();
+        let selector = Selector::train_default(&collect_paper_dataset());
+        let router = Router::new(selector, engine.handle(), config);
+        (engine, router)
+    }
+
+    fn request(m: u64, n: u64, k: u64, seed: u64) -> GemmRequest {
+        GemmRequest {
+            gpu: &GTX1080,
+            shape: GemmShape::new(m, n, k),
+            a: Matrix::random(m as usize, k as usize, seed),
+            b: Matrix::random(n as usize, k as usize, seed ^ 0xBEEF),
+        }
+    }
 
     #[test]
-    fn default_config_uses_selector() {
+    fn default_config_uses_selector_with_caching() {
         let c = RouterConfig::default();
         assert!(c.force.is_none());
+        assert!(c.cache_decisions);
+    }
+
+    #[test]
+    fn forced_algorithms_report_forced_reason() {
+        let (engine, router) = native_router(RouterConfig {
+            force: Some(Algorithm::Tnn),
+            ..RouterConfig::default()
+        });
+        let req = request(16, 16, 16, 1);
+        let expect = matmul_nt(&req.a, &req.b);
+        let resp = router.serve(req).unwrap();
+        assert_eq!(resp.algorithm, Algorithm::Tnn);
+        assert_eq!(resp.reason, SelectionReason::Forced);
+        assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.forced, 1);
+        assert_eq!(snap.memory_fallbacks, 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn cached_and_uncached_decisions_agree() {
+        let (engine, cached) = native_router(RouterConfig::default());
+        let (engine2, uncached) = native_router(RouterConfig {
+            cache_decisions: false,
+            ..RouterConfig::default()
+        });
+        for &(m, n, k) in &[(128u64, 128u64, 128u64), (512, 256, 1024), (128, 128, 128)] {
+            let a = cached.decide(&request(m, n, k, 3));
+            let b = uncached.decide(&request(m, n, k, 3));
+            assert_eq!(a, b, "shape {m}x{n}x{k}");
+            // Second decide hits the cache and must still agree.
+            assert_eq!(cached.decide(&request(m, n, k, 4)), a);
+        }
+        engine.shutdown();
+        engine2.shutdown();
+    }
+
+    #[test]
+    fn native_serve_matches_oracle_end_to_end() {
+        let (engine, router) = native_router(RouterConfig::default());
+        let req = request(64, 32, 48, 7);
+        let expect = matmul_nt(&req.a, &req.b);
+        let resp = router.serve(req).unwrap();
+        assert!(matches!(resp.algorithm, Algorithm::Nt | Algorithm::Tnn));
+        assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        assert_eq!(router.metrics.snapshot().completed, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn native_serve_batch_keeps_submission_order() {
+        let (engine, router) = native_router(RouterConfig::default());
+        let shapes = [(16u64, 16u64, 16u64), (32, 32, 32), (16, 16, 16), (8, 24, 40)];
+        let reqs: Vec<GemmRequest> = shapes
+            .iter()
+            .enumerate()
+            .map(|(i, &(m, n, k))| request(m, n, k, i as u64))
+            .collect();
+        let expects: Vec<Matrix> = reqs.iter().map(|r| matmul_nt(&r.a, &r.b)).collect();
+        let resps = router.serve_batch(reqs);
+        assert_eq!(resps.len(), shapes.len());
+        for (i, (resp, expect)) in resps.into_iter().zip(&expects).enumerate() {
+            let resp = resp.unwrap_or_else(|e| panic!("request {i}: {e}"));
+            assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        }
+        engine.shutdown();
     }
 }

@@ -1,0 +1,355 @@
+//! Cache-blocked, multi-threaded native GEMM — the high-performance CPU
+//! execution backend of the GEMM service.
+//!
+//! # Tiling scheme
+//!
+//! The classic three-level blocking (Goto & van de Geijn):
+//!
+//! * **NC** columns of `C`/`B` per outer block — bounds the packed B panel;
+//! * **KC** depth per block — the panel `bp` is `KC × NC` f32 (256 KiB),
+//!   sized to live in L2 while it is reused by every row block;
+//! * **MC** rows of `A` per block — the stripe of `A` touched per panel
+//!   stays L1/L2-resident;
+//! * **MR** register rows — the micro-kernel keeps `MR × NC` accumulators
+//!   on the stack and streams one packed B row against MR broadcast A
+//!   elements, which the compiler auto-vectorizes over the `j` axis.
+//!
+//! On top, [`std::thread::scope`] splits `C` into disjoint row stripes, one
+//! per core (row-block parallelism; no synchronization in the hot loop).
+//!
+//! # Why this mirrors the paper's NT vs TNN argument
+//!
+//! The paper's §IV observation is that `C = A × Bᵀ` has two implementations
+//! whose relative speed is a *memory-access-pattern* question: the direct
+//! NT kernel reads `B` with a transposed access pattern, while Algorithm 1
+//! (TNN) pays an out-of-place transpose once to make every subsequent read
+//! sequential. The packed-panel design here is the CPU analogue: for
+//! [`matmul_nt`] the packing step itself performs the transposed gather
+//! (`bp[l][j] = B[j][l]`) on a panel-sized working set, while
+//! [`matmul_tnn`] materializes `Bᵀ` with a tiled out-of-place
+//! [`transpose`] — exactly Algorithm 1 — and then runs the sequential-read
+//! NN kernel. Both routes feed bit-identical packed panels to the same
+//! micro-kernel, so their outputs are bit-identical; what differs is where
+//! the transposed traffic happens, which is the effect MTNN learns to
+//! predict on GPUs.
+//!
+//! Everything is validated against the naive [`super::cpu`] oracle (see the
+//! tests and `rust/tests/prop_invariants.rs`).
+
+use super::cpu::Matrix;
+
+/// Rows of A per cache block.
+const MC: usize = 64;
+/// Shared dimension per cache block.
+const KC: usize = 256;
+/// Columns of C per cache block (also the packed-panel width).
+const NC: usize = 256;
+/// Register-blocked rows per micro-kernel invocation.
+const MR: usize = 4;
+
+/// How the B operand is stored relative to the logical `k × n` operand the
+/// kernel consumes.
+#[derive(Debug, Clone, Copy)]
+enum BLayout {
+    /// B is stored row-major `k × n` — plain NN.
+    KxN,
+    /// B is stored row-major `n × k`; the packing step transposes panels
+    /// on the fly — the direct NT access pattern.
+    NxK,
+}
+
+/// `C[m,n] = A[m,k] × B[k,n]` — blocked, packed, multi-threaded.
+pub fn matmul_nn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.rows, "NN inner-dim mismatch");
+    let (m, k, n) = (a.rows, a.cols, b.cols);
+    let mut c = Matrix::zeros(m, n);
+    gemm(&a.data, &b.data, BLayout::KxN, &mut c.data, m, k, n, auto_threads(m, n, k));
+    c
+}
+
+/// `C[m,n] = A[m,k] × B[n,k]ᵀ` — the paper's direct NT call: no transpose
+/// is materialized; the packing step gathers B panels transposed.
+pub fn matmul_nt(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "NT inner-dim mismatch (B is n×k)");
+    let (m, k, n) = (a.rows, a.cols, b.rows);
+    let mut c = Matrix::zeros(m, n);
+    gemm(&a.data, &b.data, BLayout::NxK, &mut c.data, m, k, n, auto_threads(m, n, k));
+    c
+}
+
+/// `C[m,n] = A[m,k] × B[n,k]ᵀ` via the paper's Algorithm 1: materialize
+/// `Bᵀ` with a tiled out-of-place [`transpose`], then run the NN kernel.
+/// Bit-identical to [`matmul_nt`] (both feed the same packed panels to the
+/// same micro-kernel); only the location of the transposed traffic differs.
+pub fn matmul_tnn(a: &Matrix, b: &Matrix) -> Matrix {
+    assert_eq!(a.cols, b.cols, "NT inner-dim mismatch (B is n×k)");
+    let bt = transpose(b);
+    matmul_nn(a, &bt)
+}
+
+/// Tiled out-of-place transpose (the CPU analogue of the paper's
+/// Algorithm 1 transpose kernel). Bit-identical to [`Matrix::transpose`];
+/// the 32×32 tiling keeps both source rows and destination columns within
+/// cache lines instead of striding the full matrix.
+pub fn transpose(src: &Matrix) -> Matrix {
+    const TB: usize = 32;
+    let (r, c) = (src.rows, src.cols);
+    let mut out = Matrix::zeros(c, r);
+    for i0 in (0..r).step_by(TB) {
+        let i_end = (i0 + TB).min(r);
+        for j0 in (0..c).step_by(TB) {
+            let j_end = (j0 + TB).min(c);
+            for i in i0..i_end {
+                let row = &src.data[i * c..(i + 1) * c];
+                for j in j0..j_end {
+                    out.data[j * r + i] = row[j];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Pick a thread count: one stripe per core, but never more threads than
+/// rows, and stay single-threaded below ~2 MFLOP where spawn overhead
+/// would dominate.
+fn auto_threads(m: usize, n: usize, k: usize) -> usize {
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    if flops < 2e6 {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1)
+        .min(m.max(1))
+}
+
+/// Full blocked GEMM: accumulate `A × B` into `c` (which must be zeroed),
+/// splitting row stripes across `threads` scoped threads. Per-row results
+/// are independent of the stripe partition, so outputs are deterministic
+/// for any thread count.
+fn gemm(a: &[f32], b: &[f32], layout: BLayout, c: &mut [f32], m: usize, k: usize, n: usize, threads: usize) {
+    if m == 0 || n == 0 || k == 0 {
+        return; // zero-sized product: c stays all-zero
+    }
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(c.len(), m * n);
+    if threads <= 1 {
+        gemm_stripe(a, b, layout, c, m, k, n);
+        return;
+    }
+    let rows_per = (m + threads - 1) / threads;
+    std::thread::scope(|s| {
+        for (ti, c_chunk) in c.chunks_mut(rows_per * n).enumerate() {
+            let row0 = ti * rows_per;
+            let rows = c_chunk.len() / n;
+            let a_stripe = &a[row0 * k..(row0 + rows) * k];
+            s.spawn(move || gemm_stripe(a_stripe, b, layout, c_chunk, rows, k, n));
+        }
+    });
+}
+
+/// One row stripe: the three-level blocked loop with B-panel packing.
+fn gemm_stripe(a: &[f32], b: &[f32], layout: BLayout, c: &mut [f32], m: usize, k: usize, n: usize) {
+    let mut bp = vec![0.0f32; KC.min(k) * NC.min(n)];
+    for j0 in (0..n).step_by(NC) {
+        let nb = NC.min(n - j0);
+        for l0 in (0..k).step_by(KC) {
+            let kb = KC.min(k - l0);
+            pack_b(b, layout, l0, j0, kb, nb, k, n, &mut bp);
+            for i0 in (0..m).step_by(MC) {
+                let mb = MC.min(m - i0);
+                micro_kernel(a, k, &bp, c, n, i0, mb, l0, kb, j0, nb);
+            }
+        }
+    }
+}
+
+/// Pack the `kb × nb` panel of the logical `k × n` B operand starting at
+/// `(l0, j0)` into `bp`, row-major. For [`BLayout::NxK`] this is where the
+/// transposed gather happens (panel-sized, so the strided reads stay cache
+/// resident) — the NT memory-access pattern.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(b: &[f32], layout: BLayout, l0: usize, j0: usize, kb: usize, nb: usize, k: usize, n: usize, bp: &mut [f32]) {
+    match layout {
+        BLayout::KxN => {
+            for l in 0..kb {
+                let src = &b[(l0 + l) * n + j0..(l0 + l) * n + j0 + nb];
+                bp[l * nb..l * nb + nb].copy_from_slice(src);
+            }
+        }
+        BLayout::NxK => {
+            // B row j is contiguous in l: read sequentially, scatter into
+            // the panel columns.
+            for j in 0..nb {
+                let src = &b[(j0 + j) * k + l0..(j0 + j) * k + l0 + kb];
+                for (l, &v) in src.iter().enumerate() {
+                    bp[l * nb + j] = v;
+                }
+            }
+        }
+    }
+}
+
+/// Register-blocked micro-kernel: MR rows of A against the packed panel,
+/// accumulating into stack-resident `MR × NC` buffers before a single
+/// write-back pass into C.
+#[allow(clippy::too_many_arguments)]
+fn micro_kernel(
+    a: &[f32],
+    lda: usize,
+    bp: &[f32],
+    c: &mut [f32],
+    ldc: usize,
+    i0: usize,
+    mb: usize,
+    l0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+) {
+    let mut acc = [[0.0f32; NC]; MR];
+    let mut i = 0;
+    while i < mb {
+        let rows = MR.min(mb - i);
+        for accr in acc.iter_mut().take(rows) {
+            accr[..nb].fill(0.0);
+        }
+        for l in 0..kb {
+            let brow = &bp[l * nb..l * nb + nb];
+            for (r, accr) in acc.iter_mut().enumerate().take(rows) {
+                let av = a[(i0 + i + r) * lda + l0 + l];
+                for (dst, &bv) in accr[..nb].iter_mut().zip(brow) {
+                    *dst += av * bv;
+                }
+            }
+        }
+        for (r, accr) in acc.iter().enumerate().take(rows) {
+            let base = (i0 + i + r) * ldc + j0;
+            let crow = &mut c[base..base + nb];
+            for (dst, &v) in crow.iter_mut().zip(&accr[..nb]) {
+                *dst += v;
+            }
+        }
+        i += rows;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::testutil::assert_allclose;
+    use crate::testutil::prop::check;
+
+    #[test]
+    fn known_product() {
+        let a = Matrix::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Matrix::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(matmul_nn(&a, &b).data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn unit_case_exact() {
+        let a = Matrix::from_vec(1, 1, vec![3.0]);
+        let b = Matrix::from_vec(1, 1, vec![-2.0]);
+        assert_eq!(matmul_nn(&a, &b).data, vec![-6.0]);
+        assert_eq!(matmul_nt(&a, &b).data, vec![-6.0]);
+        assert_eq!(matmul_tnn(&a, &b).data, vec![-6.0]);
+    }
+
+    #[test]
+    fn degenerate_and_prime_shapes_match_oracle() {
+        // 1×N, N×1, odd/prime dims — the shapes where blocking remainders
+        // do all the work.
+        for &(m, n, k) in &[
+            (1usize, 17usize, 5usize),
+            (17, 1, 5),
+            (5, 17, 1),
+            (7, 13, 31),
+            (31, 7, 13),
+            (1, 1, 29),
+            (3, 3, 3),
+        ] {
+            let a = Matrix::random(m, k, (m * 100 + n * 10 + k) as u64);
+            let b_nn = Matrix::random(k, n, 99);
+            let b_nt = Matrix::random(n, k, 77);
+            assert_allclose(&matmul_nn(&a, &b_nn).data, &cpu::matmul_nn(&a, &b_nn).data, 1e-4, 1e-4);
+            assert_allclose(&matmul_nt(&a, &b_nt).data, &cpu::matmul_nt(&a, &b_nt).data, 1e-4, 1e-4);
+            assert_allclose(&matmul_tnn(&a, &b_nt).data, &cpu::matmul_tnn(&a, &b_nt).data, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn prop_blocked_matches_naive_oracle() {
+        check("blocked nn/nt/tnn == naive oracle", 40, |g| {
+            let m = g.usize_in(1, 33);
+            let n = g.usize_in(1, 33);
+            let k = g.usize_in(1, 33);
+            let seed = g.i64_in(0, 1 << 30) as u64;
+            let a = Matrix::random(m, k, seed);
+            let b_nn = Matrix::random(k, n, seed ^ 0xA5A5);
+            let b_nt = Matrix::random(n, k, seed ^ 0x5A5A);
+            assert_allclose(&matmul_nn(&a, &b_nn).data, &cpu::matmul_nn(&a, &b_nn).data, 1e-4, 1e-4);
+            assert_allclose(&matmul_nt(&a, &b_nt).data, &cpu::matmul_nt(&a, &b_nt).data, 1e-4, 1e-4);
+            assert_allclose(&matmul_tnn(&a, &b_nt).data, &cpu::matmul_tnn(&a, &b_nt).data, 1e-4, 1e-4);
+        });
+    }
+
+    #[test]
+    fn blocked_nt_and_tnn_are_bit_identical() {
+        // Both routes feed identical packed panels to the same kernel in
+        // the same order; the results must agree exactly, not just within
+        // tolerance (see the module docs).
+        let a = Matrix::random(37, 53, 1);
+        let b = Matrix::random(41, 53, 2);
+        assert_eq!(matmul_nt(&a, &b).data, matmul_tnn(&a, &b).data);
+    }
+
+    #[test]
+    fn threaded_path_matches_single_thread() {
+        // Force the threaded path on shapes that straddle stripe
+        // boundaries, including more threads than rows.
+        for &(m, n, k, threads) in &[
+            (37usize, 29usize, 23usize, 4usize),
+            (8, 300, 300, 3),
+            (2, 16, 16, 8),
+            (65, 17, 513, 2),
+        ] {
+            let a = Matrix::random(m, k, 11);
+            let b = Matrix::random(k, n, 12);
+            let mut c_mt = Matrix::zeros(m, n);
+            gemm(&a.data, &b.data, BLayout::KxN, &mut c_mt.data, m, k, n, threads);
+            let mut c_st = Matrix::zeros(m, n);
+            gemm(&a.data, &b.data, BLayout::KxN, &mut c_st.data, m, k, n, 1);
+            // Same per-row operation order regardless of partition.
+            assert_eq!(c_mt.data, c_st.data, "m={m} n={n} k={k} threads={threads}");
+            assert_allclose(&c_mt.data, &cpu::matmul_nn(&a, &b).data, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn spans_multiple_cache_blocks() {
+        // Exceed MC/KC/NC in every dimension so all block loops iterate.
+        let (m, n, k) = (2 * MC + 5, NC + 7, KC + 9);
+        let a = Matrix::random(m, k, 21);
+        let b = Matrix::random(n, k, 22);
+        assert_allclose(&matmul_nt(&a, &b).data, &cpu::matmul_nt(&a, &b).data, 2e-3, 2e-3);
+    }
+
+    #[test]
+    fn tiled_transpose_is_exact() {
+        let m = Matrix::random(45, 33, 6);
+        assert_eq!(transpose(&m).data, m.transpose().data);
+        let back = transpose(&transpose(&m));
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    #[should_panic(expected = "mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 4);
+        matmul_nn(&a, &b);
+    }
+}

@@ -1,7 +1,10 @@
 //! The GEMM service: algorithm definitions, the naive CPU oracle, and the
-//! execution backends (simulated GPU timing / real PJRT execution).
+//! execution backends — blocked native CPU kernels, simulated GPU timing,
+//! and real PJRT execution.
 
+pub mod blocked;
 pub mod cpu;
+pub mod native;
 pub mod sim;
 pub mod xla;
 

@@ -1,0 +1,135 @@
+//! Native execution backend: serves the GEMM service's artifact catalog
+//! names (`nt_MxNxK`, `tnn_MxNxK`, `nn_MxNxK`, `transpose_RxC`) with the
+//! blocked CPU kernels from [`super::blocked`] instead of PJRT.
+//!
+//! This is the coordinator engine's non-PJRT path: the router and batcher
+//! keep speaking artifact names, and the engine executes them natively when
+//! no compiled catalog is present (`Engine::native`). Numerics match the
+//! naive oracle within f32 tolerance because the blocked kernels are
+//! validated against it.
+
+use super::blocked;
+use super::cpu::Matrix;
+
+/// Stateless executor mapping artifact names onto blocked kernels.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeExecutor;
+
+/// Parse `"512x256x128"` → `[512, 256, 128]` (or 2 dims for transpose).
+fn parse_dims(spec: &str, want: usize) -> anyhow::Result<Vec<usize>> {
+    let dims: Vec<usize> = spec
+        .split('x')
+        .map(|p| p.parse::<usize>())
+        .collect::<Result<_, _>>()
+        .map_err(|_| anyhow::anyhow!("bad artifact dims '{spec}'"))?;
+    anyhow::ensure!(
+        dims.len() == want && dims.iter().all(|&d| d > 0),
+        "artifact dims '{spec}': expected {want} positive sizes"
+    );
+    Ok(dims)
+}
+
+fn check_shape(name: &str, idx: usize, m: &Matrix, rows: usize, cols: usize) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        m.rows == rows && m.cols == cols,
+        "{name}: input {idx} is {}x{}, expected {rows}x{cols}",
+        m.rows,
+        m.cols
+    );
+    Ok(())
+}
+
+impl NativeExecutor {
+    /// Execute one artifact on host matrices. Supports the GEMM-service
+    /// grammar only; FCN train-step artifacts have a dedicated native path
+    /// in `fcn::real_trainer::train_native`.
+    pub fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        let (tag, spec) = artifact
+            .split_once('_')
+            .ok_or_else(|| anyhow::anyhow!("native backend: malformed artifact '{artifact}'"))?;
+        match tag {
+            "nt" | "tnn" | "nn" => {
+                let d = parse_dims(spec, 3)?;
+                let (m, n, k) = (d[0], d[1], d[2]);
+                anyhow::ensure!(
+                    inputs.len() == 2,
+                    "{artifact}: expected 2 inputs, got {}",
+                    inputs.len()
+                );
+                let (a, b) = (inputs[0], inputs[1]);
+                check_shape(artifact, 0, a, m, k)?;
+                let out = match tag {
+                    "nt" => {
+                        check_shape(artifact, 1, b, n, k)?;
+                        blocked::matmul_nt(a, b)
+                    }
+                    "tnn" => {
+                        check_shape(artifact, 1, b, n, k)?;
+                        blocked::matmul_tnn(a, b)
+                    }
+                    _ => {
+                        check_shape(artifact, 1, b, k, n)?;
+                        blocked::matmul_nn(a, b)
+                    }
+                };
+                Ok(vec![out])
+            }
+            "transpose" => {
+                let d = parse_dims(spec, 2)?;
+                anyhow::ensure!(
+                    inputs.len() == 1,
+                    "{artifact}: expected 1 input, got {}",
+                    inputs.len()
+                );
+                check_shape(artifact, 0, inputs[0], d[0], d[1])?;
+                Ok(vec![blocked::transpose(inputs[0])])
+            }
+            other => anyhow::bail!(
+                "artifact '{artifact}' not supported by the native backend (kind '{other}')"
+            ),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn executes_all_gemm_kinds() {
+        let nx = NativeExecutor;
+        let a = Matrix::random(16, 24, 1);
+        let b_nt = Matrix::random(8, 24, 2);
+        let b_nn = Matrix::random(24, 8, 3);
+
+        let nt = nx.execute("nt_16x8x24", &[&a, &b_nt]).unwrap();
+        assert_allclose(&nt[0].data, &cpu::matmul_nt(&a, &b_nt).data, 1e-4, 1e-4);
+
+        let tnn = nx.execute("tnn_16x8x24", &[&a, &b_nt]).unwrap();
+        assert_eq!(tnn[0].data, nt[0].data, "blocked NT and TNN agree exactly");
+
+        let nn = nx.execute("nn_16x8x24", &[&a, &b_nn]).unwrap();
+        assert_allclose(&nn[0].data, &cpu::matmul_nn(&a, &b_nn).data, 1e-4, 1e-4);
+
+        let t = nx.execute("transpose_16x24", &[&a]).unwrap();
+        assert_eq!(t[0].data, a.transpose().data);
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let nx = NativeExecutor;
+        let a = Matrix::random(4, 4, 1);
+        assert!(nx.execute("nope", &[&a]).is_err());
+        assert!(nx.execute("fcn_train_nt-nt-nt", &[&a]).is_err());
+        assert!(nx.execute("nt_4xbad", &[&a, &a]).is_err());
+        assert!(nx.execute("nt_4x4x0", &[&a, &a]).is_err());
+        // Arity and shape mismatches report the artifact name.
+        let err = nx.execute("nt_4x4x4", &[&a]).unwrap_err().to_string();
+        assert!(err.contains("expected 2 inputs"), "{err}");
+        let small = Matrix::random(2, 2, 2);
+        let err = nx.execute("nt_4x4x4", &[&a, &small]).unwrap_err().to_string();
+        assert!(err.contains("input 1"), "{err}");
+    }
+}

@@ -9,7 +9,11 @@
 #[derive(Debug, Clone, PartialEq)]
 pub struct GpuSpec {
     pub name: &'static str,
-    /// Stable id used to seed deterministic measurement noise.
+    /// Stable **unique** id: seeds deterministic measurement noise and is
+    /// the identity key for shape-keyed selection caching
+    /// (`selector::cache::DecisionCache`). Custom specs must use an id
+    /// distinct from every other spec in the process, or cached decisions
+    /// computed for one GPU will be served for the other.
     pub id: u64,
     pub compute_capability: f64,
     /// Global memory in GiB (paper writes "8 GB" / "10 GB").

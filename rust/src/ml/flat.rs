@@ -1,0 +1,186 @@
+//! Flattened GBDT inference: the whole ensemble as struct-of-arrays with
+//! iterative descent — the hot-path representation behind
+//! `selector::TrainedModel::predict_label`.
+//!
+//! The recursive [`super::gbdt::Gbdt`] walk chases one boxed tree at a time
+//! through per-tree node vectors; prediction cost is dominated by dependent
+//! pointer loads. [`FlatForest`] concatenates every tree's nodes into five
+//! parallel arrays (feature / threshold / left / right / value) with
+//! child indices rebased to absolute offsets, so a prediction is a tight
+//! loop over array indices: one contiguous working set, no recursion, no
+//! per-tree indirection. Leaf values, the base score, and the eta
+//! multiplication are applied in exactly the same order as the recursive
+//! walk, so decision functions (and therefore labels) are **bit-identical**
+//! — asserted against the full paper dataset in the tests below.
+
+use super::gbdt::Gbdt;
+
+/// Sentinel in `left` marking a leaf (mirrors the tree arena's NO_CHILD).
+const LEAF: u32 = u32::MAX;
+
+/// The flattened ensemble.
+#[derive(Debug, Clone, Default)]
+pub struct FlatForest {
+    feature: Vec<u32>,
+    threshold: Vec<f64>,
+    left: Vec<u32>,
+    right: Vec<u32>,
+    value: Vec<f64>,
+    /// Absolute index of each tree's root.
+    roots: Vec<u32>,
+    base_score: f64,
+    eta: f64,
+}
+
+impl FlatForest {
+    /// Flatten a fitted GBDT. Empty ensembles (zero estimators) flatten to
+    /// a base-score-only predictor.
+    pub fn from_gbdt(g: &Gbdt) -> FlatForest {
+        let total: usize = g.trees.iter().map(|t| t.nodes.len()).sum();
+        let mut f = FlatForest {
+            feature: Vec::with_capacity(total),
+            threshold: Vec::with_capacity(total),
+            left: Vec::with_capacity(total),
+            right: Vec::with_capacity(total),
+            value: Vec::with_capacity(total),
+            roots: Vec::with_capacity(g.trees.len()),
+            base_score: g.base_score,
+            eta: g.params.eta,
+        };
+        for tree in &g.trees {
+            let offset = f.feature.len() as u32;
+            f.roots.push(offset); // tree roots are node 0 in the arena
+            for node in &tree.nodes {
+                f.feature.push(node.feature);
+                f.threshold.push(node.threshold);
+                if node.is_leaf() {
+                    f.left.push(LEAF);
+                    f.right.push(LEAF);
+                } else {
+                    f.left.push(node.left + offset);
+                    f.right.push(node.right + offset);
+                }
+                f.value.push(node.value);
+            }
+        }
+        f
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.roots.len()
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.feature.len()
+    }
+
+    /// Raw additive score F(x) — iterative descent through every tree,
+    /// accumulating `eta * leaf` in tree order exactly like the recursive
+    /// walk.
+    #[inline]
+    pub fn decision_function(&self, row: &[f64]) -> f64 {
+        let mut f = self.base_score;
+        for &root in &self.roots {
+            let mut i = root as usize;
+            loop {
+                let l = self.left[i];
+                if l == LEAF {
+                    break;
+                }
+                i = if row[self.feature[i] as usize] <= self.threshold[i] {
+                    l as usize
+                } else {
+                    self.right[i] as usize
+                };
+            }
+            f += self.eta * self.value[i];
+        }
+        f
+    }
+
+    /// The paper's label (+1 → NT, −1 → TNN).
+    #[inline]
+    pub fn predict_label(&self, row: &[f64]) -> i8 {
+        if self.decision_function(row) >= 0.0 {
+            1
+        } else {
+            -1
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::{collect_paper_dataset, to_ml_dataset};
+    use crate::ml::gbdt::GbdtParams;
+    use crate::ml::Classifier;
+    use crate::testutil::prop::check;
+
+    fn xor_model(depth: usize, rounds: usize) -> (Gbdt, Vec<Vec<f64>>) {
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for i in 0..12 {
+            for j in 0..12 {
+                let (a, b) = (i as f64 / 12.0, j as f64 / 12.0);
+                x.push(vec![a, b]);
+                y.push(if (a < 0.5) ^ (b < 0.5) { 1.0 } else { -1.0 });
+            }
+        }
+        let mut p = GbdtParams::default();
+        p.tree.max_depth = depth;
+        p.n_estimators = rounds;
+        let mut m = Gbdt::new(p);
+        m.fit(&x, &y);
+        (m, x)
+    }
+
+    #[test]
+    fn bit_identical_to_recursive_on_full_paper_dataset() {
+        // The satellite requirement: on all ~1828 paper samples the flat
+        // descent must reproduce the recursive decision function exactly
+        // (f64 equality, not tolerance).
+        let d = to_ml_dataset(&collect_paper_dataset());
+        let mut g = Gbdt::new(GbdtParams::default());
+        g.fit(&d.x, &d.y);
+        let flat = FlatForest::from_gbdt(&g);
+        assert_eq!(flat.n_trees(), g.trees.len());
+        for row in &d.x {
+            let rec = g.decision_function_recursive(row);
+            let fl = flat.decision_function(row);
+            assert!(rec == fl, "flat {fl} != recursive {rec} for {row:?}");
+            assert_eq!(flat.predict_label(row) as f64, g.predict_one(row));
+        }
+    }
+
+    #[test]
+    fn prop_flat_matches_recursive_on_random_rows() {
+        let (g, _) = xor_model(8, 8);
+        let flat = FlatForest::from_gbdt(&g);
+        check("flat forest == recursive gbdt", 200, |gen| {
+            let a = gen.f64_in(-0.5, 1.5);
+            let b = gen.f64_in(-0.5, 1.5);
+            let row = [a, b];
+            assert!(flat.decision_function(&row) == g.decision_function_recursive(&row));
+        });
+    }
+
+    #[test]
+    fn empty_ensemble_is_base_score_only() {
+        let (g, x) = xor_model(2, 0);
+        let flat = FlatForest::from_gbdt(&g);
+        assert_eq!(flat.n_trees(), 0);
+        assert_eq!(flat.n_nodes(), 0);
+        assert_eq!(flat.decision_function(&x[0]), g.base_score);
+    }
+
+    #[test]
+    fn stump_forest_descends_correctly() {
+        // Depth-1 trees exercise the smallest non-leaf arenas.
+        let (g, x) = xor_model(1, 3);
+        let flat = FlatForest::from_gbdt(&g);
+        for row in x.iter().take(40) {
+            assert!(flat.decision_function(row) == g.decision_function_recursive(row));
+        }
+    }
+}

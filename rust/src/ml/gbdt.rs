@@ -7,6 +7,7 @@
 //! `p = sigmoid(F)`, gradient `p − y`, hessian `p(1 − p)`, leaf weights by
 //! one Newton step `−G/(H + λ)`.
 
+use super::flat::FlatForest;
 use super::tree::{DecisionTree, TreeParams};
 use super::Classifier;
 use crate::util::json::Json;
@@ -43,6 +44,12 @@ pub struct Gbdt {
     /// Initial log-odds F0.
     pub base_score: f64,
     pub trees: Vec<DecisionTree>,
+    /// Flattened SoA mirror of `trees` for hot-path inference; rebuilt by
+    /// [`Classifier::fit`] and [`Gbdt::from_json`], bit-identical to the
+    /// recursive walk. Private so direct mutation of the public `trees`
+    /// field cannot silently be served stale predictions — call
+    /// [`Gbdt::rebuild_flat`] after hand-editing `trees`.
+    flat: Option<FlatForest>,
 }
 
 fn sigmoid(z: f64) -> f64 {
@@ -55,11 +62,30 @@ impl Gbdt {
             params,
             base_score: 0.0,
             trees: Vec::new(),
+            flat: None,
         }
     }
 
-    /// Raw additive score F(x) (log-odds of the +1 class).
+    /// Rebuild the flattened inference mirror from `trees`. Called by
+    /// `fit`/`from_json`; call manually after mutating `trees` directly.
+    pub fn rebuild_flat(&mut self) {
+        let flat = FlatForest::from_gbdt(self);
+        self.flat = Some(flat);
+    }
+
+    /// Raw additive score F(x) (log-odds of the +1 class). Uses the
+    /// flattened SoA forest when available (bit-identical, much faster);
+    /// falls back to the recursive walk otherwise.
     pub fn decision_function(&self, row: &[f64]) -> f64 {
+        match &self.flat {
+            Some(f) => f.decision_function(row),
+            None => self.decision_function_recursive(row),
+        }
+    }
+
+    /// Raw additive score via the original recursive tree walk — kept as
+    /// the reference implementation and for flat-vs-recursive benchmarks.
+    pub fn decision_function_recursive(&self, row: &[f64]) -> f64 {
         let mut f = self.base_score;
         for t in &self.trees {
             f += self.params.eta * t.predict_value(row);
@@ -121,14 +147,17 @@ impl Gbdt {
             .iter()
             .map(DecisionTree::from_json)
             .collect::<anyhow::Result<Vec<_>>>()?;
-        Ok(Gbdt {
+        let mut g = Gbdt {
             params,
             base_score: j
                 .get("base_score")
                 .as_f64()
                 .ok_or_else(|| anyhow::anyhow!("gbdt json: missing base_score"))?,
             trees,
-        })
+            flat: None,
+        };
+        g.rebuild_flat();
+        Ok(g)
     }
 
     pub fn save(&self, path: impl AsRef<std::path::Path>) -> anyhow::Result<()> {
@@ -155,6 +184,7 @@ impl Classifier for Gbdt {
         // F0 = log-odds of the positive class (clamped for degenerate sets).
         self.base_score = (pos.max(0.5) / neg.max(0.5)).ln();
         self.trees.clear();
+        self.flat = None;
 
         let mut f: Vec<f64> = vec![self.base_score; n];
         let mut grad = vec![0.0; n];
@@ -172,6 +202,7 @@ impl Classifier for Gbdt {
             }
             self.trees.push(tree);
         }
+        self.rebuild_flat();
     }
 
     fn predict_one(&self, row: &[f64]) -> f64 {

@@ -16,6 +16,7 @@
 
 pub mod cv;
 pub mod data;
+pub mod flat;
 pub mod forest;
 pub mod gbdt;
 pub mod knn;

@@ -1,0 +1,331 @@
+//! Shape-keyed selection caching: FCN training (and any steady-state GEMM
+//! client) re-issues identical `(gpu, m, n, k)` NT calls every iteration,
+//! so after the first step an Algorithm-2 selection should cost a table
+//! lookup, not a GBDT descent.
+//!
+//! [`DecisionCache`] is a fixed-capacity, lock-free open-addressing table.
+//! Each slot publishes its key fields before flipping a state word to
+//! READY with release ordering; readers acquire the state first, so a
+//! matching slot is always fully visible. Races degrade to cache misses
+//! (the caller recomputes — selection is deterministic, so duplicate
+//! inserts of the same key are harmless), never to wrong answers. A full
+//! neighborhood simply stops caching that key: correctness does not depend
+//! on capacity.
+
+use super::{SelectionReason, Selector};
+use crate::gemm::Algorithm;
+use crate::gpusim::GpuSpec;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const EMPTY: u64 = 0;
+const CLAIMED: u64 = 1;
+const READY: u64 = 2;
+
+/// Linear-probe window before giving up on caching a key.
+const MAX_PROBES: usize = 8;
+
+struct Slot {
+    state: AtomicU64,
+    gpu: AtomicU64,
+    m: AtomicU64,
+    n: AtomicU64,
+    k: AtomicU64,
+    val: AtomicU64,
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot {
+            state: AtomicU64::new(EMPTY),
+            gpu: AtomicU64::new(0),
+            m: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+            k: AtomicU64::new(0),
+            val: AtomicU64::new(0),
+        }
+    }
+}
+
+fn encode(dec: (Algorithm, SelectionReason)) -> u64 {
+    let a = match dec.0 {
+        Algorithm::Nt => 0u64,
+        Algorithm::Tnn => 1,
+        Algorithm::Nn => 2,
+    };
+    let r = match dec.1 {
+        SelectionReason::PredictedNt => 0u64,
+        SelectionReason::PredictedTnn => 1,
+        SelectionReason::MemoryFallback => 2,
+        SelectionReason::Forced => 3,
+    };
+    (a << 8) | r
+}
+
+fn decode(v: u64) -> (Algorithm, SelectionReason) {
+    let a = match v >> 8 {
+        0 => Algorithm::Nt,
+        1 => Algorithm::Tnn,
+        _ => Algorithm::Nn,
+    };
+    let r = match v & 0xFF {
+        0 => SelectionReason::PredictedNt,
+        1 => SelectionReason::PredictedTnn,
+        2 => SelectionReason::MemoryFallback,
+        _ => SelectionReason::Forced,
+    };
+    (a, r)
+}
+
+/// Fast 4×u64 mix (FxHash-style multiply-rotate; SipHash would dominate
+/// the lookup cost this cache exists to remove).
+#[inline]
+fn hash_key(gpu: u64, m: u64, n: u64, k: u64) -> u64 {
+    const K: u64 = 0x517C_C1B7_2722_0A95;
+    let mut h = gpu.wrapping_mul(K);
+    h = (h.rotate_left(26) ^ m).wrapping_mul(K);
+    h = (h.rotate_left(26) ^ n).wrapping_mul(K);
+    h = (h.rotate_left(26) ^ k).wrapping_mul(K);
+    h ^ (h >> 32)
+}
+
+/// Lock-free fixed-capacity decision cache keyed by `(gpu.id, m, n, k)`.
+/// `GpuSpec::id` is the GPU's identity here — its contract (see the field
+/// doc) requires process-wide uniqueness, since a cached decision bakes in
+/// the full spec (memory size drives the fallback rule).
+pub struct DecisionCache {
+    slots: Box<[Slot]>,
+    mask: usize,
+}
+
+impl DecisionCache {
+    /// Create a cache with at least `capacity` slots (rounded up to a
+    /// power of two, minimum 64).
+    pub fn new(capacity: usize) -> DecisionCache {
+        let cap = capacity.max(64).next_power_of_two();
+        DecisionCache {
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+            mask: cap - 1,
+        }
+    }
+
+    /// Look up a cached decision.
+    #[inline]
+    pub fn get(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> Option<(Algorithm, SelectionReason)> {
+        let h = hash_key(gpu.id, m, n, k) as usize;
+        for p in 0..MAX_PROBES {
+            let slot = &self.slots[(h + p) & self.mask];
+            match slot.state.load(Ordering::Acquire) {
+                EMPTY => return None, // inserts claim the first empty slot
+                READY => {
+                    if slot.gpu.load(Ordering::Relaxed) == gpu.id
+                        && slot.m.load(Ordering::Relaxed) == m
+                        && slot.n.load(Ordering::Relaxed) == n
+                        && slot.k.load(Ordering::Relaxed) == k
+                    {
+                        return Some(decode(slot.val.load(Ordering::Relaxed)));
+                    }
+                }
+                _ => {} // mid-insert: treat as occupied, keep probing
+            }
+        }
+        None
+    }
+
+    /// Publish a decision. No-ops when the probe window is full or the key
+    /// is already present; concurrent duplicate inserts are harmless
+    /// because selection is deterministic.
+    pub fn insert(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64, dec: (Algorithm, SelectionReason)) {
+        let h = hash_key(gpu.id, m, n, k) as usize;
+        for p in 0..MAX_PROBES {
+            let slot = &self.slots[(h + p) & self.mask];
+            match slot.state.load(Ordering::Acquire) {
+                READY => {
+                    if slot.gpu.load(Ordering::Relaxed) == gpu.id
+                        && slot.m.load(Ordering::Relaxed) == m
+                        && slot.n.load(Ordering::Relaxed) == n
+                        && slot.k.load(Ordering::Relaxed) == k
+                    {
+                        return; // already cached
+                    }
+                }
+                EMPTY => {
+                    if slot
+                        .state
+                        .compare_exchange(EMPTY, CLAIMED, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        slot.gpu.store(gpu.id, Ordering::Relaxed);
+                        slot.m.store(m, Ordering::Relaxed);
+                        slot.n.store(n, Ordering::Relaxed);
+                        slot.k.store(k, Ordering::Relaxed);
+                        slot.val.store(encode(dec), Ordering::Relaxed);
+                        slot.state.store(READY, Ordering::Release);
+                        return;
+                    }
+                    // Lost the claim race: fall through and probe onward.
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Number of published entries (scan; for tests/metrics, not hot path).
+    pub fn len(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| s.state.load(Ordering::Acquire) == READY)
+            .count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for DecisionCache {
+    fn default() -> Self {
+        DecisionCache::new(1024)
+    }
+}
+
+/// A [`Selector`] wrapped with a [`DecisionCache`] — transparent (identical
+/// decisions, selection is deterministic) but amortized to a lookup for
+/// repeated shapes. Used by the coordinator router and the simulated FCN
+/// trainer's MTNN policy.
+pub struct CachedSelector<'a> {
+    sel: &'a Selector,
+    cache: DecisionCache,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<'a> CachedSelector<'a> {
+    pub fn new(sel: &'a Selector) -> CachedSelector<'a> {
+        CachedSelector {
+            sel,
+            cache: DecisionCache::default(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Algorithm 2 with shape-keyed memoization.
+    #[inline]
+    pub fn select(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> (Algorithm, SelectionReason) {
+        if let Some(hit) = self.cache.get(gpu, m, n, k) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return hit;
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let dec = self.sel.select(gpu, m, n, k);
+        self.cache.insert(gpu, m, n, k, dec);
+        dec
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gpusim::{GTX1080, PAPER_GPUS, TITANX};
+    use crate::testutil::prop::check;
+    use std::sync::OnceLock;
+
+    fn selector() -> &'static Selector {
+        static SEL: OnceLock<Selector> = OnceLock::new();
+        SEL.get_or_init(|| Selector::train_default(&collect_paper_dataset()))
+    }
+
+    #[test]
+    fn roundtrip_all_decisions() {
+        let c = DecisionCache::new(64);
+        let cases = [
+            (Algorithm::Nt, SelectionReason::PredictedNt),
+            (Algorithm::Tnn, SelectionReason::PredictedTnn),
+            (Algorithm::Nt, SelectionReason::MemoryFallback),
+            (Algorithm::Tnn, SelectionReason::Forced),
+        ];
+        for (i, &dec) in cases.iter().enumerate() {
+            c.insert(&GTX1080, i as u64 + 1, 2, 3, dec);
+            assert_eq!(c.get(&GTX1080, i as u64 + 1, 2, 3), Some(dec));
+        }
+        assert_eq!(c.len(), cases.len());
+        assert_eq!(c.get(&GTX1080, 999, 2, 3), None);
+        // Same shape on a different GPU is a different key.
+        assert_eq!(c.get(&TITANX, 1, 2, 3), None);
+    }
+
+    #[test]
+    fn insert_is_idempotent() {
+        let c = DecisionCache::new(64);
+        let dec = (Algorithm::Nt, SelectionReason::PredictedNt);
+        for _ in 0..10 {
+            c.insert(&GTX1080, 128, 256, 512, dec);
+        }
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn full_probe_window_degrades_to_miss_not_error() {
+        // Tiny cache, many keys: some keys must fail to cache; none may
+        // return a wrong value.
+        let c = DecisionCache::new(64);
+        let dec = (Algorithm::Tnn, SelectionReason::PredictedTnn);
+        for m in 1..=500u64 {
+            c.insert(&GTX1080, m, 7, 9, dec);
+        }
+        let mut cached = 0;
+        for m in 1..=500u64 {
+            if let Some(v) = c.get(&GTX1080, m, 7, 9) {
+                assert_eq!(v, dec);
+                cached += 1;
+            }
+        }
+        assert!(cached > 0 && cached <= 64, "cached {cached}");
+    }
+
+    #[test]
+    fn prop_cached_selector_is_transparent() {
+        // The cache must never change a decision — cold, warm, any GPU.
+        let cached = CachedSelector::new(selector());
+        check("cached select == plain select", 300, |g| {
+            let gpu = *g.choose(&PAPER_GPUS);
+            let m = g.pow2(7, 16) as u64;
+            let n = g.pow2(7, 16) as u64;
+            let k = g.pow2(7, 16) as u64;
+            assert_eq!(cached.select(gpu, m, n, k), selector().select(gpu, m, n, k));
+            // Warm path must agree too.
+            assert_eq!(cached.select(gpu, m, n, k), selector().select(gpu, m, n, k));
+        });
+        assert!(cached.hits() > 0, "repeat selections must hit the cache");
+    }
+
+    #[test]
+    fn concurrent_inserts_and_gets_are_consistent() {
+        let c = std::sync::Arc::new(DecisionCache::new(256));
+        let dec = (Algorithm::Nt, SelectionReason::PredictedNt);
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for i in 0..200u64 {
+                        let m = (i % 32) + t; // overlapping key sets
+                        c.insert(&GTX1080, m, 64, 64, dec);
+                        if let Some(v) = c.get(&GTX1080, m, 64, 64) {
+                            assert_eq!(v, dec);
+                        }
+                    }
+                });
+            }
+        });
+        assert!(c.len() >= 32);
+    }
+}

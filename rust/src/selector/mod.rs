@@ -5,6 +5,7 @@
 //! memory-fit fallback: if `Bᵀ` would not fit in GPU memory, always choose
 //! the direct NT call.
 
+pub mod cache;
 pub mod three_way;
 
 use crate::gemm::Algorithm;
@@ -43,7 +44,19 @@ impl TrainedModel {
         }
     }
 
-    /// Predict the label for a raw (unscaled) feature row.
+    /// The underlying GBDT, when this is the paper's production model
+    /// (exposed for flat-vs-recursive inference benchmarks).
+    pub fn as_gbdt(&self) -> Option<&Gbdt> {
+        match self {
+            TrainedModel::Gbdt(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Predict the label for a raw (unscaled) feature row. The GBDT arm
+    /// runs on the flattened SoA forest ([`crate::ml::flat::FlatForest`],
+    /// built at fit/load time) — iterative descent, bit-identical to the
+    /// recursive walk, and the reason the 5 µs prediction budget holds.
     #[inline]
     pub fn predict_label(&self, row: &[f64]) -> i8 {
         let v = match self {
@@ -75,6 +88,8 @@ pub enum SelectionReason {
     PredictedTnn,
     /// `Bᵀ` does not fit in GPU memory — forced NT (paper §II).
     MemoryFallback,
+    /// Configuration override (`RouterConfig::force`) — MTNN was bypassed.
+    Forced,
 }
 
 impl Selector {

@@ -55,6 +55,7 @@ fn forced_algorithms_agree_numerically() {
         engine.handle(),
         RouterConfig {
             force: Some(Algorithm::Nt),
+            ..RouterConfig::default()
         },
     );
     let tnn_router = Router::new(
@@ -62,6 +63,7 @@ fn forced_algorithms_agree_numerically() {
         engine.handle(),
         RouterConfig {
             force: Some(Algorithm::Tnn),
+            ..RouterConfig::default()
         },
     );
     let a = Matrix::random(256, 128, 3);
@@ -208,6 +210,76 @@ fn corrupt_artifact_fails_compile_cleanly() {
         "unexpected error: {err}"
     );
     std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---- native backend (no artifacts required; never skipped) -----------------
+
+#[test]
+fn native_engine_serves_mtnn_traffic_end_to_end() {
+    let engine = Engine::native(64).expect("native engine");
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let router = Router::new(selector, engine.handle(), RouterConfig::default());
+    for (i, &(m, n, k)) in [(128u64, 128u64, 128u64), (64, 256, 128), (128, 128, 128)]
+        .iter()
+        .enumerate()
+    {
+        let req = request(m, n, k, i as u64);
+        let expect = matmul_nt(&req.a, &req.b);
+        let resp = router.serve(req).unwrap();
+        assert!(matches!(resp.algorithm, Algorithm::Nt | Algorithm::Tnn));
+        assert_allclose(&resp.output.data, &expect.data, 1e-3, 1e-3);
+    }
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.completed, 3);
+    assert_eq!(snap.failed, 0);
+    engine.shutdown();
+}
+
+#[test]
+fn native_engine_concurrent_clients() {
+    let engine = Engine::native(64).expect("native engine");
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let router = Arc::new(Router::new(
+        selector,
+        engine.handle(),
+        RouterConfig::default(),
+    ));
+    let mut joins = Vec::new();
+    for t in 0..4 {
+        let r = router.clone();
+        joins.push(std::thread::spawn(move || {
+            for i in 0..3 {
+                let req = request(64, 64, 64, (t * 10 + i) as u64);
+                let expect = matmul_nt(&req.a, &req.b);
+                let resp = r.serve(req).expect("serve");
+                assert_allclose(&resp.output.data, &expect.data, 1e-3, 1e-3);
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(router.metrics.snapshot().completed, 12);
+    engine.shutdown();
+}
+
+#[test]
+fn native_forced_baselines_count_as_forced() {
+    let engine = Engine::native(16).expect("native engine");
+    let router = Router::new(
+        Selector::train_default(&collect_paper_dataset()),
+        engine.handle(),
+        RouterConfig {
+            force: Some(Algorithm::Nt),
+            ..RouterConfig::default()
+        },
+    );
+    let resp = router.serve(request(32, 32, 32, 5)).unwrap();
+    assert_eq!(resp.algorithm, Algorithm::Nt);
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.forced, 1);
+    assert_eq!(snap.memory_fallbacks, 0);
+    engine.shutdown();
 }
 
 #[test]

@@ -3,9 +3,11 @@
 //! prop harness — the proptest-equivalent coverage of DESIGN.md §4 row 11.
 
 use mtnn::dataset::collect_paper_dataset;
+use mtnn::gemm::blocked;
 use mtnn::gemm::cpu::{matmul_nn, matmul_nt, matmul_tnn, Matrix};
 use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080, PAPER_GPUS, TITANX};
+use mtnn::selector::cache::CachedSelector;
 use mtnn::selector::{features, SelectionReason, Selector};
 use mtnn::testutil::assert_allclose;
 use mtnn::testutil::prop::check;
@@ -116,6 +118,56 @@ fn prop_gemm_oracles_consistent() {
         assert_allclose(&nt.data, &tnn.data, 1e-4, 1e-4);
         assert_eq!(tnn.data, via_nn.data, "TNN is literally transpose+NN");
     });
+}
+
+#[test]
+fn prop_blocked_backend_matches_oracle() {
+    // The high-performance native backend must agree with the naive
+    // reference on arbitrary shapes, including degenerate ones.
+    check("blocked backend == naive oracle", 30, |g| {
+        let m = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let seed = g.i64_in(0, 1 << 40) as u64;
+        let a = Matrix::random(m, k, seed);
+        let b_nt = Matrix::random(n, k, seed ^ 0xF00D);
+        let b_nn = Matrix::random(k, n, seed ^ 0xBEEF);
+        assert_allclose(
+            &blocked::matmul_nt(&a, &b_nt).data,
+            &matmul_nt(&a, &b_nt).data,
+            1e-4,
+            1e-4,
+        );
+        assert_allclose(
+            &blocked::matmul_tnn(&a, &b_nt).data,
+            &matmul_tnn(&a, &b_nt).data,
+            1e-4,
+            1e-4,
+        );
+        assert_allclose(
+            &blocked::matmul_nn(&a, &b_nn).data,
+            &matmul_nn(&a, &b_nn).data,
+            1e-4,
+            1e-4,
+        );
+        assert_eq!(blocked::transpose(&b_nt).data, b_nt.transpose().data);
+    });
+}
+
+#[test]
+fn prop_selection_cache_is_transparent() {
+    // Shape-keyed memoization must never change a routing decision.
+    let cached = CachedSelector::new(selector());
+    check("decision cache transparent", 300, |g| {
+        let gpu = *g.choose(&PAPER_GPUS);
+        let m = g.pow2(7, 16) as u64;
+        let n = g.pow2(7, 16) as u64;
+        let k = g.pow2(7, 16) as u64;
+        let direct = selector().select(gpu, m, n, k);
+        assert_eq!(cached.select(gpu, m, n, k), direct, "cold lookup");
+        assert_eq!(cached.select(gpu, m, n, k), direct, "warm lookup");
+    });
+    assert!(cached.hits() > 0, "warm lookups must hit");
 }
 
 #[test]

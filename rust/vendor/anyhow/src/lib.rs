@@ -1,0 +1,163 @@
+//! Vendored offline stand-in for the `anyhow` crate.
+//!
+//! The build environment has no network registry, so this shim provides the
+//! exact subset of anyhow's API the repo uses — [`Error`], [`Result`],
+//! [`anyhow!`], [`bail!`], [`ensure!`] — with the same semantics:
+//!
+//! * `Error` wraps any `std::error::Error + Send + Sync + 'static` (so `?`
+//!   converts `std::io::Error` and friends) or an ad-hoc message built by
+//!   [`anyhow!`];
+//! * `Error` deliberately does **not** implement `std::error::Error`, which
+//!   is what lets the blanket `From` impl coexist with core's reflexive
+//!   `From<T> for T` (the same trick the real crate uses);
+//! * `Display` shows the message; `Debug` shows the message plus the source
+//!   chain, matching how `.unwrap()` output is read in tests.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// `Result<T, anyhow::Error>`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A dynamically typed error with an optional source chain.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Create an error from a displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error {
+            inner: Box::new(MessageError(message.to_string())),
+        }
+    }
+
+    /// Create an error from a concrete `std::error::Error`.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            inner: Box::new(error),
+        }
+    }
+
+    /// The lowest-level source in the chain (self if there is none).
+    pub fn root_cause(&self) -> &(dyn StdError + 'static) {
+        let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        cur
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.inner, f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        if source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(cause) = source {
+            write!(f, "\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Message-only payload for [`anyhow!`].
+struct MessageError(String);
+
+impl fmt::Display for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for MessageError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl StdError for MessageError {}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`anyhow!`] error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_display() {
+        let e = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+        assert!(fails(true).is_ok());
+        assert_eq!(fails(false).unwrap_err().to_string(), "flag was false");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn read() -> Result<String> {
+            let s = std::fs::read_to_string("/definitely/not/a/file")?;
+            Ok(s)
+        }
+        let err = read().unwrap_err();
+        assert!(!err.to_string().is_empty());
+        assert!(!err.root_cause().to_string().is_empty());
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f() -> Result<()> {
+            bail!("stop {}", "here");
+        }
+        assert_eq!(f().unwrap_err().to_string(), "stop here");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
