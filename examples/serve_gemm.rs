@@ -1,10 +1,15 @@
-//! Serving example: the coordinator (engine thread + router + selector)
-//! serves a trace of NT-operation requests with MTNN selection on, and
-//! compares latency/throughput against a forced-NT baseline.
+//! Serving example: the coordinator (sharded engine worker pool + router +
+//! selector) serves a trace of NT-operation requests with MTNN selection
+//! on, and compares latency/throughput against forced-NT/TNN baselines.
 //!
-//!     cargo run --release --example serve_gemm -- --requests 64 --clients 4
+//!     cargo run --release --example serve_gemm -- \
+//!         --requests 64 --clients 4 --workers 4 [--backend native|pjrt|sim]
+//!
+//! The backend defaults to PJRT when the compiled artifact catalog exists
+//! and the native blocked kernels otherwise; `--backend sim` serves the
+//! same traffic through the deterministic GPU-timing simulator.
 
-use mtnn::coordinator::{Engine, GemmRequest, Router, RouterConfig};
+use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
 use mtnn::dataset::collect_paper_dataset;
 use mtnn::gemm::cpu::Matrix;
 use mtnn::gemm::{Algorithm, GemmShape};
@@ -35,16 +40,21 @@ fn trace(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
 fn run_mode(
     name: &str,
     force: Option<Algorithm>,
+    backend: &str,
     requests: usize,
     clients: usize,
+    workers: usize,
 ) -> anyhow::Result<()> {
-    // PJRT when the compiled catalog exists, the blocked native backend
-    // otherwise — the example serves real numerics either way.
-    let dir = Runtime::default_dir();
-    let engine = if dir.join("manifest.json").exists() {
-        Engine::spawn(dir, 128)?
-    } else {
-        Engine::native(128)?
+    let config = EngineConfig {
+        workers,
+        queue_depth: 128,
+        ..EngineConfig::default()
+    };
+    let engine = match backend {
+        "pjrt" => Engine::pjrt(Runtime::default_dir(), config)?,
+        "native" => Engine::native_pool(config)?,
+        "sim" => Engine::sim(&GTX1080, config)?,
+        other => anyhow::bail!("unknown --backend '{other}' (native|pjrt|sim)"),
     };
     let selector = Selector::train_default(&collect_paper_dataset());
     let router = Arc::new(Router::new(
@@ -55,15 +65,16 @@ fn run_mode(
             ..RouterConfig::default()
         },
     ));
-    // Warm the executables outside the timed window.
-    engine.handle().warmup(
-        &trace(requests, 1)
-            .iter()
-            .flat_map(|&(m, n, k)| {
-                vec![format!("nt_{m}x{n}x{k}"), format!("tnn_{m}x{n}x{k}")]
-            })
-            .collect::<Vec<_>>(),
-    )?;
+    // Warm every worker's compile cache outside the timed window — the
+    // router maps shapes to both algorithms' artifacts itself.
+    let mut shapes: Vec<(u64, u64, u64)> = trace(requests, 1);
+    shapes.sort_unstable();
+    shapes.dedup();
+    let shapes: Vec<GemmShape> = shapes
+        .into_iter()
+        .map(|(m, n, k)| GemmShape::new(m, n, k))
+        .collect();
+    router.warmup(&shapes)?;
 
     let t0 = Instant::now();
     let per_client = requests / clients;
@@ -101,11 +112,29 @@ fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
     let requests: usize = args.get_num("requests", 64);
     let clients: usize = args.get_num("clients", 4);
+    // Capped default: the native kernels are internally threaded on large
+    // GEMMs, so a worker per core would oversubscribe the CPU.
+    let workers: usize = args.get_num(
+        "workers",
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(8),
+    );
+    let default_backend = if Runtime::default_dir().join("manifest.json").exists() {
+        "pjrt"
+    } else {
+        "native"
+    };
+    let backend = args.get("backend", default_backend);
     args.finish()?;
-    println!("serving {requests} NT-operation requests from {clients} concurrent clients");
-    run_mode("MTNN", None, requests, clients)?;
-    run_mode("force-NT", Some(Algorithm::Nt), requests, clients)?;
-    run_mode("force-TNN", Some(Algorithm::Tnn), requests, clients)?;
+    println!(
+        "serving {requests} NT-operation requests from {clients} concurrent clients \
+         on a {workers}-worker {backend} engine pool"
+    );
+    run_mode("MTNN", None, &backend, requests, clients, workers)?;
+    run_mode("force-NT", Some(Algorithm::Nt), &backend, requests, clients, workers)?;
+    run_mode("force-TNN", Some(Algorithm::Tnn), &backend, requests, clients, workers)?;
     println!("serve_gemm OK");
     Ok(())
 }

@@ -1,11 +1,12 @@
 //! Bench: hot-path microbenchmarks for the §Perf pass — naive vs blocked
 //! native GEMM, flat vs recursive GBDT inference, cached vs uncached
 //! routing decisions, predictor latency (paper: 0.005 ms), GBDT train time
-//! (paper: 7 ms), and GEMM serving through the coordinator (PJRT when the
-//! artifact catalog exists, the native blocked backend otherwise).
+//! (paper: 7 ms), GEMM serving through the coordinator (PJRT when the
+//! artifact catalog exists, the native blocked backend otherwise), and
+//! the sharded engine pool vs a single worker under concurrent clients.
 //! Run: `cargo bench --bench perf_hotpath`.
 
-use mtnn::coordinator::{Engine, GemmRequest, Router, RouterConfig};
+use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::experiments::emit;
 use mtnn::gemm::cpu::Matrix;
@@ -176,6 +177,68 @@ fn main() {
         router.metrics.snapshot().render()
     ));
     engine.shutdown();
+
+    // 8. Sharded engine pool vs single worker: serve throughput under 8
+    //    concurrent clients on the native backend. 96^3 requests sit
+    //    below the blocked kernels' internal threading threshold
+    //    (~2 MFLOP), so scaling comes from the worker pool, not from
+    //    intra-GEMM parallelism.
+    let pool_throughput = |workers: usize| -> f64 {
+        let engine = Engine::native_pool(EngineConfig {
+            workers,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        })
+        .expect("native pool");
+        let router = std::sync::Arc::new(Router::new(
+            Selector::train_default(&records),
+            engine.handle(),
+            RouterConfig::default(),
+        ));
+        let (clients, per_client) = (8usize, 24usize);
+        // Warm the artifact path and the decision cache outside the
+        // timed window (decide() reads only gpu + shape).
+        router.warmup(&[GemmShape::new(96, 96, 96)]).unwrap();
+        let _ = router.decide(&GemmRequest {
+            gpu: &GTX1080,
+            shape: GemmShape::new(96, 96, 96),
+            a: Matrix::zeros(1, 1),
+            b: Matrix::zeros(1, 1),
+        });
+        let t0 = std::time::Instant::now();
+        std::thread::scope(|s| {
+            for c in 0..clients {
+                let router = std::sync::Arc::clone(&router);
+                s.spawn(move || {
+                    let a = Matrix::random(96, 96, c as u64 + 1);
+                    let b = Matrix::random(96, 96, c as u64 + 101);
+                    for _ in 0..per_client {
+                        router
+                            .serve(GemmRequest {
+                                gpu: &GTX1080,
+                                shape: GemmShape::new(96, 96, 96),
+                                a: a.clone(),
+                                b: b.clone(),
+                            })
+                            .expect("serve");
+                    }
+                });
+            }
+        });
+        let thpt = (clients * per_client) as f64 / t0.elapsed().as_secs_f64();
+        engine.shutdown();
+        thpt
+    };
+    let single = pool_throughput(1);
+    let pooled = pool_throughput(8);
+    report.push_str(&format!(
+        "router.serve concurrent (8 clients, 96^3 NT, native): \
+         1 worker {single:.0} req/s | 8 workers {pooled:.0} req/s\n"
+    ));
+    report.push_str(&format!(
+        "  ↳ speedup pool(8)/pool(1) serve throughput @8 clients: {:.2}x\n",
+        pooled / single
+    ));
 
     emit("perf_hotpath.txt", &report);
 }

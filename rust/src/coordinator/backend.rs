@@ -1,0 +1,95 @@
+//! The execution-backend abstraction of the engine pool.
+//!
+//! [`ExecBackend`] is the seam between the coordinator's *decision* layer
+//! (router + selector) and its *execution* layer (the worker pool in
+//! [`super::engine`]): anything that can turn an artifact name plus host
+//! matrices into output matrices can serve traffic. The crate ships three
+//! implementations —
+//!
+//! * [`crate::runtime::Runtime`] — PJRT execution of the AOT-compiled
+//!   Pallas/JAX artifact catalog;
+//! * [`crate::gemm::native::NativeExecutor`] — the blocked CPU kernels,
+//!   no catalog required;
+//! * [`crate::gpusim::SimExecutor`] — deterministic simulated-GPU
+//!   execution (oracle numerics + calibrated latency model), so latency
+//!   experiments ride the same serving path as real traffic —
+//!
+//! and tests are free to add their own (e.g. a stalling backend to force
+//! queue-full backpressure).
+//!
+//! The `Send` bound is what lets a worker thread own a `Box<dyn
+//! ExecBackend>` built on the spawning thread. The vendored `xla` stub's
+//! client is a plain struct, so [`crate::runtime::Runtime`] qualifies; with
+//! the real `Rc`-based `xla-rs` client the PJRT impl would instead have to
+//! be constructed on its worker thread (and the pool restricted to
+//! building it there).
+
+use crate::gemm::cpu::Matrix;
+use std::fmt;
+
+/// What actually executes artifacts on an engine worker thread.
+pub trait ExecBackend: Send {
+    /// Run `artifact` on `inputs`, producing the outputs.
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>>;
+
+    /// Eagerly compile / pre-touch artifacts (default: nothing to do).
+    fn warmup(&self, _names: &[&str]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// Human-readable backend identity (for logs and reports).
+    fn name(&self) -> String;
+}
+
+/// Admission-control rejection: every worker queue in the pool is full.
+///
+/// Returned (inside `anyhow::Error`) by `EngineHandle::try_submit` and, via
+/// `RouterConfig::admission`, surfaced to clients that opted into fail-fast
+/// behaviour instead of blocking backpressure. Detect it with
+/// [`EngineBusy::is`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineBusy;
+
+impl EngineBusy {
+    /// Whether `err` is an admission-control rejection.
+    pub fn is(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<EngineBusy>().is_some()
+    }
+}
+
+impl fmt::Display for EngineBusy {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("engine busy: every worker queue is full")
+    }
+}
+
+impl std::error::Error for EngineBusy {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_busy_is_detectable_through_anyhow() {
+        let e = anyhow::Error::new(EngineBusy);
+        assert!(EngineBusy::is(&e));
+        assert!(e.to_string().contains("busy"));
+        let other = anyhow::anyhow!("some other failure");
+        assert!(!EngineBusy::is(&other));
+    }
+
+    #[test]
+    fn default_warmup_is_a_noop() {
+        struct Nop;
+        impl ExecBackend for Nop {
+            fn execute(&self, _a: &str, _i: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+                Ok(vec![])
+            }
+            fn name(&self) -> String {
+                "nop".into()
+            }
+        }
+        assert!(Nop.warmup(&["anything"]).is_ok());
+        assert_eq!(Nop.name(), "nop");
+    }
+}

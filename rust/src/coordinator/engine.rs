@@ -1,21 +1,39 @@
-//! The execution engine: a dedicated thread owning the execution backend,
-//! fed by a bounded command channel. Batches submitted together are
-//! executed back-to-back, amortizing dispatch.
+//! The execution engine: a sharded pool of worker threads, each owning one
+//! [`ExecBackend`] instance and a bounded command queue.
 //!
-//! Two backends share the same engine loop and handle type:
+//! * **Shape-affinity sharding** — jobs hash by artifact name onto a
+//!   worker, so repeated shapes land on the same thread and its adaptive
+//!   micro-batcher can run them back-to-back (caches stay hot, dispatch is
+//!   amortized).
+//! * **Work handoff + backpressure** — when the affine worker's queue is
+//!   full, submission probes the other workers; when *every* queue is
+//!   full, [`EngineHandle::submit`] blocks on the affine worker (bounded
+//!   backpressure, the pre-pool semantics) while
+//!   [`EngineHandle::try_submit`] fails fast with [`EngineBusy`].
+//! * **Adaptive micro-batching** — after dequeuing a job, a worker
+//!   collects same-artifact jobs already queued (and, when
+//!   `batch_window > 0`, keeps waiting up to that window or `max_batch`)
+//!   and executes the run back-to-back; different-artifact jobs pulled
+//!   during collection are deferred, not reordered away.
+//! * **Graceful shutdown** — `Shutdown` is queued behind in-flight work,
+//!   so every job accepted before [`Engine::shutdown`] was called is
+//!   executed (drain), then workers join. A submission *racing* with
+//!   shutdown either fails at submit or has its job rejected with an
+//!   engine-shut-down error — it is never silently dropped.
 //!
-//! * **PJRT** ([`Engine::spawn`]) — the `xla` crate's client is `Rc`-based
-//!   and therefore `!Send`, hence a dedicated thread rather than a pool;
-//! * **native** ([`Engine::native`]) — the blocked CPU kernels from
-//!   [`crate::gemm::blocked`] via [`NativeExecutor`]; no artifact catalog
-//!   required, so the coordinator serves real numerics even without
-//!   `make artifacts`.
+//! A pool of size 1 reproduces the old single-thread engine exactly:
+//! one queue, FIFO service, blocking backpressure.
 
+use super::backend::{EngineBusy, ExecBackend};
 use crate::gemm::cpu::Matrix;
 use crate::gemm::native::NativeExecutor;
+use crate::gpusim::{GpuSpec, SimExecutor};
 use crate::runtime::Runtime;
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// One unit of engine work: run `artifact` on `inputs`, reply on `respond`.
 pub struct EngineJob {
@@ -31,50 +49,149 @@ enum Cmd {
     Shutdown,
 }
 
-/// What actually executes artifacts on the engine thread.
-enum Backend {
-    Pjrt(Runtime),
-    Native(NativeExecutor),
+/// Pool geometry and micro-batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Worker threads (each owns its own backend instance). 1 reproduces
+    /// the single-thread engine semantics. The default is
+    /// `available_parallelism` capped at 4: the native blocked kernels
+    /// are internally multi-threaded above ~2 MFLOP, so a worker per
+    /// core would oversubscribe the CPU quadratically on large GEMMs —
+    /// raise it for small-GEMM-dominated traffic (see perf_hotpath §8).
+    pub workers: usize,
+    /// Bounded queue depth *per worker* — the backpressure surface.
+    pub queue_depth: usize,
+    /// How long a worker waits for more same-artifact jobs before
+    /// executing a partial micro-batch. Zero — the default — never
+    /// waits: a lone job executes immediately (no added latency), and
+    /// jobs already queued back-to-back still batch.
+    pub batch_window: Duration,
+    /// Micro-batch size cap.
+    pub max_batch: usize,
 }
 
-impl Backend {
-    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
-        match self {
-            Backend::Pjrt(rt) => rt.execute(artifact, inputs),
-            Backend::Native(nx) => nx.execute(artifact, inputs),
-        }
-    }
-
-    fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
-        match self {
-            Backend::Pjrt(rt) => rt.warmup(names),
-            // Native kernels have no compile step.
-            Backend::Native(_) => Ok(()),
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1)
+                .min(4),
+            queue_depth: 64,
+            batch_window: Duration::ZERO,
+            max_batch: 16,
         }
     }
 }
 
-/// Cloneable, thread-safe handle to the engine.
+/// Cloneable, thread-safe handle to the engine pool.
 #[derive(Clone)]
 pub struct EngineHandle {
-    tx: mpsc::SyncSender<Cmd>,
+    txs: Arc<Vec<mpsc::SyncSender<Cmd>>>,
+    /// Per-worker in-flight gauges (accepted, not yet completed).
+    depths: Arc<Vec<AtomicU64>>,
 }
 
 impl EngineHandle {
-    /// Submit one job; returns the receiver for its result.
+    /// Pool size.
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Point-in-time per-worker in-flight counts (queued + executing).
+    pub fn queue_depths(&self) -> Vec<u64> {
+        self.depths
+            .iter()
+            .map(|d| d.load(Ordering::Relaxed))
+            .collect()
+    }
+
+    /// The shared depth gauges (attached to `CoordinatorMetrics` so
+    /// snapshots report them).
+    pub fn depth_gauges(&self) -> Arc<Vec<AtomicU64>> {
+        Arc::clone(&self.depths)
+    }
+
+    /// Affine worker for an artifact: same artifact → same worker, so its
+    /// micro-batches stay hot.
+    fn shard_for(&self, artifact: &str) -> usize {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        artifact.hash(&mut h);
+        (h.finish() as usize) % self.txs.len()
+    }
+
+    /// Route a job: affine worker first, handoff to any worker with queue
+    /// room, then either block on the affine worker (`block`) or reject
+    /// with [`EngineBusy`].
+    fn route(&self, job: Box<EngineJob>, block: bool) -> anyhow::Result<()> {
+        let n = self.txs.len();
+        let start = self.shard_for(&job.artifact);
+        let mut cmd = Cmd::Run(job);
+        for probe in 0..n {
+            let idx = (start + probe) % n;
+            self.depths[idx].fetch_add(1, Ordering::Relaxed);
+            match self.txs[idx].try_send(cmd) {
+                Ok(()) => return Ok(()),
+                Err(mpsc::TrySendError::Full(c)) => {
+                    self.depths[idx].fetch_sub(1, Ordering::Relaxed);
+                    cmd = c;
+                }
+                Err(mpsc::TrySendError::Disconnected(_)) => {
+                    self.depths[idx].fetch_sub(1, Ordering::Relaxed);
+                    anyhow::bail!("engine is shut down");
+                }
+            }
+        }
+        if !block {
+            return Err(anyhow::Error::new(EngineBusy));
+        }
+        // Every queue is full: bounded backpressure on the affine worker.
+        self.depths[start].fetch_add(1, Ordering::Relaxed);
+        match self.txs[start].send(cmd) {
+            Ok(()) => Ok(()),
+            Err(_) => {
+                self.depths[start].fetch_sub(1, Ordering::Relaxed);
+                anyhow::bail!("engine is shut down")
+            }
+        }
+    }
+
+    /// Submit one job; returns the receiver for its result. Blocks when
+    /// every worker queue is full (backpressure).
     pub fn submit(
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::Run(Box::new(EngineJob {
+        self.route(
+            Box::new(EngineJob {
                 artifact,
                 inputs,
                 respond: tx,
-            })))
-            .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+            }),
+            true,
+        )?;
+        Ok(rx)
+    }
+
+    /// Fail-fast submission: hand off to any worker with queue room, and
+    /// return [`EngineBusy`] instead of blocking when all queues are full.
+    pub fn try_submit(
+        &self,
+        artifact: String,
+        inputs: Vec<Matrix>,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+        let (tx, rx) = mpsc::channel();
+        self.route(
+            Box::new(EngineJob {
+                artifact,
+                inputs,
+                respond: tx,
+            }),
+            false,
+        )?;
         Ok(rx)
     }
 
@@ -85,91 +202,222 @@ impl EngineHandle {
             .map_err(|_| anyhow::anyhow!("engine dropped the response"))?
     }
 
-    /// Compile artifacts ahead of traffic (no-op on the native backend).
+    /// Compile / pre-touch artifacts ahead of traffic on **every** pool
+    /// worker (each owns its own backend instance, hence its own compile
+    /// cache). No-op on backends without a compile step.
     pub fn warmup(&self, names: &[String]) -> anyhow::Result<()> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::Warmup(names.to_vec(), tx))
-            .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("engine dropped the warmup ack"))?
+        let mut acks = Vec::with_capacity(self.txs.len());
+        for tx in self.txs.iter() {
+            let (ack_tx, ack_rx) = mpsc::channel();
+            tx.send(Cmd::Warmup(names.to_vec(), ack_tx))
+                .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
+            acks.push(ack_rx);
+        }
+        for rx in acks {
+            rx.recv()
+                .map_err(|_| anyhow::anyhow!("engine dropped the warmup ack"))??;
+        }
+        Ok(())
     }
 }
 
-/// The engine: spawn with an artifact dir (PJRT) or [`Engine::native`],
-/// drop (or call shutdown) to stop.
-pub struct Engine {
-    handle: EngineHandle,
-    join: Option<JoinHandle<()>>,
-    tx: mpsc::SyncSender<Cmd>,
-}
-
-fn engine_loop(backend: Backend, rx: mpsc::Receiver<Cmd>) {
-    while let Ok(cmd) = rx.recv() {
+/// One worker: owns its backend, drains its queue, micro-batches
+/// same-artifact runs.
+fn worker_loop(
+    backend: Box<dyn ExecBackend>,
+    rx: mpsc::Receiver<Cmd>,
+    depths: Arc<Vec<AtomicU64>>,
+    me: usize,
+    batch_window: Duration,
+    max_batch: usize,
+) {
+    // Different-artifact commands pulled while collecting a micro-batch
+    // wait here and are serviced, in arrival order, before the next recv.
+    let mut stash: VecDeque<Cmd> = VecDeque::new();
+    let mut draining = false;
+    loop {
+        let cmd = if let Some(c) = stash.pop_front() {
+            c
+        } else if draining {
+            match rx.try_recv() {
+                Ok(c) => c,
+                Err(_) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(c) => c,
+                Err(_) => break, // all handles dropped
+            }
+        };
         match cmd {
             Cmd::Run(job) => {
-                let refs: Vec<&Matrix> = job.inputs.iter().collect();
-                let result = backend.execute(&job.artifact, &refs);
-                // Receiver may have given up; that's fine.
-                let _ = job.respond.send(result);
+                let mut batch = vec![job];
+                // Deferred same-artifact jobs join the batch first.
+                let mut i = 0;
+                while i < stash.len() && batch.len() < max_batch {
+                    let same =
+                        matches!(&stash[i], Cmd::Run(j) if j.artifact == batch[0].artifact);
+                    if same {
+                        if let Some(Cmd::Run(j)) = stash.remove(i) {
+                            batch.push(j);
+                        }
+                    } else {
+                        i += 1;
+                    }
+                }
+                // Adaptive window: wait briefly for more same-artifact
+                // arrivals; anything else is deferred to the stash.
+                if !draining {
+                    let deadline = Instant::now() + batch_window;
+                    while batch.len() < max_batch {
+                        let wait = deadline.saturating_duration_since(Instant::now());
+                        let got = if wait.is_zero() {
+                            rx.try_recv().ok()
+                        } else {
+                            rx.recv_timeout(wait).ok()
+                        };
+                        match got {
+                            Some(Cmd::Run(j)) if j.artifact == batch[0].artifact => {
+                                batch.push(j)
+                            }
+                            Some(Cmd::Shutdown) => {
+                                draining = true;
+                                break;
+                            }
+                            Some(other) => stash.push_back(other),
+                            None => break, // window elapsed / queue empty
+                        }
+                    }
+                }
+                for job in batch {
+                    let refs: Vec<&Matrix> = job.inputs.iter().collect();
+                    let result = backend.execute(&job.artifact, &refs);
+                    // Gauge drops before the response is visible, so a
+                    // caller that just received its result never observes
+                    // a stale depth.
+                    depths[me].fetch_sub(1, Ordering::Relaxed);
+                    // Receiver may have given up; that's fine.
+                    let _ = job.respond.send(result);
+                }
             }
             Cmd::Warmup(names, ack) => {
                 let refs: Vec<&str> = names.iter().map(String::as_str).collect();
                 let _ = ack.send(backend.warmup(&refs));
             }
-            Cmd::Shutdown => break,
+            // Drain: service the stash and whatever is still queued, then
+            // exit instead of blocking for more work.
+            Cmd::Shutdown => draining = true,
+        }
+    }
+    // Teardown sweep: a submit racing with shutdown can land a command
+    // after the drain's last empty `try_recv`. Fail those explicitly —
+    // the submitter gets a clear error and the depth gauge stays
+    // balanced — instead of letting the channel drop them silently.
+    while let Ok(cmd) = rx.try_recv() {
+        match cmd {
+            Cmd::Run(job) => {
+                depths[me].fetch_sub(1, Ordering::Relaxed);
+                let _ = job.respond.send(Err(anyhow::anyhow!("engine is shut down")));
+            }
+            Cmd::Warmup(_, ack) => {
+                let _ = ack.send(Err(anyhow::anyhow!("engine is shut down")));
+            }
+            Cmd::Shutdown => {}
         }
     }
 }
 
+/// The engine pool: construct with a backend factory ([`Engine::pool`]) or
+/// one of the named constructors; drop (or call [`Engine::shutdown`]) to
+/// drain and stop.
+pub struct Engine {
+    handle: EngineHandle,
+    joins: Vec<JoinHandle<()>>,
+}
+
 impl Engine {
-    /// Spawn the PJRT engine thread. `queue_depth` bounds the command
-    /// channel — the backpressure surface of the whole coordinator.
-    pub fn spawn(artifact_dir: std::path::PathBuf, queue_depth: usize) -> anyhow::Result<Engine> {
-        let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
-        // Fail fast on a bad artifact dir: probe the manifest on the caller
-        // thread (cheap), then hand the dir to the engine thread which
-        // builds the actual PJRT client.
-        crate::runtime::Manifest::load(&artifact_dir)?;
-        let (ready_tx, ready_rx) = mpsc::channel::<anyhow::Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("mtnn-engine".into())
-            .spawn(move || {
-                let rt = match Runtime::new(&artifact_dir) {
-                    Ok(rt) => {
-                        let _ = ready_tx.send(Ok(()));
-                        rt
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                engine_loop(Backend::Pjrt(rt), rx);
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread died during startup"))??;
-        let handle = EngineHandle { tx: tx.clone() };
+    /// Spawn a worker pool; `make(i)` builds worker `i`'s backend (called
+    /// on the caller thread, so construction failures surface before any
+    /// thread starts).
+    pub fn pool<F>(config: EngineConfig, mut make: F) -> anyhow::Result<Engine>
+    where
+        F: FnMut(usize) -> anyhow::Result<Box<dyn ExecBackend>>,
+    {
+        let workers = config.workers.max(1);
+        let queue_depth = config.queue_depth.max(1);
+        let max_batch = config.max_batch.max(1);
+        let mut backends = Vec::with_capacity(workers);
+        for i in 0..workers {
+            backends.push(make(i)?);
+        }
+        let depths: Arc<Vec<AtomicU64>> =
+            Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect());
+        let mut txs = Vec::with_capacity(workers);
+        let mut joins = Vec::with_capacity(workers);
+        for (i, backend) in backends.into_iter().enumerate() {
+            let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
+            txs.push(tx);
+            let depths = Arc::clone(&depths);
+            joins.push(
+                std::thread::Builder::new()
+                    .name(format!("mtnn-engine-{i}"))
+                    .spawn(move || {
+                        worker_loop(backend, rx, depths, i, config.batch_window, max_batch)
+                    })?,
+            );
+        }
         Ok(Engine {
-            handle,
-            join: Some(join),
-            tx,
+            handle: EngineHandle {
+                txs: Arc::new(txs),
+                depths,
+            },
+            joins,
         })
     }
 
-    /// Spawn the native engine thread: blocked CPU kernels, no artifact
-    /// catalog. The default backend when PJRT artifacts are absent.
+    /// PJRT pool over an artifact directory. Every worker owns its own
+    /// [`Runtime`] (client + executable cache); warmup broadcasts, so each
+    /// compiles its own copy.
+    pub fn pjrt(artifact_dir: std::path::PathBuf, config: EngineConfig) -> anyhow::Result<Engine> {
+        Engine::pool(config, |_| {
+            Ok(Box::new(Runtime::new(&artifact_dir)?) as Box<dyn ExecBackend>)
+        })
+    }
+
+    /// Single-worker PJRT engine (the pre-pool constructor, kept for
+    /// drop-in compatibility).
+    pub fn spawn(artifact_dir: std::path::PathBuf, queue_depth: usize) -> anyhow::Result<Engine> {
+        Engine::pjrt(
+            artifact_dir,
+            EngineConfig {
+                workers: 1,
+                queue_depth,
+                ..EngineConfig::default()
+            },
+        )
+    }
+
+    /// Native pool: blocked CPU kernels, no artifact catalog required. The
+    /// default backend when PJRT artifacts are absent.
+    pub fn native_pool(config: EngineConfig) -> anyhow::Result<Engine> {
+        Engine::pool(config, |_| Ok(Box::new(NativeExecutor) as Box<dyn ExecBackend>))
+    }
+
+    /// Single-worker native engine (the pre-pool constructor, kept for
+    /// drop-in compatibility).
     pub fn native(queue_depth: usize) -> anyhow::Result<Engine> {
-        let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
-        let join = std::thread::Builder::new()
-            .name("mtnn-engine-native".into())
-            .spawn(move || engine_loop(Backend::Native(NativeExecutor), rx))?;
-        let handle = EngineHandle { tx: tx.clone() };
-        Ok(Engine {
-            handle,
-            join: Some(join),
-            tx,
+        Engine::native_pool(EngineConfig {
+            workers: 1,
+            queue_depth,
+            ..EngineConfig::default()
+        })
+    }
+
+    /// Simulated-GPU pool: oracle numerics plus the calibrated timing
+    /// model of `gpu` — latency experiments through the serving path.
+    pub fn sim(gpu: &'static GpuSpec, config: EngineConfig) -> anyhow::Result<Engine> {
+        Engine::pool(config, |_| {
+            Ok(Box::new(SimExecutor::new(gpu)) as Box<dyn ExecBackend>)
         })
     }
 
@@ -177,10 +425,17 @@ impl Engine {
         self.handle.clone()
     }
 
-    /// Graceful stop: drain queued commands, then join.
+    /// Graceful stop: each worker drains its queue (every accepted job is
+    /// executed), then joins.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(j) = self.join.take() {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        for tx in self.handle.txs.iter() {
+            let _ = tx.send(Cmd::Shutdown);
+        }
+        for j in self.joins.drain(..) {
             let _ = j.join();
         }
     }
@@ -188,10 +443,7 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        let _ = self.tx.send(Cmd::Shutdown);
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        self.stop();
     }
 }
 
@@ -207,10 +459,7 @@ mod tests {
         let a = Matrix::random(32, 48, 1);
         let b = Matrix::random(24, 48, 2);
         let expect = matmul_nt(&a, &b);
-        let out = engine
-            .handle()
-            .run("nt_32x24x48", vec![a, b])
-            .unwrap();
+        let out = engine.handle().run("nt_32x24x48", vec![a, b]).unwrap();
         assert_eq!(out.len(), 1);
         assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
         engine.shutdown();
@@ -236,6 +485,76 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("native backend"), "{err}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn pool_executes_across_workers() {
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 4,
+            queue_depth: 4,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let handle = engine.handle();
+        assert_eq!(handle.workers(), 4);
+        let mut pend = Vec::new();
+        for i in 0..12usize {
+            let m = 16 + (i % 4) * 8;
+            let a = Matrix::random(m, m, i as u64);
+            let b = Matrix::random(m, m, 100 + i as u64);
+            let expect = matmul_nt(&a, &b);
+            pend.push((
+                expect,
+                handle.submit(format!("nt_{m}x{m}x{m}"), vec![a, b]).unwrap(),
+            ));
+        }
+        for (expect, rx) in pend {
+            let out = rx.recv().unwrap().unwrap();
+            assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
+        }
+        assert_eq!(handle.queue_depths(), vec![0, 0, 0, 0]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn warmup_reaches_every_worker() {
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 3,
+            queue_depth: 4,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        engine
+            .handle()
+            .warmup(&["nt_32x32x32".to_string()])
+            .unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn same_artifact_burst_micro_batches_correctly() {
+        // Correctness under batching: a burst of identical artifacts must
+        // come back right regardless of how the worker groups them.
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 1,
+            queue_depth: 32,
+            batch_window: Duration::from_micros(200),
+            max_batch: 4,
+        })
+        .unwrap();
+        let handle = engine.handle();
+        let mut pend = Vec::new();
+        for i in 0..10u64 {
+            let a = Matrix::random(24, 16, i);
+            let b = Matrix::random(8, 16, 100 + i);
+            let expect = matmul_nt(&a, &b);
+            pend.push((expect, handle.submit("nt_24x8x16".into(), vec![a, b]).unwrap()));
+        }
+        for (expect, rx) in pend {
+            let out = rx.recv().unwrap().unwrap();
+            assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
+        }
         engine.shutdown();
     }
 }

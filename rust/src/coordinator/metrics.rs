@@ -1,10 +1,120 @@
-//! Coordinator metrics: selection counts, fallbacks, latency distribution,
-//! throughput. Lock-free-enough (atomics + a mutex-guarded latency buffer).
+//! Coordinator metrics: selection counts, fallbacks, admission-control
+//! rejections, per-worker queue-depth gauges, and latency percentiles from
+//! a lock-free fixed-bucket histogram — nothing on the hot path takes a
+//! lock or allocates (the pre-pool implementation pushed every latency
+//! into a `Mutex<Vec<f64>>`, which serialized concurrent clients exactly
+//! where the worker pool is supposed to let them scale).
 
 use crate::selector::SelectionReason;
-use crate::util::stats::percentile;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+
+/// Histogram buckets: 4 linear sub-buckets per power of two of
+/// microseconds (~19% relative resolution), 256 buckets covering the full
+/// `u64` µs range.
+const BUCKETS: usize = 256;
+
+/// Bucket for a latency in whole microseconds. Monotone in `us`.
+fn bucket_index(us: u64) -> usize {
+    if us < 4 {
+        return us as usize;
+    }
+    let l = 63 - us.leading_zeros() as usize; // floor(log2), >= 2
+    let sub = ((us >> (l - 2)) & 3) as usize;
+    ((l - 1) * 4 + sub).min(BUCKETS - 1)
+}
+
+/// Inclusive lower bound of bucket `i`, in µs.
+fn bucket_lower(i: usize) -> u64 {
+    if i < 4 {
+        return i as u64;
+    }
+    let l = i / 4 + 1;
+    let sub = (i % 4) as u64;
+    (4 + sub) << (l - 2)
+}
+
+/// Width of bucket `i`, in µs.
+fn bucket_width(i: usize) -> u64 {
+    if i < 4 {
+        1
+    } else {
+        1u64 << (i / 4 - 1)
+    }
+}
+
+/// Estimate the `q`-th percentile from bucket counts: find the bucket
+/// holding the rank, interpolate linearly inside it, and clamp to the
+/// observed maximum (interpolation can overshoot in a sparse top bucket).
+fn percentile_of(counts: &[u64], total: u64, max_us: u64, q: f64) -> f64 {
+    let rank = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+    let mut cum = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if cum + c >= rank {
+            let into = (rank - cum) as f64 / c as f64;
+            let est = bucket_lower(i) as f64 + into * bucket_width(i) as f64;
+            return est.min(max_us as f64);
+        }
+        cum += c;
+    }
+    max_us as f64
+}
+
+/// Lock-free latency histogram (µs). Recording is a few relaxed atomic
+/// adds; percentile queries copy the counts once and walk them.
+pub struct LatencyHistogram {
+    counts: Box<[AtomicU64]>,
+    sum_ns: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram {
+            counts: (0..BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            sum_ns: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record_us(&self, us: f64) {
+        let us_u = if us.is_finite() && us > 0.0 {
+            us.round() as u64
+        } else {
+            0
+        };
+        self.counts[bucket_index(us_u)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns
+            .fetch_add((us.max(0.0) * 1e3) as u64, Ordering::Relaxed);
+        self.max_us.fetch_max(us_u, Ordering::Relaxed);
+    }
+
+    /// `(p50, p95, p99, mean)` in µs; all NaN when empty.
+    fn summary(&self) -> (f64, f64, f64, f64) {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return (f64::NAN, f64::NAN, f64::NAN, f64::NAN);
+        }
+        let max_us = self.max_us.load(Ordering::Relaxed);
+        let mean = self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3 / total as f64;
+        (
+            percentile_of(&counts, total, max_us, 50.0),
+            percentile_of(&counts, total, max_us, 95.0),
+            percentile_of(&counts, total, max_us, 99.0),
+            mean,
+        )
+    }
+}
 
 /// Shared metrics sink.
 #[derive(Default)]
@@ -12,6 +122,10 @@ pub struct CoordinatorMetrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub failed: AtomicU64,
+    /// Admission-control rejections: every worker queue was full and the
+    /// router was configured to fail fast (`EngineBusy`). Busy rejections
+    /// also count toward `failed`.
+    pub busy_rejections: AtomicU64,
     pub selected_nt: AtomicU64,
     pub selected_tnn: AtomicU64,
     pub memory_fallbacks: AtomicU64,
@@ -20,7 +134,9 @@ pub struct CoordinatorMetrics {
     /// (those are execution counts); this counter is what lets a reader
     /// tell a forced baseline run from genuine MTNN predictions.
     pub forced: AtomicU64,
-    latencies_us: Mutex<Vec<f64>>,
+    latency: LatencyHistogram,
+    /// Engine worker queue-depth gauges, attached by `Router::new`.
+    worker_depths: Mutex<Option<Arc<Vec<AtomicU64>>>>,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -29,6 +145,7 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub completed: u64,
     pub failed: u64,
+    pub busy_rejections: u64,
     pub selected_nt: u64,
     pub selected_tnn: u64,
     pub memory_fallbacks: u64,
@@ -37,6 +154,9 @@ pub struct MetricsSnapshot {
     pub p95_us: f64,
     pub p99_us: f64,
     pub mean_us: f64,
+    /// Per-worker in-flight counts at snapshot time (empty when no engine
+    /// gauges are attached).
+    pub worker_depths: Vec<u64>,
 }
 
 impl CoordinatorMetrics {
@@ -58,28 +178,37 @@ impl CoordinatorMetrics {
     }
 
     pub fn record_latency_us(&self, us: f64) {
-        self.latencies_us.lock().unwrap().push(us);
+        self.latency.record_us(us);
+    }
+
+    /// Wire the engine pool's per-worker depth gauges into snapshots.
+    pub fn attach_worker_depths(&self, gauges: Arc<Vec<AtomicU64>>) {
+        *self.worker_depths.lock().unwrap() = Some(gauges);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let lat = self.latencies_us.lock().unwrap();
-        let mean = if lat.is_empty() {
-            f64::NAN
-        } else {
-            lat.iter().sum::<f64>() / lat.len() as f64
-        };
+        let (p50_us, p95_us, p99_us, mean_us) = self.latency.summary();
+        let worker_depths = self
+            .worker_depths
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|g| g.iter().map(|d| d.load(Ordering::Relaxed)).collect())
+            .unwrap_or_default();
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
             selected_nt: self.selected_nt.load(Ordering::Relaxed),
             selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
             memory_fallbacks: self.memory_fallbacks.load(Ordering::Relaxed),
             forced: self.forced.load(Ordering::Relaxed),
-            p50_us: percentile(&lat, 50.0),
-            p95_us: percentile(&lat, 95.0),
-            p99_us: percentile(&lat, 99.0),
-            mean_us: mean,
+            p50_us,
+            p95_us,
+            p99_us,
+            mean_us,
+            worker_depths,
         }
     }
 }
@@ -87,11 +216,12 @@ impl CoordinatorMetrics {
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
         format!(
-            "requests={} completed={} failed={} | NT={} TNN={} fallback={} forced={} | \
-             latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us",
+            "requests={} completed={} failed={} busy={} | NT={} TNN={} fallback={} forced={} | \
+             latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us | queues={:?}",
             self.requests,
             self.completed,
             self.failed,
+            self.busy_rejections,
             self.selected_nt,
             self.selected_tnn,
             self.memory_fallbacks,
@@ -99,7 +229,8 @@ impl MetricsSnapshot {
             self.p50_us,
             self.p95_us,
             self.p99_us,
-            self.mean_us
+            self.mean_us,
+            self.worker_depths
         )
     }
 }
@@ -143,8 +274,10 @@ mod tests {
             m.record_latency_us(i as f64);
         }
         let s = m.snapshot();
-        assert!((s.p50_us - 50.5).abs() < 1.0);
-        assert!(s.p99_us > 98.0);
+        assert!((s.p50_us - 50.5).abs() < 4.0, "p50={}", s.p50_us);
+        assert!(s.p99_us > 98.0, "p99={}", s.p99_us);
+        assert!(s.p99_us <= 100.0, "p99 clamps to the observed max");
+        assert!((s.mean_us - 50.5).abs() < 0.1, "mean={}", s.mean_us);
         assert!(s.render().contains("p50"));
     }
 
@@ -153,5 +286,56 @@ mod tests {
         let s = CoordinatorMetrics::default().snapshot();
         assert!(s.p50_us.is_nan());
         assert!(s.mean_us.is_nan());
+    }
+
+    #[test]
+    fn histogram_buckets_partition_the_axis() {
+        // Every value lands in exactly the bucket whose [lower, lower+width)
+        // range contains it, and indices are monotone.
+        let mut prev = 0usize;
+        for us in 0..100_000u64 {
+            let i = bucket_index(us);
+            assert!(i >= prev, "monotone: us={us} i={i} prev={prev}");
+            assert!(
+                bucket_lower(i) <= us && us < bucket_lower(i) + bucket_width(i),
+                "us={us} i={i} lower={} width={}",
+                bucket_lower(i),
+                bucket_width(i)
+            );
+            prev = i;
+        }
+        // The top bucket absorbs everything up to u64::MAX without panic.
+        assert!(bucket_index(u64::MAX) < BUCKETS);
+    }
+
+    #[test]
+    fn percentiles_respect_bucket_resolution() {
+        let m = CoordinatorMetrics::default();
+        // A single value: every percentile is (approximately) it.
+        m.record_latency_us(1000.0);
+        let s = m.snapshot();
+        for p in [s.p50_us, s.p95_us, s.p99_us] {
+            assert!((p - 1000.0).abs() / 1000.0 < 0.25, "p={p}");
+        }
+    }
+
+    #[test]
+    fn busy_rejections_render() {
+        let m = CoordinatorMetrics::default();
+        m.busy_rejections.fetch_add(3, Ordering::Relaxed);
+        assert!(m.snapshot().render().contains("busy=3"));
+    }
+
+    #[test]
+    fn worker_depth_gauges_appear_in_snapshots() {
+        let m = CoordinatorMetrics::default();
+        assert!(m.snapshot().worker_depths.is_empty());
+        let gauges = Arc::new(vec![AtomicU64::new(2), AtomicU64::new(0)]);
+        m.attach_worker_depths(Arc::clone(&gauges));
+        assert_eq!(m.snapshot().worker_depths, vec![2, 0]);
+        gauges[1].fetch_add(5, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.worker_depths, vec![2, 5]);
+        assert!(s.render().contains("queues=[2, 5]"), "{}", s.render());
     }
 }

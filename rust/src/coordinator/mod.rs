@@ -1,32 +1,46 @@
 //! L3 coordinator: the serving layer that turns MTNN into a GEMM service.
 //!
-//! Architecture (vLLM-router-like, adapted to a single-host PJRT engine):
+//! The decision layer (router + selector) is separated from a pluggable,
+//! concurrent execution layer behind the [`ExecBackend`] trait:
 //!
 //! ```text
-//!   clients ──► Router (Send + Sync handle)
-//!                 │  per-request: selector.select(gpu, m, n, k)
+//!   clients ──► Router (Send + Sync; share via Arc)
+//!                 │  per-request: Algorithm 2 (GBDT + memory fallback),
+//!                 │  memoized in a lock-free shape-keyed DecisionCache
+//!                 │  admission control: block (backpressure) or
+//!                 │  fail fast with EngineBusy when every queue is full
 //!                 ▼
-//!               bounded queue ──► Batcher (groups by artifact)
-//!                                     │
-//!                                     ▼
-//!                             Engine thread (owns the backend: the PJRT
-//!                             Runtime — Rc-based and !Send, hence a
-//!                             dedicated thread, not a pool — or the
-//!                             native blocked-GEMM executor when no
-//!                             artifact catalog is present)
+//!         shape-affinity shard (hash(artifact) → worker)
+//!          │              │              │
+//!          ▼              ▼              ▼
+//!     ┌─ worker 0 ─┐ ┌─ worker 1 ─┐ ┌─ worker N ─┐   bounded queue each;
+//!     │ micro-     │ │ micro-     │ │ micro-     │   handoff to a free
+//!     │ batcher    │ │ batcher    │ │ batcher    │   worker on queue-full
+//!     │ dyn Exec-  │ │ dyn Exec-  │ │ dyn Exec-  │
+//!     │ Backend    │ │ Backend    │ │ Backend    │
+//!     └────────────┘ └────────────┘ └────────────┘
 //! ```
 //!
-//! Responses travel back through per-request channels; metrics count
-//! selections, fallbacks, forced overrides, batching efficiency and
-//! latency percentiles. Routing decisions are memoized per
-//! `(gpu, m, n, k)` in a lock-free shape-keyed cache
-//! ([`crate::selector::cache::DecisionCache`]), so steady-state traffic
-//! pays a table lookup instead of a GBDT descent.
+//! Each worker owns one backend instance — PJRT
+//! ([`crate::runtime::Runtime`]), native blocked CPU kernels
+//! ([`crate::gemm::native::NativeExecutor`]), or the deterministic
+//! simulated GPU ([`crate::gpusim::SimExecutor`]) — and an adaptive
+//! micro-batcher: after dequeuing a job it collects same-artifact jobs
+//! for a small window (or up to `max_batch`) and executes them
+//! back-to-back, which is why sharding is by artifact hash (same shape →
+//! same worker → hot batches). Responses travel back through per-request
+//! channels; metrics count selections, fallbacks, forced overrides, busy
+//! rejections, per-worker queue depths, and latency percentiles from a
+//! lock-free fixed-bucket histogram. Shutdown drains: every accepted job
+//! executes before the workers join. A pool of size 1 reproduces the old
+//! single-thread engine semantics exactly.
 
+pub mod backend;
 pub mod engine;
 pub mod metrics;
 pub mod router;
 
-pub use engine::{Engine, EngineHandle};
-pub use metrics::CoordinatorMetrics;
-pub use router::{GemmRequest, GemmResponse, Router, RouterConfig};
+pub use backend::{EngineBusy, ExecBackend};
+pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob};
+pub use metrics::{CoordinatorMetrics, MetricsSnapshot};
+pub use router::{AdmissionControl, GemmRequest, GemmResponse, Router, RouterConfig};

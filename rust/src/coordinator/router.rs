@@ -1,9 +1,12 @@
 //! The router: the client-facing API of the GEMM service. For each
 //! request it runs Algorithm 2 (O(1) features → GBDT predict → memory
 //! fallback), maps (shape, algorithm) onto a catalog artifact, and hands
-//! the job to the engine. A micro-batcher groups same-artifact requests
-//! submitted together so the engine executes them back-to-back.
+//! the job to the engine pool, whose shape-affinity sharding and adaptive
+//! micro-batcher group same-artifact work engine-side. Admission control
+//! decides what happens when every worker queue is full: block (bounded
+//! backpressure, the default) or fail fast with [`EngineBusy`].
 
+use super::backend::EngineBusy;
 use super::engine::EngineHandle;
 use super::metrics::CoordinatorMetrics;
 use crate::gemm::cpu::Matrix;
@@ -12,6 +15,7 @@ use crate::gemm::{Algorithm, GemmShape};
 use crate::gpusim::GpuSpec;
 use crate::selector::cache::DecisionCache;
 use crate::selector::{SelectionReason, Selector};
+use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
@@ -36,6 +40,19 @@ pub struct GemmResponse {
     pub latency: std::time::Duration,
 }
 
+/// What to do when every engine worker queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionControl {
+    /// Block the caller until the affine worker has room (bounded
+    /// backpressure — the pre-pool semantics).
+    #[default]
+    Block,
+    /// Try the affine worker, hand off to any worker with room, and fail
+    /// fast with [`EngineBusy`] when all queues are full (counted in
+    /// `CoordinatorMetrics::busy_rejections`).
+    RejectWhenBusy,
+}
+
 /// Router configuration.
 #[derive(Debug, Clone)]
 pub struct RouterConfig {
@@ -46,6 +63,8 @@ pub struct RouterConfig {
     /// pays a lock-free table lookup instead of a GBDT descent. On by
     /// default; disable for selection microbenchmarks.
     pub cache_decisions: bool,
+    /// Queue-full policy (see [`AdmissionControl`]).
+    pub admission: AdmissionControl,
 }
 
 impl Default for RouterConfig {
@@ -53,6 +72,7 @@ impl Default for RouterConfig {
         RouterConfig {
             force: None,
             cache_decisions: true,
+            admission: AdmissionControl::default(),
         }
     }
 }
@@ -68,10 +88,12 @@ pub struct Router {
 
 impl Router {
     pub fn new(selector: Selector, engine: EngineHandle, config: RouterConfig) -> Router {
+        let metrics = Arc::new(CoordinatorMetrics::default());
+        metrics.attach_worker_depths(engine.depth_gauges());
         Router {
             selector,
             engine,
-            metrics: Arc::new(CoordinatorMetrics::default()),
+            metrics,
             config,
             cache: DecisionCache::default(),
         }
@@ -96,27 +118,59 @@ impl Router {
         dec
     }
 
+    /// Pre-compile / pre-touch the artifacts behind `shapes` on every pool
+    /// worker, covering both selectable algorithms so a later decision
+    /// flip never pays a cold compile. Saves callers from hand-building
+    /// artifact-name strings.
+    pub fn warmup(&self, shapes: &[GemmShape]) -> anyhow::Result<()> {
+        let mut names = Vec::with_capacity(shapes.len() * 2);
+        for &shape in shapes {
+            names.push(XlaBackend::artifact_name(shape, Algorithm::Nt));
+            names.push(XlaBackend::artifact_name(shape, Algorithm::Tnn));
+        }
+        names.sort();
+        names.dedup();
+        self.engine.warmup(&names)
+    }
+
+    /// Submit through the configured admission policy, counting fail-fast
+    /// rejections.
+    fn submit(
+        &self,
+        artifact: String,
+        inputs: Vec<Matrix>,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+        let res = match self.config.admission {
+            AdmissionControl::Block => self.engine.submit(artifact, inputs),
+            AdmissionControl::RejectWhenBusy => self.engine.try_submit(artifact, inputs),
+        };
+        if res.as_ref().err().is_some_and(EngineBusy::is) {
+            self.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
+        }
+        res
+    }
+
     /// Serve one request synchronously.
     pub fn serve(&self, req: GemmRequest) -> anyhow::Result<GemmResponse> {
         let t0 = Instant::now();
-        self.metrics
-            .requests
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (algo, reason) = self.decide(&req);
         self.metrics.record_selection(algo, reason);
         let artifact = XlaBackend::artifact_name(req.shape, algo);
-        let result = self.engine.run(&artifact, vec![req.a, req.b]);
-        match result {
-            Ok(mut outs) => {
-                anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
+        let outcome = self.submit(artifact.clone(), vec![req.a, req.b]).and_then(|rx| {
+            let mut outs = rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine dropped the response"))??;
+            anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
+            Ok(outs.remove(0))
+        });
+        match outcome {
+            Ok(output) => {
                 let latency = t0.elapsed();
-                self.metrics
-                    .completed
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                self.metrics
-                    .record_latency_us(latency.as_secs_f64() * 1e6);
+                self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.record_latency_us(latency.as_secs_f64() * 1e6);
                 Ok(GemmResponse {
-                    output: outs.remove(0),
+                    output,
                     algorithm: algo,
                     reason,
                     artifact,
@@ -124,90 +178,91 @@ impl Router {
                 })
             }
             Err(e) => {
-                self.metrics
-                    .failed
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
                 Err(e)
             }
         }
     }
 
-    /// Serve a batch: requests are grouped by decided artifact so the
-    /// engine runs same-shape executables back-to-back (dispatch
-    /// amortization); responses come back in submission order.
+    /// Serve a batch: every request is decided and submitted up front
+    /// (the engine's shape-affinity sharding and micro-batcher regroup
+    /// same-artifact jobs worker-side), then responses are collected in
+    /// submission order. Each failure — at submit or at execution —
+    /// counts toward `failed` exactly once.
     pub fn serve_batch(&self, reqs: Vec<GemmRequest>) -> Vec<anyhow::Result<GemmResponse>> {
-        let n = reqs.len();
-        // Decide everything first.
-        let mut decided: Vec<(usize, GemmRequest, Algorithm, SelectionReason, String)> = reqs
-            .into_iter()
-            .enumerate()
-            .map(|(i, r)| {
-                self.metrics
-                    .requests
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let (algo, reason) = self.decide(&r);
-                self.metrics.record_selection(algo, reason);
-                let artifact = XlaBackend::artifact_name(r.shape, algo);
-                (i, r, algo, reason, artifact)
-            })
-            .collect();
-        // Group by artifact (stable sort keeps submission order per group).
-        decided.sort_by(|a, b| a.4.cmp(&b.4).then(a.0.cmp(&b.0)));
+        enum Pending {
+            Failed(anyhow::Error),
+            Wait {
+                algo: Algorithm,
+                reason: SelectionReason,
+                artifact: String,
+                t0: Instant,
+                rx: mpsc::Receiver<anyhow::Result<Vec<Matrix>>>,
+            },
+        }
 
-        // Pipeline: submit each group's jobs, then collect.
-        let mut pending: Vec<(
-            usize,
-            Algorithm,
-            SelectionReason,
-            String,
-            Instant,
-            mpsc::Receiver<anyhow::Result<Vec<Matrix>>>,
-        )> = Vec::with_capacity(n);
-        for (i, r, algo, reason, artifact) in decided {
+        let mut pending: Vec<Pending> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            let (algo, reason) = self.decide(&req);
+            self.metrics.record_selection(algo, reason);
+            let artifact = XlaBackend::artifact_name(req.shape, algo);
             let t0 = Instant::now();
-            match self.engine.submit(artifact.clone(), vec![r.a, r.b]) {
-                Ok(rx) => pending.push((i, algo, reason, artifact, t0, rx)),
+            match self.submit(artifact.clone(), vec![req.a, req.b]) {
+                Ok(rx) => pending.push(Pending::Wait {
+                    algo,
+                    reason,
+                    artifact,
+                    t0,
+                    rx,
+                }),
                 Err(e) => {
-                    self.metrics
-                        .failed
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    // Represent the submission failure in-order below.
-                    let (tx, rx) = mpsc::channel();
-                    let _ = tx.send(Err(e));
-                    pending.push((i, algo, reason, artifact, t0, rx));
+                    self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    pending.push(Pending::Failed(e));
                 }
             }
         }
-        let mut out: Vec<Option<anyhow::Result<GemmResponse>>> =
-            (0..n).map(|_| None).collect();
-        for (i, algo, reason, artifact, t0, rx) in pending {
-            let res = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("engine dropped response"))
-                .and_then(|r| r)
-                .and_then(|mut outs| {
-                    anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
-                    let latency = t0.elapsed();
-                    self.metrics
-                        .completed
-                        .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                    self.metrics.record_latency_us(latency.as_secs_f64() * 1e6);
-                    Ok(GemmResponse {
-                        output: outs.remove(0),
-                        algorithm: algo,
-                        reason,
-                        artifact: artifact.clone(),
-                        latency,
-                    })
-                });
-            if res.is_err() {
-                self.metrics
-                    .failed
-                    .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-            }
-            out[i] = Some(res);
-        }
-        out.into_iter().map(|o| o.expect("all slots filled")).collect()
+        pending
+            .into_iter()
+            .map(|p| match p {
+                Pending::Failed(e) => Err(e),
+                Pending::Wait {
+                    algo,
+                    reason,
+                    artifact,
+                    t0,
+                    rx,
+                } => {
+                    let res = rx
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("engine dropped the response"))
+                        .and_then(|r| r)
+                        .and_then(|mut outs| {
+                            anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
+                            Ok(outs.remove(0))
+                        });
+                    match res {
+                        Ok(output) => {
+                            let latency = t0.elapsed();
+                            self.metrics.completed.fetch_add(1, Ordering::Relaxed);
+                            self.metrics
+                                .record_latency_us(latency.as_secs_f64() * 1e6);
+                            Ok(GemmResponse {
+                                output,
+                                algorithm: algo,
+                                reason,
+                                artifact,
+                                latency,
+                            })
+                        }
+                        Err(e) => {
+                            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            Err(e)
+                        }
+                    }
+                }
+            })
+            .collect()
     }
 }
 
@@ -241,6 +296,7 @@ mod tests {
         let c = RouterConfig::default();
         assert!(c.force.is_none());
         assert!(c.cache_decisions);
+        assert_eq!(c.admission, AdmissionControl::Block);
     }
 
     #[test]
@@ -307,6 +363,18 @@ mod tests {
             let resp = resp.unwrap_or_else(|e| panic!("request {i}: {e}"));
             assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
         }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn warmup_maps_shapes_to_both_algorithms() {
+        // Native warmup is a no-op per artifact, so this proves the
+        // name-building path end-to-end (bad shapes would still be Ok on
+        // native — the PJRT integration test covers compile failures).
+        let (engine, router) = native_router(RouterConfig::default());
+        router
+            .warmup(&[GemmShape::new(128, 128, 128), GemmShape::new(64, 32, 48)])
+            .unwrap();
         engine.shutdown();
     }
 }

@@ -16,7 +16,9 @@ use super::cpu::Matrix;
 pub struct NativeExecutor;
 
 /// Parse `"512x256x128"` → `[512, 256, 128]` (or 2 dims for transpose).
-fn parse_dims(spec: &str, want: usize) -> anyhow::Result<Vec<usize>> {
+/// Shared with the simulated-GPU executor, which speaks the same artifact
+/// grammar ([`crate::gpusim::SimExecutor`]).
+pub(crate) fn parse_dims(spec: &str, want: usize) -> anyhow::Result<Vec<usize>> {
     let dims: Vec<usize> = spec
         .split('x')
         .map(|p| p.parse::<usize>())
@@ -29,7 +31,13 @@ fn parse_dims(spec: &str, want: usize) -> anyhow::Result<Vec<usize>> {
     Ok(dims)
 }
 
-fn check_shape(name: &str, idx: usize, m: &Matrix, rows: usize, cols: usize) -> anyhow::Result<()> {
+pub(crate) fn check_shape(
+    name: &str,
+    idx: usize,
+    m: &Matrix,
+    rows: usize,
+    cols: usize,
+) -> anyhow::Result<()> {
     anyhow::ensure!(
         m.rows == rows && m.cols == cols,
         "{name}: input {idx} is {}x{}, expected {rows}x{cols}",
@@ -88,6 +96,18 @@ impl NativeExecutor {
                 "artifact '{artifact}' not supported by the native backend (kind '{other}')"
             ),
         }
+    }
+}
+
+impl crate::coordinator::backend::ExecBackend for NativeExecutor {
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        NativeExecutor::execute(self, artifact, inputs)
+    }
+
+    // Native kernels have no compile step: the default no-op warmup.
+
+    fn name(&self) -> String {
+        "native".into()
     }
 }
 

@@ -2,9 +2,12 @@
 //! the PJRT CPU client. This is the *functional* plane of the GEMM service
 //! — numerics are real; GPU timing comes from [`super::sim::SimBackend`].
 //!
-//! NOTE: `xla::PjRtClient` is not `Send` (it is `Rc`-based), so an
-//! `XlaBackend` lives on one thread; the coordinator owns one inside its
-//! engine thread (see `coordinator::engine`).
+//! NOTE: with the real `xla-rs` crate, `xla::PjRtClient` is `Rc`-based and
+//! not `Send`, so an `XlaBackend` lives on one thread. The coordinator's
+//! engine pool gives each worker its own `Runtime` instance instead (see
+//! `coordinator::engine`); the vendored stub client is a plain `Send`
+//! struct, which is what lets those instances be built on the caller
+//! thread.
 
 use super::cpu::Matrix;
 use super::{Algorithm, GemmShape};

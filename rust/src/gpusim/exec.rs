@@ -1,0 +1,225 @@
+//! Deterministic simulated-GPU execution backend.
+//!
+//! [`SimExecutor`] serves the coordinator's artifact grammar (`nt_MxNxK`,
+//! `tnn_MxNxK`, `nn_MxNxK`, `transpose_RxC`) with **oracle numerics**
+//! (the naive [`crate::gemm::cpu`] kernels) while accounting latency from
+//! the calibrated [`super::TimingModel`] of one GPU — so simulated-GPU latency
+//! experiments ride the exact same router/engine path as real traffic.
+//! The paper's memory-fit rule applies: a case whose workspace exceeds the
+//! simulated GPU's global memory fails *before* any compute, mirroring a
+//! device OOM.
+//!
+//! Accrued simulated time is shared across clones, so a caller can keep
+//! one clone as a probe while handing others to every pool worker. When
+//! `time_scale > 0` the executor also sleeps `simulated × scale`, turning
+//! the model's timings into real wall-clock pacing.
+
+use crate::coordinator::backend::ExecBackend;
+use crate::gemm::cpu::{self, Matrix};
+use crate::gemm::native::{check_shape, parse_dims};
+use crate::gemm::Algorithm;
+
+use super::{GpuSpec, Simulator};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Simulated-GPU executor: oracle numerics + modeled latency.
+#[derive(Clone)]
+pub struct SimExecutor {
+    sim: Simulator,
+    /// Sleep `simulated_seconds × time_scale` per execution (0 = don't).
+    time_scale: f64,
+    /// Total simulated nanoseconds, shared by clones.
+    simulated_ns: Arc<AtomicU64>,
+}
+
+impl SimExecutor {
+    pub fn new(gpu: &'static GpuSpec) -> SimExecutor {
+        SimExecutor::with_time_scale(gpu, 0.0)
+    }
+
+    /// An executor that also sleeps `simulated × time_scale` per run.
+    pub fn with_time_scale(gpu: &'static GpuSpec, time_scale: f64) -> SimExecutor {
+        SimExecutor {
+            sim: Simulator::new(gpu),
+            time_scale,
+            simulated_ns: Arc::new(AtomicU64::new(0)),
+        }
+    }
+
+    pub fn spec(&self) -> &'static GpuSpec {
+        self.sim.spec()
+    }
+
+    /// Total simulated GPU time accrued across all executions (shared by
+    /// clones, so one probe clone observes a whole pool).
+    pub fn simulated(&self) -> Duration {
+        Duration::from_nanos(self.simulated_ns.load(Ordering::Relaxed))
+    }
+
+    fn accrue(&self, seconds: f64) {
+        self.simulated_ns
+            .fetch_add((seconds * 1e9) as u64, Ordering::Relaxed);
+        if self.time_scale > 0.0 {
+            std::thread::sleep(Duration::from_secs_f64(seconds * self.time_scale));
+        }
+    }
+}
+
+impl ExecBackend for SimExecutor {
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        let (tag, spec) = artifact.split_once('_').ok_or_else(|| {
+            anyhow::anyhow!("sim backend: malformed artifact '{artifact}'")
+        })?;
+        match tag {
+            "nt" | "tnn" | "nn" => {
+                let d = parse_dims(spec, 3)?;
+                let (m, n, k) = (d[0], d[1], d[2]);
+                anyhow::ensure!(
+                    inputs.len() == 2,
+                    "{artifact}: expected 2 inputs, got {}",
+                    inputs.len()
+                );
+                let algo = match tag {
+                    "nt" => Algorithm::Nt,
+                    "tnn" => Algorithm::Tnn,
+                    _ => Algorithm::Nn,
+                };
+                // Memory-fit rule first — a simulated OOM must not depend
+                // on the caller being able to materialize the operands.
+                let (mu, nu, ku) = (m as u64, n as u64, k as u64);
+                let fits = match algo {
+                    Algorithm::Tnn => self.sim.fits(mu, nu, ku),
+                    _ => {
+                        Simulator::nt_workspace_bytes(mu, nu, ku)
+                            <= self.spec().global_mem_bytes()
+                    }
+                };
+                anyhow::ensure!(
+                    fits,
+                    "{artifact}: workspace does not fit in {}'s simulated {} GiB memory",
+                    self.spec().name,
+                    self.spec().global_mem_gib
+                );
+                let (a, b) = (inputs[0], inputs[1]);
+                check_shape(artifact, 0, a, m, k)?;
+                let out = match algo {
+                    Algorithm::Nt => {
+                        check_shape(artifact, 1, b, n, k)?;
+                        cpu::matmul_nt(a, b)
+                    }
+                    Algorithm::Tnn => {
+                        check_shape(artifact, 1, b, n, k)?;
+                        cpu::matmul_tnn(a, b)
+                    }
+                    Algorithm::Nn => {
+                        check_shape(artifact, 1, b, k, n)?;
+                        cpu::matmul_nn(a, b)
+                    }
+                };
+                let t = match algo {
+                    Algorithm::Nt => self.sim.model.t_nt(mu, nu, ku),
+                    Algorithm::Tnn => self.sim.model.t_tnn(mu, nu, ku),
+                    Algorithm::Nn => self.sim.model.t_nn(mu, nu, ku),
+                };
+                self.accrue(t);
+                Ok(vec![out])
+            }
+            "transpose" => {
+                let d = parse_dims(spec, 2)?;
+                anyhow::ensure!(
+                    inputs.len() == 1,
+                    "{artifact}: expected 1 input, got {}",
+                    inputs.len()
+                );
+                check_shape(artifact, 0, inputs[0], d[0], d[1])?;
+                self.accrue(self.sim.model.t_transpose(d[0] as u64, d[1] as u64));
+                Ok(vec![inputs[0].transpose()])
+            }
+            other => anyhow::bail!(
+                "artifact '{artifact}' not supported by the sim backend (kind '{other}')"
+            ),
+        }
+    }
+
+    fn name(&self) -> String {
+        format!("sim:{}", self.spec().name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::GTX1080;
+    use crate::testutil::assert_allclose;
+
+    #[test]
+    fn numerics_match_the_oracle() {
+        let sx = SimExecutor::new(&GTX1080);
+        let a = Matrix::random(16, 24, 1);
+        let b_nt = Matrix::random(8, 24, 2);
+        let b_nn = Matrix::random(24, 8, 3);
+
+        let nt = sx.execute("nt_16x8x24", &[&a, &b_nt]).unwrap();
+        assert_allclose(&nt[0].data, &cpu::matmul_nt(&a, &b_nt).data, 1e-6, 1e-6);
+
+        let tnn = sx.execute("tnn_16x8x24", &[&a, &b_nt]).unwrap();
+        assert_allclose(&tnn[0].data, &nt[0].data, 1e-6, 1e-6);
+
+        let nn = sx.execute("nn_16x8x24", &[&a, &b_nn]).unwrap();
+        assert_allclose(&nn[0].data, &cpu::matmul_nn(&a, &b_nn).data, 1e-6, 1e-6);
+
+        let t = sx.execute("transpose_16x24", &[&a]).unwrap();
+        assert_eq!(t[0].data, a.transpose().data);
+    }
+
+    #[test]
+    fn accrues_deterministic_simulated_time() {
+        let run = || {
+            let sx = SimExecutor::new(&GTX1080);
+            let a = Matrix::random(128, 128, 1);
+            let b = Matrix::random(128, 128, 2);
+            sx.execute("nt_128x128x128", &[&a, &b]).unwrap();
+            sx.execute("tnn_128x128x128", &[&a, &b]).unwrap();
+            sx.simulated()
+        };
+        let first = run();
+        assert!(first > Duration::ZERO, "modeled time must accrue: {first:?}");
+        assert_eq!(first, run(), "the timing model is deterministic");
+    }
+
+    #[test]
+    fn clones_share_the_accrued_time() {
+        let sx = SimExecutor::new(&GTX1080);
+        let probe = sx.clone();
+        let a = Matrix::random(128, 128, 4);
+        let b = Matrix::random(128, 128, 5);
+        sx.execute("nt_128x128x128", &[&a, &b]).unwrap();
+        assert_eq!(probe.simulated(), sx.simulated());
+        assert!(probe.simulated() > Duration::ZERO);
+    }
+
+    #[test]
+    fn oom_shapes_fail_before_compute() {
+        let sx = SimExecutor::new(&GTX1080);
+        // 64Ki³ would need far more than 8 GiB; the tiny dummies prove the
+        // fit rule fires before any shape/compute work.
+        let tiny = Matrix::zeros(2, 2);
+        let err = sx
+            .execute("tnn_65536x65536x65536", &[&tiny, &tiny])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not fit"), "{err}");
+        assert_eq!(sx.simulated(), Duration::ZERO);
+    }
+
+    #[test]
+    fn rejects_unknown_artifacts() {
+        let sx = SimExecutor::new(&GTX1080);
+        let a = Matrix::zeros(2, 2);
+        assert!(sx.execute("nope", &[&a]).is_err());
+        assert!(sx.execute("fcn_train_nt-nt-nt", &[&a]).is_err());
+        assert_eq!(sx.name(), "sim:GTX1080");
+    }
+}

@@ -6,9 +6,11 @@
 //! apply the memory-fit rule, and produce labeled samples.
 
 pub mod calib;
+pub mod exec;
 pub mod model;
 pub mod spec;
 
+pub use exec::SimExecutor;
 pub use model::{ModelParams, TimingModel};
 pub use spec::{GpuSpec, ALL_GPUS, GTX1070, GTX1080, PAPER_GPUS, TITANX};
 

@@ -9,10 +9,13 @@
 //! * **L2** (`python/compile/model.py`) — the FCN forward/backward/train
 //!   step in JAX, AOT-lowered to HLO text artifacts.
 //! * **L3** (this crate) — the coordination contribution: the MTNN
-//!   selector (GBDT trained on GPU features + matrix sizes), the GEMM
-//!   service, the PJRT runtime that executes the artifacts, the GPU timing
-//!   simulator substrate, and the experiment harness reproducing every
-//!   table and figure of the paper.
+//!   selector (GBDT trained on GPU features + matrix sizes) and the GEMM
+//!   service built as a decision layer over a pluggable execution layer —
+//!   a sharded engine worker pool ([`coordinator::Engine`]) whose workers
+//!   each own an [`coordinator::ExecBackend`] (PJRT runtime, native
+//!   blocked CPU kernels, or the deterministic GPU-timing simulator) and
+//!   micro-batch same-artifact jobs — plus the experiment harness
+//!   reproducing every table and figure of the paper.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 

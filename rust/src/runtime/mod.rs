@@ -151,3 +151,23 @@ impl Runtime {
         Ok(out)
     }
 }
+
+/// The PJRT arm of the engine pool's execution layer. The vendored `xla`
+/// stub's client is a plain (`Send`) struct, so a `Runtime` built on the
+/// caller thread can move into a worker; with the real `Rc`-based `xla-rs`
+/// client this impl would have to be constructed on its worker thread.
+/// Each pool worker owns its own `Runtime`, hence its own executable
+/// cache — warmup broadcasts so every worker compiles its copy.
+impl crate::coordinator::backend::ExecBackend for Runtime {
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        Runtime::execute(self, artifact, inputs)
+    }
+
+    fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        Runtime::warmup(self, names)
+    }
+
+    fn name(&self) -> String {
+        format!("pjrt:{}", self.platform())
+    }
+}

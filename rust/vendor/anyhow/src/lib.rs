@@ -39,6 +39,14 @@ impl Error {
         }
     }
 
+    /// Downcast to a concrete error type by shared reference (the subset
+    /// of the real crate's downcasting the repo uses: typed sentinel
+    /// errors such as `coordinator::EngineBusy`). Message-only errors
+    /// built by [`anyhow!`] never downcast to a caller type.
+    pub fn downcast_ref<E: StdError + 'static>(&self) -> Option<&E> {
+        self.inner.downcast_ref::<E>()
+    }
+
     /// The lowest-level source in the chain (self if there is none).
     pub fn root_cause(&self) -> &(dyn StdError + 'static) {
         let mut cur: &(dyn StdError + 'static) = self.inner.as_ref();
@@ -153,6 +161,23 @@ mod tests {
             bail!("stop {}", "here");
         }
         assert_eq!(f().unwrap_err().to_string(), "stop here");
+    }
+
+    #[test]
+    fn downcast_ref_finds_concrete_errors() {
+        #[derive(Debug)]
+        struct Sentinel;
+        impl fmt::Display for Sentinel {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                f.write_str("sentinel")
+            }
+        }
+        impl StdError for Sentinel {}
+
+        let e = Error::new(Sentinel);
+        assert!(e.downcast_ref::<Sentinel>().is_some());
+        assert!(e.downcast_ref::<MessageError>().is_none());
+        assert!(anyhow!("plain message").downcast_ref::<Sentinel>().is_none());
     }
 
     #[test]
