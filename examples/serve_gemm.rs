@@ -8,18 +8,29 @@
 //! The backend defaults to PJRT when the compiled artifact catalog exists
 //! and the native blocked kernels otherwise; `--backend sim` serves the
 //! same traffic through the deterministic GPU-timing simulator.
+//!
+//! `--online` switches to the closed-loop mode instead of the baseline
+//! comparison: shadow probing, drift detection, and background GBDT
+//! retraining with atomic hot-swap (`--mistrained` seeds it with a
+//! deliberately inverted model so the recovery is visible):
+//!
+//!     cargo run --release --example serve_gemm -- \
+//!         --backend sim --online --mistrained --requests 200
 
 use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
-use mtnn::dataset::collect_paper_dataset;
+use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::gemm::cpu::Matrix;
 use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::GTX1080;
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::Classifier;
+use mtnn::online::OnlineConfig;
 use mtnn::runtime::Runtime;
-use mtnn::selector::Selector;
+use mtnn::selector::{Selector, TrainedModel};
 use mtnn::util::cli::Args;
 use mtnn::util::rng::Xoshiro256pp;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Serving trace: shapes an FCN-heavy workload would issue, restricted to
 /// the artifact catalog buckets.
@@ -37,6 +48,48 @@ fn trace(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
         .collect()
 }
 
+/// Smaller trace for the online mode: shadow probes double each probed
+/// request, and the sim/native oracle numerics pay real CPU per call.
+fn online_trace(n: usize, seed: u64) -> Vec<(u64, u64, u64)> {
+    let buckets = [
+        (128u64, 128u64, 128u64),
+        (256, 256, 256),
+        (128, 256, 64),
+        (192, 192, 192),
+        (96, 256, 128),
+    ];
+    let mut rng = Xoshiro256pp::new(seed);
+    (0..n)
+        .map(|_| buckets[rng.next_range(0, buckets.len())])
+        .collect()
+}
+
+fn build_engine(backend: &str, workers: usize) -> anyhow::Result<Engine> {
+    let config = EngineConfig {
+        workers,
+        queue_depth: 128,
+        ..EngineConfig::default()
+    };
+    match backend {
+        "pjrt" => Engine::pjrt(Runtime::default_dir(), config),
+        "native" => Engine::native_pool(config),
+        "sim" => Engine::sim(&GTX1080, config),
+        other => anyhow::bail!("unknown --backend '{other}' (native|pjrt|sim)"),
+    }
+}
+
+/// A selector trained on the paper dataset with every label flipped —
+/// wrong on purpose, so the online loop has something to recover from.
+fn mistrained_selector() -> Selector {
+    let mut d = to_ml_dataset(&collect_paper_dataset());
+    for y in &mut d.y {
+        *y = -*y;
+    }
+    let mut g = Gbdt::new(GbdtParams::default());
+    g.fit(&d.x, &d.y);
+    Selector::new(TrainedModel::Gbdt(g))
+}
+
 fn run_mode(
     name: &str,
     force: Option<Algorithm>,
@@ -45,17 +98,7 @@ fn run_mode(
     clients: usize,
     workers: usize,
 ) -> anyhow::Result<()> {
-    let config = EngineConfig {
-        workers,
-        queue_depth: 128,
-        ..EngineConfig::default()
-    };
-    let engine = match backend {
-        "pjrt" => Engine::pjrt(Runtime::default_dir(), config)?,
-        "native" => Engine::native_pool(config)?,
-        "sim" => Engine::sim(&GTX1080, config)?,
-        other => anyhow::bail!("unknown --backend '{other}' (native|pjrt|sim)"),
-    };
+    let engine = build_engine(backend, workers)?;
     let selector = Selector::train_default(&collect_paper_dataset());
     let router = Arc::new(Router::new(
         selector,
@@ -108,6 +151,95 @@ fn run_mode(
     Ok(())
 }
 
+/// The closed-loop mode: serve traffic with the online subsystem on, then
+/// report the loop's counters (samples, probes, mispredict rate,
+/// retrains, promotions, rollbacks) and the live model generation.
+fn run_online(
+    backend: &str,
+    requests: usize,
+    clients: usize,
+    workers: usize,
+    mistrained: bool,
+) -> anyhow::Result<()> {
+    let engine = build_engine(backend, workers)?;
+    let seed = if mistrained {
+        mistrained_selector()
+    } else {
+        Selector::train_default(&collect_paper_dataset())
+    };
+    let online = OnlineConfig {
+        probe_every: 4,
+        retrain_min_labeled: 16,
+        retrain_every_labeled: 16,
+        drift_threshold: 0.2,
+        drift_min_probes: 16,
+        poll_interval: Duration::from_millis(10),
+        ..OnlineConfig::default()
+    };
+    let router = Arc::new(Router::new(seed, engine.handle(), RouterConfig::online(online)));
+    let mut shapes: Vec<(u64, u64, u64)> = online_trace(requests, 1);
+    shapes.sort_unstable();
+    shapes.dedup();
+    let shapes: Vec<GemmShape> = shapes
+        .into_iter()
+        .map(|(m, n, k)| GemmShape::new(m, n, k))
+        .collect();
+    router.warmup(&shapes)?;
+
+    let t0 = Instant::now();
+    let clients = clients.clamp(1, requests.max(1));
+    let mut joins = Vec::new();
+    for c in 0..clients {
+        let router = router.clone();
+        // Distribute the remainder so exactly `requests` are served.
+        let quota = requests / clients + usize::from(c < requests % clients);
+        joins.push(std::thread::spawn(move || {
+            for (i, (m, n, k)) in online_trace(quota, 100 + c as u64)
+                .into_iter()
+                .enumerate()
+            {
+                let req = GemmRequest {
+                    gpu: &GTX1080,
+                    shape: GemmShape::new(m, n, k),
+                    a: Matrix::random(m as usize, k as usize, (c * 1000 + i) as u64),
+                    b: Matrix::random(n as usize, k as usize, (c * 2000 + i) as u64),
+                };
+                router.serve(req).expect("serve");
+            }
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    // Give the background trainer a beat to drain the ring and retrain on
+    // what the traffic produced.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while requests > 0
+        && router.metrics.snapshot().retrains == 0
+        && Instant::now() < deadline
+    {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let wall = t0.elapsed();
+    let snap = router.metrics.snapshot();
+    let hub = router.online_hub().expect("online hub");
+    println!(
+        "{:>10}: {} reqs in {wall:.2?} → {:.1} req/s | {}",
+        "online",
+        snap.completed,
+        snap.completed as f64 / wall.as_secs_f64(),
+        snap.render()
+    );
+    println!(
+        "    online: live model generation {} (seed {}), drift window rate {:.1}%",
+        hub.live.generation(),
+        if mistrained { "mistrained" } else { "paper GBDT" },
+        hub.drift.total_rate() * 100.0
+    );
+    engine.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
     let requests: usize = args.get_num("requests", 64);
@@ -127,14 +259,24 @@ fn main() -> anyhow::Result<()> {
         "native"
     };
     let backend = args.get("backend", default_backend);
+    let online = args.flag("online");
+    let mistrained = args.flag("mistrained");
     args.finish()?;
-    println!(
-        "serving {requests} NT-operation requests from {clients} concurrent clients \
-         on a {workers}-worker {backend} engine pool"
-    );
-    run_mode("MTNN", None, &backend, requests, clients, workers)?;
-    run_mode("force-NT", Some(Algorithm::Nt), &backend, requests, clients, workers)?;
-    run_mode("force-TNN", Some(Algorithm::Tnn), &backend, requests, clients, workers)?;
+    if online {
+        println!(
+            "serving {requests} NT-operation requests from {clients} concurrent clients \
+             on a {workers}-worker {backend} engine pool (online adaptive selection)"
+        );
+        run_online(&backend, requests, clients, workers, mistrained)?;
+    } else {
+        println!(
+            "serving {requests} NT-operation requests from {clients} concurrent clients \
+             on a {workers}-worker {backend} engine pool"
+        );
+        run_mode("MTNN", None, &backend, requests, clients, workers)?;
+        run_mode("force-NT", Some(Algorithm::Nt), &backend, requests, clients, workers)?;
+        run_mode("force-TNN", Some(Algorithm::Tnn), &backend, requests, clients, workers)?;
+    }
     println!("serve_gemm OK");
     Ok(())
 }

@@ -5,6 +5,11 @@
 //! artifact catalog exists, the native blocked backend otherwise), and
 //! the sharded engine pool vs a single worker under concurrent clients.
 //! Run: `cargo bench --bench perf_hotpath`.
+//!
+//! Besides the human report (`results/perf_hotpath.txt`), every row is
+//! emitted machine-readably into `results/BENCH_hotpath.json`
+//! (`{name, ns_per_op, speedup?, shape?, backend?}`) so the perf
+//! trajectory can be tracked across PRs without parsing prose.
 
 use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
@@ -17,6 +22,7 @@ use mtnn::ml::Classifier;
 use mtnn::runtime::Runtime;
 use mtnn::selector::{features, Selector};
 use mtnn::util::bench::{bench, bench_batched, BenchResult};
+use mtnn::util::json::Json;
 
 fn speedup_line(name: &str, slow: &BenchResult, fast: &BenchResult) -> String {
     format!(
@@ -27,8 +33,14 @@ fn speedup_line(name: &str, slow: &BenchResult, fast: &BenchResult) -> String {
     )
 }
 
+/// One machine-readable bench row.
+fn json_row(name: &str, ns_per_op: f64) -> Json {
+    Json::obj().set("name", name).set("ns_per_op", ns_per_op)
+}
+
 fn main() {
     let mut report = String::from("== §Perf hot-path microbenchmarks ==\n");
+    let mut rows: Vec<Json> = Vec::new();
     let records = collect_paper_dataset();
     let data = to_ml_dataset(&records);
     let selector = Selector::train_default(&records);
@@ -47,6 +59,12 @@ fn main() {
     });
     report.push_str(&format!("{}\n", blocked_nt.report()));
     report.push_str(&speedup_line("blocked/naive NT 512^3", &naive_nt, &blocked_nt));
+    rows.push(
+        json_row("gemm.blocked.matmul_nt", blocked_nt.mean_ns())
+            .set("shape", "512x512x512")
+            .set("backend", "native")
+            .set("speedup_vs_naive", naive_nt.mean_ns() / blocked_nt.mean_ns()),
+    );
     let naive_nn = bench("gemm.naive matmul_nn 512^3 (oracle)", 1, 5, || {
         cpu::matmul_nn(&a512, &b512)
     });
@@ -56,10 +74,21 @@ fn main() {
     });
     report.push_str(&format!("{}\n", blocked_nn.report()));
     report.push_str(&speedup_line("blocked/naive NN 512^3", &naive_nn, &blocked_nn));
+    rows.push(
+        json_row("gemm.blocked.matmul_nn", blocked_nn.mean_ns())
+            .set("shape", "512x512x512")
+            .set("backend", "native")
+            .set("speedup_vs_naive", naive_nn.mean_ns() / blocked_nn.mean_ns()),
+    );
     let blocked_tnn = bench("gemm.blocked matmul_tnn 512^3 (Algorithm 1)", 2, 10, || {
         blocked::matmul_tnn(&a512, &b512)
     });
     report.push_str(&format!("{}\n", blocked_tnn.report()));
+    rows.push(
+        json_row("gemm.blocked.matmul_tnn", blocked_tnn.mean_ns())
+            .set("shape", "512x512x512")
+            .set("backend", "native"),
+    );
 
     // 2. GBDT training (paper Table VI: 7 ms on an i7-3820).
     let r = bench("gbdt.fit (full 1828-sample dataset)", 2, 10, || {
@@ -68,6 +97,7 @@ fn main() {
         g
     });
     report.push_str(&format!("{}\n", r.report()));
+    rows.push(json_row("gbdt.fit", r.mean_ns()));
 
     // 3. Predictor latency (paper: 0.005 ms = 5 us per call): recursive
     //    tree walk vs the flattened SoA forest actually used in serving.
@@ -82,6 +112,10 @@ fn main() {
     });
     report.push_str(&format!("{}\n", flat.report()));
     report.push_str(&speedup_line("flat/recursive predict", &rec, &flat));
+    rows.push(
+        json_row("gbdt.predict.flat", flat.mean_ns())
+            .set("speedup_vs_recursive", rec.mean_ns() / flat.mean_ns()),
+    );
 
     // 4. Full Algorithm-2 selection incl. O(1) feature build + fallback.
     let sel_uncached = bench_batched(
@@ -92,6 +126,7 @@ fn main() {
         || selector.select(&GTX1080, 4096, 2048, 8192),
     );
     report.push_str(&format!("{}\n", sel_uncached.report()));
+    rows.push(json_row("selector.select", sel_uncached.mean_ns()));
 
     // 5. Routing decisions: uncached Algorithm 2 vs the shape-keyed
     //    decision cache (the steady-state FCN-training configuration).
@@ -130,6 +165,10 @@ fn main() {
             &dec_uncached,
             &dec_cached,
         ));
+        rows.push(
+            json_row("router.decide.cached", dec_cached.mean_ns())
+                .set("speedup_vs_uncached", dec_uncached.mean_ns() / dec_cached.mean_ns()),
+        );
         engine.shutdown();
     }
 
@@ -139,6 +178,7 @@ fn main() {
         sim.time_case(2048, 2048, 2048)
     });
     report.push_str(&format!("{}\n", r.report()));
+    rows.push(json_row("gpusim.time_case", r.mean_ns()));
 
     // 7. GEMM serving through the coordinator: PJRT when the compiled
     //    catalog exists, otherwise the native blocked backend (same
@@ -171,6 +211,11 @@ fn main() {
                 .unwrap()
         });
         report.push_str(&format!("{}\n", r.report()));
+        rows.push(
+            json_row("router.serve", r.mean_ns())
+                .set("shape", format!("{m}x{n}x{k}"))
+                .set("backend", backend),
+        );
     }
     report.push_str(&format!(
         "coordinator metrics: {}\n",
@@ -239,6 +284,28 @@ fn main() {
         "  ↳ speedup pool(8)/pool(1) serve throughput @8 clients: {:.2}x\n",
         pooled / single
     ));
+    rows.push(
+        Json::obj()
+            .set("name", "router.serve.concurrent.pool8")
+            .set("req_per_s", pooled)
+            .set("shape", "96x96x96")
+            .set("backend", "native")
+            .set("speedup_vs_pool1", pooled / single),
+    );
+    rows.push(
+        Json::obj()
+            .set("name", "router.serve.concurrent.pool1")
+            .set("req_per_s", single)
+            .set("shape", "96x96x96")
+            .set("backend", "native"),
+    );
 
     emit("perf_hotpath.txt", &report);
+    emit(
+        "BENCH_hotpath.json",
+        &Json::obj()
+            .set("format", "mtnn-bench-v1")
+            .set("entries", Json::Arr(rows))
+            .to_pretty(),
+    );
 }

@@ -32,6 +32,18 @@ pub trait ExecBackend: Send {
     /// Run `artifact` on `inputs`, producing the outputs.
     fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>>;
 
+    /// Run `artifact` and report `(outputs, execution-latency µs)` — the
+    /// engine-worker timing hook behind the online telemetry loop
+    /// (`crate::online`). The default wall-clocks [`ExecBackend::execute`];
+    /// backends with a better notion of time override it (the simulated
+    /// GPU reports *modeled* latency so the online loop learns the
+    /// simulated hardware, not the host CPU).
+    fn execute_timed(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<(Vec<Matrix>, f64)> {
+        let t0 = std::time::Instant::now();
+        let out = self.execute(artifact, inputs)?;
+        Ok((out, t0.elapsed().as_secs_f64() * 1e6))
+    }
+
     /// Eagerly compile / pre-touch artifacts (default: nothing to do).
     fn warmup(&self, _names: &[&str]) -> anyhow::Result<()> {
         Ok(())

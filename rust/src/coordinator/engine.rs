@@ -10,11 +10,25 @@
 //!   full, [`EngineHandle::submit`] blocks on the affine worker (bounded
 //!   backpressure, the pre-pool semantics) while
 //!   [`EngineHandle::try_submit`] fails fast with [`EngineBusy`].
+//! * **Work stealing at dequeue time** — an idle worker (own queue and
+//!   deferred stash empty) pops a job from the *back* of a sibling's
+//!   queue instead of sleeping, so a burst of same-artifact traffic that
+//!   all sharded onto one worker still spreads across the pool. Only
+//!   `Run` commands are stolen: `Warmup`/`Shutdown` control stays FIFO on
+//!   its owner, and LIFO stealing avoids fighting the victim's
+//!   micro-batcher over the oldest entries.
 //! * **Adaptive micro-batching** — after dequeuing a job, a worker
 //!   collects same-artifact jobs already queued (and, when
 //!   `batch_window > 0`, keeps waiting up to that window or `max_batch`)
 //!   and executes the run back-to-back; different-artifact jobs pulled
-//!   during collection are deferred, not reordered away.
+//!   during collection are deferred, not reordered away. Per-worker batch
+//!   gauges ([`super::metrics::BatchGauge`]) record how well batching
+//!   works in practice.
+//! * **Per-job timing** — workers execute through
+//!   [`ExecBackend::execute_timed`] and every [`ExecReply`] carries the
+//!   measured (or, for the simulated GPU, modeled) execution latency in
+//!   µs. This is the telemetry hook the online adaptive-selection loop
+//!   (`crate::online`) records its training samples from.
 //! * **Graceful shutdown** — `Shutdown` is queued behind in-flight work,
 //!   so every job accepted before [`Engine::shutdown`] was called is
 //!   executed (drain), then workers join. A submission *racing* with
@@ -22,24 +36,35 @@
 //!   engine-shut-down error — it is never silently dropped.
 //!
 //! A pool of size 1 reproduces the old single-thread engine exactly:
-//! one queue, FIFO service, blocking backpressure.
+//! one queue, FIFO service, blocking backpressure (and nobody to steal
+//! from).
 
 use super::backend::{EngineBusy, ExecBackend};
+use super::metrics::BatchGauge;
 use crate::gemm::cpu::Matrix;
 use crate::gemm::native::NativeExecutor;
 use crate::gpusim::{GpuSpec, SimExecutor};
 use crate::runtime::Runtime;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// One executed job's response: outputs plus the worker-measured
+/// execution latency (queueing excluded — this is the backend's own time;
+/// see [`ExecBackend::execute_timed`]).
+#[derive(Debug)]
+pub struct ExecReply {
+    pub outputs: Vec<Matrix>,
+    pub exec_us: f64,
+}
 
 /// One unit of engine work: run `artifact` on `inputs`, reply on `respond`.
 pub struct EngineJob {
     pub artifact: String,
     pub inputs: Vec<Matrix>,
-    pub respond: mpsc::Sender<anyhow::Result<Vec<Matrix>>>,
+    pub respond: mpsc::Sender<anyhow::Result<ExecReply>>,
 }
 
 enum Cmd {
@@ -84,18 +109,178 @@ impl Default for EngineConfig {
     }
 }
 
+// ---- the shared queue fabric -----------------------------------------------
+
+struct QueueState {
+    items: VecDeque<Cmd>,
+    closed: bool,
+}
+
+/// One worker's bounded queue. Stealable: siblings may pop `Run` commands
+/// from the back under the same lock the owner pops the front with.
+struct WorkQueue {
+    state: Mutex<QueueState>,
+    /// Blocked (backpressure) submitters wait here for queue room.
+    not_full: Condvar,
+}
+
+impl WorkQueue {
+    fn new() -> WorkQueue {
+        WorkQueue {
+            state: Mutex::new(QueueState {
+                items: VecDeque::new(),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+        }
+    }
+}
+
+enum PushErr {
+    /// Queue at capacity — the command is handed back for rerouting.
+    Full(Cmd),
+    Closed,
+}
+
+/// The queue fabric shared by the handle and every worker.
+struct PoolShared {
+    queues: Vec<WorkQueue>,
+    cap: usize,
+    /// Push ticket: bumped (under `ticket`) on every push so idle workers
+    /// parked on `work` re-scan for poppable or stealable commands.
+    ticket: Mutex<u64>,
+    work: Condvar,
+}
+
+impl PoolShared {
+    fn bump(&self) {
+        let mut t = self.ticket.lock().unwrap();
+        *t += 1;
+        drop(t);
+        self.work.notify_all();
+    }
+
+    fn ticket_now(&self) -> u64 {
+        *self.ticket.lock().unwrap()
+    }
+
+    /// Park until the ticket moves past `seen` (or a short timeout, as a
+    /// lost-wakeup backstop).
+    fn wait_ticket(&self, seen: u64, timeout: Duration) {
+        let t = self.ticket.lock().unwrap();
+        if *t != seen {
+            return;
+        }
+        let _ = self.work.wait_timeout(t, timeout).unwrap();
+    }
+
+    /// Non-blocking push. Control commands (`Warmup`/`Shutdown`) ignore
+    /// capacity so shutdown and warmup can never deadlock on a full queue.
+    fn try_push(&self, idx: usize, cmd: Cmd) -> Result<(), PushErr> {
+        let mut q = self.queues[idx].state.lock().unwrap();
+        if q.closed {
+            return Err(PushErr::Closed);
+        }
+        if q.items.len() >= self.cap && matches!(cmd, Cmd::Run(_)) {
+            return Err(PushErr::Full(cmd));
+        }
+        q.items.push_back(cmd);
+        drop(q);
+        self.bump();
+        Ok(())
+    }
+
+    /// Blocking push (bounded backpressure): waits for queue room.
+    fn push_blocking(&self, idx: usize, cmd: Cmd) -> Result<(), PushErr> {
+        let wq = &self.queues[idx];
+        let mut q = wq.state.lock().unwrap();
+        loop {
+            if q.closed {
+                return Err(PushErr::Closed);
+            }
+            if q.items.len() < self.cap || !matches!(cmd, Cmd::Run(_)) {
+                q.items.push_back(cmd);
+                drop(q);
+                self.bump();
+                return Ok(());
+            }
+            q = wq.not_full.wait(q).unwrap();
+        }
+    }
+
+    /// Owner pops the front of its own queue.
+    fn pop_own(&self, me: usize) -> Option<Cmd> {
+        let mut q = self.queues[me].state.lock().unwrap();
+        let c = q.items.pop_front();
+        drop(q);
+        if c.is_some() {
+            self.queues[me].not_full.notify_one();
+        }
+        c
+    }
+
+    /// Owner pops with a deadline (micro-batch window collection).
+    fn pop_own_deadline(&self, me: usize, deadline: Instant) -> Option<Cmd> {
+        loop {
+            let seen = self.ticket_now();
+            if let Some(c) = self.pop_own(me) {
+                return Some(c);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            self.wait_ticket(seen, deadline - now);
+        }
+    }
+
+    /// Steal one `Run` from the back of a sibling's queue. Returns the
+    /// victim index so the caller can move the depth gauge.
+    fn steal(&self, me: usize) -> Option<(usize, Box<EngineJob>)> {
+        let n = self.queues.len();
+        for off in 1..n {
+            let victim = (me + off) % n;
+            let mut q = self.queues[victim].state.lock().unwrap();
+            if matches!(q.items.back(), Some(Cmd::Run(_))) {
+                let Some(Cmd::Run(job)) = q.items.pop_back() else {
+                    unreachable!("back() said Run");
+                };
+                drop(q);
+                self.queues[victim].not_full.notify_one();
+                return Some((victim, job));
+            }
+        }
+        None
+    }
+
+    /// Mark a queue closed and take whatever is still in it (the teardown
+    /// sweep: commands that raced the drain's last empty pop).
+    fn close(&self, me: usize) -> Vec<Cmd> {
+        let mut q = self.queues[me].state.lock().unwrap();
+        q.closed = true;
+        let left = q.items.drain(..).collect();
+        drop(q);
+        self.queues[me].not_full.notify_all();
+        left
+    }
+}
+
+// ---- the handle ------------------------------------------------------------
+
 /// Cloneable, thread-safe handle to the engine pool.
 #[derive(Clone)]
 pub struct EngineHandle {
-    txs: Arc<Vec<mpsc::SyncSender<Cmd>>>,
+    shared: Arc<PoolShared>,
     /// Per-worker in-flight gauges (accepted, not yet completed).
     depths: Arc<Vec<AtomicU64>>,
+    /// Per-worker micro-batch gauges.
+    batches: Arc<Vec<BatchGauge>>,
 }
 
 impl EngineHandle {
     /// Pool size.
     pub fn workers(&self) -> usize {
-        self.txs.len()
+        self.shared.queues.len()
     }
 
     /// Point-in-time per-worker in-flight counts (queued + executing).
@@ -112,32 +297,38 @@ impl EngineHandle {
         Arc::clone(&self.depths)
     }
 
+    /// The shared per-worker micro-batch gauges (attached to
+    /// `CoordinatorMetrics` so snapshots report avg/max batch size).
+    pub fn batch_gauges(&self) -> Arc<Vec<BatchGauge>> {
+        Arc::clone(&self.batches)
+    }
+
     /// Affine worker for an artifact: same artifact → same worker, so its
     /// micro-batches stay hot.
     fn shard_for(&self, artifact: &str) -> usize {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         artifact.hash(&mut h);
-        (h.finish() as usize) % self.txs.len()
+        (h.finish() as usize) % self.shared.queues.len()
     }
 
     /// Route a job: affine worker first, handoff to any worker with queue
     /// room, then either block on the affine worker (`block`) or reject
     /// with [`EngineBusy`].
     fn route(&self, job: Box<EngineJob>, block: bool) -> anyhow::Result<()> {
-        let n = self.txs.len();
+        let n = self.shared.queues.len();
         let start = self.shard_for(&job.artifact);
         let mut cmd = Cmd::Run(job);
         for probe in 0..n {
             let idx = (start + probe) % n;
             self.depths[idx].fetch_add(1, Ordering::Relaxed);
-            match self.txs[idx].try_send(cmd) {
+            match self.shared.try_push(idx, cmd) {
                 Ok(()) => return Ok(()),
-                Err(mpsc::TrySendError::Full(c)) => {
+                Err(PushErr::Full(c)) => {
                     self.depths[idx].fetch_sub(1, Ordering::Relaxed);
                     cmd = c;
                 }
-                Err(mpsc::TrySendError::Disconnected(_)) => {
+                Err(PushErr::Closed) => {
                     self.depths[idx].fetch_sub(1, Ordering::Relaxed);
                     anyhow::bail!("engine is shut down");
                 }
@@ -148,7 +339,7 @@ impl EngineHandle {
         }
         // Every queue is full: bounded backpressure on the affine worker.
         self.depths[start].fetch_add(1, Ordering::Relaxed);
-        match self.txs[start].send(cmd) {
+        match self.shared.push_blocking(start, cmd) {
             Ok(()) => Ok(()),
             Err(_) => {
                 self.depths[start].fetch_sub(1, Ordering::Relaxed);
@@ -163,7 +354,7 @@ impl EngineHandle {
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
-    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let (tx, rx) = mpsc::channel();
         self.route(
             Box::new(EngineJob {
@@ -182,7 +373,7 @@ impl EngineHandle {
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
-    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let (tx, rx) = mpsc::channel();
         self.route(
             Box::new(EngineJob {
@@ -198,18 +389,21 @@ impl EngineHandle {
     /// Submit and wait (convenience for synchronous callers).
     pub fn run(&self, artifact: &str, inputs: Vec<Matrix>) -> anyhow::Result<Vec<Matrix>> {
         let rx = self.submit(artifact.to_string(), inputs)?;
-        rx.recv()
-            .map_err(|_| anyhow::anyhow!("engine dropped the response"))?
+        let reply = rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("engine dropped the response"))??;
+        Ok(reply.outputs)
     }
 
     /// Compile / pre-touch artifacts ahead of traffic on **every** pool
     /// worker (each owns its own backend instance, hence its own compile
     /// cache). No-op on backends without a compile step.
     pub fn warmup(&self, names: &[String]) -> anyhow::Result<()> {
-        let mut acks = Vec::with_capacity(self.txs.len());
-        for tx in self.txs.iter() {
+        let mut acks = Vec::with_capacity(self.shared.queues.len());
+        for idx in 0..self.shared.queues.len() {
             let (ack_tx, ack_rx) = mpsc::channel();
-            tx.send(Cmd::Warmup(names.to_vec(), ack_tx))
+            self.shared
+                .try_push(idx, Cmd::Warmup(names.to_vec(), ack_tx))
                 .map_err(|_| anyhow::anyhow!("engine is shut down"))?;
             acks.push(ack_rx);
         }
@@ -221,32 +415,46 @@ impl EngineHandle {
     }
 }
 
-/// One worker: owns its backend, drains its queue, micro-batches
-/// same-artifact runs.
+// ---- the worker ------------------------------------------------------------
+
+/// One worker: owns its backend, drains its queue, steals when idle,
+/// micro-batches same-artifact runs.
 fn worker_loop(
     backend: Box<dyn ExecBackend>,
-    rx: mpsc::Receiver<Cmd>,
+    shared: Arc<PoolShared>,
     depths: Arc<Vec<AtomicU64>>,
+    batches: Arc<Vec<BatchGauge>>,
     me: usize,
     batch_window: Duration,
     max_batch: usize,
 ) {
     // Different-artifact commands pulled while collecting a micro-batch
-    // wait here and are serviced, in arrival order, before the next recv.
+    // wait here and are serviced, in arrival order, before the next pop.
     let mut stash: VecDeque<Cmd> = VecDeque::new();
     let mut draining = false;
     loop {
         let cmd = if let Some(c) = stash.pop_front() {
             c
         } else if draining {
-            match rx.try_recv() {
-                Ok(c) => c,
-                Err(_) => break,
+            match shared.pop_own(me) {
+                Some(c) => c,
+                None => break, // queue drained — exit
             }
         } else {
-            match rx.recv() {
-                Ok(c) => c,
-                Err(_) => break, // all handles dropped
+            // Snapshot the push ticket BEFORE scanning: a push landing
+            // mid-scan voids the park below, so no wakeup is ever lost.
+            let seen = shared.ticket_now();
+            if let Some(c) = shared.pop_own(me) {
+                c
+            } else if let Some((victim, job)) = shared.steal(me) {
+                // Idle: steal from a sibling's back instead of sleeping.
+                // The stolen job's in-flight accounting moves with it.
+                depths[victim].fetch_sub(1, Ordering::Relaxed);
+                depths[me].fetch_add(1, Ordering::Relaxed);
+                Cmd::Run(job)
+            } else {
+                shared.wait_ticket(seen, Duration::from_millis(50));
+                continue;
             }
         };
         match cmd {
@@ -270,11 +478,10 @@ fn worker_loop(
                 if !draining {
                     let deadline = Instant::now() + batch_window;
                     while batch.len() < max_batch {
-                        let wait = deadline.saturating_duration_since(Instant::now());
-                        let got = if wait.is_zero() {
-                            rx.try_recv().ok()
+                        let got = if batch_window.is_zero() {
+                            shared.pop_own(me)
                         } else {
-                            rx.recv_timeout(wait).ok()
+                            shared.pop_own_deadline(me, deadline)
                         };
                         match got {
                             Some(Cmd::Run(j)) if j.artifact == batch[0].artifact => {
@@ -289,9 +496,15 @@ fn worker_loop(
                         }
                     }
                 }
+                let g = &batches[me];
+                g.batches.fetch_add(1, Ordering::Relaxed);
+                g.jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                g.max.fetch_max(batch.len() as u64, Ordering::Relaxed);
                 for job in batch {
                     let refs: Vec<&Matrix> = job.inputs.iter().collect();
-                    let result = backend.execute(&job.artifact, &refs);
+                    let result = backend
+                        .execute_timed(&job.artifact, &refs)
+                        .map(|(outputs, exec_us)| ExecReply { outputs, exec_us });
                     // Gauge drops before the response is visible, so a
                     // caller that just received its result never observes
                     // a stale depth.
@@ -305,15 +518,16 @@ fn worker_loop(
                 let _ = ack.send(backend.warmup(&refs));
             }
             // Drain: service the stash and whatever is still queued, then
-            // exit instead of blocking for more work.
+            // exit instead of parking for more work.
             Cmd::Shutdown => draining = true,
         }
     }
     // Teardown sweep: a submit racing with shutdown can land a command
-    // after the drain's last empty `try_recv`. Fail those explicitly —
-    // the submitter gets a clear error and the depth gauge stays
-    // balanced — instead of letting the channel drop them silently.
-    while let Ok(cmd) = rx.try_recv() {
+    // after the drain's last empty pop. Close the queue (so pushers get a
+    // clear error from now on) and fail whatever slipped in — the
+    // submitter is notified and the depth gauge stays balanced — instead
+    // of dropping it silently.
+    for cmd in shared.close(me) {
         match cmd {
             Cmd::Run(job) => {
                 depths[me].fetch_sub(1, Ordering::Relaxed);
@@ -326,6 +540,8 @@ fn worker_loop(
         }
     }
 }
+
+// ---- the pool --------------------------------------------------------------
 
 /// The engine pool: construct with a backend factory ([`Engine::pool`]) or
 /// one of the named constructors; drop (or call [`Engine::shutdown`]) to
@@ -352,24 +568,53 @@ impl Engine {
         }
         let depths: Arc<Vec<AtomicU64>> =
             Arc::new((0..workers).map(|_| AtomicU64::new(0)).collect());
-        let mut txs = Vec::with_capacity(workers);
+        let batches: Arc<Vec<BatchGauge>> =
+            Arc::new((0..workers).map(|_| BatchGauge::default()).collect());
+        let shared = Arc::new(PoolShared {
+            queues: (0..workers).map(|_| WorkQueue::new()).collect(),
+            cap: queue_depth,
+            ticket: Mutex::new(0),
+            work: Condvar::new(),
+        });
         let mut joins = Vec::with_capacity(workers);
         for (i, backend) in backends.into_iter().enumerate() {
-            let (tx, rx) = mpsc::sync_channel::<Cmd>(queue_depth);
-            txs.push(tx);
-            let depths = Arc::clone(&depths);
-            joins.push(
-                std::thread::Builder::new()
-                    .name(format!("mtnn-engine-{i}"))
-                    .spawn(move || {
-                        worker_loop(backend, rx, depths, i, config.batch_window, max_batch)
-                    })?,
-            );
+            let shared_w = Arc::clone(&shared);
+            let depths_w = Arc::clone(&depths);
+            let batches_w = Arc::clone(&batches);
+            let spawned = std::thread::Builder::new()
+                .name(format!("mtnn-engine-{i}"))
+                .spawn(move || {
+                    worker_loop(
+                        backend,
+                        shared_w,
+                        depths_w,
+                        batches_w,
+                        i,
+                        config.batch_window,
+                        max_batch,
+                    )
+                });
+            match spawned {
+                Ok(j) => joins.push(j),
+                Err(e) => {
+                    // Unwind: stop the workers already running — unlike
+                    // the old mpsc design, dropping the handle does not
+                    // disconnect them, so they must be told to exit.
+                    for idx in 0..workers {
+                        let _ = shared.try_push(idx, Cmd::Shutdown);
+                    }
+                    for j in joins.drain(..) {
+                        let _ = j.join();
+                    }
+                    return Err(e.into());
+                }
+            }
         }
         Ok(Engine {
             handle: EngineHandle {
-                txs: Arc::new(txs),
+                shared,
                 depths,
+                batches,
             },
             joins,
         })
@@ -432,8 +677,10 @@ impl Engine {
     }
 
     fn stop(&mut self) {
-        for tx in self.handle.txs.iter() {
-            let _ = tx.send(Cmd::Shutdown);
+        for idx in 0..self.handle.shared.queues.len() {
+            // Control pushes ignore capacity; a closed queue means the
+            // worker is already gone.
+            let _ = self.handle.shared.try_push(idx, Cmd::Shutdown);
         }
         for j in self.joins.drain(..) {
             let _ = j.join();
@@ -489,6 +736,25 @@ mod tests {
     }
 
     #[test]
+    fn replies_carry_execution_latency() {
+        let engine = Engine::native(8).unwrap();
+        let a = Matrix::random(64, 64, 1);
+        let b = Matrix::random(64, 64, 2);
+        let rx = engine
+            .handle()
+            .submit("nt_64x64x64".into(), vec![a, b])
+            .unwrap();
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.outputs.len(), 1);
+        assert!(
+            reply.exec_us > 0.0 && reply.exec_us.is_finite(),
+            "exec_us={}",
+            reply.exec_us
+        );
+        engine.shutdown();
+    }
+
+    #[test]
     fn pool_executes_across_workers() {
         let engine = Engine::native_pool(EngineConfig {
             workers: 4,
@@ -510,7 +776,7 @@ mod tests {
             ));
         }
         for (expect, rx) in pend {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap().unwrap().outputs;
             assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
         }
         assert_eq!(handle.queue_depths(), vec![0, 0, 0, 0]);
@@ -552,9 +818,125 @@ mod tests {
             pend.push((expect, handle.submit("nt_24x8x16".into(), vec![a, b]).unwrap()));
         }
         for (expect, rx) in pend {
-            let out = rx.recv().unwrap().unwrap();
+            let out = rx.recv().unwrap().unwrap().outputs;
             assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
         }
+        // Batch gauges saw every job exactly once.
+        let g = &handle.batch_gauges()[0];
+        assert_eq!(g.jobs.load(Ordering::Relaxed), 10);
+        let batches = g.batches.load(Ordering::Relaxed);
+        assert!(batches >= 3, "max_batch=4 forces >= 3 batches, got {batches}");
+        assert!(g.max.load(Ordering::Relaxed) <= 4);
+        engine.shutdown();
+    }
+
+    /// Backend that records which worker executed each job and blocks each
+    /// worker's FIRST execution until the shared gate opens — makes
+    /// steal-while-victim-is-busy states deterministic.
+    struct RecordingExecutor {
+        id: usize,
+        counts: Arc<Vec<AtomicU64>>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+        blocked_once: Mutex<bool>,
+    }
+
+    impl ExecBackend for RecordingExecutor {
+        fn execute(&self, _artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+            self.counts[self.id].fetch_add(1, Ordering::SeqCst);
+            let mut first = self.blocked_once.lock().unwrap();
+            if !*first {
+                *first = true;
+                drop(first);
+                let (lock, cvar) = &*self.gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cvar.wait(open).unwrap();
+                }
+            }
+            Ok(vec![inputs[0].clone()])
+        }
+
+        fn name(&self) -> String {
+            format!("recording-{}", self.id)
+        }
+    }
+
+    #[test]
+    fn idle_worker_steals_from_a_busy_siblings_queue() {
+        // Every job shares one artifact, so submit-time sharding sends all
+        // of them to the same (affine) worker and its queue never fills
+        // (depth 32 ≫ 10 jobs) — submit-time handoff can't spread them.
+        // The affine worker blocks inside its first execution; the only
+        // way the sibling can ever run a job is dequeue-time stealing.
+        let counts: Arc<Vec<AtomicU64>> = Arc::new((0..2).map(|_| AtomicU64::new(0)).collect());
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let engine = Engine::pool(
+            EngineConfig {
+                workers: 2,
+                queue_depth: 32,
+                batch_window: Duration::ZERO,
+                max_batch: 1,
+            },
+            |i| {
+                Ok(Box::new(RecordingExecutor {
+                    id: i,
+                    counts: Arc::clone(&counts),
+                    gate: Arc::clone(&gate),
+                    blocked_once: Mutex::new(false),
+                }) as Box<dyn ExecBackend>)
+            },
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let mut pend = Vec::new();
+        for i in 0..10u64 {
+            let a = Matrix::random(8, 8, i);
+            pend.push(
+                handle
+                    .submit("nt_8x8x8".into(), vec![a.clone(), a])
+                    .unwrap(),
+            );
+        }
+        // Deterministic rendezvous: both workers are inside execute() (the
+        // affine worker on its first job, the sibling on a stolen one)
+        // before the gate opens.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while counts.iter().map(|c| c.load(Ordering::SeqCst)).min().unwrap() == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "sibling never stole; counts={:?}",
+                counts.iter().map(|c| c.load(Ordering::SeqCst)).collect::<Vec<_>>()
+            );
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        {
+            let (lock, cvar) = &*gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+        for rx in pend {
+            rx.recv().unwrap().unwrap();
+        }
+        let c0 = counts[0].load(Ordering::SeqCst);
+        let c1 = counts[1].load(Ordering::SeqCst);
+        assert_eq!(c0 + c1, 10, "every job executed exactly once");
+        assert!(c0 >= 1 && c1 >= 1, "both workers ran jobs: {c0} vs {c1}");
+        assert_eq!(handle.queue_depths(), vec![0, 0], "gauges balanced after steals");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn single_worker_pool_has_nobody_to_steal_from() {
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        let a = Matrix::random(16, 16, 1);
+        let b = Matrix::random(16, 16, 2);
+        let out = engine.handle().run("nt_16x16x16", vec![a, b]).unwrap();
+        assert_eq!(out.len(), 1);
         engine.shutdown();
     }
 }

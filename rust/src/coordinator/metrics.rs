@@ -116,6 +116,18 @@ impl LatencyHistogram {
     }
 }
 
+/// Per-worker micro-batch gauge, owned by the engine pool and attached to
+/// the metrics sink by `Router::new` (mirrors the queue-depth gauges).
+#[derive(Debug, Default)]
+pub struct BatchGauge {
+    /// Micro-batches executed.
+    pub batches: AtomicU64,
+    /// Jobs executed (sum of batch sizes).
+    pub jobs: AtomicU64,
+    /// Largest batch observed.
+    pub max: AtomicU64,
+}
+
 /// Shared metrics sink.
 #[derive(Default)]
 pub struct CoordinatorMetrics {
@@ -134,9 +146,26 @@ pub struct CoordinatorMetrics {
     /// (those are execution counts); this counter is what lets a reader
     /// tell a forced baseline run from genuine MTNN predictions.
     pub forced: AtomicU64,
+    // ---- online adaptive-selection loop (`crate::online`) ----
+    /// Telemetry samples accepted into the online sample ring.
+    pub online_samples: AtomicU64,
+    /// Telemetry samples dropped because the ring was full.
+    pub online_dropped: AtomicU64,
+    /// Shadow probes served (both algorithms executed and timed).
+    pub shadow_probes: AtomicU64,
+    /// Shadow probes whose measured winner contradicted the prediction.
+    pub shadow_mispredicts: AtomicU64,
+    /// Background retrain attempts.
+    pub retrains: AtomicU64,
+    /// Retrains whose challenger beat the incumbent and was hot-swapped in.
+    pub promotions: AtomicU64,
+    /// Retrains whose challenger lost (or tied) and was discarded.
+    pub rollbacks: AtomicU64,
     latency: LatencyHistogram,
     /// Engine worker queue-depth gauges, attached by `Router::new`.
     worker_depths: Mutex<Option<Arc<Vec<AtomicU64>>>>,
+    /// Engine worker micro-batch gauges, attached by `Router::new`.
+    batch_gauges: Mutex<Option<Arc<Vec<BatchGauge>>>>,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -150,6 +179,15 @@ pub struct MetricsSnapshot {
     pub selected_tnn: u64,
     pub memory_fallbacks: u64,
     pub forced: u64,
+    pub online_samples: u64,
+    pub online_dropped: u64,
+    pub shadow_probes: u64,
+    pub shadow_mispredicts: u64,
+    /// `shadow_mispredicts / shadow_probes` (NaN when no probes ran).
+    pub mispredict_rate: f64,
+    pub retrains: u64,
+    pub promotions: u64,
+    pub rollbacks: u64,
     pub p50_us: f64,
     pub p95_us: f64,
     pub p99_us: f64,
@@ -157,6 +195,11 @@ pub struct MetricsSnapshot {
     /// Per-worker in-flight counts at snapshot time (empty when no engine
     /// gauges are attached).
     pub worker_depths: Vec<u64>,
+    /// Mean micro-batch size across the pool (NaN before any batch ran or
+    /// when no engine gauges are attached).
+    pub avg_batch: f64,
+    /// Largest micro-batch any worker executed.
+    pub max_batch: u64,
 }
 
 impl CoordinatorMetrics {
@@ -186,6 +229,11 @@ impl CoordinatorMetrics {
         *self.worker_depths.lock().unwrap() = Some(gauges);
     }
 
+    /// Wire the engine pool's per-worker micro-batch gauges into snapshots.
+    pub fn attach_batch_gauges(&self, gauges: Arc<Vec<BatchGauge>>) {
+        *self.batch_gauges.lock().unwrap() = Some(gauges);
+    }
+
     pub fn snapshot(&self) -> MetricsSnapshot {
         let (p50_us, p95_us, p99_us, mean_us) = self.latency.summary();
         let worker_depths = self
@@ -195,6 +243,30 @@ impl CoordinatorMetrics {
             .as_ref()
             .map(|g| g.iter().map(|d| d.load(Ordering::Relaxed)).collect())
             .unwrap_or_default();
+        let (avg_batch, max_batch) = self
+            .batch_gauges
+            .lock()
+            .unwrap()
+            .as_ref()
+            .map(|gauges| {
+                let mut batches = 0u64;
+                let mut jobs = 0u64;
+                let mut max = 0u64;
+                for g in gauges.iter() {
+                    batches += g.batches.load(Ordering::Relaxed);
+                    jobs += g.jobs.load(Ordering::Relaxed);
+                    max = max.max(g.max.load(Ordering::Relaxed));
+                }
+                let avg = if batches == 0 {
+                    f64::NAN
+                } else {
+                    jobs as f64 / batches as f64
+                };
+                (avg, max)
+            })
+            .unwrap_or((f64::NAN, 0));
+        let shadow_probes = self.shadow_probes.load(Ordering::Relaxed);
+        let shadow_mispredicts = self.shadow_mispredicts.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -204,20 +276,35 @@ impl CoordinatorMetrics {
             selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
             memory_fallbacks: self.memory_fallbacks.load(Ordering::Relaxed),
             forced: self.forced.load(Ordering::Relaxed),
+            online_samples: self.online_samples.load(Ordering::Relaxed),
+            online_dropped: self.online_dropped.load(Ordering::Relaxed),
+            shadow_probes,
+            shadow_mispredicts,
+            mispredict_rate: if shadow_probes == 0 {
+                f64::NAN
+            } else {
+                shadow_mispredicts as f64 / shadow_probes as f64
+            },
+            retrains: self.retrains.load(Ordering::Relaxed),
+            promotions: self.promotions.load(Ordering::Relaxed),
+            rollbacks: self.rollbacks.load(Ordering::Relaxed),
             p50_us,
             p95_us,
             p99_us,
             mean_us,
             worker_depths,
+            avg_batch,
+            max_batch,
         }
     }
 }
 
 impl MetricsSnapshot {
     pub fn render(&self) -> String {
-        format!(
+        let mut s = format!(
             "requests={} completed={} failed={} busy={} | NT={} TNN={} fallback={} forced={} | \
-             latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us | queues={:?}",
+             latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us | queues={:?} | \
+             batch avg={:.2} max={}",
             self.requests,
             self.completed,
             self.failed,
@@ -230,8 +317,31 @@ impl MetricsSnapshot {
             self.p95_us,
             self.p99_us,
             self.mean_us,
-            self.worker_depths
-        )
+            self.worker_depths,
+            self.avg_batch,
+            self.max_batch,
+        );
+        // The online section only appears once the loop is active, so
+        // offline reports stay as terse as before.
+        if self.online_samples > 0 || self.shadow_probes > 0 || self.retrains > 0 {
+            let rate = if self.mispredict_rate.is_finite() {
+                format!("{:.1}%", self.mispredict_rate * 100.0)
+            } else {
+                "n/a".to_string() // no probes yet — don't print NaN%
+            };
+            s.push_str(&format!(
+                " | online samples={} dropped={} probes={} mispredicts={} rate={rate} \
+                 retrains={} promotions={} rollbacks={}",
+                self.online_samples,
+                self.online_dropped,
+                self.shadow_probes,
+                self.shadow_mispredicts,
+                self.retrains,
+                self.promotions,
+                self.rollbacks,
+            ));
+        }
+        s
     }
 }
 
@@ -324,6 +434,62 @@ mod tests {
         let m = CoordinatorMetrics::default();
         m.busy_rejections.fetch_add(3, Ordering::Relaxed);
         assert!(m.snapshot().render().contains("busy=3"));
+    }
+
+    #[test]
+    fn batch_gauges_aggregate_avg_and_max() {
+        let m = CoordinatorMetrics::default();
+        let s = m.snapshot();
+        assert!(s.avg_batch.is_nan(), "no gauges attached yet");
+        assert_eq!(s.max_batch, 0);
+        let gauges = Arc::new(vec![BatchGauge::default(), BatchGauge::default()]);
+        m.attach_batch_gauges(Arc::clone(&gauges));
+        assert!(m.snapshot().avg_batch.is_nan(), "no batches ran yet");
+        // Worker 0: two batches of 4 and 2; worker 1: one batch of 6.
+        gauges[0].batches.fetch_add(2, Ordering::Relaxed);
+        gauges[0].jobs.fetch_add(6, Ordering::Relaxed);
+        gauges[0].max.fetch_max(4, Ordering::Relaxed);
+        gauges[1].batches.fetch_add(1, Ordering::Relaxed);
+        gauges[1].jobs.fetch_add(6, Ordering::Relaxed);
+        gauges[1].max.fetch_max(6, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert!((s.avg_batch - 4.0).abs() < 1e-12, "avg={}", s.avg_batch);
+        assert_eq!(s.max_batch, 6);
+        assert!(s.render().contains("batch avg=4.00 max=6"), "{}", s.render());
+    }
+
+    #[test]
+    fn online_counters_render_only_when_active() {
+        let m = CoordinatorMetrics::default();
+        assert!(
+            !m.snapshot().render().contains("online"),
+            "offline reports stay terse"
+        );
+        m.shadow_probes.fetch_add(4, Ordering::Relaxed);
+        m.shadow_mispredicts.fetch_add(1, Ordering::Relaxed);
+        m.retrains.fetch_add(2, Ordering::Relaxed);
+        m.promotions.fetch_add(1, Ordering::Relaxed);
+        m.rollbacks.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shadow_probes, 4);
+        assert!((s.mispredict_rate - 0.25).abs() < 1e-12);
+        let r = s.render();
+        for needle in [
+            "probes=4",
+            "mispredicts=1",
+            "rate=25.0%",
+            "retrains=2",
+            "promotions=1",
+            "rollbacks=1",
+        ] {
+            assert!(r.contains(needle), "missing {needle} in {r}");
+        }
+    }
+
+    #[test]
+    fn mispredict_rate_is_nan_without_probes() {
+        let s = CoordinatorMetrics::default().snapshot();
+        assert!(s.mispredict_rate.is_nan());
     }
 
     #[test]

@@ -28,11 +28,29 @@
 //! micro-batcher: after dequeuing a job it collects same-artifact jobs
 //! for a small window (or up to `max_batch`) and executes them
 //! back-to-back, which is why sharding is by artifact hash (same shape →
-//! same worker → hot batches). Responses travel back through per-request
-//! channels; metrics count selections, fallbacks, forced overrides, busy
-//! rejections, per-worker queue depths, and latency percentiles from a
-//! lock-free fixed-bucket histogram. Shutdown drains: every accepted job
-//! executes before the workers join. A pool of size 1 reproduces the old
+//! same worker → hot batches). An *idle* worker steals a job from the
+//! back of a sibling's queue rather than sleeping, so a same-artifact
+//! burst that all sharded onto one worker still spreads across the pool.
+//! Responses travel back through per-request channels as [`ExecReply`]s
+//! carrying the worker-measured execution latency — the timing hook the
+//! online adaptive-selection loop feeds on.
+//!
+//! **Online adaptive selection** (`crate::online`, enabled via
+//! [`RouterConfig::online`]): the selector lives behind a hot-swappable
+//! generation-counted pointer; every execution's measured latency is
+//! recorded into a lock-free sample ring; a deterministic 1-in-N slice of
+//! predicted requests is shadow-probed (both algorithms run, the measured
+//! winner becomes a labeled example); a per-shape-bucket drift tracker
+//! trips a background trainer that refits the GBDT and promotes it only
+//! if it beats the incumbent on held-out data, atomically invalidating
+//! the decision cache on swap.
+//!
+//! Metrics count selections, fallbacks, forced overrides, busy
+//! rejections, per-worker queue depths, micro-batch sizes, the online
+//! loop (samples, probes, mispredict rate, retrains,
+//! promotions, rollbacks), and latency percentiles from a lock-free
+//! fixed-bucket histogram. Shutdown drains: every accepted job executes
+//! before the workers join. A pool of size 1 reproduces the old
 //! single-thread engine semantics exactly.
 
 pub mod backend;
@@ -41,6 +59,6 @@ pub mod metrics;
 pub mod router;
 
 pub use backend::{EngineBusy, ExecBackend};
-pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob};
-pub use metrics::{CoordinatorMetrics, MetricsSnapshot};
+pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob, ExecReply};
+pub use metrics::{BatchGauge, CoordinatorMetrics, MetricsSnapshot};
 pub use router::{AdmissionControl, GemmRequest, GemmResponse, Router, RouterConfig};

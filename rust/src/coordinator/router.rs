@@ -5,16 +5,28 @@
 //! micro-batcher group same-artifact work engine-side. Admission control
 //! decides what happens when every worker queue is full: block (bounded
 //! backpressure, the default) or fail fast with [`EngineBusy`].
+//!
+//! With [`RouterConfig::online`] the router closes the loop
+//! (`crate::online`): the model lives behind a hot-swappable
+//! [`LiveSelector`], every execution's measured latency is recorded into
+//! the sample ring, a deterministic 1-in-N slice of predicted requests is
+//! **shadow-probed** (both NT and TNN run; the measured winner becomes a
+//! labeled example and feeds the drift tracker), and a background trainer
+//! retrains/promotes without ever blocking the serving path. The hot path
+//! stays lock-free: a cache hit in the epoch-checked
+//! [`DecisionCache`] touches no lock, and a promotion invalidates the
+//! cache atomically so stale decisions cannot outlive their model.
 
 use super::backend::EngineBusy;
-use super::engine::EngineHandle;
+use super::engine::{EngineHandle, ExecReply};
 use super::metrics::CoordinatorMetrics;
 use crate::gemm::cpu::Matrix;
 use crate::gemm::xla::XlaBackend;
 use crate::gemm::{Algorithm, GemmShape};
-use crate::gpusim::GpuSpec;
+use crate::gpusim::{GpuSpec, Simulator};
+use crate::online::{trainer, Accumulator, LiveSelector, OnlineConfig, OnlineHub};
 use crate::selector::cache::DecisionCache;
-use crate::selector::{SelectionReason, Selector};
+use crate::selector::{SelectionReason, Selector, TrainedModel};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -65,6 +77,8 @@ pub struct RouterConfig {
     pub cache_decisions: bool,
     /// Queue-full policy (see [`AdmissionControl`]).
     pub admission: AdmissionControl,
+    /// Online adaptive selection (`None` = the offline paper behavior).
+    pub online: Option<OnlineConfig>,
 }
 
 impl Default for RouterConfig {
@@ -73,48 +87,114 @@ impl Default for RouterConfig {
             force: None,
             cache_decisions: true,
             admission: AdmissionControl::default(),
+            online: None,
         }
     }
 }
 
+impl RouterConfig {
+    /// Default config with the online adaptive-selection loop enabled.
+    pub fn online(config: OnlineConfig) -> RouterConfig {
+        RouterConfig {
+            online: Some(config),
+            ..RouterConfig::default()
+        }
+    }
+}
+
+/// The online loop's runtime half owned by the router: the shared hub
+/// plus the background trainer thread (joined on drop).
+struct OnlineRuntime {
+    hub: Arc<OnlineHub>,
+    trainer: Option<std::thread::JoinHandle<()>>,
+}
+
 /// The router. Cheap to share via `Arc`; submission is thread-safe.
 pub struct Router {
-    selector: Selector,
+    live: Arc<LiveSelector>,
     engine: EngineHandle,
     pub metrics: Arc<CoordinatorMetrics>,
     config: RouterConfig,
-    cache: DecisionCache,
+    cache: Arc<DecisionCache>,
+    online: Option<OnlineRuntime>,
 }
 
 impl Router {
     pub fn new(selector: Selector, engine: EngineHandle, config: RouterConfig) -> Router {
         let metrics = Arc::new(CoordinatorMetrics::default());
         metrics.attach_worker_depths(engine.depth_gauges());
+        metrics.attach_batch_gauges(engine.batch_gauges());
+        let live = Arc::new(LiveSelector::new(selector));
+        let cache = Arc::new(DecisionCache::default());
+        let online = config.online.clone().map(|cfg| {
+            let mut acc = Accumulator::new(cfg.max_examples);
+            // Warm restart: reload the persisted dataset and, when one was
+            // saved, hot-swap the persisted model in before any traffic.
+            if let Some(path) = &cfg.persist_path {
+                if path.exists() {
+                    match trainer::load_store(path) {
+                        Ok((examples, model)) => {
+                            acc.preload(examples);
+                            if let Some(g) = model {
+                                live.swap(Selector::new(TrainedModel::Gbdt(g)));
+                                cache.invalidate();
+                            }
+                        }
+                        Err(e) => {
+                            eprintln!("online: ignoring corrupt store {}: {e}", path.display())
+                        }
+                    }
+                }
+            }
+            let hub = Arc::new(OnlineHub::new(
+                cfg,
+                Arc::clone(&live),
+                Arc::clone(&cache),
+                Arc::clone(&metrics),
+            ));
+            let join = trainer::spawn(Arc::clone(&hub), acc);
+            OnlineRuntime {
+                hub,
+                trainer: Some(join),
+            }
+        });
         Router {
-            selector,
+            live,
             engine,
             metrics,
             config,
-            cache: DecisionCache::default(),
+            cache,
+            online,
         }
+    }
+
+    /// The online hub (drift tracker, sample ring, live-model generation)
+    /// when the loop is enabled — exposed for tests, examples, and
+    /// operational introspection.
+    pub fn online_hub(&self) -> Option<Arc<OnlineHub>> {
+        self.online.as_ref().map(|rt| Arc::clone(&rt.hub))
     }
 
     /// Decide the algorithm for a request (Algorithm 2 + config override),
     /// memoized by shape when `cache_decisions` is on. Selection is
-    /// deterministic, so caching is transparent.
+    /// deterministic *within a model generation*, so the cache is
+    /// epoch-stamped: it is captured before the model runs and a decision
+    /// computed under a model that was swapped out mid-flight is never
+    /// published.
     pub fn decide(&self, req: &GemmRequest) -> (Algorithm, SelectionReason) {
         if let Some(forced) = self.config.force {
             return (forced, SelectionReason::Forced);
         }
         let GemmShape { m, n, k } = req.shape;
         if !self.config.cache_decisions {
-            return self.selector.select(req.gpu, m, n, k);
+            return self.live.select(req.gpu, m, n, k);
         }
+        let epoch = self.cache.epoch();
         if let Some(hit) = self.cache.get(req.gpu, m, n, k) {
             return hit;
         }
-        let dec = self.selector.select(req.gpu, m, n, k);
-        self.cache.insert(req.gpu, m, n, k, dec);
+        let dec = self.live.select(req.gpu, m, n, k);
+        self.cache.insert_at(epoch, req.gpu, m, n, k, dec);
         dec
     }
 
@@ -139,7 +219,7 @@ impl Router {
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
-    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<Vec<Matrix>>>> {
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let res = match self.config.admission {
             AdmissionControl::Block => self.engine.submit(artifact, inputs),
             AdmissionControl::RejectWhenBusy => self.engine.try_submit(artifact, inputs),
@@ -150,25 +230,98 @@ impl Router {
         res
     }
 
+    /// The label the live model effectively predicted, from the selection
+    /// reason (0 when the model was bypassed).
+    fn predicted_label(reason: SelectionReason) -> i8 {
+        match reason {
+            SelectionReason::PredictedNt => 1,
+            SelectionReason::PredictedTnn => -1,
+            SelectionReason::MemoryFallback | SelectionReason::Forced => 0,
+        }
+    }
+
+    /// Whether this request should be shadow-probed: the online loop is
+    /// on, the model actually predicted (never second-guess a memory
+    /// fallback — TNN might not fit), and the deterministic 1-in-N
+    /// schedule selects it.
+    fn should_probe(&self, req: &GemmRequest, predicted: i8) -> bool {
+        let Some(rt) = &self.online else {
+            return false;
+        };
+        predicted != 0
+            && Simulator::tnn_workspace_bytes(req.shape.m, req.shape.n, req.shape.k)
+                <= req.gpu.global_mem_bytes()
+            && rt.hub.should_probe()
+    }
+
     /// Serve one request synchronously.
     pub fn serve(&self, req: GemmRequest) -> anyhow::Result<GemmResponse> {
         let t0 = Instant::now();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (algo, reason) = self.decide(&req);
         self.metrics.record_selection(algo, reason);
+        let predicted = Router::predicted_label(reason);
         let artifact = XlaBackend::artifact_name(req.shape, algo);
-        let outcome = self.submit(artifact.clone(), vec![req.a, req.b]).and_then(|rx| {
-            let mut outs = rx
+
+        // Shadow probe: run the *other* algorithm's artifact alongside the
+        // chosen one. Best-effort — a busy engine or an execution failure
+        // on the shadow side only costs the training sample, never the
+        // request — and it is submitted strictly *after* the primary so a
+        // probe can never consume the queue slot the real request needed.
+        let shadow_inputs = if self.should_probe(&req, predicted) {
+            let other = match algo {
+                Algorithm::Nt => Algorithm::Tnn,
+                _ => Algorithm::Nt,
+            };
+            Some((
+                XlaBackend::artifact_name(req.shape, other),
+                req.a.clone(),
+                req.b.clone(),
+            ))
+        } else {
+            None
+        };
+
+        let GemmShape { m, n, k } = req.shape;
+        let gpu = req.gpu;
+        let submitted = self.submit(artifact.clone(), vec![req.a, req.b]);
+        let shadow = match (&submitted, shadow_inputs) {
+            (Ok(_), Some((shadow_artifact, a, b))) => {
+                self.engine.try_submit(shadow_artifact, vec![a, b]).ok()
+            }
+            _ => None,
+        };
+        let outcome = submitted.and_then(|rx| {
+            let reply = rx
                 .recv()
                 .map_err(|_| anyhow::anyhow!("engine dropped the response"))??;
-            anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
-            Ok(outs.remove(0))
+            anyhow::ensure!(reply.outputs.len() == 1, "{artifact}: expected one output");
+            Ok(reply)
         });
         match outcome {
-            Ok(output) => {
+            Ok(mut reply) => {
+                let output = reply.outputs.remove(0);
                 let latency = t0.elapsed();
                 self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 self.metrics.record_latency_us(latency.as_secs_f64() * 1e6);
+                if let Some(rt) = &self.online {
+                    let shadow_us = shadow.and_then(|rx| {
+                        rx.recv().ok().and_then(|r| r.ok()).map(|r| r.exec_us)
+                    });
+                    match shadow_us {
+                        Some(other_us) => {
+                            let (lat_nt, lat_tnn) = match algo {
+                                Algorithm::Nt => (reply.exec_us, other_us),
+                                _ => (other_us, reply.exec_us),
+                            };
+                            rt.hub
+                                .record_probe(gpu, m, n, k, predicted, lat_nt, lat_tnn);
+                        }
+                        None => rt
+                            .hub
+                            .record_execution(gpu, m, n, k, algo, reply.exec_us, predicted),
+                    }
+                }
                 Ok(GemmResponse {
                     output,
                     algorithm: algo,
@@ -188,7 +341,9 @@ impl Router {
     /// (the engine's shape-affinity sharding and micro-batcher regroup
     /// same-artifact jobs worker-side), then responses are collected in
     /// submission order. Each failure — at submit or at execution —
-    /// counts toward `failed` exactly once.
+    /// counts toward `failed` exactly once. Batch traffic records
+    /// single-sided telemetry but is never shadow-probed (probing doubles
+    /// a request; the synchronous path owns that budget).
     pub fn serve_batch(&self, reqs: Vec<GemmRequest>) -> Vec<anyhow::Result<GemmResponse>> {
         enum Pending {
             Failed(anyhow::Error),
@@ -196,8 +351,10 @@ impl Router {
                 algo: Algorithm,
                 reason: SelectionReason,
                 artifact: String,
+                gpu: &'static GpuSpec,
+                shape: GemmShape,
                 t0: Instant,
-                rx: mpsc::Receiver<anyhow::Result<Vec<Matrix>>>,
+                rx: mpsc::Receiver<anyhow::Result<ExecReply>>,
             },
         }
 
@@ -208,11 +365,14 @@ impl Router {
             self.metrics.record_selection(algo, reason);
             let artifact = XlaBackend::artifact_name(req.shape, algo);
             let t0 = Instant::now();
+            let (gpu, shape) = (req.gpu, req.shape);
             match self.submit(artifact.clone(), vec![req.a, req.b]) {
                 Ok(rx) => pending.push(Pending::Wait {
                     algo,
                     reason,
                     artifact,
+                    gpu,
+                    shape,
                     t0,
                     rx,
                 }),
@@ -230,6 +390,8 @@ impl Router {
                     algo,
                     reason,
                     artifact,
+                    gpu,
+                    shape,
                     t0,
                     rx,
                 } => {
@@ -237,16 +399,30 @@ impl Router {
                         .recv()
                         .map_err(|_| anyhow::anyhow!("engine dropped the response"))
                         .and_then(|r| r)
-                        .and_then(|mut outs| {
-                            anyhow::ensure!(outs.len() == 1, "{artifact}: expected one output");
-                            Ok(outs.remove(0))
+                        .and_then(|mut reply| {
+                            anyhow::ensure!(
+                                reply.outputs.len() == 1,
+                                "{artifact}: expected one output"
+                            );
+                            Ok((reply.outputs.remove(0), reply.exec_us))
                         });
                     match res {
-                        Ok(output) => {
+                        Ok((output, exec_us)) => {
                             let latency = t0.elapsed();
                             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                             self.metrics
                                 .record_latency_us(latency.as_secs_f64() * 1e6);
+                            if let Some(rt) = &self.online {
+                                rt.hub.record_execution(
+                                    gpu,
+                                    shape.m,
+                                    shape.n,
+                                    shape.k,
+                                    algo,
+                                    exec_us,
+                                    Router::predicted_label(reason),
+                                );
+                            }
                             Ok(GemmResponse {
                                 output,
                                 algorithm: algo,
@@ -263,6 +439,17 @@ impl Router {
                 }
             })
             .collect()
+    }
+}
+
+impl Drop for Router {
+    fn drop(&mut self) {
+        if let Some(rt) = &mut self.online {
+            rt.hub.request_shutdown();
+            if let Some(join) = rt.trainer.take() {
+                let _ = join.join();
+            }
+        }
     }
 }
 
@@ -297,6 +484,8 @@ mod tests {
         assert!(c.force.is_none());
         assert!(c.cache_decisions);
         assert_eq!(c.admission, AdmissionControl::Block);
+        assert!(c.online.is_none());
+        assert!(RouterConfig::online(OnlineConfig::default()).online.is_some());
     }
 
     #[test]
@@ -375,6 +564,50 @@ mod tests {
         router
             .warmup(&[GemmShape::new(128, 128, 128), GemmShape::new(64, 32, 48)])
             .unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn online_router_records_samples_and_probes() {
+        let (engine, router) = native_router(RouterConfig::online(OnlineConfig {
+            probe_every: 2,
+            // Keep the trainer quiet so this test only checks telemetry.
+            retrain_min_labeled: usize::MAX,
+            ..OnlineConfig::default()
+        }));
+        for i in 0..6u64 {
+            let req = request(32, 32, 32, i);
+            let expect = matmul_nt(&req.a, &req.b);
+            let resp = router.serve(req).unwrap();
+            assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        }
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.completed, 6);
+        // probe_every=2 → probe ticks 0, 2 and 4 of the 6 predicted
+        // requests fire (the schedule starts at the first one).
+        assert_eq!(snap.shadow_probes, 3, "{}", snap.render());
+        assert_eq!(snap.online_samples, 6, "every request recorded");
+        let hub = router.online_hub().expect("online hub");
+        assert_eq!(hub.drift.probes(), 3);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn online_forced_traffic_is_never_probed() {
+        let (engine, router) = native_router(RouterConfig {
+            force: Some(Algorithm::Nt),
+            ..RouterConfig::online(OnlineConfig {
+                probe_every: 1,
+                retrain_min_labeled: usize::MAX,
+                ..OnlineConfig::default()
+            })
+        });
+        for i in 0..4u64 {
+            router.serve(request(16, 16, 16, i)).unwrap();
+        }
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.shadow_probes, 0, "forced traffic bypasses the model");
+        assert_eq!(snap.online_samples, 4, "latency still recorded");
         engine.shutdown();
     }
 }

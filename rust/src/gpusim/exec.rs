@@ -65,6 +65,31 @@ impl SimExecutor {
             std::thread::sleep(Duration::from_secs_f64(seconds * self.time_scale));
         }
     }
+
+    /// Modeled execution latency for an artifact, in µs — deterministic
+    /// (the calibrated timing model has no run-to-run noise), independent
+    /// of host CPU speed, and what `execute_timed` reports so the online
+    /// loop learns the *simulated* GPU's NT/TNN trade-off.
+    pub fn modeled_us(&self, artifact: &str) -> Option<f64> {
+        let (tag, spec) = artifact.split_once('_')?;
+        let seconds = match tag {
+            "nt" | "tnn" | "nn" => {
+                let d = parse_dims(spec, 3).ok()?;
+                let (m, n, k) = (d[0] as u64, d[1] as u64, d[2] as u64);
+                match tag {
+                    "nt" => self.sim.model.t_nt(m, n, k),
+                    "tnn" => self.sim.model.t_tnn(m, n, k),
+                    _ => self.sim.model.t_nn(m, n, k),
+                }
+            }
+            "transpose" => {
+                let d = parse_dims(spec, 2).ok()?;
+                self.sim.model.t_transpose(d[0] as u64, d[1] as u64)
+            }
+            _ => return None,
+        };
+        Some(seconds * 1e6)
+    }
 }
 
 impl ExecBackend for SimExecutor {
@@ -143,6 +168,16 @@ impl ExecBackend for SimExecutor {
         }
     }
 
+    /// Report the *modeled* latency instead of host wall-clock: the whole
+    /// point of the sim backend is that timing experiments (and the online
+    /// retraining loop) see the calibrated GPU, not the oracle kernels'
+    /// CPU cost.
+    fn execute_timed(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<(Vec<Matrix>, f64)> {
+        let out = self.execute(artifact, inputs)?;
+        let us = self.modeled_us(artifact).unwrap_or(0.0);
+        Ok((out, us))
+    }
+
     fn name(&self) -> String {
         format!("sim:{}", self.spec().name)
     }
@@ -212,6 +247,25 @@ mod tests {
             .to_string();
         assert!(err.contains("does not fit"), "{err}");
         assert_eq!(sx.simulated(), Duration::ZERO);
+    }
+
+    #[test]
+    fn execute_timed_reports_the_modeled_latency() {
+        let sx = SimExecutor::new(&GTX1080);
+        let a = Matrix::random(128, 128, 7);
+        let b = Matrix::random(128, 128, 8);
+        let (out, us) = sx.execute_timed("nt_128x128x128", &[&a, &b]).unwrap();
+        assert_eq!(out.len(), 1);
+        let expect = sx.modeled_us("nt_128x128x128").unwrap();
+        assert_eq!(us, expect, "timed latency is the calibrated model's");
+        assert!(us > 0.0);
+        // The NT/TNN split the timing model defines is what the hook
+        // reports — the online loop's labels hinge on this.
+        let nt = sx.modeled_us("nt_128x128x128").unwrap();
+        let tnn = sx.modeled_us("tnn_128x128x128").unwrap();
+        assert_ne!(nt, tnn);
+        assert!(sx.modeled_us("bogus").is_none());
+        assert!(sx.modeled_us("nt_1x2").is_none());
     }
 
     #[test]

@@ -14,8 +14,11 @@
 //!   a sharded engine worker pool ([`coordinator::Engine`]) whose workers
 //!   each own an [`coordinator::ExecBackend`] (PJRT runtime, native
 //!   blocked CPU kernels, or the deterministic GPU-timing simulator) and
-//!   micro-batch same-artifact jobs — plus the experiment harness
-//!   reproducing every table and figure of the paper.
+//!   micro-batch same-artifact jobs and steal work when idle — plus the
+//!   online adaptive-selection loop ([`online`]: runtime telemetry,
+//!   shadow probing, drift detection, background GBDT retraining with
+//!   atomic model hot-swap) and the experiment harness reproducing every
+//!   table and figure of the paper.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
@@ -26,6 +29,7 @@ pub mod fcn;
 pub mod gemm;
 pub mod gpusim;
 pub mod ml;
+pub mod online;
 pub mod runtime;
 pub mod selector;
 pub mod testutil;

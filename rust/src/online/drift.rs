@@ -1,0 +1,188 @@
+//! Drift detection: per-shape-bucket mispredict-rate tracking.
+//!
+//! Every shadow probe compares the live model's prediction with the
+//! measured winner. Probes hash by `(gpu, ⌊log2 m⌋, ⌊log2 n⌋, ⌊log2 k⌋)`
+//! into a fixed bucket table, so a workload can drift in one corner of the
+//! shape space (say, tall-skinny GEMMs that the offline grid never covered)
+//! and trip retraining even while the aggregate rate still looks healthy.
+//!
+//! The tracker is trigger state, not an archive: [`DriftTracker::reset`]
+//! zeroes it after every retrain so one bad epoch cannot re-trigger
+//! forever. Cumulative probe/mispredict counts live in
+//! [`crate::coordinator::CoordinatorMetrics`].
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Fixed bucket count (power of two).
+const BUCKETS: usize = 256;
+
+struct Bucket {
+    probes: AtomicU64,
+    mispredicts: AtomicU64,
+}
+
+/// Lock-free mispredict-rate tracker.
+pub struct DriftTracker {
+    buckets: Box<[Bucket]>,
+    probes: AtomicU64,
+    mispredicts: AtomicU64,
+}
+
+impl Default for DriftTracker {
+    fn default() -> Self {
+        DriftTracker {
+            buckets: (0..BUCKETS)
+                .map(|_| Bucket {
+                    probes: AtomicU64::new(0),
+                    mispredicts: AtomicU64::new(0),
+                })
+                .collect(),
+            probes: AtomicU64::new(0),
+            mispredicts: AtomicU64::new(0),
+        }
+    }
+}
+
+fn log2_floor(v: u64) -> u64 {
+    63 - v.max(1).leading_zeros() as u64
+}
+
+fn bucket_of(gpu_id: u64, m: u64, n: u64, k: u64) -> usize {
+    let key = crate::util::rng::mix_parts(&[gpu_id, log2_floor(m), log2_floor(n), log2_floor(k)]);
+    (key as usize) & (BUCKETS - 1)
+}
+
+impl DriftTracker {
+    /// Record one shadow-probe outcome.
+    pub fn record(&self, gpu_id: u64, m: u64, n: u64, k: u64, mispredicted: bool) {
+        let b = &self.buckets[bucket_of(gpu_id, m, n, k)];
+        b.probes.fetch_add(1, Ordering::Relaxed);
+        self.probes.fetch_add(1, Ordering::Relaxed);
+        if mispredicted {
+            b.mispredicts.fetch_add(1, Ordering::Relaxed);
+            self.mispredicts.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Probes recorded since the last reset.
+    pub fn probes(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Aggregate mispredict rate since the last reset (0 when no probes).
+    pub fn total_rate(&self) -> f64 {
+        let p = self.probes.load(Ordering::Relaxed);
+        if p == 0 {
+            0.0
+        } else {
+            self.mispredicts.load(Ordering::Relaxed) as f64 / p as f64
+        }
+    }
+
+    /// The worst per-bucket mispredict rate among buckets with at least
+    /// `min_probes` observations (0 when none qualify).
+    pub fn worst_bucket_rate(&self, min_probes: u64) -> f64 {
+        let mut worst: f64 = 0.0;
+        for b in self.buckets.iter() {
+            let p = b.probes.load(Ordering::Relaxed);
+            if p >= min_probes.max(1) {
+                let r = b.mispredicts.load(Ordering::Relaxed) as f64 / p as f64;
+                worst = worst.max(r);
+            }
+        }
+        worst
+    }
+
+    /// Should a retrain fire? True when either the aggregate rate or any
+    /// sufficiently observed shape bucket exceeds `threshold`.
+    pub fn triggered(&self, threshold: f64, min_probes: u64) -> bool {
+        if self.probes() < min_probes.max(1) {
+            return false;
+        }
+        self.total_rate() > threshold || self.worst_bucket_rate(min_probes) > threshold
+    }
+
+    /// Zero all counters (called after a retrain so stale evidence cannot
+    /// re-trigger). Racy with concurrent `record` — a probe landing during
+    /// the sweep survives into the next window, which is harmless.
+    pub fn reset(&self) {
+        for b in self.buckets.iter() {
+            b.probes.store(0, Ordering::Relaxed);
+            b.mispredicts.store(0, Ordering::Relaxed);
+        }
+        self.probes.store(0, Ordering::Relaxed);
+        self.mispredicts.store(0, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_predictions_never_trigger() {
+        let d = DriftTracker::default();
+        for i in 0..100 {
+            d.record(1, 128 << (i % 4), 256, 512, false);
+        }
+        assert_eq!(d.probes(), 100);
+        assert_eq!(d.total_rate(), 0.0);
+        assert!(!d.triggered(0.05, 16));
+    }
+
+    #[test]
+    fn aggregate_rate_triggers() {
+        let d = DriftTracker::default();
+        for i in 0..100 {
+            d.record(1, 128, 128, 128, i % 2 == 0);
+        }
+        assert!((d.total_rate() - 0.5).abs() < 1e-12);
+        assert!(d.triggered(0.2, 16));
+        assert!(!d.triggered(0.6, 16));
+    }
+
+    #[test]
+    fn localized_drift_trips_even_when_aggregate_is_healthy() {
+        let d = DriftTracker::default();
+        // 960 clean probes spread over many buckets…
+        for i in 0..960u64 {
+            d.record(1, 128 << (i % 8), 128 << ((i / 8) % 8), 128, false);
+        }
+        // …plus one drifted shape bucket: 40 probes, 80% wrong.
+        for i in 0..40u64 {
+            d.record(2, 65536, 65536, 65536, i % 5 != 0);
+        }
+        assert!(d.total_rate() < 0.05, "aggregate {}", d.total_rate());
+        assert!(d.worst_bucket_rate(32) > 0.7);
+        assert!(d.triggered(0.25, 32), "per-bucket drift must trigger");
+    }
+
+    #[test]
+    fn min_probes_gates_noise() {
+        let d = DriftTracker::default();
+        d.record(1, 128, 128, 128, true); // one probe, 100% wrong
+        assert!(!d.triggered(0.1, 8), "too few probes to call drift");
+        assert!(d.triggered(0.1, 1));
+    }
+
+    #[test]
+    fn reset_clears_the_window() {
+        let d = DriftTracker::default();
+        for _ in 0..50 {
+            d.record(1, 256, 256, 256, true);
+        }
+        assert!(d.triggered(0.1, 8));
+        d.reset();
+        assert_eq!(d.probes(), 0);
+        assert_eq!(d.total_rate(), 0.0);
+        assert!(!d.triggered(0.1, 8));
+    }
+
+    #[test]
+    fn same_power_of_two_band_shares_a_bucket() {
+        // 128 and 255 share ⌊log2⌋ = 7, so they always land together
+        // (different bands usually separate, but that's hash-dependent).
+        assert_eq!(bucket_of(1, 128, 64, 32), bucket_of(1, 255, 64, 32));
+        assert_eq!(bucket_of(7, 1, 1, 1), bucket_of(7, 1, 1, 1));
+    }
+}

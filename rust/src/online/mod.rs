@@ -1,0 +1,597 @@
+//! Online adaptive selection — the closed loop that keeps MTNN honest
+//! after deployment.
+//!
+//! The paper trains the selector once, offline, on a microbenchmark grid.
+//! A long-running service drifts away from that distribution (new shapes,
+//! different hardware, changed kernels), so this subsystem observes its
+//! own executions and retrains itself:
+//!
+//! ```text
+//!                 ┌──────────────────────────────────────────────┐
+//!                 │                SERVING HOT PATH              │
+//!   request ──► Router::decide ──► engine ──► measured latency   │
+//!                 │    │ 1-in-N: shadow probe (run NT *and* TNN, │
+//!                 │    │          label = measured winner)       │
+//!                 └────┼─────────────────────────────────────────┘
+//!                      ▼ lock-free SampleRing (never blocks serving)
+//!               DriftTracker ── per-shape-bucket mispredict rate
+//!                      │ threshold crossed (or enough new labels)
+//!                      ▼
+//!               background trainer: drain ring → Dataset →
+//!               GBDT refit → holdout eval vs incumbent
+//!                      │                       │
+//!              beats incumbent?          loses/ties?
+//!                      ▼                       ▼
+//!            PROMOTE: LiveSelector.swap   ROLLBACK: discard
+//!            + DecisionCache.invalidate   (counter only)
+//!            + JSON persist (warm restart)
+//! ```
+//!
+//! The hot path stays lock-free: `Router::decide` consults the
+//! [`crate::selector::cache::DecisionCache`] (epoch-checked — a swap
+//! invalidates every cached decision atomically), and only a cache miss
+//! touches the `RwLock` inside [`LiveSelector`]. Telemetry goes through
+//! the bounded MPMC [`SampleRing`], which drops rather than blocks when
+//! the trainer falls behind.
+
+pub mod drift;
+pub mod sampler;
+pub mod trainer;
+
+pub use drift::DriftTracker;
+pub use sampler::{Sample, SampleRing};
+pub use trainer::{Accumulator, Example};
+
+use crate::coordinator::metrics::CoordinatorMetrics;
+use crate::gemm::Algorithm;
+use crate::gpusim::GpuSpec;
+use crate::selector::cache::DecisionCache;
+use crate::selector::{Selector, SelectionReason};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Tuning for the online loop (defaults are conservative production-ish
+/// numbers; tests and the serving example crank them way down).
+#[derive(Debug, Clone)]
+pub struct OnlineConfig {
+    /// Shadow-probe every Nth *predicted* request (0 disables probing).
+    /// Probes run both algorithms, so the probe fraction is pure measured
+    /// overhead — keep it sparse in production.
+    pub probe_every: u64,
+    /// Sample-ring capacity (rounded up to a power of two).
+    pub ring_capacity: usize,
+    /// Never retrain on fewer labeled examples than this.
+    pub retrain_min_labeled: usize,
+    /// Volume trigger: retrain after this many *new* labeled examples
+    /// since the last retrain (0 disables the volume trigger, leaving
+    /// drift as the only tripwire).
+    pub retrain_every_labeled: usize,
+    /// Drift trigger: mispredict-rate threshold (aggregate or any
+    /// sufficiently observed shape bucket).
+    pub drift_threshold: f64,
+    /// Minimum probes before the drift tracker may trigger.
+    pub drift_min_probes: u64,
+    /// Held-out fraction for challenger-vs-incumbent evaluation.
+    pub holdout_frac: f64,
+    /// Trainer poll period (ring drain cadence; also the shutdown
+    /// response bound).
+    pub poll_interval: Duration,
+    /// Cap on accumulated labeled examples (oldest evicted first).
+    pub max_examples: usize,
+    /// JSON store for warm restarts (examples + live GBDT). `None`
+    /// disables persistence.
+    pub persist_path: Option<PathBuf>,
+}
+
+impl Default for OnlineConfig {
+    fn default() -> Self {
+        OnlineConfig {
+            probe_every: 16,
+            ring_capacity: 4096,
+            retrain_min_labeled: 64,
+            retrain_every_labeled: 256,
+            drift_threshold: 0.15,
+            drift_min_probes: 32,
+            holdout_frac: 0.2,
+            poll_interval: Duration::from_millis(25),
+            max_examples: 65_536,
+            persist_path: None,
+        }
+    }
+}
+
+/// The hot-swappable selector: a generation-counted epoch pointer.
+///
+/// Readers that only need *decisions* never touch the lock — the router's
+/// `DecisionCache` serves them and the generation word tells it when to
+/// distrust itself. A cache miss (or an explicit [`LiveSelector::current`])
+/// takes the `RwLock` read side briefly to clone the `Arc`; the trainer
+/// takes the write side only for the pointer swap itself, never while
+/// fitting.
+pub struct LiveSelector {
+    inner: RwLock<Arc<Selector>>,
+    generation: AtomicU64,
+}
+
+impl LiveSelector {
+    pub fn new(seed: Selector) -> LiveSelector {
+        LiveSelector {
+            inner: RwLock::new(Arc::new(seed)),
+            generation: AtomicU64::new(0),
+        }
+    }
+
+    /// Swap count since construction (0 = still the seed model).
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
+    /// Clone out the live model.
+    pub fn current(&self) -> Arc<Selector> {
+        self.inner.read().unwrap().clone()
+    }
+
+    /// Atomically install a new model; returns the new generation.
+    pub fn swap(&self, next: Selector) -> u64 {
+        let mut w = self.inner.write().unwrap();
+        *w = Arc::new(next);
+        self.generation.fetch_add(1, Ordering::AcqRel) + 1
+    }
+
+    /// Algorithm 2 through the live model.
+    pub fn select(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> (Algorithm, SelectionReason) {
+        self.current().select(gpu, m, n, k)
+    }
+}
+
+/// Shared state between the router (producer side) and the background
+/// trainer (consumer side).
+pub struct OnlineHub {
+    pub config: OnlineConfig,
+    pub ring: SampleRing,
+    pub drift: DriftTracker,
+    pub live: Arc<LiveSelector>,
+    /// The router's decision cache — invalidated on every promotion so a
+    /// stale cached decision cannot outlive the model that made it.
+    pub cache: Arc<DecisionCache>,
+    pub metrics: Arc<CoordinatorMetrics>,
+    probe_tick: AtomicU64,
+    shutdown: AtomicBool,
+}
+
+impl OnlineHub {
+    pub fn new(
+        config: OnlineConfig,
+        live: Arc<LiveSelector>,
+        cache: Arc<DecisionCache>,
+        metrics: Arc<CoordinatorMetrics>,
+    ) -> OnlineHub {
+        OnlineHub {
+            ring: SampleRing::new(config.ring_capacity),
+            drift: DriftTracker::default(),
+            config,
+            live,
+            cache,
+            metrics,
+            probe_tick: AtomicU64::new(0),
+            shutdown: AtomicBool::new(false),
+        }
+    }
+
+    /// Deterministic 1-in-N probe schedule over *predicted* requests.
+    pub fn should_probe(&self) -> bool {
+        let n = self.config.probe_every;
+        if n == 0 {
+            return false;
+        }
+        self.probe_tick.fetch_add(1, Ordering::Relaxed) % n == 0
+    }
+
+    fn push_sample(&self, s: &Sample) {
+        if self.ring.push(s) {
+            self.metrics.online_samples.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.online_dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a regular (single-sided) execution measurement.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_execution(
+        &self,
+        gpu: &GpuSpec,
+        m: u64,
+        n: u64,
+        k: u64,
+        algo: Algorithm,
+        exec_us: f64,
+        predicted: i8,
+    ) {
+        let (lat_nt_us, lat_tnn_us) = match algo {
+            Algorithm::Nt => (exec_us, f64::NAN),
+            Algorithm::Tnn => (f64::NAN, exec_us),
+            Algorithm::Nn => return, // not a selectable algorithm
+        };
+        self.push_sample(&Sample {
+            gpu_id: gpu.id,
+            gpu_feats: gpu.features(),
+            m,
+            n,
+            k,
+            predicted,
+            lat_nt_us,
+            lat_tnn_us,
+        });
+    }
+
+    /// Record a shadow probe: both measured latencies plus the live
+    /// model's prediction; feeds the drift tracker and mispredict
+    /// counters.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record_probe(
+        &self,
+        gpu: &GpuSpec,
+        m: u64,
+        n: u64,
+        k: u64,
+        predicted: i8,
+        lat_nt_us: f64,
+        lat_tnn_us: f64,
+    ) {
+        let s = Sample {
+            gpu_id: gpu.id,
+            gpu_feats: gpu.features(),
+            m,
+            n,
+            k,
+            predicted,
+            lat_nt_us,
+            lat_tnn_us,
+        };
+        let Some(winner) = s.measured_label() else {
+            return;
+        };
+        self.metrics.shadow_probes.fetch_add(1, Ordering::Relaxed);
+        let mispredicted = predicted != 0 && predicted != winner;
+        if mispredicted {
+            self.metrics
+                .shadow_mispredicts
+                .fetch_add(1, Ordering::Relaxed);
+        }
+        self.drift.record(gpu.id, m, n, k, mispredicted);
+        self.push_sample(&s);
+    }
+
+    /// Install a challenger as the live model: swap the epoch pointer,
+    /// then invalidate the decision cache so no pre-swap decision can be
+    /// served afterwards. (A decide racing the swap may still insert — the
+    /// cache rejects inserts stamped with a pre-invalidation epoch.)
+    pub fn promote(&self, next: Selector) {
+        self.live.swap(next);
+        self.cache.invalidate();
+        self.metrics.promotions.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::Release);
+    }
+
+    pub fn is_shutdown(&self) -> bool {
+        self.shutdown.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::collect_paper_dataset;
+    use crate::gpusim::GTX1080;
+    use crate::ml::gbdt::{Gbdt, GbdtParams};
+    use crate::ml::Classifier;
+    use crate::selector::TrainedModel;
+
+    /// A selector that always answers `label` (a 0-tree GBDT keeps only
+    /// its base score, whose sign is the class prior).
+    pub(crate) fn constant_selector(label: i8) -> Selector {
+        let mut p = GbdtParams::default();
+        p.n_estimators = 0;
+        let mut g = Gbdt::new(p);
+        let x = vec![vec![0.0; 8], vec![1.0; 8]];
+        let y = vec![label as f64, label as f64];
+        g.fit(&x, &y);
+        Selector::new(TrainedModel::Gbdt(g))
+    }
+
+    fn hub(config: OnlineConfig, seed: Selector) -> OnlineHub {
+        OnlineHub::new(
+            config,
+            Arc::new(LiveSelector::new(seed)),
+            Arc::new(DecisionCache::default()),
+            Arc::new(CoordinatorMetrics::default()),
+        )
+    }
+
+    #[test]
+    fn constant_selectors_are_constant() {
+        for label in [1i8, -1] {
+            let s = constant_selector(label);
+            for m in [128u64, 4096, 65536] {
+                assert_eq!(s.model.predict_label(&crate::selector::features(&GTX1080, m, m, m)), label);
+            }
+        }
+    }
+
+    #[test]
+    fn live_selector_swaps_and_counts_generations() {
+        let live = LiveSelector::new(constant_selector(1));
+        assert_eq!(live.generation(), 0);
+        assert_eq!(live.select(&GTX1080, 128, 128, 128).0, Algorithm::Nt);
+        assert_eq!(live.swap(constant_selector(-1)), 1);
+        assert_eq!(live.generation(), 1);
+        assert_eq!(live.select(&GTX1080, 128, 128, 128).0, Algorithm::Tnn);
+    }
+
+    #[test]
+    fn probe_schedule_is_one_in_n() {
+        let h = hub(
+            OnlineConfig {
+                probe_every: 4,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        let fired: Vec<bool> = (0..8).map(|_| h.should_probe()).collect();
+        assert_eq!(fired, vec![true, false, false, false, true, false, false, false]);
+    }
+
+    #[test]
+    fn probe_every_zero_disables_probing() {
+        let h = hub(
+            OnlineConfig {
+                probe_every: 0,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        assert!((0..32).all(|_| !h.should_probe()));
+    }
+
+    #[test]
+    fn probes_feed_ring_drift_and_counters() {
+        let h = hub(OnlineConfig::default(), constant_selector(1));
+        // Predicted NT (+1) but TNN measured faster → mispredict.
+        h.record_probe(&GTX1080, 256, 256, 256, 1, 90.0, 40.0);
+        // Predicted NT, NT faster → correct.
+        h.record_probe(&GTX1080, 128, 128, 128, 1, 10.0, 40.0);
+        // Fallback/forced traffic (predicted = 0) never counts mispredicts.
+        h.record_probe(&GTX1080, 512, 512, 512, 0, 90.0, 40.0);
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.shadow_probes, 3);
+        assert_eq!(snap.shadow_mispredicts, 1);
+        assert_eq!(snap.online_samples, 3);
+        assert_eq!(h.ring.len(), 3);
+        assert_eq!(h.drift.probes(), 3);
+        assert!((h.drift.total_rate() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_sided_executions_record_without_labels() {
+        let h = hub(OnlineConfig::default(), constant_selector(1));
+        h.record_execution(&GTX1080, 128, 64, 32, Algorithm::Nt, 55.0, 1);
+        h.record_execution(&GTX1080, 128, 64, 32, Algorithm::Tnn, 66.0, -1);
+        h.record_execution(&GTX1080, 128, 64, 32, Algorithm::Nn, 1.0, 0); // ignored
+        let a = h.ring.pop().unwrap();
+        assert_eq!(a.lat_nt_us, 55.0);
+        assert!(a.lat_tnn_us.is_nan());
+        let b = h.ring.pop().unwrap();
+        assert!(b.lat_nt_us.is_nan());
+        assert_eq!(b.lat_tnn_us, 66.0);
+        assert!(h.ring.pop().is_none());
+        assert_eq!(h.metrics.snapshot().online_samples, 2);
+    }
+
+    #[test]
+    fn promote_swaps_model_invalidates_cache_and_counts() {
+        let h = hub(OnlineConfig::default(), constant_selector(1));
+        let dec = (Algorithm::Nt, SelectionReason::PredictedNt);
+        h.cache.insert(&GTX1080, 128, 128, 128, dec);
+        assert_eq!(h.cache.get(&GTX1080, 128, 128, 128), Some(dec));
+        h.promote(constant_selector(-1));
+        assert_eq!(h.live.generation(), 1);
+        assert_eq!(
+            h.cache.get(&GTX1080, 128, 128, 128),
+            None,
+            "promotion must invalidate cached decisions"
+        );
+        assert_eq!(h.metrics.snapshot().promotions, 1);
+        assert_eq!(h.live.select(&GTX1080, 128, 128, 128).0, Algorithm::Tnn);
+    }
+
+    #[test]
+    fn trainer_end_to_end_promotes_over_a_bad_incumbent() {
+        // Synthetic drift scenario, no engine: seed the hub with a model
+        // that is wrong everywhere, feed probe samples labeled by the
+        // "true" world (big k → TNN, small k → NT), and run one retrain.
+        let h = hub(
+            OnlineConfig {
+                holdout_frac: 0.25,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1), // always NT — wrong half the time below
+        );
+        let mut acc = Accumulator::new(1024);
+        for i in 0..200u64 {
+            let k = if i % 2 == 0 { 64 } else { 8192 };
+            let (nt, tnn) = if k == 64 { (10.0, 30.0) } else { (30.0, 10.0) };
+            h.record_probe(&GTX1080, 128 + (i % 7), 256, k, 1, nt, tnn);
+        }
+        while let Some(s) = h.ring.pop() {
+            acc.ingest(&s);
+        }
+        assert_eq!(acc.labeled_len(), 200);
+        let promoted = trainer::retrain_once(&h, &acc, 1);
+        assert!(promoted, "a learnable boundary must beat a constant model");
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.retrains, 1);
+        assert_eq!(snap.promotions, 1);
+        assert_eq!(snap.rollbacks, 0);
+        // The promoted model now gets the boundary right.
+        let live = h.live.current();
+        assert_eq!(live.model.predict_label(&crate::selector::features(&GTX1080, 129, 256, 64)), 1);
+        assert_eq!(live.model.predict_label(&crate::selector::features(&GTX1080, 129, 256, 8192)), -1);
+        // A second retrain on the same data cannot beat the promoted
+        // incumbent → rollback.
+        let promoted_again = trainer::retrain_once(&h, &acc, 2);
+        assert!(!promoted_again);
+        assert_eq!(h.metrics.snapshot().rollbacks, 1);
+    }
+
+    #[test]
+    fn accumulator_pairs_single_sided_traffic() {
+        let mut acc = Accumulator::new(64);
+        let mk = |algo, us| {
+            let mut s = Sample {
+                gpu_id: 1,
+                gpu_feats: GTX1080.features(),
+                m: 256,
+                n: 256,
+                k: 1024,
+                predicted: 1,
+                lat_nt_us: f64::NAN,
+                lat_tnn_us: f64::NAN,
+            };
+            match algo {
+                Algorithm::Nt => s.lat_nt_us = us,
+                _ => s.lat_tnn_us = us,
+            }
+            s
+        };
+        assert!(!acc.ingest(&mk(Algorithm::Nt, 50.0)));
+        assert_eq!(acc.to_dataset().len(), 0, "one side only — no pair yet");
+        assert!(!acc.ingest(&mk(Algorithm::Tnn, 20.0)));
+        let d = acc.to_dataset();
+        assert_eq!(d.len(), 1);
+        assert_eq!(d.y[0], -1.0, "TNN measured faster");
+        assert_eq!(d.x[0][7], 1024.0);
+    }
+
+    #[test]
+    fn store_roundtrips_examples_and_model() {
+        let dir = std::env::temp_dir().join("mtnn_online_store_test");
+        let path = dir.join("store.json");
+        let examples = vec![
+            Example {
+                gpu_id: 1,
+                feats: [8.0, 20.0, 1607.0, 256.0, 2048.0, 128.0, 256.0, 512.0],
+                label: 1,
+            },
+            Example {
+                gpu_id: 2,
+                feats: [10.0, 28.0, 1417.0, 384.0, 3072.0, 64.0, 64.0, 8192.0],
+                label: -1,
+            },
+        ];
+        let sel = Selector::train_default(&collect_paper_dataset());
+        trainer::save_store(&path, examples.iter(), sel.model.as_gbdt()).unwrap();
+        let (back, model) = trainer::load_store(&path).unwrap();
+        assert_eq!(back, examples);
+        let g = model.expect("model persisted");
+        for m in [128u64, 2048, 16384] {
+            let row = crate::selector::features(&GTX1080, m, m, m);
+            assert_eq!(
+                g.predict_one(&row),
+                sel.model.as_gbdt().unwrap().predict_one(&row)
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_without_model_loads_examples_only() {
+        let dir = std::env::temp_dir().join("mtnn_online_store_nomodel");
+        let path = dir.join("store.json");
+        let examples = vec![Example {
+            gpu_id: 1,
+            feats: [1.0; 8],
+            label: -1,
+        }];
+        trainer::save_store(&path, examples.iter(), None).unwrap();
+        let (back, model) = trainer::load_store(&path).unwrap();
+        assert_eq!(back, examples);
+        assert!(model.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_wrong_format() {
+        let dir = std::env::temp_dir().join("mtnn_online_store_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.json");
+        std::fs::write(&path, r#"{"format": "something-else", "examples": []}"#).unwrap();
+        assert!(trainer::load_store(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hammer_swap_while_selecting_is_race_free() {
+        // Concurrent decide()-style traffic through LiveSelector + cache
+        // while another thread hot-swaps between two opposite constant
+        // models. Invariants: every observed decision is internally
+        // consistent (algorithm matches reason), and once the last swap
+        // has quiesced the cache serves only the final model's decisions.
+        let live = Arc::new(LiveSelector::new(constant_selector(1)));
+        let cache = Arc::new(DecisionCache::new(256));
+        let stop = Arc::new(AtomicBool::new(false));
+        std::thread::scope(|sc| {
+            for t in 0..4u64 {
+                let live = Arc::clone(&live);
+                let cache = Arc::clone(&cache);
+                let stop = Arc::clone(&stop);
+                sc.spawn(move || {
+                    let mut i = 0u64;
+                    while !stop.load(Ordering::Acquire) {
+                        let m = 64 + ((t * 131 + i) % 32);
+                        i += 1;
+                        let ep = cache.epoch();
+                        let dec = match cache.get(&GTX1080, m, 64, 64) {
+                            Some(hit) => hit,
+                            None => {
+                                let d = live.select(&GTX1080, m, 64, 64);
+                                cache.insert_at(ep, &GTX1080, m, 64, 64, d);
+                                d
+                            }
+                        };
+                        match dec {
+                            (Algorithm::Nt, SelectionReason::PredictedNt)
+                            | (Algorithm::Tnn, SelectionReason::PredictedTnn) => {}
+                            other => panic!("torn decision {other:?}"),
+                        }
+                    }
+                });
+            }
+            for round in 0..50 {
+                let label = if round % 2 == 0 { -1 } else { 1 };
+                live.swap(constant_selector(label));
+                cache.invalidate();
+                std::thread::yield_now();
+            }
+            stop.store(true, Ordering::Release);
+        });
+        // Last swap installed label = 1 (round 49) → NT everywhere; the
+        // cache was invalidated after it, so no stale TNN may be served.
+        for m in 64..96u64 {
+            let ep = cache.epoch();
+            let dec = match cache.get(&GTX1080, m, 64, 64) {
+                Some(hit) => hit,
+                None => {
+                    let d = live.select(&GTX1080, m, 64, 64);
+                    cache.insert_at(ep, &GTX1080, m, 64, 64, d);
+                    d
+                }
+            };
+            assert_eq!(dec, (Algorithm::Nt, SelectionReason::PredictedNt));
+        }
+    }
+}

@@ -1,0 +1,392 @@
+//! The runtime telemetry ring: engine workers' measured latencies flow in,
+//! the background trainer drains them out.
+//!
+//! [`SampleRing`] is a bounded, lock-free MPMC ring (Vyukov-style: a
+//! per-slot sequence word gates publication, so producers never block
+//! consumers and vice versa). Every field of a [`Sample`] is stored in its
+//! own atomic word (floats as raw bits), which keeps the implementation
+//! 100% safe code: winning the sequence CAS grants exclusive ownership of
+//! the slot's value words until the sequence is republished, so plain
+//! relaxed stores/loads inside that window can never tear a sample.
+//!
+//! Backpressure is *drop-oldest-offered*: when the ring is full the push
+//! fails and the sample is counted in `dropped` — the serving hot path
+//! never waits on the trainer. Telemetry is lossy by design; the labels
+//! that matter (shadow probes) are sparse enough that a sanely sized ring
+//! effectively never drops them.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// One runtime observation: a request's feature row plus what was measured.
+///
+/// Regular traffic fills exactly one latency side (the algorithm that
+/// actually ran); a **shadow probe** fills both, which is what turns the
+/// observation into a labeled training example (`measured_label`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    /// `GpuSpec::id` of the requesting GPU.
+    pub gpu_id: u64,
+    /// The GPU's five characteristics `(gm, sm, cc, mbw, l2c)`.
+    pub gpu_feats: [f64; 5],
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    /// Label the live model predicted (+1 NT, −1 TNN); 0 when the request
+    /// bypassed the model (forced override or memory fallback).
+    pub predicted: i8,
+    /// Measured NT latency in µs (NaN when NT did not run).
+    pub lat_nt_us: f64,
+    /// Measured TNN latency in µs (NaN when TNN did not run).
+    pub lat_tnn_us: f64,
+}
+
+impl Sample {
+    /// The 8-dimensional MTNN feature row for this observation.
+    pub fn features(&self) -> [f64; 8] {
+        let g = &self.gpu_feats;
+        [
+            g[0], g[1], g[2], g[3], g[4], self.m as f64, self.n as f64, self.k as f64,
+        ]
+    }
+
+    /// The measured winner when both algorithms ran: `+1` if NT was at
+    /// least as fast (the paper's label convention), `−1` if TNN won,
+    /// `None` for single-sided observations.
+    pub fn measured_label(&self) -> Option<i8> {
+        if self.lat_nt_us.is_finite() && self.lat_tnn_us.is_finite() {
+            Some(if self.lat_nt_us <= self.lat_tnn_us { 1 } else { -1 })
+        } else {
+            None
+        }
+    }
+
+    /// True when this sample carries a measured label (a shadow probe).
+    pub fn is_probe(&self) -> bool {
+        self.measured_label().is_some()
+    }
+}
+
+/// Value words per slot (everything but the sequence word): gpu_id, the 5
+/// GPU features, m, n, k, predicted label, and both latencies.
+const FIELDS: usize = 12;
+
+struct Slot {
+    /// Vyukov sequence: `index` when free for the producer of that lap,
+    /// `index + 1` once published, `index + capacity` after consumption.
+    seq: AtomicU64,
+    vals: [AtomicU64; FIELDS],
+}
+
+impl Slot {
+    fn new(i: u64) -> Slot {
+        Slot {
+            seq: AtomicU64::new(i),
+            vals: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bounded lock-free MPMC sample ring.
+pub struct SampleRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    capacity: u64,
+    head: AtomicU64,
+    tail: AtomicU64,
+    pushed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SampleRing {
+    /// Ring with at least `capacity` slots (rounded up to a power of two,
+    /// minimum 64).
+    pub fn new(capacity: usize) -> SampleRing {
+        let cap = capacity.max(64).next_power_of_two() as u64;
+        SampleRing {
+            slots: (0..cap).map(Slot::new).collect(),
+            mask: cap - 1,
+            capacity: cap,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            pushed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity as usize
+    }
+
+    /// Samples successfully recorded since creation.
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    /// Samples rejected because the ring was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Approximate occupancy (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        head.saturating_sub(tail) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record a sample. Returns `false` (and counts a drop) when full —
+    /// never blocks.
+    pub fn push(&self, s: &Sample) -> bool {
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(head & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == head {
+                match self.head.compare_exchange_weak(
+                    head,
+                    head + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = &slot.vals;
+                        v[0].store(s.gpu_id, Ordering::Relaxed);
+                        for (i, f) in s.gpu_feats.iter().enumerate() {
+                            v[1 + i].store(f.to_bits(), Ordering::Relaxed);
+                        }
+                        v[6].store(s.m, Ordering::Relaxed);
+                        v[7].store(s.n, Ordering::Relaxed);
+                        v[8].store(s.k, Ordering::Relaxed);
+                        v[9].store(s.predicted as i64 as u64, Ordering::Relaxed);
+                        v[10].store(s.lat_nt_us.to_bits(), Ordering::Relaxed);
+                        v[11].store(s.lat_tnn_us.to_bits(), Ordering::Relaxed);
+                        slot.seq.store(head + 1, Ordering::Release);
+                        self.pushed.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    Err(h) => head = h,
+                }
+            } else if seq < head {
+                // A full lap behind: the ring is full.
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                head = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain one sample (typically the background trainer). Lock-free;
+    /// safe with multiple consumers.
+    pub fn pop(&self) -> Option<Sample> {
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(tail & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == tail + 1 {
+                match self.tail.compare_exchange_weak(
+                    tail,
+                    tail + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = &slot.vals;
+                        let mut gpu_feats = [0.0; 5];
+                        for (i, f) in gpu_feats.iter_mut().enumerate() {
+                            *f = f64::from_bits(v[1 + i].load(Ordering::Relaxed));
+                        }
+                        let s = Sample {
+                            gpu_id: v[0].load(Ordering::Relaxed),
+                            gpu_feats,
+                            m: v[6].load(Ordering::Relaxed),
+                            n: v[7].load(Ordering::Relaxed),
+                            k: v[8].load(Ordering::Relaxed),
+                            predicted: v[9].load(Ordering::Relaxed) as i64 as i8,
+                            lat_nt_us: f64::from_bits(v[10].load(Ordering::Relaxed)),
+                            lat_tnn_us: f64::from_bits(v[11].load(Ordering::Relaxed)),
+                        };
+                        slot.seq.store(tail + self.capacity, Ordering::Release);
+                        return Some(s);
+                    }
+                    Err(t) => tail = t,
+                }
+            } else if seq < tail + 1 {
+                return None; // empty
+            } else {
+                tail = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(i: u64) -> Sample {
+        Sample {
+            gpu_id: 1,
+            gpu_feats: [8.0, 20.0, 1607.0, 256.0, 2048.0],
+            m: 128 + i,
+            n: 64,
+            k: 32,
+            predicted: if i % 2 == 0 { 1 } else { -1 },
+            lat_nt_us: 10.0 + i as f64,
+            lat_tnn_us: 12.0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_field() {
+        let r = SampleRing::new(64);
+        let s = sample(3);
+        assert!(r.push(&s));
+        let back = r.pop().unwrap();
+        assert_eq!(back, s);
+        assert!(r.pop().is_none());
+        assert_eq!(r.pushed(), 1);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn nan_latency_marks_single_sided_samples() {
+        let r = SampleRing::new(64);
+        let mut s = sample(0);
+        s.lat_tnn_us = f64::NAN;
+        assert!(r.push(&s));
+        let back = r.pop().unwrap();
+        assert!(back.lat_tnn_us.is_nan());
+        assert_eq!(back.lat_nt_us, s.lat_nt_us);
+        assert_eq!(back.measured_label(), None);
+        assert!(!back.is_probe());
+    }
+
+    #[test]
+    fn measured_label_follows_the_paper_convention() {
+        let mut s = sample(0);
+        s.lat_nt_us = 5.0;
+        s.lat_tnn_us = 9.0;
+        assert_eq!(s.measured_label(), Some(1));
+        s.lat_nt_us = 9.0;
+        s.lat_tnn_us = 5.0;
+        assert_eq!(s.measured_label(), Some(-1));
+        // Ties choose NT, matching `P_NT >= P_TNN => +1`.
+        s.lat_tnn_us = 9.0;
+        assert_eq!(s.measured_label(), Some(1));
+        assert!(s.is_probe());
+    }
+
+    #[test]
+    fn full_ring_drops_instead_of_blocking() {
+        let r = SampleRing::new(64); // rounds to exactly 64
+        for i in 0..64 {
+            assert!(r.push(&sample(i)), "push {i}");
+        }
+        assert!(!r.push(&sample(99)));
+        assert_eq!(r.dropped(), 1);
+        assert_eq!(r.len(), 64);
+        // Draining frees slots for another full lap.
+        let mut n = 0;
+        while r.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 64);
+        assert!(r.push(&sample(100)));
+        assert_eq!(r.pop().unwrap().m, 228);
+    }
+
+    #[test]
+    fn fifo_order_single_threaded() {
+        let r = SampleRing::new(64);
+        for i in 0..10 {
+            r.push(&sample(i));
+        }
+        for i in 0..10 {
+            assert_eq!(r.pop().unwrap().m, 128 + i);
+        }
+    }
+
+    #[test]
+    fn concurrent_producers_lose_nothing_when_sized() {
+        let r = std::sync::Arc::new(SampleRing::new(4096));
+        let producers = 4;
+        let per = 500u64;
+        std::thread::scope(|s| {
+            for t in 0..producers {
+                let r = r.clone();
+                s.spawn(move || {
+                    for i in 0..per {
+                        assert!(r.push(&sample(t * 10_000 + i)));
+                    }
+                });
+            }
+        });
+        assert_eq!(r.pushed(), producers * per);
+        let mut seen = 0u64;
+        let mut msum = 0u64;
+        while let Some(s) = r.pop() {
+            seen += 1;
+            msum += s.m;
+        }
+        assert_eq!(seen, producers * per);
+        // Every pushed m value is distinct; the sum proves no duplication.
+        let expect: u64 = (0..producers)
+            .flat_map(|t| (0..per).map(move |i| 128 + t * 10_000 + i))
+            .sum();
+        assert_eq!(msum, expect);
+    }
+
+    #[test]
+    fn concurrent_producers_and_consumer_balance() {
+        let r = std::sync::Arc::new(SampleRing::new(256));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let (tx, rx) = std::sync::mpsc::channel();
+        let consumer = {
+            let r = r.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut got = 0u64;
+                loop {
+                    match r.pop() {
+                        Some(_) => got += 1,
+                        None if stop.load(Ordering::Acquire) => break,
+                        None => std::thread::yield_now(),
+                    }
+                }
+                // Final sweep: everything pushed before `stop` is visible.
+                while r.pop().is_some() {
+                    got += 1;
+                }
+                tx.send(got).unwrap();
+            })
+        };
+        let mut pushed = 0u64;
+        std::thread::scope(|s| {
+            for t in 0..3u64 {
+                let r = r.clone();
+                s.spawn(move || {
+                    let mut ok = 0u64;
+                    for i in 0..2000 {
+                        if r.push(&sample(t * 100_000 + i)) {
+                            ok += 1;
+                        }
+                    }
+                    ok
+                });
+            }
+        });
+        // Re-count from the ring's own telemetry (scope joins the threads
+        // but discards their returns).
+        pushed += r.pushed();
+        stop.store(true, Ordering::Release);
+        let consumed = rx.recv().unwrap();
+        consumer.join().unwrap();
+        assert_eq!(consumed, pushed, "every accepted sample is consumed once");
+        assert_eq!(pushed + r.dropped(), 6000);
+    }
+}

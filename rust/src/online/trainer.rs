@@ -1,0 +1,337 @@
+//! The background trainer: drains the sample ring, accumulates labeled
+//! examples, refits the GBDT, and promotes challengers that beat the
+//! incumbent on a held-out slice.
+//!
+//! Labels come from two sources:
+//!
+//! * **shadow probes** — both algorithms ran for one request, so the
+//!   measured winner is a directly labeled example (one per probe);
+//! * **paired singles** — regular traffic only runs the chosen algorithm,
+//!   but once a shape key has observed *both* NT and TNN latencies (e.g.
+//!   the model flip-flopped, or a forced baseline shared the router), the
+//!   per-key mean latencies yield one synthetic labeled example.
+//!
+//! A retrain never swaps blindly: the candidate is evaluated against the
+//! incumbent on the same held-out slice and promoted only when strictly
+//! better (`promotions`); losing candidates are discarded and counted as
+//! `rollbacks`. The accumulated examples (and the live GBDT) persist as
+//! JSON via [`crate::util::json`] so a restarted service warm-starts
+//! instead of relearning from zero.
+
+use super::{OnlineHub, Sample};
+use crate::ml::data::Dataset;
+use crate::ml::gbdt::{Gbdt, GbdtParams};
+use crate::ml::Classifier;
+use crate::selector::{Selector, TrainedModel};
+use crate::util::json::Json;
+use std::collections::{HashMap, VecDeque};
+use std::path::Path;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+/// One labeled training example distilled from runtime telemetry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Example {
+    pub gpu_id: u64,
+    pub feats: [f64; 8],
+    /// +1 → NT measured faster, −1 → TNN.
+    pub label: i8,
+}
+
+/// Per-shape-key latency aggregates for pairing single-sided samples.
+struct KeyStats {
+    feats: [f64; 8],
+    nt_sum: f64,
+    nt_n: u64,
+    tnn_sum: f64,
+    tnn_n: u64,
+}
+
+/// Single-threaded accumulator owned by the trainer thread.
+pub struct Accumulator {
+    examples: VecDeque<Example>,
+    by_key: HashMap<(u64, u64, u64, u64), KeyStats>,
+    max_examples: usize,
+}
+
+impl Accumulator {
+    pub fn new(max_examples: usize) -> Accumulator {
+        Accumulator {
+            examples: VecDeque::new(),
+            by_key: HashMap::new(),
+            max_examples: max_examples.max(16),
+        }
+    }
+
+    /// Seed with previously persisted examples (warm restart).
+    pub fn preload(&mut self, examples: Vec<Example>) {
+        for e in examples {
+            self.push_example(e);
+        }
+    }
+
+    fn push_example(&mut self, e: Example) {
+        if self.examples.len() >= self.max_examples {
+            self.examples.pop_front(); // keep the freshest evidence
+        }
+        self.examples.push_back(e);
+    }
+
+    /// Fold one runtime sample in. Returns `true` when it yielded a
+    /// directly labeled example (a shadow probe).
+    pub fn ingest(&mut self, s: &Sample) -> bool {
+        if let Some(label) = s.measured_label() {
+            self.push_example(Example {
+                gpu_id: s.gpu_id,
+                feats: s.features(),
+                label,
+            });
+            return true;
+        }
+        // The key-stats map is capped like the example deque: a long-lived
+        // service seeing unbounded distinct shapes must not grow trainer
+        // RSS (or retrain cost) without bound. New keys past the cap are
+        // simply not paired — probes still cover them.
+        let key = (s.gpu_id, s.m, s.n, s.k);
+        if !self.by_key.contains_key(&key) && self.by_key.len() >= self.max_examples {
+            return false;
+        }
+        let stats = self.by_key.entry(key).or_insert_with(|| KeyStats {
+            feats: s.features(),
+            nt_sum: 0.0,
+            nt_n: 0,
+            tnn_sum: 0.0,
+            tnn_n: 0,
+        });
+        if s.lat_nt_us.is_finite() {
+            stats.nt_sum += s.lat_nt_us;
+            stats.nt_n += 1;
+        }
+        if s.lat_tnn_us.is_finite() {
+            stats.tnn_sum += s.lat_tnn_us;
+            stats.tnn_n += 1;
+        }
+        false
+    }
+
+    /// Probe-labeled examples currently held.
+    pub fn labeled_len(&self) -> usize {
+        self.examples.len()
+    }
+
+    pub fn examples(&self) -> impl Iterator<Item = &Example> {
+        self.examples.iter()
+    }
+
+    /// Keys whose single-sided observations cover both algorithms.
+    fn paired_examples(&self) -> impl Iterator<Item = Example> + '_ {
+        self.by_key.iter().filter_map(|(&(gpu_id, ..), st)| {
+            if st.nt_n > 0 && st.tnn_n > 0 {
+                let nt = st.nt_sum / st.nt_n as f64;
+                let tnn = st.tnn_sum / st.tnn_n as f64;
+                Some(Example {
+                    gpu_id,
+                    feats: st.feats,
+                    label: if nt <= tnn { 1 } else { -1 },
+                })
+            } else {
+                None
+            }
+        })
+    }
+
+    /// Everything labeled — probes plus paired singles — as an ML dataset
+    /// grouped by GPU.
+    pub fn to_dataset(&self) -> Dataset {
+        let mut d = Dataset::new();
+        for e in self.examples.iter().cloned().chain(self.paired_examples()) {
+            d.push(e.feats.to_vec(), e.label as f64, e.gpu_id);
+        }
+        d
+    }
+}
+
+/// Label accuracy of a selector's raw model on a dataset.
+pub fn accuracy_of(sel: &Selector, d: &Dataset) -> f64 {
+    if d.is_empty() {
+        return 0.0;
+    }
+    let hits = d
+        .x
+        .iter()
+        .zip(&d.y)
+        .filter(|(row, &y)| sel.model.predict_label(row) as f64 == y)
+        .count();
+    hits as f64 / d.len() as f64
+}
+
+/// One retrain attempt: fit a challenger on the accumulated dataset,
+/// evaluate challenger vs incumbent on a held-out slice, promote only a
+/// strict winner. Returns `true` on promotion.
+pub fn retrain_once(hub: &OnlineHub, acc: &Accumulator, seq: u64) -> bool {
+    let ds = acc.to_dataset();
+    if ds.len() < 4 {
+        return false;
+    }
+    hub.metrics.retrains.fetch_add(1, Ordering::Relaxed);
+    // Deterministic holdout per retrain round; tiny datasets evaluate on
+    // the full set instead of a degenerate slice.
+    let holdout = hub.config.holdout_frac.clamp(0.0, 0.5);
+    let (train, hold) = if ds.len() >= 16 && holdout > 0.0 {
+        ds.split(1.0 - holdout, 0xC0FFEE ^ seq)
+    } else {
+        (ds.clone(), ds.clone())
+    };
+    if train.is_empty() || hold.is_empty() {
+        hub.metrics.rollbacks.fetch_add(1, Ordering::Relaxed);
+        return false;
+    }
+    let mut g = Gbdt::new(GbdtParams::default());
+    g.fit(&train.x, &train.y);
+    let challenger = Selector::new(TrainedModel::Gbdt(g));
+    let c_acc = accuracy_of(&challenger, &hold);
+    let i_acc = accuracy_of(&hub.live.current(), &hold);
+    let promoted = c_acc > i_acc;
+    if promoted {
+        hub.promote(challenger);
+    } else {
+        hub.metrics.rollbacks.fetch_add(1, Ordering::Relaxed);
+    }
+    persist(hub, acc);
+    promoted
+}
+
+/// Persist the accumulated examples and the live model (best effort —
+/// telemetry must never take the service down over a full disk).
+pub fn persist(hub: &OnlineHub, acc: &Accumulator) {
+    let Some(path) = &hub.config.persist_path else {
+        return;
+    };
+    let live = hub.live.current();
+    if let Err(e) = save_store(path, acc.examples(), live.model.as_gbdt()) {
+        eprintln!("online: failed to persist {}: {e}", path.display());
+    }
+}
+
+// ---- JSON store ------------------------------------------------------------
+
+const FORMAT: &str = "mtnn-online-v1";
+
+/// Write the online store: accumulated labeled examples plus (when the
+/// live model is a GBDT) the model itself.
+pub fn save_store<'a>(
+    path: &Path,
+    examples: impl Iterator<Item = &'a Example>,
+    model: Option<&Gbdt>,
+) -> anyhow::Result<()> {
+    let rows: Vec<Json> = examples
+        .map(|e| {
+            Json::obj()
+                .set("g", e.gpu_id)
+                .set("f", &e.feats[..])
+                .set("y", e.label as i64)
+        })
+        .collect();
+    let mut j = Json::obj()
+        .set("format", FORMAT)
+        .set("examples", Json::Arr(rows));
+    if let Some(g) = model {
+        j = j.set("model", g.to_json());
+    }
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    // Write-then-rename so a crash mid-write can't corrupt the warm-start
+    // file a restarted service will read.
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, j.to_pretty())?;
+    std::fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Load a persisted store back: `(examples, live model if present)`.
+pub fn load_store(path: &Path) -> anyhow::Result<(Vec<Example>, Option<Gbdt>)> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text)?;
+    anyhow::ensure!(
+        j.get("format").as_str() == Some(FORMAT),
+        "unknown online store format in {}",
+        path.display()
+    );
+    let rows = j
+        .get("examples")
+        .as_arr()
+        .ok_or_else(|| anyhow::anyhow!("online store: missing examples"))?;
+    let mut examples = Vec::with_capacity(rows.len());
+    for (i, r) in rows.iter().enumerate() {
+        let f = r
+            .get("f")
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("online store: example {i} missing f"))?;
+        anyhow::ensure!(f.len() == 8, "online store: example {i} has {} features", f.len());
+        let mut feats = [0.0; 8];
+        for (d, v) in feats.iter_mut().zip(f) {
+            *d = v
+                .as_f64()
+                .ok_or_else(|| anyhow::anyhow!("online store: example {i} non-numeric feature"))?;
+        }
+        let y = r
+            .get("y")
+            .as_i64()
+            .ok_or_else(|| anyhow::anyhow!("online store: example {i} missing y"))?;
+        anyhow::ensure!(y == 1 || y == -1, "online store: example {i} label {y}");
+        examples.push(Example {
+            gpu_id: r.get("g").as_f64().unwrap_or(0.0) as u64,
+            feats,
+            label: y as i8,
+        });
+    }
+    let model = match j.get("model") {
+        Json::Null => None,
+        m => Some(Gbdt::from_json(m)?),
+    };
+    Ok((examples, model))
+}
+
+// ---- the trainer thread ----------------------------------------------------
+
+/// Spawn the background trainer. It drains the ring every
+/// `poll_interval`, retrains when the drift tracker trips or enough new
+/// labels arrived, and exits (after a final drain + persist) once
+/// [`OnlineHub::request_shutdown`] is called.
+pub fn spawn(hub: Arc<OnlineHub>, mut acc: Accumulator) -> std::thread::JoinHandle<()> {
+    std::thread::Builder::new()
+        .name("mtnn-online-trainer".into())
+        .spawn(move || run(&hub, &mut acc))
+        .expect("spawn online trainer")
+}
+
+fn run(hub: &OnlineHub, acc: &mut Accumulator) {
+    let cfg = hub.config.clone();
+    let mut since_last = 0usize;
+    let mut seq = 0u64;
+    while !hub.is_shutdown() {
+        std::thread::sleep(cfg.poll_interval);
+        while let Some(s) = hub.ring.pop() {
+            if acc.ingest(&s) {
+                since_last += 1;
+            }
+        }
+        let enough = acc.labeled_len() >= cfg.retrain_min_labeled.max(4);
+        let volume = cfg.retrain_every_labeled > 0 && since_last >= cfg.retrain_every_labeled;
+        let drift = hub
+            .drift
+            .triggered(cfg.drift_threshold, cfg.drift_min_probes);
+        if enough && (volume || drift) {
+            seq += 1;
+            retrain_once(hub, acc, seq);
+            hub.drift.reset();
+            since_last = 0;
+        }
+    }
+    // Final drain so a clean shutdown persists everything it observed.
+    while let Some(s) = hub.ring.pop() {
+        acc.ingest(&s);
+    }
+    persist(hub, acc);
+}

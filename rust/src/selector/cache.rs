@@ -3,29 +3,36 @@
 //! so after the first step an Algorithm-2 selection should cost a table
 //! lookup, not a GBDT descent.
 //!
-//! [`DecisionCache`] is a fixed-capacity, lock-free open-addressing table.
-//! Each slot publishes its key fields before flipping a state word to
-//! READY with release ordering; readers acquire the state first, so a
-//! matching slot is always fully visible. Races degrade to cache misses
-//! (the caller recomputes — selection is deterministic, so duplicate
-//! inserts of the same key are harmless), never to wrong answers. A full
-//! neighborhood simply stops caching that key: correctness does not depend
-//! on capacity.
+//! [`DecisionCache`] is a fixed-capacity, lock-free open-addressing table
+//! with **epoch-based invalidation** for the online hot-swap loop: every
+//! published entry is stamped with the epoch it was computed under, and
+//! [`DecisionCache::invalidate`] bumps the global epoch so all existing
+//! entries become misses at once — no sweep, no lock, nothing on the hot
+//! path. Callers that may race a model swap capture the epoch *before*
+//! computing a decision and publish with [`DecisionCache::insert_at`]; an
+//! insert stamped with a pre-invalidation epoch is rejected, so a decision
+//! computed under a retired model can never be served after the swap.
+//!
+//! Each slot is a tiny seqlock: a version word (0 = empty, odd =
+//! mid-write, even ≥ 2 = published) guards the key/value/epoch words.
+//! Readers re-check the version after reading, so a concurrent in-place
+//! refresh degrades to a cache miss (the caller recomputes — selection is
+//! deterministic, so duplicate inserts of the same key are harmless),
+//! never to a wrong or torn answer. A full probe neighborhood simply stops
+//! caching that key: correctness does not depend on capacity.
 
 use super::{SelectionReason, Selector};
 use crate::gemm::Algorithm;
 use crate::gpusim::GpuSpec;
-use std::sync::atomic::{AtomicU64, Ordering};
-
-const EMPTY: u64 = 0;
-const CLAIMED: u64 = 1;
-const READY: u64 = 2;
+use std::sync::atomic::{fence, AtomicU64, Ordering};
 
 /// Linear-probe window before giving up on caching a key.
 const MAX_PROBES: usize = 8;
 
 struct Slot {
-    state: AtomicU64,
+    /// Seqlock version: 0 empty, odd mid-write, even ≥ 2 published.
+    ver: AtomicU64,
+    epoch: AtomicU64,
     gpu: AtomicU64,
     m: AtomicU64,
     n: AtomicU64,
@@ -36,7 +43,8 @@ struct Slot {
 impl Slot {
     fn new() -> Slot {
         Slot {
-            state: AtomicU64::new(EMPTY),
+            ver: AtomicU64::new(0),
+            epoch: AtomicU64::new(0),
             gpu: AtomicU64::new(0),
             m: AtomicU64::new(0),
             n: AtomicU64::new(0),
@@ -88,13 +96,15 @@ fn hash_key(gpu: u64, m: u64, n: u64, k: u64) -> u64 {
     h ^ (h >> 32)
 }
 
-/// Lock-free fixed-capacity decision cache keyed by `(gpu.id, m, n, k)`.
+/// Lock-free fixed-capacity decision cache keyed by `(gpu.id, m, n, k)`,
+/// epoch-stamped for O(1) whole-cache invalidation.
 /// `GpuSpec::id` is the GPU's identity here — its contract (see the field
 /// doc) requires process-wide uniqueness, since a cached decision bakes in
 /// the full spec (memory size drives the fallback rule).
 pub struct DecisionCache {
     slots: Box<[Slot]>,
     mask: usize,
+    epoch: AtomicU64,
 }
 
 impl DecisionCache {
@@ -105,75 +115,150 @@ impl DecisionCache {
         DecisionCache {
             slots: (0..cap).map(|_| Slot::new()).collect(),
             mask: cap - 1,
+            epoch: AtomicU64::new(0),
         }
     }
 
-    /// Look up a cached decision.
+    /// The current epoch. Capture it *before* computing a decision that
+    /// will be published with [`DecisionCache::insert_at`].
+    #[inline]
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// Invalidate every cached decision at once by bumping the epoch.
+    /// Existing entries become misses; in-flight inserts stamped with the
+    /// old epoch are rejected at publish or ignored at read.
+    pub fn invalidate(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Look up a cached decision (current-epoch entries only).
     #[inline]
     pub fn get(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64) -> Option<(Algorithm, SelectionReason)> {
+        let cur = self.epoch.load(Ordering::Acquire);
         let h = hash_key(gpu.id, m, n, k) as usize;
         for p in 0..MAX_PROBES {
             let slot = &self.slots[(h + p) & self.mask];
-            match slot.state.load(Ordering::Acquire) {
-                EMPTY => return None, // inserts claim the first empty slot
-                READY => {
-                    if slot.gpu.load(Ordering::Relaxed) == gpu.id
-                        && slot.m.load(Ordering::Relaxed) == m
-                        && slot.n.load(Ordering::Relaxed) == n
-                        && slot.k.load(Ordering::Relaxed) == k
-                    {
-                        return Some(decode(slot.val.load(Ordering::Relaxed)));
-                    }
-                }
-                _ => {} // mid-insert: treat as occupied, keep probing
+            let v1 = slot.ver.load(Ordering::Acquire);
+            if v1 == 0 {
+                return None; // inserts claim the first empty slot
+            }
+            if v1 & 1 == 1 {
+                continue; // mid-write: treat as occupied, keep probing
+            }
+            let key_match = slot.gpu.load(Ordering::Relaxed) == gpu.id
+                && slot.m.load(Ordering::Relaxed) == m
+                && slot.n.load(Ordering::Relaxed) == n
+                && slot.k.load(Ordering::Relaxed) == k;
+            let ep = slot.epoch.load(Ordering::Relaxed);
+            let val = slot.val.load(Ordering::Relaxed);
+            // Seqlock re-check: if the version moved while we read, the
+            // fields may be torn — fall back to a miss, never serve them.
+            fence(Ordering::Acquire);
+            if slot.ver.load(Ordering::Relaxed) != v1 {
+                return None;
+            }
+            if key_match {
+                // A key lives in exactly one slot (refreshes are
+                // in-place), so a stale-epoch hit means "recompute".
+                return if ep == cur { Some(decode(val)) } else { None };
             }
         }
         None
     }
 
-    /// Publish a decision. No-ops when the probe window is full or the key
-    /// is already present; concurrent duplicate inserts are harmless
-    /// because selection is deterministic.
+    /// Publish a decision computed under the **current** epoch (see
+    /// [`DecisionCache::insert_at`] for swap-racing callers).
     pub fn insert(&self, gpu: &GpuSpec, m: u64, n: u64, k: u64, dec: (Algorithm, SelectionReason)) {
+        let ep = self.epoch();
+        self.insert_at(ep, gpu, m, n, k, dec);
+    }
+
+    /// Publish a decision stamped with the epoch the caller captured
+    /// before computing it. No-ops when that epoch has since been
+    /// invalidated, when the probe window is full, or when an up-to-date
+    /// entry is already present. Concurrent duplicate inserts are harmless
+    /// because selection is deterministic within an epoch.
+    pub fn insert_at(
+        &self,
+        epoch: u64,
+        gpu: &GpuSpec,
+        m: u64,
+        n: u64,
+        k: u64,
+        dec: (Algorithm, SelectionReason),
+    ) {
+        if self.epoch.load(Ordering::Acquire) != epoch {
+            return; // the model that made this decision is gone
+        }
         let h = hash_key(gpu.id, m, n, k) as usize;
         for p in 0..MAX_PROBES {
             let slot = &self.slots[(h + p) & self.mask];
-            match slot.state.load(Ordering::Acquire) {
-                READY => {
-                    if slot.gpu.load(Ordering::Relaxed) == gpu.id
-                        && slot.m.load(Ordering::Relaxed) == m
-                        && slot.n.load(Ordering::Relaxed) == n
-                        && slot.k.load(Ordering::Relaxed) == k
-                    {
-                        return; // already cached
-                    }
-                }
-                EMPTY => {
-                    if slot
-                        .state
-                        .compare_exchange(EMPTY, CLAIMED, Ordering::AcqRel, Ordering::Acquire)
-                        .is_ok()
-                    {
-                        slot.gpu.store(gpu.id, Ordering::Relaxed);
-                        slot.m.store(m, Ordering::Relaxed);
-                        slot.n.store(n, Ordering::Relaxed);
-                        slot.k.store(k, Ordering::Relaxed);
-                        slot.val.store(encode(dec), Ordering::Relaxed);
-                        slot.state.store(READY, Ordering::Release);
-                        return;
-                    }
-                    // Lost the claim race: fall through and probe onward.
-                }
-                _ => {}
+            let v1 = slot.ver.load(Ordering::Acquire);
+            if v1 & 1 == 1 {
+                continue; // another writer: duplicate publish is pointless
             }
+            if v1 == 0 {
+                // Claim the empty slot (ver 0 → 1 = writing).
+                if slot
+                    .ver
+                    .compare_exchange(0, 1, Ordering::AcqRel, Ordering::Relaxed)
+                    .is_ok()
+                {
+                    slot.gpu.store(gpu.id, Ordering::Relaxed);
+                    slot.m.store(m, Ordering::Relaxed);
+                    slot.n.store(n, Ordering::Relaxed);
+                    slot.k.store(k, Ordering::Relaxed);
+                    slot.val.store(encode(dec), Ordering::Relaxed);
+                    slot.epoch.store(epoch, Ordering::Relaxed);
+                    slot.ver.store(2, Ordering::Release);
+                    return;
+                }
+                continue; // lost the claim race: probe onward
+            }
+            // Published: is it our key?
+            let key_match = slot.gpu.load(Ordering::Relaxed) == gpu.id
+                && slot.m.load(Ordering::Relaxed) == m
+                && slot.n.load(Ordering::Relaxed) == n
+                && slot.k.load(Ordering::Relaxed) == k;
+            let ep = slot.epoch.load(Ordering::Relaxed);
+            fence(Ordering::Acquire);
+            if slot.ver.load(Ordering::Relaxed) != v1 {
+                return; // concurrent refresh of this neighborhood — give up
+            }
+            if !key_match {
+                continue;
+            }
+            if ep == epoch {
+                return; // already cached at this epoch
+            }
+            // In-place refresh: bump to odd (writing), rewrite value +
+            // epoch, publish the next even version. The key never changes,
+            // so readers only ever see a consistent (key, epoch, val).
+            if slot
+                .ver
+                .compare_exchange(v1, v1 + 1, Ordering::AcqRel, Ordering::Relaxed)
+                .is_ok()
+            {
+                slot.val.store(encode(dec), Ordering::Relaxed);
+                slot.epoch.store(epoch, Ordering::Relaxed);
+                slot.ver.store(v1 + 2, Ordering::Release);
+            }
+            return; // refreshed, or a concurrent refresher beat us
         }
     }
 
-    /// Number of published entries (scan; for tests/metrics, not hot path).
+    /// Number of entries published at the current epoch (scan; for
+    /// tests/metrics, not hot path).
     pub fn len(&self) -> usize {
+        let cur = self.epoch.load(Ordering::Acquire);
         self.slots
             .iter()
-            .filter(|s| s.state.load(Ordering::Acquire) == READY)
+            .filter(|s| {
+                let v = s.ver.load(Ordering::Acquire);
+                v != 0 && v & 1 == 0 && s.epoch.load(Ordering::Relaxed) == cur
+            })
             .count()
     }
 
@@ -293,6 +378,48 @@ mod tests {
     }
 
     #[test]
+    fn invalidate_hides_every_entry_at_once() {
+        let c = DecisionCache::new(128);
+        let dec = (Algorithm::Nt, SelectionReason::PredictedNt);
+        for m in 1..=20u64 {
+            c.insert(&GTX1080, m, 4, 4, dec);
+        }
+        assert_eq!(c.len(), 20);
+        c.invalidate();
+        assert_eq!(c.len(), 0);
+        for m in 1..=20u64 {
+            assert_eq!(c.get(&GTX1080, m, 4, 4), None, "m={m}");
+        }
+    }
+
+    #[test]
+    fn reinsert_after_invalidate_refreshes_in_place() {
+        let c = DecisionCache::new(64);
+        let old = (Algorithm::Nt, SelectionReason::PredictedNt);
+        let new = (Algorithm::Tnn, SelectionReason::PredictedTnn);
+        c.insert(&GTX1080, 100, 100, 100, old);
+        c.invalidate();
+        assert_eq!(c.get(&GTX1080, 100, 100, 100), None);
+        c.insert(&GTX1080, 100, 100, 100, new);
+        assert_eq!(c.get(&GTX1080, 100, 100, 100), Some(new));
+        assert_eq!(c.len(), 1, "the key reuses its slot across epochs");
+    }
+
+    #[test]
+    fn stale_epoch_inserts_are_rejected() {
+        let c = DecisionCache::new(64);
+        let dec = (Algorithm::Nt, SelectionReason::PredictedNt);
+        let ep = c.epoch();
+        c.invalidate(); // the model that computed `dec` is retired
+        c.insert_at(ep, &GTX1080, 50, 50, 50, dec);
+        assert_eq!(c.get(&GTX1080, 50, 50, 50), None);
+        assert_eq!(c.len(), 0);
+        // At the current epoch it publishes fine.
+        c.insert_at(c.epoch(), &GTX1080, 50, 50, 50, dec);
+        assert_eq!(c.get(&GTX1080, 50, 50, 50), Some(dec));
+    }
+
+    #[test]
     fn prop_cached_selector_is_transparent() {
         // The cache must never change a decision — cold, warm, any GPU.
         let cached = CachedSelector::new(selector());
@@ -327,5 +454,49 @@ mod tests {
             }
         });
         assert!(c.len() >= 32);
+    }
+
+    #[test]
+    fn concurrent_invalidation_storm_never_serves_cross_epoch_values() {
+        // Writers publish epoch-tagged values (NT at even epochs, TNN at
+        // odd) while one thread keeps invalidating. Readers must only ever
+        // observe the value that matches the epoch they captured — i.e. a
+        // hit is always internally consistent, even mid-storm.
+        let c = std::sync::Arc::new(DecisionCache::new(64));
+        let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let nt = (Algorithm::Nt, SelectionReason::PredictedNt);
+        let tnn = (Algorithm::Tnn, SelectionReason::PredictedTnn);
+        std::thread::scope(|s| {
+            for _ in 0..3 {
+                let c = c.clone();
+                let stop = stop.clone();
+                s.spawn(move || {
+                    while !stop.load(Ordering::Acquire) {
+                        for m in 0..16u64 {
+                            let ep = c.epoch();
+                            let dec = if ep % 2 == 0 { nt } else { tnn };
+                            c.insert_at(ep, &GTX1080, m, 8, 8, dec);
+                            if let Some(v) = c.get(&GTX1080, m, 8, 8) {
+                                assert!(v == nt || v == tnn);
+                                // The value a *stable* epoch serves matches
+                                // that epoch's parity.
+                                let before = c.epoch();
+                                if before == ep {
+                                    assert_eq!(v, dec, "epoch {ep}");
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+            let c2 = c.clone();
+            s.spawn(move || {
+                for _ in 0..2000 {
+                    c2.invalidate();
+                    std::thread::yield_now();
+                }
+                stop.store(true, Ordering::Release);
+            });
+        });
     }
 }

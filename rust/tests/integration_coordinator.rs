@@ -383,7 +383,8 @@ fn shutdown_drains_queued_jobs_without_deadlock() {
         let out = rx
             .recv()
             .unwrap_or_else(|_| panic!("job {i} dropped during drain"))
-            .unwrap_or_else(|e| panic!("job {i} failed during drain: {e}"));
+            .unwrap_or_else(|e| panic!("job {i} failed during drain: {e}"))
+            .outputs;
         assert_allclose(&out[0].data, &expect.data, 1e-3, 1e-3);
     }
 }

@@ -1,0 +1,344 @@
+//! Integration: the online adaptive-selection loop end to end through the
+//! deterministic simulated-GPU backend — a deliberately mistrained seed
+//! model recovers via shadow probing + background retraining + atomic
+//! hot-swap, model swaps are race-free under concurrent clients, and a
+//! restarted router warm-starts from the persisted JSON store. Never
+//! skipped (no PJRT artifacts required).
+
+use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
+use mtnn::gemm::cpu::{matmul_nt, Matrix};
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::{Simulator, GTX1080};
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::Classifier;
+use mtnn::online::OnlineConfig;
+use mtnn::selector::{features, SelectionReason, Selector, TrainedModel};
+use mtnn::testutil::assert_allclose;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Traffic shapes small enough for the oracle numerics, labeled by the
+/// calibrated timing model (the same model `SimExecutor` reports measured
+/// latencies from, so shadow-probe winners are deterministic). Prefers a
+/// mix of NT- and TNN-favored cases when the model provides one.
+fn traffic_shapes() -> Vec<(u64, u64, u64, i8)> {
+    let sim = Simulator::new(&GTX1080);
+    let sizes = [64u64, 96, 128, 160];
+    let mut nt = Vec::new();
+    let mut tnn = Vec::new();
+    for &m in &sizes {
+        for &n in &sizes {
+            for &k in &sizes {
+                let label = sim.time_case(m, n, k).label();
+                if label == 1 {
+                    nt.push((m, n, k, 1i8));
+                } else {
+                    tnn.push((m, n, k, -1i8));
+                }
+            }
+        }
+    }
+    // Spread picks across each class; tolerate a single-class world.
+    let mut out = Vec::new();
+    out.extend(nt.into_iter().step_by(17).take(4));
+    out.extend(tnn.into_iter().step_by(17).take(4));
+    assert!(!out.is_empty(), "size grid produced no cases");
+    out
+}
+
+/// A seed selector trained on the traffic shapes with INVERTED labels: it
+/// predicts wrong on every request it will see.
+fn mistrained_selector(shapes: &[(u64, u64, u64, i8)]) -> Selector {
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    for &(m, n, k, label) in shapes {
+        x.push(features(&GTX1080, m, n, k).to_vec());
+        y.push(-label as f64);
+    }
+    let mut g = Gbdt::new(GbdtParams::default());
+    g.fit(&x, &y);
+    let sel = Selector::new(TrainedModel::Gbdt(g));
+    for &(m, n, k, label) in shapes {
+        assert_eq!(
+            sel.model.predict_label(&features(&GTX1080, m, n, k)),
+            -label,
+            "seed must mispredict {m}x{n}x{k}"
+        );
+    }
+    sel
+}
+
+fn request(m: u64, n: u64, k: u64, seed: u64) -> GemmRequest {
+    GemmRequest {
+        gpu: &GTX1080,
+        shape: GemmShape::new(m, n, k),
+        a: Matrix::random(m as usize, k as usize, seed),
+        b: Matrix::random(n as usize, k as usize, seed ^ 0xBEEF),
+    }
+}
+
+fn aggressive_online() -> OnlineConfig {
+    OnlineConfig {
+        probe_every: 1,
+        retrain_min_labeled: 16,
+        retrain_every_labeled: 24,
+        drift_threshold: 0.2,
+        drift_min_probes: 8,
+        holdout_frac: 0.25,
+        poll_interval: Duration::from_millis(5),
+        ..OnlineConfig::default()
+    }
+}
+
+#[test]
+fn online_loop_recovers_from_a_mistrained_seed() {
+    let shapes = traffic_shapes();
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 2,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let router = Router::new(
+        mistrained_selector(&shapes),
+        engine.handle(),
+        RouterConfig::online(aggressive_online()),
+    );
+
+    // Phase 1: drive traffic until the trainer promotes a challenger.
+    // Numerics must stay correct the whole time — shadow probes and model
+    // swaps never corrupt a response.
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut i = 0u64;
+    while router.metrics.snapshot().promotions == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "no promotion after {i} requests: {}",
+            router.metrics.snapshot().render()
+        );
+        let (m, n, k, _) = shapes[(i % shapes.len() as u64) as usize];
+        let req = request(m, n, k, i);
+        let expect = matmul_nt(&req.a, &req.b);
+        let resp = router.serve(req).unwrap();
+        assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        i += 1;
+    }
+    let promoted_at = router.metrics.snapshot();
+    assert!(promoted_at.retrains >= 1);
+    assert!(
+        promoted_at.mispredict_rate > 0.5,
+        "the seed was wrong everywhere; rate={}",
+        promoted_at.mispredict_rate
+    );
+    let hub = router.online_hub().expect("online hub");
+    assert!(hub.live.generation() >= 1, "promotion bumped the generation");
+
+    // Phase 2: keep serving rounds of the trace until a whole round of
+    // shadow probes comes back clean (the loop keeps accumulating labels
+    // and re-promoting until the live model wins every probe). A clean
+    // round is 100% measured accuracy — comfortably past the ≥90%
+    // acceptance bar.
+    let mut round = 0u64;
+    loop {
+        assert!(
+            Instant::now() < deadline,
+            "accuracy never converged: {}",
+            router.metrics.snapshot().render()
+        );
+        let before = router.metrics.snapshot();
+        for &(m, n, k, _) in &shapes {
+            let req = request(m, n, k, 10_000 + round);
+            let expect = matmul_nt(&req.a, &req.b);
+            let resp = router.serve(req).unwrap();
+            assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        }
+        let after = router.metrics.snapshot();
+        let probes = after.shadow_probes - before.shadow_probes;
+        let wrong = after.shadow_mispredicts - before.shadow_mispredicts;
+        assert!(probes >= shapes.len() as u64, "probes={probes}");
+        round += 1;
+        if wrong == 0 {
+            break;
+        }
+    }
+    // And the converged model's decisions match the timing model's truth.
+    for &(m, n, k, truth) in &shapes {
+        let resp = router.serve(request(m, n, k, 77_000)).unwrap();
+        let want = if truth == 1 { Algorithm::Nt } else { Algorithm::Tnn };
+        assert_eq!(resp.algorithm, want, "{m}x{n}x{k} post-convergence");
+    }
+    drop(router); // joins the trainer
+    engine.shutdown();
+}
+
+#[test]
+fn hot_swap_under_concurrent_traffic_is_race_free() {
+    let shapes = traffic_shapes();
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 4,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        },
+    )
+    .unwrap();
+    let online = OnlineConfig {
+        probe_every: 2,
+        retrain_min_labeled: 8,
+        retrain_every_labeled: 8,
+        drift_min_probes: 4,
+        poll_interval: Duration::from_millis(2),
+        ..aggressive_online()
+    };
+    let router = Arc::new(Router::new(
+        mistrained_selector(&shapes),
+        engine.handle(),
+        RouterConfig::online(online),
+    ));
+
+    // 6 clients hammer while the trainer retrains and hot-swaps beneath
+    // them. Every response must be numerically right and internally
+    // consistent, and the books must balance exactly.
+    let (clients, per_client) = (6usize, 20usize);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let router = Arc::clone(&router);
+            let shapes = shapes.clone();
+            s.spawn(move || {
+                for j in 0..per_client {
+                    let (m, n, k, _) = shapes[(c + j) % shapes.len()];
+                    let req = request(m, n, k, (c * 1000 + j) as u64);
+                    let expect = matmul_nt(&req.a, &req.b);
+                    let resp = router.serve(req).expect("serve");
+                    assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+                    // A torn decision would pair an algorithm with the
+                    // other algorithm's reason.
+                    match (resp.algorithm, resp.reason) {
+                        (Algorithm::Nt, SelectionReason::PredictedNt)
+                        | (Algorithm::Tnn, SelectionReason::PredictedTnn)
+                        | (Algorithm::Nt, SelectionReason::MemoryFallback) => {}
+                        other => panic!("inconsistent decision {other:?}"),
+                    }
+                }
+            });
+        }
+    });
+    // Keep serving single-threaded until a promotion lands (the hammer
+    // almost certainly triggered one already).
+    let deadline = Instant::now() + Duration::from_secs(120);
+    let mut i = 0u64;
+    while router.metrics.snapshot().promotions == 0 {
+        assert!(
+            Instant::now() < deadline,
+            "no promotion: {}",
+            router.metrics.snapshot().render()
+        );
+        let (m, n, k, _) = shapes[(i % shapes.len() as u64) as usize];
+        router.serve(request(m, n, k, 50_000 + i)).unwrap();
+        i += 1;
+    }
+    let snap = router.metrics.snapshot();
+    assert_eq!(
+        snap.completed + snap.failed,
+        snap.requests,
+        "books balance: {}",
+        snap.render()
+    );
+    assert_eq!(snap.failed, 0, "{}", snap.render());
+    assert_eq!(snap.requests, (clients * per_client) as u64 + i);
+    assert!(snap.promotions >= 1);
+    drop(router);
+    engine.shutdown();
+}
+
+#[test]
+fn warm_restart_recovers_from_the_persisted_store() {
+    let shapes = traffic_shapes();
+    let dir = std::env::temp_dir().join("mtnn_online_warm_restart");
+    std::fs::remove_dir_all(&dir).ok();
+    let store = dir.join("online.json");
+
+    // ---- first life: learn online, persist ----
+    {
+        let engine = Engine::sim(&GTX1080, EngineConfig { workers: 2, queue_depth: 64, ..EngineConfig::default() }).unwrap();
+        let online = OnlineConfig {
+            persist_path: Some(store.clone()),
+            ..aggressive_online()
+        };
+        let router = Router::new(
+            mistrained_selector(&shapes),
+            engine.handle(),
+            RouterConfig::online(online),
+        );
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut i = 0u64;
+        while router.metrics.snapshot().promotions == 0 {
+            assert!(
+                Instant::now() < deadline,
+                "no promotion: {}",
+                router.metrics.snapshot().render()
+            );
+            let (m, n, k, _) = shapes[(i % shapes.len() as u64) as usize];
+            router.serve(request(m, n, k, i)).unwrap();
+            i += 1;
+        }
+        // Keep the loop running until the live model wins a whole probe
+        // round — every promotion re-persists, so the store then holds a
+        // model known to be right on every traffic shape.
+        let mut round = 0u64;
+        loop {
+            assert!(
+                Instant::now() < deadline,
+                "first life never converged: {}",
+                router.metrics.snapshot().render()
+            );
+            let before = router.metrics.snapshot();
+            for &(m, n, k, _) in &shapes {
+                router.serve(request(m, n, k, 30_000 + round)).unwrap();
+            }
+            let after = router.metrics.snapshot();
+            round += 1;
+            if after.shadow_mispredicts == before.shadow_mispredicts {
+                break;
+            }
+        }
+        drop(router); // trainer joins + final persist
+        engine.shutdown();
+    }
+    assert!(store.exists(), "online store persisted");
+
+    // ---- second life: a fresh (still mistrained) seed + the store ----
+    let engine = Engine::sim(&GTX1080, EngineConfig { workers: 2, queue_depth: 64, ..EngineConfig::default() }).unwrap();
+    let online = OnlineConfig {
+        persist_path: Some(store.clone()),
+        // Retraining effectively off: recovery must come from the store.
+        retrain_min_labeled: usize::MAX,
+        retrain_every_labeled: 0,
+        ..aggressive_online()
+    };
+    let router = Router::new(
+        mistrained_selector(&shapes),
+        engine.handle(),
+        RouterConfig::online(online),
+    );
+    let hub = router.online_hub().expect("online hub");
+    assert!(
+        hub.live.generation() >= 1,
+        "the persisted model hot-swaps in before any traffic"
+    );
+    for (i, &(m, n, k, truth)) in shapes.iter().enumerate() {
+        let resp = router.serve(request(m, n, k, 90_000 + i as u64)).unwrap();
+        let want = if truth == 1 { Algorithm::Nt } else { Algorithm::Tnn };
+        assert_eq!(resp.algorithm, want, "warm-started model is the learned one");
+    }
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.retrains, 0, "no retraining happened in the second life");
+    assert_eq!(snap.shadow_mispredicts, 0, "{}", snap.render());
+    drop(router);
+    engine.shutdown();
+    std::fs::remove_dir_all(&dir).ok();
+}
