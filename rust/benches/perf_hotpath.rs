@@ -15,7 +15,8 @@ use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig}
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::experiments::emit;
 use mtnn::gemm::cpu::Matrix;
-use mtnn::gemm::{blocked, cpu, GemmShape};
+use mtnn::gemm::kernels::{self, KernelKind};
+use mtnn::gemm::{blocked, cpu, pool, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
@@ -88,6 +89,99 @@ fn main() {
         json_row("gemm.blocked.matmul_tnn", blocked_tnn.mean_ns())
             .set("shape", "512x512x512")
             .set("backend", "native"),
+    );
+
+    // 1b. Kernel dispatch: forced scalar reference vs the runtime-detected
+    //     SIMD micro-kernel on the same 512^3 NT call (identical rows on
+    //     hosts without AVX2+FMA, where both names dispatch scalar).
+    blocked::prewarm();
+    let dispatched = kernels::active_kernel().name();
+    let scalar_nt = kernels::with_forced_kernel(Some(KernelKind::Scalar), || {
+        bench("gemm.kernel=scalar matmul_nt 512^3", 2, 10, || {
+            blocked::matmul_nt(&a512, &b512)
+        })
+    });
+    report.push_str(&format!("{}\n", scalar_nt.report()));
+    let simd_nt = bench(
+        &format!("gemm.kernel={dispatched} matmul_nt 512^3"),
+        2,
+        10,
+        || blocked::matmul_nt(&a512, &b512),
+    );
+    report.push_str(&format!("{}\n", simd_nt.report()));
+    report.push_str(&speedup_line(
+        &format!("{dispatched}/scalar kernel NT 512^3"),
+        &scalar_nt,
+        &simd_nt,
+    ));
+    rows.push(
+        json_row("gemm.kernel.simd.matmul_nt", simd_nt.mean_ns())
+            .set("shape", "512x512x512")
+            .set("kernel", dispatched)
+            .set("speedup_vs_scalar", scalar_nt.mean_ns() / simd_nt.mean_ns()),
+    );
+
+    // 1c. Small-GEMM single-call latency at 96^3 (FCN-layer-sized
+    //     traffic), three ways: single-threaded inline (the pre-PR
+    //     behaviour — the old auto_threads kept anything under 2 MFLOP
+    //     inline), per-call thread::scope spawns at pool parallelism (what
+    //     threading small GEMMs used to cost, the ~100µs the pool
+    //     amortizes), and the pooled path auto_threads now picks. The
+    //     acceptance comparison is pool vs single-thread; pool vs scope
+    //     isolates the spawn overhead specifically.
+    let a96 = Matrix::random(96, 96, 3);
+    let b96 = Matrix::random(96, 96, 4);
+    let lanes = pool::get().parallelism();
+    let single_96 = bench_batched("gemm.1thread matmul_nt 96^3 (pre-PR policy)", 5, 30, 8, || {
+        blocked::matmul_nt_scoped(&a96, &b96, 1)
+    });
+    report.push_str(&format!("{}\n", single_96.report()));
+    let scoped_96 = bench_batched("gemm.scope matmul_nt 96^3 (spawn per call)", 5, 30, 8, || {
+        blocked::matmul_nt_scoped(&a96, &b96, lanes)
+    });
+    report.push_str(&format!("{}\n", scoped_96.report()));
+    let pooled_96 = bench_batched("gemm.pool matmul_nt 96^3 (persistent pool)", 5, 30, 8, || {
+        blocked::matmul_nt(&a96, &b96)
+    });
+    report.push_str(&format!("{}\n", pooled_96.report()));
+    report.push_str(&speedup_line("pool/1thread NT 96^3", &single_96, &pooled_96));
+    report.push_str(&speedup_line("pool/scope NT 96^3", &scoped_96, &pooled_96));
+    rows.push(
+        json_row("gemm.pool.small.matmul_nt", pooled_96.mean_ns())
+            .set("shape", "96x96x96")
+            .set("backend", "native")
+            .set("speedup_vs_single_thread", single_96.mean_ns() / pooled_96.mean_ns())
+            .set("speedup_vs_scoped_spawn", scoped_96.mean_ns() / pooled_96.mean_ns()),
+    );
+
+    // 1d. Zero-alloc steady state: after prewarm + shape warmup, sustained
+    //     NT/TNN traffic must not grow the packing/transpose scratch (0
+    //     grow events — asserted as a test in pool_hygiene.rs, recorded
+    //     here so the trajectory keeps proving it).
+    let a256 = Matrix::random(256, 256, 5);
+    let b256 = Matrix::random(256, 256, 6);
+    for _ in 0..4 {
+        blocked::matmul_nt(&a256, &b256);
+        blocked::matmul_tnn(&a256, &b256);
+    }
+    let grow0 = kernels::scratch_grow_events();
+    for _ in 0..200 {
+        blocked::matmul_nt(&a256, &b256);
+        blocked::matmul_tnn(&a256, &b256);
+    }
+    let grow_events = kernels::scratch_grow_events() - grow0;
+    let pool_stats = pool::get().stats();
+    report.push_str(&format!(
+        "gemm steady state (400 calls, 256^3 NT+TNN): scratch grow events {grow_events} \
+         | pool workers {} dispatch overhead {}ns\n",
+        pool_stats.workers, pool_stats.dispatch_overhead_ns
+    ));
+    rows.push(
+        Json::obj()
+            .set("name", "gemm.scratch.steady_state")
+            .set("shape", "256x256x256")
+            .set("grow_events", grow_events)
+            .set("pool_dispatch_overhead_ns", pool_stats.dispatch_overhead_ns),
     );
 
     // 2. GBDT training (paper Table VI: 7 ms on an i7-3820).
@@ -224,10 +318,11 @@ fn main() {
     engine.shutdown();
 
     // 8. Sharded engine pool vs single worker: serve throughput under 8
-    //    concurrent clients on the native backend. 96^3 requests sit
-    //    below the blocked kernels' internal threading threshold
-    //    (~2 MFLOP), so scaling comes from the worker pool, not from
-    //    intra-GEMM parallelism.
+    //    concurrent clients on the native backend at 96^3. Request-level
+    //    scaling comes from the engine worker pool; whatever intra-GEMM
+    //    splitting auto_threads picks rides the shared persistent pool,
+    //    whose caller-participates design keeps concurrent engine workers
+    //    from oversubscribing each other.
     let pool_throughput = |workers: usize| -> f64 {
         let engine = Engine::native_pool(EngineConfig {
             workers,

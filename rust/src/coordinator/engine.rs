@@ -79,10 +79,12 @@ enum Cmd {
 pub struct EngineConfig {
     /// Worker threads (each owns its own backend instance). 1 reproduces
     /// the single-thread engine semantics. The default is
-    /// `available_parallelism` capped at 4: the native blocked kernels
-    /// are internally multi-threaded above ~2 MFLOP, so a worker per
-    /// core would oversubscribe the CPU quadratically on large GEMMs —
-    /// raise it for small-GEMM-dominated traffic (see perf_hotpath §8).
+    /// `available_parallelism` capped at 4: large native GEMMs fan out
+    /// through the shared persistent pool (`gemm::pool`), and while its
+    /// caller-participates design degrades gracefully under many
+    /// concurrent engine workers, a worker per core would still leave the
+    /// CPU oversubscribed on large-GEMM traffic — raise the cap for
+    /// small-GEMM-dominated workloads (see perf_hotpath §8).
     pub workers: usize,
     /// Bounded queue depth *per worker* — the backpressure surface.
     pub queue_depth: usize,

@@ -252,8 +252,10 @@ fn native_step(
     let mut dz = dz;
     for i in (0..n_layers).rev() {
         let h_prev = &acts[i];
-        // dW[out,in] = dzᵀ[out,mb] × h_prev[mb,in] — the TN call.
-        let dw = blocked::matmul_nn(&blocked::transpose(&dz), h_prev);
+        // dW[out,in] = dzᵀ[out,mb] × h_prev[mb,in] — the TN call, with the
+        // transpose landing in thread-local scratch instead of a fresh
+        // allocation every step.
+        let dw = blocked::matmul_tn(&dz, h_prev);
         let out_dim = dz.cols;
         let mut db = vec![0.0f32; out_dim];
         for r in 0..dz.rows {
@@ -301,6 +303,9 @@ pub fn train_native(plan: &[Algorithm], steps: usize, seed: u64) -> anyhow::Resu
         cfg.n_layers()
     );
     let artifact = plan_artifact("fcn_train_native", plan);
+    // Spawn the persistent GEMM pool and pre-size its packing scratch once,
+    // so step timings measure kernels rather than first-call warmup.
+    blocked::prewarm();
     let data = SyntheticMnist::generate(
         1024,
         cfg.dims[0] as usize,
@@ -407,10 +412,14 @@ mod tests {
     #[test]
     fn native_nt_and_tnn_plans_are_bit_identical() {
         // Blocked NT and TNN feed identical packed panels to the same
-        // kernel, so whole training trajectories agree exactly.
-        let nt = train_native(&[Algorithm::Nt; 3], 5, 3).unwrap();
-        let tnn = train_native(&[Algorithm::Tnn; 3], 5, 3).unwrap();
-        assert_eq!(nt.losses, tnn.losses);
+        // kernel, so whole training trajectories agree exactly. Pin the
+        // kernel choice so a concurrent forced-kernel test section can't
+        // flip SIMD↔scalar between the two runs.
+        crate::gemm::kernels::with_forced_kernel(None, || {
+            let nt = train_native(&[Algorithm::Nt; 3], 5, 3).unwrap();
+            let tnn = train_native(&[Algorithm::Tnn; 3], 5, 3).unwrap();
+            assert_eq!(nt.losses, tnn.losses);
+        });
     }
 
     #[test]

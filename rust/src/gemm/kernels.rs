@@ -1,0 +1,541 @@
+//! Register-tiled GEMM micro-kernels, packed-panel layouts, and the
+//! per-thread packing scratch behind [`super::blocked`].
+//!
+//! # Kernel geometry
+//!
+//! Every kernel computes one `MR × NR` tile of `C` from an **A panel** and a
+//! **B panel** packed for unit-stride streaming:
+//!
+//! * A panel — `kb` mini-columns of `MR` rows: `ap[l*MR + r] = A[r, l]`
+//!   (rows beyond the block edge are zero-padded, so the kernel never
+//!   branches on the remainder);
+//! * B panel — `kb` mini-rows of `NR` columns: `bp[l*NR + j] = B[l, j]`
+//!   (columns beyond the edge zero-padded likewise).
+//!
+//! The AVX2+FMA kernel ([`tile_avx2`]) holds the 6×16 tile in twelve YMM
+//! accumulators and issues two fused multiply-adds per packed `l` step per
+//! row; the portable scalar kernel ([`tile_scalar`]) is the reference path,
+//! the non-x86 fallback, and the `MTNN_NO_SIMD=1` escape hatch. Both
+//! consume *identical* panels, so the NT/TNN bit-identity argument of
+//! [`super::blocked`] holds on either path — what the paper's §IV calls
+//! the same kernel fed through two memory-access plans.
+//!
+//! # Dispatch
+//!
+//! [`active_kernel`] picks the kernel once per GEMM call: forced override
+//! (test/bench hook, [`with_forced_kernel`]) → `MTNN_NO_SIMD` environment
+//! hatch → runtime `is_x86_feature_detected!("avx2") && ("fma")` → scalar.
+//! Detection and the environment read are cached for the process lifetime.
+//!
+//! # Scratch
+//!
+//! Packing buffers (and the out-of-place transpose buffer of the TNN /
+//! TN routes) live in thread-local [`Vec`]s that are taken, grown only when
+//! too small, and put back — steady-state traffic re-packs into warm
+//! buffers with zero heap allocation. Every capacity growth bumps a global
+//! counter ([`scratch_grow_events`]) so benches and tests can assert the
+//! hot path is allocation-free after warmup.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Register-blocked rows per micro-kernel tile.
+pub const MR: usize = 6;
+/// Register-blocked columns per micro-kernel tile (two 8-lane f32 vectors).
+pub const NR: usize = 16;
+
+/// How the B operand is stored relative to the logical `k × n` operand the
+/// packing step consumes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BLayout {
+    /// B is stored row-major `k × n` — plain NN.
+    KxN,
+    /// B is stored row-major `n × k`; packing gathers panels transposed on
+    /// the fly — the direct NT access pattern.
+    NxK,
+}
+
+/// Which micro-kernel implementation executes the tiles of a GEMM call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelKind {
+    /// Portable reference kernel — auto-vectorized at best.
+    Scalar,
+    /// Explicit AVX2 + FMA 6×16 kernel (x86-64 only, runtime-detected).
+    Avx2,
+}
+
+impl KernelKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Avx2 => "avx2",
+        }
+    }
+}
+
+/// Forced-kernel override: 0 = auto, 1 = scalar, 2 = SIMD-if-supported.
+static FORCED: AtomicU8 = AtomicU8::new(0);
+/// Serializes [`with_forced_kernel`] sections (and anything that must see a
+/// stable kernel choice across several GEMM calls, e.g. bit-identity tests).
+static MODE_LOCK: Mutex<()> = Mutex::new(());
+
+/// Whether `MTNN_NO_SIMD` disables the SIMD kernels ("" and "0" mean no).
+fn env_disables_simd(v: Option<std::ffi::OsString>) -> bool {
+    match v {
+        Some(s) => !s.is_empty() && s != "0",
+        None => false,
+    }
+}
+
+/// Best kernel the hardware supports, ignoring the environment hatch.
+fn hw_kernel() -> KernelKind {
+    static HW: OnceLock<KernelKind> = OnceLock::new();
+    *HW.get_or_init(|| {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+                return KernelKind::Avx2;
+            }
+        }
+        KernelKind::Scalar
+    })
+}
+
+/// Hardware detection gated by the `MTNN_NO_SIMD` escape hatch (read once
+/// per process).
+fn detected() -> KernelKind {
+    static DET: OnceLock<KernelKind> = OnceLock::new();
+    *DET.get_or_init(|| {
+        if env_disables_simd(std::env::var_os("MTNN_NO_SIMD")) {
+            KernelKind::Scalar
+        } else {
+            hw_kernel()
+        }
+    })
+}
+
+/// The kernel the next GEMM call will use.
+pub fn active_kernel() -> KernelKind {
+    match FORCED.load(Ordering::Relaxed) {
+        1 => KernelKind::Scalar,
+        2 => hw_kernel(),
+        _ => detected(),
+    }
+}
+
+/// The kernels worth testing on this host under the current environment:
+/// always the scalar reference, plus the SIMD kernel when it would actually
+/// dispatch (so `MTNN_NO_SIMD=1` CI runs stay scalar-only).
+pub fn available_kernels() -> Vec<KernelKind> {
+    let mut out = vec![KernelKind::Scalar];
+    if detected() == KernelKind::Avx2 {
+        out.push(KernelKind::Avx2);
+    }
+    out
+}
+
+/// Run `f` with the kernel choice pinned: `Some(Scalar)` forces the
+/// reference kernel, `Some(Avx2)` forces SIMD when the hardware supports it
+/// (scalar otherwise), `None` pins the default dispatch. Sections are
+/// serialized by a global lock, so concurrent tests cannot flip the kernel
+/// out from under a caller mid-section — which is what keeps NT/TNN
+/// bit-identity assertions race-free. Test/bench hook, not a serving API.
+pub fn with_forced_kernel<R>(kind: Option<KernelKind>, f: impl FnOnce() -> R) -> R {
+    struct Restore(u8);
+    impl Drop for Restore {
+        fn drop(&mut self) {
+            FORCED.store(self.0, Ordering::Relaxed);
+        }
+    }
+    let _section = MODE_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let _restore = Restore(FORCED.load(Ordering::Relaxed));
+    FORCED.store(
+        match kind {
+            None => 0,
+            Some(KernelKind::Scalar) => 1,
+            Some(KernelKind::Avx2) => 2,
+        },
+        Ordering::Relaxed,
+    );
+    f()
+}
+
+// ---- packing ----------------------------------------------------------------
+
+/// Pack the `mb × kb` block of row-major `A` (leading dimension `lda`,
+/// origin `(i0, l0)`) into `MR`-row panels: panel `ip` holds rows
+/// `ip*MR..ip*MR+MR` as `ap[ip*kb*MR + l*MR + r]`, rows past `mb`
+/// zero-padded so the kernel always runs a full tile.
+pub(crate) fn pack_a(
+    a: &[f32],
+    lda: usize,
+    i0: usize,
+    l0: usize,
+    mb: usize,
+    kb: usize,
+    ap: &mut [f32],
+) {
+    let mpanels = mb.div_ceil(MR);
+    for ip in 0..mpanels {
+        let base = ip * kb * MR;
+        let rows = MR.min(mb - ip * MR);
+        for r in 0..rows {
+            let src = &a[(i0 + ip * MR + r) * lda + l0..][..kb];
+            for (l, &v) in src.iter().enumerate() {
+                ap[base + l * MR + r] = v;
+            }
+        }
+        for r in rows..MR {
+            for l in 0..kb {
+                ap[base + l * MR + r] = 0.0;
+            }
+        }
+    }
+}
+
+/// Pack the `kb × nb` panel of the logical `k × n` B operand starting at
+/// `(l0, j0)` into `NR`-column panels: `bp[jp*kb*NR + l*NR + j]`, columns
+/// past `nb` zero-padded. For [`BLayout::NxK`] this is where the transposed
+/// gather happens (panel-sized, so the strided reads stay cache-resident)
+/// — the NT memory-access pattern; both layouts produce bit-identical
+/// panels for the same logical operand.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn pack_b(
+    b: &[f32],
+    layout: BLayout,
+    l0: usize,
+    j0: usize,
+    kb: usize,
+    nb: usize,
+    k: usize,
+    n: usize,
+    bp: &mut [f32],
+) {
+    let npanels = nb.div_ceil(NR);
+    match layout {
+        BLayout::KxN => {
+            for jp in 0..npanels {
+                let base = jp * kb * NR;
+                let cols = NR.min(nb - jp * NR);
+                for l in 0..kb {
+                    let src = &b[(l0 + l) * n + j0 + jp * NR..][..cols];
+                    let dst = &mut bp[base + l * NR..base + l * NR + NR];
+                    dst[..cols].copy_from_slice(src);
+                    dst[cols..].fill(0.0);
+                }
+            }
+        }
+        BLayout::NxK => {
+            // B row j is contiguous in l: read sequentially, scatter into
+            // the panel columns.
+            for jp in 0..npanels {
+                let base = jp * kb * NR;
+                let cols = NR.min(nb - jp * NR);
+                if cols < NR {
+                    for l in 0..kb {
+                        bp[base + l * NR + cols..base + l * NR + NR].fill(0.0);
+                    }
+                }
+                for j in 0..cols {
+                    let src = &b[(j0 + jp * NR + j) * k + l0..][..kb];
+                    for (l, &v) in src.iter().enumerate() {
+                        bp[base + l * NR + j] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---- micro-kernels ----------------------------------------------------------
+
+/// Compute one full `MR × NR` tile from packed panels:
+/// `out[r*NR + j] = Σ_l ap[l*MR + r] · bp[l*NR + j]`. The caller merges the
+/// valid sub-rectangle into `C` (padded lanes are zero, so the full tile is
+/// always safe to compute).
+pub(crate) fn tile(kind: KernelKind, kb: usize, ap: &[f32], bp: &[f32], out: &mut [f32; MR * NR]) {
+    debug_assert!(ap.len() >= kb * MR && bp.len() >= kb * NR);
+    match kind {
+        // The arm re-checks hardware support itself (a cached OnceLock
+        // load, negligible next to the kernel work) rather than trusting
+        // callers: `KernelKind::Avx2` is a freely constructible pub enum
+        // variant, so a caller bypassing `active_kernel` must degrade to
+        // scalar, not hit SIGILL.
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: guarded by `hw_kernel()` == Avx2, i.e. runtime
+        // `is_x86_feature_detected!` confirmed AVX2+FMA on this CPU.
+        KernelKind::Avx2 if hw_kernel() == KernelKind::Avx2 => unsafe {
+            tile_avx2(kb, ap, bp, out)
+        },
+        _ => tile_scalar(kb, ap, bp, out),
+    }
+}
+
+/// Portable reference kernel; also the remainder-free non-x86 fallback.
+fn tile_scalar(kb: usize, ap: &[f32], bp: &[f32], out: &mut [f32; MR * NR]) {
+    let mut acc = [[0.0f32; NR]; MR];
+    for l in 0..kb {
+        let arow = &ap[l * MR..l * MR + MR];
+        let brow = &bp[l * NR..l * NR + NR];
+        for (accr, &av) in acc.iter_mut().zip(arow) {
+            for (dst, &bv) in accr.iter_mut().zip(brow) {
+                *dst += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        out[r * NR..(r + 1) * NR].copy_from_slice(accr);
+    }
+}
+
+/// 6×16 AVX2+FMA kernel: twelve YMM accumulators, two FMAs per row per
+/// packed depth step.
+///
+/// # Safety
+/// Requires AVX2 and FMA support on the running CPU ([`hw_kernel`] checks
+/// at runtime before this kind can be dispatched).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn tile_avx2(kb: usize, ap: &[f32], bp: &[f32], out: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::*;
+    let mut acc_lo = [_mm256_setzero_ps(); MR];
+    let mut acc_hi = [_mm256_setzero_ps(); MR];
+    let mut a_ptr = ap.as_ptr();
+    let mut b_ptr = bp.as_ptr();
+    for _ in 0..kb {
+        let b_lo = _mm256_loadu_ps(b_ptr);
+        let b_hi = _mm256_loadu_ps(b_ptr.add(8));
+        for r in 0..MR {
+            let av = _mm256_set1_ps(*a_ptr.add(r));
+            acc_lo[r] = _mm256_fmadd_ps(av, b_lo, acc_lo[r]);
+            acc_hi[r] = _mm256_fmadd_ps(av, b_hi, acc_hi[r]);
+        }
+        a_ptr = a_ptr.add(MR);
+        b_ptr = b_ptr.add(NR);
+    }
+    let out_ptr = out.as_mut_ptr();
+    for r in 0..MR {
+        _mm256_storeu_ps(out_ptr.add(r * NR), acc_lo[r]);
+        _mm256_storeu_ps(out_ptr.add(r * NR + 8), acc_hi[r]);
+    }
+}
+
+// ---- per-thread packing scratch ---------------------------------------------
+
+/// Global count of scratch-buffer capacity growths (any thread). Flat under
+/// steady-state traffic — the zero-alloc invariant benches and tests check.
+static GROW_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+pub fn scratch_grow_events() -> u64 {
+    GROW_EVENTS.load(Ordering::Relaxed)
+}
+
+struct Scratch {
+    /// Packed A panels.
+    ap: Vec<f32>,
+    /// Packed B panels.
+    bp: Vec<f32>,
+    /// Out-of-place transpose buffer (TNN's `Bᵀ`, TN's `Aᵀ`).
+    tr: Vec<f32>,
+}
+
+thread_local! {
+    static SCRATCH: RefCell<Scratch> = const {
+        RefCell::new(Scratch { ap: Vec::new(), bp: Vec::new(), tr: Vec::new() })
+    };
+}
+
+/// Grow `v` to at least `n` elements, counting real (re)allocations.
+pub(crate) fn ensure_len(v: &mut Vec<f32>, n: usize) {
+    if v.len() < n {
+        if n > v.capacity() {
+            GROW_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        v.resize(n, 0.0);
+    }
+}
+
+/// Take this thread's (A, B) panel buffers. Borrows are released before
+/// returning, so a stripe running on the caller thread can take panels
+/// while the same thread's transpose buffer is checked out.
+pub(crate) fn take_panels() -> (Vec<f32>, Vec<f32>) {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        (std::mem::take(&mut s.ap), std::mem::take(&mut s.bp))
+    })
+}
+
+pub(crate) fn put_panels(ap: Vec<f32>, bp: Vec<f32>) {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        s.ap = ap;
+        s.bp = bp;
+    })
+}
+
+pub(crate) fn take_transpose() -> Vec<f32> {
+    SCRATCH.with(|s| std::mem::take(&mut s.borrow_mut().tr))
+}
+
+pub(crate) fn put_transpose(tr: Vec<f32>) {
+    SCRATCH.with(|s| s.borrow_mut().tr = tr)
+}
+
+/// Pre-size this thread's panel buffers (used by [`super::blocked::prewarm`]
+/// to warm every pool worker to the largest panels any shape can need, so
+/// later traffic never grows them).
+pub(crate) fn warm_thread_panels(ap_len: usize, bp_len: usize) {
+    SCRATCH.with(|s| {
+        let mut s = s.borrow_mut();
+        ensure_len(&mut s.ap, ap_len);
+        ensure_len(&mut s.bp, bp_len);
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Unpacked reference for one tile: `Σ_l ap[l][r] · bp[l][j]`.
+    fn tile_ref(kb: usize, ap: &[f32], bp: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; MR * NR];
+        for l in 0..kb {
+            for r in 0..MR {
+                for j in 0..NR {
+                    out[r * NR + j] += ap[l * MR + r] * bp[l * NR + j];
+                }
+            }
+        }
+        out
+    }
+
+    fn panel(seed: u64, len: usize) -> Vec<f32> {
+        let mut rng = crate::util::rng::Xoshiro256pp::new(seed);
+        (0..len).map(|_| rng.next_f32() * 2.0 - 1.0).collect()
+    }
+
+    #[test]
+    fn scalar_tile_matches_unpacked_reference() {
+        for kb in [1usize, 2, 7, 64] {
+            let ap = panel(kb as u64, kb * MR);
+            let bp = panel(kb as u64 ^ 0xB, kb * NR);
+            let mut out = [0.0f32; MR * NR];
+            tile_scalar(kb, &ap, &bp, &mut out);
+            let want = tile_ref(kb, &ap, &bp);
+            crate::testutil::assert_allclose(&out, &want, 1e-5, 1e-5);
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_tile_matches_scalar_tile() {
+        if hw_kernel() != KernelKind::Avx2 {
+            return; // host without AVX2+FMA: nothing to compare
+        }
+        for kb in [1usize, 3, 17, 256] {
+            let ap = panel(kb as u64 + 5, kb * MR);
+            let bp = panel(kb as u64 + 55, kb * NR);
+            let mut simd = [0.0f32; MR * NR];
+            let mut scalar = [0.0f32; MR * NR];
+            unsafe { tile_avx2(kb, &ap, &bp, &mut simd) };
+            tile_scalar(kb, &ap, &bp, &mut scalar);
+            // FMA fuses the rounding step, so allow f32 tolerance.
+            crate::testutil::assert_allclose(&simd, &scalar, 1e-4, 1e-4);
+        }
+    }
+
+    #[test]
+    fn pack_a_layout_and_padding() {
+        // 4×3 block of a 5×4 matrix at origin (1,1): one MR panel, rows
+        // 4..MR zero-padded.
+        let lda = 4;
+        let a: Vec<f32> = (0..20).map(|v| v as f32).collect();
+        let (mb, kb) = (4usize, 3usize);
+        let mut ap = vec![f32::NAN; mb.div_ceil(MR) * MR * kb];
+        pack_a(&a, lda, 1, 1, mb, kb, &mut ap);
+        for l in 0..kb {
+            for r in 0..MR {
+                let want = if r < mb { a[(1 + r) * lda + 1 + l] } else { 0.0 };
+                assert_eq!(ap[l * MR + r], want, "l={l} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_b_layouts_are_bit_identical() {
+        // The same logical k×n operand stored both ways must pack to the
+        // same panels — the bit-identity foundation of NT vs TNN.
+        let (k, n) = (7usize, 21usize);
+        let b_kxn = panel(1, k * n);
+        let mut b_nxk = vec![0.0f32; n * k];
+        for l in 0..k {
+            for j in 0..n {
+                b_nxk[j * k + l] = b_kxn[l * n + j];
+            }
+        }
+        let (l0, j0, kb, nb) = (2usize, 3usize, 4usize, 18usize);
+        let len = nb.div_ceil(NR) * NR * kb;
+        let mut from_kxn = vec![f32::NAN; len];
+        let mut from_nxk = vec![f32::NAN; len];
+        pack_b(&b_kxn, BLayout::KxN, l0, j0, kb, nb, k, n, &mut from_kxn);
+        pack_b(&b_nxk, BLayout::NxK, l0, j0, kb, nb, k, n, &mut from_nxk);
+        assert_eq!(from_kxn, from_nxk);
+        // Spot-check values and padding.
+        assert_eq!(from_kxn[0], b_kxn[l0 * n + j0]);
+        let cols2 = nb - NR; // second panel has nb-NR=2 valid columns
+        assert_eq!(from_kxn[kb * NR + cols2], 0.0, "padding must be zero");
+    }
+
+    #[test]
+    fn env_hatch_parsing() {
+        assert!(!env_disables_simd(None));
+        assert!(!env_disables_simd(Some("".into())));
+        assert!(!env_disables_simd(Some("0".into())));
+        assert!(env_disables_simd(Some("1".into())));
+        assert!(env_disables_simd(Some("yes".into())));
+    }
+
+    #[test]
+    fn forced_kernel_override_applies_per_section() {
+        // Assertions live *inside* the serialized sections: outside them
+        // another test's forced section may be active concurrently.
+        with_forced_kernel(Some(KernelKind::Scalar), || {
+            assert_eq!(active_kernel(), KernelKind::Scalar);
+            assert_eq!(FORCED.load(Ordering::Relaxed), 1);
+        });
+        with_forced_kernel(Some(KernelKind::Avx2), || {
+            assert_eq!(active_kernel(), hw_kernel());
+        });
+        with_forced_kernel(None, || {
+            assert_eq!(FORCED.load(Ordering::Relaxed), 0);
+            assert_eq!(active_kernel(), detected());
+        });
+    }
+
+    #[test]
+    fn available_kernels_always_include_scalar() {
+        let av = available_kernels();
+        assert!(av.contains(&KernelKind::Scalar));
+        assert!(av.len() <= 2);
+    }
+
+    #[test]
+    fn scratch_roundtrip_and_growth_counting() {
+        let (ap, bp) = take_panels();
+        put_panels(ap, bp);
+        let g0 = scratch_grow_events();
+        let mut v = take_transpose();
+        let target = v.capacity().max(16) * 2;
+        ensure_len(&mut v, target);
+        assert!(scratch_grow_events() > g0, "capacity growth must count");
+        // Re-ensuring a satisfied length must not reallocate (the counter
+        // itself is global, so check the buffer identity instead).
+        let (cap, ptr) = (v.capacity(), v.as_ptr());
+        ensure_len(&mut v, target);
+        assert_eq!(v.capacity(), cap);
+        assert_eq!(v.as_ptr(), ptr);
+        put_transpose(v);
+    }
+}

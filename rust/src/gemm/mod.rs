@@ -1,10 +1,13 @@
 //! The GEMM service: algorithm definitions, the naive CPU oracle, and the
-//! execution backends — blocked native CPU kernels, simulated GPU timing,
-//! and real PJRT execution.
+//! execution backends — blocked native CPU kernels (SIMD micro-kernels +
+//! persistent worker pool + zero-alloc packing scratch), simulated GPU
+//! timing, and real PJRT execution.
 
 pub mod blocked;
 pub mod cpu;
+pub mod kernels;
 pub mod native;
+pub mod pool;
 pub mod sim;
 pub mod xla;
 

@@ -104,7 +104,16 @@ impl crate::coordinator::backend::ExecBackend for NativeExecutor {
         NativeExecutor::execute(self, artifact, inputs)
     }
 
-    // Native kernels have no compile step: the default no-op warmup.
+    /// Native kernels have no compile step; warmup instead spawns the
+    /// persistent GEMM pool and pre-sizes every pool thread's packing
+    /// panels, so the first real request pays no thread-spawn or
+    /// panel-allocation cost. (The TNN/TN transpose buffer is
+    /// shape-sized, so it still warms on each shape's first such
+    /// request.)
+    fn warmup(&self, _names: &[&str]) -> anyhow::Result<()> {
+        blocked::prewarm();
+        Ok(())
+    }
 
     fn name(&self) -> String {
         "native".into()
@@ -119,22 +128,26 @@ mod tests {
 
     #[test]
     fn executes_all_gemm_kinds() {
-        let nx = NativeExecutor;
-        let a = Matrix::random(16, 24, 1);
-        let b_nt = Matrix::random(8, 24, 2);
-        let b_nn = Matrix::random(24, 8, 3);
+        // Kernel pinned: the NT≡TNN assertion needs both calls on the same
+        // micro-kernel (see gemm::kernels::with_forced_kernel).
+        crate::gemm::kernels::with_forced_kernel(None, || {
+            let nx = NativeExecutor;
+            let a = Matrix::random(16, 24, 1);
+            let b_nt = Matrix::random(8, 24, 2);
+            let b_nn = Matrix::random(24, 8, 3);
 
-        let nt = nx.execute("nt_16x8x24", &[&a, &b_nt]).unwrap();
-        assert_allclose(&nt[0].data, &cpu::matmul_nt(&a, &b_nt).data, 1e-4, 1e-4);
+            let nt = nx.execute("nt_16x8x24", &[&a, &b_nt]).unwrap();
+            assert_allclose(&nt[0].data, &cpu::matmul_nt(&a, &b_nt).data, 1e-4, 1e-4);
 
-        let tnn = nx.execute("tnn_16x8x24", &[&a, &b_nt]).unwrap();
-        assert_eq!(tnn[0].data, nt[0].data, "blocked NT and TNN agree exactly");
+            let tnn = nx.execute("tnn_16x8x24", &[&a, &b_nt]).unwrap();
+            assert_eq!(tnn[0].data, nt[0].data, "blocked NT and TNN agree exactly");
 
-        let nn = nx.execute("nn_16x8x24", &[&a, &b_nn]).unwrap();
-        assert_allclose(&nn[0].data, &cpu::matmul_nn(&a, &b_nn).data, 1e-4, 1e-4);
+            let nn = nx.execute("nn_16x8x24", &[&a, &b_nn]).unwrap();
+            assert_allclose(&nn[0].data, &cpu::matmul_nn(&a, &b_nn).data, 1e-4, 1e-4);
 
-        let t = nx.execute("transpose_16x24", &[&a]).unwrap();
-        assert_eq!(t[0].data, a.transpose().data);
+            let t = nx.execute("transpose_16x24", &[&a]).unwrap();
+            assert_eq!(t[0].data, a.transpose().data);
+        });
     }
 
     #[test]

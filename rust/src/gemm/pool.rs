@@ -1,0 +1,435 @@
+//! Persistent GEMM worker pool: parked threads that execute row-stripe
+//! tasks, replacing the per-call `std::thread::scope` spawns the blocked
+//! kernels used to pay (~100 µs per call on small GEMMs).
+//!
+//! # Design
+//!
+//! * **Lazy global** — [`get`] spawns `available_parallelism − 1` workers
+//!   on first use (the dispatching caller is the final lane, so total
+//!   parallelism equals the core count). Workers park on a condvar and
+//!   never exit; there is deliberately no shutdown — the pool lives for
+//!   the process.
+//! * **Caller participates** — [`Pool::run`] enqueues a task set, wakes
+//!   the workers, then the caller itself loops claiming task indices like
+//!   any worker and finally waits for completion. Because the caller
+//!   always makes progress on its own dispatch, a saturated or even
+//!   zero-worker pool degrades to inline execution — concurrent callers
+//!   (e.g. several engine workers) can never deadlock each other.
+//! * **Work claiming** — task indices are claimed from a shared atomic
+//!   counter (no per-task queue), and every in-flight dispatch sits in one
+//!   FIFO so idle workers drain older dispatches first. Broadcast
+//!   dispatches ([`Pool::broadcast`]) instead carry a claimed-flag per
+//!   worker, guaranteeing exactly-once-per-worker execution (used to
+//!   pre-size thread-local scratch).
+//! * **Measured dispatch overhead** — init times a handful of no-op
+//!   dispatches and records the best ([`Pool::dispatch_overhead_ns`]);
+//!   `blocked::auto_threads` feeds it into a cost model instead of the old
+//!   hard-coded 2-MFLOP cliff.
+//! * **Panic containment** — worker tasks run under `catch_unwind`; a
+//!   panicking task marks the dispatch and the *caller* re-panics after
+//!   completion, so a poisoned stripe can't wedge the pool or silently
+//!   produce partial output.
+//!
+//! # Soundness of the lifetime erasure
+//!
+//! `run`/`broadcast` smuggle a `&dyn Fn` across threads as a raw pointer.
+//! This is sound because the calls do not return until `done == total`,
+//! every dereference happens before the task's `done` increment, and a
+//! drained dispatch (claim counter ≥ total) is never dereferenced again —
+//! only pruned. The closure therefore strictly outlives every use.
+
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Lifetime-erased pointer to a caller-owned task closure (see the module
+/// docs for why this is sound).
+struct TaskPtr(*const (dyn Fn(usize) + Sync));
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+impl TaskPtr {
+    /// # Safety
+    /// The dispatch owning this pointer must not have completed (the
+    /// caller is still blocked in `run`/`broadcast`).
+    unsafe fn call(&self, i: usize) {
+        (*self.0)(i)
+    }
+}
+
+/// How a dispatch's tasks are claimed.
+enum Work {
+    /// Anyone claims the next index from the counter.
+    Shared(AtomicUsize),
+    /// Task `w` runs on pool worker `w` exactly once (caller excluded).
+    PerWorker(Vec<AtomicBool>),
+}
+
+struct Dispatch {
+    task: TaskPtr,
+    total: usize,
+    work: Work,
+    done: AtomicUsize,
+    done_lock: Mutex<()>,
+    done_cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Dispatch {
+    fn new(task: TaskPtr, total: usize, work: Work) -> Dispatch {
+        Dispatch {
+            task,
+            total,
+            work,
+            done: AtomicUsize::new(0),
+            done_lock: Mutex::new(()),
+            done_cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.done.load(Ordering::Acquire) >= self.total
+    }
+
+    /// Whether worker `w` could still claim work here.
+    fn has_work_for(&self, w: usize) -> bool {
+        match &self.work {
+            Work::Shared(next) => next.load(Ordering::Relaxed) < self.total,
+            Work::PerWorker(claimed) => w < claimed.len() && !claimed[w].load(Ordering::Relaxed),
+        }
+    }
+
+    fn mark_done(&self) {
+        if self.done.fetch_add(1, Ordering::AcqRel) + 1 == self.total {
+            // Taking the lock orders this notify after any waiter's
+            // check-then-wait, so the wakeup cannot be lost.
+            let _g = self.done_lock.lock().unwrap_or_else(|e| e.into_inner());
+            self.done_cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut g = self.done_lock.lock().unwrap_or_else(|e| e.into_inner());
+        while self.done.load(Ordering::Acquire) < self.total {
+            g = self.done_cv.wait(g).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    fn run_one(&self, i: usize) {
+        if catch_unwind(AssertUnwindSafe(|| unsafe { self.task.call(i) })).is_err() {
+            self.panicked.store(true, Ordering::Release);
+        }
+        self.mark_done();
+    }
+
+    /// Claim-and-run shared tasks until the counter drains; returns how
+    /// many this thread executed.
+    fn run_shared(&self, next: &AtomicUsize) -> u64 {
+        let mut ran = 0u64;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= self.total {
+                return ran;
+            }
+            self.run_one(i);
+            ran += 1;
+        }
+    }
+}
+
+struct PoolState {
+    queue: VecDeque<Arc<Dispatch>>,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    work_cv: Condvar,
+    worker_tasks: AtomicU64,
+}
+
+impl Shared {
+    fn prune_finished(state: &mut PoolState) {
+        while let Some(front) = state.queue.front() {
+            if front.finished() {
+                state.queue.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+}
+
+fn worker_main(shared: Arc<Shared>, idx: usize) {
+    loop {
+        let d: Arc<Dispatch> = {
+            let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
+            loop {
+                Shared::prune_finished(&mut st);
+                if let Some(d) = st.queue.iter().find(|d| d.has_work_for(idx)).cloned() {
+                    break d;
+                }
+                st = shared.work_cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        match &d.work {
+            Work::Shared(next) => {
+                let ran = d.run_shared(next);
+                shared.worker_tasks.fetch_add(ran, Ordering::Relaxed);
+            }
+            Work::PerWorker(claimed) => {
+                if idx < claimed.len() && !claimed[idx].swap(true, Ordering::AcqRel) {
+                    d.run_one(idx);
+                    shared.worker_tasks.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+    }
+}
+
+/// Point-in-time pool counters (see [`Pool::stats`]).
+#[derive(Debug, Clone, Copy)]
+pub struct PoolStats {
+    /// Parked worker threads (spawned once, never replaced).
+    pub workers: usize,
+    /// Workers + the participating caller lane.
+    pub parallelism: usize,
+    /// Total threads ever spawned by the pool — equals `workers` for the
+    /// process lifetime; tests assert it never grows after warmup.
+    pub threads_spawned: u64,
+    /// `run`/`broadcast` calls that actually enqueued a dispatch.
+    pub dispatches: u64,
+    /// Tasks executed on pool workers (excludes the caller's own share).
+    pub worker_tasks: u64,
+    /// Best-of-N no-op dispatch round-trip measured at init.
+    pub dispatch_overhead_ns: u64,
+}
+
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: usize,
+    dispatch_overhead_ns: u64,
+    dispatches: AtomicU64,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+
+/// The process-wide pool, spawned (and its dispatch overhead measured) on
+/// first use.
+pub fn get() -> &'static Pool {
+    POOL.get_or_init(Pool::new)
+}
+
+impl Pool {
+    fn new() -> Pool {
+        let target = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .saturating_sub(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState { queue: VecDeque::new() }),
+            work_cv: Condvar::new(),
+            worker_tasks: AtomicU64::new(0),
+        });
+        let mut workers = 0usize;
+        for idx in 0..target {
+            let sh = Arc::clone(&shared);
+            // Worker indices must stay contiguous (broadcast claims are
+            // indexed), so stop at the first failed spawn.
+            match std::thread::Builder::new()
+                .name(format!("gemm-pool-{idx}"))
+                .spawn(move || worker_main(sh, idx))
+            {
+                Ok(_) => workers += 1,
+                Err(_) => break,
+            }
+        }
+        let mut pool = Pool {
+            shared,
+            workers,
+            dispatch_overhead_ns: 0,
+            dispatches: AtomicU64::new(0),
+        };
+        // Measure the no-op dispatch round-trip: the first probes also wake
+        // the freshly spawned workers, so take the best of several.
+        let mut best = u64::MAX;
+        if pool.workers > 0 {
+            for _ in 0..8 {
+                let t0 = Instant::now();
+                pool.run(pool.workers + 1, &|_| {});
+                best = best.min(t0.elapsed().as_nanos() as u64);
+            }
+        }
+        pool.dispatch_overhead_ns = if best == u64::MAX { 1_000 } else { best.max(1) };
+        pool
+    }
+
+    /// Workers + the participating caller lane.
+    pub fn parallelism(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Best-of-N no-op dispatch round-trip measured at init — the per-call
+    /// price of handing work to the pool, fed into `auto_threads`.
+    pub fn dispatch_overhead_ns(&self) -> u64 {
+        self.dispatch_overhead_ns
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        PoolStats {
+            workers: self.workers,
+            parallelism: self.parallelism(),
+            threads_spawned: self.workers as u64,
+            dispatches: self.dispatches.load(Ordering::Relaxed),
+            worker_tasks: self.shared.worker_tasks.load(Ordering::Relaxed),
+            dispatch_overhead_ns: self.dispatch_overhead_ns,
+        }
+    }
+
+    /// Execute `f(0..total)` across the pool (caller included), returning
+    /// once every task has finished. Tasks must be independent; panics in
+    /// any task re-panic here after the dispatch drains.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if self.workers == 0 || total == 1 {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let d = Arc::new(Dispatch::new(
+            TaskPtr(f as *const (dyn Fn(usize) + Sync)),
+            total,
+            Work::Shared(AtomicUsize::new(0)),
+        ));
+        self.enqueue(&d);
+        if let Work::Shared(next) = &d.work {
+            d.run_shared(next);
+        }
+        self.finish(&d);
+    }
+
+    /// Run `f` exactly once on every pool worker (not the caller), e.g. to
+    /// pre-size thread-local scratch. No-op with zero workers.
+    pub fn broadcast(&self, f: &(dyn Fn() + Sync)) {
+        if self.workers == 0 {
+            return;
+        }
+        self.dispatches.fetch_add(1, Ordering::Relaxed);
+        let wrap = |_: usize| f();
+        let wrap_ref: &(dyn Fn(usize) + Sync) = &wrap;
+        let claimed: Vec<AtomicBool> = (0..self.workers).map(|_| AtomicBool::new(false)).collect();
+        let d = Arc::new(Dispatch::new(
+            TaskPtr(wrap_ref as *const (dyn Fn(usize) + Sync)),
+            self.workers,
+            Work::PerWorker(claimed),
+        ));
+        self.enqueue(&d);
+        self.finish(&d);
+    }
+
+    fn enqueue(&self, d: &Arc<Dispatch>) {
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        st.queue.push_back(Arc::clone(d));
+        drop(st);
+        self.shared.work_cv.notify_all();
+    }
+
+    fn finish(&self, d: &Arc<Dispatch>) {
+        d.wait();
+        let mut st = self.shared.state.lock().unwrap_or_else(|e| e.into_inner());
+        Shared::prune_finished(&mut st);
+        drop(st);
+        if d.panicked.load(Ordering::Acquire) {
+            panic!("gemm pool task panicked");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_executes_every_task_exactly_once() {
+        let pool = get();
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn run_handles_degenerate_sizes() {
+        let pool = get();
+        pool.run(0, &|_| panic!("no tasks to run"));
+        let ran = AtomicUsize::new(0);
+        pool.run(1, &|i| {
+            assert_eq!(i, 0);
+            ran.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(ran.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_dispatches_from_many_callers() {
+        let pool = get();
+        let total = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..6 {
+                s.spawn(|| {
+                    for _ in 0..20 {
+                        pool.run(8, &|_| {
+                            total.fetch_add(1, Ordering::Relaxed);
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 6 * 20 * 8);
+    }
+
+    #[test]
+    fn broadcast_runs_once_per_worker() {
+        let pool = get();
+        let hits = AtomicUsize::new(0);
+        pool.broadcast(&|| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), pool.stats().workers);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_the_caller() {
+        let pool = get();
+        if pool.workers == 0 {
+            return; // inline path: the panic propagates natively
+        }
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(pool.parallelism() + 2, &|i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(res.is_err(), "caller must observe the task panic");
+    }
+
+    #[test]
+    fn overhead_and_stats_are_sane() {
+        let pool = get();
+        let s = pool.stats();
+        assert_eq!(s.parallelism, s.workers + 1);
+        assert!(s.dispatch_overhead_ns >= 1);
+        let avail = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+        assert!(s.parallelism <= avail.max(1), "pool must respect available_parallelism");
+    }
+}

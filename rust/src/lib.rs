@@ -13,7 +13,9 @@
 //!   service built as a decision layer over a pluggable execution layer —
 //!   a sharded engine worker pool ([`coordinator::Engine`]) whose workers
 //!   each own an [`coordinator::ExecBackend`] (PJRT runtime, native
-//!   blocked CPU kernels, or the deterministic GPU-timing simulator) and
+//!   blocked CPU kernels — SIMD micro-kernels fed by packed panels and
+//!   striped across a persistent worker pool ([`gemm::kernels`],
+//!   [`gemm::pool`]) — or the deterministic GPU-timing simulator) and
 //!   micro-batch same-artifact jobs and steal work when idle — plus the
 //!   online adaptive-selection loop ([`online`]: runtime telemetry,
 //!   shadow probing, drift detection, background GBDT retraining with

@@ -1,0 +1,142 @@
+//! Hygiene tests for the persistent GEMM worker pool and the zero-alloc
+//! packing scratch: sizing, thread reuse, concurrent sharing (raw callers
+//! and engine workers), and steady-state allocation-freedom.
+//!
+//! The pool and the scratch growth counter are process-global, so every
+//! test serializes on one gate mutex — counter deltas are then attributable
+//! to the test that measured them.
+
+use mtnn::coordinator::{Engine, EngineConfig};
+use mtnn::gemm::cpu::{self, Matrix};
+use mtnn::gemm::{blocked, kernels, pool};
+use mtnn::testutil::assert_allclose;
+use std::sync::{Mutex, MutexGuard};
+
+static GATE: Mutex<()> = Mutex::new(());
+
+fn gate() -> MutexGuard<'static, ()> {
+    GATE.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn pool_size_respects_available_parallelism() {
+    let _g = gate();
+    let s = pool::get().stats();
+    let avail = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+    assert!(
+        s.parallelism <= avail.max(1),
+        "pool parallelism {} exceeds available_parallelism {avail}",
+        s.parallelism
+    );
+    assert_eq!(s.parallelism, s.workers + 1, "caller is the extra lane");
+    assert_eq!(s.threads_spawned, s.workers as u64);
+}
+
+#[test]
+fn repeated_gemms_spawn_zero_new_threads_after_warmup() {
+    let _g = gate();
+    blocked::prewarm();
+    let before = pool::get().stats();
+    let a = Matrix::random(256, 256, 1);
+    let b = Matrix::random(256, 256, 2);
+    for _ in 0..50 {
+        blocked::matmul_nt(&a, &b);
+    }
+    let after = pool::get().stats();
+    assert_eq!(
+        after.threads_spawned, before.threads_spawned,
+        "steady-state GEMMs must reuse parked workers, not spawn"
+    );
+    if after.parallelism > 1 {
+        assert!(
+            after.dispatches > before.dispatches,
+            "256^3 should be large enough to engage the pool"
+        );
+        assert!(
+            after.worker_tasks > before.worker_tasks,
+            "parked workers should have executed stripes"
+        );
+    }
+}
+
+#[test]
+fn concurrent_callers_share_the_pool_without_deadlock() {
+    let _g = gate();
+    blocked::prewarm();
+    let a = Matrix::random(160, 192, 3);
+    let b = Matrix::random(128, 192, 4);
+    let expect = cpu::matmul_nt(&a, &b);
+    // 8 caller threads — more than the pool has workers — all dispatching
+    // simultaneously. Caller participation guarantees progress even with
+    // every worker busy; this must complete and stay correct.
+    std::thread::scope(|s| {
+        for _ in 0..8 {
+            s.spawn(|| {
+                for _ in 0..6 {
+                    let got = blocked::matmul_nt(&a, &b);
+                    assert_allclose(&got.data, &expect.data, 1e-4, 1e-4);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn engine_workers_share_the_pool_without_deadlock() {
+    let _g = gate();
+    // Router-style traffic: multiple engine workers execute native GEMMs
+    // (each internally pool-threaded) while clients hammer them.
+    let engine = Engine::native_pool(EngineConfig {
+        workers: 4,
+        queue_depth: 16,
+        ..EngineConfig::default()
+    })
+    .expect("native pool engine");
+    let handle = engine.handle();
+    handle.warmup(&["nt_192x96x160".into()]).expect("warmup");
+    let a = Matrix::random(192, 160, 5);
+    let b = Matrix::random(96, 160, 6);
+    let expect = cpu::matmul_nt(&a, &b);
+    std::thread::scope(|s| {
+        for _ in 0..6 {
+            let handle = handle.clone();
+            let (a, b, expect) = (&a, &b, &expect);
+            s.spawn(move || {
+                for _ in 0..4 {
+                    let outs = handle
+                        .run("nt_192x96x160", vec![a.clone(), b.clone()])
+                        .expect("engine run");
+                    assert_allclose(&outs[0].data, &expect.data, 1e-4, 1e-4);
+                }
+            });
+        }
+    });
+    engine.shutdown();
+}
+
+#[test]
+fn steady_state_gemms_do_no_scratch_allocation() {
+    let _g = gate();
+    blocked::prewarm();
+    let a = Matrix::random(256, 256, 7);
+    let b = Matrix::random(256, 256, 8);
+    // Warm every buffer this traffic can touch: pool-thread panels are
+    // pre-sized to their maximum by prewarm; the caller-side transpose
+    // buffer warms on the first TNN call of the shape.
+    for _ in 0..4 {
+        blocked::matmul_nt(&a, &b);
+        blocked::matmul_tnn(&a, &b);
+    }
+    let g0 = kernels::scratch_grow_events();
+    for _ in 0..50 {
+        blocked::matmul_nt(&a, &b);
+        blocked::matmul_tnn(&a, &b);
+    }
+    assert_eq!(
+        kernels::scratch_grow_events() - g0,
+        0,
+        "steady-state serve traffic must not grow packing/transpose scratch"
+    );
+}

@@ -5,6 +5,7 @@
 use mtnn::dataset::collect_paper_dataset;
 use mtnn::gemm::blocked;
 use mtnn::gemm::cpu::{matmul_nn, matmul_nt, matmul_tnn, Matrix};
+use mtnn::gemm::kernels::{self, KernelKind};
 use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080, PAPER_GPUS, TITANX};
 use mtnn::selector::cache::CachedSelector;
@@ -152,6 +153,82 @@ fn prop_blocked_backend_matches_oracle() {
         );
         assert_eq!(blocked::transpose(&b_nt).data, b_nt.transpose().data);
     });
+}
+
+#[test]
+fn prop_kernel_paths_match_oracle_across_remainder_sweep() {
+    // Every available micro-kernel (scalar reference + SIMD when the host
+    // dispatches it) across the full remainder space: m and n sweep
+    // 1..=MR·3+1 exhaustively (0..3 whole A panels plus every partial),
+    // n additionally hits the NR boundary cases, k covers primes and the
+    // sweep limit. On every shape NT and TNN must stay *bit-identical* —
+    // the invariant that survives the SIMD rewrite — and match the naive
+    // oracle within f32 tolerance.
+    let lim = kernels::MR * 3 + 1;
+    let mut n_vals: Vec<usize> = (1..=lim).collect();
+    n_vals.extend([kernels::NR, kernels::NR + 1, 2 * kernels::NR + 1]);
+    for kind in kernels::available_kernels() {
+        kernels::with_forced_kernel(Some(kind), || {
+            for m in 1..=lim {
+                for &n in &n_vals {
+                    for k in [1usize, 2, 3, 5, 7, 13, lim] {
+                        let a = Matrix::random(m, k, (m * 1000 + n * 10 + k) as u64);
+                        let b = Matrix::random(n, k, (n * 777 + k) as u64);
+                        let nt = blocked::matmul_nt(&a, &b);
+                        let tnn = blocked::matmul_tnn(&a, &b);
+                        assert_eq!(
+                            nt.data,
+                            tnn.data,
+                            "NT/TNN bit-identity broke under the {} kernel at {m}x{n}x{k}",
+                            kind.name()
+                        );
+                        assert_allclose(&nt.data, &matmul_nt(&a, &b).data, 1e-4, 1e-4);
+                    }
+                }
+            }
+        });
+    }
+}
+
+#[test]
+fn prop_kernel_paths_match_oracle_beyond_cache_blocks() {
+    // A span exceeding MC/KC/NC in every dimension, so all block loops
+    // (and the pool-threaded stripes) iterate — on every kernel path.
+    let (m, n, k) = (2 * blocked::MC + 5, blocked::NC + 7, blocked::KC + 9);
+    let a = Matrix::random(m, k, 31);
+    let b = Matrix::random(n, k, 32);
+    let want = matmul_nt(&a, &b);
+    for kind in kernels::available_kernels() {
+        kernels::with_forced_kernel(Some(kind), || {
+            let nt = blocked::matmul_nt(&a, &b);
+            let tnn = blocked::matmul_tnn(&a, &b);
+            assert_eq!(
+                nt.data,
+                tnn.data,
+                "NT/TNN bit-identity broke under the {} kernel",
+                kind.name()
+            );
+            assert_allclose(&nt.data, &want.data, 2e-3, 2e-3);
+        });
+    }
+}
+
+#[test]
+fn prop_simd_and_scalar_paths_agree() {
+    // The two kernel implementations round differently (FMA fuses the
+    // multiply-add), but must agree within f32 tolerance on identical
+    // inputs. Trivially passes on scalar-only hosts and under
+    // MTNN_NO_SIMD=1, where only one path exists.
+    let kinds = kernels::available_kernels();
+    if kinds.len() < 2 {
+        return;
+    }
+    let a = Matrix::random(67, 129, 41);
+    let b = Matrix::random(45, 129, 42);
+    let scalar =
+        kernels::with_forced_kernel(Some(KernelKind::Scalar), || blocked::matmul_nt(&a, &b));
+    let simd = kernels::with_forced_kernel(Some(KernelKind::Avx2), || blocked::matmul_nt(&a, &b));
+    assert_allclose(&simd.data, &scalar.data, 1e-4, 1e-4);
 }
 
 #[test]

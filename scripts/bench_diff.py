@@ -1,0 +1,75 @@
+#!/usr/bin/env python3
+"""Soft diff between two BENCH_hotpath.json trajectory files.
+
+Usage: bench_diff.py PREV.json NEW.json
+
+Joins rows by (name, shape, backend), prints per-row deltas, and flags
+regressions above a threshold with a warning. Always exits 0 — this is a
+trajectory report, not a gate (CI runners are too noisy to block on).
+"""
+import json
+import sys
+
+REGRESSION_WARN_PCT = 25.0
+# Lower is better for per-op latencies; higher is better for throughput.
+VALUE_KEYS = (("ns_per_op", False), ("req_per_s", True))
+
+
+def load_rows(path):
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}")
+        return {}
+    rows = {}
+    for row in doc.get("entries", []):
+        key = (row.get("name"), row.get("shape", ""), row.get("backend", ""))
+        rows[key] = row
+    return rows
+
+
+def value_of(row):
+    for key, higher_is_better in VALUE_KEYS:
+        if key in row:
+            return key, float(row[key]), higher_is_better
+    return None, None, None
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__.strip())
+        return
+    prev, new = load_rows(sys.argv[1]), load_rows(sys.argv[2])
+    if not prev:
+        print("bench_diff: no previous rows (first run or placeholder baseline) — nothing to compare")
+    warnings = 0
+    for key, row in sorted(new.items(), key=lambda kv: kv[0][0] or ""):
+        name = " ".join(p for p in key if p)
+        metric, val, higher_is_better = value_of(row)
+        if metric is None:
+            print(f"  {name}: (no latency/throughput metric)")
+            continue
+        old = prev.get(key)
+        if not old or metric not in old:
+            print(f"  {name}: {metric}={val:.1f} (new row)")
+            continue
+        old_val = float(old[metric])
+        if old_val == 0:
+            continue
+        delta_pct = (val - old_val) / old_val * 100.0
+        regressed = delta_pct > REGRESSION_WARN_PCT if not higher_is_better else -delta_pct > REGRESSION_WARN_PCT
+        mark = "  ⚠ REGRESSION?" if regressed else ""
+        warnings += regressed
+        print(f"  {name}: {metric} {old_val:.1f} → {val:.1f} ({delta_pct:+.1f}%){mark}")
+    dropped = sorted(set(prev) - set(new))
+    for key in dropped:
+        print(f"  {' '.join(p for p in key if p)}: dropped (present in previous run only)")
+    if warnings:
+        print(f"bench_diff: {warnings} possible regression(s) beyond {REGRESSION_WARN_PCT:.0f}% — soft warning, not a gate")
+    else:
+        print("bench_diff: no regressions beyond threshold")
+
+
+if __name__ == "__main__":
+    main()
