@@ -3,7 +3,9 @@
 //! routing decisions, predictor latency (paper: 0.005 ms), GBDT train time
 //! (paper: 7 ms), GEMM serving through the coordinator (PJRT when the
 //! artifact catalog exists, the native blocked backend otherwise), and
-//! the sharded engine pool vs a single worker under concurrent clients.
+//! the sharded engine pool vs a single worker under concurrent clients,
+//! and the online adaptive probe scheduler (decision cost + probe
+//! overhead under stable vs drifting traffic).
 //! Run: `cargo bench --bench perf_hotpath`.
 //!
 //! Besides the human report (`results/perf_hotpath.txt`), every row is
@@ -20,7 +22,9 @@ use mtnn::gemm::{blocked, cpu, pool, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
+use mtnn::online::{LiveSelector, OnlineConfig, OnlineHub};
 use mtnn::runtime::Runtime;
+use mtnn::selector::cache::DecisionCache;
 use mtnn::selector::{features, Selector};
 use mtnn::util::bench::{bench, bench_batched, BenchResult};
 use mtnn::util::json::Json;
@@ -394,6 +398,61 @@ fn main() {
             .set("shape", "96x96x96")
             .set("backend", "native"),
     );
+
+    // 9. Online adaptive probe scheduler: the per-request decision cost on
+    //    the serving hot path, and the probe *overhead* (fraction of
+    //    requests that get doubled by a shadow probe) under stable vs
+    //    drifting traffic — the adaptive schedule should beat the old
+    //    fixed 1-in-16 overhead when stable and densify well past it when
+    //    drifting.
+    {
+        let mk_hub = || {
+            OnlineHub::new(
+                OnlineConfig::default(), // min 4 / max 64 / epsilon 0.02
+                std::sync::Arc::new(LiveSelector::new(Selector::train_default(&records))),
+                std::sync::Arc::new(DecisionCache::default()),
+                std::sync::Arc::new(mtnn::coordinator::CoordinatorMetrics::default()),
+            )
+        };
+        let hub = mk_hub();
+        let r = bench_batched("online.should_probe (adaptive, per request)", 10, 50, 1000, || {
+            hub.should_probe(GTX1080.id, 256, 256, 256)
+        });
+        report.push_str(&format!("{}\n", r.report()));
+        rows.push(json_row("online.should_probe", r.mean_ns()));
+
+        let probe_fraction = |mispredict: bool| -> f64 {
+            let hub = mk_hub();
+            let requests = 10_000u64;
+            for _ in 0..requests {
+                if hub.should_probe(GTX1080.id, 256, 256, 256) {
+                    let (nt, tnn) = if mispredict { (90.0, 40.0) } else { (10.0, 40.0) };
+                    hub.record_probe(&GTX1080, 256, 256, 256, 1, nt, tnn);
+                }
+            }
+            hub.metrics.snapshot().shadow_probes as f64 / requests as f64
+        };
+        let stable = probe_fraction(false);
+        let drifting = probe_fraction(true);
+        report.push_str(&format!(
+            "online probe overhead (10k requests, one bucket): stable {:.2}% | drifting {:.2}% \
+             | fixed 1-in-16 baseline 6.25%\n",
+            stable * 100.0,
+            drifting * 100.0
+        ));
+        rows.push(
+            Json::obj()
+                .set("name", "online.probe_overhead.stable")
+                .set("probe_fraction", stable)
+                .set("fixed_1_in_16_baseline", 1.0 / 16.0),
+        );
+        rows.push(
+            Json::obj()
+                .set("name", "online.probe_overhead.drifting")
+                .set("probe_fraction", drifting)
+                .set("fixed_1_in_16_baseline", 1.0 / 16.0),
+        );
+    }
 
     emit("perf_hotpath.txt", &report);
     emit(

@@ -153,6 +153,17 @@ pub struct CoordinatorMetrics {
     pub online_dropped: AtomicU64,
     /// Shadow probes served (both algorithms executed and timed).
     pub shadow_probes: AtomicU64,
+    /// Probe decisions fired by the adaptive drift-interpolated schedule.
+    pub probes_scheduled: AtomicU64,
+    /// Probe decisions fired by the epsilon-greedy bandit floor (the
+    /// schedule had declined the request).
+    pub probes_bandit: AtomicU64,
+    /// Gauge: the effective probe interval (1-in-N) in force when the
+    /// adaptive schedule last fired a probe; 0 until the first scheduled
+    /// probe. Written only on scheduled fires, so declined hot-path
+    /// requests never dirty this cacheline. Per-bucket intervals differ —
+    /// this reports the last-probed bucket's, not a fleet aggregate.
+    pub probe_interval_gauge: AtomicU64,
     /// Shadow probes whose measured winner contradicted the prediction.
     pub shadow_mispredicts: AtomicU64,
     /// Background retrain attempts.
@@ -182,6 +193,18 @@ pub struct MetricsSnapshot {
     pub online_samples: u64,
     pub online_dropped: u64,
     pub shadow_probes: u64,
+    /// Probe decisions from the adaptive schedule vs the bandit floor.
+    pub probes_scheduled: u64,
+    pub probes_bandit: u64,
+    /// The effective probe interval (1-in-N) at the last *scheduled*
+    /// probe (0 until one fires). Per-bucket intervals differ; this is
+    /// the last-probed bucket's.
+    pub probe_interval: u64,
+    /// `1 / probe_interval` — the inverse of the last scheduled interval.
+    /// NOT the realized probe fraction: it excludes the epsilon bandit
+    /// floor and per-bucket variation (compute `shadow_probes / requests`
+    /// for that, as `serve_gemm --online` does).
+    pub probe_rate: f64,
     pub shadow_mispredicts: u64,
     /// `shadow_mispredicts / shadow_probes` (NaN when no probes ran).
     pub mispredict_rate: f64,
@@ -267,6 +290,7 @@ impl CoordinatorMetrics {
             .unwrap_or((f64::NAN, 0));
         let shadow_probes = self.shadow_probes.load(Ordering::Relaxed);
         let shadow_mispredicts = self.shadow_mispredicts.load(Ordering::Relaxed);
+        let probe_interval = self.probe_interval_gauge.load(Ordering::Relaxed);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -279,6 +303,14 @@ impl CoordinatorMetrics {
             online_samples: self.online_samples.load(Ordering::Relaxed),
             online_dropped: self.online_dropped.load(Ordering::Relaxed),
             shadow_probes,
+            probes_scheduled: self.probes_scheduled.load(Ordering::Relaxed),
+            probes_bandit: self.probes_bandit.load(Ordering::Relaxed),
+            probe_interval,
+            probe_rate: if probe_interval == 0 {
+                0.0
+            } else {
+                1.0 / probe_interval as f64
+            },
             shadow_mispredicts,
             mispredict_rate: if shadow_probes == 0 {
                 f64::NAN
@@ -330,11 +362,15 @@ impl MetricsSnapshot {
                 "n/a".to_string() // no probes yet — don't print NaN%
             };
             s.push_str(&format!(
-                " | online samples={} dropped={} probes={} mispredicts={} rate={rate} \
+                " | online samples={} dropped={} probes={} (sched={} bandit={}) \
+                 probe_interval={} mispredicts={} rate={rate} \
                  retrains={} promotions={} rollbacks={}",
                 self.online_samples,
                 self.online_dropped,
                 self.shadow_probes,
+                self.probes_scheduled,
+                self.probes_bandit,
+                self.probe_interval,
                 self.shadow_mispredicts,
                 self.retrains,
                 self.promotions,
@@ -466,16 +502,26 @@ mod tests {
             "offline reports stay terse"
         );
         m.shadow_probes.fetch_add(4, Ordering::Relaxed);
+        m.probes_scheduled.fetch_add(3, Ordering::Relaxed);
+        m.probes_bandit.fetch_add(1, Ordering::Relaxed);
+        m.probe_interval_gauge.store(16, Ordering::Relaxed);
         m.shadow_mispredicts.fetch_add(1, Ordering::Relaxed);
         m.retrains.fetch_add(2, Ordering::Relaxed);
         m.promotions.fetch_add(1, Ordering::Relaxed);
         m.rollbacks.fetch_add(1, Ordering::Relaxed);
         let s = m.snapshot();
         assert_eq!(s.shadow_probes, 4);
+        assert_eq!(s.probes_scheduled, 3);
+        assert_eq!(s.probes_bandit, 1);
+        assert_eq!(s.probe_interval, 16);
+        assert!((s.probe_rate - 1.0 / 16.0).abs() < 1e-12);
         assert!((s.mispredict_rate - 0.25).abs() < 1e-12);
         let r = s.render();
         for needle in [
             "probes=4",
+            "sched=3",
+            "bandit=1",
+            "probe_interval=16",
             "mispredicts=1",
             "rate=25.0%",
             "retrains=2",
@@ -484,6 +530,13 @@ mod tests {
         ] {
             assert!(r.contains(needle), "missing {needle} in {r}");
         }
+    }
+
+    #[test]
+    fn probe_rate_is_zero_before_any_online_request() {
+        let s = CoordinatorMetrics::default().snapshot();
+        assert_eq!(s.probe_interval, 0);
+        assert_eq!(s.probe_rate, 0.0);
     }
 
     #[test]

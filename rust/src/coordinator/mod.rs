@@ -38,20 +38,24 @@
 //! **Online adaptive selection** (`crate::online`, enabled via
 //! [`RouterConfig::online`]): the selector lives behind a hot-swappable
 //! generation-counted pointer; every execution's measured latency is
-//! recorded into a lock-free sample ring; a deterministic 1-in-N slice of
-//! predicted requests is shadow-probed (both algorithms run, the measured
-//! winner becomes a labeled example); a per-shape-bucket drift tracker
-//! trips a background trainer that refits the GBDT and promotes it only
-//! if it beats the incumbent on held-out data, atomically invalidating
-//! the decision cache on swap.
+//! recorded into a lock-free sample ring; an adaptive slice of predicted
+//! requests is shadow-probed (both algorithms run, the measured winner
+//! becomes a labeled example) — densely for shape buckets whose decayed
+//! mispredict window is drifting, sparsely for stable ones, with an
+//! epsilon-greedy bandit floor so no bucket starves; the drift tracker
+//! trips a background trainer that refits the GBDT on a bounded
+//! reservoir of the labeled history and promotes the challenger only if
+//! it beats the incumbent on held-out data, atomically invalidating the
+//! decision cache on swap.
 //!
 //! Metrics count selections, fallbacks, forced overrides, busy
 //! rejections, per-worker queue depths, micro-batch sizes, the online
-//! loop (samples, probes, mispredict rate, retrains,
-//! promotions, rollbacks), and latency percentiles from a lock-free
-//! fixed-bucket histogram. Shutdown drains: every accepted job executes
-//! before the workers join. A pool of size 1 reproduces the old
-//! single-thread engine semantics exactly.
+//! loop (samples, probes split by scheduled-vs-bandit cause, the live
+//! probe interval, mispredict rate, retrains, promotions, rollbacks),
+//! and latency percentiles from a lock-free fixed-bucket histogram.
+//! Shutdown drains: every accepted job executes before the workers join.
+//! A pool of size 1 reproduces the old single-thread engine semantics
+//! exactly.
 
 pub mod backend;
 pub mod engine;

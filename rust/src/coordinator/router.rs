@@ -9,9 +9,13 @@
 //! With [`RouterConfig::online`] the router closes the loop
 //! (`crate::online`): the model lives behind a hot-swappable
 //! [`LiveSelector`], every execution's measured latency is recorded into
-//! the sample ring, a deterministic 1-in-N slice of predicted requests is
+//! the sample ring, and an adaptive slice of predicted requests is
 //! **shadow-probed** (both NT and TNN run; the measured winner becomes a
-//! labeled example and feeds the drift tracker), and a background trainer
+//! labeled example and feeds the drift tracker). The probe interval per
+//! shape bucket tightens toward `probe_every_min` while the bucket's
+//! decayed mispredict rate is high and relaxes toward `probe_every_max`
+//! when it is clean, with a deterministic epsilon-greedy floor so stable
+//! buckets keep a trickle of exploration; a background trainer
 //! retrains/promotes without ever blocking the serving path. The hot path
 //! stays lock-free: a cache hit in the epoch-checked
 //! [`DecisionCache`] touches no lock, and a promotion invalidates the
@@ -133,8 +137,8 @@ impl Router {
             if let Some(path) = &cfg.persist_path {
                 if path.exists() {
                     match trainer::load_store(path) {
-                        Ok((examples, model)) => {
-                            acc.preload(examples);
+                        Ok((examples, seen, model)) => {
+                            acc.preload(examples, seen);
                             if let Some(g) = model {
                                 live.swap(Selector::new(TrainedModel::Gbdt(g)));
                                 cache.invalidate();
@@ -242,16 +246,16 @@ impl Router {
 
     /// Whether this request should be shadow-probed: the online loop is
     /// on, the model actually predicted (never second-guess a memory
-    /// fallback — TNN might not fit), and the deterministic 1-in-N
-    /// schedule selects it.
+    /// fallback — TNN might not fit), and the adaptive per-bucket
+    /// schedule (or its bandit floor) selects it.
     fn should_probe(&self, req: &GemmRequest, predicted: i8) -> bool {
         let Some(rt) = &self.online else {
             return false;
         };
+        let GemmShape { m, n, k } = req.shape;
         predicted != 0
-            && Simulator::tnn_workspace_bytes(req.shape.m, req.shape.n, req.shape.k)
-                <= req.gpu.global_mem_bytes()
-            && rt.hub.should_probe()
+            && Simulator::tnn_workspace_bytes(m, n, k) <= req.gpu.global_mem_bytes()
+            && rt.hub.should_probe(req.gpu.id, m, n, k)
     }
 
     /// Serve one request synchronously.
@@ -570,7 +574,11 @@ mod tests {
     #[test]
     fn online_router_records_samples_and_probes() {
         let (engine, router) = native_router(RouterConfig::online(OnlineConfig {
-            probe_every: 2,
+            // Pin the adaptive schedule to a fixed 1-in-2 so probe counts
+            // are deterministic regardless of measured winners.
+            probe_every_min: 2,
+            probe_every_max: 2,
+            probe_epsilon: 0.0,
             // Keep the trainer quiet so this test only checks telemetry.
             retrain_min_labeled: usize::MAX,
             ..OnlineConfig::default()
@@ -583,12 +591,15 @@ mod tests {
         }
         let snap = router.metrics.snapshot();
         assert_eq!(snap.completed, 6);
-        // probe_every=2 → probe ticks 0, 2 and 4 of the 6 predicted
-        // requests fire (the schedule starts at the first one).
+        // interval 2 → bucket ticks 1, 3 and 5 of the 6 predicted
+        // requests fire (never tick 0 — a cold start is not probed).
         assert_eq!(snap.shadow_probes, 3, "{}", snap.render());
+        assert_eq!(snap.probes_scheduled, 3, "{}", snap.render());
+        assert_eq!(snap.probes_bandit, 0);
+        assert_eq!(snap.probe_interval, 2);
         assert_eq!(snap.online_samples, 6, "every request recorded");
         let hub = router.online_hub().expect("online hub");
-        assert_eq!(hub.drift.probes(), 3);
+        assert!((hub.drift.probes() - 3.0).abs() < 1e-9);
         engine.shutdown();
     }
 
@@ -597,7 +608,8 @@ mod tests {
         let (engine, router) = native_router(RouterConfig {
             force: Some(Algorithm::Nt),
             ..RouterConfig::online(OnlineConfig {
-                probe_every: 1,
+                probe_every_min: 1,
+                probe_every_max: 1,
                 retrain_min_labeled: usize::MAX,
                 ..OnlineConfig::default()
             })

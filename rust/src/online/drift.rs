@@ -1,4 +1,5 @@
-//! Drift detection: per-shape-bucket mispredict-rate tracking.
+//! Drift detection: per-shape-bucket mispredict-rate tracking with
+//! **exponentially decayed** windows.
 //!
 //! Every shadow probe compares the live model's prediction with the
 //! measured winner. Probes hash by `(gpu, ⌊log2 m⌋, ⌊log2 n⌋, ⌊log2 k⌋)`
@@ -6,22 +7,35 @@
 //! shape space (say, tall-skinny GEMMs that the offline grid never covered)
 //! and trip retraining even while the aggregate rate still looks healthy.
 //!
-//! The tracker is trigger state, not an archive: [`DriftTracker::reset`]
-//! zeroes it after every retrain so one bad epoch cannot re-trigger
-//! forever. Cumulative probe/mispredict counts live in
+//! Counters are fixed-point *weights*, not integer counts: after each
+//! retrain the trainer calls [`DriftTracker::decay`], which multiplies
+//! every weight by a retained fraction instead of zeroing it. One retrain
+//! therefore **attenuates** the evidence window (an epoch of bad
+//! predictions cannot re-trigger forever) without erasing it (a shape that
+//! was drifting a moment ago still reads as recently-drifting, which the
+//! adaptive probe scheduler in [`crate::online::OnlineHub`] relies on).
+//! Decay is a per-word CAS loop, so a probe recorded concurrently with a
+//! decay sweep is at worst attenuated once — never silently lost, unlike
+//! the old `reset()` which raced `record()` and dropped probes landing
+//! between the trainer's `triggered()` check and the zeroing store.
+//! Cumulative probe/mispredict counts live in
 //! [`crate::coordinator::CoordinatorMetrics`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 /// Fixed bucket count (power of two).
-const BUCKETS: usize = 256;
+pub(crate) const BUCKETS: usize = 256;
+
+/// Fixed-point scale: one recorded probe adds `SCALE` to its weight words,
+/// so decayed fractional evidence keeps 16 bits of precision.
+const SCALE: u64 = 1 << 16;
 
 struct Bucket {
     probes: AtomicU64,
     mispredicts: AtomicU64,
 }
 
-/// Lock-free mispredict-rate tracker.
+/// Lock-free decayed mispredict-rate tracker.
 pub struct DriftTracker {
     buckets: Box<[Bucket]>,
     probes: AtomicU64,
@@ -47,47 +61,86 @@ fn log2_floor(v: u64) -> u64 {
     63 - v.max(1).leading_zeros() as u64
 }
 
-fn bucket_of(gpu_id: u64, m: u64, n: u64, k: u64) -> usize {
+/// Bucket index for a `(gpu, shape)` observation — shared with the hub's
+/// per-bucket probe scheduler so drift evidence and probe budget are keyed
+/// identically.
+pub(crate) fn bucket_of(gpu_id: u64, m: u64, n: u64, k: u64) -> usize {
     let key = crate::util::rng::mix_parts(&[gpu_id, log2_floor(m), log2_floor(n), log2_floor(k)]);
     (key as usize) & (BUCKETS - 1)
 }
 
+/// Multiply one fixed-point weight word by `factor` via CAS. A concurrent
+/// `record` between the load and the CAS makes the CAS fail and the loop
+/// re-read, so added weight is decayed at most once and never discarded.
+fn decay_word(w: &AtomicU64, factor: f64) {
+    let mut cur = w.load(Ordering::Relaxed);
+    loop {
+        let next = (cur as f64 * factor) as u64;
+        if next == cur {
+            return;
+        }
+        match w.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+fn rate_of(mispredicts: u64, probes: u64) -> f64 {
+    if probes == 0 {
+        0.0
+    } else {
+        mispredicts as f64 / probes as f64
+    }
+}
+
 impl DriftTracker {
-    /// Record one shadow-probe outcome.
+    /// Record one shadow-probe outcome (adds one probe of weight).
     pub fn record(&self, gpu_id: u64, m: u64, n: u64, k: u64, mispredicted: bool) {
         let b = &self.buckets[bucket_of(gpu_id, m, n, k)];
-        b.probes.fetch_add(1, Ordering::Relaxed);
-        self.probes.fetch_add(1, Ordering::Relaxed);
+        b.probes.fetch_add(SCALE, Ordering::Relaxed);
+        self.probes.fetch_add(SCALE, Ordering::Relaxed);
         if mispredicted {
-            b.mispredicts.fetch_add(1, Ordering::Relaxed);
-            self.mispredicts.fetch_add(1, Ordering::Relaxed);
+            b.mispredicts.fetch_add(SCALE, Ordering::Relaxed);
+            self.mispredicts.fetch_add(SCALE, Ordering::Relaxed);
         }
     }
 
-    /// Probes recorded since the last reset.
-    pub fn probes(&self) -> u64 {
-        self.probes.load(Ordering::Relaxed)
+    /// Decayed probe weight currently in the window (one undecayed probe
+    /// contributes 1.0).
+    pub fn probes(&self) -> f64 {
+        self.probes.load(Ordering::Relaxed) as f64 / SCALE as f64
     }
 
-    /// Aggregate mispredict rate since the last reset (0 when no probes).
+    /// Aggregate mispredict rate over the decayed window (0 when empty).
     pub fn total_rate(&self) -> f64 {
-        let p = self.probes.load(Ordering::Relaxed);
-        if p == 0 {
-            0.0
-        } else {
-            self.mispredicts.load(Ordering::Relaxed) as f64 / p as f64
-        }
+        rate_of(
+            self.mispredicts.load(Ordering::Relaxed),
+            self.probes.load(Ordering::Relaxed),
+        )
+    }
+
+    /// `(probe weight, mispredict rate)` of the bucket a `(gpu, shape)`
+    /// observation hashes into — the adaptive probe scheduler's local
+    /// drift signal.
+    pub fn bucket_stats(&self, gpu_id: u64, m: u64, n: u64, k: u64) -> (f64, f64) {
+        let b = &self.buckets[bucket_of(gpu_id, m, n, k)];
+        let p = b.probes.load(Ordering::Relaxed);
+        (
+            p as f64 / SCALE as f64,
+            rate_of(b.mispredicts.load(Ordering::Relaxed), p),
+        )
     }
 
     /// The worst per-bucket mispredict rate among buckets with at least
-    /// `min_probes` observations (0 when none qualify).
+    /// `min_probes` of decayed weight (0 when none qualify).
     pub fn worst_bucket_rate(&self, min_probes: u64) -> f64 {
+        let min_weight = min_probes.max(1).saturating_mul(SCALE);
         let mut worst: f64 = 0.0;
         for b in self.buckets.iter() {
             let p = b.probes.load(Ordering::Relaxed);
-            if p >= min_probes.max(1) {
-                let r = b.mispredicts.load(Ordering::Relaxed) as f64 / p as f64;
-                worst = worst.max(r);
+            if p >= min_weight {
+                worst = worst.max(rate_of(b.mispredicts.load(Ordering::Relaxed), p));
             }
         }
         worst
@@ -96,22 +149,26 @@ impl DriftTracker {
     /// Should a retrain fire? True when either the aggregate rate or any
     /// sufficiently observed shape bucket exceeds `threshold`.
     pub fn triggered(&self, threshold: f64, min_probes: u64) -> bool {
-        if self.probes() < min_probes.max(1) {
+        if self.probes() < min_probes.max(1) as f64 {
             return false;
         }
         self.total_rate() > threshold || self.worst_bucket_rate(min_probes) > threshold
     }
 
-    /// Zero all counters (called after a retrain so stale evidence cannot
-    /// re-trigger). Racy with concurrent `record` — a probe landing during
-    /// the sweep survives into the next window, which is harmless.
-    pub fn reset(&self) {
+    /// Attenuate the whole window: every weight is multiplied by `factor`
+    /// (clamped to `[0, 1]`). Called by the trainer after each retrain so
+    /// stale evidence fades instead of either persisting forever or being
+    /// erased. `factor = 1.0` is an exact no-op (for weights below 2^53);
+    /// a concurrent `record` is attenuated at most once per sweep and
+    /// never lost — see the conservation test.
+    pub fn decay(&self, factor: f64) {
+        let factor = factor.clamp(0.0, 1.0);
         for b in self.buckets.iter() {
-            b.probes.store(0, Ordering::Relaxed);
-            b.mispredicts.store(0, Ordering::Relaxed);
+            decay_word(&b.probes, factor);
+            decay_word(&b.mispredicts, factor);
         }
-        self.probes.store(0, Ordering::Relaxed);
-        self.mispredicts.store(0, Ordering::Relaxed);
+        decay_word(&self.probes, factor);
+        decay_word(&self.mispredicts, factor);
     }
 }
 
@@ -125,7 +182,7 @@ mod tests {
         for i in 0..100 {
             d.record(1, 128 << (i % 4), 256, 512, false);
         }
-        assert_eq!(d.probes(), 100);
+        assert!((d.probes() - 100.0).abs() < 1e-9);
         assert_eq!(d.total_rate(), 0.0);
         assert!(!d.triggered(0.05, 16));
     }
@@ -166,16 +223,127 @@ mod tests {
     }
 
     #[test]
-    fn reset_clears_the_window() {
+    fn decay_attenuates_instead_of_erasing() {
         let d = DriftTracker::default();
         for _ in 0..50 {
             d.record(1, 256, 256, 256, true);
         }
         assert!(d.triggered(0.1, 8));
-        d.reset();
-        assert_eq!(d.probes(), 0);
+        d.decay(0.5);
+        // Half the weight survives, the rate is preserved, and the window
+        // can still trigger (the whole point vs the old reset()).
+        assert!((d.probes() - 25.0).abs() < 1e-3, "probes={}", d.probes());
+        assert!((d.total_rate() - 1.0).abs() < 1e-9);
+        assert!(d.triggered(0.1, 8), "attenuated evidence still counts");
+        // Enough decays fade it below the min-probes gate.
+        for _ in 0..8 {
+            d.decay(0.5);
+        }
+        assert!(d.probes() < 1.0);
+        assert!(!d.triggered(0.1, 8));
+    }
+
+    #[test]
+    fn decay_to_zero_clears_the_window() {
+        let d = DriftTracker::default();
+        for _ in 0..50 {
+            d.record(1, 256, 256, 256, true);
+        }
+        d.decay(0.0);
+        assert_eq!(d.probes(), 0.0);
         assert_eq!(d.total_rate(), 0.0);
         assert!(!d.triggered(0.1, 8));
+    }
+
+    #[test]
+    fn fresh_evidence_survives_decay_at_full_weight() {
+        let d = DriftTracker::default();
+        for _ in 0..100 {
+            d.record(1, 256, 256, 256, false);
+        }
+        d.decay(0.5);
+        for _ in 0..100 {
+            d.record(1, 256, 256, 256, false);
+        }
+        // 100 * 0.5 + 100 undecayed.
+        assert!((d.probes() - 150.0).abs() < 1e-3, "probes={}", d.probes());
+    }
+
+    #[test]
+    fn bucket_stats_report_the_local_window() {
+        let d = DriftTracker::default();
+        for i in 0..10 {
+            d.record(1, 256, 256, 256, i < 5);
+        }
+        let (w, r) = d.bucket_stats(1, 256, 256, 256);
+        assert!((w - 10.0).abs() < 1e-9);
+        assert!((r - 0.5).abs() < 1e-9);
+        // 300 shares the ⌊log2⌋=8 band with 256 → same bucket; a distant
+        // shape on another GPU is (hash-dependent but here) empty.
+        let (w2, _) = d.bucket_stats(1, 300, 300, 300);
+        assert!((w2 - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decay_factor_one_is_an_exact_noop() {
+        let d = DriftTracker::default();
+        for i in 0..1000 {
+            d.record(1, 64 << (i % 6), 128, 256, i % 3 == 0);
+        }
+        let (p, r) = (d.probes(), d.total_rate());
+        d.decay(1.0);
+        assert_eq!(d.probes(), p);
+        assert_eq!(d.total_rate(), r);
+    }
+
+    #[test]
+    fn records_racing_decay_are_never_lost() {
+        // Counter conservation under a real race: recorders add probes
+        // while another thread runs a bounded number of factor-0.5 decay
+        // sweeps (which *do* take the CAS path, unlike factor 1.0). Every
+        // record is attenuated at most once per sweep, so the final
+        // weight is bounded below by total · 0.5^sweeps — the old
+        // reset() race (a zeroing store wiping records that landed after
+        // the trigger check) would leave almost nothing and break the
+        // floor, and any CAS bug that dropped a concurrent fetch_add
+        // would land below it too.
+        let d = std::sync::Arc::new(DriftTracker::default());
+        let (threads, per) = (4u64, 10_000u64);
+        let sweeps = 4i32;
+        std::thread::scope(|s| {
+            {
+                let d = std::sync::Arc::clone(&d);
+                s.spawn(move || {
+                    for _ in 0..sweeps {
+                        d.decay(0.5);
+                        std::thread::yield_now();
+                    }
+                });
+            }
+            for t in 0..threads {
+                let d = std::sync::Arc::clone(&d);
+                s.spawn(move || {
+                    for i in 0..per {
+                        // Spread across buckets and both outcome words.
+                        d.record(t, 64 << (i % 6), 128, 256, i % 3 == 0);
+                    }
+                });
+            }
+        });
+        let total = (threads * per) as f64;
+        // One probe of slack: each sweep truncates every fixed-point word
+        // downward by < 1/SCALE, far less than a whole probe in total.
+        let floor = total * 0.5f64.powi(sweeps) - 1.0;
+        assert!(
+            d.probes() >= floor,
+            "records lost beyond attenuation: {} < {floor}",
+            d.probes()
+        );
+        assert!(d.probes() <= total + 1e-6, "overcount: {}", d.probes());
+        // A post-race record lands at full, undecayed weight.
+        let before = d.probes();
+        d.record(9, 512, 512, 512, false);
+        assert!((d.probes() - before - 1.0).abs() < 1e-9);
     }
 
     #[test]

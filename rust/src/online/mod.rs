@@ -10,22 +10,51 @@
 //!                 ┌──────────────────────────────────────────────┐
 //!                 │                SERVING HOT PATH              │
 //!   request ──► Router::decide ──► engine ──► measured latency   │
-//!                 │    │ 1-in-N: shadow probe (run NT *and* TNN, │
-//!                 │    │          label = measured winner)       │
+//!                 │    │ adaptive probe: run NT *and* TNN,       │
+//!                 │    │ label = measured winner. Interval per   │
+//!                 │    │ shape bucket: probe_every_min when the  │
+//!                 │    │ bucket is drifting ⇄ probe_every_max    │
+//!                 │    │ when stable, + an epsilon bandit floor  │
+//!                 │    │ so stable buckets never starve          │
 //!                 └────┼─────────────────────────────────────────┘
 //!                      ▼ lock-free SampleRing (never blocks serving)
-//!               DriftTracker ── per-shape-bucket mispredict rate
+//!               DriftTracker ── per-(gpu, shape-bucket) decayed
+//!                      │          mispredict-rate windows
 //!                      │ threshold crossed (or enough new labels)
 //!                      ▼
-//!               background trainer: drain ring → Dataset →
-//!               GBDT refit → holdout eval vs incumbent
+//!               background trainer: drain ring → reservoir-bounded
+//!               Accumulator → GBDT refit → holdout eval vs incumbent
 //!                      │                       │
 //!              beats incumbent?          loses/ties?
 //!                      ▼                       ▼
 //!            PROMOTE: LiveSelector.swap   ROLLBACK: discard
 //!            + DecisionCache.invalidate   (counter only)
 //!            + JSON persist (warm restart)
+//!                      │
+//!                      ▼ DriftTracker.decay(drift_decay)
+//!            (evidence attenuates — never erased, so the probe
+//!             scheduler still sees recent drift after a retrain)
 //! ```
+//!
+//! Three feedback loops, all deterministic:
+//!
+//! * **Decayed drift windows** ([`DriftTracker`]): per-bucket mispredict
+//!   weights multiplied by [`OnlineConfig::drift_decay`] after each
+//!   retrain (CAS, race-free with `record`) instead of zeroed, so one
+//!   retrain attenuates evidence rather than destroying it.
+//! * **Adaptive probe rate** ([`OnlineHub::should_probe`]): the probe
+//!   interval interpolates between [`OnlineConfig::probe_every_min`]
+//!   (bucket at/above `drift_threshold`) and
+//!   [`OnlineConfig::probe_every_max`] (no drift evidence), per shape
+//!   bucket, firing at ticks n−1, 2n−1, … so a cold start never probes
+//!   its first request. A deterministic epsilon-greedy floor
+//!   ([`OnlineConfig::probe_epsilon`]) probes 1-in-⌈1/ε⌉ of the requests
+//!   the schedule declined — bandit-style exploration that keeps
+//!   long-stable buckets from starving.
+//! * **Reservoir-bounded trainer** ([`Accumulator`]): once `max_examples`
+//!   is hit, eviction switches from FIFO to seeded reservoir sampling, so
+//!   the training set stays representative of the whole history and
+//!   retrain cost is bounded regardless of uptime.
 //!
 //! The hot path stays lock-free: `Router::decide` consults the
 //! [`crate::selector::cache::DecisionCache`] (epoch-checked — a swap
@@ -54,12 +83,40 @@ use std::time::Duration;
 
 /// Tuning for the online loop (defaults are conservative production-ish
 /// numbers; tests and the serving example crank them way down).
+///
+/// | knob | role |
+/// |---|---|
+/// | `probe_every_min` | probe interval while a bucket is drifting (densest) |
+/// | `probe_every_max` | probe interval with no drift evidence (sparsest; 0 disables probing) |
+/// | `probe_epsilon` | bandit floor: probe 1-in-⌈1/ε⌉ of schedule-declined requests |
+/// | `drift_threshold` | mispredict rate that (a) trips a retrain, (b) pins the interval at `min` |
+/// | `drift_min_probes` | decayed probe weight required before drift may trigger |
+/// | `drift_decay` | fraction of drift evidence retained after each retrain |
+/// | `retrain_min_labeled` / `retrain_every_labeled` | volume gates for retraining |
+/// | `max_examples` | reservoir size — trainer CPU/RSS bound |
+/// | `holdout_frac` | challenger-vs-incumbent eval slice |
+/// | `persist_path` | JSON warm-restart store |
 #[derive(Debug, Clone)]
 pub struct OnlineConfig {
-    /// Shadow-probe every Nth *predicted* request (0 disables probing).
-    /// Probes run both algorithms, so the probe fraction is pure measured
-    /// overhead — keep it sparse in production.
-    pub probe_every: u64,
+    /// Densest shadow-probe schedule: probe every Nth *predicted* request
+    /// of a shape bucket whose decayed mispredict rate is at or above
+    /// `drift_threshold`. Probes run both algorithms, so the probe
+    /// fraction is pure measured overhead. Clamped to `[1, probe_every_max]`.
+    pub probe_every_min: u64,
+    /// Sparsest schedule: the probe interval for a bucket with no drift
+    /// evidence. Intervals interpolate linearly between `min` and `max`
+    /// with the bucket's drift rate. 0 disables probing entirely
+    /// (including the epsilon floor).
+    pub probe_every_max: u64,
+    /// Epsilon-greedy exploration floor: of the predicted requests the
+    /// adaptive schedule declines, deterministically probe 1 in ⌈1/ε⌉, so
+    /// a long-stable bucket still gets occasional labeled evidence and
+    /// cannot starve (0 disables the floor).
+    pub probe_epsilon: f64,
+    /// Fraction of every drift-window weight retained after a retrain
+    /// (applied via [`DriftTracker::decay`]); 0 reproduces the old
+    /// hard-reset behavior, 1 never forgets. Clamped to `[0, 1]`.
+    pub drift_decay: f64,
     /// Sample-ring capacity (rounded up to a power of two).
     pub ring_capacity: usize,
     /// Never retrain on fewer labeled examples than this.
@@ -78,7 +135,10 @@ pub struct OnlineConfig {
     /// Trainer poll period (ring drain cadence; also the shutdown
     /// response bound).
     pub poll_interval: Duration,
-    /// Cap on accumulated labeled examples (oldest evicted first).
+    /// Cap on accumulated labeled examples. Until the cap is hit the
+    /// accumulator simply appends; past it, deterministic reservoir
+    /// sampling keeps a uniform subsample of the whole labeled history,
+    /// bounding retrain cost regardless of uptime.
     pub max_examples: usize,
     /// JSON store for warm restarts (examples + live GBDT). `None`
     /// disables persistence.
@@ -88,7 +148,10 @@ pub struct OnlineConfig {
 impl Default for OnlineConfig {
     fn default() -> Self {
         OnlineConfig {
-            probe_every: 16,
+            probe_every_min: 4,
+            probe_every_max: 64,
+            probe_epsilon: 0.02,
+            drift_decay: 0.5,
             ring_capacity: 4096,
             retrain_min_labeled: 64,
             retrain_every_labeled: 256,
@@ -157,7 +220,11 @@ pub struct OnlineHub {
     /// stale cached decision cannot outlive the model that made it.
     pub cache: Arc<DecisionCache>,
     pub metrics: Arc<CoordinatorMetrics>,
-    probe_tick: AtomicU64,
+    /// Per-shape-bucket request counters for the adaptive schedule (keyed
+    /// exactly like the drift tracker's buckets).
+    sched_ticks: Box<[AtomicU64]>,
+    /// Counter of schedule-declined requests, driving the epsilon floor.
+    bandit_tick: AtomicU64,
     shutdown: AtomicBool,
 }
 
@@ -175,18 +242,91 @@ impl OnlineHub {
             live,
             cache,
             metrics,
-            probe_tick: AtomicU64::new(0),
+            sched_ticks: (0..drift::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            bandit_tick: AtomicU64::new(0),
             shutdown: AtomicBool::new(false),
         }
     }
 
-    /// Deterministic 1-in-N probe schedule over *predicted* requests.
-    pub fn should_probe(&self) -> bool {
-        let n = self.config.probe_every;
-        if n == 0 {
+    /// Minimum decayed weight before a window's rate influences the probe
+    /// interval — a single noise mispredict on a cold start must not pin
+    /// the whole fleet at `probe_every_min`.
+    const RATE_MIN_WEIGHT: f64 = 2.0;
+
+    /// The probe interval currently in effect for a `(gpu, shape)` bucket:
+    /// linear interpolation from `probe_every_max` (no drift evidence)
+    /// down to `probe_every_min` (decayed mispredict rate at or above
+    /// `drift_threshold`). Both signals are weight-gated
+    /// ([`Self::RATE_MIN_WEIGHT`]): the bucket's own rate is trusted once
+    /// the bucket holds enough decayed weight, and the aggregate rate
+    /// applies as a floor (so a global regression densifies every bucket)
+    /// once the whole window does. 0 means probing is disabled.
+    pub fn effective_probe_interval(&self, gpu_id: u64, m: u64, n: u64, k: u64) -> u64 {
+        let max_n = self.config.probe_every_max;
+        if max_n == 0 {
+            return 0;
+        }
+        let min_n = self.config.probe_every_min.clamp(1, max_n);
+        let (weight, bucket_rate) = self.drift.bucket_stats(gpu_id, m, n, k);
+        let mut rate = 0.0f64;
+        if self.drift.probes() >= Self::RATE_MIN_WEIGHT {
+            rate = self.drift.total_rate();
+        }
+        if weight >= Self::RATE_MIN_WEIGHT {
+            rate = rate.max(bucket_rate);
+        }
+        let t = (rate / self.config.drift_threshold.max(1e-9)).clamp(0.0, 1.0);
+        let interval = max_n as f64 - t * (max_n - min_n) as f64;
+        (interval.round() as u64).clamp(min_n, max_n)
+    }
+
+    /// Adaptive probe schedule over *predicted* requests, per shape
+    /// bucket. With the bucket's effective interval `n`, fires at that
+    /// bucket's ticks n−1, 2n−1, … (never tick 0, so a cold-started or
+    /// restarted service does not double the latency of its first
+    /// request). Requests the schedule declines feed the deterministic
+    /// epsilon floor: every ⌈1/ε⌉-th declined request probes anyway, so
+    /// stable buckets keep a trickle of exploration. Per-cause counters
+    /// and the last effective interval land in [`CoordinatorMetrics`].
+    pub fn should_probe(&self, gpu_id: u64, m: u64, n: u64, k: u64) -> bool {
+        let interval = self.effective_probe_interval(gpu_id, m, n, k);
+        if interval == 0 {
             return false;
         }
-        self.probe_tick.fetch_add(1, Ordering::Relaxed) % n == 0
+        let tick = &self.sched_ticks[drift::bucket_of(gpu_id, m, n, k)];
+        let mut cur = tick.load(Ordering::Relaxed);
+        loop {
+            let fires = cur + 1 >= interval;
+            let next = if fires { 0 } else { cur + 1 };
+            match tick.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => {
+                    if fires {
+                        // The gauge records the interval in effect at the
+                        // last *scheduled* fire — written only here, so
+                        // declined hot-path requests never touch the
+                        // shared cacheline.
+                        self.metrics
+                            .probe_interval_gauge
+                            .store(interval, Ordering::Relaxed);
+                        self.metrics.probes_scheduled.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    break;
+                }
+                Err(seen) => cur = seen,
+            }
+        }
+        // Bandit floor: deterministic epsilon-greedy exploration over the
+        // requests the adaptive schedule declined.
+        let eps = self.config.probe_epsilon;
+        if eps > 0.0 {
+            let every = (1.0 / eps.min(1.0)).ceil() as u64;
+            if self.bandit_tick.fetch_add(1, Ordering::Relaxed) % every == every - 1 {
+                self.metrics.probes_bandit.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        }
+        false
     }
 
     fn push_sample(&self, s: &Sample) {
@@ -333,29 +473,123 @@ mod tests {
         assert_eq!(live.select(&GTX1080, 128, 128, 128).0, Algorithm::Tnn);
     }
 
-    #[test]
-    fn probe_schedule_is_one_in_n() {
-        let h = hub(
-            OnlineConfig {
-                probe_every: 4,
-                ..OnlineConfig::default()
-            },
-            constant_selector(1),
-        );
-        let fired: Vec<bool> = (0..8).map(|_| h.should_probe()).collect();
-        assert_eq!(fired, vec![true, false, false, false, true, false, false, false]);
+    /// A config with the adaptive schedule pinned to a fixed 1-in-`n`
+    /// (min == max, no epsilon floor) — the deterministic baseline most
+    /// schedule tests want.
+    fn pinned(n: u64) -> OnlineConfig {
+        OnlineConfig {
+            probe_every_min: n,
+            probe_every_max: n,
+            probe_epsilon: 0.0,
+            ..OnlineConfig::default()
+        }
     }
 
     #[test]
-    fn probe_every_zero_disables_probing() {
+    fn probe_schedule_is_one_in_n() {
+        let h = hub(pinned(4), constant_selector(1));
+        let fired: Vec<bool> = (0..8).map(|_| h.should_probe(1, 128, 128, 128)).collect();
+        // Fires at ticks n−1, 2n−1, … — NOT tick 0, so a cold-started
+        // service never shadow-probes (and doubles the latency of) its
+        // very first request.
+        assert_eq!(fired, vec![false, false, false, true, false, false, false, true]);
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.probes_scheduled, 2);
+        assert_eq!(snap.probes_bandit, 0);
+        assert_eq!(snap.probe_interval, 4);
+    }
+
+    #[test]
+    fn probe_every_max_zero_disables_probing() {
         let h = hub(
             OnlineConfig {
-                probe_every: 0,
+                probe_every_min: 1,
+                probe_every_max: 0,
+                // Even an aggressive epsilon floor must stay off when
+                // probing is disabled outright.
+                probe_epsilon: 0.9,
                 ..OnlineConfig::default()
             },
             constant_selector(1),
         );
-        assert!((0..32).all(|_| !h.should_probe()));
+        assert!((0..32).all(|_| !h.should_probe(1, 128, 128, 128)));
+        assert_eq!(h.metrics.snapshot().probes_bandit, 0);
+    }
+
+    #[test]
+    fn drifting_bucket_probes_at_min_interval_stable_at_max() {
+        let h = hub(
+            OnlineConfig {
+                probe_every_min: 2,
+                probe_every_max: 16,
+                probe_epsilon: 0.0,
+                drift_threshold: 0.15,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        // No evidence → sparsest schedule.
+        assert_eq!(h.effective_probe_interval(1, 256, 256, 256), 16);
+        // A drifting bucket (100% mispredicts, past the threshold) pins
+        // its own interval at the min…
+        for _ in 0..8 {
+            h.record_probe(&GTX1080, 256, 256, 256, 1, 90.0, 40.0);
+        }
+        assert_eq!(h.effective_probe_interval(GTX1080.id, 256, 256, 256), 2);
+        // …and the aggregate rate (8 wrong / 16 total > threshold) floors
+        // every other bucket too; a *clean* world returns to max below.
+        for _ in 0..8 {
+            h.record_probe(&GTX1080, 256, 256, 256, 1, 10.0, 40.0);
+        }
+        assert!((h.drift.total_rate() - 0.5).abs() < 1e-9);
+        assert_eq!(h.effective_probe_interval(GTX1080.id, 65536, 64, 64), 2);
+        // Decay the window to nothing → stable again → max interval.
+        h.drift.decay(0.0);
+        assert_eq!(h.effective_probe_interval(GTX1080.id, 256, 256, 256), 16);
+    }
+
+    #[test]
+    fn partial_drift_interpolates_between_min_and_max() {
+        let h = hub(
+            OnlineConfig {
+                probe_every_min: 4,
+                probe_every_max: 64,
+                probe_epsilon: 0.0,
+                drift_threshold: 0.5,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        // 1 wrong in 4 → rate 0.25 → halfway to the 0.5 threshold →
+        // interval 64 − 0.5·(64−4) = 34.
+        h.record_probe(&GTX1080, 256, 256, 256, 1, 90.0, 40.0);
+        for _ in 0..3 {
+            h.record_probe(&GTX1080, 256, 256, 256, 1, 10.0, 40.0);
+        }
+        assert_eq!(h.effective_probe_interval(GTX1080.id, 256, 256, 256), 34);
+    }
+
+    #[test]
+    fn epsilon_floor_keeps_stable_buckets_explored() {
+        // Schedule so sparse it never fires in this window; epsilon 0.25
+        // probes every 4th declined request — deterministic, nonzero.
+        let h = hub(
+            OnlineConfig {
+                probe_every_min: 1000,
+                probe_every_max: 1000,
+                probe_epsilon: 0.25,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        let fired: Vec<bool> = (0..12).map(|_| h.should_probe(1, 128, 128, 128)).collect();
+        assert_eq!(
+            fired,
+            vec![false, false, false, true, false, false, false, true, false, false, false, true]
+        );
+        let snap = h.metrics.snapshot();
+        assert_eq!(snap.probes_bandit, 3, "bandit floor is live and nonzero");
+        assert_eq!(snap.probes_scheduled, 0);
     }
 
     #[test]
@@ -372,7 +606,7 @@ mod tests {
         assert_eq!(snap.shadow_mispredicts, 1);
         assert_eq!(snap.online_samples, 3);
         assert_eq!(h.ring.len(), 3);
-        assert_eq!(h.drift.probes(), 3);
+        assert!((h.drift.probes() - 3.0).abs() < 1e-9);
         assert!((h.drift.total_rate() - 1.0 / 3.0).abs() < 1e-12);
     }
 
@@ -477,6 +711,96 @@ mod tests {
         assert_eq!(d.x[0][7], 1024.0);
     }
 
+    /// A probe sample for shape key `(gpu 1, m, 256, 1024)` with both
+    /// latencies measured.
+    fn probe_sample(m: u64, nt_us: f64, tnn_us: f64) -> Sample {
+        Sample {
+            gpu_id: 1,
+            gpu_feats: GTX1080.features(),
+            m,
+            n: 256,
+            k: 1024,
+            predicted: 1,
+            lat_nt_us: nt_us,
+            lat_tnn_us: tnn_us,
+        }
+    }
+
+    #[test]
+    fn probe_samples_enrich_paired_key_stats() {
+        // A probe must fold BOTH measured sides into the per-key stats
+        // (the old ingest early-returned, so probe-heavy shapes never
+        // accrued paired-single evidence).
+        let mut acc = Accumulator::new(64);
+        assert!(acc.ingest(&probe_sample(256, 50.0, 20.0)));
+        let d = acc.to_dataset();
+        assert_eq!(
+            d.len(),
+            2,
+            "one direct probe example + one paired example from the probe's own sides"
+        );
+        assert!(d.y.iter().all(|&y| y == -1.0), "TNN won both ways");
+        // A later single-sided NT observation merges with the probe's
+        // stats: NT mean (50+100)/2 = 75 vs TNN mean 20 → still TNN.
+        assert!(!acc.ingest(&probe_sample(256, 100.0, f64::NAN)));
+        let d = acc.to_dataset();
+        assert_eq!(d.len(), 2);
+        assert!(d.y.iter().all(|&y| y == -1.0));
+    }
+
+    #[test]
+    fn reservoir_bounds_examples_and_is_deterministic_across_seeds() {
+        let feed = |acc: &mut Accumulator| {
+            for i in 0..300u64 {
+                // Winner alternates so labels vary; m identifies the example.
+                let (nt, tnn) = if i % 2 == 0 { (10.0, 30.0) } else { (30.0, 10.0) };
+                acc.ingest(&probe_sample(1000 + i, nt, tnn));
+            }
+        };
+        let mut a = Accumulator::with_seed(32, 7);
+        let mut b = Accumulator::with_seed(32, 7);
+        let mut c = Accumulator::with_seed(32, 8);
+        feed(&mut a);
+        feed(&mut b);
+        feed(&mut c);
+        assert_eq!(a.labeled_len(), 32, "reservoir holds exactly the cap");
+        assert_eq!(a.seen_labeled(), 300);
+        let av: Vec<Example> = a.examples().cloned().collect();
+        let bv: Vec<Example> = b.examples().cloned().collect();
+        let cv: Vec<Example> = c.examples().cloned().collect();
+        assert_eq!(av, bv, "identical seeds + streams → identical reservoirs");
+        assert_ne!(av, cv, "a different seed keeps a different subsample");
+        // Reseeding mid-stream (what the trainer does per retrain seq)
+        // stays deterministic too.
+        let run_reseeded = || {
+            let mut acc = Accumulator::with_seed(32, 7);
+            for i in 0..150u64 {
+                acc.ingest(&probe_sample(1000 + i, 10.0, 30.0));
+            }
+            acc.reseed(99);
+            for i in 150..300u64 {
+                acc.ingest(&probe_sample(1000 + i, 10.0, 30.0));
+            }
+            acc.examples().cloned().collect::<Vec<Example>>()
+        };
+        assert_eq!(run_reseeded(), run_reseeded());
+    }
+
+    #[test]
+    fn reservoir_keeps_a_spread_of_the_whole_history() {
+        // FIFO would retain only m ∈ [1288, 1320); the reservoir must keep
+        // evidence from both the old and the recent halves of the stream.
+        let mut acc = Accumulator::with_seed(32, 11);
+        for i in 0..320u64 {
+            acc.ingest(&probe_sample(1000 + i, 10.0, 30.0));
+        }
+        assert_eq!(acc.labeled_len(), 32);
+        let old = acc.examples().filter(|e| e.feats[5] < 1160.0).count();
+        let recent = acc.examples().filter(|e| e.feats[5] >= 1160.0).count();
+        assert!(old > 0, "whole-history sampling keeps old evidence");
+        assert!(recent > 0, "…and new evidence (old={old} recent={recent})");
+    }
+
     #[test]
     fn store_roundtrips_examples_and_model() {
         let dir = std::env::temp_dir().join("mtnn_online_store_test");
@@ -494,9 +818,10 @@ mod tests {
             },
         ];
         let sel = Selector::train_default(&collect_paper_dataset());
-        trainer::save_store(&path, examples.iter(), sel.model.as_gbdt()).unwrap();
-        let (back, model) = trainer::load_store(&path).unwrap();
+        trainer::save_store(&path, examples.iter(), 1234, sel.model.as_gbdt()).unwrap();
+        let (back, seen, model) = trainer::load_store(&path).unwrap();
         assert_eq!(back, examples);
+        assert_eq!(seen, 1234, "labeled-history length roundtrips");
         let g = model.expect("model persisted");
         for m in [128u64, 2048, 16384] {
             let row = crate::selector::features(&GTX1080, m, m, m);
@@ -517,11 +842,63 @@ mod tests {
             feats: [1.0; 8],
             label: -1,
         }];
-        trainer::save_store(&path, examples.iter(), None).unwrap();
-        let (back, model) = trainer::load_store(&path).unwrap();
+        trainer::save_store(&path, examples.iter(), 1, None).unwrap();
+        let (back, seen, model) = trainer::load_store(&path).unwrap();
         assert_eq!(back, examples);
+        assert_eq!(seen, 1);
         assert!(model.is_none());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn store_without_seen_falls_back_to_example_count() {
+        // Stores written before the `seen` field existed must still load,
+        // with the example count as the (pre-restart minimum) history.
+        let dir = std::env::temp_dir().join("mtnn_online_store_noseen");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("store.json");
+        std::fs::write(
+            &path,
+            r#"{"format": "mtnn-online-v1",
+                "examples": [{"g": 1, "f": [1,2,3,4,5,6,7,8], "y": 1}]}"#,
+        )
+        .unwrap();
+        let (back, seen, model) = trainer::load_store(&path).unwrap();
+        assert_eq!(back.len(), 1);
+        assert_eq!(seen, 1);
+        assert!(model.is_none());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn preload_restores_reservoir_replacement_odds() {
+        // A restarted service must behave like the unrestarted one: the
+        // persisted `seen` count keeps replacement probability cap/seen
+        // instead of treating the reloaded reservoir as the whole history
+        // (which would let new traffic overwrite it almost immediately).
+        let mut first = Accumulator::with_seed(32, 7);
+        for i in 0..300u64 {
+            first.ingest(&probe_sample(1000 + i, 10.0, 30.0));
+        }
+        let persisted: Vec<Example> = first.examples().cloned().collect();
+        let mut restarted = Accumulator::with_seed(32, 7);
+        restarted.preload(persisted.clone(), first.seen_labeled());
+        assert_eq!(restarted.labeled_len(), 32);
+        assert_eq!(restarted.seen_labeled(), 300);
+        // Feed 40 post-restart examples. With the restored count each
+        // replaces a slot with p = 32/(301..341) ≈ 0.1 (seeded outcome: 5
+        // replacements, 27 survivors); if preload treated the reloaded
+        // reservoir as the whole history, p would start at 32/33 ≈ 0.97
+        // and only 17 persisted slots survive — so the bound below
+        // discriminates the regression.
+        for i in 0..40u64 {
+            restarted.ingest(&probe_sample(9000 + i, 10.0, 30.0));
+        }
+        let survived = restarted
+            .examples()
+            .filter(|e| persisted.contains(*e))
+            .count();
+        assert!(survived >= 25, "persisted history overwritten: {survived}/32");
     }
 
     #[test]

@@ -11,9 +11,11 @@
 //!
 //! Backpressure is *drop-oldest-offered*: when the ring is full the push
 //! fails and the sample is counted in `dropped` — the serving hot path
-//! never waits on the trainer. Telemetry is lossy by design; the labels
-//! that matter (shadow probes) are sparse enough that a sanely sized ring
-//! effectively never drops them.
+//! never waits on the trainer. Telemetry is lossy by design. Under the
+//! adaptive probe schedule the labeled fraction is densest exactly when
+//! the model is drifting (interval pinned at `probe_every_min`), so size
+//! the ring for the *min* interval, not the stable-state one; at the
+//! sparse end the epsilon-floor trickle is negligible ring pressure.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -1,22 +1,39 @@
 //! The background trainer: drains the sample ring, accumulates labeled
-//! examples, refits the GBDT, and promotes challengers that beat the
-//! incumbent on a held-out slice.
+//! examples into a bounded reservoir, refits the GBDT, and promotes
+//! challengers that beat the incumbent on a held-out slice.
 //!
 //! Labels come from two sources:
 //!
 //! * **shadow probes** — both algorithms ran for one request, so the
-//!   measured winner is a directly labeled example (one per probe);
+//!   measured winner is a directly labeled example (one per probe). Probe
+//!   latencies *also* fold into the per-key single-sided stats, so
+//!   probe-heavy shapes keep enriching the paired-example path instead of
+//!   starving it;
 //! * **paired singles** — regular traffic only runs the chosen algorithm,
 //!   but once a shape key has observed *both* NT and TNN latencies (e.g.
 //!   the model flip-flopped, or a forced baseline shared the router), the
 //!   per-key mean latencies yield one synthetic labeled example.
 //!
+//! The example store is a **deterministic reservoir**: until
+//! `max_examples` is reached every labeled example is kept; past the cap,
+//! Algorithm R (seeded, reseeded per retrain sequence number) replaces a
+//! uniformly random slot with probability `cap / seen`, so the training
+//! set stays an unbiased subsample of the *whole* labeled history — a
+//! FIFO window would forget everything older than the cap — and
+//! `retrain_once` fits on at most `max_examples` rows no matter how long
+//! the service has been up. The deliberate tradeoff: whole-history
+//! uniformity means post-drift examples enter slowly (`cap / seen` each)
+//! once `seen ≫ cap`, so a very-long-uptime service adapts to a regime
+//! change more slowly than a FIFO would; a recency-biased reservoir
+//! (e.g. Aggarwal's exponential bias) is the listed ROADMAP follow-up.
+//!
 //! A retrain never swaps blindly: the candidate is evaluated against the
 //! incumbent on the same held-out slice and promoted only when strictly
 //! better (`promotions`); losing candidates are discarded and counted as
-//! `rollbacks`. The accumulated examples (and the live GBDT) persist as
-//! JSON via [`crate::util::json`] so a restarted service warm-starts
-//! instead of relearning from zero.
+//! `rollbacks`. After each retrain the drift window is decayed (not
+//! reset) via [`crate::online::DriftTracker::decay`]. The accumulated
+//! examples (and the live GBDT) persist as JSON via [`crate::util::json`]
+//! so a restarted service warm-starts instead of relearning from zero.
 
 use super::{OnlineHub, Sample};
 use crate::ml::data::Dataset;
@@ -24,7 +41,8 @@ use crate::ml::gbdt::{Gbdt, GbdtParams};
 use crate::ml::Classifier;
 use crate::selector::{Selector, TrainedModel};
 use crate::util::json::Json;
-use std::collections::{HashMap, VecDeque};
+use crate::util::rng::{mix64, Xoshiro256pp};
+use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -47,39 +65,80 @@ struct KeyStats {
     tnn_n: u64,
 }
 
+/// Default reservoir seed (overridden per retrain via [`Accumulator::reseed`]).
+const RESERVOIR_SEED: u64 = 0xA11E_5EED_0E5E_4701;
+
 /// Single-threaded accumulator owned by the trainer thread.
 pub struct Accumulator {
-    examples: VecDeque<Example>,
+    examples: Vec<Example>,
     by_key: HashMap<(u64, u64, u64, u64), KeyStats>,
     max_examples: usize,
+    /// Labeled examples ever offered (drives reservoir replacement odds).
+    seen_labeled: u64,
+    rng: Xoshiro256pp,
 }
 
 impl Accumulator {
     pub fn new(max_examples: usize) -> Accumulator {
+        Accumulator::with_seed(max_examples, RESERVOIR_SEED)
+    }
+
+    /// An accumulator whose reservoir decisions are driven by `seed` —
+    /// identical seeds and identical ingest streams produce identical
+    /// example sets.
+    pub fn with_seed(max_examples: usize, seed: u64) -> Accumulator {
         Accumulator {
-            examples: VecDeque::new(),
+            examples: Vec::new(),
             by_key: HashMap::new(),
             max_examples: max_examples.max(16),
+            seen_labeled: 0,
+            rng: Xoshiro256pp::new(seed),
         }
     }
 
-    /// Seed with previously persisted examples (warm restart).
-    pub fn preload(&mut self, examples: Vec<Example>) {
+    /// Re-key the reservoir RNG. The trainer calls this with the retrain
+    /// sequence number after every retrain, so each inter-retrain window's
+    /// replacement choices are deterministic given `(seed, seq)` — a
+    /// restarted service replays identically.
+    pub fn reseed(&mut self, seed: u64) {
+        self.rng = Xoshiro256pp::new(seed);
+    }
+
+    /// Seed with previously persisted examples (warm restart). `seen` is
+    /// the persisted labeled-history length; restoring it keeps the
+    /// post-restart replacement odds (`cap / seen`) identical to the
+    /// unrestarted service — without it the reloaded reservoir would be
+    /// treated as the whole history and new traffic would overwrite it
+    /// almost immediately.
+    pub fn preload(&mut self, examples: Vec<Example>, seen: u64) {
         for e in examples {
             self.push_example(e);
         }
+        self.seen_labeled = self.seen_labeled.max(seen);
     }
 
+    /// Append below the cap; Algorithm R above it: the t-th labeled
+    /// example ever seen replaces a uniform slot with probability
+    /// `cap / t`, keeping the reservoir a uniform sample of the full
+    /// history.
     fn push_example(&mut self, e: Example) {
-        if self.examples.len() >= self.max_examples {
-            self.examples.pop_front(); // keep the freshest evidence
+        self.seen_labeled += 1;
+        if self.examples.len() < self.max_examples {
+            self.examples.push(e);
+            return;
         }
-        self.examples.push_back(e);
+        let j = self.rng.next_bounded(self.seen_labeled) as usize;
+        if j < self.examples.len() {
+            self.examples[j] = e;
+        }
     }
 
     /// Fold one runtime sample in. Returns `true` when it yielded a
-    /// directly labeled example (a shadow probe).
+    /// directly labeled example (a shadow probe). Probe samples *also*
+    /// contribute both measured sides to the per-key stats, so a shape
+    /// that is mostly probed still accrues paired-single evidence.
     pub fn ingest(&mut self, s: &Sample) -> bool {
+        self.fold_key_stats(s);
         if let Some(label) = s.measured_label() {
             self.push_example(Example {
                 gpu_id: s.gpu_id,
@@ -88,13 +147,17 @@ impl Accumulator {
             });
             return true;
         }
-        // The key-stats map is capped like the example deque: a long-lived
-        // service seeing unbounded distinct shapes must not grow trainer
-        // RSS (or retrain cost) without bound. New keys past the cap are
-        // simply not paired — probes still cover them.
+        false
+    }
+
+    fn fold_key_stats(&mut self, s: &Sample) {
+        // The key-stats map is capped like the example reservoir: a
+        // long-lived service seeing unbounded distinct shapes must not
+        // grow trainer RSS (or retrain cost) without bound. New keys past
+        // the cap are simply not paired — probes still cover them.
         let key = (s.gpu_id, s.m, s.n, s.k);
         if !self.by_key.contains_key(&key) && self.by_key.len() >= self.max_examples {
-            return false;
+            return;
         }
         let stats = self.by_key.entry(key).or_insert_with(|| KeyStats {
             feats: s.features(),
@@ -111,12 +174,17 @@ impl Accumulator {
             stats.tnn_sum += s.lat_tnn_us;
             stats.tnn_n += 1;
         }
-        false
     }
 
-    /// Probe-labeled examples currently held.
+    /// Probe-labeled examples currently held (≤ `max_examples`).
     pub fn labeled_len(&self) -> usize {
         self.examples.len()
+    }
+
+    /// Labeled examples ever offered, including those the reservoir
+    /// replaced or declined.
+    pub fn seen_labeled(&self) -> u64 {
+        self.seen_labeled
     }
 
     pub fn examples(&self) -> impl Iterator<Item = &Example> {
@@ -165,9 +233,10 @@ pub fn accuracy_of(sel: &Selector, d: &Dataset) -> f64 {
     hits as f64 / d.len() as f64
 }
 
-/// One retrain attempt: fit a challenger on the accumulated dataset,
-/// evaluate challenger vs incumbent on a held-out slice, promote only a
-/// strict winner. Returns `true` on promotion.
+/// One retrain attempt: fit a challenger on the accumulated dataset (the
+/// bounded reservoir plus paired singles — at most `2·max_examples` rows
+/// regardless of uptime), evaluate challenger vs incumbent on a held-out
+/// slice, promote only a strict winner. Returns `true` on promotion.
 pub fn retrain_once(hub: &OnlineHub, acc: &Accumulator, seq: u64) -> bool {
     let ds = acc.to_dataset();
     if ds.len() < 4 {
@@ -208,7 +277,7 @@ pub fn persist(hub: &OnlineHub, acc: &Accumulator) {
         return;
     };
     let live = hub.live.current();
-    if let Err(e) = save_store(path, acc.examples(), live.model.as_gbdt()) {
+    if let Err(e) = save_store(path, acc.examples(), acc.seen_labeled(), live.model.as_gbdt()) {
         eprintln!("online: failed to persist {}: {e}", path.display());
     }
 }
@@ -217,11 +286,13 @@ pub fn persist(hub: &OnlineHub, acc: &Accumulator) {
 
 const FORMAT: &str = "mtnn-online-v1";
 
-/// Write the online store: accumulated labeled examples plus (when the
-/// live model is a GBDT) the model itself.
+/// Write the online store: accumulated labeled examples, the labeled
+/// history length (`seen` — preserves reservoir replacement odds across
+/// restarts), plus (when the live model is a GBDT) the model itself.
 pub fn save_store<'a>(
     path: &Path,
     examples: impl Iterator<Item = &'a Example>,
+    seen: u64,
     model: Option<&Gbdt>,
 ) -> anyhow::Result<()> {
     let rows: Vec<Json> = examples
@@ -234,6 +305,7 @@ pub fn save_store<'a>(
         .collect();
     let mut j = Json::obj()
         .set("format", FORMAT)
+        .set("seen", seen as i64)
         .set("examples", Json::Arr(rows));
     if let Some(g) = model {
         j = j.set("model", g.to_json());
@@ -249,8 +321,10 @@ pub fn save_store<'a>(
     Ok(())
 }
 
-/// Load a persisted store back: `(examples, live model if present)`.
-pub fn load_store(path: &Path) -> anyhow::Result<(Vec<Example>, Option<Gbdt>)> {
+/// Load a persisted store back: `(examples, labeled-history length, live
+/// model if present)`. Stores written before the `seen` field existed
+/// fall back to the example count (the pre-restart minimum).
+pub fn load_store(path: &Path) -> anyhow::Result<(Vec<Example>, u64, Option<Gbdt>)> {
     let text = std::fs::read_to_string(path)?;
     let j = Json::parse(&text)?;
     anyhow::ensure!(
@@ -286,18 +360,25 @@ pub fn load_store(path: &Path) -> anyhow::Result<(Vec<Example>, Option<Gbdt>)> {
             label: y as i8,
         });
     }
+    let seen = j
+        .get("seen")
+        .as_i64()
+        .map(|v| v.max(0) as u64)
+        .unwrap_or(0)
+        .max(examples.len() as u64);
     let model = match j.get("model") {
         Json::Null => None,
         m => Some(Gbdt::from_json(m)?),
     };
-    Ok((examples, model))
+    Ok((examples, seen, model))
 }
 
 // ---- the trainer thread ----------------------------------------------------
 
 /// Spawn the background trainer. It drains the ring every
 /// `poll_interval`, retrains when the drift tracker trips or enough new
-/// labels arrived, and exits (after a final drain + persist) once
+/// labels arrived, decays (never erases) the drift window after each
+/// retrain, and exits (after a final drain + persist) once
 /// [`OnlineHub::request_shutdown`] is called.
 pub fn spawn(hub: Arc<OnlineHub>, mut acc: Accumulator) -> std::thread::JoinHandle<()> {
     std::thread::Builder::new()
@@ -319,13 +400,25 @@ fn run(hub: &OnlineHub, acc: &mut Accumulator) {
         }
         let enough = acc.labeled_len() >= cfg.retrain_min_labeled.max(4);
         let volume = cfg.retrain_every_labeled > 0 && since_last >= cfg.retrain_every_labeled;
-        let drift = hub
-            .drift
-            .triggered(cfg.drift_threshold, cfg.drift_min_probes);
+        // Decay preserves the mispredict *rate*, so a drifted window can
+        // stay over threshold across polls; gate the drift trigger on at
+        // least one new labeled example since the last retrain, or an
+        // unchanged dataset would be refit every poll until the weight
+        // decays under drift_min_probes (forever at drift_decay = 1).
+        let drift = since_last > 0
+            && hub
+                .drift
+                .triggered(cfg.drift_threshold, cfg.drift_min_probes);
         if enough && (volume || drift) {
             seq += 1;
             retrain_once(hub, acc, seq);
-            hub.drift.reset();
+            // Attenuate — don't erase — the drift evidence, and re-key
+            // the reservoir per retrain sequence so the next window's
+            // replacement choices are deterministic given `seq`. Probes
+            // recorded while the retrain ran survive (scaled at worst),
+            // unlike the old reset() which dropped them.
+            hub.drift.decay(cfg.drift_decay);
+            acc.reseed(RESERVOIR_SEED ^ mix64(seq));
             since_last = 0;
         }
     }

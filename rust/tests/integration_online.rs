@@ -5,13 +5,16 @@
 //! restarted router warm-starts from the persisted JSON store. Never
 //! skipped (no PJRT artifacts required).
 
-use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
+use mtnn::coordinator::{
+    CoordinatorMetrics, Engine, EngineConfig, GemmRequest, Router, RouterConfig,
+};
 use mtnn::gemm::cpu::{matmul_nt, Matrix};
 use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
-use mtnn::online::OnlineConfig;
+use mtnn::online::{LiveSelector, OnlineConfig, OnlineHub};
+use mtnn::selector::cache::DecisionCache;
 use mtnn::selector::{features, SelectionReason, Selector, TrainedModel};
 use mtnn::testutil::assert_allclose;
 use std::sync::Arc;
@@ -79,7 +82,11 @@ fn request(m: u64, n: u64, k: u64, seed: u64) -> GemmRequest {
 
 fn aggressive_online() -> OnlineConfig {
     OnlineConfig {
-        probe_every: 1,
+        // Pin the adaptive schedule to probe-every-request so recovery
+        // converges fast and deterministically.
+        probe_every_min: 1,
+        probe_every_max: 1,
+        probe_epsilon: 0.0,
         retrain_min_labeled: 16,
         retrain_every_labeled: 24,
         drift_threshold: 0.2,
@@ -187,7 +194,8 @@ fn hot_swap_under_concurrent_traffic_is_race_free() {
     )
     .unwrap();
     let online = OnlineConfig {
-        probe_every: 2,
+        probe_every_min: 2,
+        probe_every_max: 2,
         retrain_min_labeled: 8,
         retrain_every_labeled: 8,
         drift_min_probes: 4,
@@ -341,4 +349,71 @@ fn warm_restart_recovers_from_the_persisted_store() {
     drop(router);
     engine.shutdown();
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A selector that always answers NT (a 0-tree GBDT keeps only its base
+/// score) — the scheduler tests below never consult it, but the hub needs
+/// a live model.
+fn constant_nt_selector() -> Selector {
+    let p = GbdtParams {
+        n_estimators: 0,
+        ..GbdtParams::default()
+    };
+    let mut g = Gbdt::new(p);
+    g.fit(&[vec![0.0; 8], vec![1.0; 8]], &[1.0, 1.0]);
+    Selector::new(TrainedModel::Gbdt(g))
+}
+
+#[test]
+fn adaptive_scheduler_probes_under_drift_and_backs_off_when_stable() {
+    // Acceptance: under drifting traffic the adaptive scheduler probes at
+    // least 2× more often than under stable traffic, and stable-traffic
+    // probe overhead lands below the old fixed 1-in-16 schedule — both
+    // asserted on hub counters, deterministically (no engine involved).
+    let cfg = OnlineConfig {
+        probe_every_min: 4,
+        probe_every_max: 64,
+        probe_epsilon: 0.02,
+        drift_threshold: 0.15,
+        ..OnlineConfig::default()
+    };
+    let requests = 1000u64;
+    let run = |mispredict: bool| -> (u64, u64) {
+        let hub = OnlineHub::new(
+            cfg.clone(),
+            Arc::new(LiveSelector::new(constant_nt_selector())),
+            Arc::new(DecisionCache::default()),
+            Arc::new(CoordinatorMetrics::default()),
+        );
+        for _ in 0..requests {
+            if hub.should_probe(GTX1080.id, 256, 256, 256) {
+                // Predicted NT; a mispredicting world measures TNN faster.
+                let (nt, tnn) = if mispredict { (90.0, 40.0) } else { (10.0, 40.0) };
+                hub.record_probe(&GTX1080, 256, 256, 256, 1, nt, tnn);
+            }
+        }
+        let snap = hub.metrics.snapshot();
+        assert_eq!(
+            snap.shadow_probes,
+            snap.probes_scheduled + snap.probes_bandit,
+            "every probe decision is attributed to exactly one cause"
+        );
+        assert!(snap.probes_bandit > 0, "epsilon floor explores: {}", snap.render());
+        (snap.shadow_probes, snap.probe_interval)
+    };
+
+    let (stable_probes, stable_interval) = run(false);
+    let (drifting_probes, drifting_interval) = run(true);
+    assert_eq!(stable_interval, 64, "no drift evidence → sparsest schedule");
+    assert_eq!(drifting_interval, 4, "sustained drift → densest schedule");
+    assert!(
+        stable_probes < requests / 16,
+        "stable overhead beats the fixed 1-in-16 baseline: {stable_probes} probes \
+         vs {} fixed",
+        requests / 16
+    );
+    assert!(
+        drifting_probes >= 2 * stable_probes,
+        "drift must at least double probing: drifting={drifting_probes} stable={stable_probes}"
+    );
 }

@@ -11,8 +11,9 @@ import json
 import sys
 
 REGRESSION_WARN_PCT = 25.0
-# Lower is better for per-op latencies; higher is better for throughput.
-VALUE_KEYS = (("ns_per_op", False), ("req_per_s", True))
+# Lower is better for per-op latencies and overhead fractions; higher is
+# better for throughput.
+VALUE_KEYS = (("ns_per_op", False), ("req_per_s", True), ("probe_fraction", False))
 
 
 def load_rows(path):
@@ -56,6 +57,9 @@ def main():
             continue
         old_val = float(old[metric])
         if old_val == 0:
+            # A zero baseline admits no percentage delta, but the row must
+            # never vanish from the report without trace.
+            print(f"  {name}: {metric}={val:.1f} (baseline 0 — skipped)")
             continue
         delta_pct = (val - old_val) / old_val * 100.0
         regressed = delta_pct > REGRESSION_WARN_PCT if not higher_is_better else -delta_pct > REGRESSION_WARN_PCT
