@@ -17,12 +17,25 @@
 //!
 //!     cargo run --release --example serve_gemm -- \
 //!         --backend sim --online --mistrained --requests 200
+//!
+//! `--trace chaos` runs the adversarial workload lab instead: a seeded
+//! trace replayed as fast as possible through a restartable sim-backed
+//! pool wrapped in the fault-injecting chaos backend (transient
+//! failures, contained panics, latency spikes), with one worker killed
+//! and restarted mid-trace, the online loop recovering a mistrained
+//! model throughout, and the conservation invariant
+//! `completed + failed + shed == submitted` checked at the end:
+//!
+//!     cargo run --release --example serve_gemm -- \
+//!         --trace chaos --requests 400 --clients 4 --workers 2
 
-use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
+use mtnn::coordinator::{
+    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, Router, RouterConfig,
+};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::gemm::cpu::Matrix;
 use mtnn::gemm::{Algorithm, GemmShape};
-use mtnn::gpusim::GTX1080;
+use mtnn::gpusim::{SimExecutor, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
 use mtnn::online::OnlineConfig;
@@ -260,6 +273,136 @@ fn run_online(
     Ok(())
 }
 
+/// The adversarial workload lab as a runnable demo and CI smoke: a
+/// seeded trace replayed as fast as possible through a restartable sim
+/// pool wrapped in the chaos backend, one worker killed and restarted
+/// mid-trace, the online loop retraining a mistrained seed model the
+/// whole time, and conservation verified on both the client-side replay
+/// ledger and the server-side metrics before anything is printed.
+fn run_trace_chaos(requests: usize, clients: usize, workers: usize) -> anyhow::Result<()> {
+    use mtnn::workload::{
+        replay_with_chaos, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind, ReplayClock,
+        ReplayOptions, Trace, WorkerChaos,
+    };
+
+    // A sibling must be able to steal the dead worker's backlog while it
+    // is down, so the pool never runs with fewer than two workers.
+    let workers = workers.max(2);
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 0xBAD_5EED,
+        fail_prob: 0.04,
+        panic_prob: 0.02,
+        spike_prob: 0.04,
+        spike: Duration::from_micros(300),
+    };
+    let stats_pool = Arc::clone(&stats);
+    let mut engine = Engine::restartable(
+        EngineConfig {
+            workers,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                chaos_cfg,
+                i,
+                Arc::clone(&stats_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )?;
+    let online = OnlineConfig {
+        probe_every_min: 2,
+        probe_every_max: 32,
+        probe_epsilon: 0.25,
+        retrain_min_labeled: 16,
+        retrain_every_labeled: 16,
+        drift_threshold: 0.2,
+        drift_min_probes: 16,
+        poll_interval: Duration::from_millis(10),
+        ..OnlineConfig::default()
+    };
+    let router = Router::new(
+        mistrained_selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            ..RouterConfig::online(online)
+        },
+    );
+
+    let shapes: Vec<GemmShape> = [
+        (128u64, 128u64, 128u64),
+        (256, 256, 256),
+        (128, 256, 64),
+        (192, 192, 192),
+        (96, 256, 128),
+    ]
+    .into_iter()
+    .map(|(m, n, k)| GemmShape::new(m, n, k))
+    .collect();
+    let rps = 400.0;
+    let trace = Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: &GTX1080,
+            shapes,
+            rps,
+            duration: Duration::from_secs_f64((requests as f64 / rps).max(0.25)),
+        }],
+        0xC4A05,
+    );
+    router.warmup(&trace.distinct_shapes())?;
+
+    let n = trace.len() as u64;
+    let chaos = WorkerChaos {
+        worker: 0,
+        kill_after: n / 4,
+        restart_after: n / 2,
+    };
+    let t0 = Instant::now();
+    let report = replay_with_chaos(
+        &router,
+        &mut engine,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Afap,
+            clients: clients.max(1),
+            seed: 0x5EED,
+        },
+        &chaos,
+    )?;
+    // Give the background trainer a beat to drain the ring and retrain
+    // on what the chaos traffic produced.
+    let deadline = Instant::now() + Duration::from_secs(15);
+    while router.metrics.snapshot().retrains == 0 && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let wall = t0.elapsed();
+    let snap = router.metrics.snapshot();
+    report.verify_conservation().map_err(anyhow::Error::msg)?;
+    snap.verify_conservation().map_err(anyhow::Error::msg)?;
+    println!(
+        "     chaos: {} trace events replayed in {wall:.2?}; injected failures={} panics={} \
+         spikes={}; worker {} killed after {} submissions, restarted after {}",
+        trace.len(),
+        stats.injected_failures.load(std::sync::atomic::Ordering::Relaxed),
+        stats.injected_panics.load(std::sync::atomic::Ordering::Relaxed),
+        stats.injected_spikes.load(std::sync::atomic::Ordering::Relaxed),
+        chaos.worker,
+        chaos.kill_after,
+        chaos.restart_after,
+    );
+    println!(
+        "conservation OK: completed={} + failed={} + shed={} == submitted={}",
+        report.completed, report.failed, report.shed, report.submitted
+    );
+    println!("    server: {}", snap.render());
+    engine.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
     let requests: usize = args.get_num("requests", 64);
@@ -281,8 +424,19 @@ fn main() -> anyhow::Result<()> {
     let backend = args.get("backend", default_backend);
     let online = args.flag("online");
     let mistrained = args.flag("mistrained");
+    let trace_mode = args.get("trace", "");
     args.finish()?;
-    if online {
+    if trace_mode == "chaos" {
+        println!(
+            "replaying a seeded ~{requests}-request chaos trace from {clients} concurrent \
+             clients on a {}-worker sim engine pool (fault injection + worker kill/restart \
+             + online adaptive selection)",
+            workers.max(2)
+        );
+        run_trace_chaos(requests, clients, workers)?;
+    } else if !trace_mode.is_empty() {
+        anyhow::bail!("unknown --trace '{trace_mode}' (chaos)");
+    } else if online {
         println!(
             "serving {requests} NT-operation requests from {clients} concurrent clients \
              on a {workers}-worker {backend} engine pool (online adaptive selection)"

@@ -29,6 +29,16 @@
 //!   measured (or, for the simulated GPU, modeled) execution latency in
 //!   µs. This is the telemetry hook the online adaptive-selection loop
 //!   (`crate::online`) records its training samples from.
+//! * **Panic containment** — a backend that panics inside
+//!   `execute`/`execute_timed` fails *that job* (the caller sees an error
+//!   describing the panic) instead of killing the worker thread and
+//!   stranding everything queued behind it. The worker keeps serving.
+//! * **Chaos kill/restart** — pools built with [`Engine::restartable`]
+//!   keep their backend factory, so the chaos harness
+//!   (`crate::workload`) can [`Engine::kill_worker`] mid-trace (the
+//!   worker exits, its queue stays open and stealable) and
+//!   [`Engine::restart_worker`] it with a fresh backend. Shutdown sweeps
+//!   dead workers' stranded queues so no client ever hangs.
 //! * **Graceful shutdown** — `Shutdown` is queued behind in-flight work,
 //!   so every job accepted before [`Engine::shutdown`] was called is
 //!   executed (drain), then workers join. A submission *racing* with
@@ -72,6 +82,12 @@ enum Cmd {
     /// Eagerly compile artifacts.
     Warmup(Vec<String>, mpsc::Sender<anyhow::Result<()>>),
     Shutdown,
+    /// Chaos hook ([`Engine::kill_worker`]): the worker exits immediately
+    /// *without* draining or closing its queue — queued work is stranded
+    /// exactly as a crashed worker would strand it, until a sibling
+    /// steals it, [`Engine::restart_worker`] revives the worker, or
+    /// shutdown's final sweep fails it.
+    Die,
 }
 
 /// Pool geometry and micro-batching policy.
@@ -253,6 +269,37 @@ impl PoolShared {
             }
         }
         None
+    }
+
+    /// Push a control command at the *front* of a queue, ahead of queued
+    /// work. Ignores capacity like every control push. Used by
+    /// [`Engine::kill_worker`] so `Die` preempts the victim's backlog
+    /// instead of waiting behind it.
+    fn push_front_control(&self, idx: usize, cmd: Cmd) -> Result<(), PushErr> {
+        let mut q = self.queues[idx].state.lock().unwrap();
+        if q.closed {
+            return Err(PushErr::Closed);
+        }
+        q.items.push_front(cmd);
+        drop(q);
+        self.bump();
+        Ok(())
+    }
+
+    /// Return a worker's deferred stash to the front of its queue in
+    /// arrival order. A dying worker must not take deferred work to the
+    /// grave: back on the queue, a sibling can steal it and a restarted
+    /// worker resumes it.
+    fn restash(&self, me: usize, stash: &mut VecDeque<Cmd>) {
+        if stash.is_empty() {
+            return;
+        }
+        let mut q = self.queues[me].state.lock().unwrap();
+        while let Some(cmd) = stash.pop_back() {
+            q.items.push_front(cmd);
+        }
+        drop(q);
+        self.bump();
     }
 
     /// Mark a queue closed and take whatever is still in it (the teardown
@@ -504,9 +551,21 @@ fn worker_loop(
                 g.max.fetch_max(batch.len() as u64, Ordering::Relaxed);
                 for job in batch {
                     let refs: Vec<&Matrix> = job.inputs.iter().collect();
-                    let result = backend
-                        .execute_timed(&job.artifact, &refs)
-                        .map(|(outputs, exec_us)| ExecReply { outputs, exec_us });
+                    // Panic containment: a panicking backend fails THIS
+                    // job — the caller gets an error (counted as `failed`
+                    // upstream) — instead of killing the worker thread and
+                    // stranding everything queued behind it.
+                    let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        backend.execute_timed(&job.artifact, &refs)
+                    }))
+                    .unwrap_or_else(|p| {
+                        Err(anyhow::anyhow!(
+                            "backend panicked executing {}: {}",
+                            job.artifact,
+                            panic_message(p.as_ref())
+                        ))
+                    })
+                    .map(|(outputs, exec_us)| ExecReply { outputs, exec_us });
                     // Gauge drops before the response is visible, so a
                     // caller that just received its result never observes
                     // a stale depth.
@@ -522,6 +581,14 @@ fn worker_loop(
             // Drain: service the stash and whatever is still queued, then
             // exit instead of parking for more work.
             Cmd::Shutdown => draining = true,
+            // Chaos kill: exit WITHOUT the teardown sweep — the queue
+            // stays open so siblings can steal the backlog and a
+            // restarted worker can resume it. Deferred work goes back to
+            // the queue first; nothing rides to the grave in the stash.
+            Cmd::Die => {
+                shared.restash(me, &mut stash);
+                return;
+            }
         }
     }
     // Teardown sweep: a submit racing with shutdown can land a command
@@ -538,19 +605,42 @@ fn worker_loop(
             Cmd::Warmup(_, ack) => {
                 let _ = ack.send(Err(anyhow::anyhow!("engine is shut down")));
             }
-            Cmd::Shutdown => {}
+            Cmd::Shutdown | Cmd::Die => {}
         }
+    }
+}
+
+/// Best-effort extraction of a caught panic payload's message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s
+    } else {
+        "non-string panic payload"
     }
 }
 
 // ---- the pool --------------------------------------------------------------
 
+/// Backend factory kept by restartable engines: rebuilds worker `i`'s
+/// backend after a chaos kill.
+type BackendFactory = Box<dyn FnMut(usize) -> anyhow::Result<Box<dyn ExecBackend>> + Send>;
+
 /// The engine pool: construct with a backend factory ([`Engine::pool`]) or
 /// one of the named constructors; drop (or call [`Engine::shutdown`]) to
-/// drain and stop.
+/// drain and stop. [`Engine::restartable`] additionally keeps the factory
+/// so workers can be killed and revived mid-run ([`Engine::kill_worker`] /
+/// [`Engine::restart_worker`]) — the chaos-harness surface.
 pub struct Engine {
     handle: EngineHandle,
-    joins: Vec<JoinHandle<()>>,
+    /// `None` marks a worker killed via [`Engine::kill_worker`] and not
+    /// (yet) restarted.
+    joins: Vec<Option<JoinHandle<()>>>,
+    /// Present only on [`Engine::restartable`] pools.
+    factory: Option<BackendFactory>,
+    batch_window: Duration,
+    max_batch: usize,
 }
 
 impl Engine {
@@ -561,6 +651,26 @@ impl Engine {
     where
         F: FnMut(usize) -> anyhow::Result<Box<dyn ExecBackend>>,
     {
+        Engine::assemble(config, &mut make)
+    }
+
+    /// Like [`Engine::pool`], but keeps the factory so
+    /// [`Engine::restart_worker`] can rebuild a killed worker's backend.
+    /// The extra `Send + 'static` bounds are the price of storing it.
+    pub fn restartable<F>(config: EngineConfig, make: F) -> anyhow::Result<Engine>
+    where
+        F: FnMut(usize) -> anyhow::Result<Box<dyn ExecBackend>> + Send + 'static,
+    {
+        let mut boxed: BackendFactory = Box::new(make);
+        let mut engine = Engine::assemble(config, &mut *boxed)?;
+        engine.factory = Some(boxed);
+        Ok(engine)
+    }
+
+    fn assemble(
+        config: EngineConfig,
+        make: &mut dyn FnMut(usize) -> anyhow::Result<Box<dyn ExecBackend>>,
+    ) -> anyhow::Result<Engine> {
         let workers = config.workers.max(1);
         let queue_depth = config.queue_depth.max(1);
         let max_batch = config.max_batch.max(1);
@@ -578,26 +688,19 @@ impl Engine {
             ticket: Mutex::new(0),
             work: Condvar::new(),
         });
-        let mut joins = Vec::with_capacity(workers);
+        let mut joins: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(workers);
         for (i, backend) in backends.into_iter().enumerate() {
-            let shared_w = Arc::clone(&shared);
-            let depths_w = Arc::clone(&depths);
-            let batches_w = Arc::clone(&batches);
-            let spawned = std::thread::Builder::new()
-                .name(format!("mtnn-engine-{i}"))
-                .spawn(move || {
-                    worker_loop(
-                        backend,
-                        shared_w,
-                        depths_w,
-                        batches_w,
-                        i,
-                        config.batch_window,
-                        max_batch,
-                    )
-                });
+            let spawned = Engine::spawn_worker(
+                &shared,
+                &depths,
+                &batches,
+                i,
+                backend,
+                config.batch_window,
+                max_batch,
+            );
             match spawned {
-                Ok(j) => joins.push(j),
+                Ok(j) => joins.push(Some(j)),
                 Err(e) => {
                     // Unwind: stop the workers already running — unlike
                     // the old mpsc design, dropping the handle does not
@@ -605,7 +708,7 @@ impl Engine {
                     for idx in 0..workers {
                         let _ = shared.try_push(idx, Cmd::Shutdown);
                     }
-                    for j in joins.drain(..) {
+                    for j in joins.drain(..).flatten() {
                         let _ = j.join();
                     }
                     return Err(e.into());
@@ -619,7 +722,82 @@ impl Engine {
                 batches,
             },
             joins,
+            factory: None,
+            batch_window: config.batch_window,
+            max_batch,
         })
+    }
+
+    fn spawn_worker(
+        shared: &Arc<PoolShared>,
+        depths: &Arc<Vec<AtomicU64>>,
+        batches: &Arc<Vec<BatchGauge>>,
+        i: usize,
+        backend: Box<dyn ExecBackend>,
+        batch_window: Duration,
+        max_batch: usize,
+    ) -> std::io::Result<JoinHandle<()>> {
+        let shared_w = Arc::clone(shared);
+        let depths_w = Arc::clone(depths);
+        let batches_w = Arc::clone(batches);
+        std::thread::Builder::new()
+            .name(format!("mtnn-engine-{i}"))
+            .spawn(move || {
+                worker_loop(backend, shared_w, depths_w, batches_w, i, batch_window, max_batch)
+            })
+    }
+
+    /// Chaos hook: stop worker `idx` mid-run by injecting [`Cmd::Die`] at
+    /// the *front* of its queue (it preempts the backlog, though a batch
+    /// already collecting finishes first) and joining the thread. The
+    /// queue stays open: queued jobs are stranded — stealable by siblings,
+    /// resumed by [`Engine::restart_worker`], failed by shutdown's final
+    /// sweep — exactly as a crashed worker would leave them.
+    ///
+    /// Caveat: [`EngineHandle::warmup`] waits for an ack from *every*
+    /// worker and will block while one is dead.
+    pub fn kill_worker(&mut self, idx: usize) -> anyhow::Result<()> {
+        let slot = self
+            .joins
+            .get_mut(idx)
+            .ok_or_else(|| anyhow::anyhow!("engine has no worker {idx}"))?;
+        let join = slot
+            .take()
+            .ok_or_else(|| anyhow::anyhow!("worker {idx} is already dead"))?;
+        if self.handle.shared.push_front_control(idx, Cmd::Die).is_err() {
+            self.joins[idx] = Some(join);
+            anyhow::bail!("worker {idx}'s queue is closed");
+        }
+        join.join()
+            .map_err(|_| anyhow::anyhow!("worker {idx} panicked instead of dying cleanly"))
+    }
+
+    /// Revive a worker killed by [`Engine::kill_worker`]: build a fresh
+    /// backend from the stored factory and respawn the thread on the same
+    /// (still-open) queue, resuming whatever is stranded in it. Only
+    /// available on pools built with [`Engine::restartable`].
+    pub fn restart_worker(&mut self, idx: usize) -> anyhow::Result<()> {
+        anyhow::ensure!(idx < self.joins.len(), "engine has no worker {idx}");
+        anyhow::ensure!(
+            self.joins[idx].is_none(),
+            "worker {idx} is still running"
+        );
+        let make = self
+            .factory
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("engine was not built with Engine::restartable"))?;
+        let backend = make(idx)?;
+        let join = Engine::spawn_worker(
+            &self.handle.shared,
+            &self.handle.depths,
+            &self.handle.batches,
+            idx,
+            backend,
+            self.batch_window,
+            self.max_batch,
+        )?;
+        self.joins[idx] = Some(join);
+        Ok(())
     }
 
     /// PJRT pool over an artifact directory. Every worker owns its own
@@ -684,8 +862,27 @@ impl Engine {
             // worker is already gone.
             let _ = self.handle.shared.try_push(idx, Cmd::Shutdown);
         }
-        for j in self.joins.drain(..) {
+        for j in self.joins.drain(..).flatten() {
             let _ = j.join();
+        }
+        // A worker killed mid-run and never restarted leaves its queue
+        // open with work stranded in it (live workers close their own
+        // queues in their teardown sweep; close() is idempotent). Close
+        // every queue and fail the leftovers so no client blocks on a
+        // response forever.
+        for idx in 0..self.handle.shared.queues.len() {
+            for cmd in self.handle.shared.close(idx) {
+                match cmd {
+                    Cmd::Run(job) => {
+                        self.handle.depths[idx].fetch_sub(1, Ordering::Relaxed);
+                        let _ = job.respond.send(Err(anyhow::anyhow!("engine is shut down")));
+                    }
+                    Cmd::Warmup(_, ack) => {
+                        let _ = ack.send(Err(anyhow::anyhow!("engine is shut down")));
+                    }
+                    Cmd::Shutdown | Cmd::Die => {}
+                }
+            }
         }
     }
 }
@@ -924,6 +1121,119 @@ mod tests {
         assert_eq!(c0 + c1, 10, "every job executed exactly once");
         assert!(c0 >= 1 && c1 >= 1, "both workers ran jobs: {c0} vs {c1}");
         assert_eq!(handle.queue_depths(), vec![0, 0], "gauges balanced after steals");
+        engine.shutdown();
+    }
+
+    /// Backend that panics on artifacts containing "boom" and works
+    /// normally otherwise.
+    struct PanickyExecutor;
+
+    impl ExecBackend for PanickyExecutor {
+        fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+            if artifact.contains("boom") {
+                panic!("injected test panic");
+            }
+            Ok(vec![inputs[0].clone()])
+        }
+
+        fn name(&self) -> String {
+            "panicky".into()
+        }
+    }
+
+    #[test]
+    fn backend_panic_fails_the_job_but_not_the_worker() {
+        let engine = Engine::pool(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 8,
+                ..EngineConfig::default()
+            },
+            |_| Ok(Box::new(PanickyExecutor) as Box<dyn ExecBackend>),
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let a = Matrix::random(4, 4, 1);
+        let err = handle
+            .run("nt_boom", vec![a.clone(), a.clone()])
+            .unwrap_err()
+            .to_string();
+        assert!(
+            err.contains("panicked") && err.contains("injected test panic"),
+            "{err}"
+        );
+        // The same worker still serves jobs after containing the panic.
+        let out = handle.run("nt_4x4x4", vec![a.clone(), a]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(handle.queue_depths(), vec![0], "gauge balanced after panic");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn kill_and_restart_worker_resumes_the_stranded_queue() {
+        let mut engine = Engine::restartable(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 16,
+                ..EngineConfig::default()
+            },
+            |_| Ok(Box::new(NativeExecutor) as Box<dyn ExecBackend>),
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let a = Matrix::random(16, 16, 1);
+        let b = Matrix::random(16, 16, 2);
+        let expect = matmul_nt(&a, &b);
+        // Prove the worker is alive, then kill it.
+        handle.run("nt_16x16x16", vec![a.clone(), b.clone()]).unwrap();
+        engine.kill_worker(0).unwrap();
+        assert!(
+            engine.kill_worker(0).unwrap_err().to_string().contains("already dead"),
+            "double kill is rejected"
+        );
+        // Submissions still land in the open queue and are stranded
+        // (nobody to steal in a 1-worker pool) until the restart.
+        let rx = handle.submit("nt_16x16x16".into(), vec![a, b]).unwrap();
+        assert_eq!(handle.queue_depths(), vec![1]);
+        engine.restart_worker(0).unwrap();
+        let out = rx.recv().unwrap().unwrap().outputs;
+        assert_allclose(&out[0].data, &expect.data, 1e-4, 1e-4);
+        assert_eq!(handle.queue_depths(), vec![0]);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_a_dead_workers_stranded_jobs_instead_of_hanging() {
+        let mut engine = Engine::restartable(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 16,
+                ..EngineConfig::default()
+            },
+            |_| Ok(Box::new(NativeExecutor) as Box<dyn ExecBackend>),
+        )
+        .unwrap();
+        let handle = engine.handle();
+        engine.kill_worker(0).unwrap();
+        let a = Matrix::random(8, 8, 1);
+        let rx = handle.submit("nt_8x8x8".into(), vec![a.clone(), a]).unwrap();
+        engine.shutdown();
+        let err = rx.recv().unwrap().unwrap_err().to_string();
+        assert!(err.contains("shut down"), "{err}");
+        assert_eq!(handle.queue_depths(), vec![0], "sweep balanced the gauge");
+    }
+
+    #[test]
+    fn restart_requires_a_restartable_pool() {
+        let mut engine = Engine::native_pool(EngineConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..EngineConfig::default()
+        })
+        .unwrap();
+        engine.kill_worker(0).unwrap();
+        let err = engine.restart_worker(0).unwrap_err().to_string();
+        assert!(err.contains("restartable"), "{err}");
         engine.shutdown();
     }
 

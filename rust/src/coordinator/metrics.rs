@@ -133,10 +133,19 @@ pub struct BatchGauge {
 pub struct CoordinatorMetrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
+    /// Requests that errored for any reason *other* than admission
+    /// control (backend error, injected fault, engine shutdown mid-job).
     pub failed: AtomicU64,
-    /// Admission-control rejections: every worker queue was full and the
-    /// router was configured to fail fast (`EngineBusy`). Busy rejections
-    /// also count toward `failed`.
+    /// Requests a caller lost to admission control: every worker queue
+    /// was full and the router was configured to fail fast, so the
+    /// caller saw `EngineBusy`. Disjoint from `failed` — together with
+    /// `completed` they partition every resolved request, which is what
+    /// [`MetricsSnapshot::verify_conservation`] checks.
+    pub shed: AtomicU64,
+    /// Admission-control rejections observed at submit time (`EngineBusy`
+    /// from every worker queue). Kept as its own counter — `shed` counts
+    /// the request outcome, this counts the submit-path event — so the
+    /// two can diverge if a future router retries rejected submissions.
     pub busy_rejections: AtomicU64,
     pub selected_nt: AtomicU64,
     pub selected_tnn: AtomicU64,
@@ -185,6 +194,9 @@ pub struct MetricsSnapshot {
     pub requests: u64,
     pub completed: u64,
     pub failed: u64,
+    /// Requests lost to admission control (caller saw `EngineBusy`);
+    /// disjoint from `failed`.
+    pub shed: u64,
     pub busy_rejections: u64,
     pub selected_nt: u64,
     pub selected_tnn: u64,
@@ -295,6 +307,7 @@ impl CoordinatorMetrics {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
             busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
             selected_nt: self.selected_nt.load(Ordering::Relaxed),
             selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
@@ -332,14 +345,32 @@ impl CoordinatorMetrics {
 }
 
 impl MetricsSnapshot {
+    /// The conservation invariant the chaos tests assert at quiescence:
+    /// every submitted request resolved exactly one way —
+    /// `completed + failed + shed == requests`. Only meaningful once no
+    /// serve call is in flight (a mid-flight request has been counted in
+    /// `requests` but not yet resolved).
+    pub fn verify_conservation(&self) -> Result<(), String> {
+        let resolved = self.completed + self.failed + self.shed;
+        if resolved == self.requests {
+            Ok(())
+        } else {
+            Err(format!(
+                "conservation violated: completed={} + failed={} + shed={} = {resolved} != requests={}",
+                self.completed, self.failed, self.shed, self.requests
+            ))
+        }
+    }
+
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} completed={} failed={} busy={} | NT={} TNN={} fallback={} forced={} | \
+            "requests={} completed={} failed={} shed={} busy={} | NT={} TNN={} fallback={} forced={} | \
              latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us | queues={:?} | \
              batch avg={:.2} max={}",
             self.requests,
             self.completed,
             self.failed,
+            self.shed,
             self.busy_rejections,
             self.selected_nt,
             self.selected_tnn,
@@ -470,6 +501,31 @@ mod tests {
         let m = CoordinatorMetrics::default();
         m.busy_rejections.fetch_add(3, Ordering::Relaxed);
         assert!(m.snapshot().render().contains("busy=3"));
+    }
+
+    #[test]
+    fn shed_counts_separately_and_renders() {
+        let m = CoordinatorMetrics::default();
+        m.shed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.failed, 0, "shed requests are not failures");
+        assert!(s.render().contains("shed=2"), "{}", s.render());
+    }
+
+    #[test]
+    fn conservation_partitions_resolved_requests() {
+        let m = CoordinatorMetrics::default();
+        m.requests.fetch_add(10, Ordering::Relaxed);
+        m.completed.fetch_add(6, Ordering::Relaxed);
+        m.failed.fetch_add(3, Ordering::Relaxed);
+        assert!(m.snapshot().verify_conservation().is_err(), "one unresolved");
+        m.shed.fetch_add(1, Ordering::Relaxed);
+        m.snapshot().verify_conservation().unwrap();
+        // A double-counted outcome breaks it from the other side.
+        m.completed.fetch_add(1, Ordering::Relaxed);
+        let err = m.snapshot().verify_conservation().unwrap_err();
+        assert!(err.contains("completed=7"), "{err}");
     }
 
     #[test]

@@ -53,9 +53,16 @@
 //! loop (samples, probes split by scheduled-vs-bandit cause, the live
 //! probe interval, mispredict rate, retrains, promotions, rollbacks),
 //! and latency percentiles from a lock-free fixed-bucket histogram.
-//! Shutdown drains: every accepted job executes before the workers join.
-//! A pool of size 1 reproduces the old single-thread engine semantics
-//! exactly.
+//! Every request the router accepts resolves as exactly one of
+//! completed / failed / shed (admission-control rejection), so
+//! `completed + failed + shed == requests` at quiescence —
+//! [`CoordinatorMetrics`]`::verify_conservation` checks it, the
+//! adversarial workload lab (`crate::workload`) hammers it, and backend
+//! panics are contained per-job (the worker survives) so chaos can't
+//! break it. Shutdown drains: every accepted job executes before the
+//! workers join, and a chaos-killed worker's stranded queue is swept
+//! with errors rather than left to hang clients. A pool of size 1
+//! reproduces the old single-thread engine semantics exactly.
 
 pub mod backend;
 pub mod engine;

@@ -65,7 +65,8 @@ pub enum AdmissionControl {
     Block,
     /// Try the affine worker, hand off to any worker with room, and fail
     /// fast with [`EngineBusy`] when all queues are full (counted in
-    /// `CoordinatorMetrics::busy_rejections`).
+    /// `CoordinatorMetrics::busy_rejections`; the rejection reaching the
+    /// caller counts as `shed`, not `failed`).
     RejectWhenBusy,
 }
 
@@ -131,7 +132,7 @@ impl Router {
         let live = Arc::new(LiveSelector::new(selector));
         let cache = Arc::new(DecisionCache::default());
         let online = config.online.clone().map(|cfg| {
-            let mut acc = Accumulator::new(cfg.max_examples);
+            let mut acc = Accumulator::for_config(&cfg);
             // Warm restart: reload the persisted dataset and, when one was
             // saved, hot-swap the persisted model in before any traffic.
             if let Some(path) = &cfg.persist_path {
@@ -232,6 +233,19 @@ impl Router {
             self.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
         }
         res
+    }
+
+    /// Account one request-ending error: admission-control rejections are
+    /// `shed` (the caller lost the request to backpressure policy, not to
+    /// a malfunction), everything else is `failed`. Disjoint by
+    /// construction, so `completed + failed + shed == requests` holds at
+    /// quiescence — see [`super::metrics::MetricsSnapshot::verify_conservation`].
+    fn record_failure(&self, e: &anyhow::Error) {
+        if EngineBusy::is(e) {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// The label the live model effectively predicted, from the selection
@@ -335,7 +349,7 @@ impl Router {
                 })
             }
             Err(e) => {
-                self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                self.record_failure(&e);
                 Err(e)
             }
         }
@@ -345,7 +359,8 @@ impl Router {
     /// (the engine's shape-affinity sharding and micro-batcher regroup
     /// same-artifact jobs worker-side), then responses are collected in
     /// submission order. Each failure — at submit or at execution —
-    /// counts toward `failed` exactly once. Batch traffic records
+    /// counts toward `failed` (or `shed`, for admission-control
+    /// rejections) exactly once. Batch traffic records
     /// single-sided telemetry but is never shadow-probed (probing doubles
     /// a request; the synchronous path owns that budget).
     pub fn serve_batch(&self, reqs: Vec<GemmRequest>) -> Vec<anyhow::Result<GemmResponse>> {
@@ -381,7 +396,7 @@ impl Router {
                     rx,
                 }),
                 Err(e) => {
-                    self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                    self.record_failure(&e);
                     pending.push(Pending::Failed(e));
                 }
             }
@@ -436,7 +451,7 @@ impl Router {
                             })
                         }
                         Err(e) => {
-                            self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+                            self.record_failure(&e);
                             Err(e)
                         }
                     }
@@ -452,6 +467,14 @@ impl Drop for Router {
             rt.hub.request_shutdown();
             if let Some(join) = rt.trainer.take() {
                 let _ = join.join();
+            }
+        }
+        // At drop no serve call can be in flight (`serve` borrows the
+        // router), so every counted request has resolved — cheap place to
+        // catch a leaked or double-counted outcome in every debug test.
+        if cfg!(debug_assertions) && !std::thread::panicking() {
+            if let Err(e) = self.metrics.snapshot().verify_conservation() {
+                panic!("router drop: {e}");
             }
         }
     }

@@ -19,8 +19,10 @@
 //!   micro-batch same-artifact jobs and steal work when idle — plus the
 //!   online adaptive-selection loop ([`online`]: runtime telemetry,
 //!   shadow probing, drift detection, background GBDT retraining with
-//!   atomic model hot-swap) and the experiment harness reproducing every
-//!   table and figure of the paper.
+//!   atomic model hot-swap), the adversarial workload lab ([`workload`]:
+//!   seeded trace generation, replay, and chaos injection against the
+//!   serving stack), and the experiment harness reproducing every table
+//!   and figure of the paper.
 //!
 //! See `DESIGN.md` for the system inventory and experiment index.
 
@@ -36,3 +38,4 @@ pub mod runtime;
 pub mod selector;
 pub mod testutil;
 pub mod util;
+pub mod workload;

@@ -7,13 +7,17 @@
 //! shape space (say, tall-skinny GEMMs that the offline grid never covered)
 //! and trip retraining even while the aggregate rate still looks healthy.
 //!
-//! Counters are fixed-point *weights*, not integer counts: after each
-//! retrain the trainer calls [`DriftTracker::decay`], which multiplies
-//! every weight by a retained fraction instead of zeroing it. One retrain
-//! therefore **attenuates** the evidence window (an epoch of bad
-//! predictions cannot re-trigger forever) without erasing it (a shape that
-//! was drifting a moment ago still reads as recently-drifting, which the
-//! adaptive probe scheduler in [`crate::online::OnlineHub`] relies on).
+//! Counters are fixed-point *weights*, not integer counts: the trainer
+//! attenuates them on two independent clocks. A **wall-clock half-life**
+//! ([`DriftTracker::decay_half_life`], applied every trainer poll) makes
+//! evidence fade with real time regardless of whether retrains fire — a
+//! quiet service no longer carries hours-old drift weight into its next
+//! burst. A **retrain-coupled** [`DriftTracker::decay`] additionally
+//! attenuates the window after each retrain, so an epoch of bad
+//! predictions cannot re-trigger forever — yet the window is never
+//! erased (a shape that was drifting a moment ago still reads as
+//! recently-drifting, which the adaptive probe scheduler in
+//! [`crate::online::OnlineHub`] relies on).
 //! Decay is a per-word CAS loop, so a probe recorded concurrently with a
 //! decay sweep is at worst attenuated once — never silently lost, unlike
 //! the old `reset()` which raced `record()` and dropped probes landing
@@ -22,6 +26,7 @@
 //! [`crate::coordinator::CoordinatorMetrics`].
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Fixed bucket count (power of two).
 pub(crate) const BUCKETS: usize = 256;
@@ -169,6 +174,20 @@ impl DriftTracker {
         }
         decay_word(&self.probes, factor);
         decay_word(&self.mispredicts, factor);
+    }
+
+    /// Wall-clock half-life decay: attenuate the window by
+    /// `0.5^(elapsed / half_life)`, so evidence fades with real time
+    /// rather than with retrain cadence (a loop that never retrains still
+    /// forgets, and a burst of retrains doesn't erase a live drift
+    /// signal faster than the clock says it should). A zero `half_life`
+    /// disables wall-clock decay entirely; zero `elapsed` is a no-op.
+    pub fn decay_half_life(&self, elapsed: Duration, half_life: Duration) {
+        if half_life.is_zero() || elapsed.is_zero() {
+            return;
+        }
+        let factor = 0.5f64.powf(elapsed.as_secs_f64() / half_life.as_secs_f64());
+        self.decay(factor);
     }
 }
 
@@ -344,6 +363,33 @@ mod tests {
         let before = d.probes();
         d.record(9, 512, 512, 512, false);
         assert!((d.probes() - before - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn half_life_decay_halves_at_one_half_life() {
+        let d = DriftTracker::default();
+        for _ in 0..100 {
+            d.record(1, 256, 256, 256, true);
+        }
+        d.decay_half_life(Duration::from_secs(30), Duration::from_secs(30));
+        assert!((d.probes() - 50.0).abs() < 1e-3, "probes={}", d.probes());
+        // Rate is preserved: both words attenuate by the same factor.
+        assert!((d.total_rate() - 1.0).abs() < 1e-9);
+        // Two more half-lives in one call: 50 → 12.5.
+        d.decay_half_life(Duration::from_secs(60), Duration::from_secs(30));
+        assert!((d.probes() - 12.5).abs() < 1e-3, "probes={}", d.probes());
+    }
+
+    #[test]
+    fn half_life_decay_zero_durations_are_noops() {
+        let d = DriftTracker::default();
+        for _ in 0..10 {
+            d.record(1, 256, 256, 256, false);
+        }
+        d.decay_half_life(Duration::from_secs(5), Duration::ZERO); // disabled
+        assert!((d.probes() - 10.0).abs() < 1e-9);
+        d.decay_half_life(Duration::ZERO, Duration::from_secs(5)); // no time passed
+        assert!((d.probes() - 10.0).abs() < 1e-9);
     }
 
     #[test]

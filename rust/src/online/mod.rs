@@ -52,9 +52,13 @@
 //!   the schedule declined — bandit-style exploration that keeps
 //!   long-stable buckets from starving.
 //! * **Reservoir-bounded trainer** ([`Accumulator`]): once `max_examples`
-//!   is hit, eviction switches from FIFO to seeded reservoir sampling, so
-//!   the training set stays representative of the whole history and
-//!   retrain cost is bounded regardless of uptime.
+//!   is hit, seeded reservoir sampling ([`ReservoirPolicy`]) bounds
+//!   retrain cost regardless of uptime — recency-biased by default so a
+//!   regime change flips the training set in `≈ cap·ln 2` labels, or
+//!   uniform over the whole history when unbiased coverage matters more
+//!   than adaptation speed. Independently, the drift window ages on a
+//!   wall-clock half-life ([`OnlineConfig::drift_half_life`]) every
+//!   trainer poll, decoupled from retrain cadence.
 //!
 //! The hot path stays lock-free: `Router::decide` consults the
 //! [`crate::selector::cache::DecisionCache`] (epoch-checked — a swap
@@ -69,7 +73,7 @@ pub mod trainer;
 
 pub use drift::DriftTracker;
 pub use sampler::{Sample, SampleRing};
-pub use trainer::{Accumulator, Example};
+pub use trainer::{Accumulator, Example, ReservoirPolicy, TrainerState};
 
 use crate::coordinator::metrics::CoordinatorMetrics;
 use crate::gemm::Algorithm;
@@ -92,8 +96,10 @@ use std::time::Duration;
 /// | `drift_threshold` | mispredict rate that (a) trips a retrain, (b) pins the interval at `min` |
 /// | `drift_min_probes` | decayed probe weight required before drift may trigger |
 /// | `drift_decay` | fraction of drift evidence retained after each retrain |
+/// | `drift_half_life` | wall-clock half-life of drift evidence — ages with real time, not retrain cadence, so a quiet service forgets stale drift (0 disables) |
 /// | `retrain_min_labeled` / `retrain_every_labeled` | volume gates for retraining |
 /// | `max_examples` | reservoir size — trainer CPU/RSS bound |
+/// | `reservoir` | eviction policy at the cap: `Recency` (default — regime changes flip the training set in ≈`cap·ln 2` labels) or `Uniform` (whole-history sample; adapts at `cap/seen` once `seen ≫ cap`) |
 /// | `holdout_frac` | challenger-vs-incumbent eval slice |
 /// | `persist_path` | JSON warm-restart store |
 #[derive(Debug, Clone)]
@@ -117,6 +123,12 @@ pub struct OnlineConfig {
     /// (applied via [`DriftTracker::decay`]); 0 reproduces the old
     /// hard-reset behavior, 1 never forgets. Clamped to `[0, 1]`.
     pub drift_decay: f64,
+    /// Wall-clock half-life of drift evidence, applied every trainer poll
+    /// via [`DriftTracker::decay_half_life`] — decoupled from retrain
+    /// cadence, so evidence ages with real time even when no retrain ever
+    /// fires (and a retrain burst can't erase a live signal faster than
+    /// the clock). `Duration::ZERO` disables wall-clock aging.
+    pub drift_half_life: Duration,
     /// Sample-ring capacity (rounded up to a power of two).
     pub ring_capacity: usize,
     /// Never retrain on fewer labeled examples than this.
@@ -135,11 +147,16 @@ pub struct OnlineConfig {
     /// Trainer poll period (ring drain cadence; also the shutdown
     /// response bound).
     pub poll_interval: Duration,
-    /// Cap on accumulated labeled examples. Until the cap is hit the
-    /// accumulator simply appends; past it, deterministic reservoir
-    /// sampling keeps a uniform subsample of the whole labeled history,
-    /// bounding retrain cost regardless of uptime.
+    /// Cap on accumulated labeled examples: past it, deterministic
+    /// reservoir sampling (per `reservoir`) bounds retrain cost
+    /// regardless of uptime.
     pub max_examples: usize,
+    /// Reservoir eviction policy at the cap. `Recency` (the default)
+    /// exponentially biases toward fresh labels so a regime change flips
+    /// the training-set majority within `≈ max_examples·ln 2` labeled
+    /// examples; `Uniform` keeps an unbiased whole-history sample whose
+    /// adaptation rate decays as `cap / seen`.
+    pub reservoir: ReservoirPolicy,
     /// JSON store for warm restarts (examples + live GBDT). `None`
     /// disables persistence.
     pub persist_path: Option<PathBuf>,
@@ -152,6 +169,7 @@ impl Default for OnlineConfig {
             probe_every_max: 64,
             probe_epsilon: 0.02,
             drift_decay: 0.5,
+            drift_half_life: Duration::from_secs(30),
             ring_capacity: 4096,
             retrain_min_labeled: 64,
             retrain_every_labeled: 256,
@@ -160,6 +178,7 @@ impl Default for OnlineConfig {
             holdout_frac: 0.2,
             poll_interval: Duration::from_millis(25),
             max_examples: 65_536,
+            reservoir: ReservoirPolicy::default(),
             persist_path: None,
         }
     }

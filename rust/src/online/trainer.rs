@@ -14,18 +14,25 @@
 //!   the model flip-flopped, or a forced baseline shared the router), the
 //!   per-key mean latencies yield one synthetic labeled example.
 //!
-//! The example store is a **deterministic reservoir**: until
-//! `max_examples` is reached every labeled example is kept; past the cap,
-//! Algorithm R (seeded, reseeded per retrain sequence number) replaces a
-//! uniformly random slot with probability `cap / seen`, so the training
-//! set stays an unbiased subsample of the *whole* labeled history — a
-//! FIFO window would forget everything older than the cap — and
-//! `retrain_once` fits on at most `max_examples` rows no matter how long
-//! the service has been up. The deliberate tradeoff: whole-history
-//! uniformity means post-drift examples enter slowly (`cap / seen` each)
-//! once `seen ≫ cap`, so a very-long-uptime service adapts to a regime
-//! change more slowly than a FIFO would; a recency-biased reservoir
-//! (e.g. Aggarwal's exponential bias) is the listed ROADMAP follow-up.
+//! The example store is a **deterministic reservoir** (seeded, reseeded
+//! per retrain sequence number) with two policies ([`ReservoirPolicy`]):
+//!
+//! * **Uniform** — Algorithm R: past the cap the t-th labeled example
+//!   ever seen replaces a uniform slot with probability `cap / t`, so the
+//!   training set stays an unbiased subsample of the *whole* labeled
+//!   history. Statistically clean, but post-drift examples enter at
+//!   `cap / seen` each once `seen ≫ cap`, so a long-uptime service
+//!   adapts to a regime change arbitrarily slowly.
+//! * **Recency** — Aggarwal's exponential bias (the default): every
+//!   insert lands, replacing a uniform slot once the reservoir is full,
+//!   so an example survives the next `t` inserts with probability
+//!   `≈ exp(−t/cap)`. The store is an exponentially recency-weighted
+//!   sample with mean age `cap` inserts: after a regime change the
+//!   reservoir majority flips within `≈ cap·ln 2` labeled examples no
+//!   matter how long the service has been up.
+//!
+//! Either way the reservoir is bounded, so `retrain_once` fits on at most
+//! `max_examples` rows regardless of uptime.
 //!
 //! A retrain never swaps blindly: the candidate is evaluated against the
 //! incumbent on the same held-out slice and promoted only when strictly
@@ -35,7 +42,7 @@
 //! examples (and the live GBDT) persist as JSON via [`crate::util::json`]
 //! so a restarted service warm-starts instead of relearning from zero.
 
-use super::{OnlineHub, Sample};
+use super::{OnlineConfig, OnlineHub, Sample};
 use crate::ml::data::Dataset;
 use crate::ml::gbdt::{Gbdt, GbdtParams};
 use crate::ml::Classifier;
@@ -46,6 +53,7 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// One labeled training example distilled from runtime telemetry.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +76,20 @@ struct KeyStats {
 /// Default reservoir seed (overridden per retrain via [`Accumulator::reseed`]).
 const RESERVOIR_SEED: u64 = 0xA11E_5EED_0E5E_4701;
 
+/// How the bounded example reservoir evicts once full — see the module
+/// doc for the adaptation-speed tradeoff.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ReservoirPolicy {
+    /// Algorithm R: an unbiased uniform sample of the whole labeled
+    /// history (replacement probability `cap / seen` per insert).
+    Uniform,
+    /// Aggarwal's exponential bias: every insert lands, old examples die
+    /// off with half-life `cap·ln 2` inserts. The default — a serving
+    /// loop must adapt to regime changes in bounded time.
+    #[default]
+    Recency,
+}
+
 /// Single-threaded accumulator owned by the trainer thread.
 pub struct Accumulator {
     examples: Vec<Example>,
@@ -76,6 +98,7 @@ pub struct Accumulator {
     /// Labeled examples ever offered (drives reservoir replacement odds).
     seen_labeled: u64,
     rng: Xoshiro256pp,
+    policy: ReservoirPolicy,
 }
 
 impl Accumulator {
@@ -85,15 +108,28 @@ impl Accumulator {
 
     /// An accumulator whose reservoir decisions are driven by `seed` —
     /// identical seeds and identical ingest streams produce identical
-    /// example sets.
+    /// example sets. Uses the uniform whole-history policy; the online
+    /// loop itself goes through [`Accumulator::for_config`].
     pub fn with_seed(max_examples: usize, seed: u64) -> Accumulator {
+        Accumulator::with_policy(max_examples, seed, ReservoirPolicy::Uniform)
+    }
+
+    /// Full-control constructor: cap, seed, and eviction policy.
+    pub fn with_policy(max_examples: usize, seed: u64, policy: ReservoirPolicy) -> Accumulator {
         Accumulator {
             examples: Vec::new(),
             by_key: HashMap::new(),
             max_examples: max_examples.max(16),
             seen_labeled: 0,
             rng: Xoshiro256pp::new(seed),
+            policy,
         }
+    }
+
+    /// The accumulator a router builds for an online config: the
+    /// configured cap and reservoir policy on the default seed.
+    pub fn for_config(cfg: &OnlineConfig) -> Accumulator {
+        Accumulator::with_policy(cfg.max_examples, RESERVOIR_SEED, cfg.reservoir)
     }
 
     /// Re-key the reservoir RNG. The trainer calls this with the retrain
@@ -104,32 +140,49 @@ impl Accumulator {
         self.rng = Xoshiro256pp::new(seed);
     }
 
-    /// Seed with previously persisted examples (warm restart). `seen` is
-    /// the persisted labeled-history length; restoring it keeps the
-    /// post-restart replacement odds (`cap / seen`) identical to the
-    /// unrestarted service — without it the reloaded reservoir would be
-    /// treated as the whole history and new traffic would overwrite it
-    /// almost immediately.
+    /// Seed with previously persisted examples (warm restart): a direct
+    /// append up to the cap — the persisted set *is* the prior reservoir,
+    /// so it must be restored verbatim, not re-sampled through the
+    /// eviction policy. `seen` is the persisted labeled-history length;
+    /// restoring it keeps the post-restart uniform replacement odds
+    /// (`cap / seen`) identical to the unrestarted service — without it
+    /// the reloaded reservoir would be treated as the whole history and
+    /// new traffic would overwrite it almost immediately.
     pub fn preload(&mut self, examples: Vec<Example>, seen: u64) {
-        for e in examples {
-            self.push_example(e);
+        let headroom = self.max_examples.saturating_sub(self.examples.len());
+        for e in examples.into_iter().take(headroom) {
+            self.examples.push(e);
+            self.seen_labeled += 1;
         }
         self.seen_labeled = self.seen_labeled.max(seen);
     }
 
-    /// Append below the cap; Algorithm R above it: the t-th labeled
-    /// example ever seen replaces a uniform slot with probability
-    /// `cap / t`, keeping the reservoir a uniform sample of the full
-    /// history.
+    /// One labeled example enters the reservoir. Below the cap both
+    /// policies append (recency occasionally replaces early — that *is*
+    /// the exponential bias ramping in); at the cap, uniform replaces a
+    /// random slot with probability `cap / seen` while recency always
+    /// replaces one, so the newest example is always retained.
     fn push_example(&mut self, e: Example) {
         self.seen_labeled += 1;
-        if self.examples.len() < self.max_examples {
-            self.examples.push(e);
-            return;
-        }
-        let j = self.rng.next_bounded(self.seen_labeled) as usize;
-        if j < self.examples.len() {
-            self.examples[j] = e;
+        match self.policy {
+            ReservoirPolicy::Uniform => {
+                if self.examples.len() < self.max_examples {
+                    self.examples.push(e);
+                    return;
+                }
+                let j = self.rng.next_bounded(self.seen_labeled) as usize;
+                if j < self.examples.len() {
+                    self.examples[j] = e;
+                }
+            }
+            ReservoirPolicy::Recency => {
+                let j = self.rng.next_bounded(self.max_examples as u64) as usize;
+                if j < self.examples.len() {
+                    self.examples[j] = e;
+                } else {
+                    self.examples.push(e);
+                }
+            }
         }
     }
 
@@ -387,44 +440,175 @@ pub fn spawn(hub: Arc<OnlineHub>, mut acc: Accumulator) -> std::thread::JoinHand
         .expect("spawn online trainer")
 }
 
+/// Between-poll state of the trainer loop, extracted so tests and the
+/// workload replayer can drive [`pump`] directly with a virtual clock
+/// instead of racing the background thread.
+#[derive(Debug, Default)]
+pub struct TrainerState {
+    /// Labeled examples ingested since the last retrain.
+    pub since_last: usize,
+    /// Retrain sequence number (keys the holdout split and the reservoir
+    /// reseed, so a replayed trace retrains bit-identically).
+    pub seq: u64,
+}
+
+/// One trainer poll: drain the ring, age the drift window by `elapsed`
+/// of wall clock, and retrain when the volume or drift trigger fires.
+/// Returns `true` when a retrain ran. [`run`] calls this every
+/// `poll_interval`; tests call it with virtual time for determinism.
+pub fn pump(hub: &OnlineHub, acc: &mut Accumulator, st: &mut TrainerState, elapsed: Duration) -> bool {
+    let cfg = &hub.config;
+    while let Some(s) = hub.ring.pop() {
+        if acc.ingest(&s) {
+            st.since_last += 1;
+        }
+    }
+    // Wall-clock aging, decoupled from retrain cadence: evidence fades
+    // with real time whether or not a retrain ever fires, so a quiet
+    // service doesn't carry hours-old drift weight into its next burst.
+    hub.drift.decay_half_life(elapsed, cfg.drift_half_life);
+    let enough = acc.labeled_len() >= cfg.retrain_min_labeled.max(4);
+    let volume = cfg.retrain_every_labeled > 0 && st.since_last >= cfg.retrain_every_labeled;
+    // Decay preserves the mispredict *rate*, so a drifted window can
+    // stay over threshold across polls; gate the drift trigger on at
+    // least one new labeled example since the last retrain, or an
+    // unchanged dataset would be refit every poll until the weight
+    // decays under drift_min_probes.
+    let drift = st.since_last > 0
+        && hub
+            .drift
+            .triggered(cfg.drift_threshold, cfg.drift_min_probes);
+    if enough && (volume || drift) {
+        st.seq += 1;
+        retrain_once(hub, acc, st.seq);
+        // Attenuate — don't erase — the drift evidence, and re-key
+        // the reservoir per retrain sequence so the next window's
+        // replacement choices are deterministic given `seq`. Probes
+        // recorded while the retrain ran survive (scaled at worst),
+        // unlike the old reset() which dropped them.
+        hub.drift.decay(cfg.drift_decay);
+        acc.reseed(RESERVOIR_SEED ^ mix64(st.seq));
+        st.since_last = 0;
+        return true;
+    }
+    false
+}
+
 fn run(hub: &OnlineHub, acc: &mut Accumulator) {
-    let cfg = hub.config.clone();
-    let mut since_last = 0usize;
-    let mut seq = 0u64;
+    let poll = hub.config.poll_interval;
+    let mut st = TrainerState::default();
     while !hub.is_shutdown() {
-        std::thread::sleep(cfg.poll_interval);
-        while let Some(s) = hub.ring.pop() {
-            if acc.ingest(&s) {
-                since_last += 1;
-            }
-        }
-        let enough = acc.labeled_len() >= cfg.retrain_min_labeled.max(4);
-        let volume = cfg.retrain_every_labeled > 0 && since_last >= cfg.retrain_every_labeled;
-        // Decay preserves the mispredict *rate*, so a drifted window can
-        // stay over threshold across polls; gate the drift trigger on at
-        // least one new labeled example since the last retrain, or an
-        // unchanged dataset would be refit every poll until the weight
-        // decays under drift_min_probes (forever at drift_decay = 1).
-        let drift = since_last > 0
-            && hub
-                .drift
-                .triggered(cfg.drift_threshold, cfg.drift_min_probes);
-        if enough && (volume || drift) {
-            seq += 1;
-            retrain_once(hub, acc, seq);
-            // Attenuate — don't erase — the drift evidence, and re-key
-            // the reservoir per retrain sequence so the next window's
-            // replacement choices are deterministic given `seq`. Probes
-            // recorded while the retrain ran survive (scaled at worst),
-            // unlike the old reset() which dropped them.
-            hub.drift.decay(cfg.drift_decay);
-            acc.reseed(RESERVOIR_SEED ^ mix64(seq));
-            since_last = 0;
-        }
+        std::thread::sleep(poll);
+        pump(hub, acc, &mut st, poll);
     }
     // Final drain so a clean shutdown persists everything it observed.
     while let Some(s) = hub.ring.pop() {
         acc.ingest(&s);
     }
     persist(hub, acc);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ex(i: u64, label: i8) -> Example {
+        Example {
+            gpu_id: 1,
+            feats: [i as f64; 8],
+            label,
+        }
+    }
+
+    #[test]
+    fn recency_reservoir_is_bounded_deterministic_and_keeps_the_newest() {
+        let cap = 32;
+        let mut a = Accumulator::with_policy(cap, 7, ReservoirPolicy::Recency);
+        let mut b = Accumulator::with_policy(cap, 7, ReservoirPolicy::Recency);
+        for i in 0..500u64 {
+            a.push_example(ex(i, 1));
+            b.push_example(ex(i, 1));
+            assert!(a.labeled_len() <= cap);
+            // Every insert lands: the newest example is always retained
+            // (it either appended or replaced a slot).
+            assert!(
+                a.examples.iter().any(|e| e.feats[0] == i as f64),
+                "newest example {i} evicted on arrival"
+            );
+        }
+        assert_eq!(a.labeled_len(), cap);
+        assert_eq!(a.seen_labeled(), 500);
+        let av: Vec<_> = a.examples().cloned().collect();
+        let bv: Vec<_> = b.examples().cloned().collect();
+        assert_eq!(av, bv, "same seed + stream must reproduce the reservoir");
+    }
+
+    #[test]
+    fn recency_reservoir_forgets_an_old_regime_where_uniform_does_not() {
+        let cap = 64;
+        let mut rec = Accumulator::with_policy(cap, 11, ReservoirPolicy::Recency);
+        let mut uni = Accumulator::with_policy(cap, 11, ReservoirPolicy::Uniform);
+        // A long regime-A history…
+        for i in 0..1000u64 {
+            rec.push_example(ex(i, 1));
+            uni.push_example(ex(i, 1));
+        }
+        // …then a regime change worth 300 labeled examples (≈ 4.7·cap).
+        for i in 0..300u64 {
+            rec.push_example(ex(10_000 + i, -1));
+            uni.push_example(ex(10_000 + i, -1));
+        }
+        let new_of = |acc: &Accumulator| acc.examples().filter(|e| e.label == -1).count();
+        // Recency: old survival ≈ exp(−300/64) ≈ 0.9%, so the reservoir
+        // is essentially all regime B.
+        assert!(
+            new_of(&rec) >= 56,
+            "recency reservoir still mostly old: {}/{cap} new",
+            new_of(&rec)
+        );
+        // Uniform over the whole history keeps regime B at ≈ 300/1300 of
+        // slots — the old regime still dominates the training set.
+        assert!(
+            new_of(&uni) <= 32,
+            "uniform reservoir unexpectedly recency-biased: {}/{cap} new",
+            new_of(&uni)
+        );
+    }
+
+    #[test]
+    fn preload_restores_the_persisted_reservoir_verbatim() {
+        let cap = 32;
+        let saved: Vec<Example> = (0..cap as u64).map(|i| ex(i, 1)).collect();
+        for policy in [ReservoirPolicy::Uniform, ReservoirPolicy::Recency] {
+            let mut acc = Accumulator::with_policy(cap, 3, policy);
+            acc.preload(saved.clone(), 50_000);
+            let got: Vec<_> = acc.examples().cloned().collect();
+            assert_eq!(got, saved, "{policy:?} preload must not re-sample");
+            assert_eq!(acc.seen_labeled(), 50_000);
+        }
+    }
+
+    #[test]
+    fn preload_truncates_at_the_cap() {
+        let mut acc = Accumulator::with_policy(16, 3, ReservoirPolicy::Recency);
+        acc.preload((0..40u64).map(|i| ex(i, 1)).collect(), 40);
+        assert_eq!(acc.labeled_len(), 16);
+        assert_eq!(acc.seen_labeled(), 40);
+    }
+
+    #[test]
+    fn for_config_honors_cap_and_policy() {
+        let cfg = OnlineConfig {
+            max_examples: 128,
+            reservoir: ReservoirPolicy::Uniform,
+            ..OnlineConfig::default()
+        };
+        let acc = Accumulator::for_config(&cfg);
+        assert_eq!(acc.max_examples, 128);
+        assert_eq!(acc.policy, ReservoirPolicy::Uniform);
+        assert_eq!(
+            Accumulator::for_config(&OnlineConfig::default()).policy,
+            ReservoirPolicy::Recency
+        );
+    }
 }

@@ -1,0 +1,245 @@
+//! [`ChaosBackend`]: a fault-injecting [`ExecBackend`] wrapper.
+//!
+//! Every execution rolls a *deterministic* per-call fate from
+//! `(seed, worker, call-counter)`, so a chaos run is reproducible: the
+//! same seed injects the same faults at the same calls. Three fault
+//! kinds, checked in order against one uniform draw:
+//!
+//! * **transient failure** — the job errors without touching the inner
+//!   backend (counted as `failed` upstream);
+//! * **panic** — the backend panics mid-execute; the engine's worker
+//!   loop contains it and fails that one job, which is exactly the
+//!   behaviour this wrapper exists to exercise;
+//! * **latency spike** — the call sleeps before delegating, inflating
+//!   the measured latency the online loop trains on.
+//!
+//! [`ChaosStats`] counts what actually fired so tests can assert the
+//! faults happened instead of silently passing on a too-low probability.
+
+use crate::coordinator::ExecBackend;
+use crate::gemm::cpu::Matrix;
+use crate::util::rng::mix_parts;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Fault mix for a [`ChaosBackend`]. Probabilities are per-execution
+/// and mutually exclusive (failure is checked first, then panic, then
+/// spike); their sum should stay well below 1.
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosConfig {
+    pub seed: u64,
+    pub fail_prob: f64,
+    pub panic_prob: f64,
+    pub spike_prob: f64,
+    /// How long an injected latency spike sleeps.
+    pub spike: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            seed: 0xC4A05,
+            fail_prob: 0.05,
+            panic_prob: 0.02,
+            spike_prob: 0.05,
+            spike: Duration::from_millis(2),
+        }
+    }
+}
+
+/// What a [`ChaosBackend`] actually injected. Share one across the pool
+/// to count faults fleet-wide.
+#[derive(Debug, Default)]
+pub struct ChaosStats {
+    pub injected_failures: AtomicU64,
+    pub injected_panics: AtomicU64,
+    pub injected_spikes: AtomicU64,
+}
+
+impl ChaosStats {
+    pub fn total(&self) -> u64 {
+        self.injected_failures.load(Ordering::Relaxed)
+            + self.injected_panics.load(Ordering::Relaxed)
+            + self.injected_spikes.load(Ordering::Relaxed)
+    }
+}
+
+enum Fate {
+    Fail,
+    Panic,
+    Spike,
+    Clean,
+}
+
+/// Fault-injecting wrapper around any [`ExecBackend`].
+pub struct ChaosBackend {
+    inner: Box<dyn ExecBackend>,
+    cfg: ChaosConfig,
+    /// Worker index, so pool siblings sharing one seed roll distinct
+    /// fault sequences.
+    worker: u64,
+    calls: AtomicU64,
+    stats: Arc<ChaosStats>,
+}
+
+impl ChaosBackend {
+    pub fn new(
+        inner: Box<dyn ExecBackend>,
+        cfg: ChaosConfig,
+        worker: usize,
+        stats: Arc<ChaosStats>,
+    ) -> ChaosBackend {
+        ChaosBackend {
+            inner,
+            cfg,
+            worker: worker as u64,
+            calls: AtomicU64::new(0),
+            stats,
+        }
+    }
+
+    /// Roll this call's fate; deterministic in `(seed, worker, call#)`.
+    fn fate(&self) -> Fate {
+        let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        let u = (mix_parts(&[self.cfg.seed, self.worker, n]) >> 11) as f64
+            / (1u64 << 53) as f64;
+        if u < self.cfg.fail_prob {
+            self.stats.injected_failures.fetch_add(1, Ordering::Relaxed);
+            Fate::Fail
+        } else if u < self.cfg.fail_prob + self.cfg.panic_prob {
+            self.stats.injected_panics.fetch_add(1, Ordering::Relaxed);
+            Fate::Panic
+        } else if u < self.cfg.fail_prob + self.cfg.panic_prob + self.cfg.spike_prob {
+            self.stats.injected_spikes.fetch_add(1, Ordering::Relaxed);
+            Fate::Spike
+        } else {
+            Fate::Clean
+        }
+    }
+
+    fn apply(&self, artifact: &str) -> anyhow::Result<()> {
+        match self.fate() {
+            Fate::Fail => anyhow::bail!("chaos: injected transient failure on {artifact}"),
+            Fate::Panic => panic!("chaos: injected panic on {artifact}"),
+            Fate::Spike => {
+                std::thread::sleep(self.cfg.spike);
+                Ok(())
+            }
+            Fate::Clean => Ok(()),
+        }
+    }
+}
+
+impl ExecBackend for ChaosBackend {
+    fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        self.apply(artifact)?;
+        self.inner.execute(artifact, inputs)
+    }
+
+    fn execute_timed(
+        &self,
+        artifact: &str,
+        inputs: &[&Matrix],
+    ) -> anyhow::Result<(Vec<Matrix>, f64)> {
+        self.apply(artifact)?;
+        self.inner.execute_timed(artifact, inputs)
+    }
+
+    fn warmup(&self, names: &[&str]) -> anyhow::Result<()> {
+        // Warmup is infrastructure, not traffic — never inject there.
+        self.inner.warmup(names)
+    }
+
+    fn name(&self) -> String {
+        format!("chaos({})", self.inner.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Nop;
+    impl ExecBackend for Nop {
+        fn execute(&self, _a: &str, _i: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+            Ok(vec![])
+        }
+        fn name(&self) -> String {
+            "nop".into()
+        }
+    }
+
+    fn chaos(cfg: ChaosConfig) -> (ChaosBackend, Arc<ChaosStats>) {
+        let stats = Arc::new(ChaosStats::default());
+        (
+            ChaosBackend::new(Box::new(Nop), cfg, 0, Arc::clone(&stats)),
+            stats,
+        )
+    }
+
+    #[test]
+    fn fault_sequence_is_deterministic_for_a_seed() {
+        let cfg = ChaosConfig {
+            fail_prob: 0.3,
+            panic_prob: 0.0,
+            spike_prob: 0.0,
+            ..ChaosConfig::default()
+        };
+        let run = |cfg| {
+            let (b, _) = chaos(cfg);
+            (0..200)
+                .map(|_| b.execute("nt_8x8x8", &[]).is_err())
+                .collect::<Vec<_>>()
+        };
+        let a = run(cfg);
+        let b = run(cfg);
+        assert_eq!(a, b);
+        let fails = a.iter().filter(|&&e| e).count();
+        assert!(
+            (30..=90).contains(&fails),
+            "~30% of 200 calls should fail, got {fails}"
+        );
+    }
+
+    #[test]
+    fn injected_failures_are_errors_and_counted() {
+        let (b, stats) = chaos(ChaosConfig {
+            fail_prob: 1.0,
+            panic_prob: 0.0,
+            spike_prob: 0.0,
+            ..ChaosConfig::default()
+        });
+        let err = b.execute_timed("nt_8x8x8", &[]).unwrap_err().to_string();
+        assert!(err.contains("chaos"), "{err}");
+        assert_eq!(stats.injected_failures.load(Ordering::Relaxed), 1);
+        assert_eq!(stats.total(), 1);
+    }
+
+    #[test]
+    fn zero_probabilities_delegate_cleanly() {
+        let (b, stats) = chaos(ChaosConfig {
+            fail_prob: 0.0,
+            panic_prob: 0.0,
+            spike_prob: 0.0,
+            ..ChaosConfig::default()
+        });
+        for _ in 0..50 {
+            b.execute("nt_8x8x8", &[]).unwrap();
+        }
+        assert_eq!(stats.total(), 0);
+        assert_eq!(b.name(), "chaos(nop)");
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos: injected panic")]
+    fn injected_panics_panic() {
+        let (b, _) = chaos(ChaosConfig {
+            fail_prob: 0.0,
+            panic_prob: 1.0,
+            spike_prob: 0.0,
+            ..ChaosConfig::default()
+        });
+        let _ = b.execute("nt_8x8x8", &[]);
+    }
+}

@@ -1,0 +1,290 @@
+//! Seeded, deterministic, phase-composable workload traces.
+//!
+//! A trace is a time-ordered list of GEMM requests. Each [`Phase`]
+//! contributes a segment with its own traffic regime; inter-arrival
+//! times are exponential (a seeded Poisson process whose rate the phase
+//! kind modulates over the phase), so the same `(phases, seed)` pair
+//! always yields the identical trace — replayable experiments, byte-for-
+//! byte.
+
+use crate::gemm::GemmShape;
+use crate::gpusim::GpuSpec;
+use crate::util::rng::{mix_parts, Xoshiro256pp};
+use std::time::Duration;
+
+/// What a phase's traffic looks like.
+#[derive(Debug, Clone)]
+pub enum PhaseKind {
+    /// Constant rate, shapes drawn uniformly from the phase pool.
+    Steady,
+    /// Rate ramps linearly up to `peak_x ×` the base rate at the phase
+    /// midpoint and back down — a flash crowd.
+    FlashCrowd { peak_x: f64 },
+    /// Rate stays constant while the shape pool crossfades: an event at
+    /// fraction `f` through the phase draws from `to` with probability
+    /// `f`, from the phase pool otherwise — the gradual regime change
+    /// that drift detection must catch.
+    ShapeMigration { to: Vec<GemmShape> },
+    /// Rate oscillates between `trough_x ×` and `1 ×` the base rate over
+    /// `cycles` full cosine cycles — compressed diurnal traffic.
+    DiurnalRamp { cycles: f64, trough_x: f64 },
+    /// Requests switch from the phase GPU to `to` at fraction `at_frac`
+    /// of the phase — an abrupt hardware regime change.
+    DeviceSwap {
+        to: &'static GpuSpec,
+        at_frac: f64,
+    },
+}
+
+/// One segment of a trace: a regime, its shape pool, its base rate.
+#[derive(Debug, Clone)]
+pub struct Phase {
+    pub kind: PhaseKind,
+    /// GPU the phase's requests target (the starting GPU for
+    /// [`PhaseKind::DeviceSwap`]).
+    pub gpu: &'static GpuSpec,
+    /// Shape pool events draw from (uniformly, except during a
+    /// [`PhaseKind::ShapeMigration`] crossfade).
+    pub shapes: Vec<GemmShape>,
+    /// Base request rate, requests/second of *trace* time.
+    pub rps: f64,
+    pub duration: Duration,
+}
+
+/// One timed request in a trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceEvent {
+    /// Offset from trace start.
+    pub at: Duration,
+    pub gpu: &'static GpuSpec,
+    pub shape: GemmShape,
+    /// Index of the [`Phase`] that emitted this event.
+    pub phase: usize,
+}
+
+/// A generated trace: time-ordered events plus the seed that made it.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    pub events: Vec<TraceEvent>,
+    pub seed: u64,
+}
+
+impl Trace {
+    /// Generate the deterministic trace for `(phases, seed)`.
+    ///
+    /// Panics if a phase has an empty shape pool, a non-positive rate,
+    /// or a zero duration — a trace that can't emit events is a bug in
+    /// the experiment, not a workload.
+    pub fn generate(phases: &[Phase], seed: u64) -> Trace {
+        let mut events = Vec::new();
+        let mut base = Duration::ZERO;
+        for (pi, phase) in phases.iter().enumerate() {
+            assert!(!phase.shapes.is_empty(), "phase {pi}: empty shape pool");
+            assert!(phase.rps > 0.0, "phase {pi}: non-positive rate");
+            assert!(!phase.duration.is_zero(), "phase {pi}: zero duration");
+            let mut rng = Xoshiro256pp::new(mix_parts(&[seed, pi as u64]));
+            let total = phase.duration.as_secs_f64();
+            let mut t = 0.0f64;
+            loop {
+                let frac = t / total;
+                let rate = phase.rps * rate_multiplier(&phase.kind, frac);
+                // Exponential inter-arrival at the local rate; 1−u ∈ (0,1]
+                // keeps ln finite.
+                t += -(1.0 - rng.next_f64()).ln() / rate;
+                if t >= total {
+                    break;
+                }
+                let frac = t / total;
+                events.push(TraceEvent {
+                    at: base + Duration::from_secs_f64(t),
+                    gpu: event_gpu(&phase.kind, phase.gpu, frac),
+                    shape: event_shape(&phase.kind, &phase.shapes, frac, &mut rng),
+                    phase: pi,
+                });
+            }
+            base += phase.duration;
+        }
+        Trace { events, seed }
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Total trace span (sum of phase durations is an upper bound; this
+    /// is the last event's offset, zero for an empty trace).
+    pub fn span(&self) -> Duration {
+        self.events.last().map(|e| e.at).unwrap_or(Duration::ZERO)
+    }
+
+    /// Distinct shapes in the trace, in first-appearance order — the
+    /// warmup set for a replay.
+    pub fn distinct_shapes(&self) -> Vec<GemmShape> {
+        let mut seen = std::collections::HashSet::new();
+        let mut out = Vec::new();
+        for e in &self.events {
+            if seen.insert(e.shape) {
+                out.push(e.shape);
+            }
+        }
+        out
+    }
+}
+
+/// Instantaneous rate multiplier at fraction `frac` of the phase.
+fn rate_multiplier(kind: &PhaseKind, frac: f64) -> f64 {
+    match kind {
+        PhaseKind::Steady | PhaseKind::ShapeMigration { .. } | PhaseKind::DeviceSwap { .. } => 1.0,
+        PhaseKind::FlashCrowd { peak_x } => {
+            // Triangle: 1× at the edges, peak_x× at the midpoint.
+            1.0 + (peak_x - 1.0) * (1.0 - (2.0 * frac - 1.0).abs())
+        }
+        PhaseKind::DiurnalRamp { cycles, trough_x } => {
+            let swing = 0.5 * (1.0 - (std::f64::consts::TAU * cycles * frac).cos());
+            trough_x + (1.0 - trough_x) * swing
+        }
+    }
+}
+
+fn event_gpu(kind: &PhaseKind, base: &'static GpuSpec, frac: f64) -> &'static GpuSpec {
+    match kind {
+        PhaseKind::DeviceSwap { to, at_frac } if frac >= *at_frac => to,
+        _ => base,
+    }
+}
+
+fn event_shape(
+    kind: &PhaseKind,
+    pool: &[GemmShape],
+    frac: f64,
+    rng: &mut Xoshiro256pp,
+) -> GemmShape {
+    let draw = |pool: &[GemmShape], rng: &mut Xoshiro256pp| {
+        pool[rng.next_bounded(pool.len() as u64) as usize]
+    };
+    match kind {
+        PhaseKind::ShapeMigration { to } if !to.is_empty() && rng.next_f64() < frac => {
+            draw(to, rng)
+        }
+        _ => draw(pool, rng),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpusim::{GTX1080, TITANX};
+
+    fn shapes(ms: &[u64]) -> Vec<GemmShape> {
+        ms.iter().map(|&m| GemmShape::new(m, m, m)).collect()
+    }
+
+    fn steady(rps: f64, secs: f64) -> Phase {
+        Phase {
+            kind: PhaseKind::Steady,
+            gpu: &GTX1080,
+            shapes: shapes(&[32, 64]),
+            rps,
+            duration: Duration::from_secs_f64(secs),
+        }
+    }
+
+    #[test]
+    fn same_seed_same_trace_different_seed_different_trace() {
+        let phases = [steady(100.0, 2.0)];
+        let a = Trace::generate(&phases, 7);
+        let b = Trace::generate(&phases, 7);
+        let c = Trace::generate(&phases, 8);
+        assert!(!a.is_empty());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.at, y.at);
+            assert_eq!(x.shape, y.shape);
+        }
+        let same = a.len() == c.len()
+            && a.events.iter().zip(&c.events).all(|(x, y)| x.at == y.at);
+        assert!(!same, "different seeds should diverge");
+    }
+
+    #[test]
+    fn steady_phase_emits_roughly_rate_times_duration() {
+        let t = Trace::generate(&[steady(200.0, 4.0)], 1);
+        let n = t.len() as f64;
+        assert!((600.0..=1000.0).contains(&n), "expected ~800 events, got {n}");
+        assert!(t.span() < Duration::from_secs(4));
+    }
+
+    #[test]
+    fn flash_crowd_outnumbers_steady_at_equal_base_rate() {
+        let mut crowd = steady(100.0, 4.0);
+        crowd.kind = PhaseKind::FlashCrowd { peak_x: 5.0 };
+        let s = Trace::generate(&[steady(100.0, 4.0)], 3).len();
+        let f = Trace::generate(&[crowd], 3).len();
+        assert!(
+            f as f64 > 1.5 * s as f64,
+            "flash crowd should inflate volume: steady={s} flash={f}"
+        );
+    }
+
+    #[test]
+    fn shape_migration_crossfades_the_pool() {
+        let to = shapes(&[128]);
+        let phase = Phase {
+            kind: PhaseKind::ShapeMigration { to: to.clone() },
+            gpu: &GTX1080,
+            shapes: shapes(&[32]),
+            rps: 500.0,
+            duration: Duration::from_secs(2),
+        };
+        let t = Trace::generate(&[phase], 5);
+        let half = t.span() / 2;
+        let late_migrated = t
+            .events
+            .iter()
+            .filter(|e| e.at > half && e.shape == to[0])
+            .count();
+        let early_migrated = t
+            .events
+            .iter()
+            .filter(|e| e.at <= half && e.shape == to[0])
+            .count();
+        assert!(
+            late_migrated > 2 * early_migrated,
+            "migration should skew late: early={early_migrated} late={late_migrated}"
+        );
+        assert_eq!(t.distinct_shapes().len(), 2);
+    }
+
+    #[test]
+    fn device_swap_flips_the_gpu_at_the_cut() {
+        let phase = Phase {
+            kind: PhaseKind::DeviceSwap {
+                to: &TITANX,
+                at_frac: 0.5,
+            },
+            gpu: &GTX1080,
+            shapes: shapes(&[32]),
+            rps: 300.0,
+            duration: Duration::from_secs(2),
+        };
+        let t = Trace::generate(&[phase], 9);
+        let cut = Duration::from_secs(1);
+        assert!(t.events.iter().filter(|e| e.at < cut).all(|e| e.gpu.id == GTX1080.id));
+        assert!(t.events.iter().filter(|e| e.at >= cut).all(|e| e.gpu.id == TITANX.id));
+    }
+
+    #[test]
+    fn phases_chain_in_time_order() {
+        let t = Trace::generate(&[steady(100.0, 1.0), steady(100.0, 1.0)], 2);
+        for w in t.events.windows(2) {
+            assert!(w[0].at <= w[1].at, "events must be time-ordered");
+        }
+        let boundary = Duration::from_secs(1);
+        assert!(t.events.iter().filter(|e| e.phase == 0).all(|e| e.at < boundary));
+        assert!(t.events.iter().filter(|e| e.phase == 1).all(|e| e.at >= boundary));
+    }
+}

@@ -1,0 +1,48 @@
+//! The adversarial workload lab: seeded trace generation, trace replay
+//! through the serving stack, and chaos injection — the robustness
+//! harness for the coordinator and the online adaptive-selection loop.
+//!
+//! Three pieces, composable and all deterministic under a fixed seed:
+//!
+//! * [`generator`] — a composable phase-based trace generator. A
+//!   [`Phase`] describes a traffic regime (steady load, a flash crowd,
+//!   a shape migration, a diurnal ramp, a device swap); chaining phases
+//!   yields a [`Trace`] of timed [`TraceEvent`]s with seeded
+//!   exponential inter-arrivals. Regime *changes* — the thing the
+//!   online loop must survive — are just phase boundaries.
+//! * [`replay`] — drives a [`Trace`] through a live [`Router`] from a
+//!   configurable number of client threads, either paced against the
+//!   trace's own clock ([`ReplayClock::Paced`]) or as fast as possible
+//!   ([`ReplayClock::Afap`]). Every request resolves into exactly one
+//!   of completed / failed / shed (admission-control rejections,
+//!   classified via [`EngineBusy`]), so the returned [`ReplayReport`]
+//!   is a client-side conservation ledger to check against
+//!   `CoordinatorMetrics::verify_conservation`. [`replay_with_chaos`]
+//!   additionally kills and restarts an engine worker mid-trace
+//!   ([`Engine::kill_worker`] / [`Engine::restart_worker`]).
+//! * [`chaos`] — [`ChaosBackend`], a fault-injecting [`ExecBackend`]
+//!   wrapper: per-call seeded rolls inject transient failures, panics
+//!   (contained by the engine's worker loop, surfacing as failed jobs),
+//!   and latency spikes, with atomic [`ChaosStats`] counters so tests
+//!   can assert faults actually fired.
+//!
+//! The invariant the whole lab exists to check:
+//! `completed + failed + shed == submitted` — no request is ever
+//! silently dropped and no client ever hangs, no matter what the trace
+//! or the chaos does.
+//!
+//! [`Router`]: crate::coordinator::Router
+//! [`EngineBusy`]: crate::coordinator::EngineBusy
+//! [`ExecBackend`]: crate::coordinator::ExecBackend
+//! [`Engine::kill_worker`]: crate::coordinator::Engine::kill_worker
+//! [`Engine::restart_worker`]: crate::coordinator::Engine::restart_worker
+
+pub mod chaos;
+pub mod generator;
+pub mod replay;
+
+pub use chaos::{ChaosBackend, ChaosConfig, ChaosStats};
+pub use generator::{Phase, PhaseKind, Trace, TraceEvent};
+pub use replay::{
+    replay, replay_with_chaos, ReplayClock, ReplayOptions, ReplayReport, WorkerChaos,
+};

@@ -1,0 +1,248 @@
+//! Trace replay: drive a generated [`Trace`] through a live [`Router`]
+//! from concurrent client threads, with an optional chaos controller
+//! killing and restarting an engine worker mid-trace.
+//!
+//! Every replayed request resolves into exactly one of three outcomes —
+//! completed, failed (execution error, including contained backend
+//! panics), or shed (admission-control rejection, detected via
+//! [`EngineBusy`]) — so the returned [`ReplayReport`] is a client-side
+//! conservation ledger: `completed + failed + shed == submitted` holds
+//! by construction here, and cross-checking it against
+//! `CoordinatorMetrics::verify_conservation` proves the *server* side
+//! dropped nothing either. A replay call returning at all is the
+//! zero-hung-clients check.
+
+use super::generator::Trace;
+use crate::coordinator::{Engine, EngineBusy, GemmRequest, Router};
+use crate::gemm::cpu::Matrix;
+use crate::util::rng::mix_parts;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// How replay maps trace time onto wall time.
+#[derive(Debug, Clone, Copy)]
+pub enum ReplayClock {
+    /// Honor inter-arrival gaps, compressed by `speedup` (2.0 = replay
+    /// twice as fast as the trace's own clock).
+    Paced { speedup: f64 },
+    /// As fast as possible: ignore timestamps, saturate the engine —
+    /// the mode that exercises admission control.
+    Afap,
+}
+
+/// Replay parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayOptions {
+    pub clock: ReplayClock,
+    /// Client threads; events are dealt round-robin across them.
+    pub clients: usize,
+    /// Seed for the request matrices' contents.
+    pub seed: u64,
+}
+
+impl Default for ReplayOptions {
+    fn default() -> Self {
+        ReplayOptions {
+            clock: ReplayClock::Afap,
+            clients: 4,
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// Client-side outcome ledger of one replay.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ReplayReport {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub wall: Duration,
+}
+
+impl ReplayReport {
+    /// The conservation invariant, checked on the client-side ledger.
+    pub fn verify_conservation(&self) -> Result<(), String> {
+        let resolved = self.completed + self.failed + self.shed;
+        if resolved == self.submitted {
+            Ok(())
+        } else {
+            Err(format!(
+                "replay conservation violated: completed={} + failed={} + shed={} = {resolved} != submitted={}",
+                self.completed, self.failed, self.shed, self.submitted
+            ))
+        }
+    }
+}
+
+/// Kill/restart schedule for [`replay_with_chaos`], in units of
+/// *submitted requests* (deterministic under [`ReplayClock::Afap`] up to
+/// scheduling, unlike wall-clock thresholds).
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerChaos {
+    /// Which engine worker dies.
+    pub worker: usize,
+    /// Kill once this many requests have been submitted.
+    pub kill_after: u64,
+    /// Restart once this many have been submitted (≥ `kill_after`). If
+    /// the trace ends first, the controller restarts the worker before
+    /// returning so the pool is whole at shutdown.
+    pub restart_after: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    shed: AtomicU64,
+}
+
+impl Counters {
+    fn report(&self, wall: Duration) -> ReplayReport {
+        ReplayReport {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            wall,
+        }
+    }
+}
+
+/// One client's share of the trace: events `client, client+stride, …`.
+fn client_run(
+    router: &Router,
+    trace: &Trace,
+    opts: &ReplayOptions,
+    counters: &Counters,
+    start: Instant,
+    client: usize,
+) {
+    let stride = opts.clients.max(1);
+    let mut i = client;
+    while i < trace.events.len() {
+        let ev = &trace.events[i];
+        if let ReplayClock::Paced { speedup } = opts.clock {
+            let due = start + ev.at.div_f64(speedup.max(1e-9));
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let s = mix_parts(&[opts.seed, i as u64]);
+        let a = Matrix::random(ev.shape.m as usize, ev.shape.k as usize, s);
+        let b = Matrix::random(ev.shape.n as usize, ev.shape.k as usize, s ^ 1);
+        counters.submitted.fetch_add(1, Ordering::Relaxed);
+        match router.serve(GemmRequest {
+            gpu: ev.gpu,
+            shape: ev.shape,
+            a,
+            b,
+        }) {
+            Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+            Err(e) if EngineBusy::is(&e) => counters.shed.fetch_add(1, Ordering::Relaxed),
+            Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        i += stride;
+    }
+}
+
+/// Replay `trace` through `router`. Returns when every client thread
+/// has resolved every one of its events — a return IS the proof that no
+/// client hung.
+pub fn replay(router: &Router, trace: &Trace, opts: &ReplayOptions) -> ReplayReport {
+    let counters = Counters::default();
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..opts.clients.max(1) {
+            let counters = &counters;
+            s.spawn(move || client_run(router, trace, opts, counters, t0, c));
+        }
+    });
+    counters.report(t0.elapsed())
+}
+
+/// Replay with a chaos controller: once `chaos.kill_after` requests are
+/// submitted the controller kills `chaos.worker` (its queue stays open;
+/// siblings steal the backlog), and once `chaos.restart_after` are
+/// submitted it restarts the worker on the same queue. The engine must
+/// come from [`Engine::restartable`].
+///
+/// Use ≥ 2 workers (or a `restart_after` the trace will reach): in a
+/// 1-worker pool nobody can steal a dead worker's backlog, so requests
+/// queued while it is down wait for the restart.
+pub fn replay_with_chaos(
+    router: &Router,
+    engine: &mut Engine,
+    trace: &Trace,
+    opts: &ReplayOptions,
+    chaos: &WorkerChaos,
+) -> anyhow::Result<ReplayReport> {
+    let counters = Counters::default();
+    let done = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let ctl_result = std::thread::scope(|s| {
+        let (counters_ref, done_ref) = (&counters, &done);
+        let ctl = s.spawn(move || -> anyhow::Result<()> {
+            let mut killed = false;
+            let mut restarted = false;
+            loop {
+                let n = counters_ref.submitted.load(Ordering::Relaxed);
+                if !killed && n >= chaos.kill_after {
+                    engine.kill_worker(chaos.worker)?;
+                    killed = true;
+                }
+                if killed && !restarted && n >= chaos.restart_after {
+                    engine.restart_worker(chaos.worker)?;
+                    restarted = true;
+                }
+                if done_ref.load(Ordering::Relaxed) {
+                    if killed && !restarted {
+                        engine.restart_worker(chaos.worker)?;
+                    }
+                    return Ok(());
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        });
+        let mut clients = Vec::with_capacity(opts.clients.max(1));
+        for c in 0..opts.clients.max(1) {
+            let counters = &counters;
+            clients.push(s.spawn(move || client_run(router, trace, opts, counters, t0, c)));
+        }
+        for c in clients {
+            let _ = c.join();
+        }
+        done.store(true, Ordering::Relaxed);
+        ctl.join().expect("chaos controller panicked")
+    });
+    ctl_result?;
+    Ok(counters.report(t0.elapsed()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_conservation_check_catches_a_lost_request() {
+        let ok = ReplayReport {
+            submitted: 10,
+            completed: 7,
+            failed: 2,
+            shed: 1,
+            wall: Duration::ZERO,
+        };
+        ok.verify_conservation().unwrap();
+        let bad = ReplayReport {
+            submitted: 10,
+            completed: 7,
+            failed: 2,
+            shed: 0,
+            wall: Duration::ZERO,
+        };
+        let msg = bad.verify_conservation().unwrap_err();
+        assert!(msg.contains("submitted=10"), "{msg}");
+    }
+}

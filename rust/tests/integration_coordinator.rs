@@ -504,12 +504,91 @@ fn router_admission_reject_when_busy_surfaces_engine_busy() {
     assert!(EngineBusy::is(&err), "unexpected error: {err}");
     let snap = router.metrics.snapshot();
     assert_eq!(snap.requests, 1);
-    assert_eq!(snap.failed, 1);
+    assert_eq!(snap.shed, 1, "admission rejection is shed, not failed");
+    assert_eq!(snap.failed, 0);
     assert_eq!(snap.busy_rejections, 1);
+    snap.verify_conservation().unwrap();
     open_gate(&gate);
     r1.recv().unwrap().unwrap();
     r2.recv().unwrap().unwrap();
     engine.shutdown();
+}
+
+/// A backend that always panics — the worker must contain it.
+struct PanicExecutor;
+
+impl ExecBackend for PanicExecutor {
+    fn execute(&self, artifact: &str, _inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        panic!("integration test panic on {artifact}");
+    }
+
+    fn name(&self) -> String {
+        "panic".into()
+    }
+}
+
+#[test]
+fn backend_panic_surfaces_as_a_failed_request_not_a_dead_worker() {
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        |_| Ok(Box::new(PanicExecutor) as Box<dyn ExecBackend>),
+    )
+    .expect("panic pool");
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let router = Router::new(selector, engine.handle(), RouterConfig::default());
+    for i in 0..3u64 {
+        // Three requests through the SAME worker: if the first panic had
+        // killed it, the later serves would hang or error differently.
+        let err = router.serve(request(8, 8, 8, i)).unwrap_err().to_string();
+        assert!(err.contains("panicked"), "{err}");
+    }
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.requests, 3);
+    assert_eq!(snap.failed, 3, "contained panics count as failed");
+    assert_eq!(snap.shed, 0);
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.worker_depths, vec![0], "gauge balanced after panics");
+    engine.shutdown();
+}
+
+#[test]
+fn graceful_drain_under_load_conserves_every_request() {
+    let engine = native_pool(2, 4);
+    let selector = Selector::train_default(&collect_paper_dataset());
+    let router = Arc::new(Router::new(
+        selector,
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            ..RouterConfig::default()
+        },
+    ));
+    let (clients, per_client) = (4usize, 30usize);
+    std::thread::scope(|s| {
+        for t in 0..clients {
+            let router = Arc::clone(&router);
+            s.spawn(move || {
+                for i in 0..per_client {
+                    // Mid-trace shutdown races these: each serve must
+                    // still resolve — completed, failed (engine shut
+                    // down), or shed — and never hang.
+                    let _ = router.serve(request(32, 32, 32, (t * 100 + i) as u64));
+                }
+            });
+        }
+        // Let some traffic land, then shut down under load.
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        engine.shutdown();
+    });
+    let snap = router.metrics.snapshot();
+    assert_eq!(snap.requests, (clients * per_client) as u64);
+    snap.verify_conservation()
+        .expect("every request resolved exactly once despite mid-trace shutdown");
+    assert!(snap.completed > 0, "some requests completed before shutdown");
 }
 
 #[test]

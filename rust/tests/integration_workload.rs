@@ -1,0 +1,437 @@
+//! Integration: the adversarial workload lab end to end — trace replay
+//! through a live router, chaos injection (fault-injecting backend +
+//! worker kill/restart mid-trace) with the conservation invariant
+//! `completed + failed + shed == submitted` asserted on both the
+//! client-side replay ledger and the server-side coordinator metrics,
+//! and the deterministic regime-change A/B: the PR 6 online-loop config
+//! (recency reservoir + wall-clock drift decay) must recover from a
+//! latency-regime flip at least 2× faster than the old uniform /
+//! retrain-coupled config.
+
+use mtnn::coordinator::{
+    AdmissionControl, CoordinatorMetrics, Engine, EngineConfig, ExecBackend, Router, RouterConfig,
+};
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::{SimExecutor, GTX1080};
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::Classifier;
+use mtnn::online::trainer::{pump, Accumulator, TrainerState};
+use mtnn::online::{LiveSelector, OnlineConfig, OnlineHub, ReservoirPolicy};
+use mtnn::selector::cache::DecisionCache;
+use mtnn::selector::{features, Selector, TrainedModel};
+use mtnn::workload::{
+    replay, replay_with_chaos, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind,
+    ReplayClock, ReplayOptions, Trace, WorkerChaos,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn small_shapes() -> Vec<GemmShape> {
+    vec![
+        GemmShape::new(32, 32, 32),
+        GemmShape::new(48, 32, 64),
+        GemmShape::new(64, 48, 32),
+    ]
+}
+
+fn steady_trace(rps: f64, secs: f64, seed: u64) -> Trace {
+    Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: &GTX1080,
+            shapes: small_shapes(),
+            rps,
+            duration: Duration::from_secs_f64(secs),
+        }],
+        seed,
+    )
+}
+
+fn selector() -> Selector {
+    Selector::train_default(&mtnn::dataset::collect_paper_dataset())
+}
+
+// ---- replay ----------------------------------------------------------------
+
+#[test]
+fn afap_replay_through_a_live_router_conserves_every_request() {
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let router = Router::new(selector(), engine.handle(), RouterConfig::default());
+    let trace = steady_trace(400.0, 0.5, 11);
+    assert!(trace.len() >= 100, "trace too small: {}", trace.len());
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    assert_eq!(report.submitted, trace.len() as u64);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.shed, 0, "blocking admission never sheds");
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.requests, report.submitted);
+    assert_eq!(snap.completed, report.completed);
+    engine.shutdown();
+}
+
+#[test]
+fn paced_replay_honors_the_trace_clock() {
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 1,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let router = Router::new(selector(), engine.handle(), RouterConfig::default());
+    // 0.4 trace-seconds at 4× speedup should take ≥ ~0.1 wall-seconds.
+    let trace = steady_trace(150.0, 0.4, 3);
+    let report = replay(
+        &router,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Paced { speedup: 4.0 },
+            clients: 2,
+            seed: 1,
+        },
+    );
+    report.verify_conservation().unwrap();
+    assert_eq!(report.completed, trace.len() as u64);
+    let floor = trace.span().div_f64(4.0).saturating_sub(Duration::from_millis(20));
+    assert!(
+        report.wall >= floor,
+        "paced replay finished too fast: {:?} < {:?}",
+        report.wall,
+        floor
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn shed_requests_are_counted_not_lost_under_reject_when_busy() {
+    // 1 worker, 1-deep queue, as-fast-as-possible from 4 clients: the
+    // engine MUST shed, and everything must still balance.
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 1,
+            queue_depth: 1,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(400.0, 0.5, 17);
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    assert!(report.shed > 0, "a saturated 1-deep pool must shed");
+    assert!(report.completed > 0);
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.shed, report.shed);
+    assert_eq!(snap.failed, report.failed);
+    engine.shutdown();
+}
+
+// ---- chaos -----------------------------------------------------------------
+
+#[test]
+fn chaos_run_conserves_every_request_and_no_client_hangs() {
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 0xBAD5EED,
+        fail_prob: 0.05,
+        panic_prob: 0.03,
+        spike_prob: 0.05,
+        spike: Duration::from_micros(200),
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let mut engine = Engine::restartable(
+        EngineConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                chaos_cfg,
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("restartable chaos pool");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(800.0, 0.5, 23);
+    assert!(trace.len() >= 300, "want a meaty trace, got {}", trace.len());
+    let report = replay_with_chaos(
+        &router,
+        &mut engine,
+        &trace,
+        &ReplayOptions::default(),
+        &WorkerChaos {
+            worker: 0,
+            kill_after: 100,
+            restart_after: 220,
+        },
+    )
+    .expect("chaos controller");
+    // replay_with_chaos returning at all proves zero hung clients.
+    report.verify_conservation().unwrap();
+    assert_eq!(report.submitted, trace.len() as u64);
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.completed, report.completed);
+    assert_eq!(snap.failed, report.failed);
+    assert_eq!(snap.shed, report.shed);
+    assert!(
+        stats.total() > 0,
+        "chaos must actually fire: {stats:?}"
+    );
+    assert!(
+        report.failed >= stats.injected_failures.load(std::sync::atomic::Ordering::Relaxed),
+        "every injected failure surfaces as a failed request"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn injected_panics_surface_as_failed_requests_through_replay() {
+    // Panic-only chaos at a rate high enough to guarantee hits: the
+    // engine's containment turns each one into a failed request, and
+    // the pool keeps serving.
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 7,
+        fail_prob: 0.0,
+        panic_prob: 0.2,
+        spike_prob: 0.0,
+        spike: Duration::ZERO,
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                chaos_cfg,
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("chaos pool");
+    let router = Router::new(selector(), engine.handle(), RouterConfig::default());
+    let trace = steady_trace(300.0, 0.4, 31);
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    let panics = stats.injected_panics.load(std::sync::atomic::Ordering::Relaxed);
+    assert!(panics > 0, "panic chaos never fired");
+    assert!(report.failed > 0, "contained panics must surface as failures");
+    assert!(report.completed > 0, "the pool must survive the panics");
+    router.metrics.snapshot().verify_conservation().unwrap();
+    engine.shutdown();
+}
+
+// ---- regime-change survival (the acceptance A/B) ---------------------------
+
+/// A selector that always answers `label`: a 0-tree GBDT keeps only its
+/// base score, whose sign is the class prior of its fit data.
+fn constant_selector(label: i8) -> Selector {
+    let p = GbdtParams {
+        n_estimators: 0,
+        ..GbdtParams::default()
+    };
+    let mut g = Gbdt::new(p);
+    let x = vec![vec![0.0; 8], vec![1.0; 8]];
+    let y = vec![label as f64, label as f64];
+    g.fit(&x, &y);
+    Selector::new(TrainedModel::Gbdt(g))
+}
+
+fn ab_config(reservoir: ReservoirPolicy, drift_half_life: Duration) -> OnlineConfig {
+    OnlineConfig {
+        probe_every_min: 2,
+        probe_every_max: 8,
+        probe_epsilon: 0.05,
+        drift_decay: 0.5,
+        drift_half_life,
+        ring_capacity: 4096,
+        retrain_min_labeled: 32,
+        retrain_every_labeled: 32,
+        drift_threshold: 0.15,
+        drift_min_probes: 8,
+        holdout_frac: 0.2,
+        poll_interval: Duration::from_millis(25),
+        max_examples: 256,
+        reservoir,
+        persist_path: None,
+    }
+}
+
+/// Deterministic, engine-free replay of a latency-regime flip through
+/// the online loop, driven by a virtual clock (the trace's own
+/// timestamps). Returns (events-to-recovery, retrains, promotions);
+/// recovery = post-flip events until the live model predicts the new
+/// regime's label for every trace shape, capped at the post-flip count.
+fn regime_change_recovery(cfg: OnlineConfig) -> (usize, u64, u64) {
+    const RESERVOIR_SEED: u64 = 0x5EED_CAFE;
+    let gpu = &GTX1080;
+    let shapes = vec![
+        GemmShape::new(64, 64, 64),
+        GemmShape::new(96, 64, 48),
+        GemmShape::new(128, 128, 64),
+        GemmShape::new(48, 96, 96),
+        GemmShape::new(80, 80, 80),
+    ];
+    // Phase 0 = regime A (NT fast), phase 1 = regime B (TNN fast). The
+    // regime is a property of the latency world, not the trace: the
+    // shape mix stays identical across the flip.
+    let trace = Trace::generate(
+        &[
+            Phase {
+                kind: PhaseKind::Steady,
+                gpu,
+                shapes: shapes.clone(),
+                rps: 200.0,
+                duration: Duration::from_secs(2),
+            },
+            Phase {
+                kind: PhaseKind::Steady,
+                gpu,
+                shapes: shapes.clone(),
+                rps: 200.0,
+                duration: Duration::from_secs(15),
+            },
+        ],
+        42,
+    );
+    let n_flip = trace.events.iter().filter(|e| e.phase == 0).count();
+    let n_post = trace.len() - n_flip;
+
+    let metrics = Arc::new(CoordinatorMetrics::default());
+    let hub = OnlineHub::new(
+        cfg.clone(),
+        Arc::new(LiveSelector::new(constant_selector(Algorithm::Nt.label()))),
+        Arc::new(DecisionCache::default()),
+        Arc::clone(&metrics),
+    );
+    // Long-uptime warm start: a full reservoir of regime-A examples that
+    // claims a deep history — the exact state that makes a uniform
+    // reservoir adapt glacially.
+    let mut acc = Accumulator::with_policy(cfg.max_examples, RESERVOIR_SEED, cfg.reservoir);
+    acc.preload(
+        shapes
+            .iter()
+            .cycle()
+            .take(cfg.max_examples)
+            .map(|&s| mtnn::online::Example {
+                gpu_id: gpu.id,
+                feats: features(gpu, s.m, s.n, s.k),
+                label: Algorithm::Nt.label(),
+            })
+            .collect(),
+        50_000,
+    );
+    let mut st = TrainerState::default();
+
+    let recovered = |hub: &OnlineHub, want: i8| {
+        let live = hub.live.current();
+        shapes
+            .iter()
+            .all(|s| live.model.predict_label(&features(gpu, s.m, s.n, s.k)) == want)
+    };
+
+    let mut recovery = n_post;
+    let mut last_pump_at = Duration::ZERO;
+    for (i, ev) in trace.events.iter().enumerate() {
+        let regime_b = ev.phase == 1;
+        let (nt_us, tnn_us) = if regime_b { (30.0, 10.0) } else { (10.0, 30.0) };
+        let GemmShape { m, n, k } = ev.shape;
+        let (algo, _) = hub.live.select(gpu, m, n, k);
+        let predicted = algo.label();
+        if hub.should_probe(gpu.id, m, n, k) {
+            hub.record_probe(gpu, m, n, k, predicted, nt_us, tnn_us);
+        } else {
+            let exec = match algo {
+                Algorithm::Nt => nt_us,
+                _ => tnn_us,
+            };
+            hub.record_execution(gpu, m, n, k, algo, exec, predicted);
+        }
+        if i % 50 == 49 {
+            // Virtual clock: the trainer's wall-time drift decay sees the
+            // trace's own elapsed time, so the run is deterministic.
+            pump(&hub, &mut acc, &mut st, ev.at - last_pump_at);
+            last_pump_at = ev.at;
+            if regime_b && recovery == n_post && recovered(&hub, Algorithm::Tnn.label()) {
+                recovery = i + 1 - n_flip;
+            }
+        }
+    }
+    use std::sync::atomic::Ordering;
+    (
+        recovery,
+        metrics.retrains.load(Ordering::Relaxed),
+        metrics.promotions.load(Ordering::Relaxed),
+    )
+}
+
+#[test]
+fn recency_config_recovers_from_a_regime_flip_at_least_2x_faster() {
+    // Old config: PR 5 semantics — uniform reservoir, drift decayed only
+    // on retrain (no wall-clock half-life).
+    let (old_recovery, old_retrains, _) =
+        regime_change_recovery(ab_config(ReservoirPolicy::Uniform, Duration::ZERO));
+    // New config: recency-biased reservoir + wall-clock half-life decay.
+    let (new_recovery, new_retrains, new_promotions) = regime_change_recovery(ab_config(
+        ReservoirPolicy::Recency,
+        Duration::from_secs(1),
+    ));
+    assert!(old_retrains > 0, "old config must at least retrain");
+    assert!(new_retrains > 0, "new config must retrain");
+    assert!(
+        new_promotions >= 1,
+        "new config must promote a challenger after the flip"
+    );
+    assert!(new_recovery > 0, "sanity: recovery measured, got {new_recovery}");
+    assert!(
+        2 * new_recovery <= old_recovery,
+        "recency+wall-clock-decay must recover ≥2× faster: \
+         new={new_recovery} events, old={old_recovery} events"
+    );
+}
+
+#[test]
+fn regime_change_replay_is_deterministic() {
+    let cfg = ab_config(ReservoirPolicy::Recency, Duration::from_secs(1));
+    let a = regime_change_recovery(cfg.clone());
+    let b = regime_change_recovery(cfg);
+    assert_eq!(a, b, "same config + seed must reproduce bit-identically");
+}

@@ -66,13 +66,23 @@ def main():
         mark = "  ⚠ REGRESSION?" if regressed else ""
         warnings += regressed
         print(f"  {name}: {metric} {old_val:.1f} → {val:.1f} ({delta_pct:+.1f}%){mark}")
+    # A row the baseline had but the new run lost is a hard warning, not
+    # an aside: a silently vanished benchmark is how coverage regressions
+    # hide. Counted into the same warning total (still exit 0 — this is a
+    # trajectory report, not a gate).
     dropped = sorted(set(prev) - set(new))
     for key in dropped:
-        print(f"  {' '.join(p for p in key if p)}: dropped (present in previous run only)")
+        print(f"  {' '.join(p for p in key if p)}: ⚠ MISSING — present in baseline, absent from new run")
+        warnings += 1
+    summary = []
+    if dropped:
+        summary.append(f"{len(dropped)} baseline row(s) missing from the new run")
+    if warnings > len(dropped):
+        summary.append(f"{warnings - len(dropped)} possible regression(s) beyond {REGRESSION_WARN_PCT:.0f}%")
     if warnings:
-        print(f"bench_diff: {warnings} possible regression(s) beyond {REGRESSION_WARN_PCT:.0f}% — soft warning, not a gate")
+        print(f"bench_diff: {warnings} warning(s): {'; '.join(summary)} — soft warning, not a gate")
     else:
-        print("bench_diff: no regressions beyond threshold")
+        print("bench_diff: no regressions beyond threshold, no missing rows")
 
 
 if __name__ == "__main__":
