@@ -18,6 +18,14 @@
 //!     cargo run --release --example serve_gemm -- \
 //!         --backend sim --online --mistrained --requests 200
 //!
+//! `--reuse` turns on the engine's result-reuse layer for the baseline
+//! comparison and makes the trace repeat-friendly (identical shapes carry
+//! identical payload bits), so cache hits and single-flight coalescing
+//! are visible in the printed counters:
+//!
+//!     cargo run --release --example serve_gemm -- \
+//!         --backend native --reuse --requests 200
+//!
 //! `--trace chaos` runs the adversarial workload lab instead: a seeded
 //! trace replayed as fast as possible through a restartable sim-backed
 //! pool wrapped in the fault-injecting chaos backend (transient
@@ -30,7 +38,8 @@
 //!         --trace chaos --requests 400 --clients 4 --workers 2
 
 use mtnn::coordinator::{
-    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, Router, RouterConfig,
+    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, ReuseConfig, Router,
+    RouterConfig,
 };
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::gemm::cpu::Matrix;
@@ -111,8 +120,12 @@ fn run_mode(
     requests: usize,
     clients: usize,
     workers: usize,
+    reuse: bool,
 ) -> anyhow::Result<()> {
     let engine = build_engine(backend, workers)?;
+    if reuse {
+        engine.handle().enable_reuse(ReuseConfig::default());
+    }
     let selector = Selector::train_default(&collect_paper_dataset());
     let router = Arc::new(Router::new(
         selector,
@@ -140,11 +153,20 @@ fn run_mode(
         let router = router.clone();
         joins.push(std::thread::spawn(move || {
             for (i, (m, n, k)) in trace(per_client, 100 + c as u64).into_iter().enumerate() {
+                // With reuse on, identical shapes carry identical payload
+                // bits so the output cache can engage; otherwise every
+                // request is unique content (the pre-reuse behaviour).
+                let (sa, sb) = if reuse {
+                    let s = m ^ (n << 20) ^ (k << 40);
+                    (s, s ^ 1)
+                } else {
+                    ((c * 1000 + i) as u64, (c * 2000 + i) as u64)
+                };
                 let req = GemmRequest {
                     gpu: &GTX1080,
                     shape: GemmShape::new(m, n, k),
-                    a: Matrix::random(m as usize, k as usize, (c * 1000 + i) as u64),
-                    b: Matrix::random(n as usize, k as usize, (c * 2000 + i) as u64),
+                    a: Matrix::random(m as usize, k as usize, sa),
+                    b: Matrix::random(n as usize, k as usize, sb),
                 };
                 router.serve(req).expect("serve");
             }
@@ -161,6 +183,12 @@ fn run_mode(
         snap.completed as f64 / wall.as_secs_f64(),
         snap.render()
     );
+    if reuse {
+        println!(
+            "     reuse: hits={} coalesced={} misses={} bypasses={}",
+            snap.reuse_hits, snap.reuse_coalesced, snap.reuse_misses, snap.reuse_bypasses
+        );
+    }
     engine.shutdown();
     Ok(())
 }
@@ -424,6 +452,7 @@ fn main() -> anyhow::Result<()> {
     let backend = args.get("backend", default_backend);
     let online = args.flag("online");
     let mistrained = args.flag("mistrained");
+    let reuse = args.flag("reuse");
     let trace_mode = args.get("trace", "");
     args.finish()?;
     if trace_mode == "chaos" {
@@ -447,9 +476,9 @@ fn main() -> anyhow::Result<()> {
             "serving {requests} NT-operation requests from {clients} concurrent clients \
              on a {workers}-worker {backend} engine pool"
         );
-        run_mode("MTNN", None, &backend, requests, clients, workers)?;
-        run_mode("force-NT", Some(Algorithm::Nt), &backend, requests, clients, workers)?;
-        run_mode("force-TNN", Some(Algorithm::Tnn), &backend, requests, clients, workers)?;
+        run_mode("MTNN", None, &backend, requests, clients, workers, reuse)?;
+        run_mode("force-NT", Some(Algorithm::Nt), &backend, requests, clients, workers, reuse)?;
+        run_mode("force-TNN", Some(Algorithm::Tnn), &backend, requests, clients, workers, reuse)?;
     }
     println!("serve_gemm OK");
     Ok(())

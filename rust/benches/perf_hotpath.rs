@@ -5,7 +5,9 @@
 //! artifact catalog exists, the native blocked backend otherwise), and
 //! the sharded engine pool vs a single worker under concurrent clients,
 //! and the online adaptive probe scheduler (decision cost + probe
-//! overhead under stable vs drifting traffic).
+//! overhead under stable vs drifting traffic), shared vs per-stripe
+//! A-panel packing on a tall-A shape, and end-to-end result reuse
+//! (repeat-heavy replay with the engine's output cache on vs off).
 //! Run: `cargo bench --bench perf_hotpath`.
 //!
 //! Besides the human report (`results/perf_hotpath.txt`), every row is
@@ -13,7 +15,7 @@
 //! (`{name, ns_per_op, speedup?, shape?, backend?}`) so the perf
 //! trajectory can be tracked across PRs without parsing prose.
 
-use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, Router, RouterConfig};
+use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, ReuseConfig, Router, RouterConfig};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::experiments::emit;
 use mtnn::gemm::cpu::Matrix;
@@ -28,6 +30,8 @@ use mtnn::selector::cache::DecisionCache;
 use mtnn::selector::{features, Selector};
 use mtnn::util::bench::{bench, bench_batched, BenchResult};
 use mtnn::util::json::Json;
+use mtnn::workload::{replay, Phase, PhaseKind, ReplayOptions, Trace};
+use std::time::Duration;
 
 fn speedup_line(name: &str, slow: &BenchResult, fast: &BenchResult) -> String {
     format!(
@@ -453,6 +457,113 @@ fn main() {
                 .set("fixed_1_in_16_baseline", 1.0 / 16.0),
         );
     }
+
+    // 10. Shared vs per-stripe A-panel packing on a tall-A shape. The
+    //     pooled path packs each MC×KC block of A exactly once into a
+    //     shared checkout buffer that every stripe reads; the retained
+    //     per-stripe reference (matmul_nt_scoped) has each thread repack
+    //     its own rows for every KC slab. Same thread count both ways; the
+    //     scoped path also pays per-call spawns, but at this size
+    //     (~400 MFLOP) packing traffic, not spawn cost, is the split
+    //     being measured (1c isolates spawn overhead at 96^3).
+    let a_tall = Matrix::random(1536, 512, 7);
+    let b_tall = Matrix::random(256, 512, 8);
+    let striped_tall = bench(
+        "gemm.pack=striped matmul_nt 1536x256x512 (per-stripe packing)",
+        2,
+        10,
+        || blocked::matmul_nt_scoped(&a_tall, &b_tall, lanes),
+    );
+    report.push_str(&format!("{}\n", striped_tall.report()));
+    let shared_tall = bench(
+        "gemm.pack=shared matmul_nt 1536x256x512 (pack-once shared panels)",
+        2,
+        10,
+        || blocked::matmul_nt(&a_tall, &b_tall),
+    );
+    report.push_str(&format!("{}\n", shared_tall.report()));
+    report.push_str(&speedup_line(
+        "shared/striped A-packing tall-A NT 1536x256x512",
+        &striped_tall,
+        &shared_tall,
+    ));
+    rows.push(
+        json_row("gemm.shared_pack.tall_a.matmul_nt", shared_tall.mean_ns())
+            .set("shape", "1536x256x512")
+            .set("backend", "native")
+            .set(
+                "speedup_vs_striped_pack",
+                striped_tall.mean_ns() / shared_tall.mean_ns(),
+            ),
+    );
+
+    // 11. Result reuse end to end: the same Zipf repeat-heavy trace
+    //     replayed as-fast-as-possible through a native-backend engine +
+    //     router, once with the output cache off (every request executes)
+    //     and once with it on (repeats are served from cache or coalesce
+    //     onto an in-flight leader). The on/off ratio is the headline
+    //     serving win for repeat-heavy phases.
+    let reuse_replay = |enable: bool| -> (f64, u64, u64, u64) {
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 4,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        })
+        .expect("native pool");
+        if enable {
+            engine.handle().enable_reuse(ReuseConfig::default());
+        }
+        let router = Router::new(
+            Selector::train_default(&records),
+            engine.handle(),
+            RouterConfig::default(),
+        );
+        let trace = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::RepeatHeavy {
+                    distinct: 12,
+                    exponent: 1.2,
+                },
+                gpu: &GTX1080,
+                shapes: vec![GemmShape::new(192, 192, 192), GemmShape::new(256, 192, 256)],
+                rps: 1500.0,
+                duration: Duration::from_secs_f64(0.8),
+            }],
+            0xB0B,
+        );
+        let rep = replay(&router, &trace, &ReplayOptions::default());
+        rep.verify_conservation().expect("reuse replay conserves");
+        let snap = router.metrics.snapshot();
+        let thpt = rep.completed as f64 / rep.wall.as_secs_f64();
+        engine.shutdown();
+        (thpt, snap.reuse_hits, snap.reuse_coalesced, rep.completed)
+    };
+    let (reuse_off, _, _, off_completed) = reuse_replay(false);
+    let (reuse_on, hits, coalesced, on_completed) = reuse_replay(true);
+    report.push_str(&format!(
+        "coordinator result reuse (repeat-heavy Zipf replay, native, 4 workers): \
+         off {reuse_off:.0} req/s ({off_completed} completed) | on {reuse_on:.0} req/s \
+         ({on_completed} completed, {hits} cache hits, {coalesced} coalesced)\n"
+    ));
+    report.push_str(&format!(
+        "  ↳ speedup reuse-on/reuse-off replay throughput: {:.2}x\n",
+        reuse_on / reuse_off
+    ));
+    rows.push(
+        Json::obj()
+            .set("name", "coordinator.reuse.replay.off")
+            .set("req_per_s", reuse_off)
+            .set("backend", "native"),
+    );
+    rows.push(
+        Json::obj()
+            .set("name", "coordinator.reuse.replay.on")
+            .set("req_per_s", reuse_on)
+            .set("backend", "native")
+            .set("reuse_hits", hits)
+            .set("reuse_coalesced", coalesced)
+            .set("speedup_vs_reuse_off", reuse_on / reuse_off),
+    );
 
     emit("perf_hotpath.txt", &report);
     emit(

@@ -1,6 +1,18 @@
 //! The execution engine: a sharded pool of worker threads, each owning one
 //! [`ExecBackend`] instance and a bounded command queue.
 //!
+//! * **Cross-request result reuse** (opt-in,
+//!   [`EngineHandle::enable_reuse`]) — a bounded, epoch-aware output
+//!   cache plus single-flight dedup sits in the *submit path*
+//!   ([`super::reuse`]): a submission whose `(artifact, input-content)`
+//!   key is cached is answered on its own response channel without ever
+//!   touching a queue, and identical concurrent submissions coalesce
+//!   onto one in-flight execution (all waiters receive the shared
+//!   result). Workers resolve reuse tickets on completion; the routing
+//!   error paths and both teardown sweeps resolve them on failure, so a
+//!   coalesced waiter can never hang. Epoch bumps (wired to online model
+//!   promotion) and per-artifact invalidation guarantee a stale result
+//!   is never served.
 //! * **Shape-affinity sharding** — jobs hash by artifact name onto a
 //!   worker, so repeated shapes land on the same thread and its adaptive
 //!   micro-batcher can run them back-to-back (caches stay hot, dispatch is
@@ -51,13 +63,14 @@
 
 use super::backend::{EngineBusy, ExecBackend};
 use super::metrics::BatchGauge;
+use super::reuse::{Begin, ReuseConfig, ReuseLayer, ReuseTicket};
 use crate::gemm::cpu::Matrix;
 use crate::gemm::native::NativeExecutor;
 use crate::gpusim::{GpuSpec, SimExecutor};
 use crate::runtime::Runtime;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -75,6 +88,11 @@ pub struct EngineJob {
     pub artifact: String,
     pub inputs: Vec<Matrix>,
     pub respond: mpsc::Sender<anyhow::Result<ExecReply>>,
+    /// Present when this job *leads* a reuse single-flight group
+    /// ([`super::reuse::Begin::Lead`]): whoever finishes the job —
+    /// worker, routing failure, or a teardown sweep — must resolve the
+    /// ticket so coalesced waiters are released exactly once.
+    pub reuse: Option<ReuseTicket>,
 }
 
 enum Cmd {
@@ -157,7 +175,10 @@ impl WorkQueue {
 enum PushErr {
     /// Queue at capacity — the command is handed back for rerouting.
     Full(Cmd),
-    Closed,
+    /// Queue closed — the command is handed back so the caller can fail
+    /// it properly (a job may carry a reuse ticket with parked waiters;
+    /// silently dropping it would strand them).
+    Closed(Cmd),
 }
 
 /// The queue fabric shared by the handle and every worker.
@@ -168,6 +189,10 @@ struct PoolShared {
     /// parked on `work` re-scan for poppable or stealable commands.
     ticket: Mutex<u64>,
     work: Condvar,
+    /// Cross-request reuse layer, installed (at most once) by
+    /// [`EngineHandle::enable_reuse`]. Shared by the submit path (which
+    /// classifies submissions) and the workers (which resolve tickets).
+    reuse: OnceLock<Arc<ReuseLayer>>,
 }
 
 impl PoolShared {
@@ -197,7 +222,7 @@ impl PoolShared {
     fn try_push(&self, idx: usize, cmd: Cmd) -> Result<(), PushErr> {
         let mut q = self.queues[idx].state.lock().unwrap();
         if q.closed {
-            return Err(PushErr::Closed);
+            return Err(PushErr::Closed(cmd));
         }
         if q.items.len() >= self.cap && matches!(cmd, Cmd::Run(_)) {
             return Err(PushErr::Full(cmd));
@@ -214,7 +239,7 @@ impl PoolShared {
         let mut q = wq.state.lock().unwrap();
         loop {
             if q.closed {
-                return Err(PushErr::Closed);
+                return Err(PushErr::Closed(cmd));
             }
             if q.items.len() < self.cap || !matches!(cmd, Cmd::Run(_)) {
                 q.items.push_back(cmd);
@@ -278,7 +303,7 @@ impl PoolShared {
     fn push_front_control(&self, idx: usize, cmd: Cmd) -> Result<(), PushErr> {
         let mut q = self.queues[idx].state.lock().unwrap();
         if q.closed {
-            return Err(PushErr::Closed);
+            return Err(PushErr::Closed(cmd));
         }
         q.items.push_front(cmd);
         drop(q);
@@ -361,6 +386,18 @@ impl EngineHandle {
         (h.finish() as usize) % self.shared.queues.len()
     }
 
+    /// A routed job failed to land on any queue: resolve its reuse ticket
+    /// first (coalesced waiters may already be parked on it — they must
+    /// see the same failure), then hand the error to the submitter.
+    fn abort_route(&self, cmd: Cmd, err: fn() -> anyhow::Error) -> anyhow::Error {
+        if let Cmd::Run(job) = cmd {
+            if let (Some(t), Some(layer)) = (job.reuse.as_ref(), self.shared.reuse.get()) {
+                layer.complete(t, &Err(err()));
+            }
+        }
+        err()
+    }
+
     /// Route a job: affine worker first, handoff to any worker with queue
     /// room, then either block on the affine worker (`block`) or reject
     /// with [`EngineBusy`].
@@ -377,24 +414,55 @@ impl EngineHandle {
                     self.depths[idx].fetch_sub(1, Ordering::Relaxed);
                     cmd = c;
                 }
-                Err(PushErr::Closed) => {
+                Err(PushErr::Closed(c)) => {
                     self.depths[idx].fetch_sub(1, Ordering::Relaxed);
-                    anyhow::bail!("engine is shut down");
+                    return Err(self.abort_route(c, || anyhow::anyhow!("engine is shut down")));
                 }
             }
         }
         if !block {
-            return Err(anyhow::Error::new(EngineBusy));
+            return Err(self.abort_route(cmd, || anyhow::Error::new(EngineBusy)));
         }
         // Every queue is full: bounded backpressure on the affine worker.
         self.depths[start].fetch_add(1, Ordering::Relaxed);
         match self.shared.push_blocking(start, cmd) {
             Ok(()) => Ok(()),
-            Err(_) => {
+            Err(PushErr::Full(c)) | Err(PushErr::Closed(c)) => {
                 self.depths[start].fetch_sub(1, Ordering::Relaxed);
-                anyhow::bail!("engine is shut down")
+                Err(self.abort_route(c, || anyhow::anyhow!("engine is shut down")))
             }
         }
+    }
+
+    /// Shared submit path. With reuse enabled, classify the submission
+    /// first: cache hits and coalesced duplicates resolve on `rx` without
+    /// a job ever being routed; only leaders (and deny-listed bypasses)
+    /// enter the queue fabric.
+    fn submit_with(
+        &self,
+        artifact: String,
+        inputs: Vec<Matrix>,
+        block: bool,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
+        let (tx, rx) = mpsc::channel();
+        let reuse = match self.shared.reuse.get() {
+            Some(layer) => match layer.begin(&artifact, &inputs, &tx) {
+                Begin::Served | Begin::Coalesced => return Ok(rx),
+                Begin::Lead(t) => Some(t),
+                Begin::Bypass => None,
+            },
+            None => None,
+        };
+        self.route(
+            Box::new(EngineJob {
+                artifact,
+                inputs,
+                respond: tx,
+                reuse,
+            }),
+            block,
+        )?;
+        Ok(rx)
     }
 
     /// Submit one job; returns the receiver for its result. Blocks when
@@ -404,16 +472,7 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        let (tx, rx) = mpsc::channel();
-        self.route(
-            Box::new(EngineJob {
-                artifact,
-                inputs,
-                respond: tx,
-            }),
-            true,
-        )?;
-        Ok(rx)
+        self.submit_with(artifact, inputs, true)
     }
 
     /// Fail-fast submission: hand off to any worker with queue room, and
@@ -423,16 +482,23 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        let (tx, rx) = mpsc::channel();
-        self.route(
-            Box::new(EngineJob {
-                artifact,
-                inputs,
-                respond: tx,
-            }),
-            false,
-        )?;
-        Ok(rx)
+        self.submit_with(artifact, inputs, false)
+    }
+
+    /// Enable cross-request result reuse (output cache + single-flight
+    /// dedup) on this engine. Installs at most once: the first call wins
+    /// and later calls return the already-installed layer. Reuse is
+    /// **off by default** — a cache hit reports the original execution's
+    /// measured `exec_us` and skips the backend entirely, which changes
+    /// observable timing semantics, so serving paths opt in explicitly.
+    pub fn enable_reuse(&self, config: ReuseConfig) -> Arc<ReuseLayer> {
+        let _ = self.shared.reuse.set(Arc::new(ReuseLayer::new(config)));
+        Arc::clone(self.shared.reuse.get().expect("reuse layer just installed"))
+    }
+
+    /// The reuse layer, if [`EngineHandle::enable_reuse`] installed one.
+    pub fn reuse(&self) -> Option<&Arc<ReuseLayer>> {
+        self.shared.reuse.get()
     }
 
     /// Submit and wait (convenience for synchronous callers).
@@ -566,6 +632,12 @@ fn worker_loop(
                         ))
                     })
                     .map(|(outputs, exec_us)| ExecReply { outputs, exec_us });
+                    // A reuse leader resolves its single-flight group
+                    // first: cache the result (if still fresh) and fan it
+                    // out to coalesced waiters.
+                    if let (Some(t), Some(layer)) = (job.reuse.as_ref(), shared.reuse.get()) {
+                        layer.complete(t, &result);
+                    }
                     // Gauge drops before the response is visible, so a
                     // caller that just received its result never observes
                     // a stale depth.
@@ -598,16 +670,26 @@ fn worker_loop(
     // of dropping it silently.
     for cmd in shared.close(me) {
         match cmd {
-            Cmd::Run(job) => {
-                depths[me].fetch_sub(1, Ordering::Relaxed);
-                let _ = job.respond.send(Err(anyhow::anyhow!("engine is shut down")));
-            }
+            Cmd::Run(job) => fail_swept_job(&shared, &depths, me, job),
             Cmd::Warmup(_, ack) => {
                 let _ = ack.send(Err(anyhow::anyhow!("engine is shut down")));
             }
             Cmd::Shutdown | Cmd::Die => {}
         }
     }
+}
+
+/// Fail one swept `Run` command: balance the depth gauge, resolve any
+/// reuse ticket (coalesced waiters must see the shutdown too, or they
+/// hang forever), and notify the submitter. Used by both teardown sweeps
+/// — a live worker's own close and [`Engine::stop`]'s sweep of dead
+/// workers' stranded queues.
+fn fail_swept_job(shared: &PoolShared, depths: &[AtomicU64], idx: usize, job: Box<EngineJob>) {
+    depths[idx].fetch_sub(1, Ordering::Relaxed);
+    if let (Some(t), Some(layer)) = (job.reuse.as_ref(), shared.reuse.get()) {
+        layer.complete(t, &Err(anyhow::anyhow!("engine is shut down")));
+    }
+    let _ = job.respond.send(Err(anyhow::anyhow!("engine is shut down")));
 }
 
 /// Best-effort extraction of a caught panic payload's message.
@@ -687,6 +769,7 @@ impl Engine {
             cap: queue_depth,
             ticket: Mutex::new(0),
             work: Condvar::new(),
+            reuse: OnceLock::new(),
         });
         let mut joins: Vec<Option<JoinHandle<()>>> = Vec::with_capacity(workers);
         for (i, backend) in backends.into_iter().enumerate() {
@@ -874,8 +957,7 @@ impl Engine {
             for cmd in self.handle.shared.close(idx) {
                 match cmd {
                     Cmd::Run(job) => {
-                        self.handle.depths[idx].fetch_sub(1, Ordering::Relaxed);
-                        let _ = job.respond.send(Err(anyhow::anyhow!("engine is shut down")));
+                        fail_swept_job(&self.handle.shared, &self.handle.depths, idx, job)
                     }
                     Cmd::Warmup(_, ack) => {
                         let _ = ack.send(Err(anyhow::anyhow!("engine is shut down")));
@@ -1250,5 +1332,140 @@ mod tests {
         let out = engine.handle().run("nt_16x16x16", vec![a, b]).unwrap();
         assert_eq!(out.len(), 1);
         engine.shutdown();
+    }
+
+    #[test]
+    fn reuse_cache_hit_skips_the_queue_and_is_bit_identical() {
+        let engine = Engine::native(8).unwrap();
+        let handle = engine.handle();
+        let layer = handle.enable_reuse(ReuseConfig::default());
+        let a = Matrix::random(32, 48, 1);
+        let b = Matrix::random(24, 48, 2);
+        let first = handle.run("nt_32x24x48", vec![a.clone(), b.clone()]).unwrap();
+        let second = handle.run("nt_32x24x48", vec![a, b]).unwrap();
+        assert_eq!(
+            first[0].data, second[0].data,
+            "cached output must be bit-identical to fresh computation"
+        );
+        let s = layer.stats();
+        assert_eq!(s.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(handle.queue_depths(), vec![0], "hit never touched the queue");
+        engine.shutdown();
+    }
+
+    /// Backend that counts executions and blocks inside `execute` until
+    /// the shared gate opens — holds a reuse leader in flight so
+    /// concurrent identical submissions demonstrably coalesce.
+    struct GatedCountingExecutor {
+        entered: Arc<AtomicU64>,
+        gate: Arc<(Mutex<bool>, Condvar)>,
+    }
+
+    impl ExecBackend for GatedCountingExecutor {
+        fn execute(&self, _artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+            self.entered.fetch_add(1, Ordering::SeqCst);
+            let (lock, cvar) = &*self.gate;
+            let mut open = lock.lock().unwrap();
+            while !*open {
+                open = cvar.wait(open).unwrap();
+            }
+            Ok(vec![inputs[0].clone()])
+        }
+
+        fn name(&self) -> String {
+            "gated-counting".into()
+        }
+    }
+
+    #[test]
+    fn concurrent_identical_submissions_single_flight_one_execution() {
+        let entered = Arc::new(AtomicU64::new(0));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let engine = Engine::pool(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 16,
+                batch_window: Duration::ZERO,
+                max_batch: 1,
+            },
+            |_| {
+                Ok(Box::new(GatedCountingExecutor {
+                    entered: Arc::clone(&entered),
+                    gate: Arc::clone(&gate),
+                }) as Box<dyn ExecBackend>)
+            },
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let layer = handle.enable_reuse(ReuseConfig::default());
+        let a = Matrix::random(8, 8, 7);
+        let lead_rx = handle
+            .submit("nt_8x8x8".into(), vec![a.clone(), a.clone()])
+            .unwrap();
+        // Wait until the leader is inside the backend, then pile on.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while entered.load(Ordering::SeqCst) == 0 {
+            assert!(Instant::now() < deadline, "leader never started executing");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let waiters: Vec<_> = (0..4)
+            .map(|_| {
+                handle
+                    .submit("nt_8x8x8".into(), vec![a.clone(), a.clone()])
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(layer.stats().coalesced.load(Ordering::Relaxed), 4);
+        {
+            let (lock, cvar) = &*gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+        let lead = lead_rx.recv().unwrap().unwrap();
+        for rx in waiters {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(
+                got.outputs[0].data, lead.outputs[0].data,
+                "every waiter receives the leader's result"
+            );
+        }
+        assert_eq!(
+            entered.load(Ordering::SeqCst),
+            1,
+            "five identical submissions, one backend execution"
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_resolves_stranded_reuse_tickets_without_hanging_waiters() {
+        let mut engine = Engine::restartable(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 16,
+                ..EngineConfig::default()
+            },
+            |_| Ok(Box::new(NativeExecutor) as Box<dyn ExecBackend>),
+        )
+        .unwrap();
+        let handle = engine.handle();
+        handle.enable_reuse(ReuseConfig::default());
+        engine.kill_worker(0).unwrap();
+        let a = Matrix::random(8, 8, 3);
+        // Leader strands in the dead worker's open queue; the duplicate
+        // coalesces onto its pending ticket.
+        let lead_rx = handle
+            .submit("nt_8x8x8".into(), vec![a.clone(), a.clone()])
+            .unwrap();
+        let waiter_rx = handle
+            .submit("nt_8x8x8".into(), vec![a.clone(), a])
+            .unwrap();
+        engine.shutdown();
+        for rx in [lead_rx, waiter_rx] {
+            let err = rx.recv().unwrap().unwrap_err().to_string();
+            assert!(err.contains("shut down"), "{err}");
+        }
+        assert_eq!(handle.queue_depths(), vec![0], "sweep balanced the gauge");
     }
 }

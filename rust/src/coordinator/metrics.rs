@@ -5,6 +5,7 @@
 //! into a `Mutex<Vec<f64>>`, which serialized concurrent clients exactly
 //! where the worker pool is supposed to let them scale).
 
+use super::reuse::ReuseStats;
 use crate::selector::SelectionReason;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -186,6 +187,9 @@ pub struct CoordinatorMetrics {
     worker_depths: Mutex<Option<Arc<Vec<AtomicU64>>>>,
     /// Engine worker micro-batch gauges, attached by `Router::new`.
     batch_gauges: Mutex<Option<Arc<Vec<BatchGauge>>>>,
+    /// Cross-request reuse counters (`coordinator::reuse`), attached by
+    /// `Router::new` when the engine has the layer enabled.
+    reuse_stats: Mutex<Option<Arc<ReuseStats>>>,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -235,6 +239,23 @@ pub struct MetricsSnapshot {
     pub avg_batch: f64,
     /// Largest micro-batch any worker executed.
     pub max_batch: u64,
+    // ---- cross-request reuse (`coordinator::reuse`); all zero when the
+    // ---- layer is absent or disabled ----
+    /// Submissions answered straight from the output cache.
+    pub reuse_hits: u64,
+    /// Submissions coalesced onto an in-flight identical execution.
+    pub reuse_coalesced: u64,
+    /// Submissions that led a single-flight group (executed for real).
+    pub reuse_misses: u64,
+    /// Results inserted into the output cache.
+    pub reuse_inserts: u64,
+    /// Cached results evicted by the LRU capacity bound.
+    pub reuse_evictions: u64,
+    /// Leader completions not cached because an invalidation landed
+    /// while they were in flight.
+    pub reuse_stale_drops: u64,
+    /// Submissions that bypassed the layer via a deny prefix.
+    pub reuse_bypasses: u64,
 }
 
 impl CoordinatorMetrics {
@@ -267,6 +288,11 @@ impl CoordinatorMetrics {
     /// Wire the engine pool's per-worker micro-batch gauges into snapshots.
     pub fn attach_batch_gauges(&self, gauges: Arc<Vec<BatchGauge>>) {
         *self.batch_gauges.lock().unwrap() = Some(gauges);
+    }
+
+    /// Wire the engine's reuse-layer counters into snapshots.
+    pub fn attach_reuse(&self, stats: Arc<ReuseStats>) {
+        *self.reuse_stats.lock().unwrap() = Some(stats);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -303,6 +329,31 @@ impl CoordinatorMetrics {
         let shadow_probes = self.shadow_probes.load(Ordering::Relaxed);
         let shadow_mispredicts = self.shadow_mispredicts.load(Ordering::Relaxed);
         let probe_interval = self.probe_interval_gauge.load(Ordering::Relaxed);
+        let reuse = self.reuse_stats.lock().unwrap();
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        let (
+            reuse_hits,
+            reuse_coalesced,
+            reuse_misses,
+            reuse_inserts,
+            reuse_evictions,
+            reuse_stale_drops,
+            reuse_bypasses,
+        ) = reuse
+            .as_ref()
+            .map(|r| {
+                (
+                    ld(&r.hits),
+                    ld(&r.coalesced),
+                    ld(&r.misses),
+                    ld(&r.inserts),
+                    ld(&r.evictions),
+                    ld(&r.stale_drops),
+                    ld(&r.bypasses),
+                )
+            })
+            .unwrap_or_default();
+        drop(reuse);
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -340,6 +391,13 @@ impl CoordinatorMetrics {
             worker_depths,
             avg_batch,
             max_batch,
+            reuse_hits,
+            reuse_coalesced,
+            reuse_misses,
+            reuse_inserts,
+            reuse_evictions,
+            reuse_stale_drops,
+            reuse_bypasses,
         }
     }
 }
@@ -406,6 +464,21 @@ impl MetricsSnapshot {
                 self.retrains,
                 self.promotions,
                 self.rollbacks,
+            ));
+        }
+        // The reuse section only appears once the layer has seen traffic,
+        // so reports from engines without it stay unchanged.
+        if self.reuse_hits + self.reuse_coalesced + self.reuse_misses + self.reuse_bypasses > 0 {
+            s.push_str(&format!(
+                " | reuse hits={} coalesced={} misses={} inserts={} evictions={} \
+                 stale_drops={} bypasses={}",
+                self.reuse_hits,
+                self.reuse_coalesced,
+                self.reuse_misses,
+                self.reuse_inserts,
+                self.reuse_evictions,
+                self.reuse_stale_drops,
+                self.reuse_bypasses,
             ));
         }
         s
@@ -599,6 +672,36 @@ mod tests {
     fn mispredict_rate_is_nan_without_probes() {
         let s = CoordinatorMetrics::default().snapshot();
         assert!(s.mispredict_rate.is_nan());
+    }
+
+    #[test]
+    fn reuse_counters_render_only_when_active() {
+        let m = CoordinatorMetrics::default();
+        assert!(
+            !m.snapshot().render().contains("reuse"),
+            "no-reuse reports stay terse"
+        );
+        let stats = Arc::new(ReuseStats::default());
+        m.attach_reuse(Arc::clone(&stats));
+        assert!(
+            !m.snapshot().render().contains("reuse"),
+            "attached but idle: still terse"
+        );
+        stats.hits.fetch_add(5, Ordering::Relaxed);
+        stats.coalesced.fetch_add(3, Ordering::Relaxed);
+        stats.misses.fetch_add(2, Ordering::Relaxed);
+        stats.inserts.fetch_add(2, Ordering::Relaxed);
+        stats.stale_drops.fetch_add(1, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.reuse_hits, 5);
+        assert_eq!(s.reuse_coalesced, 3);
+        assert_eq!(s.reuse_misses, 2);
+        assert_eq!(s.reuse_inserts, 2);
+        assert_eq!(s.reuse_stale_drops, 1);
+        let r = s.render();
+        for needle in ["reuse hits=5", "coalesced=3", "misses=2", "stale_drops=1"] {
+            assert!(r.contains(needle), "missing {needle} in {r}");
+        }
     }
 
     #[test]

@@ -10,6 +10,10 @@
 //!                 │  admission control: block (backpressure) or
 //!                 │  fail fast with EngineBusy when every queue is full
 //!                 ▼
+//!         reuse layer (opt-in): epoch-aware output cache + single-flight
+//!          │  dedup keyed by (artifact, input-content hash) — hits and
+//!          │  coalesced duplicates resolve here, skipping the queues
+//!          ▼
 //!         shape-affinity shard (hash(artifact) → worker)
 //!          │              │              │
 //!          ▼              ▼              ▼
@@ -67,9 +71,11 @@
 pub mod backend;
 pub mod engine;
 pub mod metrics;
+pub mod reuse;
 pub mod router;
 
 pub use backend::{EngineBusy, ExecBackend};
 pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob, ExecReply};
 pub use metrics::{BatchGauge, CoordinatorMetrics, MetricsSnapshot};
+pub use reuse::{ReuseConfig, ReuseLayer, ReuseStats, ReuseTicket};
 pub use router::{AdmissionControl, GemmRequest, GemmResponse, Router, RouterConfig};

@@ -1,0 +1,630 @@
+//! Cross-request result reuse: a bounded, epoch-aware output cache plus
+//! in-flight dedup (single-flight) for idempotent engine executions.
+//!
+//! The paper's thesis — the fastest GEMM is the one you avoid doing
+//! wrong — extends one level up: the cheapest execution is one whose
+//! result the engine already has. This layer sits in the engine *submit
+//! path*, in front of the worker queues:
+//!
+//! * **Output cache** — completed results are cached under a 128-bit
+//!   content key (artifact name + every input matrix's dims and exact
+//!   f32 bit pattern). A later submission with an identical key is
+//!   answered straight from the cache on the submitter's own response
+//!   channel — it never touches a queue, a worker, or the backend.
+//! * **Single-flight dedup** — while a keyed execution is in flight, an
+//!   identical submission *coalesces*: its response channel is parked on
+//!   the leader's pending entry, and when the leader's worker completes,
+//!   the result fans out to every waiter. N identical concurrent
+//!   requests cost one execution.
+//! * **Epochs** — [`ReuseLayer::invalidate`] bumps a global epoch:
+//!   cached entries from older epochs are unservable (and dropped), and
+//!   pending entries are keyed by `(content key, epoch)`, so a request
+//!   arriving *after* an invalidation never coalesces onto a leader that
+//!   started *before* it — it becomes a fresh leader. A stale leader's
+//!   completion still fans out to its own (pre-invalidation) waiters but
+//!   is not inserted into the cache (`stale_drops` counts these). The
+//!   online loop wires model promotion to this hook so a hot-swap never
+//!   leaves a result that predates it servable.
+//! * **Opt-out** — artifacts whose name matches a configured deny prefix
+//!   bypass the layer entirely (for non-idempotent backends/artifacts);
+//!   everything the GEMM-service grammar speaks (`nt_`/`tnn_`/`nn_`/
+//!   `transpose_`) is a pure function of its inputs and is reusable.
+//!
+//! Correctness notes: a cache hit or coalesced result is **bit-identical**
+//! to fresh computation because it *is* the fresh computation's output
+//! (cloned, never recomputed), and it carries the leader's measured
+//! `exec_us` — a genuine measurement of this exact work. Collisions of
+//! the 128-bit key (two independently seeded multiply-rotate lanes over
+//! the full input content) are cryptographically unlikely but not
+//! impossible; the layer is therefore default-off and opt-in per engine
+//! ([`super::engine::EngineHandle::enable_reuse`]). Conservation holds
+//! because every served/coalesced submission still resolves through its
+//! own response channel exactly once.
+
+use super::backend::EngineBusy;
+use super::engine::ExecReply;
+use crate::gemm::cpu::Matrix;
+use crate::util::rng::mix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+
+/// Bounds and opt-outs for the reuse layer.
+#[derive(Debug, Clone)]
+pub struct ReuseConfig {
+    /// Maximum cached results (LRU-evicted beyond this).
+    pub capacity: usize,
+    /// Results whose outputs total more floats than this are served to
+    /// their waiters but not cached (memory bound per entry).
+    pub max_entry_floats: usize,
+    /// Artifact-name prefixes that bypass the layer entirely — the
+    /// explicit opt-out for non-idempotent artifacts.
+    pub deny_prefixes: Vec<String>,
+}
+
+impl Default for ReuseConfig {
+    fn default() -> Self {
+        ReuseConfig {
+            capacity: 256,
+            // 4M floats = 16 MiB per entry; a 1024³ GEMM output fits.
+            max_entry_floats: 1 << 22,
+            deny_prefixes: Vec::new(),
+        }
+    }
+}
+
+/// 128-bit content key: artifact name + input dims + exact f32 bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ReuseKey {
+    h1: u64,
+    h2: u64,
+}
+
+#[inline]
+fn absorb(h: u64, v: u64, m: u64) -> u64 {
+    (h ^ v).wrapping_mul(m).rotate_left(29)
+}
+
+/// Hash `(artifact, inputs)` into two independent 64-bit lanes. Covers
+/// every input's dimensions and full bit-exact f32 content, so any
+/// single-bit difference in any input yields a different key.
+pub fn content_key(artifact: &str, inputs: &[Matrix]) -> ReuseKey {
+    const M1: u64 = 0x9E37_79B9_7F4A_7C15;
+    const M2: u64 = 0xC2B2_AE3D_27D4_EB4F;
+    let mut h1 = 0x243F_6A88_85A3_08D3u64;
+    let mut h2 = 0x1319_8A2E_0370_7344u64;
+    for &b in artifact.as_bytes() {
+        h1 = absorb(h1, b as u64, M1);
+        h2 = absorb(h2, b as u64, M2);
+    }
+    let mut total = artifact.len() as u64;
+    for m in inputs {
+        h1 = absorb(h1, m.rows as u64, M1);
+        h2 = absorb(h2, (m.cols as u64) << 1, M2);
+        h1 = absorb(h1, m.cols as u64, M1);
+        h2 = absorb(h2, (m.rows as u64) << 1, M2);
+        for &f in &m.data {
+            let v = f.to_bits() as u64;
+            h1 = absorb(h1, v, M1);
+            h2 = absorb(h2, v, M2);
+        }
+        total = total.wrapping_add(m.data.len() as u64 + 2);
+    }
+    ReuseKey {
+        h1: mix64(h1 ^ total),
+        h2: mix64(h2.rotate_left(32) ^ total),
+    }
+}
+
+/// The leader's claim on an in-flight keyed execution. Carried by the
+/// engine job; the worker (or a teardown sweep) must resolve it with
+/// [`ReuseLayer::complete`] exactly once so waiters never hang.
+#[derive(Debug, Clone, Copy)]
+pub struct ReuseTicket {
+    key: ReuseKey,
+    epoch: u64,
+}
+
+/// Atomic reuse counters, attachable to `CoordinatorMetrics`.
+#[derive(Debug, Default)]
+pub struct ReuseStats {
+    /// Submissions answered straight from the output cache.
+    pub hits: AtomicU64,
+    /// Submissions coalesced onto an in-flight identical execution.
+    pub coalesced: AtomicU64,
+    /// Submissions that became leaders (executed for real).
+    pub misses: AtomicU64,
+    /// Results inserted into the cache.
+    pub inserts: AtomicU64,
+    /// Cached results evicted by the LRU capacity bound.
+    pub evictions: AtomicU64,
+    /// Leader completions dropped from caching because an epoch bump or
+    /// artifact invalidation landed while they were in flight.
+    pub stale_drops: AtomicU64,
+    /// Submissions that bypassed the layer via a deny prefix.
+    pub bypasses: AtomicU64,
+}
+
+struct Entry {
+    artifact: String,
+    epoch: u64,
+    outputs: Vec<Matrix>,
+    exec_us: f64,
+    last_used: u64,
+}
+
+struct Pending {
+    artifact: String,
+    /// Set by [`ReuseLayer::invalidate_artifact`]: the completion still
+    /// fans out to waiters (they attached before the invalidation, so
+    /// the result is consistent with what they asked for) but must not
+    /// enter the cache.
+    poisoned: bool,
+    waiters: Vec<mpsc::Sender<anyhow::Result<ExecReply>>>,
+}
+
+/// What [`ReuseLayer::begin`] decided about a submission.
+pub enum Begin {
+    /// Answered from the cache; the response was already sent.
+    Served,
+    /// Parked on an in-flight leader; the response will arrive when the
+    /// leader completes.
+    Coalesced,
+    /// This submission leads: execute it, carry the ticket, and resolve
+    /// it via [`ReuseLayer::complete`].
+    Lead(ReuseTicket),
+    /// Deny-listed artifact: execute without reuse bookkeeping.
+    Bypass,
+}
+
+/// The engine's reuse layer. One per engine pool, shared by the submit
+/// path (handle) and every worker.
+pub struct ReuseLayer {
+    config: ReuseConfig,
+    epoch: AtomicU64,
+    tick: AtomicU64,
+    cache: Mutex<HashMap<ReuseKey, Entry>>,
+    pending: Mutex<HashMap<(ReuseKey, u64), Pending>>,
+    stats: Arc<ReuseStats>,
+}
+
+impl ReuseLayer {
+    pub fn new(config: ReuseConfig) -> ReuseLayer {
+        ReuseLayer {
+            config,
+            epoch: AtomicU64::new(0),
+            tick: AtomicU64::new(0),
+            cache: Mutex::new(HashMap::new()),
+            pending: Mutex::new(HashMap::new()),
+            stats: Arc::new(ReuseStats::default()),
+        }
+    }
+
+    pub fn stats(&self) -> Arc<ReuseStats> {
+        Arc::clone(&self.stats)
+    }
+
+    /// Current reuse epoch (bumped by [`ReuseLayer::invalidate`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    fn denied(&self, artifact: &str) -> bool {
+        self.config
+            .deny_prefixes
+            .iter()
+            .any(|p| artifact.starts_with(p.as_str()))
+    }
+
+    /// Classify a submission before it is routed to a worker queue. On
+    /// [`Begin::Served`] the cached result was already sent on `respond`;
+    /// on [`Begin::Coalesced`] a clone of `respond` is parked on the
+    /// leader. Either way the caller must NOT enqueue the job.
+    pub fn begin(
+        &self,
+        artifact: &str,
+        inputs: &[Matrix],
+        respond: &mpsc::Sender<anyhow::Result<ExecReply>>,
+    ) -> Begin {
+        if self.denied(artifact) {
+            self.stats.bypasses.fetch_add(1, Ordering::Relaxed);
+            return Begin::Bypass;
+        }
+        let key = content_key(artifact, inputs);
+        let epoch = self.epoch.load(Ordering::Acquire);
+        if let Some(reply) = self.lookup(key, epoch) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            let _ = respond.send(Ok(reply));
+            return Begin::Served;
+        }
+        let mut pending = self.pending.lock().unwrap();
+        if let Some(p) = pending.get_mut(&(key, epoch)) {
+            p.waiters.push(respond.clone());
+            self.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+            return Begin::Coalesced;
+        }
+        // Double-check the cache while holding the pending lock:
+        // `complete` inserts its result and removes the pending entry
+        // atomically with respect to this lock, so a leader that finished
+        // between the first cache check and the lock acquisition is
+        // visible here. Without this, that race would mint a duplicate
+        // leader and re-execute.
+        if let Some(reply) = self.lookup(key, epoch) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            let _ = respond.send(Ok(reply));
+            return Begin::Served;
+        }
+        pending.insert(
+            (key, epoch),
+            Pending {
+                artifact: artifact.to_string(),
+                poisoned: false,
+                waiters: Vec::new(),
+            },
+        );
+        self.stats.misses.fetch_add(1, Ordering::Relaxed);
+        Begin::Lead(ReuseTicket { key, epoch })
+    }
+
+    /// Serve `key` from the cache if an entry for the current epoch
+    /// exists, touching its LRU stamp. Cross-epoch entries are lazily
+    /// evicted here (invalidate() also clears eagerly; this covers
+    /// entries a racing stale completion slipped in).
+    fn lookup(&self, key: ReuseKey, epoch: u64) -> Option<ExecReply> {
+        let mut cache = self.cache.lock().unwrap();
+        match cache.get_mut(&key) {
+            Some(e) if e.epoch == epoch => {
+                e.last_used = self.tick.fetch_add(1, Ordering::Relaxed);
+                Some(ExecReply {
+                    outputs: e.outputs.clone(),
+                    exec_us: e.exec_us,
+                })
+            }
+            Some(_) => {
+                cache.remove(&key);
+                None
+            }
+            None => None,
+        }
+    }
+
+    /// Resolve a leader's ticket with its execution result: cache it (if
+    /// still fresh) and fan it out to every coalesced waiter. Must be
+    /// called exactly once per [`Begin::Lead`] ticket — the engine worker
+    /// calls it on completion, and both teardown sweeps call it with the
+    /// shutdown error for ticketed jobs they fail, so no waiter ever
+    /// hangs. Idempotent: a second call finds no pending entry.
+    pub fn complete(&self, ticket: &ReuseTicket, result: &anyhow::Result<ExecReply>) {
+        // Hold the pending lock across the cache insert: begin() re-checks
+        // the cache under this lock before minting a leader, so removal
+        // from pending and insertion into the cache are one atomic
+        // transition from its point of view — no window where an identical
+        // submission sees neither and re-executes.
+        let mut pending_map = self.pending.lock().unwrap();
+        let Some(p) = pending_map.remove(&(ticket.key, ticket.epoch)) else {
+            return;
+        };
+        if let Ok(reply) = result {
+            let fresh = ticket.epoch == self.epoch.load(Ordering::Acquire) && !p.poisoned;
+            let floats: usize = reply.outputs.iter().map(|m| m.data.len()).sum();
+            if fresh && floats <= self.config.max_entry_floats {
+                let mut cache = self.cache.lock().unwrap();
+                cache.insert(
+                    ticket.key,
+                    Entry {
+                        artifact: p.artifact.clone(),
+                        epoch: ticket.epoch,
+                        outputs: reply.outputs.clone(),
+                        exec_us: reply.exec_us,
+                        last_used: self.tick.fetch_add(1, Ordering::Relaxed),
+                    },
+                );
+                self.stats.inserts.fetch_add(1, Ordering::Relaxed);
+                let cap = self.config.capacity.max(1);
+                while cache.len() > cap {
+                    let lru = cache
+                        .iter()
+                        .min_by_key(|(_, e)| e.last_used)
+                        .map(|(k, _)| *k);
+                    match lru {
+                        Some(k) => {
+                            cache.remove(&k);
+                            self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                        }
+                        None => break,
+                    }
+                }
+            } else if !fresh {
+                self.stats.stale_drops.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        drop(pending_map);
+        for w in p.waiters {
+            let _ = w.send(clone_result(result));
+        }
+    }
+
+    /// Epoch bump: every cached result becomes unservable (and is
+    /// dropped), and in-flight leaders' completions will not be cached.
+    /// New submissions start fresh leaders under the new epoch. Wired to
+    /// online model promotion so a hot-swap never serves a result that
+    /// predates it.
+    pub fn invalidate(&self) {
+        self.epoch.fetch_add(1, Ordering::AcqRel);
+        self.cache.lock().unwrap().clear();
+    }
+
+    /// Targeted invalidation: drop cached results for one artifact and
+    /// poison its in-flight leaders (their results still reach their
+    /// waiters, but are not cached).
+    pub fn invalidate_artifact(&self, artifact: &str) {
+        self.cache
+            .lock()
+            .unwrap()
+            .retain(|_, e| e.artifact != artifact);
+        for p in self.pending.lock().unwrap().values_mut() {
+            if p.artifact == artifact {
+                p.poisoned = true;
+            }
+        }
+    }
+
+    /// Cached entries right now (tests / introspection).
+    pub fn len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Reconstruct a result for a waiter: outputs clone bit-identically;
+/// errors keep [`EngineBusy`] typed (so admission classification — shed
+/// vs failed — survives the fan-out) and stringify otherwise
+/// (`anyhow::Error` is not `Clone`).
+fn clone_result(r: &anyhow::Result<ExecReply>) -> anyhow::Result<ExecReply> {
+    match r {
+        Ok(reply) => Ok(ExecReply {
+            outputs: reply.outputs.clone(),
+            exec_us: reply.exec_us,
+        }),
+        Err(e) if EngineBusy::is(e) => Err(anyhow::Error::new(EngineBusy)),
+        Err(e) => Err(anyhow::anyhow!("{e}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reply(seed: u64) -> ExecReply {
+        ExecReply {
+            outputs: vec![Matrix::random(4, 4, seed)],
+            exec_us: 42.5,
+        }
+    }
+
+    fn chan() -> (
+        mpsc::Sender<anyhow::Result<ExecReply>>,
+        mpsc::Receiver<anyhow::Result<ExecReply>>,
+    ) {
+        mpsc::channel()
+    }
+
+    #[test]
+    fn content_key_is_input_sensitive() {
+        let a = Matrix::random(8, 8, 1);
+        let b = Matrix::random(8, 8, 2);
+        let k1 = content_key("nt_8x8x8", &[a.clone(), b.clone()]);
+        let k2 = content_key("nt_8x8x8", &[a.clone(), b.clone()]);
+        assert_eq!(k1, k2, "same content, same key");
+        assert_ne!(
+            k1,
+            content_key("tnn_8x8x8", &[a.clone(), b.clone()]),
+            "artifact name is part of the key"
+        );
+        let mut b2 = b.clone();
+        b2.data[17] = f32::from_bits(b2.data[17].to_bits() ^ 1);
+        assert_ne!(
+            k1,
+            content_key("nt_8x8x8", &[a, b2]),
+            "a single flipped bit must change the key"
+        );
+    }
+
+    #[test]
+    fn miss_then_hit_serves_bit_identical_outputs() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(4, 4, 7)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &tx) else {
+            panic!("first submission must lead");
+        };
+        let result = Ok(reply(9));
+        layer.complete(&t, &result);
+        let (tx2, rx2) = chan();
+        assert!(matches!(layer.begin("nt_4x4x4", &inputs, &tx2), Begin::Served));
+        let got = rx2.recv().unwrap().unwrap();
+        let want = result.as_ref().unwrap();
+        assert_eq!(got.outputs[0].data, want.outputs[0].data, "bit-identical");
+        assert_eq!(got.exec_us, want.exec_us, "original measured latency");
+        let s = layer.stats();
+        assert_eq!(s.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(s.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(s.inserts.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn concurrent_identical_submissions_coalesce_onto_one_leader() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(4, 4, 3)];
+        let (lead_tx, _lead_rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &lead_tx) else {
+            panic!("leader expected");
+        };
+        let (w1, r1) = chan();
+        let (w2, r2) = chan();
+        assert!(matches!(layer.begin("nt_4x4x4", &inputs, &w1), Begin::Coalesced));
+        assert!(matches!(layer.begin("nt_4x4x4", &inputs, &w2), Begin::Coalesced));
+        let result = Ok(reply(11));
+        layer.complete(&t, &result);
+        let want = &result.as_ref().unwrap().outputs[0].data;
+        for rx in [r1, r2] {
+            let got = rx.recv().unwrap().unwrap();
+            assert_eq!(&got.outputs[0].data, want, "waiters share the leader's result");
+        }
+        assert_eq!(layer.stats().coalesced.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn error_fanout_keeps_engine_busy_typed() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(2, 2, 1)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        let (w, r) = chan();
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w), Begin::Coalesced));
+        layer.complete(&t, &Err(anyhow::Error::new(EngineBusy)));
+        let err = r.recv().unwrap().unwrap_err();
+        assert!(EngineBusy::is(&err), "busy classification survives fan-out");
+        assert_eq!(layer.len(), 0, "errors are never cached");
+    }
+
+    #[test]
+    fn epoch_bump_hides_cached_and_pending_state() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(4, 4, 5)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        layer.complete(&t, &Ok(reply(1)));
+        assert_eq!(layer.len(), 1);
+        layer.invalidate();
+        assert_eq!(layer.len(), 0, "invalidate drops the cache");
+        // The same content misses and leads again under the new epoch.
+        let (tx2, _rx2) = chan();
+        assert!(matches!(layer.begin("nt_4x4x4", &inputs, &tx2), Begin::Lead(_)));
+    }
+
+    #[test]
+    fn stale_leader_completion_reaches_waiters_but_is_not_cached() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(4, 4, 6)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        let (w, r) = chan();
+        assert!(matches!(layer.begin("nt_4x4x4", &inputs, &w), Begin::Coalesced));
+        // A post-invalidation submission must NOT coalesce onto the stale
+        // leader: it starts its own under the new epoch.
+        layer.invalidate();
+        let (tx2, _rx2) = chan();
+        assert!(
+            matches!(layer.begin("nt_4x4x4", &inputs, &tx2), Begin::Lead(_)),
+            "new-epoch request must not join a stale leader"
+        );
+        layer.complete(&t, &Ok(reply(2)));
+        assert!(r.recv().unwrap().is_ok(), "pre-invalidation waiter still served");
+        assert_eq!(layer.len(), 0, "stale result not cached");
+        assert_eq!(layer.stats().stale_drops.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn artifact_invalidation_poisons_in_flight_leaders() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(4, 4, 8)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        layer.invalidate_artifact("nt_4x4x4");
+        layer.complete(&t, &Ok(reply(3)));
+        assert_eq!(layer.len(), 0, "poisoned completion not cached");
+        assert_eq!(layer.stats().stale_drops.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn deny_prefix_bypasses_the_layer() {
+        let layer = ReuseLayer::new(ReuseConfig {
+            deny_prefixes: vec!["rand_".into()],
+            ..ReuseConfig::default()
+        });
+        let inputs = vec![Matrix::random(2, 2, 1)];
+        let (tx, _rx) = chan();
+        assert!(matches!(layer.begin("rand_2x2", &inputs, &tx), Begin::Bypass));
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &tx), Begin::Lead(_)));
+        assert_eq!(layer.stats().bypasses.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_least_recently_used() {
+        let layer = ReuseLayer::new(ReuseConfig {
+            capacity: 2,
+            ..ReuseConfig::default()
+        });
+        let mk = |seed: u64| vec![Matrix::random(4, 4, seed)];
+        let (tx, _rx) = chan();
+        for seed in 0..3u64 {
+            let inputs = mk(seed);
+            let Begin::Lead(t) = layer.begin("nt_4x4x4", &inputs, &tx) else {
+                panic!("distinct content must lead");
+            };
+            if seed == 2 {
+                // Touch entry 0 so entry 1 is the LRU victim.
+                let (tx0, rx0) = chan();
+                assert!(matches!(layer.begin("nt_4x4x4", &mk(0), &tx0), Begin::Served));
+                rx0.recv().unwrap().unwrap();
+            }
+            layer.complete(&t, &Ok(reply(100 + seed)));
+        }
+        assert_eq!(layer.len(), 2);
+        assert_eq!(layer.stats().evictions.load(Ordering::Relaxed), 1);
+        let (tx0, rx0) = chan();
+        assert!(
+            matches!(layer.begin("nt_4x4x4", &mk(0), &tx0), Begin::Served),
+            "recently-touched entry survives"
+        );
+        rx0.recv().unwrap().unwrap();
+        let (tx1, _rx1) = chan();
+        assert!(
+            matches!(layer.begin("nt_4x4x4", &mk(1), &tx1), Begin::Lead(_)),
+            "LRU entry was evicted"
+        );
+    }
+
+    #[test]
+    fn oversized_outputs_are_served_but_not_cached() {
+        let layer = ReuseLayer::new(ReuseConfig {
+            max_entry_floats: 8,
+            ..ReuseConfig::default()
+        });
+        let inputs = vec![Matrix::random(2, 2, 1)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        let (w, r) = chan();
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w), Begin::Coalesced));
+        layer.complete(&t, &Ok(reply(1))); // 16 floats > max 8
+        assert!(r.recv().unwrap().is_ok());
+        assert_eq!(layer.len(), 0, "oversized entry skipped");
+    }
+
+    #[test]
+    fn double_complete_is_idempotent() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(2, 2, 2)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        layer.complete(&t, &Ok(reply(1)));
+        layer.complete(&t, &Ok(reply(2))); // no pending entry: no-op
+        assert_eq!(layer.stats().inserts.load(Ordering::Relaxed), 1);
+    }
+}

@@ -129,6 +129,9 @@ impl Router {
         let metrics = Arc::new(CoordinatorMetrics::default());
         metrics.attach_worker_depths(engine.depth_gauges());
         metrics.attach_batch_gauges(engine.batch_gauges());
+        if let Some(layer) = engine.reuse() {
+            metrics.attach_reuse(layer.stats());
+        }
         let live = Arc::new(LiveSelector::new(selector));
         let cache = Arc::new(DecisionCache::default());
         let online = config.online.clone().map(|cfg| {
@@ -157,6 +160,15 @@ impl Router {
                 Arc::clone(&cache),
                 Arc::clone(&metrics),
             ));
+            // A model promotion also bumps the engine's reuse epoch (when
+            // the layer is enabled): conservative, but it keeps the hard
+            // guarantee that no served-from-cache result predates the
+            // live-model swap — mirroring how promotion already
+            // invalidates the decision cache.
+            if let Some(layer) = engine.reuse() {
+                let layer = Arc::clone(layer);
+                hub.add_promotion_hook(Box::new(move || layer.invalidate()));
+            }
             let join = trainer::spawn(Arc::clone(&hub), acc);
             OnlineRuntime {
                 hub,

@@ -1,34 +1,57 @@
 //! Cache-blocked, SIMD, pool-threaded native GEMM — the high-performance
 //! CPU execution backend of the GEMM service.
 //!
-//! # Architecture (kernel / packing / pool)
-//!
-//! Three layers, each in its own module:
+//! # Architecture (kernel / packing / pool / cooperation)
 //!
 //! * **Micro-kernels** ([`super::kernels`]) — an `MR×NR` (6×16)
-//!   register-tiled AVX2+FMA kernel selected by runtime feature detection,
-//!   with a portable scalar kernel as the reference path, the non-x86
-//!   fallback, and the `MTNN_NO_SIMD=1` escape hatch. Kernels consume
-//!   *packed panels only*: A is packed into `MR`-row panels (per the
-//!   ROADMAP's "A-panel packing for very large k") and B into `NR`-column
-//!   panels, both zero-padded so remainders never branch in the kernel.
+//!   register-tiled kernel chosen by runtime dispatch: AVX2+FMA on x86-64,
+//!   NEON on aarch64, with a portable scalar kernel as the reference path,
+//!   the fallback for everything else, and the `MTNN_NO_SIMD=1` escape
+//!   hatch. Kernels consume *packed panels only*: A in `MR`-row panels,
+//!   B in `NR`-column panels, both zero-padded so remainders never branch
+//!   in the kernel.
 //! * **Cache blocking** — the classic Goto three-level loop: `NC` columns
 //!   (packed-B working set), `KC` depth (panels sized for L2), `MC` rows
-//!   (A panels stay L1/L2-resident). Panels live in thread-local reusable
-//!   scratch ([`super::kernels::scratch_grow_events`]), so steady-state
-//!   traffic packs into warm buffers with **zero heap allocation** inside
-//!   the kernel ([`prewarm`] pre-sizes every pool thread to the
-//!   shape-independent maximum).
-//! * **Persistent pool** ([`super::pool`]) — `C` is split into disjoint
-//!   `MR`-aligned row stripes executed by parked worker threads plus the
-//!   caller, replacing the old per-call `thread::scope` spawns.
-//!   [`auto_threads`] replaces the former hard 2-MFLOP cliff with a cost
-//!   model built on the pool's *measured* dispatch overhead (constants
-//!   documented on the function).
+//!   (A panels stay L1/L2-resident).
+//! * **Persistent pool** ([`super::pool`]) — parked worker threads plus
+//!   the participating caller replace the old per-call `thread::scope`
+//!   spawns; [`auto_threads`] sizes the split with a cost model built on
+//!   the pool's *measured* dispatch overhead (constants documented on the
+//!   function).
+//! * **Cooperative shared packing** ([`gemm_shared`], the multi-stripe
+//!   path) — packing work is done once per cache block and shared,
+//!   instead of once per stripe: the pool packs every A panel of a
+//!   `KC`-deep slab in parallel (one task per `MC` block, disjoint writes
+//!   into one shared buffer — `MC % MR == 0` keeps panel boundaries
+//!   aligned), the caller packs each `KC×NC` B block exactly once, and
+//!   only then do compute stripes fan out, reading both buffers
+//!   read-only. The per-stripe legacy loop ([`gemm_stripe`]) packed the
+//!   *same* B panels in every stripe (`stripes×` redundant gathers) and
+//!   re-packed its A panels once per `NC` column; it remains the
+//!   single-thread path and the reference the shared path must match
+//!   bit-for-bit.
+//!
+//! Two scratch tiers back this: per-thread panel/transpose buffers in
+//! [`super::kernels`] (thread-local, [`prewarm`]-able to a
+//! shape-independent maximum, growth counted by
+//! [`super::kernels::scratch_grow_events`]) serve the single-stripe path,
+//! while the shared path checks shape-sized buffers out of a process-wide
+//! pool (growth counted separately by [`shared_scratch_grow_events`]).
+//! Steady-state traffic allocates in neither tier.
+//!
+//! **NUMA seam**: when `MTNN_NUMA=1` opts in and
+//! [`super::pool::numa_nodes`] detects a multi-node machine, the shared
+//! path replicates each packed B block per node and compute lanes read
+//! the copy at `lane % nodes` ([`super::pool::current_lane`]). This is a
+//! placement *hint* — `std` cannot pin threads — and on single-node or
+//! ungated machines the replica set is empty and the code path is
+//! byte-identical to pre-seam behavior.
 //!
 //! Per-row summation order is fixed (depth within a `KC` block, blocks in
-//! ascending order) and independent of the stripe partition, so outputs
-//! are deterministic for any thread count.
+//! ascending order) and independent of both the stripe partition and the
+//! packing strategy, so outputs are deterministic for any thread count —
+//! and the shared path is asserted *bit-identical* to the striped
+//! reference in the tests, not merely close.
 //!
 //! # Why this mirrors the paper's NT vs TNN argument
 //!
@@ -54,6 +77,8 @@
 use super::cpu::Matrix;
 use super::kernels::{self, BLayout, KernelKind, MR, NR};
 use super::pool;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 
 /// Rows of A per cache block (multiple of `MR`).
 pub const MC: usize = 72;
@@ -207,6 +232,51 @@ fn auto_threads(m: usize, n: usize, k: usize) -> usize {
     by_cost.clamp(1, cap.max(1))
 }
 
+// ---- shared-packing scratch -------------------------------------------------
+
+/// How many shared packing buffers the checkout pool retains. A burst of
+/// concurrent callers beyond this simply re-allocates for the excess.
+const SHARED_SCRATCH_KEEP: usize = 8;
+
+/// Checkout pool for the shared A/B packing buffers of [`gemm_shared`].
+/// Deliberately separate from the kernels' thread-local scratch so
+/// [`super::kernels::scratch_grow_events`] keeps meaning "per-thread panel
+/// growth" and the pool-hygiene tests stay attributable.
+static SHARED_SCRATCH: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+static SHARED_GROW_EVENTS: AtomicU64 = AtomicU64::new(0);
+
+/// Times a shared packing buffer had to (re)allocate. Flat at steady state
+/// once the checkout pool holds buffers sized for the traffic.
+pub fn shared_scratch_grow_events() -> u64 {
+    SHARED_GROW_EVENTS.load(Ordering::Relaxed)
+}
+
+/// Check a buffer of at least `min_len` out of the shared pool, preferring
+/// the roomiest retained buffer so repeat shapes stop growing quickly.
+fn take_shared(min_len: usize) -> Vec<f32> {
+    let mut v = {
+        let mut pool = SHARED_SCRATCH.lock().unwrap_or_else(|e| e.into_inner());
+        match (0..pool.len()).max_by_key(|&i| pool[i].capacity()) {
+            Some(i) => pool.swap_remove(i),
+            None => Vec::new(),
+        }
+    };
+    if v.len() < min_len {
+        if min_len > v.capacity() {
+            SHARED_GROW_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        v.resize(min_len, 0.0);
+    }
+    v
+}
+
+fn put_shared(v: Vec<f32>) {
+    let mut pool = SHARED_SCRATCH.lock().unwrap_or_else(|e| e.into_inner());
+    if pool.len() < SHARED_SCRATCH_KEEP {
+        pool.push(v);
+    }
+}
+
 // ---- driver -----------------------------------------------------------------
 
 /// Raw output pointer smuggled into stripe tasks; stripes write disjoint
@@ -215,10 +285,11 @@ struct SendPtr(*mut f32);
 unsafe impl Send for SendPtr {}
 unsafe impl Sync for SendPtr {}
 
-/// Full blocked GEMM: accumulate `A × B` into `c` (which must be zeroed),
-/// splitting `MR`-aligned row stripes across the persistent pool. Per-row
-/// results are independent of the stripe partition, so outputs are
-/// deterministic for any thread count.
+/// Full blocked GEMM: accumulate `A × B` into `c` (which must be zeroed).
+/// Single stripe runs the thread-local [`gemm_stripe`] loop; multi-stripe
+/// runs the cooperative shared-packing path ([`gemm_shared`]). Per-row
+/// results are independent of the partition and the packing strategy, so
+/// outputs are deterministic — and bit-identical — for any thread count.
 #[allow(clippy::too_many_arguments)]
 fn gemm(
     a: &[f32],
@@ -243,16 +314,106 @@ fn gemm(
         gemm_stripe(a, b, layout, c, m, k, n, kind);
         return;
     }
-    let c_ptr = SendPtr(c.as_mut_ptr());
-    pool::get().run(stripes, &|t| {
-        let row0 = t * rows_per;
-        let rows = rows_per.min(m - row0);
-        // SAFETY: stripe `t` exclusively owns rows `row0..row0+rows` of
-        // `c`; ranges are disjoint across tasks and in-bounds, and the
-        // caller blocks in `run` until all stripes finish.
-        let c_chunk = unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(row0 * n), rows * n) };
-        gemm_stripe(&a[row0 * k..(row0 + rows) * k], b, layout, c_chunk, rows, k, n, kind);
-    });
+    gemm_shared(a, b, layout, c, m, k, n, kind, rows_per, stripes);
+}
+
+/// Panel boundaries of the shared A buffer must coincide with `MC`-block
+/// boundaries for the parallel pack's disjoint-write argument to hold.
+const _: () = assert!(MC % MR == 0);
+
+/// Cooperative multi-stripe GEMM (see the module docs): per `KC` slab the
+/// pool packs every A panel once in parallel, then per `KC×NC` B block the
+/// caller packs B once (plus optional per-NUMA-node replicas) and compute
+/// stripes fan out over the pool reading the shared panels. Identical
+/// packed bits, kernel, and per-element accumulation order as
+/// [`gemm_stripe`] ⇒ bit-identical output.
+#[allow(clippy::too_many_arguments)]
+fn gemm_shared(
+    a: &[f32],
+    b: &[f32],
+    layout: BLayout,
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    kind: KernelKind,
+    rows_per: usize,
+    stripes: usize,
+) {
+    let pool = pool::get();
+    let kc = KC.min(k);
+    let total_panels = m.div_ceil(MR);
+    let mut ap = take_shared(total_panels * MR * kc);
+    let bp_len = NC.min(n).div_ceil(NR) * NR * kc;
+    let mut bp = take_shared(bp_len);
+    // Per-NUMA-node B replicas: empty unless MTNN_NUMA opts in on a
+    // multi-node machine, in which case node 0 shares the primary buffer
+    // and nodes 1.. read their own copy.
+    let nodes = pool::numa_nodes();
+    let mut replicas: Vec<Vec<f32>> = (1..nodes).map(|_| take_shared(bp_len)).collect();
+    let mc_blocks = m.div_ceil(MC);
+    for l0 in (0..k).step_by(KC) {
+        let kb = KC.min(k - l0);
+        let ap_ptr = SendPtr(ap.as_mut_ptr());
+        pool.run(mc_blocks, &|t| {
+            let i0 = t * MC;
+            let mb = MC.min(m - i0);
+            let off = (i0 / MR) * kb * MR;
+            let len = mb.div_ceil(MR) * MR * kb;
+            // SAFETY: MC % MR == 0, so block `t` exclusively owns packed
+            // panels `i0/MR .. i0/MR + mb.div_ceil(MR)` — disjoint,
+            // in-bounds ranges — and the caller blocks in `run` until
+            // every pack task finishes.
+            let dst = unsafe { std::slice::from_raw_parts_mut(ap_ptr.0.add(off), len) };
+            kernels::pack_a(a, k, i0, l0, mb, kb, dst);
+        });
+        let ap_ro: &[f32] = &ap;
+        for j0 in (0..n).step_by(NC) {
+            let nb = NC.min(n - j0);
+            let npanels = nb.div_ceil(NR);
+            kernels::pack_b(b, layout, l0, j0, kb, nb, k, n, &mut bp);
+            let used = npanels * kb * NR;
+            for r in &mut replicas {
+                r[..used].copy_from_slice(&bp[..used]);
+            }
+            let bp_ro: &[f32] = &bp;
+            let replicas_ro: &[Vec<f32>] = &replicas;
+            let c_ptr = SendPtr(c.as_mut_ptr());
+            pool.run(stripes, &|t| {
+                let row0 = t * rows_per;
+                let rows = rows_per.min(m - row0);
+                // Bias reads toward the executing lane's node-local copy
+                // (lane % nodes == 0 shares the primary buffer).
+                let node = pool::current_lane() % nodes;
+                let my_bp = if node == 0 { bp_ro } else { &replicas_ro[node - 1][..] };
+                // SAFETY: stripe `t` exclusively owns rows
+                // `row0..row0+rows` of `c`; ranges are disjoint across
+                // tasks and in-bounds, and the caller blocks in `run`
+                // until all stripes finish.
+                let c_chunk =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.0.add(row0 * n), rows * n) };
+                let mut tile = [0.0f32; MR * NR];
+                // rows_per is MR-aligned, so panels never straddle stripes.
+                let p0 = row0 / MR;
+                let pend = (row0 + rows).div_ceil(MR);
+                for jp in 0..npanels {
+                    let cols = NR.min(nb - jp * NR);
+                    let bpan = &my_bp[jp * kb * NR..(jp + 1) * kb * NR];
+                    for p in p0..pend {
+                        let prows = MR.min(m - p * MR);
+                        let apan = &ap_ro[p * kb * MR..(p + 1) * kb * MR];
+                        kernels::tile(kind, kb, apan, bpan, &mut tile);
+                        merge_tile(c_chunk, n, p * MR - row0, j0 + jp * NR, prows, cols, &tile);
+                    }
+                }
+            });
+        }
+    }
+    put_shared(ap);
+    put_shared(bp);
+    for r in replicas {
+        put_shared(r);
+    }
 }
 
 /// Per-call `thread::scope` variant of [`matmul_nt`], kept solely so
@@ -461,6 +622,54 @@ mod tests {
             assert_eq!(c_mt.data, c_st.data, "m={m} n={n} k={k} threads={threads}");
             assert_allclose(&c_mt.data, &cpu::matmul_nn(&a, &b).data, 1e-4, 1e-4);
         }
+    }
+
+    #[test]
+    fn shared_packing_is_bit_identical_to_striped_reference() {
+        // gemm_shared must be a pure scheduling change: same packed bits,
+        // same kernel, same per-element accumulation order (ascending l0,
+        // ascending depth inside the kernel) ⇒ assert_eq, not allclose.
+        // Shapes chosen to hit partial MC blocks, partial panels, multiple
+        // KC slabs, and more requested threads than rows.
+        kernels::with_forced_kernel(None, || {
+            let kind = kernels::active_kernel();
+            for &(m, n, k, threads) in &[
+                (150usize, 96usize, 300usize, 3usize),
+                (2 * MC + 5, NC + 7, KC + 9, 4),
+                (13, 500, 64, 5),
+                (MC, NC, KC, 2),
+            ] {
+                let a = Matrix::random(m, k, 31);
+                let b = Matrix::random(k, n, 32);
+                let mut c_shared = Matrix::zeros(m, n);
+                gemm(&a.data, &b.data, BLayout::KxN, &mut c_shared.data, m, k, n, threads);
+                let mut c_ref = Matrix::zeros(m, n);
+                gemm_stripe(&a.data, &b.data, BLayout::KxN, &mut c_ref.data, m, k, n, kind);
+                assert_eq!(c_shared.data, c_ref.data, "m={m} n={n} k={k} threads={threads}");
+            }
+        });
+    }
+
+    #[test]
+    fn shared_scratch_reaches_allocation_free_steady_state() {
+        let (m, n, k) = (2 * MC, NC, 2 * KC);
+        let a = Matrix::random(m, k, 41);
+        let b = Matrix::random(k, n, 42);
+        let mut c = Matrix::zeros(m, n);
+        // Other tests may run concurrently and check buffers in and out of
+        // the process-global pool, so demand convergence rather than an
+        // exact count: some repeat of the same shape must stop growing.
+        let mut stable = false;
+        for _ in 0..10 {
+            let before = shared_scratch_grow_events();
+            c.data.fill(0.0);
+            gemm(&a.data, &b.data, BLayout::KxN, &mut c.data, m, k, n, 4);
+            if shared_scratch_grow_events() == before {
+                stable = true;
+                break;
+            }
+        }
+        assert!(stable, "repeat-shape shared packing must stop allocating");
     }
 
     #[test]

@@ -14,17 +14,20 @@
 //!
 //! The AVX2+FMA kernel ([`tile_avx2`]) holds the 6×16 tile in twelve YMM
 //! accumulators and issues two fused multiply-adds per packed `l` step per
-//! row; the portable scalar kernel ([`tile_scalar`]) is the reference path,
-//! the non-x86 fallback, and the `MTNN_NO_SIMD=1` escape hatch. Both
-//! consume *identical* panels, so the NT/TNN bit-identity argument of
-//! [`super::blocked`] holds on either path — what the paper's §IV calls
+//! row; the AArch64 NEON kernel ([`tile_neon`]) holds it in twenty-four
+//! 128-bit Q accumulators (four per row) with `vfmaq_f32`; the portable
+//! scalar kernel ([`tile_scalar`]) is the reference path, the
+//! other-architecture fallback, and the `MTNN_NO_SIMD=1` escape hatch.
+//! All consume *identical* panels, so the NT/TNN bit-identity argument of
+//! [`super::blocked`] holds on any path — what the paper's §IV calls
 //! the same kernel fed through two memory-access plans.
 //!
 //! # Dispatch
 //!
 //! [`active_kernel`] picks the kernel once per GEMM call: forced override
 //! (test/bench hook, [`with_forced_kernel`]) → `MTNN_NO_SIMD` environment
-//! hatch → runtime `is_x86_feature_detected!("avx2") && ("fma")` → scalar.
+//! hatch → hardware (runtime `is_x86_feature_detected!("avx2") && ("fma")`
+//! on x86-64; NEON is baseline on AArch64, no probe needed) → scalar.
 //! Detection and the environment read are cached for the process lifetime.
 //!
 //! # Scratch
@@ -63,6 +66,9 @@ pub enum KernelKind {
     Scalar,
     /// Explicit AVX2 + FMA 6×16 kernel (x86-64 only, runtime-detected).
     Avx2,
+    /// Explicit NEON (ASIMD) 6×16 kernel (AArch64 only; NEON is part of
+    /// the AArch64 baseline, so no runtime probe is needed).
+    Neon,
 }
 
 impl KernelKind {
@@ -70,6 +76,7 @@ impl KernelKind {
         match self {
             KernelKind::Scalar => "scalar",
             KernelKind::Avx2 => "avx2",
+            KernelKind::Neon => "neon",
         }
     }
 }
@@ -98,6 +105,13 @@ fn hw_kernel() -> KernelKind {
                 return KernelKind::Avx2;
             }
         }
+        #[cfg(target_arch = "aarch64")]
+        {
+            // NEON/ASIMD is mandatory in the AArch64 baseline — every
+            // target this crate builds for has it.
+            return KernelKind::Neon;
+        }
+        #[allow(unreachable_code)]
         KernelKind::Scalar
     })
 }
@@ -129,15 +143,17 @@ pub fn active_kernel() -> KernelKind {
 /// dispatch (so `MTNN_NO_SIMD=1` CI runs stay scalar-only).
 pub fn available_kernels() -> Vec<KernelKind> {
     let mut out = vec![KernelKind::Scalar];
-    if detected() == KernelKind::Avx2 {
-        out.push(KernelKind::Avx2);
+    let hw = detected();
+    if hw != KernelKind::Scalar {
+        out.push(hw);
     }
     out
 }
 
 /// Run `f` with the kernel choice pinned: `Some(Scalar)` forces the
-/// reference kernel, `Some(Avx2)` forces SIMD when the hardware supports it
-/// (scalar otherwise), `None` pins the default dispatch. Sections are
+/// reference kernel, `Some(Avx2)`/`Some(Neon)` forces this host's SIMD
+/// kernel when the hardware supports one (scalar otherwise), `None` pins
+/// the default dispatch. Sections are
 /// serialized by a global lock, so concurrent tests cannot flip the kernel
 /// out from under a caller mid-section — which is what keeps NT/TNN
 /// bit-identity assertions race-free. Test/bench hook, not a serving API.
@@ -154,7 +170,7 @@ pub fn with_forced_kernel<R>(kind: Option<KernelKind>, f: impl FnOnce() -> R) ->
         match kind {
             None => 0,
             Some(KernelKind::Scalar) => 1,
-            Some(KernelKind::Avx2) => 2,
+            Some(KernelKind::Avx2) | Some(KernelKind::Neon) => 2,
         },
         Ordering::Relaxed,
     );
@@ -268,6 +284,12 @@ pub(crate) fn tile(kind: KernelKind, kb: usize, ap: &[f32], bp: &[f32], out: &mu
         KernelKind::Avx2 if hw_kernel() == KernelKind::Avx2 => unsafe {
             tile_avx2(kb, ap, bp, out)
         },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on AArch64; `hw_kernel()` returns Neon
+        // only there.
+        KernelKind::Neon if hw_kernel() == KernelKind::Neon => unsafe {
+            tile_neon(kb, ap, bp, out)
+        },
         _ => tile_scalar(kb, ap, bp, out),
     }
 }
@@ -319,6 +341,45 @@ unsafe fn tile_avx2(kb: usize, ap: &[f32], bp: &[f32], out: &mut [f32; MR * NR])
     for r in 0..MR {
         _mm256_storeu_ps(out_ptr.add(r * NR), acc_lo[r]);
         _mm256_storeu_ps(out_ptr.add(r * NR + 8), acc_hi[r]);
+    }
+}
+
+/// 6×16 NEON (ASIMD) kernel: four 128-bit Q accumulators per row
+/// (24 total — AArch64 has 32 SIMD registers, so accumulators, the four
+/// B vectors, and the A broadcast all stay resident), one fused
+/// multiply-add per accumulator per packed depth step.
+///
+/// # Safety
+/// Requires NEON, which is part of the AArch64 baseline ([`hw_kernel`]
+/// only ever dispatches this kind on AArch64).
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+#[allow(clippy::needless_range_loop)]
+unsafe fn tile_neon(kb: usize, ap: &[f32], bp: &[f32], out: &mut [f32; MR * NR]) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f32(0.0); 4]; MR];
+    let mut a_ptr = ap.as_ptr();
+    let mut b_ptr = bp.as_ptr();
+    for _ in 0..kb {
+        let b0 = vld1q_f32(b_ptr);
+        let b1 = vld1q_f32(b_ptr.add(4));
+        let b2 = vld1q_f32(b_ptr.add(8));
+        let b3 = vld1q_f32(b_ptr.add(12));
+        for r in 0..MR {
+            let av = vdupq_n_f32(*a_ptr.add(r));
+            acc[r][0] = vfmaq_f32(acc[r][0], av, b0);
+            acc[r][1] = vfmaq_f32(acc[r][1], av, b1);
+            acc[r][2] = vfmaq_f32(acc[r][2], av, b2);
+            acc[r][3] = vfmaq_f32(acc[r][3], av, b3);
+        }
+        a_ptr = a_ptr.add(MR);
+        b_ptr = b_ptr.add(NR);
+    }
+    let out_ptr = out.as_mut_ptr();
+    for r in 0..MR {
+        for (q, &v) in acc[r].iter().enumerate() {
+            vst1q_f32(out_ptr.add(r * NR + q * 4), v);
+        }
     }
 }
 
@@ -442,6 +503,22 @@ mod tests {
             unsafe { tile_avx2(kb, &ap, &bp, &mut simd) };
             tile_scalar(kb, &ap, &bp, &mut scalar);
             // FMA fuses the rounding step, so allow f32 tolerance.
+            crate::testutil::assert_allclose(&simd, &scalar, 1e-4, 1e-4);
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_tile_matches_scalar_tile() {
+        assert_eq!(hw_kernel(), KernelKind::Neon, "NEON is baseline on AArch64");
+        for kb in [1usize, 3, 17, 256] {
+            let ap = panel(kb as u64 + 5, kb * MR);
+            let bp = panel(kb as u64 + 55, kb * NR);
+            let mut simd = [0.0f32; MR * NR];
+            let mut scalar = [0.0f32; MR * NR];
+            unsafe { tile_neon(kb, &ap, &bp, &mut simd) };
+            tile_scalar(kb, &ap, &bp, &mut scalar);
+            // vfmaq fuses the rounding step, so allow f32 tolerance.
             crate::testutil::assert_allclose(&simd, &scalar, 1e-4, 1e-4);
         }
     }

@@ -25,6 +25,16 @@
 //!   dispatches and records the best ([`Pool::dispatch_overhead_ns`]);
 //!   `blocked::auto_threads` feeds it into a cost model instead of the old
 //!   hard-coded 2-MFLOP cliff.
+//! * **NUMA placement seam** — every pool thread has a stable *lane* id
+//!   ([`current_lane`]: worker `w` is lane `w + 1`, any dispatching caller
+//!   is lane 0) and [`numa_nodes`] reports how many memory nodes the
+//!   machine exposes. Both are hints, not bindings: `std` cannot pin
+//!   threads, so the consumer (`blocked`'s shared-packing path replicates
+//!   read-mostly B panels per node and routes each lane to
+//!   `lane % numa_nodes()`) merely biases traffic. Detection is opt-in via
+//!   `MTNN_NUMA=1`; without it — and on single-node machines or non-Linux
+//!   hosts — `numa_nodes()` is 1 and behavior is exactly the pre-seam
+//!   code path.
 //! * **Panic containment** — worker tasks run under `catch_unwind`; a
 //!   panicking task marks the dispatch and the *caller* re-panics after
 //!   completion, so a poisoned stripe can't wedge the pool or silently
@@ -43,6 +53,57 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Instant;
+
+thread_local! {
+    /// Pool lane of the current thread: worker `w` is lane `w + 1`; every
+    /// other thread — including any dispatching caller — is lane 0.
+    static LANE: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Stable lane id of the calling thread (see [`LANE`]). Used by the
+/// NUMA-aware B-replica selection in `blocked::gemm_shared`.
+pub fn current_lane() -> usize {
+    LANE.with(|l| l.get())
+}
+
+static NUMA_NODES: OnceLock<usize> = OnceLock::new();
+
+/// NUMA node count the placement seam should target. Always ≥ 1; exactly 1
+/// (replication disabled, pre-seam behavior) unless `MTNN_NUMA=1` opts in
+/// *and* the host exposes multiple nodes under `/sys/devices/system/node`.
+pub fn numa_nodes() -> usize {
+    *NUMA_NODES.get_or_init(|| {
+        if env_enables_numa(std::env::var("MTNN_NUMA").ok()) {
+            detect_numa_nodes().max(1)
+        } else {
+            1
+        }
+    })
+}
+
+/// `MTNN_NUMA` is truthy for any non-empty value other than `0`.
+fn env_enables_numa(v: Option<String>) -> bool {
+    matches!(v.as_deref().map(str::trim), Some(s) if !s.is_empty() && s != "0")
+}
+
+/// Count `/sys/devices/system/node/node<N>` entries that expose a
+/// `cpulist` (i.e. actually hold CPUs). Non-Linux hosts have no such dir
+/// and fall through to 1 in [`numa_nodes`].
+fn detect_numa_nodes() -> usize {
+    let Ok(entries) = std::fs::read_dir("/sys/devices/system/node") else {
+        return 1;
+    };
+    entries
+        .flatten()
+        .filter(|e| {
+            let name = e.file_name();
+            let name = name.to_string_lossy();
+            name.strip_prefix("node")
+                .is_some_and(|s| !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()))
+                && e.path().join("cpulist").is_file()
+        })
+        .count()
+}
 
 /// Lifetime-erased pointer to a caller-owned task closure (see the module
 /// docs for why this is sound).
@@ -163,6 +224,7 @@ impl Shared {
 }
 
 fn worker_main(shared: Arc<Shared>, idx: usize) {
+    LANE.with(|l| l.set(idx + 1));
     loop {
         let d: Arc<Dispatch> = {
             let mut st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
@@ -205,6 +267,8 @@ pub struct PoolStats {
     pub worker_tasks: u64,
     /// Best-of-N no-op dispatch round-trip measured at init.
     pub dispatch_overhead_ns: u64,
+    /// NUMA nodes the placement seam targets (1 = replication off).
+    pub numa_nodes: usize,
 }
 
 pub struct Pool {
@@ -285,6 +349,7 @@ impl Pool {
             dispatches: self.dispatches.load(Ordering::Relaxed),
             worker_tasks: self.shared.worker_tasks.load(Ordering::Relaxed),
             dispatch_overhead_ns: self.dispatch_overhead_ns,
+            numa_nodes: numa_nodes(),
         }
     }
 
@@ -421,6 +486,42 @@ mod tests {
             });
         }));
         assert!(res.is_err(), "caller must observe the task panic");
+    }
+
+    #[test]
+    fn numa_env_gate_parsing() {
+        assert!(!env_enables_numa(None));
+        assert!(!env_enables_numa(Some("".into())));
+        assert!(!env_enables_numa(Some("  ".into())));
+        assert!(!env_enables_numa(Some("0".into())));
+        assert!(env_enables_numa(Some("1".into())));
+        assert!(env_enables_numa(Some("yes".into())));
+    }
+
+    #[test]
+    fn numa_nodes_is_at_least_one_and_stable() {
+        let n = numa_nodes();
+        assert!(n >= 1);
+        assert_eq!(numa_nodes(), n, "cached value must not change");
+        assert_eq!(get().stats().numa_nodes, n);
+    }
+
+    #[test]
+    fn lanes_are_zero_for_callers_and_distinct_for_workers() {
+        let pool = get();
+        assert_eq!(current_lane(), 0, "non-pool threads are lane 0");
+        let lanes = Mutex::new(Vec::new());
+        pool.broadcast(&|| {
+            lanes
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .push(current_lane());
+        });
+        let mut lanes = lanes.into_inner().unwrap_or_else(|e| e.into_inner());
+        lanes.sort_unstable();
+        lanes.dedup();
+        assert_eq!(lanes.len(), pool.stats().workers, "one distinct lane per worker");
+        assert!(lanes.iter().all(|&l| l >= 1), "worker lanes start at 1");
     }
 
     #[test]

@@ -82,7 +82,7 @@ use crate::selector::cache::DecisionCache;
 use crate::selector::{Selector, SelectionReason};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// Tuning for the online loop (defaults are conservative production-ish
@@ -244,6 +244,10 @@ pub struct OnlineHub {
     sched_ticks: Box<[AtomicU64]>,
     /// Counter of schedule-declined requests, driving the epsilon floor.
     bandit_tick: AtomicU64,
+    /// Callbacks run after every promotion (after the decision-cache
+    /// invalidation). The router registers the engine reuse layer's epoch
+    /// bump here so a hot-swap also retires cross-request cached results.
+    promotion_hooks: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
     shutdown: AtomicBool,
 }
 
@@ -263,8 +267,16 @@ impl OnlineHub {
             metrics,
             sched_ticks: (0..drift::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             bandit_tick: AtomicU64::new(0),
+            promotion_hooks: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
         }
+    }
+
+    /// Register a callback to run after every [`OnlineHub::promote`]
+    /// (after the decision-cache invalidation). Off the hot path:
+    /// promotions are rare trainer-thread events.
+    pub fn add_promotion_hook(&self, hook: Box<dyn Fn() + Send + Sync>) {
+        self.promotion_hooks.lock().unwrap().push(hook);
     }
 
     /// Minimum decayed weight before a window's rate influences the probe
@@ -430,6 +442,9 @@ impl OnlineHub {
     pub fn promote(&self, next: Selector) {
         self.live.swap(next);
         self.cache.invalidate();
+        for hook in self.promotion_hooks.lock().unwrap().iter() {
+            hook();
+        }
         self.metrics.promotions.fetch_add(1, Ordering::Relaxed);
     }
 

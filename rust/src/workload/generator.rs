@@ -34,6 +34,41 @@ pub enum PhaseKind {
         to: &'static GpuSpec,
         at_frac: f64,
     },
+    /// Constant rate over a Zipf-repeating working set: each event draws
+    /// a rank from Zipf(`exponent`) over `distinct` identities; rank `r`
+    /// maps to shape `pool[r % pool.len()]` and a rank-deterministic
+    /// [`TraceEvent::payload`], so hot identities repeat *byte-for-byte*
+    /// — the regime a result-reuse cache feeds on.
+    RepeatHeavy { distinct: usize, exponent: f64 },
+}
+
+/// Payload-derivation domain separators (see [`TraceEvent::payload`]).
+const UNIQUE_PAYLOAD: u64 = 0x6E57_11E0;
+const REPEAT_PAYLOAD: u64 = 0x5E9A_7B2C;
+
+/// Precomputed Zipf CDF over ranks `0..n`: rank `r` weighs `1/(r+1)^s`.
+struct ZipfTable {
+    cum: Vec<f64>,
+}
+
+impl ZipfTable {
+    fn new(n: usize, s: f64) -> ZipfTable {
+        assert!(n > 0, "RepeatHeavy needs a non-empty working set");
+        let mut cum = Vec::with_capacity(n);
+        let mut total = 0.0f64;
+        for r in 0..n {
+            total += 1.0 / ((r + 1) as f64).powf(s);
+            cum.push(total);
+        }
+        ZipfTable { cum }
+    }
+
+    /// First rank whose cumulative weight exceeds `u × total` (binary
+    /// search; `u ∈ [0,1)`).
+    fn sample(&self, u: f64) -> usize {
+        let target = u * self.cum[self.cum.len() - 1];
+        self.cum.partition_point(|&c| c <= target).min(self.cum.len() - 1)
+    }
 }
 
 /// One segment of a trace: a regime, its shape pool, its base rate.
@@ -58,6 +93,13 @@ pub struct TraceEvent {
     pub at: Duration,
     pub gpu: &'static GpuSpec,
     pub shape: GemmShape,
+    /// Content identity of the request: replay derives the input matrices
+    /// from this, so equal `(shape, payload)` means bit-identical request
+    /// content. [`PhaseKind::RepeatHeavy`] deliberately repeats
+    /// identities; every other phase emits unique payloads. Derived from
+    /// counters/ranks via `mix_parts`, *not* from the phase's rng stream,
+    /// so adding it changed no existing trace's event sequence.
+    pub payload: u64,
     /// Index of the [`Phase`] that emitted this event.
     pub phase: usize,
 }
@@ -83,8 +125,15 @@ impl Trace {
             assert!(phase.rps > 0.0, "phase {pi}: non-positive rate");
             assert!(!phase.duration.is_zero(), "phase {pi}: zero duration");
             let mut rng = Xoshiro256pp::new(mix_parts(&[seed, pi as u64]));
+            let zipf = match &phase.kind {
+                PhaseKind::RepeatHeavy { distinct, exponent } => {
+                    Some(ZipfTable::new(*distinct, *exponent))
+                }
+                _ => None,
+            };
             let total = phase.duration.as_secs_f64();
             let mut t = 0.0f64;
+            let mut emitted = 0u64;
             loop {
                 let frac = t / total;
                 let rate = phase.rps * rate_multiplier(&phase.kind, frac);
@@ -95,10 +144,25 @@ impl Trace {
                     break;
                 }
                 let frac = t / total;
+                let (shape, payload) = match &zipf {
+                    Some(table) => {
+                        let rank = table.sample(rng.next_f64());
+                        (
+                            phase.shapes[rank % phase.shapes.len()],
+                            mix_parts(&[seed, REPEAT_PAYLOAD, pi as u64, rank as u64]),
+                        )
+                    }
+                    None => (
+                        event_shape(&phase.kind, &phase.shapes, frac, &mut rng),
+                        mix_parts(&[seed, UNIQUE_PAYLOAD, pi as u64, emitted]),
+                    ),
+                };
+                emitted += 1;
                 events.push(TraceEvent {
                     at: base + Duration::from_secs_f64(t),
                     gpu: event_gpu(&phase.kind, phase.gpu, frac),
-                    shape: event_shape(&phase.kind, &phase.shapes, frac, &mut rng),
+                    shape,
+                    payload,
                     phase: pi,
                 });
             }
@@ -138,7 +202,10 @@ impl Trace {
 /// Instantaneous rate multiplier at fraction `frac` of the phase.
 fn rate_multiplier(kind: &PhaseKind, frac: f64) -> f64 {
     match kind {
-        PhaseKind::Steady | PhaseKind::ShapeMigration { .. } | PhaseKind::DeviceSwap { .. } => 1.0,
+        PhaseKind::Steady
+        | PhaseKind::ShapeMigration { .. }
+        | PhaseKind::DeviceSwap { .. }
+        | PhaseKind::RepeatHeavy { .. } => 1.0,
         PhaseKind::FlashCrowd { peak_x } => {
             // Triangle: 1× at the edges, peak_x× at the midpoint.
             1.0 + (peak_x - 1.0) * (1.0 - (2.0 * frac - 1.0).abs())
@@ -275,6 +342,71 @@ mod tests {
         let cut = Duration::from_secs(1);
         assert!(t.events.iter().filter(|e| e.at < cut).all(|e| e.gpu.id == GTX1080.id));
         assert!(t.events.iter().filter(|e| e.at >= cut).all(|e| e.gpu.id == TITANX.id));
+    }
+
+    #[test]
+    fn repeat_heavy_repeats_hot_identities_zipf_style() {
+        let phase = Phase {
+            kind: PhaseKind::RepeatHeavy { distinct: 16, exponent: 1.2 },
+            gpu: &GTX1080,
+            shapes: shapes(&[32, 64]),
+            rps: 500.0,
+            duration: Duration::from_secs(2),
+        };
+        let t = Trace::generate(&[phase], 13);
+        assert!(t.len() > 200, "expected ~1000 events, got {}", t.len());
+        let mut counts = std::collections::HashMap::new();
+        for e in &t.events {
+            *counts.entry((e.shape, e.payload)).or_insert(0usize) += 1;
+        }
+        assert!(counts.len() <= 16, "at most `distinct` identities, got {}", counts.len());
+        assert!(counts.len() >= 4, "the working set should spread, got {}", counts.len());
+        let max = *counts.values().max().unwrap();
+        assert!(
+            max * 5 > t.len(),
+            "the Zipf head should dominate: max={max} of {}",
+            t.len()
+        );
+        // Determinism: same seed, same identity sequence.
+        let t2 = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::RepeatHeavy { distinct: 16, exponent: 1.2 },
+                gpu: &GTX1080,
+                shapes: shapes(&[32, 64]),
+                rps: 500.0,
+                duration: Duration::from_secs(2),
+            }],
+            13,
+        );
+        assert!(t
+            .events
+            .iter()
+            .zip(&t2.events)
+            .all(|(x, y)| x.payload == y.payload && x.shape == y.shape));
+    }
+
+    #[test]
+    fn non_repeat_phases_emit_unique_payloads() {
+        let t = Trace::generate(&[steady(200.0, 2.0), steady(150.0, 1.0)], 21);
+        let unique: std::collections::HashSet<u64> =
+            t.events.iter().map(|e| e.payload).collect();
+        assert_eq!(unique.len(), t.len(), "non-repeat payloads must never collide");
+    }
+
+    #[test]
+    fn zipf_table_is_head_heavy_and_monotone() {
+        let z = ZipfTable::new(8, 1.0);
+        assert_eq!(z.sample(0.0), 0);
+        assert_eq!(z.sample(0.999_999), 7);
+        let mut last = 0usize;
+        for i in 0..100 {
+            let r = z.sample(i as f64 / 100.0);
+            assert!(r >= last, "CDF inversion must be monotone");
+            last = r;
+        }
+        // Rank 0 carries 1/H(8) ≈ 37% of the mass under s=1.
+        let head = (0..100).filter(|&i| z.sample(i as f64 / 100.0) == 0).count();
+        assert!((25..=50).contains(&head), "head mass off: {head}%");
     }
 
     #[test]

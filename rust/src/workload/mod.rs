@@ -6,10 +6,14 @@
 //!
 //! * [`generator`] — a composable phase-based trace generator. A
 //!   [`Phase`] describes a traffic regime (steady load, a flash crowd,
-//!   a shape migration, a diurnal ramp, a device swap); chaining phases
-//!   yields a [`Trace`] of timed [`TraceEvent`]s with seeded
-//!   exponential inter-arrivals. Regime *changes* — the thing the
-//!   online loop must survive — are just phase boundaries.
+//!   a shape migration, a diurnal ramp, a device swap, a Zipf-repeating
+//!   repeat-heavy working set); chaining phases yields a [`Trace`] of
+//!   timed [`TraceEvent`]s with seeded exponential inter-arrivals. Each
+//!   event carries a content-identity `payload` the replay seeds request
+//!   matrices from, so repeat-heavy traffic repeats *byte-for-byte* —
+//!   the regime that exercises the engine's result-reuse layer. Regime
+//!   *changes* — the thing the online loop must survive — are just
+//!   phase boundaries.
 //! * [`replay`] — drives a [`Trace`] through a live [`Router`] from a
 //!   configurable number of client threads, either paced against the
 //!   trace's own clock ([`ReplayClock::Paced`]) or as fast as possible

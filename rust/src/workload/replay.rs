@@ -130,7 +130,11 @@ fn client_run(
                 std::thread::sleep(due - now);
             }
         }
-        let s = mix_parts(&[opts.seed, i as u64]);
+        // Seed from the event's content identity, not its trace index:
+        // equal (shape, payload) events — the repeats a RepeatHeavy phase
+        // emits — produce bit-identical matrices, which is what lets the
+        // engine's reuse layer cache and coalesce them.
+        let s = mix_parts(&[opts.seed, ev.payload]);
         let a = Matrix::random(ev.shape.m as usize, ev.shape.k as usize, s);
         let b = Matrix::random(ev.shape.n as usize, ev.shape.k as usize, s ^ 1);
         counters.submitted.fetch_add(1, Ordering::Relaxed);

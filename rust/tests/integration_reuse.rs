@@ -1,0 +1,245 @@
+//! Integration: the engine's cross-request result-reuse layer end to end
+//! — output caching, single-flight dedup, epoch/artifact invalidation,
+//! and the deny-prefix opt-out — driven through real engines and, for the
+//! serving path, through a live router replaying a repeat-heavy trace.
+//!
+//! The contracts under test:
+//! * a cache hit or coalesced reply is **bit-identical** to the fresh
+//!   computation it stands in for, and skips execution entirely;
+//! * a model-epoch bump or artifact invalidation always forces a fresh
+//!   execution — stale bits are never served;
+//! * denied artifacts bypass the layer (the non-idempotent opt-out);
+//! * the conservation ledger still balances with reuse on: every cache
+//!   hit counts completed exactly once per client submission.
+
+use mtnn::coordinator::{
+    Engine, EngineConfig, ExecBackend, ReuseConfig, Router, RouterConfig,
+};
+use mtnn::gemm::cpu::Matrix;
+use mtnn::gemm::GemmShape;
+use mtnn::gpusim::GTX1080;
+use mtnn::selector::Selector;
+use mtnn::workload::{replay, Phase, PhaseKind, ReplayOptions, Trace};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Deterministic-per-inputs backend that embeds a global call counter in
+/// its output, so a served result proves *which* execution produced it:
+/// cached bits carry the original call's counter, a fresh recompute a new
+/// one. Also counts executions, which reuse must be seen to skip.
+struct CountingBackend {
+    calls: Arc<AtomicU64>,
+    delay: Duration,
+}
+
+impl ExecBackend for CountingBackend {
+    fn execute(&self, _artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        let call = self.calls.fetch_add(1, Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        let sum: f32 = inputs.iter().map(|m| m.data.iter().sum::<f32>()).sum();
+        Ok(vec![Matrix::from_vec(1, 2, vec![sum, call as f32])])
+    }
+
+    fn name(&self) -> String {
+        "counting".into()
+    }
+}
+
+fn counting_engine(
+    workers: usize,
+    delay: Duration,
+) -> (Engine, Arc<AtomicU64>) {
+    let calls = Arc::new(AtomicU64::new(0));
+    let for_pool = Arc::clone(&calls);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers,
+            queue_depth: 32,
+            ..EngineConfig::default()
+        },
+        move |_| {
+            Ok(Box::new(CountingBackend {
+                calls: Arc::clone(&for_pool),
+                delay,
+            }) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("counting engine");
+    (engine, calls)
+}
+
+fn inputs(seed: u64) -> Vec<Matrix> {
+    vec![Matrix::random(8, 8, seed), Matrix::random(8, 8, seed ^ 1)]
+}
+
+#[test]
+fn cache_hits_are_bit_identical_and_skip_execution() {
+    let (engine, calls) = counting_engine(2, Duration::ZERO);
+    let handle = engine.handle();
+    let layer = handle.enable_reuse(ReuseConfig::default());
+    let stats = layer.stats();
+
+    let fresh = handle.run("nt_8x8x8", inputs(1)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 1);
+    for _ in 0..5 {
+        let hit = handle.run("nt_8x8x8", inputs(1)).unwrap();
+        assert_eq!(hit.len(), fresh.len());
+        assert_eq!(hit[0].data, fresh[0].data, "cached reply must be bit-identical");
+    }
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "hits must not execute");
+    assert_eq!(stats.hits.load(Ordering::Relaxed), 5);
+    assert_eq!(stats.misses.load(Ordering::Relaxed), 1);
+
+    // Different input content under the same artifact is a different key.
+    let other = handle.run("nt_8x8x8", inputs(2)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+    assert_ne!(other[0].data, fresh[0].data);
+    engine.shutdown();
+}
+
+#[test]
+fn epoch_bump_and_artifact_invalidation_never_serve_stale_bits() {
+    let (engine, calls) = counting_engine(1, Duration::ZERO);
+    let handle = engine.handle();
+    let layer = handle.enable_reuse(ReuseConfig::default());
+
+    let v1 = handle.run("nt_8x8x8", inputs(3)).unwrap();
+    let y1 = handle.run("tnn_8x8x8", inputs(4)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2);
+
+    // Model promotion semantics: epoch bump hides everything cached.
+    layer.invalidate();
+    let v2 = handle.run("nt_8x8x8", inputs(3)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3, "post-bump run must recompute");
+    assert_ne!(
+        v2[0].data, v1[0].data,
+        "the recompute carries a new call counter — cached bits were not replayed"
+    );
+
+    // Re-cached under the new epoch; hits resume.
+    let v2_again = handle.run("nt_8x8x8", inputs(3)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 3);
+    assert_eq!(v2_again[0].data, v2[0].data);
+
+    // Targeted artifact invalidation: nt is dropped, tnn survives.
+    layer.invalidate_artifact("nt_8x8x8");
+    let v3 = handle.run("nt_8x8x8", inputs(3)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 4, "invalidated artifact recomputes");
+    assert_ne!(v3[0].data, v2[0].data);
+    let y1_again = handle.run("tnn_8x8x8", inputs(4)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 4, "untouched artifact still hits");
+    assert_eq!(y1_again[0].data, y1[0].data);
+    engine.shutdown();
+}
+
+#[test]
+fn concurrent_identical_requests_execute_once_and_share_one_result() {
+    // A slow backend widens the single-flight window: one leader executes,
+    // everyone else either coalesces onto it or hits the cache after it
+    // lands. Either way: exactly one execution, identical bits for all.
+    let (engine, calls) = counting_engine(2, Duration::from_millis(30));
+    let handle = engine.handle();
+    let layer = handle.enable_reuse(ReuseConfig::default());
+    let stats = layer.stats();
+
+    const CLIENTS: usize = 8;
+    let results: Vec<Vec<Matrix>> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let handle = handle.clone();
+                s.spawn(move || handle.run("nt_8x8x8", inputs(7)).unwrap())
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    assert_eq!(calls.load(Ordering::SeqCst), 1, "identical burst executes once");
+    for r in &results[1..] {
+        assert_eq!(r[0].data, results[0][0].data, "all waiters share identical bits");
+    }
+    let hits = stats.hits.load(Ordering::Relaxed);
+    let coalesced = stats.coalesced.load(Ordering::Relaxed);
+    assert_eq!(stats.misses.load(Ordering::Relaxed), 1);
+    assert_eq!(hits + coalesced, (CLIENTS - 1) as u64);
+    engine.shutdown();
+}
+
+#[test]
+fn deny_prefix_opts_an_artifact_out_through_the_engine() {
+    let (engine, calls) = counting_engine(1, Duration::ZERO);
+    let handle = engine.handle();
+    let layer = handle.enable_reuse(ReuseConfig {
+        deny_prefixes: vec!["effectful_".into()],
+        ..ReuseConfig::default()
+    });
+    let stats = layer.stats();
+
+    let a = handle.run("effectful_8x8x8", inputs(9)).unwrap();
+    let b = handle.run("effectful_8x8x8", inputs(9)).unwrap();
+    assert_eq!(calls.load(Ordering::SeqCst), 2, "denied artifacts always execute");
+    assert_ne!(a[0].data, b[0].data, "each execution is observable");
+    assert_eq!(stats.bypasses.load(Ordering::Relaxed), 2);
+    assert_eq!(stats.hits.load(Ordering::Relaxed), 0);
+    assert!(layer.is_empty(), "denied results are never cached");
+    engine.shutdown();
+}
+
+#[test]
+fn repeat_heavy_replay_through_a_router_conserves_and_reuses() {
+    // The serving-path acceptance check: a Zipf repeat-heavy trace through
+    // a *native* engine with reuse on must balance both conservation
+    // ledgers, fail nothing, and actually reuse (hits or dedup > 0) —
+    // every cache hit counts completed exactly once per client submission.
+    let engine = Engine::native_pool(EngineConfig {
+        workers: 2,
+        queue_depth: 16,
+        ..EngineConfig::default()
+    })
+    .expect("native engine");
+    let handle = engine.handle();
+    handle.enable_reuse(ReuseConfig::default());
+    let router = Router::new(
+        Selector::train_default(&mtnn::dataset::collect_paper_dataset()),
+        handle,
+        RouterConfig::default(),
+    );
+    let trace = Trace::generate(
+        &[Phase {
+            kind: PhaseKind::RepeatHeavy {
+                distinct: 8,
+                exponent: 1.1,
+            },
+            gpu: &GTX1080,
+            shapes: vec![
+                GemmShape::new(32, 32, 32),
+                GemmShape::new(48, 32, 64),
+            ],
+            rps: 400.0,
+            duration: Duration::from_secs_f64(0.5),
+        }],
+        0xCAFE,
+    );
+    assert!(trace.len() >= 100, "trace too small: {}", trace.len());
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    assert_eq!(report.submitted, trace.len() as u64);
+    assert_eq!(report.failed, 0);
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.completed, report.completed);
+    assert!(
+        snap.reuse_hits + snap.reuse_coalesced > 0,
+        "a Zipf-repeating trace must reuse: hits={} coalesced={} misses={}",
+        snap.reuse_hits,
+        snap.reuse_coalesced,
+        snap.reuse_misses
+    );
+    assert_eq!(
+        snap.reuse_hits + snap.reuse_coalesced + snap.reuse_misses,
+        report.submitted,
+        "every submission classifies as exactly one of hit/coalesced/miss"
+    );
+    engine.shutdown();
+}

@@ -2,7 +2,9 @@
 //! through a live router, chaos injection (fault-injecting backend +
 //! worker kill/restart mid-trace) with the conservation invariant
 //! `completed + failed + shed == submitted` asserted on both the
-//! client-side replay ledger and the server-side coordinator metrics,
+//! client-side replay ledger and the server-side coordinator metrics
+//! (including composed with the engine's result-reuse layer under
+//! repeat-heavy traffic),
 //! and the deterministic regime-change A/B: the PR 6 online-loop config
 //! (recency reservoir + wall-clock drift decay) must recover from a
 //! latency-regime flip at least 2× faster than the old uniform /
@@ -213,6 +215,99 @@ fn chaos_run_conserves_every_request_and_no_client_hangs() {
     assert!(
         report.failed >= stats.injected_failures.load(std::sync::atomic::Ordering::Relaxed),
         "every injected failure surfaces as a failed request"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn chaos_and_reuse_compose_without_breaking_conservation() {
+    // Satellite invariant: latency spikes, injected faults, and a worker
+    // kill/restart must compose with the engine's result-reuse layer —
+    // a cache hit or coalesced reply counts completed exactly once per
+    // client submission, an injected failure surfaces once per waiter,
+    // and both ledgers still balance.
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 0xCA0_5EED,
+        fail_prob: 0.04,
+        panic_prob: 0.02,
+        spike_prob: 0.10,
+        spike: Duration::from_micros(300),
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let mut engine = Engine::restartable(
+        EngineConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                chaos_cfg,
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("restartable chaos pool");
+    engine
+        .handle()
+        .enable_reuse(mtnn::coordinator::ReuseConfig::default());
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            ..RouterConfig::default()
+        },
+    );
+    // Zipf repeat-heavy traffic: the regime where reuse actually engages.
+    let trace = Trace::generate(
+        &[Phase {
+            kind: PhaseKind::RepeatHeavy {
+                distinct: 10,
+                exponent: 1.2,
+            },
+            gpu: &GTX1080,
+            shapes: small_shapes(),
+            rps: 800.0,
+            duration: Duration::from_secs_f64(0.5),
+        }],
+        29,
+    );
+    assert!(trace.len() >= 300, "want a meaty trace, got {}", trace.len());
+    let report = replay_with_chaos(
+        &router,
+        &mut engine,
+        &trace,
+        &ReplayOptions::default(),
+        &WorkerChaos {
+            worker: 0,
+            kill_after: 100,
+            restart_after: 220,
+        },
+    )
+    .expect("chaos controller");
+    report.verify_conservation().unwrap();
+    assert_eq!(report.submitted, trace.len() as u64);
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.completed, report.completed);
+    assert_eq!(snap.failed, report.failed);
+    assert_eq!(snap.shed, report.shed);
+    assert!(
+        snap.reuse_hits + snap.reuse_coalesced > 0,
+        "repeat-heavy chaos traffic must still reuse: hits={} coalesced={}",
+        snap.reuse_hits,
+        snap.reuse_coalesced
+    );
+    // Classification happens before admission, so every submission — even
+    // one later shed at the queues — classifies exactly once.
+    assert_eq!(
+        snap.reuse_hits + snap.reuse_coalesced + snap.reuse_misses + snap.reuse_bypasses,
+        report.submitted,
+        "reuse classification must cover every submission exactly once"
     );
     engine.shutdown();
 }

@@ -215,20 +215,22 @@ fn prop_kernel_paths_match_oracle_beyond_cache_blocks() {
 
 #[test]
 fn prop_simd_and_scalar_paths_agree() {
-    // The two kernel implementations round differently (FMA fuses the
-    // multiply-add), but must agree within f32 tolerance on identical
-    // inputs. Trivially passes on scalar-only hosts and under
-    // MTNN_NO_SIMD=1, where only one path exists.
-    let kinds = kernels::available_kernels();
-    if kinds.len() < 2 {
-        return;
-    }
+    // The kernel implementations round differently (FMA fuses the
+    // multiply-add), but every SIMD path — AVX2 on x86-64, NEON on
+    // aarch64 — must agree with the scalar oracle within f32 tolerance
+    // on identical inputs. Trivially passes on scalar-only hosts and
+    // under MTNN_NO_SIMD=1, where only one path exists.
     let a = Matrix::random(67, 129, 41);
     let b = Matrix::random(45, 129, 42);
     let scalar =
         kernels::with_forced_kernel(Some(KernelKind::Scalar), || blocked::matmul_nt(&a, &b));
-    let simd = kernels::with_forced_kernel(Some(KernelKind::Avx2), || blocked::matmul_nt(&a, &b));
-    assert_allclose(&simd.data, &scalar.data, 1e-4, 1e-4);
+    for kind in kernels::available_kernels() {
+        if kind == KernelKind::Scalar {
+            continue;
+        }
+        let simd = kernels::with_forced_kernel(Some(kind), || blocked::matmul_nt(&a, &b));
+        assert_allclose(&simd.data, &scalar.data, 1e-4, 1e-4);
+    }
 }
 
 #[test]

@@ -1,11 +1,19 @@
 #!/usr/bin/env python3
-"""Soft diff between two BENCH_hotpath.json trajectory files.
+"""Diff between two BENCH_hotpath.json trajectory files.
 
-Usage: bench_diff.py PREV.json NEW.json
+Usage: bench_diff.py [--gate] PREV.json NEW.json
 
 Joins rows by (name, shape, backend), prints per-row deltas, and flags
-regressions above a threshold with a warning. Always exits 0 — this is a
-trajectory report, not a gate (CI runners are too noisy to block on).
+regressions above a threshold with a warning. By default it always exits
+0 — a trajectory report, not a gate (CI runners are too noisy to block
+on a cold baseline).
+
+With --gate, the handful of rows in GATED_ROWS become hard failures
+(exit 1) when they regress beyond the threshold or vanish — but only
+once the committed baseline has proven stable: the baseline document
+must carry "stable_runs" >= 2 (two consecutive CI runs within the
+threshold of each other). Until then --gate degrades to the soft
+report, so a placeholder or freshly refreshed baseline never blocks.
 """
 import json
 import sys
@@ -14,15 +22,27 @@ REGRESSION_WARN_PCT = 25.0
 # Lower is better for per-op latencies and overhead fractions; higher is
 # better for throughput.
 VALUE_KEYS = (("ns_per_op", False), ("req_per_s", True), ("probe_fraction", False))
+# Rows promoted from soft-diff to gating (matched by name, any
+# shape/backend): (name, metric, higher_is_better).
+GATED_ROWS = (
+    ("gemm.kernel.simd.matmul_nt", "speedup_vs_scalar", True),
+    ("gemm.scratch.steady_state", "pool_dispatch_overhead_ns", False),
+    ("online.should_probe", "ns_per_op", False),
+)
+# Consecutive stable CI runs the baseline needs before --gate arms.
+GATE_MIN_STABLE_RUNS = 2
 
 
-def load_rows(path):
+def load_doc(path):
     try:
         with open(path) as f:
-            doc = json.load(f)
+            return json.load(f)
     except (OSError, json.JSONDecodeError) as e:
         print(f"bench_diff: cannot read {path}: {e}")
         return {}
+
+
+def index_rows(doc):
     rows = {}
     for row in doc.get("entries", []):
         key = (row.get("name"), row.get("shape", ""), row.get("backend", ""))
@@ -37,11 +57,46 @@ def value_of(row):
     return None, None, None
 
 
+def regressed_pct(old_val, new_val, higher_is_better):
+    """Signed regression magnitude in percent (positive = worse)."""
+    if old_val == 0:
+        return 0.0
+    delta_pct = (new_val - old_val) / old_val * 100.0
+    return -delta_pct if higher_is_better else delta_pct
+
+
+def gate_check(prev, new):
+    """Hard failures on the promoted rows: regression beyond threshold or
+    a gated row missing from the new run. Only called once the baseline
+    is proven stable."""
+    failures = []
+    for name, metric, higher_is_better in GATED_ROWS:
+        olds = [r for (n, _, _), r in prev.items() if n == name and metric in r]
+        if not olds:
+            continue  # baseline never recorded this row — nothing to hold
+        news = [r for (n, _, _), r in new.items() if n == name and metric in r]
+        if not news:
+            failures.append(f"{name}: gated row missing from the new run")
+            continue
+        for old_row in olds:
+            old_val = float(old_row[metric])
+            worst = max(regressed_pct(old_val, float(r[metric]), higher_is_better) for r in news)
+            if worst > REGRESSION_WARN_PCT:
+                failures.append(
+                    f"{name}: {metric} regressed {worst:+.1f}% beyond "
+                    f"{REGRESSION_WARN_PCT:.0f}% (baseline {old_val:.2f})"
+                )
+    return failures
+
+
 def main():
-    if len(sys.argv) != 3:
+    argv = [a for a in sys.argv[1:] if a != "--gate"]
+    gate = "--gate" in sys.argv[1:]
+    if len(argv) != 2:
         print(__doc__.strip())
-        return
-    prev, new = load_rows(sys.argv[1]), load_rows(sys.argv[2])
+        return 0
+    prev_doc, new_doc = load_doc(argv[0]), load_doc(argv[1])
+    prev, new = index_rows(prev_doc), index_rows(new_doc)
     if not prev:
         print("bench_diff: no previous rows (first run or placeholder baseline) — nothing to compare")
     warnings = 0
@@ -62,14 +117,13 @@ def main():
             print(f"  {name}: {metric}={val:.1f} (baseline 0 — skipped)")
             continue
         delta_pct = (val - old_val) / old_val * 100.0
-        regressed = delta_pct > REGRESSION_WARN_PCT if not higher_is_better else -delta_pct > REGRESSION_WARN_PCT
+        regressed = regressed_pct(old_val, val, higher_is_better) > REGRESSION_WARN_PCT
         mark = "  ⚠ REGRESSION?" if regressed else ""
         warnings += regressed
         print(f"  {name}: {metric} {old_val:.1f} → {val:.1f} ({delta_pct:+.1f}%){mark}")
     # A row the baseline had but the new run lost is a hard warning, not
     # an aside: a silently vanished benchmark is how coverage regressions
-    # hide. Counted into the same warning total (still exit 0 — this is a
-    # trajectory report, not a gate).
+    # hide.
     dropped = sorted(set(prev) - set(new))
     for key in dropped:
         print(f"  {' '.join(p for p in key if p)}: ⚠ MISSING — present in baseline, absent from new run")
@@ -80,10 +134,26 @@ def main():
     if warnings > len(dropped):
         summary.append(f"{warnings - len(dropped)} possible regression(s) beyond {REGRESSION_WARN_PCT:.0f}%")
     if warnings:
-        print(f"bench_diff: {warnings} warning(s): {'; '.join(summary)} — soft warning, not a gate")
+        print(f"bench_diff: {warnings} warning(s): {'; '.join(summary)} — soft warning")
     else:
         print("bench_diff: no regressions beyond threshold, no missing rows")
 
+    if gate:
+        stable_runs = int(prev_doc.get("stable_runs", 0) or 0)
+        if stable_runs < GATE_MIN_STABLE_RUNS:
+            print(
+                f"bench_diff: --gate requested but baseline has stable_runs={stable_runs} "
+                f"(< {GATE_MIN_STABLE_RUNS}) — gating disarmed, soft report only"
+            )
+            return 0
+        failures = gate_check(prev, new)
+        if failures:
+            for f in failures:
+                print(f"bench_diff: GATE FAIL — {f}")
+            return 1
+        print(f"bench_diff: gate passed ({len(GATED_ROWS)} promoted row(s) held)")
+    return 0
+
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())
