@@ -36,10 +36,17 @@
 //!
 //!     cargo run --release --example serve_gemm -- \
 //!         --trace chaos --requests 400 --clients 4 --workers 2
+//!
+//! In chaos and online modes, `--metrics-prom` prints the final metrics
+//! snapshot in Prometheus text exposition format 0.0.4 and
+//! `--metrics-json` prints the JSON variant. Chaos mode additionally
+//! runs with the observability layer on (request-path tracing, windowed
+//! rates, flight recorder) and prints a `flight-recorder dump` notice
+//! for every chaos-triggered span dump.
 
 use mtnn::coordinator::{
-    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, ReuseConfig, Router,
-    RouterConfig,
+    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, MetricsSnapshot,
+    ReuseConfig, Router, RouterConfig,
 };
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::gemm::cpu::Matrix;
@@ -47,6 +54,7 @@ use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::{SimExecutor, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
+use mtnn::obs::{ObsConfig, ObsLayer};
 use mtnn::online::OnlineConfig;
 use mtnn::runtime::Runtime;
 use mtnn::selector::{Selector, TrainedModel};
@@ -193,6 +201,21 @@ fn run_mode(
     Ok(())
 }
 
+/// Print the final metrics snapshot in the requested exposition formats
+/// (Prometheus text format 0.0.4 and/or the JSON variant).
+fn print_expositions(snap: &MetricsSnapshot, prom: bool, json: bool) {
+    if prom {
+        println!("--- prometheus exposition (text format 0.0.4) ---");
+        print!("{}", snap.render_prometheus());
+        println!("--- end prometheus exposition ---");
+    }
+    if json {
+        println!("--- metrics json ---");
+        println!("{}", snap.render_json().to_pretty());
+        println!("--- end metrics json ---");
+    }
+}
+
 /// The closed-loop mode: serve traffic with the online subsystem on, then
 /// report the loop's counters (samples, probes, mispredict rate,
 /// retrains, promotions, rollbacks) and the live model generation.
@@ -202,6 +225,8 @@ fn run_online(
     clients: usize,
     workers: usize,
     mistrained: bool,
+    metrics_prom: bool,
+    metrics_json: bool,
 ) -> anyhow::Result<()> {
     let engine = build_engine(backend, workers)?;
     let seed = if mistrained {
@@ -297,6 +322,7 @@ fn run_online(
         snap.probes_bandit,
         snap.probe_interval,
     );
+    print_expositions(&snap, metrics_prom, metrics_json);
     engine.shutdown();
     Ok(())
 }
@@ -307,7 +333,13 @@ fn run_online(
 /// mid-trace, the online loop retraining a mistrained seed model the
 /// whole time, and conservation verified on both the client-side replay
 /// ledger and the server-side metrics before anything is printed.
-fn run_trace_chaos(requests: usize, clients: usize, workers: usize) -> anyhow::Result<()> {
+fn run_trace_chaos(
+    requests: usize,
+    clients: usize,
+    workers: usize,
+    metrics_prom: bool,
+    metrics_json: bool,
+) -> anyhow::Result<()> {
     use mtnn::workload::{
         replay_with_chaos, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind, ReplayClock,
         ReplayOptions, Trace, WorkerChaos,
@@ -351,11 +383,16 @@ fn run_trace_chaos(requests: usize, clients: usize, workers: usize) -> anyhow::R
         poll_interval: Duration::from_millis(10),
         ..OnlineConfig::default()
     };
+    // The chaos run doubles as the observability smoke: every request is
+    // span-traced, and the flight recorder dumps span context whenever an
+    // injected failure or a shed surfaces.
+    let obs = Arc::new(ObsLayer::new(ObsConfig::default()));
     let router = Router::new(
         mistrained_selector(),
         engine.handle(),
         RouterConfig {
             admission: AdmissionControl::RejectWhenBusy,
+            obs: Some(Arc::clone(&obs)),
             ..RouterConfig::online(online)
         },
     );
@@ -384,11 +421,7 @@ fn run_trace_chaos(requests: usize, clients: usize, workers: usize) -> anyhow::R
     router.warmup(&trace.distinct_shapes())?;
 
     let n = trace.len() as u64;
-    let chaos = WorkerChaos {
-        worker: 0,
-        kill_after: n / 4,
-        restart_after: n / 2,
-    };
+    let chaos = WorkerChaos::at_counts(0, n / 4, n / 2);
     let t0 = Instant::now();
     let report = replay_with_chaos(
         &router,
@@ -427,6 +460,27 @@ fn run_trace_chaos(requests: usize, clients: usize, workers: usize) -> anyhow::R
         report.completed, report.failed, report.shed, report.submitted
     );
     println!("    server: {}", snap.render());
+    let obs_snap = obs.snapshot();
+    println!(
+        "       obs: spans recorded={} dropped={} | window req/s={:.1} shed={:.1}% \
+         reuse-hit={:.1}% probe={:.1}% mispredict={:.1}%",
+        obs_snap.spans_recorded,
+        obs_snap.spans_dropped,
+        obs_snap.window.req_per_s,
+        obs_snap.window.shed_rate * 100.0,
+        obs_snap.window.reuse_hit_rate * 100.0,
+        obs_snap.window.probe_rate * 100.0,
+        obs_snap.window.mispredict_rate * 100.0,
+    );
+    for dump in obs.dumps() {
+        println!(
+            "flight-recorder dump: trigger={} spans={} at_us={}",
+            dump.trigger,
+            dump.spans.len(),
+            dump.at_us
+        );
+    }
+    print_expositions(&snap, metrics_prom, metrics_json);
     engine.shutdown();
     Ok(())
 }
@@ -453,6 +507,8 @@ fn main() -> anyhow::Result<()> {
     let online = args.flag("online");
     let mistrained = args.flag("mistrained");
     let reuse = args.flag("reuse");
+    let metrics_prom = args.flag("metrics-prom");
+    let metrics_json = args.flag("metrics-json");
     let trace_mode = args.get("trace", "");
     args.finish()?;
     if trace_mode == "chaos" {
@@ -462,7 +518,7 @@ fn main() -> anyhow::Result<()> {
              + online adaptive selection)",
             workers.max(2)
         );
-        run_trace_chaos(requests, clients, workers)?;
+        run_trace_chaos(requests, clients, workers, metrics_prom, metrics_json)?;
     } else if !trace_mode.is_empty() {
         anyhow::bail!("unknown --trace '{trace_mode}' (chaos)");
     } else if online {
@@ -470,7 +526,7 @@ fn main() -> anyhow::Result<()> {
             "serving {requests} NT-operation requests from {clients} concurrent clients \
              on a {workers}-worker {backend} engine pool (online adaptive selection)"
         );
-        run_online(&backend, requests, clients, workers, mistrained)?;
+        run_online(&backend, requests, clients, workers, mistrained, metrics_prom, metrics_json)?;
     } else {
         println!(
             "serving {requests} NT-operation requests from {clients} concurrent clients \

@@ -6,8 +6,10 @@
 //! the sharded engine pool vs a single worker under concurrent clients,
 //! and the online adaptive probe scheduler (decision cost + probe
 //! overhead under stable vs drifting traffic), shared vs per-stripe
-//! A-panel packing on a tall-A shape, and end-to-end result reuse
-//! (repeat-heavy replay with the engine's output cache on vs off).
+//! A-panel packing on a tall-A shape, end-to-end result reuse
+//! (repeat-heavy replay with the engine's output cache on vs off), and
+//! request-path tracing overhead (the observability layer at
+//! sample_every=1 vs off on the same replay).
 //! Run: `cargo bench --bench perf_hotpath`.
 //!
 //! Besides the human report (`results/perf_hotpath.txt`), every row is
@@ -24,6 +26,7 @@ use mtnn::gemm::{blocked, cpu, pool, GemmShape};
 use mtnn::gpusim::{Simulator, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
+use mtnn::obs::{ObsConfig, ObsLayer};
 use mtnn::online::{LiveSelector, OnlineConfig, OnlineHub};
 use mtnn::runtime::Runtime;
 use mtnn::selector::cache::DecisionCache;
@@ -563,6 +566,75 @@ fn main() {
             .set("reuse_hits", hits)
             .set("reuse_coalesced", coalesced)
             .set("speedup_vs_reuse_off", reuse_on / reuse_off),
+    );
+
+    // 12. Request-path tracing overhead: the §11 replay shape (reuse off)
+    //     served once with observability off and once with full tracing on
+    //     (sample_every = 1: per-request span stamps through router →
+    //     queue → worker, per-stage latency histograms, windowed rates,
+    //     flight-recorder ring). The overhead row is the acceptance gate
+    //     for keeping tracing on in production: ≤ ~5% throughput cost.
+    let traced_replay = |traced: bool| -> f64 {
+        let engine = Engine::native_pool(EngineConfig {
+            workers: 4,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        })
+        .expect("native pool");
+        let obs = traced.then(|| std::sync::Arc::new(ObsLayer::new(ObsConfig::default())));
+        let router = Router::new(
+            Selector::train_default(&records),
+            engine.handle(),
+            RouterConfig {
+                obs: obs.clone(),
+                ..RouterConfig::default()
+            },
+        );
+        let trace = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::RepeatHeavy {
+                    distinct: 12,
+                    exponent: 1.2,
+                },
+                gpu: &GTX1080,
+                shapes: vec![GemmShape::new(192, 192, 192), GemmShape::new(256, 192, 256)],
+                rps: 1500.0,
+                duration: Duration::from_secs_f64(0.8),
+            }],
+            0xB0B,
+        );
+        let rep = replay(&router, &trace, &ReplayOptions::default());
+        rep.verify_conservation().expect("traced replay conserves");
+        if let Some(o) = &obs {
+            assert!(
+                o.snapshot().spans_recorded > 0,
+                "tracing on must actually record spans"
+            );
+        }
+        let thpt = rep.completed as f64 / rep.wall.as_secs_f64();
+        engine.shutdown();
+        thpt
+    };
+    let trace_off = traced_replay(false);
+    let trace_on = traced_replay(true);
+    let overhead_pct = (trace_off - trace_on) / trace_off * 100.0;
+    report.push_str(&format!(
+        "coordinator request tracing (repeat-heavy replay, native, 4 workers): \
+         off {trace_off:.0} req/s | on {trace_on:.0} req/s (sample_every=1) \
+         → overhead {overhead_pct:.1}%\n"
+    ));
+    rows.push(
+        Json::obj()
+            .set("name", "coordinator.obs.trace.off")
+            .set("req_per_s", trace_off)
+            .set("backend", "native"),
+    );
+    rows.push(
+        Json::obj()
+            .set("name", "coordinator.obs.trace.on")
+            .set("req_per_s", trace_on)
+            .set("backend", "native")
+            .set("overhead_pct", overhead_pct),
     );
 
     emit("perf_hotpath.txt", &report);

@@ -66,6 +66,7 @@ use super::metrics::BatchGauge;
 use super::reuse::{Begin, ReuseConfig, ReuseLayer, ReuseTicket};
 use crate::gemm::cpu::Matrix;
 use crate::gemm::native::NativeExecutor;
+use crate::obs::SpanHandle;
 use crate::gpusim::{GpuSpec, SimExecutor};
 use crate::runtime::Runtime;
 use std::collections::VecDeque;
@@ -93,6 +94,10 @@ pub struct EngineJob {
     /// worker, routing failure, or a teardown sweep — must resolve the
     /// ticket so coalesced waiters are released exactly once.
     pub reuse: Option<ReuseTicket>,
+    /// Present when the request is traced ([`crate::obs`]): the worker
+    /// stamps dequeue / batch / execute boundaries on it. `None` costs
+    /// nothing on the hot path.
+    pub span: Option<SpanHandle>,
 }
 
 enum Cmd {
@@ -443,22 +448,48 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
         block: bool,
+        span: Option<SpanHandle>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let (tx, rx) = mpsc::channel();
         let reuse = match self.shared.reuse.get() {
             Some(layer) => match layer.begin(&artifact, &inputs, &tx) {
-                Begin::Served | Begin::Coalesced => return Ok(rx),
-                Begin::Lead(t) => Some(t),
-                Begin::Bypass => None,
+                Begin::Served => {
+                    if let Some(cell) = &span {
+                        cell.stamp_reuse(crate::obs::span::REUSE_HIT);
+                    }
+                    return Ok(rx);
+                }
+                Begin::Coalesced => {
+                    if let Some(cell) = &span {
+                        cell.stamp_reuse(crate::obs::span::REUSE_COALESCED);
+                    }
+                    return Ok(rx);
+                }
+                Begin::Lead(t) => {
+                    if let Some(cell) = &span {
+                        cell.stamp_reuse(crate::obs::span::REUSE_LEAD);
+                    }
+                    Some(t)
+                }
+                Begin::Bypass => {
+                    if let Some(cell) = &span {
+                        cell.stamp_reuse(crate::obs::span::REUSE_NONE);
+                    }
+                    None
+                }
             },
             None => None,
         };
+        if let Some(cell) = &span {
+            cell.stamp_enqueue();
+        }
         self.route(
             Box::new(EngineJob {
                 artifact,
                 inputs,
                 respond: tx,
                 reuse,
+                span,
             }),
             block,
         )?;
@@ -472,7 +503,7 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        self.submit_with(artifact, inputs, true)
+        self.submit_with(artifact, inputs, true, None)
     }
 
     /// Fail-fast submission: hand off to any worker with queue room, and
@@ -482,7 +513,21 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        self.submit_with(artifact, inputs, false)
+        self.submit_with(artifact, inputs, false, None)
+    }
+
+    /// Submit with an optional trace span: the engine stamps reuse
+    /// classification, enqueue, and (in the worker) dequeue / batch /
+    /// execute boundaries on it. `block` selects the [`Self::submit`] /
+    /// [`Self::try_submit`] admission behavior.
+    pub fn submit_traced(
+        &self,
+        artifact: String,
+        inputs: Vec<Matrix>,
+        block: bool,
+        span: Option<SpanHandle>,
+    ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
+        self.submit_with(artifact, inputs, block, span)
     }
 
     /// Enable cross-request result reuse (output cache + single-flight
@@ -574,6 +619,9 @@ fn worker_loop(
         };
         match cmd {
             Cmd::Run(job) => {
+                if let Some(cell) = &job.span {
+                    cell.stamp_dequeue();
+                }
                 let mut batch = vec![job];
                 // Deferred same-artifact jobs join the batch first.
                 let mut i = 0;
@@ -582,6 +630,9 @@ fn worker_loop(
                         matches!(&stash[i], Cmd::Run(j) if j.artifact == batch[0].artifact);
                     if same {
                         if let Some(Cmd::Run(j)) = stash.remove(i) {
+                            if let Some(cell) = &j.span {
+                                cell.stamp_dequeue();
+                            }
                             batch.push(j);
                         }
                     } else {
@@ -600,6 +651,9 @@ fn worker_loop(
                         };
                         match got {
                             Some(Cmd::Run(j)) if j.artifact == batch[0].artifact => {
+                                if let Some(cell) = &j.span {
+                                    cell.stamp_dequeue();
+                                }
                                 batch.push(j)
                             }
                             Some(Cmd::Shutdown) => {
@@ -615,7 +669,12 @@ fn worker_loop(
                 g.batches.fetch_add(1, Ordering::Relaxed);
                 g.jobs.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 g.max.fetch_max(batch.len() as u64, Ordering::Relaxed);
+                let batch_len = batch.len();
                 for job in batch {
+                    if let Some(cell) = &job.span {
+                        cell.stamp_batch(batch_len, me);
+                        cell.stamp_exec_start();
+                    }
                     let refs: Vec<&Matrix> = job.inputs.iter().collect();
                     // Panic containment: a panicking backend fails THIS
                     // job — the caller gets an error (counted as `failed`
@@ -632,6 +691,9 @@ fn worker_loop(
                         ))
                     })
                     .map(|(outputs, exec_us)| ExecReply { outputs, exec_us });
+                    if let Some(cell) = &job.span {
+                        cell.stamp_exec_end();
+                    }
                     // A reuse leader resolves its single-flight group
                     // first: cache the result (if still fresh) and fan it
                     // out to coalesced waiters.

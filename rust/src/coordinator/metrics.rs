@@ -6,17 +6,19 @@
 //! where the worker pool is supposed to let them scale).
 
 use super::reuse::ReuseStats;
+use crate::obs::{ObsLayer, ObsSnapshot};
 use crate::selector::SelectionReason;
+use crate::util::json::Json;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Histogram buckets: 4 linear sub-buckets per power of two of
 /// microseconds (~19% relative resolution), 256 buckets covering the full
 /// `u64` µs range.
-const BUCKETS: usize = 256;
+pub const BUCKETS: usize = 256;
 
 /// Bucket for a latency in whole microseconds. Monotone in `us`.
-fn bucket_index(us: u64) -> usize {
+pub fn bucket_index(us: u64) -> usize {
     if us < 4 {
         return us as usize;
     }
@@ -26,7 +28,7 @@ fn bucket_index(us: u64) -> usize {
 }
 
 /// Inclusive lower bound of bucket `i`, in µs.
-fn bucket_lower(i: usize) -> u64 {
+pub fn bucket_lower(i: usize) -> u64 {
     if i < 4 {
         return i as u64;
     }
@@ -36,7 +38,7 @@ fn bucket_lower(i: usize) -> u64 {
 }
 
 /// Width of bucket `i`, in µs.
-fn bucket_width(i: usize) -> u64 {
+pub fn bucket_width(i: usize) -> u64 {
     if i < 4 {
         1
     } else {
@@ -47,7 +49,7 @@ fn bucket_width(i: usize) -> u64 {
 /// Estimate the `q`-th percentile from bucket counts: find the bucket
 /// holding the rank, interpolate linearly inside it, and clamp to the
 /// observed maximum (interpolation can overshoot in a sparse top bucket).
-fn percentile_of(counts: &[u64], total: u64, max_us: u64, q: f64) -> f64 {
+pub fn percentile_of(counts: &[u64], total: u64, max_us: u64, q: f64) -> f64 {
     let rank = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
     let mut cum = 0u64;
     for (i, &c) in counts.iter().enumerate() {
@@ -96,7 +98,7 @@ impl LatencyHistogram {
     }
 
     /// `(p50, p95, p99, mean)` in µs; all NaN when empty.
-    fn summary(&self) -> (f64, f64, f64, f64) {
+    pub fn summary(&self) -> (f64, f64, f64, f64) {
         let counts: Vec<u64> = self
             .counts
             .iter()
@@ -114,6 +116,39 @@ impl LatencyHistogram {
             percentile_of(&counts, total, max_us, 99.0),
             mean,
         )
+    }
+
+    /// Total recorded observations.
+    pub fn count(&self) -> u64 {
+        self.counts.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Largest observation, in whole µs (0 when empty).
+    pub fn max_observed_us(&self) -> u64 {
+        self.max_us.load(Ordering::Relaxed)
+    }
+
+    /// Sum of observations, in µs.
+    pub fn sum_us(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Cumulative histogram points for exposition: `(upper_bound_us,
+    /// count ≤ upper_bound)` for every bucket holding at least one
+    /// observation, ascending. Upper bounds are exclusive bucket edges
+    /// (`lower + width`), i.e. Prometheus `le` boundaries.
+    pub fn bucket_points(&self) -> Vec<(u64, u64)> {
+        let mut points = Vec::new();
+        let mut cum = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let n = c.load(Ordering::Relaxed);
+            if n == 0 {
+                continue;
+            }
+            cum += n;
+            points.push((bucket_lower(i).saturating_add(bucket_width(i)), cum));
+        }
+        points
     }
 }
 
@@ -190,6 +225,10 @@ pub struct CoordinatorMetrics {
     /// Cross-request reuse counters (`coordinator::reuse`), attached by
     /// `Router::new` when the engine has the layer enabled.
     reuse_stats: Mutex<Option<Arc<ReuseStats>>>,
+    /// Observability layer (`crate::obs`), attached by `Router::new`
+    /// when the router config carries one; embedded in snapshots for
+    /// the Prometheus/JSON exposition.
+    obs: Mutex<Option<Arc<ObsLayer>>>,
 }
 
 /// Point-in-time snapshot for reporting.
@@ -256,6 +295,19 @@ pub struct MetricsSnapshot {
     pub reuse_stale_drops: u64,
     /// Submissions that bypassed the layer via a deny prefix.
     pub reuse_bypasses: u64,
+    /// Coalesced followers whose single-flight leader failed: they
+    /// resolved as failures without executing. Subset-adjacent to
+    /// `failed` at the router level, distinct from ordinary failures so
+    /// shed accounting under chaos is attributable.
+    pub reuse_coalesced_failed: u64,
+    /// End-to-end latency histogram as cumulative `(upper_us, count)`
+    /// exposition points (non-empty buckets only).
+    pub latency_buckets: Vec<(u64, u64)>,
+    pub latency_count: u64,
+    pub latency_sum_us: f64,
+    /// Observability-layer view (tracing, windows, regret, flight
+    /// recorder); `None` when no layer is attached.
+    pub obs: Option<ObsSnapshot>,
 }
 
 impl CoordinatorMetrics {
@@ -293,6 +345,11 @@ impl CoordinatorMetrics {
     /// Wire the engine's reuse-layer counters into snapshots.
     pub fn attach_reuse(&self, stats: Arc<ReuseStats>) {
         *self.reuse_stats.lock().unwrap() = Some(stats);
+    }
+
+    /// Wire the observability layer into snapshots.
+    pub fn attach_obs(&self, obs: Arc<ObsLayer>) {
+        *self.obs.lock().unwrap() = Some(obs);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
@@ -339,6 +396,7 @@ impl CoordinatorMetrics {
             reuse_evictions,
             reuse_stale_drops,
             reuse_bypasses,
+            reuse_coalesced_failed,
         ) = reuse
             .as_ref()
             .map(|r| {
@@ -350,10 +408,12 @@ impl CoordinatorMetrics {
                     ld(&r.evictions),
                     ld(&r.stale_drops),
                     ld(&r.bypasses),
+                    ld(&r.coalesced_failed),
                 )
             })
             .unwrap_or_default();
         drop(reuse);
+        let obs = self.obs.lock().unwrap().as_ref().map(|o| o.snapshot());
         MetricsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             completed: self.completed.load(Ordering::Relaxed),
@@ -398,6 +458,11 @@ impl CoordinatorMetrics {
             reuse_evictions,
             reuse_stale_drops,
             reuse_bypasses,
+            reuse_coalesced_failed,
+            latency_buckets: self.latency.bucket_points(),
+            latency_count: self.latency.count(),
+            latency_sum_us: self.latency.sum_us(),
+            obs,
         }
     }
 }
@@ -471,7 +536,7 @@ impl MetricsSnapshot {
         if self.reuse_hits + self.reuse_coalesced + self.reuse_misses + self.reuse_bypasses > 0 {
             s.push_str(&format!(
                 " | reuse hits={} coalesced={} misses={} inserts={} evictions={} \
-                 stale_drops={} bypasses={}",
+                 stale_drops={} bypasses={} coalesced_failed={}",
                 self.reuse_hits,
                 self.reuse_coalesced,
                 self.reuse_misses,
@@ -479,9 +544,332 @@ impl MetricsSnapshot {
                 self.reuse_evictions,
                 self.reuse_stale_drops,
                 self.reuse_bypasses,
+                self.reuse_coalesced_failed,
             ));
         }
         s
+    }
+
+    /// Render the snapshot in Prometheus text exposition format 0.0.4.
+    /// Counters end in `_total`; the end-to-end latency histogram and
+    /// the per-stage per-algorithm attribution histograms emit
+    /// cumulative `_bucket{le=…}` series plus `_sum`/`_count`; windowed
+    /// rates, queue depths, and the regret gauge are gauges. This is
+    /// the body a future `/metrics` endpoint returns verbatim.
+    pub fn render_prometheus(&self) -> String {
+        fn counter_into(out: &mut String, name: &str, help: &str, v: u64) {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n"
+            ));
+        }
+        fn gauge_into(out: &mut String, name: &str, help: &str, v: f64) {
+            out.push_str(&format!(
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n"
+            ));
+        }
+        let mut out = String::with_capacity(4096);
+        counter_into(
+            &mut out,
+            "mtnn_requests_total",
+            "Requests entering the router.",
+            self.requests,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_completed_total",
+            "Requests that completed successfully.",
+            self.completed,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_failed_total",
+            "Requests that failed (non-admission errors).",
+            self.failed,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_shed_total",
+            "Requests shed by admission control.",
+            self.shed,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_busy_rejections_total",
+            "Submit-path EngineBusy rejections.",
+            self.busy_rejections,
+        );
+        out.push_str(
+            "# HELP mtnn_selected_total Algorithm selections by the router.\n\
+             # TYPE mtnn_selected_total counter\n",
+        );
+        out.push_str(&format!(
+            "mtnn_selected_total{{algo=\"nt\"}} {}\n",
+            self.selected_nt
+        ));
+        out.push_str(&format!(
+            "mtnn_selected_total{{algo=\"tnn\"}} {}\n",
+            self.selected_tnn
+        ));
+        counter_into(
+            &mut out,
+            "mtnn_memory_fallbacks_total",
+            "Selections forced to NT by the workspace memory cap.",
+            self.memory_fallbacks,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_forced_total",
+            "Selections dictated by RouterConfig::force.",
+            self.forced,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_shadow_probes_total",
+            "Shadow probes served (both algorithms executed).",
+            self.shadow_probes,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_shadow_mispredicts_total",
+            "Shadow probes whose measured winner contradicted the prediction.",
+            self.shadow_mispredicts,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_retrains_total",
+            "Background retrain attempts.",
+            self.retrains,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_promotions_total",
+            "Retrains promoted via hot-swap.",
+            self.promotions,
+        );
+        if self.reuse_hits + self.reuse_coalesced + self.reuse_misses + self.reuse_bypasses > 0 {
+            counter_into(
+                &mut out,
+                "mtnn_reuse_hits_total",
+                "Submissions answered from the output cache.",
+                self.reuse_hits,
+            );
+            counter_into(
+                &mut out,
+                "mtnn_reuse_coalesced_total",
+                "Submissions coalesced onto an in-flight execution.",
+                self.reuse_coalesced,
+            );
+            counter_into(
+                &mut out,
+                "mtnn_reuse_coalesced_failed_total",
+                "Coalesced followers resolved as failures by a failed leader.",
+                self.reuse_coalesced_failed,
+            );
+        }
+        // End-to-end latency histogram.
+        out.push_str(
+            "# HELP mtnn_request_latency_us End-to-end request latency in microseconds.\n\
+             # TYPE mtnn_request_latency_us histogram\n",
+        );
+        for &(upper, cum) in &self.latency_buckets {
+            out.push_str(&format!(
+                "mtnn_request_latency_us_bucket{{le=\"{upper}\"}} {cum}\n"
+            ));
+        }
+        out.push_str(&format!(
+            "mtnn_request_latency_us_bucket{{le=\"+Inf\"}} {}\n",
+            self.latency_count
+        ));
+        out.push_str(&format!(
+            "mtnn_request_latency_us_sum {}\nmtnn_request_latency_us_count {}\n",
+            self.latency_sum_us, self.latency_count
+        ));
+        // Worker queue depth gauges.
+        if !self.worker_depths.is_empty() {
+            out.push_str(
+                "# HELP mtnn_worker_queue_depth In-flight jobs per engine worker.\n\
+                 # TYPE mtnn_worker_queue_depth gauge\n",
+            );
+            for (i, d) in self.worker_depths.iter().enumerate() {
+                out.push_str(&format!(
+                    "mtnn_worker_queue_depth{{worker=\"{i}\"}} {d}\n"
+                ));
+            }
+        }
+        if let Some(obs) = &self.obs {
+            counter_into(
+                &mut out,
+                "mtnn_spans_recorded_total",
+                "Completed trace spans accepted by the span ring.",
+                obs.spans_recorded,
+            );
+            counter_into(
+                &mut out,
+                "mtnn_spans_dropped_total",
+                "Completed trace spans dropped (ring full).",
+                obs.spans_dropped,
+            );
+            counter_into(
+                &mut out,
+                "mtnn_flight_dumps_total",
+                "Flight-recorder dumps captured.",
+                obs.recorder_dumps,
+            );
+            // Per-stage per-algorithm attribution histograms.
+            out.push_str(
+                "# HELP mtnn_stage_latency_us Per-stage per-algorithm latency in microseconds.\n\
+                 # TYPE mtnn_stage_latency_us histogram\n",
+            );
+            for st in &self.stages_nonempty() {
+                let labels = format!("stage=\"{}\",algo=\"{}\"", st.stage, st.algo);
+                for &(upper, cum) in &st.buckets {
+                    out.push_str(&format!(
+                        "mtnn_stage_latency_us_bucket{{{labels},le=\"{upper}\"}} {cum}\n"
+                    ));
+                }
+                out.push_str(&format!(
+                    "mtnn_stage_latency_us_bucket{{{labels},le=\"+Inf\"}} {}\n",
+                    st.count
+                ));
+                out.push_str(&format!(
+                    "mtnn_stage_latency_us_sum{{{labels}}} {}\n",
+                    st.sum_us
+                ));
+                out.push_str(&format!(
+                    "mtnn_stage_latency_us_count{{{labels}}} {}\n",
+                    st.count
+                ));
+            }
+            // Windowed rates.
+            let w = &obs.window;
+            gauge_into(
+                &mut out,
+                "mtnn_window_req_per_s",
+                "Requests per second over the rate window.",
+                w.req_per_s,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_window_shed_rate",
+                "Shed fraction over the rate window.",
+                w.shed_rate,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_window_reuse_hit_rate",
+                "Reuse-hit fraction of completions over the rate window.",
+                w.reuse_hit_rate,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_window_probe_rate",
+                "Shadow-probe fraction over the rate window.",
+                w.probe_rate,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_window_mispredict_rate",
+                "Mispredict fraction of probes over the rate window.",
+                w.mispredict_rate,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_regret_mean_us",
+                "Mean shadow-probe regret (served minus winner latency) in microseconds.",
+                obs.regret_mean_us,
+            );
+            gauge_into(
+                &mut out,
+                "mtnn_regret_last_us",
+                "Most recent shadow-probe regret in microseconds.",
+                obs.regret_last_us as f64,
+            );
+        }
+        out
+    }
+
+    fn stages_nonempty(&self) -> Vec<crate::obs::StageStats> {
+        self.obs
+            .as_ref()
+            .map(|o| o.stages.iter().filter(|s| s.count > 0).cloned().collect())
+            .unwrap_or_default()
+    }
+
+    /// The same snapshot as a JSON object (see `util::json`). NaN
+    /// values (empty percentiles) serialize as null.
+    pub fn render_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("requests", self.requests)
+            .set("completed", self.completed)
+            .set("failed", self.failed)
+            .set("shed", self.shed)
+            .set("busy_rejections", self.busy_rejections)
+            .set("selected_nt", self.selected_nt)
+            .set("selected_tnn", self.selected_tnn)
+            .set("memory_fallbacks", self.memory_fallbacks)
+            .set("forced", self.forced)
+            .set("shadow_probes", self.shadow_probes)
+            .set("shadow_mispredicts", self.shadow_mispredicts)
+            .set("retrains", self.retrains)
+            .set("promotions", self.promotions)
+            .set("rollbacks", self.rollbacks)
+            .set("p50_us", self.p50_us)
+            .set("p95_us", self.p95_us)
+            .set("p99_us", self.p99_us)
+            .set("mean_us", self.mean_us)
+            .set("latency_count", self.latency_count)
+            .set(
+                "worker_depths",
+                Json::Arr(self.worker_depths.iter().map(|&d| Json::from(d)).collect()),
+            )
+            .set("reuse_hits", self.reuse_hits)
+            .set("reuse_coalesced", self.reuse_coalesced)
+            .set("reuse_coalesced_failed", self.reuse_coalesced_failed)
+            .set("reuse_misses", self.reuse_misses);
+        if let Some(obs) = &self.obs {
+            let w = &obs.window;
+            j = j.set(
+                "obs",
+                Json::obj()
+                    .set("spans_begun", obs.spans_begun)
+                    .set("spans_recorded", obs.spans_recorded)
+                    .set("spans_dropped", obs.spans_dropped)
+                    .set("recorder_triggered", obs.recorder_triggered)
+                    .set("recorder_dumps", obs.recorder_dumps)
+                    .set("regret_count", obs.regret_count)
+                    .set("regret_mean_us", obs.regret_mean_us)
+                    .set("regret_last_us", obs.regret_last_us)
+                    .set(
+                        "window",
+                        Json::obj()
+                            .set("window_secs", w.window_secs)
+                            .set("req_per_s", w.req_per_s)
+                            .set("shed_rate", w.shed_rate)
+                            .set("reuse_hit_rate", w.reuse_hit_rate)
+                            .set("probe_rate", w.probe_rate)
+                            .set("mispredict_rate", w.mispredict_rate),
+                    )
+                    .set(
+                        "stages",
+                        Json::Arr(
+                            self.stages_nonempty()
+                                .iter()
+                                .map(|st| {
+                                    Json::obj()
+                                        .set("stage", st.stage)
+                                        .set("algo", st.algo)
+                                        .set("count", st.count)
+                                        .set("p50_us", st.p50_us)
+                                        .set("p95_us", st.p95_us)
+                                        .set("p99_us", st.p99_us)
+                                        .set("mean_us", st.mean_us)
+                                })
+                                .collect(),
+                        ),
+                    ),
+            );
+        }
+        j
     }
 }
 
@@ -715,5 +1103,91 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.worker_depths, vec![2, 5]);
         assert!(s.render().contains("queues=[2, 5]"), "{}", s.render());
+    }
+
+    #[test]
+    fn coalesced_failed_snapshots_and_renders() {
+        let m = CoordinatorMetrics::default();
+        let stats = Arc::new(ReuseStats::default());
+        m.attach_reuse(Arc::clone(&stats));
+        stats.coalesced.fetch_add(4, Ordering::Relaxed);
+        stats.coalesced_failed.fetch_add(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        assert_eq!(s.reuse_coalesced_failed, 2);
+        assert!(
+            s.render().contains("coalesced_failed=2"),
+            "{}",
+            s.render()
+        );
+    }
+
+    #[test]
+    fn bucket_points_are_cumulative_at_bucket_edges() {
+        let h = LatencyHistogram::default();
+        h.record_us(3.0);
+        h.record_us(3.0);
+        h.record_us(100.0);
+        assert_eq!(h.count(), 3);
+        let pts = h.bucket_points();
+        assert_eq!(pts.len(), 2, "two non-empty buckets");
+        assert_eq!(pts[0], (4, 2), "value 3 lives in [3,4)");
+        assert_eq!(pts[1].1, 3, "last point is the total count");
+        assert!(pts[0].0 < pts[1].0, "upper bounds ascend");
+        assert!(bucket_lower(bucket_index(100)) < pts[1].0);
+    }
+
+    #[test]
+    fn prometheus_render_is_well_formed() {
+        let m = CoordinatorMetrics::default();
+        m.requests.fetch_add(7, Ordering::Relaxed);
+        m.completed.fetch_add(7, Ordering::Relaxed);
+        m.record_latency_us(120.0);
+        m.record_latency_us(140.0);
+        let text = m.snapshot().render_prometheus();
+        for needle in [
+            "# TYPE mtnn_requests_total counter\nmtnn_requests_total 7\n",
+            "# TYPE mtnn_request_latency_us histogram\n",
+            "mtnn_request_latency_us_bucket{le=\"+Inf\"} 2\n",
+            "mtnn_request_latency_us_count 2\n",
+            "mtnn_selected_total{algo=\"nt\"} 0\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+        // Every non-comment line is `name{labels} value` or `name value`.
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            let (name, value) = line.rsplit_once(' ').expect(line);
+            assert!(!name.is_empty() && value.parse::<f64>().is_ok(), "{line}");
+        }
+    }
+
+    #[test]
+    fn prometheus_render_includes_obs_sections_when_attached() {
+        let m = CoordinatorMetrics::default();
+        let obs = Arc::new(ObsLayer::new(crate::obs::ObsConfig::default()));
+        m.attach_obs(Arc::clone(&obs));
+        obs.mark_request();
+        obs.record_regret(150, 100);
+        let text = m.snapshot().render_prometheus();
+        for needle in [
+            "# TYPE mtnn_window_req_per_s gauge\n",
+            "# TYPE mtnn_regret_mean_us gauge\nmtnn_regret_mean_us 50\n",
+            "mtnn_spans_recorded_total 0\n",
+        ] {
+            assert!(text.contains(needle), "missing {needle:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn json_render_carries_core_and_obs_fields() {
+        let m = CoordinatorMetrics::default();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        let j = m.snapshot().render_json();
+        assert_eq!(j.get("requests").and_then(|v| v.as_usize()), Some(3));
+        assert!(j.get("obs").is_none(), "no obs layer attached");
+        m.attach_obs(Arc::new(ObsLayer::new(crate::obs::ObsConfig::default())));
+        let j = m.snapshot().render_json();
+        assert!(j.get("obs").is_some());
+        let rendered = j.to_pretty();
+        assert!(rendered.contains("\"window\""), "{rendered}");
     }
 }

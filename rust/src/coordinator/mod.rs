@@ -52,11 +52,32 @@
 //! it beats the incumbent on held-out data, atomically invalidating the
 //! decision cache on swap.
 //!
-//! Metrics count selections, fallbacks, forced overrides, busy
-//! rejections, per-worker queue depths, micro-batch sizes, the online
-//! loop (samples, probes split by scheduled-vs-bandit cause, the live
-//! probe interval, mispredict rate, retrains, promotions, rollbacks),
-//! and latency percentiles from a lock-free fixed-bucket histogram.
+//! **Observability** comes in two complementary layers:
+//!
+//! - *Lifetime counters* ([`CoordinatorMetrics`]): selections,
+//!   fallbacks, forced overrides, busy rejections, per-worker queue
+//!   depths, micro-batch sizes, reuse-layer classification (hits,
+//!   misses, coalesced, coalesced-failed, bypasses), the online loop
+//!   (samples, probes split by scheduled-vs-bandit cause, the live
+//!   probe interval, mispredict rate, retrains, promotions, rollbacks),
+//!   and latency percentiles from a lock-free fixed-bucket histogram.
+//!   A [`MetricsSnapshot`] renders for machines as well as humans:
+//!   `render_prometheus()` emits Prometheus text format 0.0.4
+//!   (counters, gauges, and cumulative `le`-bucketed histograms) and
+//!   `render_json()` a structured JSON document — a future network
+//!   edge's `/metrics` endpoint reduces to one render call.
+//! - *Per-request tracing* ([`crate::obs`], opt-in via
+//!   [`RouterConfig`]`::obs`): each sampled request carries a
+//!   [`crate::obs::span::TraceSpan`] stamped at every stage boundary —
+//!   entry, algorithm selection, enqueue, dequeue, execute start/end,
+//!   completion — threaded router → engine queue → worker and recorded
+//!   lock-free into per-algorithm per-stage histograms, windowed
+//!   (recent, not lifetime) rates, and a chaos-triggered flight
+//!   recorder that dumps the spans surrounding a fault. See
+//!   `obs/mod.rs` for the span lifecycle diagram. Tracing never
+//!   changes the meaning of the lifetime counters; with `obs: None`
+//!   (the default) the request path stays exactly as it was.
+//!
 //! Every request the router accepts resolves as exactly one of
 //! completed / failed / shed (admission-control rejection), so
 //! `completed + failed + shed == requests` at quiescence —

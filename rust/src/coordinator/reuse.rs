@@ -143,6 +143,11 @@ pub struct ReuseStats {
     pub stale_drops: AtomicU64,
     /// Submissions that bypassed the layer via a deny prefix.
     pub bypasses: AtomicU64,
+    /// Coalesced followers whose leader failed: they resolved as
+    /// failures without ever executing. A subset of `coalesced`,
+    /// counted so chaos-run shed accounting can tell a follower dragged
+    /// down by its leader from a request that failed on its own.
+    pub coalesced_failed: AtomicU64,
 }
 
 struct Entry {
@@ -339,6 +344,11 @@ impl ReuseLayer {
             }
         }
         drop(pending_map);
+        if result.is_err() {
+            self.stats
+                .coalesced_failed
+                .fetch_add(p.waiters.len() as u64, Ordering::Relaxed);
+        }
         for w in p.waiters {
             let _ = w.send(clone_result(result));
         }
@@ -491,6 +501,42 @@ mod tests {
         let err = r.recv().unwrap().unwrap_err();
         assert!(EngineBusy::is(&err), "busy classification survives fan-out");
         assert_eq!(layer.len(), 0, "errors are never cached");
+    }
+
+    #[test]
+    fn failed_leader_counts_its_coalesced_followers() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let inputs = vec![Matrix::random(2, 2, 8)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        let (w1, r1) = chan();
+        let (w2, r2) = chan();
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w1), Begin::Coalesced));
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w2), Begin::Coalesced));
+        layer.complete(&t, &Err(anyhow::anyhow!("injected backend fault")));
+        for rx in [r1, r2] {
+            assert!(rx.recv().unwrap().is_err());
+        }
+        let s = layer.stats();
+        assert_eq!(s.coalesced.load(Ordering::Relaxed), 2);
+        assert_eq!(
+            s.coalesced_failed.load(Ordering::Relaxed),
+            2,
+            "both followers were dragged down by the failed leader"
+        );
+        // A successful leader with followers leaves the counter alone.
+        let inputs2 = vec![Matrix::random(2, 2, 9)];
+        let (tx2, _rx2) = chan();
+        let Begin::Lead(t2) = layer.begin("nt_2x2x2", &inputs2, &tx2) else {
+            panic!("leader expected");
+        };
+        let (w3, r3) = chan();
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs2, &w3), Begin::Coalesced));
+        layer.complete(&t2, &Ok(reply(12)));
+        assert!(r3.recv().unwrap().is_ok());
+        assert_eq!(layer.stats().coalesced_failed.load(Ordering::Relaxed), 2);
     }
 
     #[test]

@@ -28,6 +28,7 @@ use crate::gemm::cpu::Matrix;
 use crate::gemm::xla::XlaBackend;
 use crate::gemm::{Algorithm, GemmShape};
 use crate::gpusim::{GpuSpec, Simulator};
+use crate::obs::{span as obs_span, ObsLayer, SpanHandle};
 use crate::online::{trainer, Accumulator, LiveSelector, OnlineConfig, OnlineHub};
 use crate::selector::cache::DecisionCache;
 use crate::selector::{SelectionReason, Selector, TrainedModel};
@@ -84,6 +85,11 @@ pub struct RouterConfig {
     pub admission: AdmissionControl,
     /// Online adaptive selection (`None` = the offline paper behavior).
     pub online: Option<OnlineConfig>,
+    /// Observability layer (`crate::obs`): request-path tracing, windowed
+    /// rates, and the flight recorder. `None` (the default) keeps the
+    /// serving path exactly as before; sharing the same `Arc` across
+    /// routers aggregates their traffic into one layer.
+    pub obs: Option<Arc<ObsLayer>>,
 }
 
 impl Default for RouterConfig {
@@ -93,6 +99,7 @@ impl Default for RouterConfig {
             cache_decisions: true,
             admission: AdmissionControl::default(),
             online: None,
+            obs: None,
         }
     }
 }
@@ -131,6 +138,9 @@ impl Router {
         metrics.attach_batch_gauges(engine.batch_gauges());
         if let Some(layer) = engine.reuse() {
             metrics.attach_reuse(layer.stats());
+        }
+        if let Some(obs) = &config.obs {
+            metrics.attach_obs(Arc::clone(obs));
         }
         let live = Arc::new(LiveSelector::new(selector));
         let cache = Arc::new(DecisionCache::default());
@@ -231,16 +241,16 @@ impl Router {
     }
 
     /// Submit through the configured admission policy, counting fail-fast
-    /// rejections.
+    /// rejections. A trace span (if this request drew one) rides along so
+    /// the engine can stamp its stage boundaries.
     fn submit(
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
+        span: Option<SpanHandle>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        let res = match self.config.admission {
-            AdmissionControl::Block => self.engine.submit(artifact, inputs),
-            AdmissionControl::RejectWhenBusy => self.engine.try_submit(artifact, inputs),
-        };
+        let block = matches!(self.config.admission, AdmissionControl::Block);
+        let res = self.engine.submit_traced(artifact, inputs, block, span);
         if res.as_ref().err().is_some_and(EngineBusy::is) {
             self.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
         }
@@ -255,8 +265,30 @@ impl Router {
     fn record_failure(&self, e: &anyhow::Error) {
         if EngineBusy::is(e) {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = &self.config.obs {
+                o.mark_shed();
+            }
         } else {
             self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// `TraceSpan` code for the chosen algorithm.
+    fn algo_code(algo: Algorithm) -> u8 {
+        match algo {
+            Algorithm::Nt => obs_span::ALGO_NT,
+            Algorithm::Tnn => obs_span::ALGO_TNN,
+            Algorithm::Nn => obs_span::ALGO_NN,
+        }
+    }
+
+    /// `TraceSpan` code for the selection reason.
+    fn reason_code(reason: SelectionReason) -> u8 {
+        match reason {
+            SelectionReason::PredictedNt => obs_span::REASON_PREDICTED_NT,
+            SelectionReason::PredictedTnn => obs_span::REASON_PREDICTED_TNN,
+            SelectionReason::MemoryFallback => obs_span::REASON_MEMORY_FALLBACK,
+            SelectionReason::Forced => obs_span::REASON_FORCED,
         }
     }
 
@@ -288,7 +320,17 @@ impl Router {
     pub fn serve(&self, req: GemmRequest) -> anyhow::Result<GemmResponse> {
         let t0 = Instant::now();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        // Tracing: draw a span if this request falls on the sampling
+        // lattice. Entry and selection are stamped here; the engine and
+        // worker stamp the rest through the shared cell.
+        let obs = self.config.obs.as_deref();
+        let span = obs.and_then(|o| o.begin_span());
+        if let Some(o) = obs {
+            o.mark_request();
+        }
+        let t_entry = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
         let (algo, reason) = self.decide(&req);
+        let t_select = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
         self.metrics.record_selection(algo, reason);
         let predicted = Router::predicted_label(reason);
         let artifact = XlaBackend::artifact_name(req.shape, algo);
@@ -314,7 +356,7 @@ impl Router {
 
         let GemmShape { m, n, k } = req.shape;
         let gpu = req.gpu;
-        let submitted = self.submit(artifact.clone(), vec![req.a, req.b]);
+        let submitted = self.submit(artifact.clone(), vec![req.a, req.b], span.clone());
         let shadow = match (&submitted, shadow_inputs) {
             (Ok(_), Some((shadow_artifact, a, b))) => {
                 self.engine.try_submit(shadow_artifact, vec![a, b]).ok()
@@ -334,6 +376,22 @@ impl Router {
                 let latency = t0.elapsed();
                 self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                 self.metrics.record_latency_us(latency.as_secs_f64() * 1e6);
+                if let Some(o) = obs {
+                    o.mark_completed();
+                    // Flatten the stamped cell into an immutable span and
+                    // hand it to the layer (stage attribution, span ring,
+                    // flight recorder).
+                    if let Some(cell) = &span {
+                        o.complete(cell.to_span(
+                            t_entry,
+                            t_select,
+                            cell.now_us(),
+                            Router::algo_code(algo),
+                            Router::reason_code(reason),
+                            obs_span::OUTCOME_COMPLETED,
+                        ));
+                    }
+                }
                 if let Some(rt) = &self.online {
                     let shadow_us = shadow.and_then(|rx| {
                         rx.recv().ok().and_then(|r| r.ok()).map(|r| r.exec_us)
@@ -344,8 +402,22 @@ impl Router {
                                 Algorithm::Nt => (reply.exec_us, other_us),
                                 _ => (other_us, reply.exec_us),
                             };
-                            rt.hub
+                            let mispredicted = rt
+                                .hub
                                 .record_probe(gpu, m, n, k, predicted, lat_nt, lat_tnn);
+                            if let Some(o) = obs {
+                                o.mark_probe();
+                                if mispredicted {
+                                    o.mark_mispredict();
+                                }
+                                // Regret: what the request cost versus the
+                                // measured winner — the probe already paid
+                                // for the counterfactual.
+                                o.record_regret(
+                                    reply.exec_us.round() as u64,
+                                    lat_nt.min(lat_tnn).round() as u64,
+                                );
+                            }
                         }
                         None => rt
                             .hub
@@ -362,6 +434,21 @@ impl Router {
             }
             Err(e) => {
                 self.record_failure(&e);
+                if let (Some(o), Some(cell)) = (obs, &span) {
+                    let outcome = if EngineBusy::is(&e) {
+                        obs_span::OUTCOME_SHED
+                    } else {
+                        obs_span::OUTCOME_FAILED
+                    };
+                    o.complete(cell.to_span(
+                        t_entry,
+                        t_select,
+                        cell.now_us(),
+                        Router::algo_code(algo),
+                        Router::reason_code(reason),
+                        outcome,
+                    ));
+                }
                 Err(e)
             }
         }
@@ -392,12 +479,18 @@ impl Router {
         let mut pending: Vec<Pending> = Vec::with_capacity(reqs.len());
         for req in reqs {
             self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+            // Batch traffic is window-counted but never span-traced: the
+            // batch path interleaves submits and receives, so per-request
+            // stage attribution belongs to the synchronous path.
+            if let Some(o) = &self.config.obs {
+                o.mark_request();
+            }
             let (algo, reason) = self.decide(&req);
             self.metrics.record_selection(algo, reason);
             let artifact = XlaBackend::artifact_name(req.shape, algo);
             let t0 = Instant::now();
             let (gpu, shape) = (req.gpu, req.shape);
-            match self.submit(artifact.clone(), vec![req.a, req.b]) {
+            match self.submit(artifact.clone(), vec![req.a, req.b], None) {
                 Ok(rx) => pending.push(Pending::Wait {
                     algo,
                     reason,
@@ -443,6 +536,9 @@ impl Router {
                             self.metrics.completed.fetch_add(1, Ordering::Relaxed);
                             self.metrics
                                 .record_latency_us(latency.as_secs_f64() * 1e6);
+                            if let Some(o) = &self.config.obs {
+                                o.mark_completed();
+                            }
                             if let Some(rt) = &self.online {
                                 rt.hub.record_execution(
                                     gpu,

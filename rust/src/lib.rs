@@ -33,6 +33,7 @@ pub mod fcn;
 pub mod gemm;
 pub mod gpusim;
 pub mod ml;
+pub mod obs;
 pub mod online;
 pub mod runtime;
 pub mod selector;

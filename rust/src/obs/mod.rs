@@ -1,0 +1,570 @@
+//! Observability layer: request-path tracing, windowed rates, and a
+//! chaos-triggered flight recorder.
+//!
+//! The serving core (`coordinator/`) answers *whether* requests
+//! complete and how long they took end to end; this module answers
+//! *where the time went*, *what the current rates are*, and *what
+//! happened just before* an incident. It is deliberately decoupled:
+//! the router and engine carry an `Option<SpanHandle>` and call cheap
+//! atomic stamps; everything else (histograms, windows, triggers,
+//! exposition) lives here.
+//!
+//! # Span lifecycle
+//!
+//! One `TraceSpan` per sampled request, stamped at every stage
+//! boundary with µs-since-epoch monotonic timestamps:
+//!
+//! ```text
+//!  Router::serve                Engine                    worker thread
+//!  ─────────────                ──────                    ─────────────
+//!  t_entry ──► decide()
+//!  t_select ─► submit_traced ─► reuse classify (t_reuse)
+//!                               ├─ hit/coalesced ··· (skips queue)
+//!                               └─ lead/bypass ──► enqueue (t_enqueue)
+//!                                                        │  queue wait
+//!                                                        ▼
+//!                                                  dequeue (t_dequeue)
+//!                                                  batch join (t_batch)
+//!                                                  execute (t_exec_start
+//!                                                           … t_exec_end)
+//!  t_complete ◄── response channel ◄─────────────── respond
+//! ```
+//!
+//! At completion the router flattens the shared `SpanCell` into an
+//! immutable `TraceSpan` (algo + selection reason + reuse class +
+//! outcome + batch size + worker id) and hands it to
+//! [`ObsLayer::complete`], which:
+//!
+//! 1. records per-stage (`queue_wait`, `execute`, `total`) per-algorithm
+//!    (NT / TNN) latency histograms — the attribution the paper's
+//!    measurement methodology demands,
+//! 2. pushes the span into a lock-free Vyukov ring
+//!    ([`span::SpanRing`], drop-not-block, same discipline as
+//!    `online::SampleRing`) for external drain,
+//! 3. feeds the flight recorder's recent ring and evaluates dump
+//!    triggers (failure, shed, p99-over-threshold, mispredict burst).
+//!
+//! Sampling: `ObsConfig::sample_every = n` traces every n-th request
+//! (1 = all, 0 = tracing off). Un-sampled requests pay one relaxed
+//! `fetch_add`; windowed *rate* marks are recorded for every request
+//! regardless of sampling so rates stay exact.
+//!
+//! # Windowed rates
+//!
+//! [`window::RateWindows`] keeps rotating time buckets over the serve
+//! counters and reports last-N-seconds req/s, shed rate, reuse-hit
+//! rate, probe rate, and mispredict rate — the live view that lifetime
+//! ratios hide across regime changes.
+//!
+//! # Regret gauge
+//!
+//! Shadow probes already measure both algorithms; the layer folds the
+//! counterfactual in as *regret* = served latency − measured winner
+//! latency, exposed as a lifetime mean + last-value gauge.
+//!
+//! # Exposition
+//!
+//! `coordinator::MetricsSnapshot` embeds an [`ObsSnapshot`] and renders
+//! it two ways (see `metrics.rs`):
+//!
+//! - `render_prometheus()` — text format 0.0.4. Counters end in
+//!   `_total`; stage histograms emit cumulative
+//!   `mtnn_stage_latency_us_bucket{stage="…",algo="…",le="…"}` series
+//!   plus `_sum`/`_count`; windowed rates and regret are gauges.
+//! - `render_json()` — the same snapshot as a JSON object for
+//!   programmatic consumers.
+//!
+//! Both are plain string renders over an immutable snapshot, so the
+//! ROADMAP item 1 `/metrics` endpoint reduces to one call.
+
+pub mod recorder;
+pub mod span;
+pub mod window;
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::coordinator::metrics::LatencyHistogram;
+
+pub use recorder::{FlightDump, FlightRecorder};
+pub use span::{SpanCell, SpanHandle, SpanRing, TraceSpan};
+pub use window::{RateWindows, WindowKind, WindowRates};
+
+/// Stage axis of the per-stage histograms.
+pub const STAGE_NAMES: [&str; 3] = ["queue_wait", "execute", "total"];
+const STAGE_QUEUE: usize = 0;
+const STAGE_EXECUTE: usize = 1;
+const STAGE_TOTAL: usize = 2;
+
+/// Algorithm axis of the per-stage histograms.
+pub const ALGO_NAMES: [&str; 2] = ["nt", "tnn"];
+
+fn algo_slot(algo: u8) -> Option<usize> {
+    match algo {
+        span::ALGO_NT => Some(0),
+        span::ALGO_TNN => Some(1),
+        _ => None,
+    }
+}
+
+/// Tracing/recording configuration. The default is "trace everything,
+/// dump on failure or shed, never on latency" — a clean steady trace
+/// produces zero dumps.
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Trace every n-th request. 1 = every request, 0 = tracing off
+    /// (windowed rates and regret still work).
+    pub sample_every: u64,
+    /// Capacity of the lock-free completed-span ring.
+    pub span_ring_capacity: usize,
+    /// How many recent spans a flight dump captures.
+    pub recorder_capacity: usize,
+    /// Maximum dumps retained; later triggers are suppressed.
+    pub max_dumps: usize,
+    /// Minimum µs between dump captures.
+    pub dump_cooldown_us: u64,
+    /// Capture a dump when a sampled request fails.
+    pub trigger_on_failure: bool,
+    /// Capture a dump when a sampled request is shed.
+    pub trigger_on_shed: bool,
+    /// Capture a dump when either algorithm's total-latency p99 exceeds
+    /// this. `u64::MAX` disables.
+    pub p99_threshold_us: u64,
+    /// Samples required before the p99 trigger can fire.
+    pub p99_min_samples: u64,
+    /// Capture a dump when the current window holds at least this many
+    /// mispredicts. 0 disables.
+    pub mispredict_burst: u64,
+    /// Width of one rate-window bucket.
+    pub window_bucket_ms: u64,
+    /// Number of rate-window buckets (window = buckets × bucket_ms).
+    pub window_buckets: usize,
+}
+
+impl Default for ObsConfig {
+    fn default() -> ObsConfig {
+        ObsConfig {
+            sample_every: 1,
+            span_ring_capacity: 4096,
+            recorder_capacity: 256,
+            max_dumps: 8,
+            dump_cooldown_us: 100_000,
+            trigger_on_failure: true,
+            trigger_on_shed: true,
+            p99_threshold_us: u64::MAX,
+            p99_min_samples: 32,
+            mispredict_burst: 0,
+            window_bucket_ms: 1000,
+            window_buckets: 8,
+        }
+    }
+}
+
+/// Frozen per-stage/per-algo histogram view used by the exposition
+/// renderers.
+#[derive(Debug, Clone)]
+pub struct StageStats {
+    pub stage: &'static str,
+    pub algo: &'static str,
+    pub count: u64,
+    pub sum_us: f64,
+    pub p50_us: f64,
+    pub p95_us: f64,
+    pub p99_us: f64,
+    pub mean_us: f64,
+    /// Cumulative (upper_bound_us, count ≤ upper_bound) points for
+    /// non-empty buckets, ascending.
+    pub buckets: Vec<(u64, u64)>,
+}
+
+/// Point-in-time view of the observability layer, embedded in
+/// `coordinator::MetricsSnapshot`.
+#[derive(Debug, Clone)]
+pub struct ObsSnapshot {
+    /// Spans started by `begin_span` (sampled requests).
+    pub spans_begun: u64,
+    /// Completed spans accepted by the span ring.
+    pub spans_recorded: u64,
+    /// Completed spans dropped because the ring was full.
+    pub spans_dropped: u64,
+    /// Per-stage per-algorithm latency attribution (6 entries).
+    pub stages: Vec<StageStats>,
+    /// Last-N-seconds rates.
+    pub window: WindowRates,
+    pub regret_count: u64,
+    pub regret_mean_us: f64,
+    pub regret_last_us: u64,
+    pub recorder_triggered: u64,
+    pub recorder_dumps: u64,
+}
+
+/// The observability layer. One per router; shared with
+/// `CoordinatorMetrics` via `Arc` for snapshot embedding.
+pub struct ObsLayer {
+    config: ObsConfig,
+    epoch: Instant,
+    tick: AtomicU64,
+    begun: AtomicU64,
+    spans: SpanRing,
+    recorder: FlightRecorder,
+    /// `[stage][algo]`: stages queue_wait/execute/total × NT/TNN.
+    stage_hist: [[LatencyHistogram; 2]; 3],
+    windows: RateWindows,
+    regret_sum_us: AtomicU64,
+    regret_count: AtomicU64,
+    regret_last_us: AtomicU64,
+}
+
+impl fmt::Debug for ObsLayer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ObsLayer")
+            .field("config", &self.config)
+            .field("spans_begun", &self.begun.load(Ordering::Relaxed))
+            .finish_non_exhaustive()
+    }
+}
+
+impl ObsLayer {
+    pub fn new(config: ObsConfig) -> ObsLayer {
+        ObsLayer {
+            epoch: Instant::now(),
+            tick: AtomicU64::new(0),
+            begun: AtomicU64::new(0),
+            spans: SpanRing::new(config.span_ring_capacity),
+            recorder: FlightRecorder::new(
+                config.recorder_capacity,
+                config.max_dumps,
+                config.dump_cooldown_us,
+            ),
+            stage_hist: Default::default(),
+            windows: RateWindows::new(config.window_bucket_ms, config.window_buckets),
+            regret_sum_us: AtomicU64::new(0),
+            regret_count: AtomicU64::new(0),
+            regret_last_us: AtomicU64::new(0),
+            config,
+        }
+    }
+
+    pub fn config(&self) -> &ObsConfig {
+        &self.config
+    }
+
+    /// µs since the layer epoch, floored at 1 so 0 keeps meaning
+    /// "never stamped".
+    pub fn now_us(&self) -> u64 {
+        (self.epoch.elapsed().as_micros() as u64).max(1)
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.epoch.elapsed().as_millis() as u64
+    }
+
+    /// Start a span for this request if it falls on the sampling
+    /// lattice. The returned handle is stamped by the engine/worker and
+    /// flattened by the router at completion.
+    pub fn begin_span(&self) -> Option<SpanHandle> {
+        let n = self.config.sample_every;
+        if n == 0 {
+            return None;
+        }
+        let t = self.tick.fetch_add(1, Ordering::Relaxed);
+        if t % n != 0 {
+            return None;
+        }
+        self.begun.fetch_add(1, Ordering::Relaxed);
+        Some(std::sync::Arc::new(SpanCell::new(self.epoch)))
+    }
+
+    /// Accept a flattened span: attribute stage latencies, retain it
+    /// for drains and flight dumps, and evaluate dump triggers.
+    pub fn complete(&self, s: TraceSpan) {
+        if s.outcome == span::OUTCOME_COMPLETED {
+            if let Some(a) = algo_slot(s.algo) {
+                if let Some(q) = s.queue_wait_us() {
+                    self.stage_hist[STAGE_QUEUE][a].record_us(q as f64);
+                }
+                if let Some(e) = s.execute_us() {
+                    self.stage_hist[STAGE_EXECUTE][a].record_us(e as f64);
+                }
+                if let Some(t) = s.total_us() {
+                    self.stage_hist[STAGE_TOTAL][a].record_us(t as f64);
+                }
+            }
+            if s.reuse == span::REUSE_HIT {
+                self.windows.record_at(WindowKind::ReuseHit, self.now_ms());
+            }
+        }
+        self.spans.push(&s);
+        self.recorder.observe(s);
+        let now = self.now_us();
+        match s.outcome {
+            span::OUTCOME_FAILED if self.config.trigger_on_failure => {
+                self.recorder.trigger("failure", now);
+            }
+            span::OUTCOME_SHED if self.config.trigger_on_shed => {
+                self.recorder.trigger("shed", now);
+            }
+            _ => {}
+        }
+        if self.config.p99_threshold_us != u64::MAX {
+            self.check_p99(now);
+        }
+    }
+
+    fn check_p99(&self, now_us: u64) {
+        for a in 0..2 {
+            let h = &self.stage_hist[STAGE_TOTAL][a];
+            if h.count() < self.config.p99_min_samples {
+                continue;
+            }
+            let (_, _, p99, _) = h.summary();
+            if p99.is_finite() && p99 as u64 > self.config.p99_threshold_us {
+                self.recorder.trigger("p99_over_threshold", now_us);
+                return;
+            }
+        }
+    }
+
+    /// Windowed-rate marks — called for *every* request, sampled or
+    /// not, so rates stay exact regardless of `sample_every`.
+    pub fn mark_request(&self) {
+        self.windows.record_at(WindowKind::Requests, self.now_ms());
+    }
+
+    pub fn mark_completed(&self) {
+        self.windows.record_at(WindowKind::Completed, self.now_ms());
+    }
+
+    pub fn mark_shed(&self) {
+        self.windows.record_at(WindowKind::Shed, self.now_ms());
+    }
+
+    pub fn mark_probe(&self) {
+        self.windows.record_at(WindowKind::Probe, self.now_ms());
+    }
+
+    /// Mark a shadow-probe mispredict; fires the burst trigger when the
+    /// current window accumulates `mispredict_burst` of them.
+    pub fn mark_mispredict(&self) {
+        let now_ms = self.now_ms();
+        self.windows.record_at(WindowKind::Mispredict, now_ms);
+        let burst = self.config.mispredict_burst;
+        if burst > 0 && self.windows.rates_at(now_ms).mispredicts >= burst {
+            self.recorder.trigger("mispredict_burst", self.now_us());
+        }
+    }
+
+    /// Fold in one shadow-probe counterfactual: `served_us` is what the
+    /// request actually took, `winner_us` the measured faster
+    /// algorithm. Regret is their non-negative difference.
+    pub fn record_regret(&self, served_us: u64, winner_us: u64) {
+        let regret = served_us.saturating_sub(winner_us);
+        self.regret_sum_us.fetch_add(regret, Ordering::Relaxed);
+        self.regret_count.fetch_add(1, Ordering::Relaxed);
+        self.regret_last_us.store(regret, Ordering::Relaxed);
+    }
+
+    /// Drain all completed spans currently in the ring (consuming).
+    pub fn drain_spans(&self) -> Vec<TraceSpan> {
+        self.spans.drain()
+    }
+
+    pub fn recorder(&self) -> &FlightRecorder {
+        &self.recorder
+    }
+
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        self.recorder.dumps()
+    }
+
+    pub fn snapshot(&self) -> ObsSnapshot {
+        let mut stages = Vec::with_capacity(6);
+        for (si, stage) in STAGE_NAMES.iter().enumerate() {
+            for (ai, algo) in ALGO_NAMES.iter().enumerate() {
+                let h = &self.stage_hist[si][ai];
+                let (p50, p95, p99, mean) = h.summary();
+                stages.push(StageStats {
+                    stage,
+                    algo,
+                    count: h.count(),
+                    sum_us: h.sum_us(),
+                    p50_us: p50,
+                    p95_us: p95,
+                    p99_us: p99,
+                    mean_us: mean,
+                    buckets: h.bucket_points(),
+                });
+            }
+        }
+        let rc = self.regret_count.load(Ordering::Relaxed);
+        let rs = self.regret_sum_us.load(Ordering::Relaxed);
+        ObsSnapshot {
+            spans_begun: self.begun.load(Ordering::Relaxed),
+            spans_recorded: self.spans.pushed(),
+            spans_dropped: self.spans.dropped(),
+            stages,
+            window: self.windows.rates_at(self.now_ms()),
+            regret_count: rc,
+            regret_mean_us: if rc == 0 { 0.0 } else { rs as f64 / rc as f64 },
+            regret_last_us: self.regret_last_us.load(Ordering::Relaxed),
+            recorder_triggered: self.recorder.triggered(),
+            recorder_dumps: self.recorder.dump_count() as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{
+        ALGO_NT, ALGO_TNN, OUTCOME_COMPLETED, OUTCOME_FAILED, REASON_PREDICTED_NT, REUSE_NONE,
+    };
+
+    fn completed_span(algo: u8, t_entry: u64, exec_us: u64) -> TraceSpan {
+        TraceSpan {
+            t_entry,
+            t_select: t_entry + 1,
+            t_reuse: t_entry + 2,
+            t_enqueue: t_entry + 3,
+            t_dequeue: t_entry + 8,
+            t_batch: t_entry + 9,
+            t_exec_start: t_entry + 10,
+            t_exec_end: t_entry + 10 + exec_us,
+            t_complete: t_entry + 12 + exec_us,
+            algo,
+            reason: REASON_PREDICTED_NT,
+            reuse: REUSE_NONE,
+            outcome: OUTCOME_COMPLETED,
+            batch_size: 1,
+            worker: 0,
+        }
+    }
+
+    #[test]
+    fn sampling_lattice_respects_sample_every() {
+        let layer = ObsLayer::new(ObsConfig {
+            sample_every: 3,
+            ..ObsConfig::default()
+        });
+        let got: Vec<bool> = (0..9).map(|_| layer.begin_span().is_some()).collect();
+        assert_eq!(
+            got,
+            vec![true, false, false, true, false, false, true, false, false]
+        );
+        assert_eq!(layer.snapshot().spans_begun, 3);
+    }
+
+    #[test]
+    fn sample_every_zero_disables_tracing() {
+        let layer = ObsLayer::new(ObsConfig {
+            sample_every: 0,
+            ..ObsConfig::default()
+        });
+        assert!(layer.begin_span().is_none());
+        layer.mark_request(); // rates still work
+        assert_eq!(layer.snapshot().window.requests, 1);
+    }
+
+    #[test]
+    fn complete_attributes_stages_per_algorithm() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        layer.complete(completed_span(ALGO_NT, 100, 50));
+        layer.complete(completed_span(ALGO_TNN, 300, 80));
+        let snap = layer.snapshot();
+        let find = |stage: &str, algo: &str| {
+            snap.stages
+                .iter()
+                .find(|s| s.stage == stage && s.algo == algo)
+                .unwrap()
+                .clone()
+        };
+        assert_eq!(find("queue_wait", "nt").count, 1);
+        assert_eq!(find("execute", "nt").count, 1);
+        assert_eq!(find("total", "nt").count, 1);
+        assert_eq!(find("execute", "tnn").count, 1);
+        // queue wait is 5 µs for both; execute 50 vs 80.
+        assert!(find("execute", "nt").mean_us >= 50.0);
+        assert!(find("execute", "tnn").mean_us >= 80.0);
+        assert_eq!(snap.spans_recorded, 2);
+        assert!(!find("execute", "nt").buckets.is_empty());
+    }
+
+    #[test]
+    fn failure_span_fires_a_dump_with_context() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        layer.complete(completed_span(ALGO_NT, 100, 10));
+        let mut bad = completed_span(ALGO_NT, 200, 10);
+        bad.outcome = OUTCOME_FAILED;
+        layer.complete(bad);
+        let dumps = layer.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].trigger, "failure");
+        assert_eq!(dumps[0].spans.len(), 2, "preceding span is in the dump");
+        assert_eq!(dumps[0].spans[1].outcome, OUTCOME_FAILED);
+    }
+
+    #[test]
+    fn clean_completed_spans_fire_no_dumps() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        for i in 0..200 {
+            layer.complete(completed_span(ALGO_NT, i * 100, 10));
+        }
+        assert_eq!(layer.dumps().len(), 0);
+        assert_eq!(layer.snapshot().recorder_triggered, 0);
+    }
+
+    #[test]
+    fn p99_trigger_needs_min_samples_then_fires() {
+        let layer = ObsLayer::new(ObsConfig {
+            p99_threshold_us: 1_000,
+            p99_min_samples: 4,
+            ..ObsConfig::default()
+        });
+        // Three slow spans: below min samples, no dump.
+        for i in 0..3 {
+            layer.complete(completed_span(ALGO_NT, i * 100_000, 50_000));
+        }
+        assert_eq!(layer.dumps().len(), 0);
+        layer.complete(completed_span(ALGO_NT, 400_000, 50_000));
+        assert_eq!(layer.dumps().len(), 1);
+        assert_eq!(layer.dumps()[0].trigger, "p99_over_threshold");
+    }
+
+    #[test]
+    fn mispredict_burst_trigger() {
+        let layer = ObsLayer::new(ObsConfig {
+            mispredict_burst: 3,
+            ..ObsConfig::default()
+        });
+        layer.mark_mispredict();
+        layer.mark_mispredict();
+        assert_eq!(layer.dumps().len(), 0);
+        layer.mark_mispredict();
+        assert_eq!(layer.dumps().len(), 1);
+        assert_eq!(layer.dumps()[0].trigger, "mispredict_burst");
+    }
+
+    #[test]
+    fn regret_gauge_accumulates() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        layer.record_regret(150, 100); // served 150, winner 100 → 50
+        layer.record_regret(90, 100); // served the winner → 0
+        let snap = layer.snapshot();
+        assert_eq!(snap.regret_count, 2);
+        assert!((snap.regret_mean_us - 25.0).abs() < 1e-9);
+        assert_eq!(snap.regret_last_us, 0);
+    }
+
+    #[test]
+    fn drain_returns_completed_spans_in_order() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        layer.complete(completed_span(ALGO_NT, 1, 10));
+        layer.complete(completed_span(ALGO_TNN, 2, 10));
+        let spans = layer.drain_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].algo, ALGO_NT);
+        assert_eq!(spans[1].algo, ALGO_TNN);
+        assert!(layer.drain_spans().is_empty());
+    }
+}

@@ -1,0 +1,220 @@
+//! Flight recorder: a bounded ring of the most recent *completed*
+//! spans plus trigger-based dump capture. When a trigger condition
+//! fires (request failure, load shed, p99 over threshold, mispredict
+//! burst), the recorder freezes a copy of the ring — the spans that led
+//! up to the event — into a `FlightDump` that can be rendered to JSON
+//! and inspected after the fact. This is the "what happened just
+//! before" instrument the lifetime counters cannot provide.
+//!
+//! Dumps are bounded (`max_dumps`) and rate-limited (`cooldown_us`
+//! between captures) so a failure storm produces a handful of useful
+//! snapshots instead of thousands of identical ones.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::span::TraceSpan;
+use crate::util::json::Json;
+
+/// One captured dump: the trigger that fired, when it fired (µs since
+/// the obs epoch), and the ring contents at that moment (oldest first;
+/// the last span is the one that tripped the trigger).
+#[derive(Debug, Clone)]
+pub struct FlightDump {
+    pub trigger: String,
+    pub at_us: u64,
+    pub spans: Vec<TraceSpan>,
+}
+
+impl FlightDump {
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("trigger", self.trigger.as_str())
+            .set("at_us", self.at_us)
+            .set("span_count", self.spans.len())
+            .set(
+                "spans",
+                Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()),
+            )
+    }
+}
+
+/// Bounded recent-span ring + bounded triggered-dump store.
+///
+/// Spans are ~100 bytes and `Copy`; the ring lives behind a plain
+/// mutex because `observe` is called only for *sampled* spans at
+/// completion time (never inside the engine hot path), and a dump is a
+/// memcpy of at most `capacity` spans.
+pub struct FlightRecorder {
+    capacity: usize,
+    max_dumps: usize,
+    cooldown_us: u64,
+    recent: Mutex<VecDeque<TraceSpan>>,
+    dumps: Mutex<Vec<FlightDump>>,
+    /// µs timestamp of the last capture (cooldown clock); 0 = never.
+    last_dump_us: AtomicU64,
+    /// Triggers that fired, including ones suppressed by cooldown or
+    /// the dump cap — observability for the observability layer.
+    triggered: AtomicU64,
+    captured: AtomicU64,
+}
+
+impl FlightRecorder {
+    pub fn new(capacity: usize, max_dumps: usize, cooldown_us: u64) -> FlightRecorder {
+        let capacity = capacity.max(8);
+        FlightRecorder {
+            capacity,
+            max_dumps: max_dumps.max(1),
+            cooldown_us,
+            recent: Mutex::new(VecDeque::with_capacity(capacity)),
+            dumps: Mutex::new(Vec::new()),
+            last_dump_us: AtomicU64::new(0),
+            triggered: AtomicU64::new(0),
+            captured: AtomicU64::new(0),
+        }
+    }
+
+    /// Append a completed span to the recent ring, evicting the oldest
+    /// when full.
+    pub fn observe(&self, span: TraceSpan) {
+        let mut ring = self.recent.lock().unwrap();
+        if ring.len() == self.capacity {
+            ring.pop_front();
+        }
+        ring.push_back(span);
+    }
+
+    /// Fire a trigger at `now_us`. Captures a dump of the current ring
+    /// unless within the cooldown of the previous capture or the dump
+    /// store is full. Returns true when a dump was actually captured.
+    pub fn trigger(&self, name: &str, now_us: u64) -> bool {
+        self.triggered.fetch_add(1, Ordering::Relaxed);
+        let last = self.last_dump_us.load(Ordering::Acquire);
+        if last != 0 && now_us.saturating_sub(last) < self.cooldown_us {
+            return false;
+        }
+        // One capturer at a time; the dumps lock serializes the
+        // cooldown check-and-set as well.
+        let mut dumps = self.dumps.lock().unwrap();
+        if dumps.len() >= self.max_dumps {
+            return false;
+        }
+        let last = self.last_dump_us.load(Ordering::Acquire);
+        if last != 0 && now_us.saturating_sub(last) < self.cooldown_us {
+            return false;
+        }
+        self.last_dump_us.store(now_us.max(1), Ordering::Release);
+        let spans: Vec<TraceSpan> = self.recent.lock().unwrap().iter().copied().collect();
+        dumps.push(FlightDump {
+            trigger: name.to_string(),
+            at_us: now_us,
+            spans,
+        });
+        self.captured.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Copies of all captured dumps, oldest first.
+    pub fn dumps(&self) -> Vec<FlightDump> {
+        self.dumps.lock().unwrap().clone()
+    }
+
+    pub fn dump_count(&self) -> usize {
+        self.dumps.lock().unwrap().len()
+    }
+
+    /// Total trigger firings, including suppressed ones.
+    pub fn triggered(&self) -> u64 {
+        self.triggered.load(Ordering::Relaxed)
+    }
+
+    pub fn captured(&self) -> u64 {
+        self.captured.load(Ordering::Relaxed)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{OUTCOME_COMPLETED, OUTCOME_FAILED};
+
+    fn span(t_entry: u64, outcome: u8) -> TraceSpan {
+        TraceSpan {
+            t_entry,
+            t_complete: t_entry + 10,
+            outcome,
+            ..TraceSpan::default()
+        }
+    }
+
+    #[test]
+    fn ring_keeps_most_recent_spans() {
+        let rec = FlightRecorder::new(8, 4, 0);
+        for i in 0..20 {
+            rec.observe(span(i + 1, OUTCOME_COMPLETED));
+        }
+        rec.trigger("failure", 1000);
+        let dumps = rec.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].spans.len(), 8);
+        assert_eq!(dumps[0].spans[0].t_entry, 13, "oldest surviving span");
+        assert_eq!(dumps[0].spans[7].t_entry, 20, "newest span last");
+    }
+
+    #[test]
+    fn dump_brackets_the_fault() {
+        let rec = FlightRecorder::new(16, 4, 0);
+        for i in 0..5 {
+            rec.observe(span(100 + i, OUTCOME_COMPLETED));
+        }
+        rec.observe(span(200, OUTCOME_FAILED));
+        assert!(rec.trigger("failure", 210));
+        let d = &rec.dumps()[0];
+        assert_eq!(d.trigger, "failure");
+        let last = d.spans.last().unwrap();
+        assert_eq!(last.outcome, OUTCOME_FAILED, "fault span is in the dump");
+        assert!(
+            d.spans.iter().any(|s| s.outcome == OUTCOME_COMPLETED),
+            "spans preceding the fault are in the dump"
+        );
+    }
+
+    #[test]
+    fn cooldown_suppresses_rapid_retriggers() {
+        let rec = FlightRecorder::new(8, 8, 1_000_000);
+        rec.observe(span(1, OUTCOME_FAILED));
+        assert!(rec.trigger("failure", 10));
+        assert!(!rec.trigger("failure", 20), "inside cooldown");
+        assert!(!rec.trigger("failure", 999_000), "still inside cooldown");
+        assert!(rec.trigger("failure", 1_000_020), "cooldown elapsed");
+        assert_eq!(rec.dump_count(), 2);
+        assert_eq!(rec.triggered(), 4, "suppressed firings still counted");
+        assert_eq!(rec.captured(), 2);
+    }
+
+    #[test]
+    fn dump_store_is_bounded() {
+        let rec = FlightRecorder::new(8, 2, 0);
+        rec.observe(span(1, OUTCOME_FAILED));
+        assert!(rec.trigger("a", 10));
+        assert!(rec.trigger("b", 20));
+        assert!(!rec.trigger("c", 30), "store full");
+        assert_eq!(rec.dump_count(), 2);
+    }
+
+    #[test]
+    fn dump_json_shape() {
+        let rec = FlightRecorder::new(8, 2, 0);
+        rec.observe(span(5, OUTCOME_FAILED));
+        rec.trigger("shed", 42);
+        let j = rec.dumps()[0].to_json();
+        assert_eq!(j.get("trigger").and_then(|t| t.as_str()), Some("shed"));
+        assert_eq!(j.get("at_us").and_then(|t| t.as_usize()), Some(42));
+        assert_eq!(j.get("span_count").and_then(|t| t.as_usize()), Some(1));
+    }
+}

@@ -1,0 +1,583 @@
+//! Per-request trace spans: stage timestamps threaded router → engine →
+//! worker, plus the bounded lock-free ring completed spans are recorded
+//! into.
+//!
+//! A sampled request owns one [`SpanCell`] (shared by `Arc` as
+//! [`SpanHandle`]): the router stamps entry/selection/completion locally,
+//! the engine submit path stamps reuse classification and enqueue, and
+//! the executing worker stamps dequeue, batch assembly, and the execute
+//! window. Every stamp is a relaxed atomic store of "µs since the
+//! observability layer's epoch" (clamped to ≥ 1, so 0 always means
+//! "never stamped") — no locks, no allocation after the one `Arc` the
+//! sampler pays per traced request.
+//!
+//! On completion the cell plus the router's locals are flattened into a
+//! [`TraceSpan`] (a `Copy` value) and pushed into the [`SpanRing`] — the
+//! same Vyukov drop-not-block MPMC discipline as
+//! `crate::online::SampleRing`: a full ring drops the span and counts it,
+//! it never blocks the serving path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+// ---- span field codes ------------------------------------------------------
+
+/// `TraceSpan::algo`: which algorithm served the request.
+pub const ALGO_UNKNOWN: u8 = 0;
+pub const ALGO_NT: u8 = 1;
+pub const ALGO_TNN: u8 = 2;
+pub const ALGO_NN: u8 = 3;
+
+/// `TraceSpan::reason`: why the algorithm was selected.
+pub const REASON_UNKNOWN: u8 = 0;
+pub const REASON_PREDICTED_NT: u8 = 1;
+pub const REASON_PREDICTED_TNN: u8 = 2;
+pub const REASON_MEMORY_FALLBACK: u8 = 3;
+pub const REASON_FORCED: u8 = 4;
+
+/// `TraceSpan::reuse`: how the reuse layer classified the submission
+/// (0 also covers "no reuse layer installed" and deny-prefix bypasses).
+pub const REUSE_NONE: u8 = 0;
+pub const REUSE_LEAD: u8 = 1;
+pub const REUSE_HIT: u8 = 2;
+pub const REUSE_COALESCED: u8 = 3;
+
+/// `TraceSpan::outcome`: how the request resolved.
+pub const OUTCOME_COMPLETED: u8 = 0;
+pub const OUTCOME_FAILED: u8 = 1;
+pub const OUTCOME_SHED: u8 = 2;
+
+pub fn algo_name(code: u8) -> &'static str {
+    match code {
+        ALGO_NT => "nt",
+        ALGO_TNN => "tnn",
+        ALGO_NN => "nn",
+        _ => "unknown",
+    }
+}
+
+pub fn outcome_name(code: u8) -> &'static str {
+    match code {
+        OUTCOME_COMPLETED => "completed",
+        OUTCOME_FAILED => "failed",
+        OUTCOME_SHED => "shed",
+        _ => "unknown",
+    }
+}
+
+// ---- the flattened span ----------------------------------------------------
+
+/// One request's completed trace: monotonic stage timestamps (µs since
+/// the observability epoch; 0 = that stage never happened, e.g. a reuse
+/// hit never enqueues) plus classification codes. `Copy` so the flight
+/// recorder and the span ring move it without allocating.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceSpan {
+    /// Router entry (request counted).
+    pub t_entry: u64,
+    /// Selection decided (algo + reason known).
+    pub t_select: u64,
+    /// Reuse layer classified the submission.
+    pub t_reuse: u64,
+    /// Job accepted onto a worker queue.
+    pub t_enqueue: u64,
+    /// Worker pulled the job off the queue fabric.
+    pub t_dequeue: u64,
+    /// Micro-batch assembled (size known).
+    pub t_batch: u64,
+    /// Backend execute began.
+    pub t_exec_start: u64,
+    /// Backend execute returned.
+    pub t_exec_end: u64,
+    /// Router observed the outcome.
+    pub t_complete: u64,
+    pub algo: u8,
+    pub reason: u8,
+    pub reuse: u8,
+    pub outcome: u8,
+    /// Micro-batch size this job executed in (0 = never batched).
+    pub batch_size: u32,
+    /// Executing worker index (only meaningful when `t_exec_start != 0`).
+    pub worker: u32,
+}
+
+/// Both stamps present (a stage that never ran yields `None`, not 0).
+fn delta(start: u64, end: u64) -> Option<u64> {
+    if start == 0 || end == 0 {
+        None
+    } else {
+        Some(end.saturating_sub(start))
+    }
+}
+
+impl TraceSpan {
+    /// Enqueue → dequeue: time spent waiting in a worker queue.
+    pub fn queue_wait_us(&self) -> Option<u64> {
+        delta(self.t_enqueue, self.t_dequeue)
+    }
+
+    /// Execute start → end: backend time (batch-amortized wall clock).
+    pub fn execute_us(&self) -> Option<u64> {
+        delta(self.t_exec_start, self.t_exec_end)
+    }
+
+    /// Entry → completion: what the caller experienced.
+    pub fn total_us(&self) -> Option<u64> {
+        delta(self.t_entry, self.t_complete)
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        crate::util::json::Json::obj()
+            .set("t_entry", self.t_entry)
+            .set("t_select", self.t_select)
+            .set("t_reuse", self.t_reuse)
+            .set("t_enqueue", self.t_enqueue)
+            .set("t_dequeue", self.t_dequeue)
+            .set("t_batch", self.t_batch)
+            .set("t_exec_start", self.t_exec_start)
+            .set("t_exec_end", self.t_exec_end)
+            .set("t_complete", self.t_complete)
+            .set("algo", algo_name(self.algo))
+            .set("outcome", outcome_name(self.outcome))
+            .set("reason", self.reason as u64)
+            .set("reuse", self.reuse as u64)
+            .set("batch_size", self.batch_size as u64)
+            .set("worker", self.worker as u64)
+    }
+}
+
+// ---- the live stamping cell ------------------------------------------------
+
+/// The engine-visible half of a span while the request is in flight. The
+/// router keeps its own stamps (entry, selection, completion) in locals;
+/// everything the submit path and the worker touch lives here as relaxed
+/// atomics so no stage ever takes a lock. The cell carries a copy of the
+/// observability epoch so its stamps are directly comparable with the
+/// router's without the engine ever holding an `ObsLayer` reference.
+#[derive(Debug)]
+pub struct SpanCell {
+    epoch: Instant,
+    t_reuse: AtomicU64,
+    t_enqueue: AtomicU64,
+    t_dequeue: AtomicU64,
+    t_batch: AtomicU64,
+    t_exec_start: AtomicU64,
+    t_exec_end: AtomicU64,
+    reuse_class: AtomicU64,
+    batch_size: AtomicU64,
+    worker: AtomicU64,
+}
+
+/// How spans travel through `EngineJob`: one `Arc` per sampled request.
+pub type SpanHandle = std::sync::Arc<SpanCell>;
+
+impl SpanCell {
+    pub fn new(epoch: Instant) -> SpanCell {
+        SpanCell {
+            epoch,
+            t_reuse: AtomicU64::new(0),
+            t_enqueue: AtomicU64::new(0),
+            t_dequeue: AtomicU64::new(0),
+            t_batch: AtomicU64::new(0),
+            t_exec_start: AtomicU64::new(0),
+            t_exec_end: AtomicU64::new(0),
+            reuse_class: AtomicU64::new(REUSE_NONE as u64),
+            batch_size: AtomicU64::new(0),
+            worker: AtomicU64::new(0),
+        }
+    }
+
+    /// µs since the observability epoch, clamped to ≥ 1 so a stored stamp
+    /// can never collide with 0 = "never stamped".
+    pub fn now_us(&self) -> u64 {
+        (self.epoch.elapsed().as_micros() as u64).max(1)
+    }
+
+    pub fn stamp_reuse(&self, class: u8) {
+        self.reuse_class.store(class as u64, Ordering::Relaxed);
+        self.t_reuse.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    pub fn stamp_enqueue(&self) {
+        self.t_enqueue.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    /// Stamped each time a worker pulls the job off the fabric; a job
+    /// deferred to a stash and re-serviced overwrites with the later pull,
+    /// so queue-wait includes deferral time (the caller-visible truth).
+    pub fn stamp_dequeue(&self) {
+        self.t_dequeue.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    pub fn stamp_batch(&self, batch_size: usize, worker: usize) {
+        self.batch_size.store(batch_size as u64, Ordering::Relaxed);
+        self.worker.store(worker as u64, Ordering::Relaxed);
+        self.t_batch.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    pub fn stamp_exec_start(&self) {
+        self.t_exec_start.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    pub fn stamp_exec_end(&self) {
+        self.t_exec_end.store(self.now_us(), Ordering::Relaxed);
+    }
+
+    /// Reuse classification stamped so far (`REUSE_*`).
+    pub fn reuse_class(&self) -> u8 {
+        self.reuse_class.load(Ordering::Relaxed) as u8
+    }
+
+    /// Flatten the cell plus the router's locally-held stamps into the
+    /// immutable completed span.
+    pub fn to_span(
+        &self,
+        t_entry: u64,
+        t_select: u64,
+        t_complete: u64,
+        algo: u8,
+        reason: u8,
+        outcome: u8,
+    ) -> TraceSpan {
+        TraceSpan {
+            t_entry,
+            t_select,
+            t_reuse: self.t_reuse.load(Ordering::Relaxed),
+            t_enqueue: self.t_enqueue.load(Ordering::Relaxed),
+            t_dequeue: self.t_dequeue.load(Ordering::Relaxed),
+            t_batch: self.t_batch.load(Ordering::Relaxed),
+            t_exec_start: self.t_exec_start.load(Ordering::Relaxed),
+            t_exec_end: self.t_exec_end.load(Ordering::Relaxed),
+            t_complete,
+            algo,
+            reason,
+            reuse: self.reuse_class(),
+            outcome,
+            batch_size: self.batch_size.load(Ordering::Relaxed) as u32,
+            worker: self.worker.load(Ordering::Relaxed) as u32,
+        }
+    }
+}
+
+// ---- the completed-span ring -----------------------------------------------
+
+/// Value words per slot: 9 timestamps, one packed flags word
+/// (`algo | reason<<8 | reuse<<16 | outcome<<24`), one packed
+/// `batch_size | worker<<32` word.
+const FIELDS: usize = 11;
+
+fn pack_flags(s: &TraceSpan) -> u64 {
+    s.algo as u64 | (s.reason as u64) << 8 | (s.reuse as u64) << 16 | (s.outcome as u64) << 24
+}
+
+fn pack_wb(s: &TraceSpan) -> u64 {
+    s.batch_size as u64 | (s.worker as u64) << 32
+}
+
+struct Slot {
+    /// Vyukov sequence: `index` when free for the producer of that lap,
+    /// `index + 1` once published, `index + capacity` after consumption.
+    seq: AtomicU64,
+    vals: [AtomicU64; FIELDS],
+}
+
+impl Slot {
+    fn new(i: u64) -> Slot {
+        Slot {
+            seq: AtomicU64::new(i),
+            vals: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+}
+
+/// Bounded lock-free MPMC ring of completed spans. Full ⇒ the span is
+/// dropped and counted — recording never blocks serving (the same
+/// discipline as `online::SampleRing`).
+pub struct SpanRing {
+    slots: Box<[Slot]>,
+    mask: u64,
+    capacity: u64,
+    head: AtomicU64,
+    tail: AtomicU64,
+    pushed: AtomicU64,
+    dropped: AtomicU64,
+}
+
+impl SpanRing {
+    /// Ring with at least `capacity` slots (rounded up to a power of two,
+    /// minimum 64).
+    pub fn new(capacity: usize) -> SpanRing {
+        let cap = capacity.max(64).next_power_of_two() as u64;
+        SpanRing {
+            slots: (0..cap).map(Slot::new).collect(),
+            mask: cap - 1,
+            capacity: cap,
+            head: AtomicU64::new(0),
+            tail: AtomicU64::new(0),
+            pushed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity as usize
+    }
+
+    pub fn pushed(&self) -> u64 {
+        self.pushed.load(Ordering::Relaxed)
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Approximate occupancy (racy; for metrics only).
+    pub fn len(&self) -> usize {
+        let head = self.head.load(Ordering::Relaxed);
+        let tail = self.tail.load(Ordering::Relaxed);
+        head.saturating_sub(tail) as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Record a span. Returns `false` (and counts a drop) when full —
+    /// never blocks.
+    pub fn push(&self, s: &TraceSpan) -> bool {
+        let mut head = self.head.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(head & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == head {
+                match self.head.compare_exchange_weak(
+                    head,
+                    head + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = &slot.vals;
+                        for (i, t) in [
+                            s.t_entry,
+                            s.t_select,
+                            s.t_reuse,
+                            s.t_enqueue,
+                            s.t_dequeue,
+                            s.t_batch,
+                            s.t_exec_start,
+                            s.t_exec_end,
+                            s.t_complete,
+                        ]
+                        .into_iter()
+                        .enumerate()
+                        {
+                            v[i].store(t, Ordering::Relaxed);
+                        }
+                        v[9].store(pack_flags(s), Ordering::Relaxed);
+                        v[10].store(pack_wb(s), Ordering::Relaxed);
+                        slot.seq.store(head + 1, Ordering::Release);
+                        self.pushed.fetch_add(1, Ordering::Relaxed);
+                        return true;
+                    }
+                    Err(h) => head = h,
+                }
+            } else if seq < head {
+                // A full lap behind: the ring is full.
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return false;
+            } else {
+                head = self.head.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain one span (tests / exporters). Lock-free; safe with multiple
+    /// consumers.
+    pub fn pop(&self) -> Option<TraceSpan> {
+        let mut tail = self.tail.load(Ordering::Relaxed);
+        loop {
+            let slot = &self.slots[(tail & self.mask) as usize];
+            let seq = slot.seq.load(Ordering::Acquire);
+            if seq == tail + 1 {
+                match self.tail.compare_exchange_weak(
+                    tail,
+                    tail + 1,
+                    Ordering::Relaxed,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => {
+                        let v = &slot.vals;
+                        let flags = v[9].load(Ordering::Relaxed);
+                        let wb = v[10].load(Ordering::Relaxed);
+                        let s = TraceSpan {
+                            t_entry: v[0].load(Ordering::Relaxed),
+                            t_select: v[1].load(Ordering::Relaxed),
+                            t_reuse: v[2].load(Ordering::Relaxed),
+                            t_enqueue: v[3].load(Ordering::Relaxed),
+                            t_dequeue: v[4].load(Ordering::Relaxed),
+                            t_batch: v[5].load(Ordering::Relaxed),
+                            t_exec_start: v[6].load(Ordering::Relaxed),
+                            t_exec_end: v[7].load(Ordering::Relaxed),
+                            t_complete: v[8].load(Ordering::Relaxed),
+                            algo: flags as u8,
+                            reason: (flags >> 8) as u8,
+                            reuse: (flags >> 16) as u8,
+                            outcome: (flags >> 24) as u8,
+                            batch_size: wb as u32,
+                            worker: (wb >> 32) as u32,
+                        };
+                        slot.seq.store(tail + self.capacity, Ordering::Release);
+                        return Some(s);
+                    }
+                    Err(t) => tail = t,
+                }
+            } else if seq < tail + 1 {
+                return None; // empty
+            } else {
+                tail = self.tail.load(Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Drain everything currently poppable.
+    pub fn drain(&self) -> Vec<TraceSpan> {
+        let mut out = Vec::new();
+        while let Some(s) = self.pop() {
+            out.push(s);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(i: u64) -> TraceSpan {
+        TraceSpan {
+            t_entry: 10 + i,
+            t_select: 12 + i,
+            t_reuse: 13 + i,
+            t_enqueue: 14 + i,
+            t_dequeue: 20 + i,
+            t_batch: 21 + i,
+            t_exec_start: 22 + i,
+            t_exec_end: 30 + i,
+            t_complete: 32 + i,
+            algo: ALGO_NT,
+            reason: REASON_PREDICTED_NT,
+            reuse: REUSE_LEAD,
+            outcome: OUTCOME_COMPLETED,
+            batch_size: 3,
+            worker: 2,
+        }
+    }
+
+    #[test]
+    fn ring_roundtrip_preserves_every_field() {
+        let r = SpanRing::new(64);
+        let s = span(5);
+        assert!(r.push(&s));
+        assert_eq!(r.pop().unwrap(), s);
+        assert!(r.pop().is_none());
+        assert_eq!(r.pushed(), 1);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_packs_extreme_flag_and_size_values() {
+        let r = SpanRing::new(64);
+        let s = TraceSpan {
+            algo: 255,
+            reason: 254,
+            reuse: 253,
+            outcome: 252,
+            batch_size: u32::MAX,
+            worker: u32::MAX,
+            ..span(0)
+        };
+        assert!(r.push(&s));
+        assert_eq!(r.pop().unwrap(), s);
+    }
+
+    #[test]
+    fn full_ring_drops_instead_of_blocking() {
+        let r = SpanRing::new(64);
+        for i in 0..64 {
+            assert!(r.push(&span(i)), "push {i}");
+        }
+        assert!(!r.push(&span(99)));
+        assert_eq!(r.dropped(), 1);
+        let mut n = 0;
+        while r.pop().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 64);
+        assert!(r.push(&span(100)), "drained slots are reusable");
+    }
+
+    #[test]
+    fn derived_durations_need_both_stamps() {
+        let s = span(0);
+        assert_eq!(s.queue_wait_us(), Some(6));
+        assert_eq!(s.execute_us(), Some(8));
+        assert_eq!(s.total_us(), Some(22));
+        let hit = TraceSpan {
+            t_enqueue: 0,
+            t_dequeue: 0,
+            t_exec_start: 0,
+            t_exec_end: 0,
+            ..span(0)
+        };
+        assert_eq!(hit.queue_wait_us(), None, "a reuse hit never queued");
+        assert_eq!(hit.execute_us(), None);
+        assert_eq!(hit.total_us(), Some(22));
+    }
+
+    #[test]
+    fn cell_flattens_into_span() {
+        let cell = SpanCell::new(Instant::now());
+        cell.stamp_reuse(REUSE_LEAD);
+        cell.stamp_enqueue();
+        cell.stamp_dequeue();
+        cell.stamp_batch(4, 2);
+        cell.stamp_exec_start();
+        cell.stamp_exec_end();
+        let t_end = cell.now_us();
+        let s = cell.to_span(1, 1, t_end, ALGO_TNN, REASON_PREDICTED_TNN, OUTCOME_COMPLETED);
+        assert_eq!(s.algo, ALGO_TNN);
+        assert_eq!(s.reuse, REUSE_LEAD);
+        assert_eq!(s.batch_size, 4);
+        assert_eq!(s.worker, 2);
+        for t in [s.t_reuse, s.t_enqueue, s.t_dequeue, s.t_batch, s.t_exec_start, s.t_exec_end] {
+            assert!(t >= 1, "stamps are clamped to >= 1");
+        }
+        // Monotone through the engine stages.
+        assert!(s.t_reuse <= s.t_enqueue);
+        assert!(s.t_enqueue <= s.t_dequeue);
+        assert!(s.t_dequeue <= s.t_batch);
+        assert!(s.t_batch <= s.t_exec_start);
+        assert!(s.t_exec_start <= s.t_exec_end);
+        assert!(s.queue_wait_us().unwrap() + s.execute_us().unwrap() <= s.total_us().unwrap());
+    }
+
+    #[test]
+    fn unstamped_cell_yields_zeroed_stages() {
+        let cell = SpanCell::new(Instant::now());
+        let s = cell.to_span(5, 6, 9, ALGO_NT, REASON_FORCED, OUTCOME_FAILED);
+        assert_eq!(s.t_enqueue, 0);
+        assert_eq!(s.queue_wait_us(), None);
+        assert_eq!(s.execute_us(), None);
+        assert_eq!(s.total_us(), Some(4));
+        assert_eq!(s.reuse, REUSE_NONE);
+    }
+
+    #[test]
+    fn span_json_names_algo_and_outcome() {
+        let j = span(0).to_json();
+        assert_eq!(j.get("algo").as_str(), Some("nt"));
+        assert_eq!(j.get("outcome").as_str(), Some("completed"));
+        assert_eq!(j.get("batch_size").as_f64(), Some(3.0));
+    }
+}

@@ -1,0 +1,271 @@
+//! Windowed rates: rotating time-bucket counters over the serving
+//! counters, so operators see *current* req/s, shed rate, reuse-hit
+//! rate, probe rate, and mispredict rate instead of lifetime ratios
+//! (which flatten out exactly when the workload lab's regime changes
+//! make the live rates interesting).
+//!
+//! The registry is a fixed array of buckets, each owning one time slice
+//! of `bucket_ms` and a stamp recording *which* slice it currently
+//! holds. Recording hashes the current slice index onto a bucket; a
+//! bucket whose stamp is stale is zeroed and re-stamped before the
+//! increment (lazy rotation — no background thread). Reading sums every
+//! bucket whose stamp still falls inside the window.
+//!
+//! Concurrency note: rotation (`swap` + zeroing) races with concurrent
+//! increments — an increment can land between the swap and the zeroing
+//! and be lost, or land on the old slice and survive into the new one.
+//! Both windows are a few events wide at a bucket boundary; this is
+//! telemetry, and the lifetime counters in `CoordinatorMetrics` stay
+//! exact. The trade buys a hot path of one load + one `fetch_add`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// What a window bucket counts. Index into each bucket's count array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WindowKind {
+    Requests = 0,
+    Completed = 1,
+    Shed = 2,
+    ReuseHit = 3,
+    Probe = 4,
+    Mispredict = 5,
+}
+
+const KINDS: usize = 6;
+
+/// Stamp value meaning "this bucket has never held any slice".
+const NEVER: u64 = u64::MAX;
+
+struct Bucket {
+    /// Slice index (`now_ms / bucket_ms`) this bucket currently holds.
+    stamp: AtomicU64,
+    counts: [AtomicU64; KINDS],
+}
+
+/// Rotating time-bucket rate windows.
+pub struct RateWindows {
+    bucket_ms: u64,
+    buckets: Box<[Bucket]>,
+}
+
+/// Point-in-time rates over the last window. Rates whose denominator is
+/// zero are reported as 0.0 (a quiet window is a zero rate, not NaN).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct WindowRates {
+    /// Seconds of window actually covered (≤ buckets × bucket_ms / 1000;
+    /// the current bucket counts only its elapsed fraction).
+    pub window_secs: f64,
+    pub requests: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub reuse_hits: u64,
+    pub probes: u64,
+    pub mispredicts: u64,
+    pub req_per_s: f64,
+    /// `shed / requests` within the window.
+    pub shed_rate: f64,
+    /// `reuse_hits / completed` within the window.
+    pub reuse_hit_rate: f64,
+    /// `probes / requests` within the window.
+    pub probe_rate: f64,
+    /// `mispredicts / probes` within the window.
+    pub mispredict_rate: f64,
+}
+
+fn ratio(num: u64, den: u64) -> f64 {
+    if den == 0 {
+        0.0
+    } else {
+        num as f64 / den as f64
+    }
+}
+
+impl RateWindows {
+    /// `buckets` slices of `bucket_ms` each (window = buckets × bucket_ms).
+    /// Minimums of 2 buckets / 1 ms keep the arithmetic non-degenerate.
+    pub fn new(bucket_ms: u64, buckets: usize) -> RateWindows {
+        RateWindows {
+            bucket_ms: bucket_ms.max(1),
+            buckets: (0..buckets.max(2))
+                .map(|_| Bucket {
+                    stamp: AtomicU64::new(NEVER),
+                    counts: std::array::from_fn(|_| AtomicU64::new(0)),
+                })
+                .collect(),
+        }
+    }
+
+    /// Count one event at `now_ms` (milliseconds since the layer epoch).
+    pub fn record_at(&self, kind: WindowKind, now_ms: u64) {
+        let idx = now_ms / self.bucket_ms;
+        let b = &self.buckets[(idx % self.buckets.len() as u64) as usize];
+        if b.stamp.load(Ordering::Acquire) != idx {
+            // First writer of the new slice zeroes the stale counts; the
+            // swap makes sure exactly one writer does.
+            if b.stamp.swap(idx, Ordering::AcqRel) != idx {
+                for c in &b.counts {
+                    c.store(0, Ordering::Relaxed);
+                }
+            }
+        }
+        b.counts[kind as usize].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Rates over every bucket still inside the window ending at `now_ms`.
+    pub fn rates_at(&self, now_ms: u64) -> WindowRates {
+        let n = self.buckets.len() as u64;
+        let idx_now = now_ms / self.bucket_ms;
+        let mut sums = [0u64; KINDS];
+        let mut covered_ms = 0u64;
+        for b in self.buckets.iter() {
+            let stamp = b.stamp.load(Ordering::Acquire);
+            if stamp == NEVER || stamp > idx_now || idx_now - stamp >= n {
+                continue; // never used, or rotated out of the window
+            }
+            for (s, c) in sums.iter_mut().zip(&b.counts) {
+                *s += c.load(Ordering::Relaxed);
+            }
+            covered_ms += if stamp == idx_now {
+                (now_ms % self.bucket_ms) + 1 // current bucket: partial
+            } else {
+                self.bucket_ms
+            };
+        }
+        let window_secs = covered_ms as f64 / 1e3;
+        WindowRates {
+            window_secs,
+            requests: sums[WindowKind::Requests as usize],
+            completed: sums[WindowKind::Completed as usize],
+            shed: sums[WindowKind::Shed as usize],
+            reuse_hits: sums[WindowKind::ReuseHit as usize],
+            probes: sums[WindowKind::Probe as usize],
+            mispredicts: sums[WindowKind::Mispredict as usize],
+            req_per_s: if covered_ms == 0 {
+                0.0
+            } else {
+                sums[WindowKind::Requests as usize] as f64 / window_secs
+            },
+            shed_rate: ratio(
+                sums[WindowKind::Shed as usize],
+                sums[WindowKind::Requests as usize],
+            ),
+            reuse_hit_rate: ratio(
+                sums[WindowKind::ReuseHit as usize],
+                sums[WindowKind::Completed as usize],
+            ),
+            probe_rate: ratio(
+                sums[WindowKind::Probe as usize],
+                sums[WindowKind::Requests as usize],
+            ),
+            mispredict_rate: ratio(
+                sums[WindowKind::Mispredict as usize],
+                sums[WindowKind::Probe as usize],
+            ),
+        }
+    }
+
+    /// Window span in milliseconds (buckets × bucket_ms).
+    pub fn span_ms(&self) -> u64 {
+        self.bucket_ms * self.buckets.len() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_windows_report_zero_not_nan() {
+        let w = RateWindows::new(1000, 8);
+        let r = w.rates_at(0);
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.req_per_s, 0.0);
+        assert_eq!(r.shed_rate, 0.0);
+        assert_eq!(r.mispredict_rate, 0.0);
+        assert_eq!(r.window_secs, 0.0);
+    }
+
+    #[test]
+    fn rates_reflect_only_the_window() {
+        let w = RateWindows::new(1000, 4);
+        // 10 requests in slice 0, then nothing for 10 slices.
+        for _ in 0..10 {
+            w.record_at(WindowKind::Requests, 500);
+        }
+        let r = w.rates_at(999);
+        assert_eq!(r.requests, 10);
+        assert!((r.window_secs - 1.0).abs() < 1e-9, "{}", r.window_secs);
+        assert!((r.req_per_s - 10.0).abs() < 1e-9, "{}", r.req_per_s);
+        // 10 slices later the slice-0 bucket is outside the 4-slice window.
+        let r = w.rates_at(10_500);
+        assert_eq!(r.requests, 0, "old traffic rotated out");
+    }
+
+    #[test]
+    fn known_phase_rate_converges() {
+        // 100 req/s for 5 s into 1 s × 8 buckets: the window rate must
+        // report ~100 req/s over the last full buckets.
+        let w = RateWindows::new(1000, 8);
+        let mut now = 0u64;
+        for _ in 0..500 {
+            w.record_at(WindowKind::Requests, now);
+            now += 10; // one request every 10 ms
+        }
+        let r = w.rates_at(now - 1);
+        assert!(
+            (r.req_per_s - 100.0).abs() < 5.0,
+            "req_per_s={} window={}s",
+            r.req_per_s,
+            r.window_secs
+        );
+    }
+
+    #[test]
+    fn stale_bucket_is_zeroed_on_reuse() {
+        let w = RateWindows::new(100, 2); // slice i lands on bucket i % 2
+        w.record_at(WindowKind::Requests, 50); // slice 0 → bucket 0
+        w.record_at(WindowKind::Requests, 150); // slice 1 → bucket 1
+        // Slice 2 reuses bucket 0: the old count must not leak in.
+        w.record_at(WindowKind::Requests, 250);
+        let r = w.rates_at(299);
+        assert_eq!(r.requests, 2, "slices 1 and 2 only");
+    }
+
+    #[test]
+    fn derived_rates_divide_the_right_counters() {
+        let w = RateWindows::new(1000, 8);
+        for _ in 0..10 {
+            w.record_at(WindowKind::Requests, 100);
+        }
+        for _ in 0..6 {
+            w.record_at(WindowKind::Completed, 100);
+        }
+        for _ in 0..4 {
+            w.record_at(WindowKind::Shed, 100);
+        }
+        for _ in 0..3 {
+            w.record_at(WindowKind::ReuseHit, 100);
+        }
+        for _ in 0..2 {
+            w.record_at(WindowKind::Probe, 100);
+        }
+        w.record_at(WindowKind::Mispredict, 100);
+        let r = w.rates_at(100);
+        assert!((r.shed_rate - 0.4).abs() < 1e-12);
+        assert!((r.reuse_hit_rate - 0.5).abs() < 1e-12);
+        assert!((r.probe_rate - 0.2).abs() < 1e-12);
+        assert!((r.mispredict_rate - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partial_current_bucket_scales_the_denominator() {
+        let w = RateWindows::new(1000, 8);
+        // 50 requests within the first 500 ms of the current bucket.
+        for i in 0..50 {
+            w.record_at(WindowKind::Requests, i * 10);
+        }
+        let r = w.rates_at(499);
+        assert!((r.window_secs - 0.5).abs() < 1e-9, "{}", r.window_secs);
+        assert!((r.req_per_s - 100.0).abs() < 1.0, "{}", r.req_per_s);
+    }
+}

@@ -399,7 +399,10 @@ impl OnlineHub {
 
     /// Record a shadow probe: both measured latencies plus the live
     /// model's prediction; feeds the drift tracker and mispredict
-    /// counters.
+    /// counters. Returns whether the probe contradicted the prediction
+    /// (`false` when no winner could be measured or the model was
+    /// bypassed) so the caller can feed mispredict telemetry without
+    /// re-deriving the verdict.
     #[allow(clippy::too_many_arguments)]
     pub fn record_probe(
         &self,
@@ -410,7 +413,7 @@ impl OnlineHub {
         predicted: i8,
         lat_nt_us: f64,
         lat_tnn_us: f64,
-    ) {
+    ) -> bool {
         let s = Sample {
             gpu_id: gpu.id,
             gpu_feats: gpu.features(),
@@ -422,7 +425,7 @@ impl OnlineHub {
             lat_tnn_us,
         };
         let Some(winner) = s.measured_label() else {
-            return;
+            return false;
         };
         self.metrics.shadow_probes.fetch_add(1, Ordering::Relaxed);
         let mispredicted = predicted != 0 && predicted != winner;
@@ -433,6 +436,7 @@ impl OnlineHub {
         }
         self.drift.record(gpu.id, m, n, k, mispredicted);
         self.push_sample(&s);
+        mispredicted
     }
 
     /// Install a challenger as the live model: swap the epoch pointer,
@@ -630,11 +634,11 @@ mod tests {
     fn probes_feed_ring_drift_and_counters() {
         let h = hub(OnlineConfig::default(), constant_selector(1));
         // Predicted NT (+1) but TNN measured faster → mispredict.
-        h.record_probe(&GTX1080, 256, 256, 256, 1, 90.0, 40.0);
+        assert!(h.record_probe(&GTX1080, 256, 256, 256, 1, 90.0, 40.0));
         // Predicted NT, NT faster → correct.
-        h.record_probe(&GTX1080, 128, 128, 128, 1, 10.0, 40.0);
+        assert!(!h.record_probe(&GTX1080, 128, 128, 128, 1, 10.0, 40.0));
         // Fallback/forced traffic (predicted = 0) never counts mispredicts.
-        h.record_probe(&GTX1080, 512, 512, 512, 0, 90.0, 40.0);
+        assert!(!h.record_probe(&GTX1080, 512, 512, 512, 0, 90.0, 40.0));
         let snap = h.metrics.snapshot();
         assert_eq!(snap.shadow_probes, 3);
         assert_eq!(snap.shadow_mispredicts, 1);

@@ -23,7 +23,9 @@
 //!   is a client-side conservation ledger to check against
 //!   `CoordinatorMetrics::verify_conservation`. [`replay_with_chaos`]
 //!   additionally kills and restarts an engine worker mid-trace
-//!   ([`Engine::kill_worker`] / [`Engine::restart_worker`]).
+//!   ([`Engine::kill_worker`] / [`Engine::restart_worker`]), triggered
+//!   by submitted-request counts, elapsed trace time, or both
+//!   ([`WorkerChaos`]).
 //! * [`chaos`] — [`ChaosBackend`], a fault-injecting [`ExecBackend`]
 //!   wrapper: per-call seeded rolls inject transient failures, panics
 //!   (contained by the engine's worker loop, surfacing as failed jobs),

@@ -75,9 +75,19 @@ impl ReplayReport {
     }
 }
 
-/// Kill/restart schedule for [`replay_with_chaos`], in units of
-/// *submitted requests* (deterministic under [`ReplayClock::Afap`] up to
-/// scheduling, unlike wall-clock thresholds).
+/// Kill/restart schedule for [`replay_with_chaos`]. Each edge fires on
+/// whichever of its two thresholds is crossed first:
+///
+/// * a *submitted-request count* (`kill_after` / `restart_after`) —
+///   deterministic under [`ReplayClock::Afap`] up to scheduling;
+/// * an *elapsed trace time* (`kill_at` / `restart_at`) — the trace's
+///   own clock, so a schedule written against a trace's phase
+///   boundaries holds at any [`ReplayClock::Paced`] speedup. Under
+///   [`ReplayClock::Afap`] trace time degenerates to wall time.
+///
+/// Build with [`WorkerChaos::at_counts`] or [`WorkerChaos::at_times`];
+/// the unused dimension is set to a never-fires sentinel
+/// (`u64::MAX` / `None`).
 #[derive(Debug, Clone, Copy)]
 pub struct WorkerChaos {
     /// Which engine worker dies.
@@ -88,6 +98,59 @@ pub struct WorkerChaos {
     /// the trace ends first, the controller restarts the worker before
     /// returning so the pool is whole at shutdown.
     pub restart_after: u64,
+    /// Kill once this much trace time has elapsed.
+    pub kill_at: Option<Duration>,
+    /// Restart once this much trace time has elapsed (≥ `kill_at`).
+    pub restart_at: Option<Duration>,
+}
+
+impl WorkerChaos {
+    /// Count-triggered schedule: kill after `kill_after` submissions,
+    /// restart after `restart_after`. Time triggers disabled.
+    pub fn at_counts(worker: usize, kill_after: u64, restart_after: u64) -> Self {
+        WorkerChaos {
+            worker,
+            kill_after,
+            restart_after,
+            kill_at: None,
+            restart_at: None,
+        }
+    }
+
+    /// Time-triggered schedule against the trace's own clock: kill at
+    /// `kill_at`, restart at `restart_at`. Count triggers disabled.
+    pub fn at_times(worker: usize, kill_at: Duration, restart_at: Duration) -> Self {
+        WorkerChaos {
+            worker,
+            kill_after: u64::MAX,
+            restart_after: u64::MAX,
+            kill_at: Some(kill_at),
+            restart_at: Some(restart_at),
+        }
+    }
+
+    /// Should the kill edge fire, given the submission count and
+    /// elapsed trace time? Pure — the controller loop and tests share
+    /// this exact predicate.
+    pub fn kill_due(&self, submitted: u64, trace_elapsed: Duration) -> bool {
+        submitted >= self.kill_after || self.kill_at.is_some_and(|t| trace_elapsed >= t)
+    }
+
+    /// Should the restart edge fire? Same contract as [`Self::kill_due`].
+    pub fn restart_due(&self, submitted: u64, trace_elapsed: Duration) -> bool {
+        submitted >= self.restart_after || self.restart_at.is_some_and(|t| trace_elapsed >= t)
+    }
+}
+
+/// Wall elapsed mapped back onto the trace's clock: paced replay at
+/// `speedup` compresses trace time by that factor, so trace time is
+/// wall time *times* the speedup. Afap has no pacing — trace time
+/// degenerates to wall time.
+fn trace_elapsed(clock: ReplayClock, wall: Duration) -> Duration {
+    match clock {
+        ReplayClock::Paced { speedup } => wall.mul_f64(speedup.max(1e-9)),
+        ReplayClock::Afap => wall,
+    }
 }
 
 #[derive(Default)]
@@ -167,10 +230,11 @@ pub fn replay(router: &Router, trace: &Trace, opts: &ReplayOptions) -> ReplayRep
     counters.report(t0.elapsed())
 }
 
-/// Replay with a chaos controller: once `chaos.kill_after` requests are
-/// submitted the controller kills `chaos.worker` (its queue stays open;
-/// siblings steal the backlog), and once `chaos.restart_after` are
-/// submitted it restarts the worker on the same queue. The engine must
+/// Replay with a chaos controller: once the kill edge of `chaos` fires
+/// (submission count or elapsed trace time, whichever first — see
+/// [`WorkerChaos`]) the controller kills `chaos.worker` (its queue
+/// stays open; siblings steal the backlog), and once the restart edge
+/// fires it restarts the worker on the same queue. The engine must
 /// come from [`Engine::restartable`].
 ///
 /// Use ≥ 2 workers (or a `restart_after` the trace will reach): in a
@@ -193,11 +257,12 @@ pub fn replay_with_chaos(
             let mut restarted = false;
             loop {
                 let n = counters_ref.submitted.load(Ordering::Relaxed);
-                if !killed && n >= chaos.kill_after {
+                let te = trace_elapsed(opts.clock, t0.elapsed());
+                if !killed && chaos.kill_due(n, te) {
                     engine.kill_worker(chaos.worker)?;
                     killed = true;
                 }
-                if killed && !restarted && n >= chaos.restart_after {
+                if killed && !restarted && chaos.restart_due(n, te) {
                     engine.restart_worker(chaos.worker)?;
                     restarted = true;
                 }
@@ -248,5 +313,49 @@ mod tests {
         };
         let msg = bad.verify_conservation().unwrap_err();
         assert!(msg.contains("submitted=10"), "{msg}");
+    }
+
+    #[test]
+    fn count_schedule_ignores_elapsed_time() {
+        let c = WorkerChaos::at_counts(0, 100, 220);
+        assert!(!c.kill_due(99, Duration::from_secs(3600)));
+        assert!(c.kill_due(100, Duration::ZERO));
+        assert!(!c.restart_due(219, Duration::from_secs(3600)));
+        assert!(c.restart_due(220, Duration::ZERO));
+    }
+
+    #[test]
+    fn time_schedule_ignores_submission_count() {
+        let c = WorkerChaos::at_times(0, Duration::from_millis(50), Duration::from_millis(120));
+        assert!(!c.kill_due(u64::MAX - 1, Duration::from_millis(49)));
+        assert!(c.kill_due(0, Duration::from_millis(50)));
+        assert!(!c.restart_due(u64::MAX - 1, Duration::from_millis(119)));
+        assert!(c.restart_due(0, Duration::from_millis(120)));
+    }
+
+    #[test]
+    fn mixed_schedule_fires_on_whichever_threshold_crosses_first() {
+        let c = WorkerChaos {
+            worker: 0,
+            kill_after: 100,
+            restart_after: 220,
+            kill_at: Some(Duration::from_millis(50)),
+            restart_at: Some(Duration::from_millis(120)),
+        };
+        // Count crosses first.
+        assert!(c.kill_due(100, Duration::from_millis(1)));
+        // Time crosses first.
+        assert!(c.kill_due(1, Duration::from_millis(50)));
+        // Neither crossed.
+        assert!(!c.kill_due(99, Duration::from_millis(49)));
+    }
+
+    #[test]
+    fn trace_elapsed_scales_wall_time_by_paced_speedup() {
+        let wall = Duration::from_millis(100);
+        let paced = trace_elapsed(ReplayClock::Paced { speedup: 4.0 }, wall);
+        assert_eq!(paced, Duration::from_millis(400));
+        let afap = trace_elapsed(ReplayClock::Afap, wall);
+        assert_eq!(afap, wall);
     }
 }

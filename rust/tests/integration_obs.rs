@@ -1,0 +1,320 @@
+//! Integration: the observability layer end to end — per-request spans
+//! threaded router → engine queue → worker and back, per-stage
+//! per-algorithm latency attribution, windowed rates over live traffic,
+//! and the chaos-triggered flight recorder — with the lifetime
+//! conservation counters proven unchanged in meaning while tracing is
+//! on.
+
+use mtnn::coordinator::{
+    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, Router, RouterConfig,
+};
+use mtnn::dataset::collect_paper_dataset;
+use mtnn::gemm::cpu::Matrix;
+use mtnn::gemm::{Algorithm, GemmShape};
+use mtnn::gpusim::{SimExecutor, GTX1080};
+use mtnn::obs::span::{OUTCOME_COMPLETED, OUTCOME_FAILED, OUTCOME_SHED};
+use mtnn::obs::{ObsConfig, ObsLayer, ObsSnapshot};
+use mtnn::selector::Selector;
+use mtnn::workload::{
+    replay, replay_with_chaos, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind,
+    ReplayClock, ReplayOptions, Trace, WorkerChaos,
+};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn selector() -> Selector {
+    Selector::train_default(&collect_paper_dataset())
+}
+
+fn steady_trace(rps: f64, secs: f64, seed: u64) -> Trace {
+    Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: &GTX1080,
+            shapes: vec![
+                GemmShape::new(32, 32, 32),
+                GemmShape::new(48, 32, 64),
+                GemmShape::new(64, 48, 32),
+            ],
+            rps,
+            duration: Duration::from_secs_f64(secs),
+        }],
+        seed,
+    )
+}
+
+fn stage_count(snap: &ObsSnapshot, stage: &str, algo: &str) -> u64 {
+    snap.stages
+        .iter()
+        .find(|s| s.stage == stage && s.algo == algo)
+        .expect("stage/algo pair present")
+        .count
+}
+
+#[test]
+fn spans_attribute_queue_and_execute_per_algorithm() {
+    // Two force-configured routers share one observability layer, so
+    // both algorithms' traffic lands in the same stage histograms and
+    // the per-algo attribution can be checked directly.
+    let obs = Arc::new(ObsLayer::new(ObsConfig::default()));
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let mk_router = |force: Algorithm| {
+        Router::new(
+            selector(),
+            engine.handle(),
+            RouterConfig {
+                force: Some(force),
+                obs: Some(Arc::clone(&obs)),
+                ..RouterConfig::default()
+            },
+        )
+    };
+    let nt_router = mk_router(Algorithm::Nt);
+    let tnn_router = mk_router(Algorithm::Tnn);
+    let per_algo = 30usize;
+    for i in 0..per_algo {
+        for (j, router) in [&nt_router, &tnn_router].into_iter().enumerate() {
+            router
+                .serve(GemmRequest {
+                    gpu: &GTX1080,
+                    shape: GemmShape::new(64, 64, 64),
+                    a: Matrix::random(64, 64, (i * 2 + j) as u64),
+                    b: Matrix::random(64, 64, (i * 2 + j + 1000) as u64),
+                })
+                .expect("serve");
+        }
+    }
+
+    let snap = obs.snapshot();
+    assert_eq!(snap.spans_begun, 2 * per_algo as u64, "sample_every=1 traces all");
+    assert_eq!(snap.spans_recorded, 2 * per_algo as u64);
+    assert_eq!(snap.spans_dropped, 0);
+    for stage in ["queue_wait", "execute", "total"] {
+        for algo in ["nt", "tnn"] {
+            assert_eq!(
+                stage_count(&snap, stage, algo),
+                per_algo as u64,
+                "stage {stage} algo {algo} must hold every sampled request"
+            );
+        }
+    }
+
+    // Per-span timing arithmetic: queue wait and execute are disjoint
+    // sub-intervals of the request, so their sum never exceeds total.
+    let spans = obs.drain_spans();
+    assert_eq!(spans.len(), 2 * per_algo);
+    for s in &spans {
+        assert_eq!(s.outcome, OUTCOME_COMPLETED);
+        let (q, e, t) = (
+            s.queue_wait_us().expect("queue stamped"),
+            s.execute_us().expect("execute stamped"),
+            s.total_us().expect("total stamped"),
+        );
+        assert!(
+            q + e <= t,
+            "queue {q}µs + execute {e}µs > total {t}µs in {s:?}"
+        );
+    }
+
+    // Lifetime counters keep their exact pre-obs meaning.
+    for (router, n) in [(&nt_router, per_algo as u64), (&tnn_router, per_algo as u64)] {
+        let m = router.metrics.snapshot();
+        m.verify_conservation().unwrap();
+        assert_eq!(m.requests, n);
+        assert_eq!(m.completed, n);
+        assert_eq!(m.failed + m.shed, 0);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn windowed_rates_track_a_paced_steady_phase() {
+    // A 200 req/s steady phase replayed in real time: the last-400ms
+    // window must read a rate near the phase's nominal rps (Poisson
+    // arrivals — the tolerance is generous), while the lifetime
+    // counters keep counting everything ever served.
+    let obs = Arc::new(ObsLayer::new(ObsConfig {
+        window_bucket_ms: 50,
+        window_buckets: 8,
+        ..ObsConfig::default()
+    }));
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 2,
+            queue_depth: 32,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            obs: Some(Arc::clone(&obs)),
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(200.0, 1.0, 41);
+    let report = replay(
+        &router,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Paced { speedup: 1.0 },
+            clients: 2,
+            seed: 9,
+        },
+    );
+    report.verify_conservation().unwrap();
+    assert_eq!(report.completed, trace.len() as u64);
+
+    let w = obs.snapshot().window;
+    assert!(w.requests > 0, "window must have seen the tail of the phase");
+    assert!(
+        w.requests <= trace.len() as u64,
+        "a 400ms window cannot hold more than the whole trace"
+    );
+    assert!(
+        (80.0..=500.0).contains(&w.req_per_s),
+        "windowed rate {} req/s too far from the 200 req/s phase",
+        w.req_per_s
+    );
+    assert_eq!(w.shed, 0);
+    assert_eq!(w.shed_rate, 0.0);
+    // Lifetime view is cumulative, window view is recent: both correct.
+    let m = router.metrics.snapshot();
+    assert_eq!(m.requests, trace.len() as u64);
+    engine.shutdown();
+}
+
+#[test]
+fn flight_recorder_fires_under_chaos_with_span_context() {
+    let obs = Arc::new(ObsLayer::new(ObsConfig::default()));
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 0xBAD_5EED,
+        fail_prob: 0.05,
+        panic_prob: 0.03,
+        spike_prob: 0.05,
+        spike: Duration::from_micros(200),
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let mut engine = Engine::restartable(
+        EngineConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                chaos_cfg,
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("restartable chaos pool");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            obs: Some(Arc::clone(&obs)),
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(800.0, 0.5, 23);
+    assert!(trace.len() >= 300, "want a meaty trace, got {}", trace.len());
+    let report = replay_with_chaos(
+        &router,
+        &mut engine,
+        &trace,
+        &ReplayOptions::default(),
+        &WorkerChaos::at_counts(0, 100, 220),
+    )
+    .expect("chaos controller");
+    report.verify_conservation().unwrap();
+    assert!(stats.total() > 0, "chaos must actually fire: {stats:?}");
+
+    // Tracing on changes nothing about the conservation ledger.
+    let m = router.metrics.snapshot();
+    m.verify_conservation().unwrap();
+    assert_eq!(m.completed, report.completed);
+    assert_eq!(m.failed, report.failed);
+    assert_eq!(m.shed, report.shed);
+
+    // Every request — completed, failed, or shed — produced a span.
+    let osnap = obs.snapshot();
+    assert_eq!(
+        osnap.spans_recorded + osnap.spans_dropped,
+        report.submitted,
+        "every submission flattens into exactly one span"
+    );
+
+    // The faults fired the recorder, and at least one dump brackets its
+    // fault: the faulted span plus completed spans around it.
+    let dumps = obs.dumps();
+    assert!(!dumps.is_empty(), "chaos faults must trigger flight dumps");
+    for d in &dumps {
+        assert!(
+            d.trigger == "failure" || d.trigger == "shed",
+            "unexpected trigger {:?}",
+            d.trigger
+        );
+        assert!(!d.spans.is_empty());
+    }
+    assert!(
+        dumps.iter().any(|d| d
+            .spans
+            .iter()
+            .any(|s| s.outcome == OUTCOME_FAILED || s.outcome == OUTCOME_SHED)),
+        "some dump must contain the faulted span"
+    );
+    assert!(
+        dumps.iter().any(|d| {
+            let faulted = d.spans.iter().any(|s| s.outcome != OUTCOME_COMPLETED);
+            let clean = d.spans.iter().any(|s| s.outcome == OUTCOME_COMPLETED);
+            faulted && clean
+        }),
+        "some dump must bracket its fault with completed spans"
+    );
+    engine.shutdown();
+}
+
+#[test]
+fn clean_steady_trace_produces_zero_dumps() {
+    let obs = Arc::new(ObsLayer::new(ObsConfig::default()));
+    let engine = Engine::sim(
+        &GTX1080,
+        EngineConfig {
+            workers: 2,
+            queue_depth: 32,
+            ..EngineConfig::default()
+        },
+    )
+    .expect("sim engine");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            obs: Some(Arc::clone(&obs)),
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(400.0, 0.5, 11);
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    assert_eq!(report.failed + report.shed, 0, "blocking sim path is clean");
+    assert!(obs.dumps().is_empty(), "a clean trace must never dump");
+    assert_eq!(obs.snapshot().recorder_triggered, 0);
+    engine.shutdown();
+}

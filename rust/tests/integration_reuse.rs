@@ -9,6 +9,9 @@
 //! * a model-epoch bump or artifact invalidation always forces a fresh
 //!   execution — stale bits are never served;
 //! * denied artifacts bypass the layer (the non-idempotent opt-out);
+//! * a failed leader's error fans out once per coalesced waiter, and
+//!   every such waiter is counted in `coalesced_failed` (a subset of
+//!   `coalesced` — the follower-visible failure ledger);
 //! * the conservation ledger still balances with reuse on: every cache
 //!   hit counts completed exactly once per client submission.
 
@@ -163,6 +166,90 @@ fn concurrent_identical_requests_execute_once_and_share_one_result() {
     let coalesced = stats.coalesced.load(Ordering::Relaxed);
     assert_eq!(stats.misses.load(Ordering::Relaxed), 1);
     assert_eq!(hits + coalesced, (CLIENTS - 1) as u64);
+    engine.shutdown();
+}
+
+/// Backend whose every execution fails after a single-flight-widening
+/// delay: leaders always fail, so every coalesced waiter must surface
+/// the leader's error and be counted in `coalesced_failed`.
+struct FailingBackend {
+    calls: Arc<AtomicU64>,
+    delay: Duration,
+}
+
+impl ExecBackend for FailingBackend {
+    fn execute(&self, _artifact: &str, _inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+        self.calls.fetch_add(1, Ordering::SeqCst);
+        if !self.delay.is_zero() {
+            std::thread::sleep(self.delay);
+        }
+        anyhow::bail!("injected backend failure")
+    }
+
+    fn name(&self) -> String {
+        "failing".into()
+    }
+}
+
+#[test]
+fn failed_leader_fans_its_error_out_and_counts_coalesced_followers() {
+    let calls = Arc::new(AtomicU64::new(0));
+    let for_pool = Arc::clone(&calls);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 32,
+            ..EngineConfig::default()
+        },
+        move |_| {
+            Ok(Box::new(FailingBackend {
+                calls: Arc::clone(&for_pool),
+                delay: Duration::from_millis(50),
+            }) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("failing engine");
+    let handle = engine.handle();
+    let layer = handle.enable_reuse(ReuseConfig::default());
+    let stats = layer.stats();
+
+    const CLIENTS: usize = 8;
+    let errors: usize = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..CLIENTS)
+            .map(|_| {
+                let handle = handle.clone();
+                s.spawn(move || handle.run("nt_8x8x8", inputs(7)).is_err())
+            })
+            .collect();
+        joins.into_iter().filter(|j| j.join().unwrap()).count()
+    });
+    assert_eq!(errors, CLIENTS, "every client must see the failure");
+
+    // Conservation across the reuse ledger: errors are never cached, so
+    // there are no hits, and every submission is either a (failed)
+    // leader or a coalesced follower of one.
+    let hits = stats.hits.load(Ordering::Relaxed);
+    let coalesced = stats.coalesced.load(Ordering::Relaxed);
+    let coalesced_failed = stats.coalesced_failed.load(Ordering::Relaxed);
+    let misses = stats.misses.load(Ordering::Relaxed);
+    let bypasses = stats.bypasses.load(Ordering::Relaxed);
+    assert_eq!(hits, 0, "failed results must never be served from cache");
+    assert_eq!(bypasses, 0);
+    assert_eq!(misses, calls.load(Ordering::SeqCst), "one execution per leader");
+    assert_eq!(
+        misses + coalesced,
+        CLIENTS as u64,
+        "every submission is exactly one of leader/coalesced"
+    );
+    assert!(
+        coalesced >= 1,
+        "a 50ms single-flight window over 8 concurrent clients must coalesce"
+    );
+    assert_eq!(
+        coalesced_failed, coalesced,
+        "every leader failed, so every coalesced follower counts as coalesced_failed"
+    );
+    assert!(layer.is_empty(), "failures leave nothing cached");
     engine.shutdown();
 }
 

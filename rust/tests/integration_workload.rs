@@ -193,11 +193,7 @@ fn chaos_run_conserves_every_request_and_no_client_hangs() {
         &mut engine,
         &trace,
         &ReplayOptions::default(),
-        &WorkerChaos {
-            worker: 0,
-            kill_after: 100,
-            restart_after: 220,
-        },
+        &WorkerChaos::at_counts(0, 100, 220),
     )
     .expect("chaos controller");
     // replay_with_chaos returning at all proves zero hung clients.
@@ -282,11 +278,7 @@ fn chaos_and_reuse_compose_without_breaking_conservation() {
         &mut engine,
         &trace,
         &ReplayOptions::default(),
-        &WorkerChaos {
-            worker: 0,
-            kill_after: 100,
-            restart_after: 220,
-        },
+        &WorkerChaos::at_counts(0, 100, 220),
     )
     .expect("chaos controller");
     report.verify_conservation().unwrap();
@@ -309,6 +301,62 @@ fn chaos_and_reuse_compose_without_breaking_conservation() {
         report.submitted,
         "reuse classification must cover every submission exactly once"
     );
+    engine.shutdown();
+}
+
+#[test]
+fn time_triggered_chaos_schedule_fires_on_the_trace_clock() {
+    // Wall-clock-threshold schedule: a 1-worker pool is killed 100
+    // trace-milliseconds in and restarted only at 800 trace-ms — well
+    // past the end of the 300 trace-ms trace, so no submitted-count
+    // threshold could ever fire the restart. With blocking admission
+    // and no sibling to steal the dead worker's backlog, every request
+    // queued after the kill can complete only once the time-triggered
+    // restart fires at wall = 800ms / speedup. Replay returning at all
+    // proves the restart fired; the wall-clock floor proves it fired on
+    // the trace clock rather than on pacing alone.
+    let speedup = 4.0;
+    let restart_at = Duration::from_millis(800);
+    let mut engine = Engine::restartable(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..EngineConfig::default()
+        },
+        |_i| Ok(Box::new(SimExecutor::new(&GTX1080)) as Box<dyn ExecBackend>),
+    )
+    .expect("restartable sim pool");
+    let router = Router::new(selector(), engine.handle(), RouterConfig::default());
+    let trace = steady_trace(200.0, 0.3, 37);
+    assert!(trace.len() >= 30, "trace too small: {}", trace.len());
+    let report = replay_with_chaos(
+        &router,
+        &mut engine,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Paced { speedup },
+            clients: 2,
+            seed: 5,
+        },
+        &WorkerChaos::at_times(0, Duration::from_millis(100), restart_at),
+    )
+    .expect("chaos controller");
+    report.verify_conservation().unwrap();
+    assert_eq!(report.submitted, trace.len() as u64);
+    assert_eq!(report.completed, report.submitted, "sim backend never fails");
+    // Pacing alone ends at 300ms/4 = 75ms wall; the restart gate sits at
+    // 800ms/4 = 200ms wall. Allow slack for Duration arithmetic only —
+    // the trigger cannot fire early by construction.
+    let floor = restart_at.div_f64(speedup).saturating_sub(Duration::from_millis(20));
+    assert!(
+        report.wall >= floor,
+        "replay finished before the time-triggered restart could fire: {:?} < {:?}",
+        report.wall,
+        floor
+    );
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.completed, report.completed);
     engine.shutdown();
 }
 

@@ -1,0 +1,139 @@
+//! Property-based invariants over the latency histogram's bucket
+//! geometry and percentile estimator — the structure every stage
+//! histogram, Prometheus `le` edge, and flight-recorder p99 trigger
+//! sits on.
+//!
+//! The bucket scheme is 4 linear sub-buckets per power of two of
+//! microseconds. Indices 0..=251 partition the full `u64` µs range;
+//! 252..=255 are unreachable headroom (`bucket_index` tops out at
+//! `(63-1)*4 + 3 = 251` for `u64::MAX`), so geometry properties are
+//! asserted over the reachable range.
+
+use mtnn::coordinator::metrics::{
+    bucket_index, bucket_lower, bucket_width, percentile_of, LatencyHistogram, BUCKETS,
+};
+use mtnn::testutil::prop::check;
+
+/// Highest bucket any `u64` µs value can land in.
+const TOP: usize = 251;
+
+#[test]
+fn bucket_edges_partition_the_reachable_range() {
+    // Contiguity: every bucket starts exactly where the previous ends.
+    for i in 0..TOP {
+        assert_eq!(
+            bucket_lower(i + 1),
+            bucket_lower(i) + bucket_width(i),
+            "gap or overlap between buckets {i} and {}",
+            i + 1
+        );
+    }
+    // Round trip: each bucket's lower edge maps back to that bucket, and
+    // the value just below it maps to the previous bucket.
+    for i in 0..=TOP {
+        let lo = bucket_lower(i);
+        assert_eq!(bucket_index(lo), i, "lower edge of bucket {i} misclassified");
+        if i > 0 {
+            assert_eq!(
+                bucket_index(lo - 1),
+                i - 1,
+                "value below bucket {i}'s lower edge misclassified"
+            );
+        }
+    }
+    assert_eq!(bucket_index(u64::MAX), TOP);
+    assert!(TOP < BUCKETS);
+}
+
+#[test]
+fn prop_bucket_index_is_monotone_over_u64() {
+    check("bucket_index monotone", 500, |g| {
+        // mantissa × 2^shift reaches every magnitude up to 2^64 while
+        // staying shrinkable.
+        let mut draw = |g: &mut mtnn::testutil::prop::Gen| -> u64 {
+            let mantissa = g.i64_in(0, 1 << 20) as u64;
+            let shift = g.usize_in(0, 44) as u32;
+            mantissa.checked_shl(shift).unwrap_or(u64::MAX)
+        };
+        let x = draw(g);
+        let y = draw(g);
+        let (a, b) = if x <= y { (x, y) } else { (y, x) };
+        let (ia, ib) = (bucket_index(a), bucket_index(b));
+        assert!(ia <= ib, "bucket_index({a})={ia} > bucket_index({b})={ib}");
+        // Same bucket ⇒ the value sits inside that bucket's edges.
+        let lo = bucket_lower(ia);
+        assert!(
+            a >= lo && (ia == TOP || a < bucket_lower(ia + 1)),
+            "{a} outside bucket {ia} [{lo}, {})",
+            bucket_lower(ia + 1)
+        );
+    });
+}
+
+#[test]
+fn prop_percentiles_are_ordered_on_sparse_distributions() {
+    check("percentile ordering", 300, |g| {
+        // Adversarially sparse: a handful of magnitudes spread across the
+        // full exponent range, each with its own multiplicity — the shape
+        // that breaks naive interpolation.
+        let h = LatencyHistogram::default();
+        let distinct = g.usize_in(1, 6);
+        let mut recorded = 0u64;
+        for _ in 0..distinct {
+            let mag = 1u64 << g.usize_in(0, 40);
+            let us = (mag + g.i64_in(0, mag.min(1 << 20) as i64) as u64).max(1);
+            let reps = g.usize_in(1, 400);
+            for _ in 0..reps {
+                h.record_us(us as f64);
+            }
+            recorded += reps as u64;
+        }
+        assert_eq!(h.count(), recorded);
+        let (p50, p95, p99, mean) = h.summary();
+        let max = h.max_observed_us() as f64;
+        assert!(p50.is_finite() && p95.is_finite() && p99.is_finite() && mean.is_finite());
+        assert!(p50 >= 0.0);
+        assert!(p50 <= p95, "p50 {p50} > p95 {p95}");
+        assert!(p95 <= p99, "p95 {p95} > p99 {p99}");
+        assert!(p99 <= max, "p99 {p99} > max {max}");
+        assert!(mean <= max, "mean {mean} > max {max} (integer-µs inputs)");
+        // Cumulative exposition points: counts ascend to the total and
+        // edges strictly ascend.
+        let pts = h.bucket_points();
+        assert_eq!(pts.last().map(|&(_, c)| c), Some(recorded));
+        for w in pts.windows(2) {
+            assert!(w[0].0 < w[1].0, "le edges must strictly ascend: {pts:?}");
+            assert!(w[0].1 < w[1].1, "cumulative counts must strictly ascend: {pts:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_percentile_of_never_exceeds_observed_max() {
+    check("percentile clamps to max", 300, |g| {
+        let mut counts = vec![0u64; BUCKETS];
+        let n = g.usize_in(1, 5);
+        let mut total = 0u64;
+        let mut max_us = 0u64;
+        for _ in 0..n {
+            let us = (1u64 << g.usize_in(0, 40)).max(1);
+            let c = g.usize_in(1, 100) as u64;
+            counts[bucket_index(us)] += c;
+            total += c;
+            max_us = max_us.max(us);
+        }
+        let q = g.f64_in(0.0, 100.0);
+        let p = percentile_of(&counts, total, max_us, q);
+        assert!(p.is_finite() && p >= 0.0);
+        assert!(p <= max_us as f64, "q={q}: {p} > max {max_us}");
+    });
+}
+
+#[test]
+fn summary_is_nan_when_empty() {
+    let h = LatencyHistogram::default();
+    let (p50, p95, p99, mean) = h.summary();
+    assert!(p50.is_nan() && p95.is_nan() && p99.is_nan() && mean.is_nan());
+    assert_eq!(h.count(), 0);
+    assert!(h.bucket_points().is_empty());
+}
