@@ -29,13 +29,24 @@
 //! `--trace chaos` runs the adversarial workload lab instead: a seeded
 //! trace replayed as fast as possible through a restartable sim-backed
 //! pool wrapped in the fault-injecting chaos backend (transient
-//! failures, contained panics, latency spikes), with one worker killed
-//! and restarted mid-trace, the online loop recovering a mistrained
-//! model throughout, and the conservation invariant
-//! `completed + failed + shed == submitted` checked at the end:
+//! failures, contained panics, capped latency spikes), with one worker
+//! killed and restarted mid-trace, the online loop recovering a
+//! mistrained model throughout, and the conservation invariant
+//! `completed + failed + shed + timed_out == submitted` checked at the
+//! end. `--deadline-ms N` stamps every request with an N-millisecond
+//! deadline (the chaos spikes are stretched past it so expiries — at
+//! the reply wait and dropped unexecuted at worker dequeue — actually
+//! happen), and `--retries K` arms the bounded decorrelated-jitter
+//! retry policy so injected transient faults are masked instead of
+//! surfacing. The chaos run finishes with a deterministic
+//! circuit-breaker vignette: a sick `nt_` artifact trips its breaker
+//! open, open traffic is coerced onto the TNN alternate, and a
+//! half-open probe closes it once the artifact heals — every
+//! transition printed as a `breaker <state>: artifact=…` line:
 //!
 //!     cargo run --release --example serve_gemm -- \
-//!         --trace chaos --requests 400 --clients 4 --workers 2
+//!         --trace chaos --requests 400 --clients 4 --workers 2 \
+//!         --deadline-ms 25 --retries 2
 //!
 //! In chaos and online modes, `--metrics-prom` prints the final metrics
 //! snapshot in Prometheus text exposition format 0.0.4 and
@@ -45,8 +56,8 @@
 //! for every chaos-triggered span dump.
 
 use mtnn::coordinator::{
-    AdmissionControl, Engine, EngineConfig, ExecBackend, GemmRequest, MetricsSnapshot,
-    ReuseConfig, Router, RouterConfig,
+    AdmissionControl, BreakerConfig, BreakerState, Engine, EngineConfig, ExecBackend, GemmRequest,
+    MetricsSnapshot, RetryPolicy, ReuseConfig, Router, RouterConfig,
 };
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::gemm::cpu::Matrix;
@@ -337,6 +348,8 @@ fn run_trace_chaos(
     requests: usize,
     clients: usize,
     workers: usize,
+    deadline: Option<Duration>,
+    retries: u32,
     metrics_prom: bool,
     metrics_json: bool,
 ) -> anyhow::Result<()> {
@@ -354,7 +367,20 @@ fn run_trace_chaos(
         fail_prob: 0.04,
         panic_prob: 0.02,
         spike_prob: 0.04,
-        spike: Duration::from_micros(300),
+        // With a deadline armed, stretch the spikes past it so a spiked
+        // execution reliably blows its own request's budget — that is
+        // what makes `timed_out` nonzero in the smoke output. The cap
+        // must track the stretch or it would silently re-truncate the
+        // spike below the deadline.
+        spike: match deadline {
+            Some(d) => d + Duration::from_millis(10),
+            None => Duration::from_micros(300),
+        },
+        spike_cap: match deadline {
+            Some(d) => d + Duration::from_millis(10),
+            None => ChaosConfig::default().spike_cap,
+        },
+        ..ChaosConfig::default()
     };
     let stats_pool = Arc::clone(&stats);
     let mut engine = Engine::restartable(
@@ -366,7 +392,7 @@ fn run_trace_chaos(
         move |i| {
             Ok(Box::new(ChaosBackend::new(
                 Box::new(SimExecutor::new(&GTX1080)),
-                chaos_cfg,
+                chaos_cfg.clone(),
                 i,
                 Arc::clone(&stats_pool),
             )) as Box<dyn ExecBackend>)
@@ -393,6 +419,11 @@ fn run_trace_chaos(
         RouterConfig {
             admission: AdmissionControl::RejectWhenBusy,
             obs: Some(Arc::clone(&obs)),
+            deadline,
+            retry: RetryPolicy {
+                max_retries: retries,
+                ..RetryPolicy::default()
+            },
             ..RouterConfig::online(online)
         },
     );
@@ -446,31 +477,35 @@ fn run_trace_chaos(
     snap.verify_conservation().map_err(anyhow::Error::msg)?;
     println!(
         "     chaos: {} trace events replayed in {wall:.2?}; injected failures={} panics={} \
-         spikes={}; worker {} killed after {} submissions, restarted after {}",
+         spikes={} (delay total {:.1}ms); worker {} killed after {} submissions, restarted \
+         after {}",
         trace.len(),
         stats.injected_failures.load(std::sync::atomic::Ordering::Relaxed),
         stats.injected_panics.load(std::sync::atomic::Ordering::Relaxed),
         stats.injected_spikes.load(std::sync::atomic::Ordering::Relaxed),
+        stats.delay_us() as f64 / 1000.0,
         chaos.worker,
         chaos.kill_after,
         chaos.restart_after,
     );
     println!(
-        "conservation OK: completed={} + failed={} + shed={} == submitted={}",
-        report.completed, report.failed, report.shed, report.submitted
+        "conservation OK: completed={} + failed={} + shed={} + timed_out={} == submitted={}",
+        report.completed, report.failed, report.shed, report.timed_out, report.submitted
     );
     println!("    server: {}", snap.render());
     let obs_snap = obs.snapshot();
     println!(
         "       obs: spans recorded={} dropped={} | window req/s={:.1} shed={:.1}% \
-         reuse-hit={:.1}% probe={:.1}% mispredict={:.1}%",
+         timeout={:.1}% reuse-hit={:.1}% probe={:.1}% mispredict={:.1}% retries={}",
         obs_snap.spans_recorded,
         obs_snap.spans_dropped,
         obs_snap.window.req_per_s,
         obs_snap.window.shed_rate * 100.0,
+        obs_snap.window.timeout_rate * 100.0,
         obs_snap.window.reuse_hit_rate * 100.0,
         obs_snap.window.probe_rate * 100.0,
         obs_snap.window.mispredict_rate * 100.0,
+        obs_snap.window.retries,
     );
     for dump in obs.dumps() {
         println!(
@@ -481,6 +516,80 @@ fn run_trace_chaos(
         );
     }
     print_expositions(&snap, metrics_prom, metrics_json);
+    engine.shutdown();
+    breaker_demo()
+}
+
+/// Deterministic circuit-breaker vignette closing out the chaos smoke:
+/// a single-worker pool whose `nt_` artifacts are sick for the
+/// backend's first 5 calls, behind a force-NT router with an aggressive
+/// breaker. Two sick calls trip the rolling window open, open traffic
+/// is coerced onto the TNN alternate (marked Forced so the online loop
+/// never learns from it), and once the cooldown passes a half-open
+/// probe finds the artifact healed and closes the breaker — every
+/// transition printed.
+fn breaker_demo() -> anyhow::Result<()> {
+    use mtnn::workload::{ChaosBackend, ChaosConfig, ChaosStats};
+
+    let stats = Arc::new(ChaosStats::default());
+    let cfg = ChaosConfig {
+        seed: 11,
+        sick_prefix: "nt_".into(),
+        sick_calls: 5,
+        ..ChaosConfig::default()
+    };
+    let stats_pool = Arc::clone(&stats);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                cfg.clone(),
+                i,
+                Arc::clone(&stats_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )?;
+    let router = Router::new(
+        Selector::train_default(&collect_paper_dataset()),
+        engine.handle(),
+        RouterConfig {
+            force: Some(Algorithm::Nt),
+            breaker: Some(BreakerConfig {
+                window: 8,
+                min_samples: 2,
+                failure_threshold: 0.5,
+                open_cooldown: Duration::from_millis(30),
+            }),
+            ..RouterConfig::default()
+        },
+    );
+    let req = |s: u64| GemmRequest {
+        gpu: &GTX1080,
+        shape: GemmShape::new(128, 128, 128),
+        a: Matrix::random(128, 128, s),
+        b: Matrix::random(128, 128, s ^ 0xBEEF),
+    };
+    for i in 0..2u64 {
+        let _ = router.serve(req(i)); // sick NT → typed transient failures
+    }
+    for i in 2..5u64 {
+        router.serve(req(i))?; // breaker open: coerced onto TNN
+    }
+    std::thread::sleep(Duration::from_millis(40));
+    router.serve(req(6))?; // half-open probe finds the artifact healed
+    let reg = router.breakers().expect("breaker configured");
+    for e in reg.events() {
+        println!("   breaker {}: artifact={}", e.to.name(), e.artifact);
+    }
+    anyhow::ensure!(
+        reg.state("nt_128x128x128") == BreakerState::Closed,
+        "breaker demo must end with the sick artifact's breaker closed"
+    );
     engine.shutdown();
     Ok(())
 }
@@ -510,15 +619,36 @@ fn main() -> anyhow::Result<()> {
     let metrics_prom = args.flag("metrics-prom");
     let metrics_json = args.flag("metrics-json");
     let trace_mode = args.get("trace", "");
+    let deadline_ms: u64 = args.get_num("deadline-ms", 0);
+    let retries: u64 = args.get_num("retries", 0);
     args.finish()?;
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
     if trace_mode == "chaos" {
         println!(
             "replaying a seeded ~{requests}-request chaos trace from {clients} concurrent \
              clients on a {}-worker sim engine pool (fault injection + worker kill/restart \
-             + online adaptive selection)",
-            workers.max(2)
+             + online adaptive selection{}{})",
+            workers.max(2),
+            if deadline.is_some() {
+                format!(" + {deadline_ms}ms deadlines")
+            } else {
+                String::new()
+            },
+            if retries > 0 {
+                format!(" + {retries} bounded retries")
+            } else {
+                String::new()
+            },
         );
-        run_trace_chaos(requests, clients, workers, metrics_prom, metrics_json)?;
+        run_trace_chaos(
+            requests,
+            clients,
+            workers,
+            deadline,
+            retries as u32,
+            metrics_prom,
+            metrics_json,
+        )?;
     } else if !trace_mode.is_empty() {
         anyhow::bail!("unknown --trace '{trace_mode}' (chaos)");
     } else if online {

@@ -77,6 +77,100 @@ impl fmt::Display for EngineBusy {
 
 impl std::error::Error for EngineBusy {}
 
+/// Deadline expiry: the request ran out of its per-request time budget —
+/// at admission, while waiting in a worker queue (the job is dropped
+/// without executing), or while the client waited for the response.
+///
+/// Distinct from both [`EngineBusy`] (load shed) and ordinary execution
+/// failure: the conservation ledger counts it in its own `timed_out`
+/// term. Detect it with [`DeadlineExceeded::is`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DeadlineExceeded;
+
+impl DeadlineExceeded {
+    /// Whether `err` is a deadline expiry.
+    pub fn is(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<DeadlineExceeded>().is_some()
+    }
+}
+
+impl fmt::Display for DeadlineExceeded {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("deadline exceeded: request ran out of its time budget")
+    }
+}
+
+impl std::error::Error for DeadlineExceeded {}
+
+/// Fail-fast rejection because the artifact's circuit breaker is open
+/// and no alternate-algorithm fallback was viable.
+///
+/// Distinct from [`EngineBusy`]: a shed means *the pool* has no room, a
+/// breaker-open means *this artifact* is considered sick. Counted as a
+/// failure (not a shed) in the conservation ledger. Detect it with
+/// [`BreakerOpen::is`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BreakerOpen;
+
+impl BreakerOpen {
+    /// Whether `err` is a breaker-open rejection.
+    pub fn is(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<BreakerOpen>().is_some()
+    }
+}
+
+impl fmt::Display for BreakerOpen {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("circuit breaker open: artifact is failing fast")
+    }
+}
+
+impl std::error::Error for BreakerOpen {}
+
+/// Typed marker for *transient* backend faults — failures a bounded
+/// retry is allowed to re-attempt (injected chaos faults, recoverable
+/// I/O hiccups). Anything not carrying this marker is classified
+/// [`ErrorClass::Permanent`] and is never retried.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TransientFault(pub String);
+
+impl TransientFault {
+    /// Whether `err` carries the transient marker.
+    pub fn is(err: &anyhow::Error) -> bool {
+        err.downcast_ref::<TransientFault>().is_some()
+    }
+}
+
+impl fmt::Display for TransientFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for TransientFault {}
+
+/// Retry-relevant classification of an `ExecBackend` failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorClass {
+    /// Worth re-attempting: the fault is not expected to recur.
+    Transient,
+    /// Retrying would repeat the same failure (or the error is a policy
+    /// outcome — shed, timeout, breaker — that retries must not mask).
+    Permanent,
+}
+
+/// Classify a backend error for the router's retry policy. Only errors
+/// carrying the [`TransientFault`] marker are transient; sheds,
+/// timeouts, and breaker rejections are policy outcomes, never retried
+/// as if they were backend faults.
+pub fn classify_error(err: &anyhow::Error) -> ErrorClass {
+    if TransientFault::is(err) {
+        ErrorClass::Transient
+    } else {
+        ErrorClass::Permanent
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +182,36 @@ mod tests {
         assert!(e.to_string().contains("busy"));
         let other = anyhow::anyhow!("some other failure");
         assert!(!EngineBusy::is(&other));
+    }
+
+    #[test]
+    fn lifecycle_errors_are_typed_and_distinct() {
+        let timeout = anyhow::Error::new(DeadlineExceeded);
+        let breaker = anyhow::Error::new(BreakerOpen);
+        let busy = anyhow::Error::new(EngineBusy);
+        assert!(DeadlineExceeded::is(&timeout));
+        assert!(!DeadlineExceeded::is(&breaker));
+        assert!(!DeadlineExceeded::is(&busy));
+        assert!(BreakerOpen::is(&breaker));
+        assert!(!BreakerOpen::is(&timeout));
+        assert!(!EngineBusy::is(&breaker));
+        assert!(timeout.to_string().contains("deadline"));
+        assert!(breaker.to_string().contains("breaker"));
+    }
+
+    #[test]
+    fn transient_marker_drives_classification() {
+        let t = anyhow::Error::new(TransientFault("chaos: injected transient failure".into()));
+        assert_eq!(classify_error(&t), ErrorClass::Transient);
+        assert!(t.to_string().contains("injected transient"));
+        for e in [
+            anyhow::anyhow!("numerical blowup"),
+            anyhow::Error::new(EngineBusy),
+            anyhow::Error::new(DeadlineExceeded),
+            anyhow::Error::new(BreakerOpen),
+        ] {
+            assert_eq!(classify_error(&e), ErrorClass::Permanent, "{e}");
+        }
     }
 
     #[test]

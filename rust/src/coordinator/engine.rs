@@ -61,7 +61,8 @@
 //! one queue, FIFO service, blocking backpressure (and nobody to steal
 //! from).
 
-use super::backend::{EngineBusy, ExecBackend};
+use super::backend::{DeadlineExceeded, EngineBusy, ExecBackend};
+use super::lifecycle::Deadline;
 use super::metrics::BatchGauge;
 use super::reuse::{Begin, ReuseConfig, ReuseLayer, ReuseTicket};
 use crate::gemm::cpu::Matrix;
@@ -98,6 +99,11 @@ pub struct EngineJob {
     /// stamps dequeue / batch / execute boundaries on it. `None` costs
     /// nothing on the hot path.
     pub span: Option<SpanHandle>,
+    /// Per-request expiry. A worker that pulls an expired job drops it
+    /// *without executing*: the reuse ticket resolves, the depth gauge
+    /// balances, and the submitter receives a typed
+    /// [`DeadlineExceeded`] — the backend never sees the job.
+    pub deadline: Option<Deadline>,
 }
 
 enum Cmd {
@@ -449,6 +455,7 @@ impl EngineHandle {
         inputs: Vec<Matrix>,
         block: bool,
         span: Option<SpanHandle>,
+        deadline: Option<Deadline>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let (tx, rx) = mpsc::channel();
         let reuse = match self.shared.reuse.get() {
@@ -480,6 +487,15 @@ impl EngineHandle {
             },
             None => None,
         };
+        // Admission check: a request that arrives already expired never
+        // enters a queue. A reuse *leader* resolves its ticket first so
+        // coalesced waiters inherit the timeout instead of hanging.
+        if deadline.as_ref().is_some_and(|d| d.expired()) {
+            if let (Some(t), Some(layer)) = (reuse.as_ref(), self.shared.reuse.get()) {
+                layer.complete(t, &Err(anyhow::Error::new(DeadlineExceeded)));
+            }
+            return Err(anyhow::Error::new(DeadlineExceeded));
+        }
         if let Some(cell) = &span {
             cell.stamp_enqueue();
         }
@@ -490,6 +506,7 @@ impl EngineHandle {
                 respond: tx,
                 reuse,
                 span,
+                deadline,
             }),
             block,
         )?;
@@ -503,7 +520,7 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        self.submit_with(artifact, inputs, true, None)
+        self.submit_with(artifact, inputs, true, None, None)
     }
 
     /// Fail-fast submission: hand off to any worker with queue room, and
@@ -513,21 +530,25 @@ impl EngineHandle {
         artifact: String,
         inputs: Vec<Matrix>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        self.submit_with(artifact, inputs, false, None)
+        self.submit_with(artifact, inputs, false, None, None)
     }
 
     /// Submit with an optional trace span: the engine stamps reuse
     /// classification, enqueue, and (in the worker) dequeue / batch /
     /// execute boundaries on it. `block` selects the [`Self::submit`] /
-    /// [`Self::try_submit`] admission behavior.
+    /// [`Self::try_submit`] admission behavior. A `deadline` is checked
+    /// at admission and again by the worker at dequeue — an expired job
+    /// is dropped *without executing* and its submitter receives a typed
+    /// [`DeadlineExceeded`].
     pub fn submit_traced(
         &self,
         artifact: String,
         inputs: Vec<Matrix>,
         block: bool,
         span: Option<SpanHandle>,
+        deadline: Option<Deadline>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
-        self.submit_with(artifact, inputs, block, span)
+        self.submit_with(artifact, inputs, block, span, deadline)
     }
 
     /// Enable cross-request result reuse (output cache + single-flight
@@ -619,6 +640,12 @@ fn worker_loop(
         };
         match cmd {
             Cmd::Run(job) => {
+                // Deadline check at dequeue: an expired job is dropped
+                // without ever reaching the backend.
+                if job_expired(&job) {
+                    expire_job(&shared, &depths, me, job);
+                    continue;
+                }
                 if let Some(cell) = &job.span {
                     cell.stamp_dequeue();
                 }
@@ -630,10 +657,14 @@ fn worker_loop(
                         matches!(&stash[i], Cmd::Run(j) if j.artifact == batch[0].artifact);
                     if same {
                         if let Some(Cmd::Run(j)) = stash.remove(i) {
-                            if let Some(cell) = &j.span {
-                                cell.stamp_dequeue();
+                            if job_expired(&j) {
+                                expire_job(&shared, &depths, me, j);
+                            } else {
+                                if let Some(cell) = &j.span {
+                                    cell.stamp_dequeue();
+                                }
+                                batch.push(j);
                             }
-                            batch.push(j);
                         }
                     } else {
                         i += 1;
@@ -651,10 +682,14 @@ fn worker_loop(
                         };
                         match got {
                             Some(Cmd::Run(j)) if j.artifact == batch[0].artifact => {
-                                if let Some(cell) = &j.span {
-                                    cell.stamp_dequeue();
+                                if job_expired(&j) {
+                                    expire_job(&shared, &depths, me, j);
+                                } else {
+                                    if let Some(cell) = &j.span {
+                                        cell.stamp_dequeue();
+                                    }
+                                    batch.push(j)
                                 }
-                                batch.push(j)
                             }
                             Some(Cmd::Shutdown) => {
                                 draining = true;
@@ -671,6 +706,13 @@ fn worker_loop(
                 g.max.fetch_max(batch.len() as u64, Ordering::Relaxed);
                 let batch_len = batch.len();
                 for job in batch {
+                    // Last-chance deadline check: earlier batch members
+                    // may have eaten the whole budget while this one sat
+                    // collected — it still never executes.
+                    if job_expired(&job) {
+                        expire_job(&shared, &depths, me, job);
+                        continue;
+                    }
                     if let Some(cell) = &job.span {
                         cell.stamp_batch(batch_len, me);
                         cell.stamp_exec_start();
@@ -739,6 +781,24 @@ fn worker_loop(
             Cmd::Shutdown | Cmd::Die => {}
         }
     }
+}
+
+/// Has this job's deadline passed?
+fn job_expired(job: &EngineJob) -> bool {
+    job.deadline.as_ref().is_some_and(|d| d.expired())
+}
+
+/// Drop one expired job without executing it: balance the depth gauge,
+/// resolve any reuse ticket (coalesced waiters inherit the timeout —
+/// they share the leader's deadline fate), and send the submitter a
+/// typed [`DeadlineExceeded`] so the router can account it as
+/// `timed_out` rather than `failed`.
+fn expire_job(shared: &PoolShared, depths: &[AtomicU64], idx: usize, job: Box<EngineJob>) {
+    depths[idx].fetch_sub(1, Ordering::Relaxed);
+    if let (Some(t), Some(layer)) = (job.reuse.as_ref(), shared.reuse.get()) {
+        layer.complete(t, &Err(anyhow::Error::new(DeadlineExceeded)));
+    }
+    let _ = job.respond.send(Err(anyhow::Error::new(DeadlineExceeded)));
 }
 
 /// Fail one swept `Run` command: balance the depth gauge, resolve any
@@ -1497,6 +1557,90 @@ mod tests {
             1,
             "five identical submissions, one backend execution"
         );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn expired_submission_is_rejected_at_admission() {
+        let engine = Engine::native(8).unwrap();
+        let handle = engine.handle();
+        let a = Matrix::random(8, 8, 1);
+        let dead = Deadline::after(Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(1));
+        let err = handle
+            .submit_traced("nt_8x8x8".into(), vec![a.clone(), a], true, None, Some(dead))
+            .unwrap_err();
+        assert!(DeadlineExceeded::is(&err), "{err}");
+        assert_eq!(handle.queue_depths(), vec![0], "nothing was enqueued");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn expired_queued_jobs_are_dropped_without_executing() {
+        // One worker, gated backend: the first job blocks inside
+        // execute() while short-deadline jobs pile up behind it and
+        // expire in the queue. When the gate opens, the worker must drop
+        // them at dequeue — the backend execution count stays at 1 and
+        // every expired submitter receives a typed DeadlineExceeded.
+        let entered = Arc::new(AtomicU64::new(0));
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let engine = Engine::pool(
+            EngineConfig {
+                workers: 1,
+                queue_depth: 16,
+                batch_window: Duration::ZERO,
+                max_batch: 1,
+            },
+            |_| {
+                Ok(Box::new(GatedCountingExecutor {
+                    entered: Arc::clone(&entered),
+                    gate: Arc::clone(&gate),
+                }) as Box<dyn ExecBackend>)
+            },
+        )
+        .unwrap();
+        let handle = engine.handle();
+        let a = Matrix::random(8, 8, 11);
+        let lead_rx = handle
+            .submit("nt_8x8x8".into(), vec![a.clone(), a.clone()])
+            .unwrap();
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while entered.load(Ordering::SeqCst) == 0 {
+            assert!(Instant::now() < deadline, "leader never started executing");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        // Queue three jobs with deadlines that expire while the worker is
+        // still stuck on the lead job.
+        let doomed: Vec<_> = (0..3)
+            .map(|_| {
+                handle
+                    .submit_traced(
+                        "nt_8x8x8".into(),
+                        vec![a.clone(), a.clone()],
+                        true,
+                        None,
+                        Some(Deadline::after(Duration::from_millis(5))),
+                    )
+                    .unwrap()
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        {
+            let (lock, cvar) = &*gate;
+            *lock.lock().unwrap() = true;
+            cvar.notify_all();
+        }
+        lead_rx.recv().unwrap().unwrap();
+        for rx in doomed {
+            let err = rx.recv().unwrap().unwrap_err();
+            assert!(DeadlineExceeded::is(&err), "{err}");
+        }
+        assert_eq!(
+            entered.load(Ordering::SeqCst),
+            1,
+            "expired jobs never reached the backend"
+        );
+        assert_eq!(handle.queue_depths(), vec![0], "gauges balanced after expiry");
         engine.shutdown();
     }
 

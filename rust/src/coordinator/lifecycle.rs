@@ -1,0 +1,824 @@
+//! Request-lifecycle policy: deadlines, bounded-retry backoff,
+//! per-artifact circuit breakers, and the overload-brownout ladder.
+//!
+//! The router (`super::router`) is the only consumer; everything here is
+//! mechanism, deliberately free of engine or selector types so each
+//! policy is unit-testable in isolation:
+//!
+//! * [`Deadline`] — an absolute expiry stamped at `Router::serve` entry
+//!   and carried through the engine queue, so expiry is checked at
+//!   admission, at worker dequeue (expired jobs are dropped without
+//!   executing), and while the client waits for the response.
+//! * [`DecorrelatedJitter`] — the retry backoff schedule: each sleep is
+//!   drawn uniformly from `[base, min(cap, base·3^attempt)]` with a
+//!   deterministic per-request RNG, so concurrent retriers decorrelate
+//!   while the effective upper bound grows monotonically to `cap` and
+//!   any seed replays the exact same schedule.
+//! * [`BreakerRegistry`] — per-artifact circuit breakers over rolling
+//!   outcome windows: Closed →(failure rate over threshold)→ Open
+//!   (fail fast) →(cooldown)→ HalfOpen (one probe) →(probe success)→
+//!   Closed, with every transition recorded for metrics and logs.
+//! * [`BrownoutController`] — the graceful-degradation ladder driven by
+//!   the observability layer's windowed rates: sustained shed-rate /
+//!   p99 pressure steps the level up one rung at a time (disable shadow
+//!   probes → disable trace sampling → disable reuse-cache inserts) and
+//!   sustained calm steps it back down in reverse.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::obs::WindowRates;
+use crate::util::rng::SplitMix64;
+
+// ---- deadlines -------------------------------------------------------------
+
+/// An absolute per-request expiry. `Copy` so it rides inside
+/// `EngineJob` and across retry re-entries without bookkeeping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    /// A deadline `budget` from now.
+    pub fn after(budget: Duration) -> Deadline {
+        Deadline {
+            at: Instant::now() + budget,
+        }
+    }
+
+    /// A deadline at an absolute instant.
+    pub fn at(at: Instant) -> Deadline {
+        Deadline { at }
+    }
+
+    /// Whether the deadline has passed.
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+
+    /// Budget remaining, or `None` once expired.
+    pub fn remaining(&self) -> Option<Duration> {
+        let now = Instant::now();
+        if now >= self.at {
+            None
+        } else {
+            Some(self.at - now)
+        }
+    }
+}
+
+// ---- bounded retries -------------------------------------------------------
+
+/// How many times (and how patiently) the router re-attempts a
+/// transient backend failure. `max_retries: 0` (the default) disables
+/// retries entirely — the seed behaviour.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Re-attempts after the first try (0 = no retries).
+    pub max_retries: u32,
+    /// Backoff floor.
+    pub base: Duration,
+    /// Backoff ceiling.
+    pub cap: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 0,
+            base: Duration::from_micros(200),
+            cap: Duration::from_millis(20),
+        }
+    }
+}
+
+/// Decorrelated-jitter backoff: attempt `k` sleeps a uniform draw from
+/// `[base, min(cap, base·3^k)]`. The upper bound is monotone
+/// non-decreasing and saturates at `cap`; the draw itself is jittered so
+/// a thundering herd of retriers spreads out. Deterministic under its
+/// seed — the chaos proofs replay exact schedules.
+#[derive(Debug, Clone)]
+pub struct DecorrelatedJitter {
+    base_us: u64,
+    cap_us: u64,
+    upper_us: u64,
+    rng: SplitMix64,
+}
+
+impl DecorrelatedJitter {
+    pub fn new(policy: &RetryPolicy, seed: u64) -> DecorrelatedJitter {
+        let base_us = (policy.base.as_micros() as u64).max(1);
+        let cap_us = (policy.cap.as_micros() as u64).max(base_us);
+        DecorrelatedJitter {
+            base_us,
+            cap_us,
+            upper_us: base_us,
+            rng: SplitMix64::new(seed),
+        }
+    }
+
+    /// The next sleep, in µs. Always within `base ..= cap`.
+    pub fn next_us(&mut self) -> u64 {
+        self.upper_us = self.upper_us.saturating_mul(3).min(self.cap_us);
+        let span = self.upper_us - self.base_us;
+        self.base_us + if span == 0 { 0 } else { self.rng.next_u64() % (span + 1) }
+    }
+
+    /// Current effective upper bound in µs (monotone non-decreasing
+    /// across `next_us` calls; exposed for the property tests).
+    pub fn upper_us(&self) -> u64 {
+        self.upper_us
+    }
+}
+
+// ---- per-artifact circuit breakers -----------------------------------------
+
+/// Breaker tuning. The rolling window is per artifact; an artifact
+/// whose recent failure rate crosses `failure_threshold` trips open.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Rolling outcome-window size per artifact.
+    pub window: usize,
+    /// Outcomes required in the window before the breaker may trip.
+    pub min_samples: usize,
+    /// Failure fraction (within the window) that trips Closed → Open.
+    pub failure_threshold: f64,
+    /// How long an open breaker fails fast before allowing a half-open
+    /// probe through.
+    pub open_cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> BreakerConfig {
+        BreakerConfig {
+            window: 16,
+            min_samples: 4,
+            failure_threshold: 0.5,
+            open_cooldown: Duration::from_millis(100),
+        }
+    }
+}
+
+/// Breaker state, snapshotted for metrics and tests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// What `admit` tells the router to do with a request for an artifact.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerDecision {
+    /// Breaker closed: serve normally.
+    Allow,
+    /// Breaker half-open: this request is the recovery probe — serve it
+    /// on the original artifact and report the outcome.
+    Probe,
+    /// Breaker open: fail fast (or fall back to the alternate
+    /// algorithm's artifact).
+    Open,
+}
+
+/// One recorded state transition (bounded log; oldest dropped).
+#[derive(Debug, Clone)]
+pub struct BreakerEvent {
+    pub artifact: String,
+    pub to: BreakerState,
+}
+
+struct ArtifactBreaker {
+    state: BreakerState,
+    /// Rolling recent outcomes; `true` = failure.
+    outcomes: VecDeque<bool>,
+    opened_at: Instant,
+    /// A half-open probe currently in flight.
+    probe_in_flight: bool,
+}
+
+impl ArtifactBreaker {
+    fn new() -> ArtifactBreaker {
+        ArtifactBreaker {
+            state: BreakerState::Closed,
+            outcomes: VecDeque::new(),
+            opened_at: Instant::now(),
+            probe_in_flight: false,
+        }
+    }
+
+    fn push_outcome(&mut self, failed: bool, window: usize) {
+        if self.outcomes.len() == window.max(1) {
+            self.outcomes.pop_front();
+        }
+        self.outcomes.push_back(failed);
+    }
+
+    fn failure_rate(&self) -> f64 {
+        if self.outcomes.is_empty() {
+            return 0.0;
+        }
+        self.outcomes.iter().filter(|&&f| f).count() as f64 / self.outcomes.len() as f64
+    }
+}
+
+const MAX_BREAKER_EVENTS: usize = 256;
+
+/// All per-artifact breakers behind one lock. Every router touch is a
+/// short critical section over a small map — the breaker path is far
+/// off the per-request hot path until something is actually failing.
+pub struct BreakerRegistry {
+    config: BreakerConfig,
+    inner: Mutex<BreakerInner>,
+    opens: AtomicU64,
+    half_open_probes: AtomicU64,
+}
+
+struct BreakerInner {
+    breakers: HashMap<String, ArtifactBreaker>,
+    events: VecDeque<BreakerEvent>,
+}
+
+impl BreakerRegistry {
+    pub fn new(config: BreakerConfig) -> BreakerRegistry {
+        BreakerRegistry {
+            config,
+            inner: Mutex::new(BreakerInner {
+                breakers: HashMap::new(),
+                events: VecDeque::new(),
+            }),
+            opens: AtomicU64::new(0),
+            half_open_probes: AtomicU64::new(0),
+        }
+    }
+
+    fn push_event(events: &mut VecDeque<BreakerEvent>, artifact: &str, to: BreakerState) {
+        if events.len() == MAX_BREAKER_EVENTS {
+            events.pop_front();
+        }
+        events.push_back(BreakerEvent {
+            artifact: artifact.to_string(),
+            to,
+        });
+    }
+
+    /// Admission decision for a request targeting `artifact`.
+    pub fn admit(&self, artifact: &str) -> BreakerDecision {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let Some(b) = inner.breakers.get_mut(artifact) else {
+            return BreakerDecision::Allow; // never failed: no entry
+        };
+        match b.state {
+            BreakerState::Closed => BreakerDecision::Allow,
+            BreakerState::Open => {
+                if b.opened_at.elapsed() >= self.config.open_cooldown {
+                    b.state = BreakerState::HalfOpen;
+                    b.probe_in_flight = true;
+                    Self::push_event(&mut inner.events, artifact, BreakerState::HalfOpen);
+                    self.half_open_probes.fetch_add(1, Ordering::Relaxed);
+                    BreakerDecision::Probe
+                } else {
+                    BreakerDecision::Open
+                }
+            }
+            BreakerState::HalfOpen => {
+                if b.probe_in_flight {
+                    BreakerDecision::Open // one probe at a time
+                } else {
+                    b.probe_in_flight = true;
+                    self.half_open_probes.fetch_add(1, Ordering::Relaxed);
+                    BreakerDecision::Probe
+                }
+            }
+        }
+    }
+
+    /// Record a served outcome for `artifact`. Returns the state the
+    /// breaker *transitioned to*, if this outcome caused a transition —
+    /// the router counts opens and fires recorder triggers off it.
+    pub fn record(&self, artifact: &str, failed: bool) -> Option<BreakerState> {
+        let mut inner = self.inner.lock().unwrap();
+        let inner = &mut *inner;
+        let b = inner
+            .breakers
+            .entry(artifact.to_string())
+            .or_insert_with(ArtifactBreaker::new);
+        match b.state {
+            BreakerState::Closed => {
+                b.push_outcome(failed, self.config.window);
+                if failed
+                    && b.outcomes.len() >= self.config.min_samples
+                    && b.failure_rate() >= self.config.failure_threshold
+                {
+                    b.state = BreakerState::Open;
+                    b.opened_at = Instant::now();
+                    b.outcomes.clear();
+                    self.opens.fetch_add(1, Ordering::Relaxed);
+                    Self::push_event(&mut inner.events, artifact, BreakerState::Open);
+                    return Some(BreakerState::Open);
+                }
+                None
+            }
+            BreakerState::HalfOpen => {
+                b.probe_in_flight = false;
+                if failed {
+                    b.state = BreakerState::Open;
+                    b.opened_at = Instant::now();
+                    self.opens.fetch_add(1, Ordering::Relaxed);
+                    Self::push_event(&mut inner.events, artifact, BreakerState::Open);
+                    Some(BreakerState::Open)
+                } else {
+                    b.state = BreakerState::Closed;
+                    b.outcomes.clear();
+                    Self::push_event(&mut inner.events, artifact, BreakerState::Closed);
+                    Some(BreakerState::Closed)
+                }
+            }
+            // An outcome landing while Open belongs to a request admitted
+            // before the trip; it neither re-opens nor closes anything.
+            BreakerState::Open => None,
+        }
+    }
+
+    /// Current state of `artifact`'s breaker (Closed if never touched).
+    pub fn state(&self, artifact: &str) -> BreakerState {
+        self.inner
+            .lock()
+            .unwrap()
+            .breakers
+            .get(artifact)
+            .map(|b| b.state)
+            .unwrap_or(BreakerState::Closed)
+    }
+
+    /// Closed → Open transitions, lifetime.
+    pub fn opens(&self) -> u64 {
+        self.opens.load(Ordering::Relaxed)
+    }
+
+    /// Half-open probes admitted, lifetime.
+    pub fn half_open_probes(&self) -> u64 {
+        self.half_open_probes.load(Ordering::Relaxed)
+    }
+
+    /// Copies of the recorded transitions, oldest first.
+    pub fn events(&self) -> Vec<BreakerEvent> {
+        self.inner.lock().unwrap().events.iter().cloned().collect()
+    }
+}
+
+// ---- overload brownout -----------------------------------------------------
+
+/// Number of rungs above normal on the degradation ladder.
+pub const BROWNOUT_MAX_LEVEL: u8 = 3;
+
+/// Brownout tuning. Pressure = windowed shed rate over
+/// `shed_rate_engage` (or total p99 over `p99_engage_us`); calm =
+/// shed rate under `shed_rate_recover` and p99 back under threshold.
+/// Streak requirements make both directions *sustained* rather than
+/// single-sample reactions.
+#[derive(Debug, Clone, Copy)]
+pub struct BrownoutConfig {
+    /// Windowed shed rate at or above this is pressure.
+    pub shed_rate_engage: f64,
+    /// Windowed shed rate at or below this is calm.
+    pub shed_rate_recover: f64,
+    /// Total-latency p99 (µs) at or above this is pressure
+    /// (`u64::MAX` disables the latency signal).
+    pub p99_engage_us: u64,
+    /// Consecutive pressured evaluations required to step up one level.
+    pub engage_evals: u32,
+    /// Consecutive calm evaluations required to step down one level.
+    pub recover_evals: u32,
+    /// Minimum ms between evaluations (requests between ticks see the
+    /// last decided level).
+    pub eval_interval_ms: u64,
+}
+
+impl Default for BrownoutConfig {
+    fn default() -> BrownoutConfig {
+        BrownoutConfig {
+            shed_rate_engage: 0.10,
+            shed_rate_recover: 0.02,
+            p99_engage_us: u64::MAX,
+            engage_evals: 2,
+            recover_evals: 3,
+            eval_interval_ms: 250,
+        }
+    }
+}
+
+struct BrownoutInner {
+    pressured_streak: u32,
+    calm_streak: u32,
+    /// (now_ms, level) transitions, bounded.
+    transitions: Vec<(u64, u8)>,
+}
+
+/// The degradation ladder. Level 0 is normal service; each rung sheds
+/// one more optional load source:
+///
+/// | level | shadow probes | trace sampling | reuse inserts |
+/// |------:|:-------------:|:--------------:|:-------------:|
+/// |   0   |      on       |       on       |      on       |
+/// |   1   |     off       |       on       |      on       |
+/// |   2   |     off       |      off       |      on       |
+/// |   3   |     off       |      off       |     off       |
+///
+/// Levels move one rung per sustained streak, so a single noisy window
+/// never slams the ladder to the top or bottom.
+pub struct BrownoutController {
+    config: BrownoutConfig,
+    level: AtomicU8,
+    last_eval_ms: AtomicU64,
+    inner: Mutex<BrownoutInner>,
+}
+
+const MAX_BROWNOUT_TRANSITIONS: usize = 64;
+
+impl BrownoutController {
+    pub fn new(config: BrownoutConfig) -> BrownoutController {
+        BrownoutController {
+            config,
+            level: AtomicU8::new(0),
+            last_eval_ms: AtomicU64::new(0),
+            inner: Mutex::new(BrownoutInner {
+                pressured_streak: 0,
+                calm_streak: 0,
+                transitions: Vec::new(),
+            }),
+        }
+    }
+
+    pub fn level(&self) -> u8 {
+        self.level.load(Ordering::Relaxed)
+    }
+
+    /// Whether an evaluation is due at `now_ms` (cheap pre-check so the
+    /// per-request path is one atomic load almost always).
+    pub fn eval_due(&self, now_ms: u64) -> bool {
+        let last = self.last_eval_ms.load(Ordering::Relaxed);
+        now_ms.saturating_sub(last) >= self.config.eval_interval_ms
+    }
+
+    /// Evaluate the ladder against the current windowed rates (and the
+    /// total-latency p99 if the caller has one). Returns the level in
+    /// force after this evaluation.
+    pub fn evaluate(&self, rates: &WindowRates, p99_us: u64, now_ms: u64) -> u8 {
+        let last = self.last_eval_ms.load(Ordering::Relaxed);
+        if now_ms.saturating_sub(last) < self.config.eval_interval_ms {
+            return self.level();
+        }
+        if self
+            .last_eval_ms
+            .compare_exchange(last, now_ms, Ordering::Relaxed, Ordering::Relaxed)
+            .is_err()
+        {
+            return self.level(); // another thread took this tick
+        }
+        let pressured = (rates.requests > 0 && rates.shed_rate >= self.config.shed_rate_engage)
+            || (self.config.p99_engage_us != u64::MAX && p99_us >= self.config.p99_engage_us);
+        let calm = rates.shed_rate <= self.config.shed_rate_recover
+            && (self.config.p99_engage_us == u64::MAX || p99_us < self.config.p99_engage_us);
+        let mut inner = self.inner.lock().unwrap();
+        let mut level = self.level();
+        if pressured {
+            inner.calm_streak = 0;
+            inner.pressured_streak += 1;
+            if inner.pressured_streak >= self.config.engage_evals && level < BROWNOUT_MAX_LEVEL {
+                level += 1;
+                inner.pressured_streak = 0;
+                Self::push_transition(&mut inner.transitions, now_ms, level);
+                self.level.store(level, Ordering::Relaxed);
+            }
+        } else if calm {
+            inner.pressured_streak = 0;
+            inner.calm_streak += 1;
+            if inner.calm_streak >= self.config.recover_evals && level > 0 {
+                level -= 1;
+                inner.calm_streak = 0;
+                Self::push_transition(&mut inner.transitions, now_ms, level);
+                self.level.store(level, Ordering::Relaxed);
+            }
+        } else {
+            // Between thresholds: hold the level, reset both streaks.
+            inner.pressured_streak = 0;
+            inner.calm_streak = 0;
+        }
+        level
+    }
+
+    fn push_transition(ts: &mut Vec<(u64, u8)>, now_ms: u64, level: u8) {
+        if ts.len() == MAX_BROWNOUT_TRANSITIONS {
+            ts.remove(0);
+        }
+        ts.push((now_ms, level));
+    }
+
+    /// Shadow probes allowed (disabled from level 1).
+    pub fn allow_probes(&self) -> bool {
+        self.level() < 1
+    }
+
+    /// Trace-span sampling allowed (disabled from level 2).
+    pub fn allow_tracing(&self) -> bool {
+        self.level() < 2
+    }
+
+    /// Reuse-cache inserts allowed (disabled from level 3).
+    pub fn allow_reuse_inserts(&self) -> bool {
+        self.level() < 3
+    }
+
+    /// `(now_ms, level)` transitions, oldest first.
+    pub fn transitions(&self) -> Vec<(u64, u8)> {
+        self.inner.lock().unwrap().transitions.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rates(requests: u64, shed: u64) -> WindowRates {
+        WindowRates {
+            requests,
+            shed,
+            shed_rate: if requests == 0 {
+                0.0
+            } else {
+                shed as f64 / requests as f64
+            },
+            ..WindowRates::default()
+        }
+    }
+
+    // -- deadlines --
+
+    #[test]
+    fn deadline_expires_and_reports_remaining() {
+        let d = Deadline::after(Duration::from_secs(60));
+        assert!(!d.expired());
+        assert!(d.remaining().unwrap() > Duration::from_secs(59));
+        let past = Deadline::at(Instant::now() - Duration::from_millis(1));
+        assert!(past.expired());
+        assert!(past.remaining().is_none());
+    }
+
+    // -- backoff --
+
+    fn policy(base_us: u64, cap_us: u64) -> RetryPolicy {
+        RetryPolicy {
+            max_retries: 8,
+            base: Duration::from_micros(base_us),
+            cap: Duration::from_micros(cap_us),
+        }
+    }
+
+    #[test]
+    fn backoff_is_deterministic_under_seed() {
+        let p = policy(100, 10_000);
+        let a: Vec<u64> = {
+            let mut j = DecorrelatedJitter::new(&p, 42);
+            (0..8).map(|_| j.next_us()).collect()
+        };
+        let b: Vec<u64> = {
+            let mut j = DecorrelatedJitter::new(&p, 42);
+            (0..8).map(|_| j.next_us()).collect()
+        };
+        let c: Vec<u64> = {
+            let mut j = DecorrelatedJitter::new(&p, 43);
+            (0..8).map(|_| j.next_us()).collect()
+        };
+        assert_eq!(a, b, "same seed replays the schedule");
+        assert_ne!(a, c, "different seed decorrelates");
+    }
+
+    #[test]
+    fn backoff_bounded_and_cap_monotone() {
+        let p = policy(100, 3_000);
+        let mut j = DecorrelatedJitter::new(&p, 7);
+        let mut prev_upper = 0;
+        for _ in 0..32 {
+            let s = j.next_us();
+            assert!((100..=3_000).contains(&s), "sleep {s} out of bounds");
+            assert!(j.upper_us() >= prev_upper, "effective cap regressed");
+            prev_upper = j.upper_us();
+        }
+        assert_eq!(prev_upper, 3_000, "upper bound saturates at cap");
+    }
+
+    #[test]
+    fn backoff_degenerate_base_equals_cap() {
+        let p = policy(500, 500);
+        let mut j = DecorrelatedJitter::new(&p, 1);
+        for _ in 0..4 {
+            assert_eq!(j.next_us(), 500);
+        }
+    }
+
+    // -- breaker --
+
+    fn breaker_cfg(cooldown_ms: u64) -> BreakerConfig {
+        BreakerConfig {
+            window: 8,
+            min_samples: 4,
+            failure_threshold: 0.5,
+            open_cooldown: Duration::from_millis(cooldown_ms),
+        }
+    }
+
+    #[test]
+    fn breaker_trips_open_on_failure_rate() {
+        let reg = BreakerRegistry::new(breaker_cfg(10_000));
+        assert_eq!(reg.admit("a"), BreakerDecision::Allow);
+        // Three failures: under min_samples, still closed.
+        for _ in 0..3 {
+            assert_eq!(reg.record("a", true), None);
+        }
+        assert_eq!(reg.state("a"), BreakerState::Closed);
+        // Fourth failure reaches min_samples at 100% failure rate.
+        assert_eq!(reg.record("a", true), Some(BreakerState::Open));
+        assert_eq!(reg.state("a"), BreakerState::Open);
+        assert_eq!(reg.admit("a"), BreakerDecision::Open, "fails fast");
+        assert_eq!(reg.opens(), 1);
+        // A different artifact is unaffected.
+        assert_eq!(reg.admit("b"), BreakerDecision::Allow);
+    }
+
+    #[test]
+    fn breaker_successes_keep_it_closed() {
+        let reg = BreakerRegistry::new(breaker_cfg(10_000));
+        for _ in 0..20 {
+            assert_eq!(reg.record("a", false), None);
+        }
+        // A minority of failures in the window stays under threshold.
+        for _ in 0..3 {
+            reg.record("a", true);
+        }
+        assert_eq!(reg.state("a"), BreakerState::Closed);
+    }
+
+    #[test]
+    fn breaker_half_open_probe_closes_on_success() {
+        let reg = BreakerRegistry::new(breaker_cfg(0)); // immediate cooldown
+        for _ in 0..4 {
+            reg.record("a", true);
+        }
+        assert_eq!(reg.state("a"), BreakerState::Open);
+        assert_eq!(reg.admit("a"), BreakerDecision::Probe, "cooldown elapsed");
+        assert_eq!(reg.state("a"), BreakerState::HalfOpen);
+        // A second request while the probe is in flight still fails fast.
+        assert_eq!(reg.admit("a"), BreakerDecision::Open);
+        assert_eq!(reg.record("a", false), Some(BreakerState::Closed));
+        assert_eq!(reg.state("a"), BreakerState::Closed);
+        assert_eq!(reg.admit("a"), BreakerDecision::Allow);
+        assert_eq!(reg.half_open_probes(), 1);
+        let kinds: Vec<BreakerState> = reg.events().iter().map(|e| e.to).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                BreakerState::Open,
+                BreakerState::HalfOpen,
+                BreakerState::Closed
+            ]
+        );
+    }
+
+    #[test]
+    fn breaker_half_open_probe_failure_reopens() {
+        let reg = BreakerRegistry::new(breaker_cfg(0));
+        for _ in 0..4 {
+            reg.record("a", true);
+        }
+        assert_eq!(reg.admit("a"), BreakerDecision::Probe);
+        assert_eq!(reg.record("a", true), Some(BreakerState::Open));
+        assert_eq!(reg.state("a"), BreakerState::Open);
+        assert_eq!(reg.opens(), 2);
+    }
+
+    #[test]
+    fn breaker_open_cooldown_gates_the_probe() {
+        let reg = BreakerRegistry::new(breaker_cfg(10_000));
+        for _ in 0..4 {
+            reg.record("a", true);
+        }
+        assert_eq!(reg.admit("a"), BreakerDecision::Open, "inside cooldown");
+        assert_eq!(reg.state("a"), BreakerState::Open);
+    }
+
+    // -- brownout --
+
+    fn brownout_cfg() -> BrownoutConfig {
+        BrownoutConfig {
+            shed_rate_engage: 0.2,
+            shed_rate_recover: 0.05,
+            p99_engage_us: u64::MAX,
+            engage_evals: 2,
+            recover_evals: 2,
+            eval_interval_ms: 100,
+        }
+    }
+
+    #[test]
+    fn brownout_engages_one_rung_per_sustained_streak() {
+        let b = BrownoutController::new(brownout_cfg());
+        let hot = rates(100, 50);
+        let mut now = 0;
+        assert_eq!(b.evaluate(&hot, 0, now), 0, "one pressured tick holds");
+        now += 100;
+        assert_eq!(b.evaluate(&hot, 0, now), 1, "second tick engages");
+        assert!(!b.allow_probes());
+        assert!(b.allow_tracing());
+        assert!(b.allow_reuse_inserts());
+        for _ in 0..6 {
+            now += 100;
+            b.evaluate(&hot, 0, now);
+        }
+        assert_eq!(b.level(), BROWNOUT_MAX_LEVEL, "ladder saturates");
+        assert!(!b.allow_tracing());
+        assert!(!b.allow_reuse_inserts());
+    }
+
+    #[test]
+    fn brownout_recovers_in_reverse_under_sustained_calm() {
+        let b = BrownoutController::new(brownout_cfg());
+        let hot = rates(100, 50);
+        let calm = rates(100, 0);
+        let mut now = 0;
+        for _ in 0..8 {
+            now += 100;
+            b.evaluate(&hot, 0, now);
+        }
+        assert_eq!(b.level(), 3);
+        let mut levels = vec![];
+        for _ in 0..12 {
+            now += 100;
+            levels.push(b.evaluate(&calm, 0, now));
+        }
+        assert_eq!(b.level(), 0, "fully recovered");
+        let mut sorted = levels.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        assert_eq!(levels, sorted, "recovery steps down monotonically");
+        let ts = b.transitions();
+        assert!(ts.len() >= 6, "3 up + 3 down transitions recorded");
+    }
+
+    #[test]
+    fn brownout_between_thresholds_holds_level() {
+        let b = BrownoutController::new(brownout_cfg());
+        let hot = rates(100, 50);
+        let middling = rates(100, 10); // 0.10: between recover and engage
+        let mut now = 0;
+        for _ in 0..4 {
+            now += 100;
+            b.evaluate(&hot, 0, now);
+        }
+        let level = b.level();
+        assert!(level >= 1);
+        for _ in 0..10 {
+            now += 100;
+            b.evaluate(&middling, 0, now);
+        }
+        assert_eq!(b.level(), level, "held between thresholds");
+    }
+
+    #[test]
+    fn brownout_p99_signal_engages() {
+        let b = BrownoutController::new(BrownoutConfig {
+            p99_engage_us: 1_000,
+            ..brownout_cfg()
+        });
+        let calm = rates(100, 0);
+        assert_eq!(b.evaluate(&calm, 5_000, 100), 0);
+        assert_eq!(b.evaluate(&calm, 5_000, 200), 1, "p99 pressure engages");
+        assert_eq!(b.evaluate(&calm, 10, 300), 1);
+        assert_eq!(b.evaluate(&calm, 10, 400), 0, "p99 calm recovers");
+    }
+
+    #[test]
+    fn brownout_rate_limits_evaluations() {
+        let b = BrownoutController::new(brownout_cfg());
+        let hot = rates(100, 50);
+        // Many evaluations within one interval count as one tick.
+        for now in [100, 110, 120, 130, 140] {
+            b.evaluate(&hot, 0, now);
+        }
+        assert_eq!(b.level(), 0, "streak needs two *spaced* ticks");
+        b.evaluate(&hot, 0, 250);
+        assert_eq!(b.level(), 1);
+    }
+}

@@ -170,8 +170,29 @@ pub struct CoordinatorMetrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     /// Requests that errored for any reason *other* than admission
-    /// control (backend error, injected fault, engine shutdown mid-job).
+    /// control (backend error, injected fault, engine shutdown mid-job,
+    /// a circuit breaker failing fast, or a retry budget exhausting on a
+    /// transient error).
     pub failed: AtomicU64,
+    /// Requests that ran out of their deadline budget — at admission, in
+    /// a queue (dropped without executing), or waiting on a response.
+    /// Disjoint from `failed` and `shed`: a fourth way to resolve.
+    pub timed_out: AtomicU64,
+    /// Retry *attempts* made after a transient failure (a request that
+    /// retried twice counts 2). Not part of conservation — attempts are
+    /// not requests.
+    pub retries: AtomicU64,
+    /// Requests whose transient failures outlived their retry budget (or
+    /// deadline) and resolved as `failed`.
+    pub retries_exhausted: AtomicU64,
+    /// Circuit-breaker trip events (Closed/HalfOpen → Open transitions).
+    pub breaker_opens: AtomicU64,
+    /// Half-open probe admissions (trial requests let through a cooling
+    /// breaker).
+    pub breaker_half_open_probes: AtomicU64,
+    /// Gauge: the brownout degradation ladder's current level (0 =
+    /// healthy … 3 = max degradation).
+    pub brownout_level: AtomicU64,
     /// Requests a caller lost to admission control: every worker queue
     /// was full and the router was configured to fail fast, so the
     /// caller saw `EngineBusy`. Disjoint from `failed` — together with
@@ -240,6 +261,19 @@ pub struct MetricsSnapshot {
     /// Requests lost to admission control (caller saw `EngineBusy`);
     /// disjoint from `failed`.
     pub shed: u64,
+    /// Requests that ran out of their deadline (admission, in-queue, or
+    /// awaiting a response); disjoint from `failed` and `shed`.
+    pub timed_out: u64,
+    /// Retry attempts after transient failures (not part of conservation).
+    pub retries: u64,
+    /// Requests whose retry budget exhausted on transient failures.
+    pub retries_exhausted: u64,
+    /// Circuit-breaker trip events (transitions to Open).
+    pub breaker_opens: u64,
+    /// Half-open probe admissions.
+    pub breaker_half_open_probes: u64,
+    /// Brownout ladder level at snapshot time (0 = healthy).
+    pub brownout_level: u64,
     pub busy_rejections: u64,
     pub selected_nt: u64,
     pub selected_tnn: u64,
@@ -419,6 +453,12 @@ impl CoordinatorMetrics {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
+            retries: self.retries.load(Ordering::Relaxed),
+            retries_exhausted: self.retries_exhausted.load(Ordering::Relaxed),
+            breaker_opens: self.breaker_opens.load(Ordering::Relaxed),
+            breaker_half_open_probes: self.breaker_half_open_probes.load(Ordering::Relaxed),
+            brownout_level: self.brownout_level.load(Ordering::Relaxed),
             busy_rejections: self.busy_rejections.load(Ordering::Relaxed),
             selected_nt: self.selected_nt.load(Ordering::Relaxed),
             selected_tnn: self.selected_tnn.load(Ordering::Relaxed),
@@ -470,30 +510,31 @@ impl CoordinatorMetrics {
 impl MetricsSnapshot {
     /// The conservation invariant the chaos tests assert at quiescence:
     /// every submitted request resolved exactly one way —
-    /// `completed + failed + shed == requests`. Only meaningful once no
-    /// serve call is in flight (a mid-flight request has been counted in
-    /// `requests` but not yet resolved).
+    /// `completed + failed + shed + timed_out == requests`. Only
+    /// meaningful once no serve call is in flight (a mid-flight request
+    /// has been counted in `requests` but not yet resolved).
     pub fn verify_conservation(&self) -> Result<(), String> {
-        let resolved = self.completed + self.failed + self.shed;
+        let resolved = self.completed + self.failed + self.shed + self.timed_out;
         if resolved == self.requests {
             Ok(())
         } else {
             Err(format!(
-                "conservation violated: completed={} + failed={} + shed={} = {resolved} != requests={}",
-                self.completed, self.failed, self.shed, self.requests
+                "conservation violated: completed={} + failed={} + shed={} + timed_out={} = {resolved} != requests={}",
+                self.completed, self.failed, self.shed, self.timed_out, self.requests
             ))
         }
     }
 
     pub fn render(&self) -> String {
         let mut s = format!(
-            "requests={} completed={} failed={} shed={} busy={} | NT={} TNN={} fallback={} forced={} | \
+            "requests={} completed={} failed={} shed={} timed_out={} busy={} | NT={} TNN={} fallback={} forced={} | \
              latency p50={:.0}us p95={:.0}us p99={:.0}us mean={:.0}us | queues={:?} | \
              batch avg={:.2} max={}",
             self.requests,
             self.completed,
             self.failed,
             self.shed,
+            self.timed_out,
             self.busy_rejections,
             self.selected_nt,
             self.selected_tnn,
@@ -529,6 +570,26 @@ impl MetricsSnapshot {
                 self.retrains,
                 self.promotions,
                 self.rollbacks,
+            ));
+        }
+        // The lifecycle section only appears once retries, breakers, or
+        // brownout have actually engaged, so steady-state reports stay
+        // terse.
+        if self.retries
+            + self.retries_exhausted
+            + self.breaker_opens
+            + self.breaker_half_open_probes
+            + self.brownout_level
+            > 0
+        {
+            s.push_str(&format!(
+                " | lifecycle retries={} exhausted={} breaker_opens={} \
+                 half_open_probes={} brownout_level={}",
+                self.retries,
+                self.retries_exhausted,
+                self.breaker_opens,
+                self.breaker_half_open_probes,
+                self.brownout_level,
             ));
         }
         // The reuse section only appears once the layer has seen traffic,
@@ -591,6 +652,42 @@ impl MetricsSnapshot {
             "mtnn_shed_total",
             "Requests shed by admission control.",
             self.shed,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_timed_out_total",
+            "Requests that exhausted their deadline budget.",
+            self.timed_out,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_retries_total",
+            "Retry attempts after transient failures.",
+            self.retries,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_retries_exhausted_total",
+            "Requests whose retry budget exhausted on transient failures.",
+            self.retries_exhausted,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_breaker_opens_total",
+            "Circuit-breaker trip events (transitions to Open).",
+            self.breaker_opens,
+        );
+        counter_into(
+            &mut out,
+            "mtnn_breaker_half_open_probes_total",
+            "Half-open probe admissions through a cooling breaker.",
+            self.breaker_half_open_probes,
+        );
+        gauge_into(
+            &mut out,
+            "mtnn_brownout_level",
+            "Brownout degradation ladder level (0 = healthy).",
+            self.brownout_level as f64,
         );
         counter_into(
             &mut out,
@@ -803,6 +900,12 @@ impl MetricsSnapshot {
             .set("completed", self.completed)
             .set("failed", self.failed)
             .set("shed", self.shed)
+            .set("timed_out", self.timed_out)
+            .set("retries", self.retries)
+            .set("retries_exhausted", self.retries_exhausted)
+            .set("breaker_opens", self.breaker_opens)
+            .set("breaker_half_open_probes", self.breaker_half_open_probes)
+            .set("brownout_level", self.brownout_level)
             .set("busy_rejections", self.busy_rejections)
             .set("selected_nt", self.selected_nt)
             .set("selected_tnn", self.selected_tnn)
@@ -978,15 +1081,62 @@ mod tests {
     fn conservation_partitions_resolved_requests() {
         let m = CoordinatorMetrics::default();
         m.requests.fetch_add(10, Ordering::Relaxed);
-        m.completed.fetch_add(6, Ordering::Relaxed);
+        m.completed.fetch_add(5, Ordering::Relaxed);
         m.failed.fetch_add(3, Ordering::Relaxed);
+        m.timed_out.fetch_add(1, Ordering::Relaxed);
         assert!(m.snapshot().verify_conservation().is_err(), "one unresolved");
         m.shed.fetch_add(1, Ordering::Relaxed);
         m.snapshot().verify_conservation().unwrap();
         // A double-counted outcome breaks it from the other side.
         m.completed.fetch_add(1, Ordering::Relaxed);
         let err = m.snapshot().verify_conservation().unwrap_err();
-        assert!(err.contains("completed=7"), "{err}");
+        assert!(err.contains("completed=6"), "{err}");
+        assert!(err.contains("timed_out=1"), "{err}");
+    }
+
+    #[test]
+    fn lifecycle_counters_flow_through_every_renderer() {
+        let m = CoordinatorMetrics::default();
+        let terse = m.snapshot().render();
+        assert!(terse.contains("timed_out=0"), "{terse}");
+        assert!(
+            !terse.contains("lifecycle"),
+            "quiet lifecycle stays out of the report: {terse}"
+        );
+        m.timed_out.fetch_add(2, Ordering::Relaxed);
+        m.retries.fetch_add(5, Ordering::Relaxed);
+        m.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+        m.breaker_opens.fetch_add(1, Ordering::Relaxed);
+        m.breaker_half_open_probes.fetch_add(1, Ordering::Relaxed);
+        m.brownout_level.store(2, Ordering::Relaxed);
+        let s = m.snapshot();
+        let r = s.render();
+        for needle in [
+            "timed_out=2",
+            "retries=5",
+            "exhausted=1",
+            "breaker_opens=1",
+            "half_open_probes=1",
+            "brownout_level=2",
+        ] {
+            assert!(r.contains(needle), "missing {needle} in {r}");
+        }
+        let prom = s.render_prometheus();
+        for needle in [
+            "# TYPE mtnn_timed_out_total counter\nmtnn_timed_out_total 2\n",
+            "# TYPE mtnn_retries_total counter\nmtnn_retries_total 5\n",
+            "mtnn_retries_exhausted_total 1\n",
+            "mtnn_breaker_opens_total 1\n",
+            "mtnn_breaker_half_open_probes_total 1\n",
+            "# TYPE mtnn_brownout_level gauge\nmtnn_brownout_level 2\n",
+        ] {
+            assert!(prom.contains(needle), "missing {needle:?} in:\n{prom}");
+        }
+        let j = s.render_json();
+        assert_eq!(j.get("timed_out").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(j.get("retries").and_then(|v| v.as_usize()), Some(5));
+        assert_eq!(j.get("breaker_opens").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(j.get("brownout_level").and_then(|v| v.as_usize()), Some(2));
     }
 
     #[test]

@@ -78,25 +78,74 @@
 //!   changes the meaning of the lifetime counters; with `obs: None`
 //!   (the default) the request path stays exactly as it was.
 //!
-//! Every request the router accepts resolves as exactly one of
-//! completed / failed / shed (admission-control rejection), so
-//! `completed + failed + shed == requests` at quiescence —
-//! [`CoordinatorMetrics`]`::verify_conservation` checks it, the
+//! **Request lifecycle** (`lifecycle` + the router's serve loop): every
+//! request the router accepts walks one state machine and resolves as
+//! exactly one terminal outcome:
+//!
+//! ```text
+//!             ┌───────────────────────────────────────────────────────┐
+//!             │                  Router::serve entry                  │
+//!             │   deadline stamped · brownout tick · span drawn       │
+//!             └───────────────┬───────────────────────────────────────┘
+//!                             ▼
+//!   admit ── deadline expired? ──────────────────────────► timed_out
+//!     │
+//!     ▼
+//!   decide (Algorithm 2) ─► breaker admit per artifact
+//!     │                       │ Open: coerce NT↔TNN (Forced, never
+//!     │                       │ probed/learned) or, if the alternate is
+//!     │                       │ open/unfit, fail fast ───► failed
+//!     ▼                       ▼                            (BreakerOpen)
+//!   [reuse classify] ─► enqueue ─► worker dequeue
+//!     │                              │ expired in queue: dropped
+//!     │                              │ without executing ─► timed_out
+//!     ▼                              ▼
+//!   wait (recv bounded by deadline) ◄─ execute
+//!     │ EngineBusy ────────────────────────────────────────► shed
+//!     │ deadline ──────────────────────────────────────────► timed_out
+//!     │ transient error + retry budget + deadline headroom:
+//!     │    sleep decorrelated-jitter backoff, re-submit ──┐
+//!     │ transient, budget dead: retries_exhausted ───────►│ failed
+//!     │ permanent error ──────────────────────────────────► failed
+//!     ▼
+//!   completed (breaker records the outcome either way)
+//! ```
+//!
+//! So `completed + failed + shed + timed_out == requests` at quiescence
+//! — [`CoordinatorMetrics`]`::verify_conservation` checks it, the
 //! adversarial workload lab (`crate::workload`) hammers it, and backend
 //! panics are contained per-job (the worker survives) so chaos can't
-//! break it. Shutdown drains: every accepted job executes before the
-//! workers join, and a chaos-killed worker's stranded queue is swept
-//! with errors rather than left to hang clients. A pool of size 1
-//! reproduces the old single-thread engine semantics exactly.
+//! break it. Deadlines ([`lifecycle::Deadline`]) ride inside the engine
+//! job so queue-expired work is dropped unexecuted; retries use
+//! deterministic decorrelated jitter ([`lifecycle::DecorrelatedJitter`])
+//! and never touch deny-listed artifacts; per-artifact circuit breakers
+//! ([`lifecycle::BreakerRegistry`]) trip Closed→Open on rolling failure
+//! rate, fail fast or reroute onto the alternate algorithm, and recover
+//! through a single half-open probe; sustained overload steps the
+//! brownout ladder ([`lifecycle::BrownoutController`]) through shedding
+//! shadow probes, then trace sampling, then reuse-cache inserts —
+//! restoring in reverse when the windowed rates calm. Shutdown drains:
+//! every accepted job executes before the workers join, and a
+//! chaos-killed worker's stranded queue is swept with errors rather
+//! than left to hang clients. A pool of size 1 reproduces the old
+//! single-thread engine semantics exactly.
 
 pub mod backend;
 pub mod engine;
+pub mod lifecycle;
 pub mod metrics;
 pub mod reuse;
 pub mod router;
 
-pub use backend::{EngineBusy, ExecBackend};
+pub use backend::{
+    classify_error, BreakerOpen, DeadlineExceeded, EngineBusy, ErrorClass, ExecBackend,
+    TransientFault,
+};
 pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob, ExecReply};
+pub use lifecycle::{
+    BreakerConfig, BreakerDecision, BreakerEvent, BreakerRegistry, BreakerState, BrownoutConfig,
+    BrownoutController, Deadline, DecorrelatedJitter, RetryPolicy, BROWNOUT_MAX_LEVEL,
+};
 pub use metrics::{BatchGauge, CoordinatorMetrics, MetricsSnapshot};
 pub use reuse::{ReuseConfig, ReuseLayer, ReuseStats, ReuseTicket};
 pub use router::{AdmissionControl, GemmRequest, GemmResponse, Router, RouterConfig};

@@ -41,12 +41,12 @@
 //! because every served/coalesced submission still resolves through its
 //! own response channel exactly once.
 
-use super::backend::EngineBusy;
+use super::backend::{BreakerOpen, DeadlineExceeded, EngineBusy, TransientFault};
 use super::engine::ExecReply;
 use crate::gemm::cpu::Matrix;
 use crate::util::rng::mix64;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 
 /// Bounds and opt-outs for the reuse layer.
@@ -143,6 +143,10 @@ pub struct ReuseStats {
     pub stale_drops: AtomicU64,
     /// Submissions that bypassed the layer via a deny prefix.
     pub bypasses: AtomicU64,
+    /// Leader completions whose cache insert was suppressed because
+    /// brownout disabled inserts ([`ReuseLayer::set_inserts_enabled`]).
+    /// Waiters were still served.
+    pub inserts_suppressed: AtomicU64,
     /// Coalesced followers whose leader failed: they resolved as
     /// failures without ever executing. A subset of `coalesced`,
     /// counted so chaos-run shed accounting can tell a follower dragged
@@ -188,6 +192,10 @@ pub struct ReuseLayer {
     config: ReuseConfig,
     epoch: AtomicU64,
     tick: AtomicU64,
+    /// Brownout lever (level 3): when false, leader completions still fan
+    /// out to their waiters but skip the cache insert — reuse stops
+    /// growing memory under overload without changing correctness.
+    inserts_enabled: AtomicBool,
     cache: Mutex<HashMap<ReuseKey, Entry>>,
     pending: Mutex<HashMap<(ReuseKey, u64), Pending>>,
     stats: Arc<ReuseStats>,
@@ -199,6 +207,7 @@ impl ReuseLayer {
             config,
             epoch: AtomicU64::new(0),
             tick: AtomicU64::new(0),
+            inserts_enabled: AtomicBool::new(true),
             cache: Mutex::new(HashMap::new()),
             pending: Mutex::new(HashMap::new()),
             stats: Arc::new(ReuseStats::default()),
@@ -214,7 +223,20 @@ impl ReuseLayer {
         self.epoch.load(Ordering::Acquire)
     }
 
-    fn denied(&self, artifact: &str) -> bool {
+    /// Enable/disable cache inserts (the brownout lever). Serving from
+    /// already-cached entries and single-flight coalescing stay active
+    /// either way.
+    pub fn set_inserts_enabled(&self, enabled: bool) {
+        self.inserts_enabled.store(enabled, Ordering::Release);
+    }
+
+    pub fn inserts_enabled(&self) -> bool {
+        self.inserts_enabled.load(Ordering::Acquire)
+    }
+
+    /// Is this artifact name deny-listed (bypasses reuse — and, upstream,
+    /// must never be retried: the opt-out marks non-idempotent work)?
+    pub fn denied(&self, artifact: &str) -> bool {
         self.config
             .deny_prefixes
             .iter()
@@ -312,7 +334,10 @@ impl ReuseLayer {
         if let Ok(reply) = result {
             let fresh = ticket.epoch == self.epoch.load(Ordering::Acquire) && !p.poisoned;
             let floats: usize = reply.outputs.iter().map(|m| m.data.len()).sum();
-            if fresh && floats <= self.config.max_entry_floats {
+            if fresh && floats <= self.config.max_entry_floats && !self.inserts_enabled() {
+                self.stats.inserts_suppressed.fetch_add(1, Ordering::Relaxed);
+            }
+            if fresh && floats <= self.config.max_entry_floats && self.inserts_enabled() {
                 let mut cache = self.cache.lock().unwrap();
                 cache.insert(
                     ticket.key,
@@ -390,9 +415,11 @@ impl ReuseLayer {
 }
 
 /// Reconstruct a result for a waiter: outputs clone bit-identically;
-/// errors keep [`EngineBusy`] typed (so admission classification — shed
-/// vs failed — survives the fan-out) and stringify otherwise
-/// (`anyhow::Error` is not `Clone`).
+/// errors keep the lifecycle markers typed — [`EngineBusy`] (shed),
+/// [`DeadlineExceeded`] (timed out), [`BreakerOpen`] (failed fast), and
+/// [`TransientFault`] (retryable) — so outcome classification survives
+/// the fan-out; anything else stringifies (`anyhow::Error` is not
+/// `Clone`).
 fn clone_result(r: &anyhow::Result<ExecReply>) -> anyhow::Result<ExecReply> {
     match r {
         Ok(reply) => Ok(ExecReply {
@@ -400,7 +427,12 @@ fn clone_result(r: &anyhow::Result<ExecReply>) -> anyhow::Result<ExecReply> {
             exec_us: reply.exec_us,
         }),
         Err(e) if EngineBusy::is(e) => Err(anyhow::Error::new(EngineBusy)),
-        Err(e) => Err(anyhow::anyhow!("{e}")),
+        Err(e) if DeadlineExceeded::is(e) => Err(anyhow::Error::new(DeadlineExceeded)),
+        Err(e) if BreakerOpen::is(e) => Err(anyhow::Error::new(BreakerOpen)),
+        Err(e) => match e.downcast_ref::<TransientFault>() {
+            Some(t) => Err(anyhow::Error::new(TransientFault(t.0.clone()))),
+            None => Err(anyhow::anyhow!("{e}")),
+        },
     }
 }
 
@@ -659,6 +691,57 @@ mod tests {
         layer.complete(&t, &Ok(reply(1))); // 16 floats > max 8
         assert!(r.recv().unwrap().is_ok());
         assert_eq!(layer.len(), 0, "oversized entry skipped");
+    }
+
+    #[test]
+    fn lifecycle_errors_stay_typed_across_fanout() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        let cases: Vec<(anyhow::Error, fn(&anyhow::Error) -> bool)> = vec![
+            (anyhow::Error::new(DeadlineExceeded), DeadlineExceeded::is),
+            (anyhow::Error::new(BreakerOpen), BreakerOpen::is),
+            (
+                anyhow::Error::new(TransientFault("chaos: flaky".into())),
+                TransientFault::is,
+            ),
+        ];
+        for (seed, (err, check)) in cases.into_iter().enumerate() {
+            let inputs = vec![Matrix::random(2, 2, seed as u64 + 40)];
+            let (tx, _rx) = chan();
+            let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+                panic!("leader expected");
+            };
+            let (w, r) = chan();
+            assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w), Begin::Coalesced));
+            layer.complete(&t, &Err(err));
+            let got = r.recv().unwrap().unwrap_err();
+            assert!(check(&got), "classification lost in fan-out: {got}");
+        }
+    }
+
+    #[test]
+    fn disabled_inserts_still_serve_waiters_but_skip_the_cache() {
+        let layer = ReuseLayer::new(ReuseConfig::default());
+        layer.set_inserts_enabled(false);
+        let inputs = vec![Matrix::random(2, 2, 21)];
+        let (tx, _rx) = chan();
+        let Begin::Lead(t) = layer.begin("nt_2x2x2", &inputs, &tx) else {
+            panic!("leader expected");
+        };
+        let (w, r) = chan();
+        assert!(matches!(layer.begin("nt_2x2x2", &inputs, &w), Begin::Coalesced));
+        layer.complete(&t, &Ok(reply(5)));
+        assert!(r.recv().unwrap().is_ok(), "waiter still served");
+        assert_eq!(layer.len(), 0, "insert suppressed under brownout");
+        assert_eq!(layer.stats().inserts_suppressed.load(Ordering::Relaxed), 1);
+        // Restoring the lever restores caching.
+        layer.set_inserts_enabled(true);
+        let inputs2 = vec![Matrix::random(2, 2, 22)];
+        let (tx2, _rx2) = chan();
+        let Begin::Lead(t2) = layer.begin("nt_2x2x2", &inputs2, &tx2) else {
+            panic!("leader expected");
+        };
+        layer.complete(&t2, &Ok(reply(6)));
+        assert_eq!(layer.len(), 1, "inserts resume after recovery");
     }
 
     #[test]

@@ -20,9 +20,23 @@
 //! stays lock-free: a cache hit in the epoch-checked
 //! [`DecisionCache`] touches no lock, and a promotion invalidates the
 //! cache atomically so stale decisions cannot outlive their model.
+//!
+//! The request-lifecycle policy layer (`super::lifecycle`) wraps the
+//! serve path end to end: a [`Deadline`] is stamped at entry and
+//! enforced at admission, in the engine queue, and while waiting for
+//! the reply; transient failures are retried under a bounded
+//! decorrelated-jitter budget; per-artifact circuit breakers fail sick
+//! artifacts fast (or coerce them onto the alternate algorithm); and a
+//! brownout controller sheds optional load — shadow probes, trace
+//! sampling, reuse inserts — under sustained overload. See
+//! [`Router::serve_with_deadline`] for the full state machine.
 
-use super::backend::EngineBusy;
+use super::backend::{classify_error, BreakerOpen, DeadlineExceeded, EngineBusy, ErrorClass};
 use super::engine::{EngineHandle, ExecReply};
+use super::lifecycle::{
+    BreakerConfig, BreakerDecision, BreakerRegistry, BreakerState, BrownoutConfig,
+    BrownoutController, Deadline, DecorrelatedJitter, RetryPolicy,
+};
 use super::metrics::CoordinatorMetrics;
 use crate::gemm::cpu::Matrix;
 use crate::gemm::xla::XlaBackend;
@@ -32,10 +46,10 @@ use crate::obs::{span as obs_span, ObsLayer, SpanHandle};
 use crate::online::{trainer, Accumulator, LiveSelector, OnlineConfig, OnlineHub};
 use crate::selector::cache::DecisionCache;
 use crate::selector::{SelectionReason, Selector, TrainedModel};
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// One NT-operation request: `C = A × Bᵀ` on (virtual) GPU `gpu`.
 pub struct GemmRequest {
@@ -90,6 +104,19 @@ pub struct RouterConfig {
     /// serving path exactly as before; sharing the same `Arc` across
     /// routers aggregates their traffic into one layer.
     pub obs: Option<Arc<ObsLayer>>,
+    /// Default per-request deadline, stamped at `serve` entry. `None`
+    /// (the default) means requests never expire; per-call overrides go
+    /// through [`Router::serve_with_deadline`].
+    pub deadline: Option<Duration>,
+    /// Bounded-retry policy for *transient* failures. The default
+    /// (`max_retries: 0`) disables retries — the seed behavior.
+    pub retry: RetryPolicy,
+    /// Per-artifact circuit breakers. `None` (the default) disables the
+    /// breaker layer entirely.
+    pub breaker: Option<BreakerConfig>,
+    /// Overload-brownout ladder, driven by the obs layer's windowed
+    /// rates (requires `obs` to do anything). `None` disables.
+    pub brownout: Option<BrownoutConfig>,
 }
 
 impl Default for RouterConfig {
@@ -100,6 +127,10 @@ impl Default for RouterConfig {
             admission: AdmissionControl::default(),
             online: None,
             obs: None,
+            deadline: None,
+            retry: RetryPolicy::default(),
+            breaker: None,
+            brownout: None,
         }
     }
 }
@@ -129,6 +160,11 @@ pub struct Router {
     config: RouterConfig,
     cache: Arc<DecisionCache>,
     online: Option<OnlineRuntime>,
+    breakers: Option<BreakerRegistry>,
+    brownout: Option<BrownoutController>,
+    /// Monotone per-request sequence seeding each retry schedule's
+    /// jitter, so concurrent retriers decorrelate deterministically.
+    retry_seq: AtomicU64,
 }
 
 impl Router {
@@ -185,6 +221,8 @@ impl Router {
                 trainer: Some(join),
             }
         });
+        let breakers = config.breaker.map(BreakerRegistry::new);
+        let brownout = config.brownout.map(BrownoutController::new);
         Router {
             live,
             engine,
@@ -192,7 +230,22 @@ impl Router {
             config,
             cache,
             online,
+            breakers,
+            brownout,
+            retry_seq: AtomicU64::new(0),
         }
+    }
+
+    /// The per-artifact breaker registry when breakers are enabled —
+    /// exposed for tests and operational introspection (state, opens,
+    /// transition events).
+    pub fn breakers(&self) -> Option<&BreakerRegistry> {
+        self.breakers.as_ref()
+    }
+
+    /// The brownout controller when enabled (level, transitions).
+    pub fn brownout(&self) -> Option<&BrownoutController> {
+        self.brownout.as_ref()
     }
 
     /// The online hub (drift tracker, sample ring, live-model generation)
@@ -248,9 +301,12 @@ impl Router {
         artifact: String,
         inputs: Vec<Matrix>,
         span: Option<SpanHandle>,
+        deadline: Option<Deadline>,
     ) -> anyhow::Result<mpsc::Receiver<anyhow::Result<ExecReply>>> {
         let block = matches!(self.config.admission, AdmissionControl::Block);
-        let res = self.engine.submit_traced(artifact, inputs, block, span);
+        let res = self
+            .engine
+            .submit_traced(artifact, inputs, block, span, deadline);
         if res.as_ref().err().is_some_and(EngineBusy::is) {
             self.metrics.busy_rejections.fetch_add(1, Ordering::Relaxed);
         }
@@ -259,17 +315,154 @@ impl Router {
 
     /// Account one request-ending error: admission-control rejections are
     /// `shed` (the caller lost the request to backpressure policy, not to
-    /// a malfunction), everything else is `failed`. Disjoint by
-    /// construction, so `completed + failed + shed == requests` holds at
-    /// quiescence — see [`super::metrics::MetricsSnapshot::verify_conservation`].
+    /// a malfunction), deadline expiries are `timed_out`, everything else
+    /// — including breaker fail-fasts — is `failed`. Disjoint by
+    /// construction, so `completed + failed + shed + timed_out ==
+    /// requests` holds at quiescence — see
+    /// [`super::metrics::MetricsSnapshot::verify_conservation`].
     fn record_failure(&self, e: &anyhow::Error) {
         if EngineBusy::is(e) {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
             if let Some(o) = &self.config.obs {
                 o.mark_shed();
             }
+        } else if DeadlineExceeded::is(e) {
+            self.metrics.timed_out.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = &self.config.obs {
+                o.mark_timeout();
+            }
         } else {
             self.metrics.failed.fetch_add(1, Ordering::Relaxed);
+            if BreakerOpen::is(e) {
+                if let Some(o) = &self.config.obs {
+                    o.mark_breaker_open();
+                }
+            }
+        }
+    }
+
+    /// The span outcome code for a request-ending error.
+    fn outcome_code(e: &anyhow::Error) -> u8 {
+        if EngineBusy::is(e) {
+            obs_span::OUTCOME_SHED
+        } else if DeadlineExceeded::is(e) {
+            obs_span::OUTCOME_TIMED_OUT
+        } else {
+            obs_span::OUTCOME_FAILED
+        }
+    }
+
+    /// Wait for the engine reply, bounded by the request deadline. A
+    /// wait that outlives the deadline resolves as [`DeadlineExceeded`]
+    /// — the worker's eventual send lands on a dropped receiver, so the
+    /// client is never left hanging past its budget.
+    fn recv_reply(
+        rx: &mpsc::Receiver<anyhow::Result<ExecReply>>,
+        deadline: Option<&Deadline>,
+    ) -> anyhow::Result<ExecReply> {
+        match deadline {
+            None => rx
+                .recv()
+                .map_err(|_| anyhow::anyhow!("engine dropped the response"))?,
+            Some(d) => match d.remaining() {
+                None => Err(anyhow::Error::new(DeadlineExceeded)),
+                Some(rem) => match rx.recv_timeout(rem) {
+                    Ok(reply) => reply,
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        Err(anyhow::Error::new(DeadlineExceeded))
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        Err(anyhow::anyhow!("engine dropped the response"))
+                    }
+                },
+            },
+        }
+    }
+
+    /// Feed one served outcome to the artifact's breaker and handle a
+    /// resulting transition: a trip to Open counts in
+    /// `breaker_opens` and fires the flight-recorder `breaker_open`
+    /// trigger; landing back in Closed is just recorded in the event log.
+    fn breaker_record(&self, artifact: &str, failed: bool) {
+        let Some(reg) = &self.breakers else { return };
+        if let Some(BreakerState::Open) = reg.record(artifact, failed) {
+            self.metrics.breaker_opens.fetch_add(1, Ordering::Relaxed);
+            if let Some(o) = &self.config.obs {
+                o.trigger_breaker_open();
+            }
+        }
+    }
+
+    /// Breaker admission for the decided `(algo, reason)`. Returns the
+    /// possibly-coerced selection plus its artifact, or a typed
+    /// [`BreakerOpen`] when the artifact is tripped and no fallback is
+    /// available. A coerced fallback is recorded as
+    /// [`SelectionReason::Forced`] so the online loop never learns from
+    /// (or shadow-probes) coerced traffic.
+    fn consult_breaker(
+        &self,
+        req: &GemmRequest,
+        algo: Algorithm,
+        reason: SelectionReason,
+    ) -> anyhow::Result<(Algorithm, SelectionReason, String)> {
+        let artifact = XlaBackend::artifact_name(req.shape, algo);
+        let Some(reg) = &self.breakers else {
+            return Ok((algo, reason, artifact));
+        };
+        match reg.admit(&artifact) {
+            BreakerDecision::Allow => Ok((algo, reason, artifact)),
+            BreakerDecision::Probe => {
+                self.metrics
+                    .breaker_half_open_probes
+                    .fetch_add(1, Ordering::Relaxed);
+                Ok((algo, reason, artifact))
+            }
+            BreakerDecision::Open => {
+                let alt = match algo {
+                    Algorithm::Nt => Algorithm::Tnn,
+                    _ => Algorithm::Nt,
+                };
+                let GemmShape { m, n, k } = req.shape;
+                let alt_fits = alt != Algorithm::Tnn
+                    || Simulator::tnn_workspace_bytes(m, n, k) <= req.gpu.global_mem_bytes();
+                if alt_fits {
+                    let alt_artifact = XlaBackend::artifact_name(req.shape, alt);
+                    match reg.admit(&alt_artifact) {
+                        BreakerDecision::Open => {}
+                        BreakerDecision::Probe => {
+                            self.metrics
+                                .breaker_half_open_probes
+                                .fetch_add(1, Ordering::Relaxed);
+                            return Ok((alt, SelectionReason::Forced, alt_artifact));
+                        }
+                        BreakerDecision::Allow => {
+                            return Ok((alt, SelectionReason::Forced, alt_artifact));
+                        }
+                    }
+                }
+                Err(anyhow::Error::new(BreakerOpen))
+            }
+        }
+    }
+
+    /// Rate-limited brownout evaluation: on its tick cadence, fold the
+    /// obs layer's windowed rates (and total-latency p99) into the
+    /// ladder, publish the level gauge, and throw the reuse-insert
+    /// lever. Probe and tracing levers are read inline per request.
+    fn brownout_tick(&self) {
+        let (Some(ctrl), Some(o)) = (&self.brownout, self.config.obs.as_deref()) else {
+            return;
+        };
+        let now_ms = o.epoch_ms();
+        if !ctrl.eval_due(now_ms) {
+            return;
+        }
+        let level = ctrl.evaluate(&o.window_rates(), o.total_p99_us(), now_ms);
+        self.metrics
+            .brownout_level
+            .store(level as u64, Ordering::Relaxed);
+        if let Some(layer) = self.engine.reuse() {
+            layer.set_inserts_enabled(ctrl.allow_reuse_inserts());
         }
     }
 
@@ -316,31 +509,100 @@ impl Router {
             && rt.hub.should_probe(req.gpu.id, m, n, k)
     }
 
-    /// Serve one request synchronously.
+    /// Serve one request synchronously under the configured default
+    /// deadline (if any).
     pub fn serve(&self, req: GemmRequest) -> anyhow::Result<GemmResponse> {
+        self.serve_with_deadline(req, self.config.deadline.map(Deadline::after))
+    }
+
+    /// Serve one request synchronously with an explicit per-call
+    /// deadline (overriding [`RouterConfig::deadline`]; `None` means no
+    /// expiry). The full lifecycle state machine:
+    ///
+    /// ```text
+    /// admit ─► decide ─► deadline check ─► breaker admit ─► submit ─► wait
+    ///   │                  │ expired          │ open: NT↔TNN     │ per-attempt
+    ///   │                  ▼                  │ fallback, else   ▼
+    ///   │               timed_out             ▼              transient?
+    ///   │                              BreakerOpen (failed)     │ retry w/
+    ///   │                                                       │ jitter until
+    ///   ▼                                                       ▼ budget dies
+    /// completed / failed / shed / timed_out  ◄──────── resolve + breaker
+    ///                                                   record + span
+    /// ```
+    pub fn serve_with_deadline(
+        &self,
+        req: GemmRequest,
+        deadline: Option<Deadline>,
+    ) -> anyhow::Result<GemmResponse> {
         let t0 = Instant::now();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        self.brownout_tick();
         // Tracing: draw a span if this request falls on the sampling
-        // lattice. Entry and selection are stamped here; the engine and
-        // worker stamp the rest through the shared cell.
+        // lattice (suppressed from brownout level 2). Entry and selection
+        // are stamped here; the engine and worker stamp the rest through
+        // the shared cell.
         let obs = self.config.obs.as_deref();
-        let span = obs.and_then(|o| o.begin_span());
+        let tracing_on = self.brownout.as_ref().map_or(true, |b| b.allow_tracing());
+        let span = if tracing_on {
+            obs.and_then(|o| o.begin_span())
+        } else {
+            None
+        };
         if let Some(o) = obs {
             o.mark_request();
         }
         let t_entry = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
-        let (algo, reason) = self.decide(&req);
+        let (decided_algo, decided_reason) = self.decide(&req);
         let t_select = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
+        // Close out one request-ending error: ledger + window marks +
+        // span outcome, all from the same error classification.
+        let resolve_err = |e: anyhow::Error, algo: Algorithm, reason: SelectionReason, retries: u32| {
+            self.record_failure(&e);
+            if let (Some(o), Some(cell)) = (obs, &span) {
+                o.complete(cell.to_span(
+                    t_entry,
+                    t_select,
+                    cell.now_us(),
+                    Router::algo_code(algo),
+                    Router::reason_code(reason),
+                    Router::outcome_code(&e),
+                    retries,
+                ));
+            }
+            Err(e)
+        };
+
+        // Admission: a request that arrives already expired is dropped
+        // before it can touch the breaker or the engine.
+        if deadline.as_ref().is_some_and(|d| d.expired()) {
+            self.metrics.record_selection(decided_algo, decided_reason);
+            let e = anyhow::Error::new(DeadlineExceeded);
+            return resolve_err(e, decided_algo, decided_reason, 0);
+        }
+
+        // Circuit breaker: a tripped artifact is coerced onto the
+        // alternate algorithm (recorded as Forced so the online loop
+        // neither learns from nor probes coerced traffic) or fails fast.
+        let (algo, reason, artifact) = match self.consult_breaker(&req, decided_algo, decided_reason)
+        {
+            Ok(sel) => sel,
+            Err(e) => {
+                self.metrics.record_selection(decided_algo, decided_reason);
+                return resolve_err(e, decided_algo, decided_reason, 0);
+            }
+        };
         self.metrics.record_selection(algo, reason);
         let predicted = Router::predicted_label(reason);
-        let artifact = XlaBackend::artifact_name(req.shape, algo);
 
         // Shadow probe: run the *other* algorithm's artifact alongside the
-        // chosen one. Best-effort — a busy engine or an execution failure
-        // on the shadow side only costs the training sample, never the
-        // request — and it is submitted strictly *after* the primary so a
-        // probe can never consume the queue slot the real request needed.
-        let shadow_inputs = if self.should_probe(&req, predicted) {
+        // chosen one (suppressed from brownout level 1). Best-effort — a
+        // busy engine or an execution failure on the shadow side only
+        // costs the training sample, never the request — and it is
+        // submitted strictly *after* the primary so a probe can never
+        // consume the queue slot the real request needed.
+        let probes_on = self.brownout.as_ref().map_or(true, |b| b.allow_probes());
+        let shadow_inputs = if probes_on && self.should_probe(&req, predicted) {
             let other = match algo {
                 Algorithm::Nt => Algorithm::Tnn,
                 _ => Algorithm::Nt,
@@ -356,20 +618,88 @@ impl Router {
 
         let GemmShape { m, n, k } = req.shape;
         let gpu = req.gpu;
-        let submitted = self.submit(artifact.clone(), vec![req.a, req.b], span.clone());
-        let shadow = match (&submitted, shadow_inputs) {
-            (Ok(_), Some((shadow_artifact, a, b))) => {
-                self.engine.try_submit(shadow_artifact, vec![a, b]).ok()
-            }
-            _ => None,
+        // Retry budget: transient failures only, never for deny-listed
+        // artifacts (a permanently-poisoned artifact must not burn the
+        // deadline re-failing), each sleep drawn from the decorrelated
+        // jitter schedule and charged against the remaining deadline.
+        let policy = self.config.retry;
+        let budget = if policy.max_retries > 0
+            && self.engine.reuse().is_some_and(|l| l.denied(&artifact))
+        {
+            0
+        } else {
+            policy.max_retries
         };
-        let outcome = submitted.and_then(|rx| {
-            let reply = rx
-                .recv()
-                .map_err(|_| anyhow::anyhow!("engine dropped the response"))??;
-            anyhow::ensure!(reply.outputs.len() == 1, "{artifact}: expected one output");
-            Ok(reply)
-        });
+        let mut jitter = DecorrelatedJitter::new(
+            &policy,
+            crate::util::rng::mix64(self.retry_seq.fetch_add(1, Ordering::Relaxed) ^ 0x5EED_CAFE),
+        );
+        let mut inputs = Some((req.a, req.b));
+        let mut attempt: u32 = 0;
+        let mut shadow = None;
+        let outcome = loop {
+            // The final permitted attempt moves the inputs; earlier
+            // attempts clone so a retry still has them.
+            let job_inputs = if attempt >= budget {
+                let (a, b) = inputs.take().expect("request inputs consumed twice");
+                vec![a, b]
+            } else {
+                let (a, b) = inputs.as_ref().expect("request inputs consumed twice");
+                vec![a.clone(), b.clone()]
+            };
+            let submitted = self.submit(artifact.clone(), job_inputs, span.clone(), deadline);
+            if attempt == 0 {
+                if let (Ok(_), Some((shadow_artifact, a, b))) = (&submitted, &shadow_inputs) {
+                    shadow = self
+                        .engine
+                        .try_submit(shadow_artifact.clone(), vec![a.clone(), b.clone()])
+                        .ok();
+                }
+            }
+            let res = submitted.and_then(|rx| {
+                let reply = Router::recv_reply(&rx, deadline.as_ref())?;
+                anyhow::ensure!(reply.outputs.len() == 1, "{artifact}: expected one output");
+                Ok(reply)
+            });
+            match res {
+                Ok(reply) => {
+                    self.breaker_record(&artifact, false);
+                    break Ok(reply);
+                }
+                Err(e) => {
+                    // EngineBusy is load, not artifact health; a breaker
+                    // fail-fast never reached the artifact at all.
+                    if !EngineBusy::is(&e) && !BreakerOpen::is(&e) {
+                        self.breaker_record(&artifact, true);
+                    }
+                    let transient = classify_error(&e) == ErrorClass::Transient;
+                    if transient && attempt < budget {
+                        let nap = Duration::from_micros(jitter.next_us());
+                        let affordable = match deadline.as_ref().map(|d| d.remaining()) {
+                            None => true,              // no deadline: always
+                            Some(Some(rem)) => rem > nap,
+                            Some(None) => false,       // already expired
+                        };
+                        if affordable {
+                            attempt += 1;
+                            self.metrics.retries.fetch_add(1, Ordering::Relaxed);
+                            if let Some(o) = obs {
+                                o.mark_retry();
+                            }
+                            std::thread::sleep(nap);
+                            continue;
+                        }
+                    }
+                    if transient && budget > 0 {
+                        self.metrics.retries_exhausted.fetch_add(1, Ordering::Relaxed);
+                        if let Some(o) = obs {
+                            o.trigger_retry_exhausted();
+                        }
+                    }
+                    break Err(e);
+                }
+            }
+        };
         match outcome {
             Ok(mut reply) => {
                 let output = reply.outputs.remove(0);
@@ -389,11 +719,12 @@ impl Router {
                             Router::algo_code(algo),
                             Router::reason_code(reason),
                             obs_span::OUTCOME_COMPLETED,
+                            attempt,
                         ));
                     }
                 }
                 if let Some(rt) = &self.online {
-                    let shadow_us = shadow.and_then(|rx| {
+                    let shadow_us = shadow.and_then(|rx: mpsc::Receiver<anyhow::Result<ExecReply>>| {
                         rx.recv().ok().and_then(|r| r.ok()).map(|r| r.exec_us)
                     });
                     match shadow_us {
@@ -432,25 +763,7 @@ impl Router {
                     latency,
                 })
             }
-            Err(e) => {
-                self.record_failure(&e);
-                if let (Some(o), Some(cell)) = (obs, &span) {
-                    let outcome = if EngineBusy::is(&e) {
-                        obs_span::OUTCOME_SHED
-                    } else {
-                        obs_span::OUTCOME_FAILED
-                    };
-                    o.complete(cell.to_span(
-                        t_entry,
-                        t_select,
-                        cell.now_us(),
-                        Router::algo_code(algo),
-                        Router::reason_code(reason),
-                        outcome,
-                    ));
-                }
-                Err(e)
-            }
+            Err(e) => resolve_err(e, algo, reason, attempt),
         }
     }
 
@@ -490,7 +803,7 @@ impl Router {
             let artifact = XlaBackend::artifact_name(req.shape, algo);
             let t0 = Instant::now();
             let (gpu, shape) = (req.gpu, req.shape);
-            match self.submit(artifact.clone(), vec![req.a, req.b], None) {
+            match self.submit(artifact.clone(), vec![req.a, req.b], None, None) {
                 Ok(rx) => pending.push(Pending::Wait {
                     algo,
                     reason,
@@ -591,7 +904,7 @@ impl Drop for Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::Engine;
+    use crate::coordinator::{Engine, ExecBackend};
     use crate::dataset::collect_paper_dataset;
     use crate::gemm::cpu::matmul_nt;
     use crate::gpusim::GTX1080;
@@ -731,6 +1044,255 @@ mod tests {
         assert_eq!(snap.online_samples, 6, "every request recorded");
         let hub = router.online_hub().expect("online hub");
         assert!((hub.drift.probes() - 3.0).abs() < 1e-9);
+        engine.shutdown();
+    }
+
+    /// Fails its first `fail_first` executions with a typed transient
+    /// fault, then delegates to the native kernel.
+    struct FlakyExecutor {
+        fail_first: u64,
+        calls: std::sync::atomic::AtomicU64,
+    }
+
+    impl ExecBackend for FlakyExecutor {
+        fn execute(&self, artifact: &str, inputs: &[&Matrix]) -> anyhow::Result<Vec<Matrix>> {
+            let n = self.calls.fetch_add(1, Ordering::Relaxed);
+            if n < self.fail_first {
+                return Err(anyhow::Error::new(
+                    crate::coordinator::backend::TransientFault(format!(
+                        "flaky: injected transient failure #{n} on {artifact}"
+                    )),
+                ));
+            }
+            crate::gemm::native::NativeExecutor.execute(artifact, inputs)
+        }
+    }
+
+    fn flaky_router(fail_first: u64, config: RouterConfig) -> (Engine, Router) {
+        let engine = Engine::pool(
+            crate::coordinator::engine::EngineConfig {
+                workers: 1,
+                queue_depth: 32,
+                ..Default::default()
+            },
+            |_| {
+                Ok(Box::new(FlakyExecutor {
+                    fail_first,
+                    calls: std::sync::atomic::AtomicU64::new(0),
+                }) as Box<dyn ExecBackend>)
+            },
+        )
+        .unwrap();
+        let selector = Selector::train_default(&collect_paper_dataset());
+        let router = Router::new(selector, engine.handle(), config);
+        (engine, router)
+    }
+
+    #[test]
+    fn expired_deadline_times_out_at_admission() {
+        let (engine, router) = native_router(RouterConfig::default());
+        let err = router
+            .serve_with_deadline(request(16, 16, 16, 1), Some(Deadline::after(Duration::ZERO)))
+            .unwrap_err();
+        assert!(DeadlineExceeded::is(&err), "typed timeout: {err}");
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.timed_out, 1);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.shed, 0);
+        snap.verify_conservation().unwrap();
+        // An unexpired request on the same router still completes.
+        router
+            .serve_with_deadline(
+                request(16, 16, 16, 2),
+                Some(Deadline::after(Duration::from_secs(30))),
+            )
+            .unwrap();
+        assert_eq!(router.metrics.snapshot().completed, 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn transient_failures_retry_to_success_within_budget() {
+        let (engine, router) = flaky_router(
+            2,
+            RouterConfig {
+                retry: RetryPolicy {
+                    max_retries: 3,
+                    base: Duration::from_micros(50),
+                    cap: Duration::from_micros(500),
+                },
+                ..RouterConfig::default()
+            },
+        );
+        let req = request(16, 16, 16, 1);
+        let expect = matmul_nt(&req.a, &req.b);
+        let resp = router.serve(req).unwrap();
+        assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.failed, 0);
+        assert_eq!(snap.retries, 2, "two failures, two retries");
+        assert_eq!(snap.retries_exhausted, 0);
+        snap.verify_conservation().unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_fails_and_is_counted() {
+        let (engine, router) = flaky_router(
+            u64::MAX,
+            RouterConfig {
+                retry: RetryPolicy {
+                    max_retries: 2,
+                    base: Duration::from_micros(50),
+                    cap: Duration::from_micros(500),
+                },
+                ..RouterConfig::default()
+            },
+        );
+        let err = router.serve(request(16, 16, 16, 1)).unwrap_err();
+        assert!(
+            crate::coordinator::backend::TransientFault::is(&err),
+            "the final transient error surfaces typed: {err}"
+        );
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.retries, 2, "budget fully spent");
+        assert_eq!(snap.retries_exhausted, 1);
+        snap.verify_conservation().unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn retries_off_is_the_seed_behavior() {
+        let (engine, router) = flaky_router(1, RouterConfig::default());
+        assert!(router.serve(request(16, 16, 16, 1)).is_err());
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.retries, 0);
+        assert_eq!(snap.retries_exhausted, 0, "no budget, no exhaustion");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn breaker_trips_then_falls_back_then_fails_fast() {
+        // Backend fails everything forever; breaker trips after two
+        // outcomes per artifact. No retries, so each request records
+        // exactly one outcome.
+        let (engine, router) = flaky_router(
+            u64::MAX,
+            RouterConfig {
+                force: Some(Algorithm::Nt),
+                breaker: Some(BreakerConfig {
+                    window: 4,
+                    min_samples: 2,
+                    failure_threshold: 0.5,
+                    open_cooldown: Duration::from_secs(3600),
+                }),
+                ..RouterConfig::default()
+            },
+        );
+        let nt = XlaBackend::artifact_name(GemmShape::new(16, 16, 16), Algorithm::Nt);
+        let tnn = XlaBackend::artifact_name(GemmShape::new(16, 16, 16), Algorithm::Tnn);
+        // Two failures trip NT's breaker.
+        for i in 0..2 {
+            assert!(router.serve(request(16, 16, 16, i)).is_err());
+        }
+        let reg = router.breakers().expect("breakers enabled");
+        assert_eq!(reg.state(&nt), BreakerState::Open);
+        assert_eq!(router.metrics.snapshot().breaker_opens, 1);
+        // NT open → coerced onto TNN, recorded as Forced; TNN fails too
+        // and trips after two more requests.
+        for i in 2..4 {
+            assert!(router.serve(request(16, 16, 16, i)).is_err());
+        }
+        assert_eq!(reg.state(&tnn), BreakerState::Open);
+        // Both artifacts open → typed fail-fast, distinct from shed.
+        let err = router.serve(request(16, 16, 16, 4)).unwrap_err();
+        assert!(BreakerOpen::is(&err), "typed breaker rejection: {err}");
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.failed, 5);
+        assert_eq!(snap.shed, 0, "breaker rejections are failed, not shed");
+        assert_eq!(snap.breaker_opens, 2);
+        snap.verify_conservation().unwrap();
+        engine.shutdown();
+    }
+
+    #[test]
+    fn breaker_half_open_probe_closes_on_recovery() {
+        // Backend heals after two failures; zero cooldown lets the very
+        // next request probe the half-open breaker.
+        let (engine, router) = flaky_router(
+            2,
+            RouterConfig {
+                force: Some(Algorithm::Nt),
+                breaker: Some(BreakerConfig {
+                    window: 4,
+                    min_samples: 2,
+                    failure_threshold: 0.5,
+                    open_cooldown: Duration::ZERO,
+                }),
+                ..RouterConfig::default()
+            },
+        );
+        let nt = XlaBackend::artifact_name(GemmShape::new(16, 16, 16), Algorithm::Nt);
+        for i in 0..2 {
+            assert!(router.serve(request(16, 16, 16, i)).is_err());
+        }
+        let reg = router.breakers().expect("breakers enabled");
+        assert_eq!(reg.state(&nt), BreakerState::Open);
+        // The next request is the half-open probe; the healed backend
+        // serves it on the *original* artifact and the breaker closes.
+        let resp = router.serve(request(16, 16, 16, 2)).unwrap();
+        assert_eq!(resp.algorithm, Algorithm::Nt);
+        assert_eq!(reg.state(&nt), BreakerState::Closed);
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.breaker_half_open_probes, 1);
+        assert_eq!(snap.completed, 1);
+        let kinds: Vec<BreakerState> = reg.events().iter().map(|e| e.to).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                BreakerState::Open,
+                BreakerState::HalfOpen,
+                BreakerState::Closed
+            ]
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn brownout_ladder_engages_and_gates_tracing() {
+        use crate::obs::ObsConfig;
+        let obs = Arc::new(ObsLayer::new(ObsConfig::default()));
+        let (engine, router) = native_router(RouterConfig {
+            obs: Some(Arc::clone(&obs)),
+            brownout: Some(BrownoutConfig {
+                shed_rate_engage: 0.0, // any traffic reads as pressure
+                shed_rate_recover: -1.0,
+                p99_engage_us: u64::MAX,
+                engage_evals: 1,
+                recover_evals: u32::MAX,
+                eval_interval_ms: 0,
+            }),
+            ..RouterConfig::default()
+        });
+        for i in 0..6u64 {
+            router.serve(request(16, 16, 16, i)).unwrap();
+        }
+        let ctrl = router.brownout().expect("brownout enabled");
+        assert_eq!(
+            ctrl.level(),
+            crate::coordinator::lifecycle::BROWNOUT_MAX_LEVEL,
+            "forced pressure saturates the ladder"
+        );
+        let snap = router.metrics.snapshot();
+        assert_eq!(snap.brownout_level, 3, "level gauge published");
+        assert!(
+            snap.obs.as_ref().unwrap().spans_begun < 6,
+            "tracing suppressed from level 2"
+        );
+        assert!(!ctrl.transitions().is_empty());
         engine.shutdown();
     }
 

@@ -128,6 +128,8 @@ pub struct ObsConfig {
     pub trigger_on_failure: bool,
     /// Capture a dump when a sampled request is shed.
     pub trigger_on_shed: bool,
+    /// Capture a dump when a sampled request's deadline expires.
+    pub trigger_on_timeout: bool,
     /// Capture a dump when either algorithm's total-latency p99 exceeds
     /// this. `u64::MAX` disables.
     pub p99_threshold_us: u64,
@@ -152,6 +154,7 @@ impl Default for ObsConfig {
             dump_cooldown_us: 100_000,
             trigger_on_failure: true,
             trigger_on_shed: true,
+            trigger_on_timeout: true,
             p99_threshold_us: u64::MAX,
             p99_min_samples: 32,
             mispredict_burst: 0,
@@ -305,6 +308,9 @@ impl ObsLayer {
             span::OUTCOME_SHED if self.config.trigger_on_shed => {
                 self.recorder.trigger("shed", now);
             }
+            span::OUTCOME_TIMED_OUT if self.config.trigger_on_timeout => {
+                self.recorder.trigger("timeout", now);
+            }
             _ => {}
         }
         if self.config.p99_threshold_us != u64::MAX {
@@ -342,6 +348,62 @@ impl ObsLayer {
 
     pub fn mark_probe(&self) {
         self.windows.record_at(WindowKind::Probe, self.now_ms());
+    }
+
+    pub fn mark_timeout(&self) {
+        self.windows.record_at(WindowKind::TimedOut, self.now_ms());
+    }
+
+    /// Mark one retry *attempt* (a request retried twice marks twice).
+    pub fn mark_retry(&self) {
+        self.windows.record_at(WindowKind::Retry, self.now_ms());
+    }
+
+    /// Mark one breaker-open fail-fast rejection.
+    pub fn mark_breaker_open(&self) {
+        self.windows
+            .record_at(WindowKind::BreakerOpen, self.now_ms());
+    }
+
+    /// Fire the retry-budget-exhausted flight-recorder trigger.
+    pub fn trigger_retry_exhausted(&self) {
+        self.recorder.trigger("retry_exhausted", self.now_us());
+    }
+
+    /// Fire the breaker-tripped-open flight-recorder trigger.
+    pub fn trigger_breaker_open(&self) {
+        self.recorder.trigger("breaker_open", self.now_us());
+    }
+
+    /// Worst per-algorithm total-latency p99 (µs), 0 until any total
+    /// samples exist — the cheap latency-pressure signal the brownout
+    /// controller polls (O(histogram buckets), called on the brownout
+    /// evaluation cadence, not per request).
+    pub fn total_p99_us(&self) -> u64 {
+        let mut worst = 0u64;
+        for a in 0..2 {
+            let h = &self.stage_hist[STAGE_TOTAL][a];
+            if h.count() == 0 {
+                continue;
+            }
+            let (_, _, p99, _) = h.summary();
+            if p99.is_finite() {
+                worst = worst.max(p99 as u64);
+            }
+        }
+        worst
+    }
+
+    /// The current windowed rates (the brownout controller's pressure
+    /// input; same view `snapshot()` embeds).
+    pub fn window_rates(&self) -> WindowRates {
+        self.windows.rates_at(self.now_ms())
+    }
+
+    /// Milliseconds since the layer epoch (public for rate-limited
+    /// callers like the brownout evaluation tick).
+    pub fn epoch_ms(&self) -> u64 {
+        self.now_ms()
     }
 
     /// Mark a shadow-probe mispredict; fires the burst trigger when the
@@ -438,6 +500,7 @@ mod tests {
             outcome: OUTCOME_COMPLETED,
             batch_size: 1,
             worker: 0,
+            retries: 0,
         }
     }
 
@@ -502,6 +565,34 @@ mod tests {
         assert_eq!(dumps[0].trigger, "failure");
         assert_eq!(dumps[0].spans.len(), 2, "preceding span is in the dump");
         assert_eq!(dumps[0].spans[1].outcome, OUTCOME_FAILED);
+    }
+
+    #[test]
+    fn timed_out_span_fires_a_timeout_dump() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        let mut late = completed_span(ALGO_NT, 100, 10);
+        late.outcome = crate::obs::span::OUTCOME_TIMED_OUT;
+        late.retries = 2;
+        layer.complete(late);
+        let dumps = layer.dumps();
+        assert_eq!(dumps.len(), 1);
+        assert_eq!(dumps[0].trigger, "timeout");
+        assert_eq!(dumps[0].spans.last().unwrap().retries, 2);
+    }
+
+    #[test]
+    fn lifecycle_marks_flow_into_window_rates() {
+        let layer = ObsLayer::new(ObsConfig::default());
+        layer.mark_request();
+        layer.mark_timeout();
+        layer.mark_retry();
+        layer.mark_retry();
+        layer.mark_breaker_open();
+        let w = layer.snapshot().window;
+        assert_eq!(w.timed_out, 1);
+        assert_eq!(w.retries, 2);
+        assert_eq!(w.breaker_opens, 1);
+        assert!((w.timeout_rate - 1.0).abs() < 1e-12);
     }
 
     #[test]

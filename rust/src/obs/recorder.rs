@@ -6,11 +6,14 @@
 //! and inspected after the fact. This is the "what happened just
 //! before" instrument the lifetime counters cannot provide.
 //!
-//! Dumps are bounded (`max_dumps`) and rate-limited (`cooldown_us`
-//! between captures) so a failure storm produces a handful of useful
-//! snapshots instead of thousands of identical ones.
+//! Dumps are bounded (`max_dumps`) and rate-limited *per trigger
+//! cause* (`cooldown_us` between captures of the same cause) so a
+//! failure storm produces a handful of useful snapshots instead of
+//! thousands of identical ones — while a `timeout` or `breaker_open`
+//! incident arriving mid-storm still captures its own first dump
+//! instead of being shadowed by the failure cooldown.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -52,8 +55,9 @@ pub struct FlightRecorder {
     cooldown_us: u64,
     recent: Mutex<VecDeque<TraceSpan>>,
     dumps: Mutex<Vec<FlightDump>>,
-    /// µs timestamp of the last capture (cooldown clock); 0 = never.
-    last_dump_us: AtomicU64,
+    /// µs timestamp of the last capture *per trigger cause* (cooldown
+    /// clocks); an absent cause has never captured.
+    last_dump_us: Mutex<HashMap<String, u64>>,
     /// Triggers that fired, including ones suppressed by cooldown or
     /// the dump cap — observability for the observability layer.
     triggered: AtomicU64,
@@ -69,7 +73,7 @@ impl FlightRecorder {
             cooldown_us,
             recent: Mutex::new(VecDeque::with_capacity(capacity)),
             dumps: Mutex::new(Vec::new()),
-            last_dump_us: AtomicU64::new(0),
+            last_dump_us: Mutex::new(HashMap::new()),
             triggered: AtomicU64::new(0),
             captured: AtomicU64::new(0),
         }
@@ -86,25 +90,26 @@ impl FlightRecorder {
     }
 
     /// Fire a trigger at `now_us`. Captures a dump of the current ring
-    /// unless within the cooldown of the previous capture or the dump
-    /// store is full. Returns true when a dump was actually captured.
+    /// unless within this *cause's* cooldown of its previous capture or
+    /// the dump store is full. Returns true when a dump was actually
+    /// captured.
     pub fn trigger(&self, name: &str, now_us: u64) -> bool {
         self.triggered.fetch_add(1, Ordering::Relaxed);
-        let last = self.last_dump_us.load(Ordering::Acquire);
-        if last != 0 && now_us.saturating_sub(last) < self.cooldown_us {
-            return false;
-        }
         // One capturer at a time; the dumps lock serializes the
-        // cooldown check-and-set as well.
+        // per-cause cooldown check-and-set as well.
         let mut dumps = self.dumps.lock().unwrap();
         if dumps.len() >= self.max_dumps {
             return false;
         }
-        let last = self.last_dump_us.load(Ordering::Acquire);
-        if last != 0 && now_us.saturating_sub(last) < self.cooldown_us {
-            return false;
+        {
+            let mut clocks = self.last_dump_us.lock().unwrap();
+            if let Some(&last) = clocks.get(name) {
+                if now_us.saturating_sub(last) < self.cooldown_us {
+                    return false;
+                }
+            }
+            clocks.insert(name.to_string(), now_us.max(1));
         }
-        self.last_dump_us.store(now_us.max(1), Ordering::Release);
         let spans: Vec<TraceSpan> = self.recent.lock().unwrap().iter().copied().collect();
         dumps.push(FlightDump {
             trigger: name.to_string(),
@@ -195,6 +200,24 @@ mod tests {
         assert_eq!(rec.dump_count(), 2);
         assert_eq!(rec.triggered(), 4, "suppressed firings still counted");
         assert_eq!(rec.captured(), 2);
+    }
+
+    #[test]
+    fn cooldowns_are_per_cause() {
+        let rec = FlightRecorder::new(8, 8, 1_000_000);
+        rec.observe(span(1, OUTCOME_FAILED));
+        assert!(rec.trigger("failure", 10));
+        assert!(!rec.trigger("failure", 20), "same cause inside cooldown");
+        assert!(
+            rec.trigger("timeout", 30),
+            "a different cause has its own cooldown clock"
+        );
+        assert!(rec.trigger("breaker_open", 40));
+        assert!(!rec.trigger("timeout", 50), "now timeout is cooling down");
+        assert_eq!(rec.dump_count(), 3);
+        let dumps = rec.dumps();
+        let causes: Vec<&str> = dumps.iter().map(|d| d.trigger.as_str()).collect();
+        assert_eq!(causes, vec!["failure", "timeout", "breaker_open"]);
     }
 
     #[test]

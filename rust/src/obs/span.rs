@@ -46,6 +46,9 @@ pub const REUSE_COALESCED: u8 = 3;
 pub const OUTCOME_COMPLETED: u8 = 0;
 pub const OUTCOME_FAILED: u8 = 1;
 pub const OUTCOME_SHED: u8 = 2;
+/// The request's deadline expired (at admission, in queue, or while the
+/// client waited) — the fourth term of the conservation ledger.
+pub const OUTCOME_TIMED_OUT: u8 = 3;
 
 pub fn algo_name(code: u8) -> &'static str {
     match code {
@@ -61,6 +64,7 @@ pub fn outcome_name(code: u8) -> &'static str {
         OUTCOME_COMPLETED => "completed",
         OUTCOME_FAILED => "failed",
         OUTCOME_SHED => "shed",
+        OUTCOME_TIMED_OUT => "timed_out",
         _ => "unknown",
     }
 }
@@ -99,6 +103,10 @@ pub struct TraceSpan {
     pub batch_size: u32,
     /// Executing worker index (only meaningful when `t_exec_start != 0`).
     pub worker: u32,
+    /// Retry attempts the router spent on this request (0 = first try
+    /// resolved it) — flight dumps carry it so a post-incident read
+    /// shows how hard the retry policy was working.
+    pub retries: u32,
 }
 
 /// Both stamps present (a stage that never ran yields `None`, not 0).
@@ -143,6 +151,7 @@ impl TraceSpan {
             .set("reuse", self.reuse as u64)
             .set("batch_size", self.batch_size as u64)
             .set("worker", self.worker as u64)
+            .set("retries", self.retries as u64)
     }
 }
 
@@ -230,6 +239,7 @@ impl SpanCell {
 
     /// Flatten the cell plus the router's locally-held stamps into the
     /// immutable completed span.
+    #[allow(clippy::too_many_arguments)]
     pub fn to_span(
         &self,
         t_entry: u64,
@@ -238,6 +248,7 @@ impl SpanCell {
         algo: u8,
         reason: u8,
         outcome: u8,
+        retries: u32,
     ) -> TraceSpan {
         TraceSpan {
             t_entry,
@@ -255,6 +266,7 @@ impl SpanCell {
             outcome,
             batch_size: self.batch_size.load(Ordering::Relaxed) as u32,
             worker: self.worker.load(Ordering::Relaxed) as u32,
+            retries,
         }
     }
 }
@@ -263,8 +275,8 @@ impl SpanCell {
 
 /// Value words per slot: 9 timestamps, one packed flags word
 /// (`algo | reason<<8 | reuse<<16 | outcome<<24`), one packed
-/// `batch_size | worker<<32` word.
-const FIELDS: usize = 11;
+/// `batch_size | worker<<32` word, one retries word.
+const FIELDS: usize = 12;
 
 fn pack_flags(s: &TraceSpan) -> u64 {
     s.algo as u64 | (s.reason as u64) << 8 | (s.reuse as u64) << 16 | (s.outcome as u64) << 24
@@ -376,6 +388,7 @@ impl SpanRing {
                         }
                         v[9].store(pack_flags(s), Ordering::Relaxed);
                         v[10].store(pack_wb(s), Ordering::Relaxed);
+                        v[11].store(s.retries as u64, Ordering::Relaxed);
                         slot.seq.store(head + 1, Ordering::Release);
                         self.pushed.fetch_add(1, Ordering::Relaxed);
                         return true;
@@ -426,6 +439,7 @@ impl SpanRing {
                             outcome: (flags >> 24) as u8,
                             batch_size: wb as u32,
                             worker: (wb >> 32) as u32,
+                            retries: v[11].load(Ordering::Relaxed) as u32,
                         };
                         slot.seq.store(tail + self.capacity, Ordering::Release);
                         return Some(s);
@@ -471,6 +485,7 @@ mod tests {
             outcome: OUTCOME_COMPLETED,
             batch_size: 3,
             worker: 2,
+            retries: 1,
         }
     }
 
@@ -495,6 +510,7 @@ mod tests {
             outcome: 252,
             batch_size: u32::MAX,
             worker: u32::MAX,
+            retries: u32::MAX,
             ..span(0)
         };
         assert!(r.push(&s));
@@ -545,11 +561,12 @@ mod tests {
         cell.stamp_exec_start();
         cell.stamp_exec_end();
         let t_end = cell.now_us();
-        let s = cell.to_span(1, 1, t_end, ALGO_TNN, REASON_PREDICTED_TNN, OUTCOME_COMPLETED);
+        let s = cell.to_span(1, 1, t_end, ALGO_TNN, REASON_PREDICTED_TNN, OUTCOME_COMPLETED, 2);
         assert_eq!(s.algo, ALGO_TNN);
         assert_eq!(s.reuse, REUSE_LEAD);
         assert_eq!(s.batch_size, 4);
         assert_eq!(s.worker, 2);
+        assert_eq!(s.retries, 2);
         for t in [s.t_reuse, s.t_enqueue, s.t_dequeue, s.t_batch, s.t_exec_start, s.t_exec_end] {
             assert!(t >= 1, "stamps are clamped to >= 1");
         }
@@ -565,7 +582,7 @@ mod tests {
     #[test]
     fn unstamped_cell_yields_zeroed_stages() {
         let cell = SpanCell::new(Instant::now());
-        let s = cell.to_span(5, 6, 9, ALGO_NT, REASON_FORCED, OUTCOME_FAILED);
+        let s = cell.to_span(5, 6, 9, ALGO_NT, REASON_FORCED, OUTCOME_FAILED, 0);
         assert_eq!(s.t_enqueue, 0);
         assert_eq!(s.queue_wait_us(), None);
         assert_eq!(s.execute_us(), None);
@@ -579,5 +596,7 @@ mod tests {
         assert_eq!(j.get("algo").as_str(), Some("nt"));
         assert_eq!(j.get("outcome").as_str(), Some("completed"));
         assert_eq!(j.get("batch_size").as_f64(), Some(3.0));
+        assert_eq!(j.get("retries").as_f64(), Some(1.0));
+        assert_eq!(outcome_name(OUTCOME_TIMED_OUT), "timed_out");
     }
 }

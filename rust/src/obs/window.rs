@@ -29,9 +29,12 @@ pub enum WindowKind {
     ReuseHit = 3,
     Probe = 4,
     Mispredict = 5,
+    TimedOut = 6,
+    Retry = 7,
+    BreakerOpen = 8,
 }
 
-const KINDS: usize = 6;
+const KINDS: usize = 9;
 
 /// Stamp value meaning "this bucket has never held any slice".
 const NEVER: u64 = u64::MAX;
@@ -61,6 +64,9 @@ pub struct WindowRates {
     pub reuse_hits: u64,
     pub probes: u64,
     pub mispredicts: u64,
+    pub timed_out: u64,
+    pub retries: u64,
+    pub breaker_opens: u64,
     pub req_per_s: f64,
     /// `shed / requests` within the window.
     pub shed_rate: f64,
@@ -70,6 +76,14 @@ pub struct WindowRates {
     pub probe_rate: f64,
     /// `mispredicts / probes` within the window.
     pub mispredict_rate: f64,
+    /// `timed_out / requests` within the window.
+    pub timeout_rate: f64,
+    /// `retries / requests` within the window (can exceed 1: a request
+    /// may retry more than once).
+    pub retry_rate: f64,
+    /// `breaker_opens / requests` within the window (breaker-open
+    /// fail-fast rejections, not trip events).
+    pub breaker_open_rate: f64,
 }
 
 fn ratio(num: u64, den: u64) -> f64 {
@@ -140,6 +154,9 @@ impl RateWindows {
             reuse_hits: sums[WindowKind::ReuseHit as usize],
             probes: sums[WindowKind::Probe as usize],
             mispredicts: sums[WindowKind::Mispredict as usize],
+            timed_out: sums[WindowKind::TimedOut as usize],
+            retries: sums[WindowKind::Retry as usize],
+            breaker_opens: sums[WindowKind::BreakerOpen as usize],
             req_per_s: if covered_ms == 0 {
                 0.0
             } else {
@@ -160,6 +177,18 @@ impl RateWindows {
             mispredict_rate: ratio(
                 sums[WindowKind::Mispredict as usize],
                 sums[WindowKind::Probe as usize],
+            ),
+            timeout_rate: ratio(
+                sums[WindowKind::TimedOut as usize],
+                sums[WindowKind::Requests as usize],
+            ),
+            retry_rate: ratio(
+                sums[WindowKind::Retry as usize],
+                sums[WindowKind::Requests as usize],
+            ),
+            breaker_open_rate: ratio(
+                sums[WindowKind::BreakerOpen as usize],
+                sums[WindowKind::Requests as usize],
             ),
         }
     }
@@ -250,11 +279,24 @@ mod tests {
             w.record_at(WindowKind::Probe, 100);
         }
         w.record_at(WindowKind::Mispredict, 100);
+        for _ in 0..2 {
+            w.record_at(WindowKind::TimedOut, 100);
+        }
+        for _ in 0..5 {
+            w.record_at(WindowKind::Retry, 100);
+        }
+        w.record_at(WindowKind::BreakerOpen, 100);
         let r = w.rates_at(100);
         assert!((r.shed_rate - 0.4).abs() < 1e-12);
         assert!((r.reuse_hit_rate - 0.5).abs() < 1e-12);
         assert!((r.probe_rate - 0.2).abs() < 1e-12);
         assert!((r.mispredict_rate - 0.5).abs() < 1e-12);
+        assert!((r.timeout_rate - 0.2).abs() < 1e-12);
+        assert!((r.retry_rate - 0.5).abs() < 1e-12);
+        assert!((r.breaker_open_rate - 0.1).abs() < 1e-12);
+        assert_eq!(r.timed_out, 2);
+        assert_eq!(r.retries, 5);
+        assert_eq!(r.breaker_opens, 1);
     }
 
     #[test]

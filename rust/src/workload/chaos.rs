@@ -15,7 +15,15 @@
 //!
 //! [`ChaosStats`] counts what actually fired so tests can assert the
 //! faults happened instead of silently passing on a too-low probability.
+//!
+//! Injected transient failures carry the typed
+//! [`TransientFault`](crate::coordinator::backend::TransientFault)
+//! marker, so the router's retry classifier sees them as retryable
+//! without string matching. A dedicated *sick-artifact* knob makes one
+//! artifact prefix fail deterministically for its first N calls — the
+//! persistently-failing backend the circuit-breaker proofs need.
 
+use crate::coordinator::backend::TransientFault;
 use crate::coordinator::ExecBackend;
 use crate::gemm::cpu::Matrix;
 use crate::util::rng::mix_parts;
@@ -26,14 +34,26 @@ use std::time::Duration;
 /// Fault mix for a [`ChaosBackend`]. Probabilities are per-execution
 /// and mutually exclusive (failure is checked first, then panic, then
 /// spike); their sum should stay well below 1.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct ChaosConfig {
     pub seed: u64,
     pub fail_prob: f64,
     pub panic_prob: f64,
     pub spike_prob: f64,
-    /// How long an injected latency spike sleeps.
+    /// How long an injected latency spike sleeps — clamped to
+    /// `spike_cap` when it actually fires, so a mis-sized spike can
+    /// never hold a worker (and every job queued behind it) hostage for
+    /// an unbounded stretch of the trace clock.
     pub spike: Duration,
+    /// Hard ceiling on a single injected spike.
+    pub spike_cap: Duration,
+    /// Artifacts whose name starts with this prefix fail (transiently)
+    /// on every call while the per-backend call counter is below
+    /// `sick_calls` — a deterministic persistently-sick artifact for
+    /// breaker tests. Empty = disabled.
+    pub sick_prefix: String,
+    /// How many leading calls the sick artifact stays sick for.
+    pub sick_calls: u64,
 }
 
 impl Default for ChaosConfig {
@@ -44,6 +64,9 @@ impl Default for ChaosConfig {
             panic_prob: 0.02,
             spike_prob: 0.05,
             spike: Duration::from_millis(2),
+            spike_cap: Duration::from_millis(50),
+            sick_prefix: String::new(),
+            sick_calls: 0,
         }
     }
 }
@@ -55,6 +78,12 @@ pub struct ChaosStats {
     pub injected_failures: AtomicU64,
     pub injected_panics: AtomicU64,
     pub injected_spikes: AtomicU64,
+    /// Failures injected by the sick-artifact knob (also included in
+    /// `injected_failures`).
+    pub injected_sick_failures: AtomicU64,
+    /// Total wall time actually slept by injected spikes, µs — the
+    /// ground truth deadline tests assert injected delay against.
+    pub injected_delay_us: AtomicU64,
 }
 
 impl ChaosStats {
@@ -62,6 +91,11 @@ impl ChaosStats {
         self.injected_failures.load(Ordering::Relaxed)
             + self.injected_panics.load(Ordering::Relaxed)
             + self.injected_spikes.load(Ordering::Relaxed)
+    }
+
+    /// Total injected spike sleep, µs.
+    pub fn delay_us(&self) -> u64 {
+        self.injected_delay_us.load(Ordering::Relaxed)
     }
 }
 
@@ -100,8 +134,20 @@ impl ChaosBackend {
     }
 
     /// Roll this call's fate; deterministic in `(seed, worker, call#)`.
-    fn fate(&self) -> Fate {
+    /// The sick-artifact knob outranks the random fates so a breaker
+    /// test's sick traffic is sick on *every* call, not probabilistically.
+    fn fate(&self, artifact: &str) -> Fate {
         let n = self.calls.fetch_add(1, Ordering::Relaxed);
+        if !self.cfg.sick_prefix.is_empty()
+            && n < self.cfg.sick_calls
+            && artifact.starts_with(self.cfg.sick_prefix.as_str())
+        {
+            self.stats.injected_failures.fetch_add(1, Ordering::Relaxed);
+            self.stats
+                .injected_sick_failures
+                .fetch_add(1, Ordering::Relaxed);
+            return Fate::Fail;
+        }
         let u = (mix_parts(&[self.cfg.seed, self.worker, n]) >> 11) as f64
             / (1u64 << 53) as f64;
         if u < self.cfg.fail_prob {
@@ -119,11 +165,17 @@ impl ChaosBackend {
     }
 
     fn apply(&self, artifact: &str) -> anyhow::Result<()> {
-        match self.fate() {
-            Fate::Fail => anyhow::bail!("chaos: injected transient failure on {artifact}"),
+        match self.fate(artifact) {
+            Fate::Fail => Err(anyhow::Error::new(TransientFault(format!(
+                "chaos: injected transient failure on {artifact}"
+            )))),
             Fate::Panic => panic!("chaos: injected panic on {artifact}"),
             Fate::Spike => {
-                std::thread::sleep(self.cfg.spike);
+                let nap = self.cfg.spike.min(self.cfg.spike_cap);
+                std::thread::sleep(nap);
+                self.stats
+                    .injected_delay_us
+                    .fetch_add(nap.as_micros() as u64, Ordering::Relaxed);
                 Ok(())
             }
             Fate::Clean => Ok(()),
@@ -186,13 +238,13 @@ mod tests {
             spike_prob: 0.0,
             ..ChaosConfig::default()
         };
-        let run = |cfg| {
+        let run = |cfg: ChaosConfig| {
             let (b, _) = chaos(cfg);
             (0..200)
                 .map(|_| b.execute("nt_8x8x8", &[]).is_err())
                 .collect::<Vec<_>>()
         };
-        let a = run(cfg);
+        let a = run(cfg.clone());
         let b = run(cfg);
         assert_eq!(a, b);
         let fails = a.iter().filter(|&&e| e).count();
@@ -241,5 +293,64 @@ mod tests {
             ..ChaosConfig::default()
         });
         let _ = b.execute("nt_8x8x8", &[]);
+    }
+
+    #[test]
+    fn injected_failures_carry_the_transient_marker() {
+        let (b, _) = chaos(ChaosConfig {
+            fail_prob: 1.0,
+            panic_prob: 0.0,
+            spike_prob: 0.0,
+            ..ChaosConfig::default()
+        });
+        let err = b.execute("nt_8x8x8", &[]).unwrap_err();
+        assert!(TransientFault::is(&err), "typed for the retry classifier");
+        assert!(err.to_string().contains("injected transient failure"));
+    }
+
+    #[test]
+    fn spike_is_capped_and_delay_totals_are_surfaced() {
+        let (b, stats) = chaos(ChaosConfig {
+            fail_prob: 0.0,
+            panic_prob: 0.0,
+            spike_prob: 1.0,
+            spike: Duration::from_secs(3600), // mis-sized: would hang a worker
+            spike_cap: Duration::from_millis(2),
+            ..ChaosConfig::default()
+        });
+        let t0 = std::time::Instant::now();
+        for _ in 0..3 {
+            b.execute("nt_8x8x8", &[]).unwrap();
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(1),
+            "spike must be clamped to the cap"
+        );
+        assert_eq!(stats.injected_spikes.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.delay_us(), 3 * 2_000, "actual slept time surfaced");
+    }
+
+    #[test]
+    fn sick_artifact_fails_deterministically_then_recovers() {
+        let (b, stats) = chaos(ChaosConfig {
+            fail_prob: 0.0,
+            panic_prob: 0.0,
+            spike_prob: 0.0,
+            sick_prefix: "tnn_".into(),
+            sick_calls: 5,
+            ..ChaosConfig::default()
+        });
+        // Sick prefix fails on every call inside the sick window…
+        assert!(b.execute("tnn_8x8x8", &[]).is_err());
+        assert!(b.execute("tnn_8x8x8", &[]).is_err());
+        // …while other artifacts are untouched…
+        b.execute("nt_8x8x8", &[]).unwrap();
+        assert!(b.execute("tnn_8x8x8", &[]).is_err());
+        b.execute("nt_8x8x8", &[]).unwrap();
+        // …and after `sick_calls` total calls the artifact heals.
+        b.execute("tnn_8x8x8", &[]).unwrap();
+        b.execute("tnn_8x8x8", &[]).unwrap();
+        assert_eq!(stats.injected_sick_failures.load(Ordering::Relaxed), 3);
+        assert_eq!(stats.injected_failures.load(Ordering::Relaxed), 3);
     }
 }

@@ -19,26 +19,30 @@
 //!   trace's own clock ([`ReplayClock::Paced`]) or as fast as possible
 //!   ([`ReplayClock::Afap`]). Every request resolves into exactly one
 //!   of completed / failed / shed (admission-control rejections,
-//!   classified via [`EngineBusy`]), so the returned [`ReplayReport`]
-//!   is a client-side conservation ledger to check against
-//!   `CoordinatorMetrics::verify_conservation`. [`replay_with_chaos`]
+//!   classified via [`EngineBusy`]) / timed out (deadline expiries,
+//!   classified via [`DeadlineExceeded`]), so the returned
+//!   [`ReplayReport`] is a client-side conservation ledger to check
+//!   against `CoordinatorMetrics::verify_conservation`. [`replay_with_chaos`]
 //!   additionally kills and restarts an engine worker mid-trace
 //!   ([`Engine::kill_worker`] / [`Engine::restart_worker`]), triggered
 //!   by submitted-request counts, elapsed trace time, or both
 //!   ([`WorkerChaos`]).
 //! * [`chaos`] — [`ChaosBackend`], a fault-injecting [`ExecBackend`]
-//!   wrapper: per-call seeded rolls inject transient failures, panics
+//!   wrapper: per-call seeded rolls inject typed transient failures
+//!   (retryable by the router's bounded-retry policy), panics
 //!   (contained by the engine's worker loop, surfacing as failed jobs),
-//!   and latency spikes, with atomic [`ChaosStats`] counters so tests
-//!   can assert faults actually fired.
+//!   and capped latency spikes, plus a deterministic sick-artifact
+//!   knob for circuit-breaker proofs, with atomic [`ChaosStats`]
+//!   counters so tests can assert faults actually fired.
 //!
 //! The invariant the whole lab exists to check:
-//! `completed + failed + shed == submitted` — no request is ever
-//! silently dropped and no client ever hangs, no matter what the trace
-//! or the chaos does.
+//! `completed + failed + shed + timed_out == submitted` — no request is
+//! ever silently dropped and no client ever hangs, no matter what the
+//! trace, the deadlines, or the chaos does.
 //!
 //! [`Router`]: crate::coordinator::Router
 //! [`EngineBusy`]: crate::coordinator::EngineBusy
+//! [`DeadlineExceeded`]: crate::coordinator::DeadlineExceeded
 //! [`ExecBackend`]: crate::coordinator::ExecBackend
 //! [`Engine::kill_worker`]: crate::coordinator::Engine::kill_worker
 //! [`Engine::restart_worker`]: crate::coordinator::Engine::restart_worker

@@ -2,18 +2,19 @@
 //! from concurrent client threads, with an optional chaos controller
 //! killing and restarting an engine worker mid-trace.
 //!
-//! Every replayed request resolves into exactly one of three outcomes —
+//! Every replayed request resolves into exactly one of four outcomes —
 //! completed, failed (execution error, including contained backend
-//! panics), or shed (admission-control rejection, detected via
-//! [`EngineBusy`]) — so the returned [`ReplayReport`] is a client-side
-//! conservation ledger: `completed + failed + shed == submitted` holds
-//! by construction here, and cross-checking it against
-//! `CoordinatorMetrics::verify_conservation` proves the *server* side
-//! dropped nothing either. A replay call returning at all is the
-//! zero-hung-clients check.
+//! panics and breaker fail-fasts), shed (admission-control rejection,
+//! detected via [`EngineBusy`]), or timed out (deadline expiry,
+//! detected via [`DeadlineExceeded`]) — so the returned [`ReplayReport`]
+//! is a client-side conservation ledger: `completed + failed + shed +
+//! timed_out == submitted` holds by construction here, and
+//! cross-checking it against `CoordinatorMetrics::verify_conservation`
+//! proves the *server* side dropped nothing either. A replay call
+//! returning at all is the zero-hung-clients check.
 
 use super::generator::Trace;
-use crate::coordinator::{Engine, EngineBusy, GemmRequest, Router};
+use crate::coordinator::{DeadlineExceeded, Engine, EngineBusy, GemmRequest, Router};
 use crate::gemm::cpu::Matrix;
 use crate::util::rng::mix_parts;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -57,19 +58,20 @@ pub struct ReplayReport {
     pub completed: u64,
     pub failed: u64,
     pub shed: u64,
+    pub timed_out: u64,
     pub wall: Duration,
 }
 
 impl ReplayReport {
     /// The conservation invariant, checked on the client-side ledger.
     pub fn verify_conservation(&self) -> Result<(), String> {
-        let resolved = self.completed + self.failed + self.shed;
+        let resolved = self.completed + self.failed + self.shed + self.timed_out;
         if resolved == self.submitted {
             Ok(())
         } else {
             Err(format!(
-                "replay conservation violated: completed={} + failed={} + shed={} = {resolved} != submitted={}",
-                self.completed, self.failed, self.shed, self.submitted
+                "replay conservation violated: completed={} + failed={} + shed={} + timed_out={} = {resolved} != submitted={}",
+                self.completed, self.failed, self.shed, self.timed_out, self.submitted
             ))
         }
     }
@@ -159,6 +161,7 @@ struct Counters {
     completed: AtomicU64,
     failed: AtomicU64,
     shed: AtomicU64,
+    timed_out: AtomicU64,
 }
 
 impl Counters {
@@ -168,6 +171,7 @@ impl Counters {
             completed: self.completed.load(Ordering::Relaxed),
             failed: self.failed.load(Ordering::Relaxed),
             shed: self.shed.load(Ordering::Relaxed),
+            timed_out: self.timed_out.load(Ordering::Relaxed),
             wall,
         }
     }
@@ -209,6 +213,7 @@ fn client_run(
         }) {
             Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
             Err(e) if EngineBusy::is(&e) => counters.shed.fetch_add(1, Ordering::Relaxed),
+            Err(e) if DeadlineExceeded::is(&e) => counters.timed_out.fetch_add(1, Ordering::Relaxed),
             Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
         };
         i += stride;
@@ -298,9 +303,10 @@ mod tests {
     fn report_conservation_check_catches_a_lost_request() {
         let ok = ReplayReport {
             submitted: 10,
-            completed: 7,
+            completed: 6,
             failed: 2,
             shed: 1,
+            timed_out: 1,
             wall: Duration::ZERO,
         };
         ok.verify_conservation().unwrap();
@@ -309,10 +315,12 @@ mod tests {
             completed: 7,
             failed: 2,
             shed: 0,
+            timed_out: 0,
             wall: Duration::ZERO,
         };
         let msg = bad.verify_conservation().unwrap_err();
         assert!(msg.contains("submitted=10"), "{msg}");
+        assert!(msg.contains("timed_out=0"), "{msg}");
     }
 
     #[test]

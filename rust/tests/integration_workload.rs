@@ -1,26 +1,34 @@
 //! Integration: the adversarial workload lab end to end — trace replay
 //! through a live router, chaos injection (fault-injecting backend +
 //! worker kill/restart mid-trace) with the conservation invariant
-//! `completed + failed + shed == submitted` asserted on both the
-//! client-side replay ledger and the server-side coordinator metrics
-//! (including composed with the engine's result-reuse layer under
-//! repeat-heavy traffic),
+//! `completed + failed + shed + timed_out == submitted` asserted on
+//! both the client-side replay ledger and the server-side coordinator
+//! metrics (including composed with the engine's result-reuse layer
+//! under repeat-heavy traffic), the request-lifecycle acceptance runs
+//! (deadlines expiring under spiky load, bounded retries masking
+//! transient chaos the retry-off baseline cannot, a sick artifact's
+//! circuit breaker opening → falling back to the alternate algorithm →
+//! closing through a half-open probe, and the brownout ladder engaging
+//! under a flash crowd then stepping back down),
 //! and the deterministic regime-change A/B: the PR 6 online-loop config
 //! (recency reservoir + wall-clock drift decay) must recover from a
 //! latency-regime flip at least 2× faster than the old uniform /
 //! retrain-coupled config.
 
 use mtnn::coordinator::{
-    AdmissionControl, CoordinatorMetrics, Engine, EngineConfig, ExecBackend, Router, RouterConfig,
+    AdmissionControl, BreakerConfig, BreakerState, BrownoutConfig, CoordinatorMetrics, Engine,
+    EngineConfig, ExecBackend, GemmRequest, RetryPolicy, Router, RouterConfig, TransientFault,
 };
+use mtnn::gemm::cpu::Matrix;
 use mtnn::gemm::{Algorithm, GemmShape};
 use mtnn::gpusim::{SimExecutor, GTX1080};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
 use mtnn::online::trainer::{pump, Accumulator, TrainerState};
 use mtnn::online::{LiveSelector, OnlineConfig, OnlineHub, ReservoirPolicy};
+use mtnn::obs::{ObsConfig, ObsLayer};
 use mtnn::selector::cache::DecisionCache;
-use mtnn::selector::{features, Selector, TrainedModel};
+use mtnn::selector::{features, SelectionReason, Selector, TrainedModel};
 use mtnn::workload::{
     replay, replay_with_chaos, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind,
     ReplayClock, ReplayOptions, Trace, WorkerChaos,
@@ -160,6 +168,7 @@ fn chaos_run_conserves_every_request_and_no_client_hangs() {
         panic_prob: 0.03,
         spike_prob: 0.05,
         spike: Duration::from_micros(200),
+        ..ChaosConfig::default()
     };
     let stats_for_pool = Arc::clone(&stats);
     let mut engine = Engine::restartable(
@@ -171,7 +180,7 @@ fn chaos_run_conserves_every_request_and_no_client_hangs() {
         move |i| {
             Ok(Box::new(ChaosBackend::new(
                 Box::new(SimExecutor::new(&GTX1080)),
-                chaos_cfg,
+                chaos_cfg.clone(),
                 i,
                 Arc::clone(&stats_for_pool),
             )) as Box<dyn ExecBackend>)
@@ -229,6 +238,7 @@ fn chaos_and_reuse_compose_without_breaking_conservation() {
         panic_prob: 0.02,
         spike_prob: 0.10,
         spike: Duration::from_micros(300),
+        ..ChaosConfig::default()
     };
     let stats_for_pool = Arc::clone(&stats);
     let mut engine = Engine::restartable(
@@ -240,7 +250,7 @@ fn chaos_and_reuse_compose_without_breaking_conservation() {
         move |i| {
             Ok(Box::new(ChaosBackend::new(
                 Box::new(SimExecutor::new(&GTX1080)),
-                chaos_cfg,
+                chaos_cfg.clone(),
                 i,
                 Arc::clone(&stats_for_pool),
             )) as Box<dyn ExecBackend>)
@@ -372,6 +382,7 @@ fn injected_panics_surface_as_failed_requests_through_replay() {
         panic_prob: 0.2,
         spike_prob: 0.0,
         spike: Duration::ZERO,
+        ..ChaosConfig::default()
     };
     let stats_for_pool = Arc::clone(&stats);
     let engine = Engine::pool(
@@ -383,7 +394,7 @@ fn injected_panics_surface_as_failed_requests_through_replay() {
         move |i| {
             Ok(Box::new(ChaosBackend::new(
                 Box::new(SimExecutor::new(&GTX1080)),
-                chaos_cfg,
+                chaos_cfg.clone(),
                 i,
                 Arc::clone(&stats_for_pool),
             )) as Box<dyn ExecBackend>)
@@ -399,6 +410,389 @@ fn injected_panics_surface_as_failed_requests_through_replay() {
     assert!(report.failed > 0, "contained panics must surface as failures");
     assert!(report.completed > 0, "the pool must survive the panics");
     router.metrics.snapshot().verify_conservation().unwrap();
+    engine.shutdown();
+}
+
+// ---- request lifecycle: deadlines, retries, breakers, brownout -------------
+
+/// A fail-only (no panics, no spikes) chaos pool over the simulated GPU:
+/// every injected fault is a typed `TransientFault` — exactly the class
+/// the router's bounded-retry policy exists to mask.
+fn transient_chaos_engine(seed: u64, fail_prob: f64, stats: Arc<ChaosStats>) -> Engine {
+    let cfg = ChaosConfig {
+        seed,
+        fail_prob,
+        panic_prob: 0.0,
+        spike_prob: 0.0,
+        spike: Duration::ZERO,
+        ..ChaosConfig::default()
+    };
+    Engine::pool(
+        EngineConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                cfg.clone(),
+                i,
+                Arc::clone(&stats),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("chaos pool")
+}
+
+fn lifecycle_request(seed: u64) -> GemmRequest {
+    GemmRequest {
+        gpu: &GTX1080,
+        shape: GemmShape::new(32, 32, 32),
+        a: Matrix::random(32, 32, seed),
+        b: Matrix::random(32, 32, seed ^ 0xBEEF),
+    }
+}
+
+#[test]
+fn bounded_retries_mask_transient_chaos_the_retry_off_baseline_cannot() {
+    // The retry acceptance A/B: identical trace seed and chaos seed, one
+    // run with the seed behavior (retries off) and one with a 3-retry
+    // budget. Retry-off surfaces 100% of injected transient faults to
+    // clients; the retried run must recover ≥90% of the requests that
+    // hit one.
+    let run = |retry: RetryPolicy| {
+        let stats = Arc::new(ChaosStats::default());
+        let engine = transient_chaos_engine(0x7E57_FA11, 0.08, Arc::clone(&stats));
+        let router = Router::new(
+            selector(),
+            engine.handle(),
+            RouterConfig {
+                retry,
+                ..RouterConfig::default()
+            },
+        );
+        let trace = steady_trace(600.0, 0.5, 47);
+        let report = replay(&router, &trace, &ReplayOptions::default());
+        // Returning at all proves zero hung clients; then both ledgers
+        // must balance under the widened four-outcome invariant.
+        report.verify_conservation().unwrap();
+        let snap = router.metrics.snapshot();
+        snap.verify_conservation().unwrap();
+        assert_eq!(snap.failed, report.failed);
+        engine.shutdown();
+        let injected = stats
+            .injected_failures
+            .load(std::sync::atomic::Ordering::Relaxed);
+        (report, snap, injected)
+    };
+
+    let (base_report, base_snap, base_injected) = run(RetryPolicy::default());
+    assert!(base_injected > 0, "fault chaos never fired");
+    assert_eq!(
+        base_report.failed, base_injected,
+        "retry-off baseline: every transient fault surfaces — 0% recover"
+    );
+    assert_eq!(base_snap.retries, 0);
+    assert_eq!(base_snap.retries_exhausted, 0);
+
+    let (retry_report, retry_snap, retry_injected) = run(RetryPolicy {
+        max_retries: 3,
+        ..RetryPolicy::default()
+    });
+    assert!(retry_injected > 0, "fault chaos never fired");
+    assert!(retry_snap.retries > 0, "retries must actually fire");
+    assert!(
+        10 * retry_report.failed <= base_report.failed,
+        "3 bounded retries must recover ≥90% of transiently-faulted \
+         requests: still-failed={} vs retry-off baseline {}",
+        retry_report.failed,
+        base_report.failed
+    );
+    // Every request that still failed burned its full budget.
+    assert_eq!(retry_snap.retries_exhausted, retry_report.failed);
+}
+
+#[test]
+fn deadlines_expire_under_spiky_load_and_both_ledgers_still_balance() {
+    // Spike-only chaos (8ms spikes on 60% of calls) against a 1-worker
+    // pool with a 5ms request deadline: spiked executions — and the
+    // queue wait that builds up behind them — blow the deadline, so
+    // requests resolve timed_out, some at the reply wait and some
+    // dropped unexecuted at worker dequeue. The widened conservation
+    // invariant must hold on both ledgers either way.
+    let stats = Arc::new(ChaosStats::default());
+    let cfg = ChaosConfig {
+        seed: 0xDEAD_71,
+        fail_prob: 0.0,
+        panic_prob: 0.0,
+        spike_prob: 0.6,
+        spike: Duration::from_millis(8),
+        ..ChaosConfig::default()
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 64,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                cfg.clone(),
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("chaos pool");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            deadline: Some(Duration::from_millis(5)),
+            ..RouterConfig::default()
+        },
+    );
+    let trace = steady_trace(800.0, 0.4, 53);
+    let report = replay(&router, &trace, &ReplayOptions::default());
+    report.verify_conservation().unwrap();
+    assert!(
+        report.timed_out > 0,
+        "8ms spikes against a 5ms deadline must time out requests"
+    );
+    assert!(report.completed > 0, "clean fast calls must still finish");
+    assert_eq!(report.failed, 0, "spike-only chaos injects no failures");
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.timed_out, report.timed_out);
+    assert_eq!(snap.completed, report.completed);
+    assert!(stats.delay_us() > 0, "spikes must actually fire");
+    engine.shutdown();
+}
+
+#[test]
+fn sick_artifact_trips_breaker_falls_back_then_heals_via_half_open_probe() {
+    // Deterministic breaker lifecycle: the chaos sick-artifact knob
+    // fails every `nt_`-prefixed call among the backend's first 5 calls.
+    // Forcing NT on a single shape through one worker:
+    //   req 1–2  NT sick → failed → rolling window trips the breaker
+    //   req 3–5  breaker Open → coerced onto TNN (Forced) → completed
+    //   cooldown elapses
+    //   req 6    half-open probe on NT — the artifact has healed (the
+    //            5-call sick window is spent) → success closes it
+    //   req 7    plain NT traffic again
+    let stats = Arc::new(ChaosStats::default());
+    let cfg = ChaosConfig {
+        seed: 3,
+        sick_prefix: "nt_".into(),
+        sick_calls: 5,
+        ..ChaosConfig::default()
+    };
+    let stats_for_pool = Arc::clone(&stats);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 8,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                cfg.clone(),
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("chaos pool");
+    let router = Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            force: Some(Algorithm::Nt),
+            breaker: Some(BreakerConfig {
+                window: 8,
+                min_samples: 2,
+                failure_threshold: 0.5,
+                open_cooldown: Duration::from_millis(40),
+            }),
+            ..RouterConfig::default()
+        },
+    );
+    let nt = "nt_32x32x32";
+
+    for i in 0..2u64 {
+        let err = router.serve(lifecycle_request(i)).unwrap_err();
+        assert!(
+            TransientFault::is(&err),
+            "sick call must surface its typed fault: {err}"
+        );
+    }
+    let breakers = router.breakers().expect("breaker layer configured");
+    assert_eq!(
+        breakers.state(nt),
+        BreakerState::Open,
+        "two sick calls must trip the rolling window"
+    );
+
+    for i in 2..5u64 {
+        let resp = router
+            .serve(lifecycle_request(i))
+            .expect("open breaker must reroute, not fail");
+        assert_eq!(resp.algorithm, Algorithm::Tnn, "fallback is the NT↔TNN alternate");
+        assert_eq!(
+            resp.reason,
+            SelectionReason::Forced,
+            "coerced traffic is marked Forced so the online loop ignores it"
+        );
+    }
+
+    std::thread::sleep(Duration::from_millis(60));
+    let resp = router
+        .serve(lifecycle_request(6))
+        .expect("half-open probe must find the artifact healed");
+    assert_eq!(resp.algorithm, Algorithm::Nt, "the probe goes to the real artifact");
+    assert_eq!(
+        breakers.state(nt),
+        BreakerState::Closed,
+        "probe success closes the breaker"
+    );
+    assert!(breakers.half_open_probes() >= 1);
+
+    let resp = router
+        .serve(lifecycle_request(7))
+        .expect("closed breaker serves NT again");
+    assert_eq!(resp.algorithm, Algorithm::Nt);
+
+    let states: Vec<BreakerState> = breakers
+        .events()
+        .iter()
+        .filter(|e| e.artifact == nt)
+        .map(|e| e.to)
+        .collect();
+    assert_eq!(
+        states,
+        vec![BreakerState::Open, BreakerState::HalfOpen, BreakerState::Closed],
+        "the full Open → HalfOpen → Closed lifecycle must be recorded"
+    );
+
+    let sick = stats
+        .injected_sick_failures
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(sick, 2, "exactly the two pre-trip NT calls were sick");
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.completed, 5);
+    assert_eq!(snap.failed, 2);
+    assert_eq!(snap.breaker_opens, 1);
+    assert_eq!(snap.breaker_half_open_probes, 1);
+    engine.shutdown();
+}
+
+#[test]
+fn brownout_engages_under_a_flash_crowd_and_recovers_when_traffic_calms() {
+    // A flash crowd against a deliberately tiny pool: 4 client threads
+    // hammer a 1-worker, queue-depth-1 engine whose every call carries a
+    // 5ms chaos spike, under RejectWhenBusy admission — the queue stays
+    // full and the shed rate in the obs window jumps. The brownout
+    // controller must climb the ladder while the crowd lasts, then step
+    // all the way back down once single-stream calm traffic drains the
+    // 200ms rate window.
+    let cfg = ChaosConfig {
+        seed: 9,
+        spike_prob: 1.0,
+        spike: Duration::from_millis(5),
+        ..ChaosConfig::default()
+    };
+    let stats = Arc::new(ChaosStats::default());
+    let stats_for_pool = Arc::clone(&stats);
+    let engine = Engine::pool(
+        EngineConfig {
+            workers: 1,
+            queue_depth: 1,
+            ..EngineConfig::default()
+        },
+        move |i| {
+            Ok(Box::new(ChaosBackend::new(
+                Box::new(SimExecutor::new(&GTX1080)),
+                cfg.clone(),
+                i,
+                Arc::clone(&stats_for_pool),
+            )) as Box<dyn ExecBackend>)
+        },
+    )
+    .expect("chaos pool");
+    let obs = Arc::new(ObsLayer::new(ObsConfig {
+        sample_every: 1,
+        window_bucket_ms: 50,
+        window_buckets: 4,
+        ..ObsConfig::default()
+    }));
+    let router = Arc::new(Router::new(
+        selector(),
+        engine.handle(),
+        RouterConfig {
+            admission: AdmissionControl::RejectWhenBusy,
+            obs: Some(Arc::clone(&obs)),
+            brownout: Some(BrownoutConfig {
+                shed_rate_engage: 0.05,
+                shed_rate_recover: 0.01,
+                engage_evals: 1,
+                recover_evals: 2,
+                eval_interval_ms: 40,
+                ..BrownoutConfig::default()
+            }),
+            ..RouterConfig::default()
+        },
+    ));
+
+    // The crowd: 4 threads × 60 requests at ~2ms spacing — roughly
+    // 2000 rps offered against ~200 rps of spiked capacity.
+    let crowd: Vec<_> = (0..4u64)
+        .map(|t| {
+            let r = Arc::clone(&router);
+            std::thread::spawn(move || {
+                for i in 0..60u64 {
+                    let _ = r.serve(lifecycle_request(t * 1000 + i));
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            })
+        })
+        .collect();
+    for h in crowd {
+        h.join().unwrap();
+    }
+    let w = obs.window_rates();
+    assert!(w.shed > 0, "the crowd must shed into the windowed rates");
+
+    // Calm: sequential paced traffic, long enough for the rate window to
+    // drain the crowd's sheds and for `recover_evals` consecutive calm
+    // evaluations per rung of the ladder.
+    for i in 0..70u64 {
+        router
+            .serve(lifecycle_request(0xCA11_0000 + i))
+            .expect("calm sequential traffic never sheds");
+        std::thread::sleep(Duration::from_millis(8));
+    }
+
+    let ctrl = router.brownout().expect("brownout configured");
+    let transitions = ctrl.transitions();
+    let peak = transitions.iter().map(|&(_, l)| l).max().unwrap_or(0);
+    assert!(
+        peak >= 1,
+        "the flash crowd must engage the ladder: transitions={transitions:?}"
+    );
+    assert_eq!(
+        ctrl.level(),
+        0,
+        "calm traffic must walk the ladder back down: transitions={transitions:?}"
+    );
+    let snap = router.metrics.snapshot();
+    snap.verify_conservation().unwrap();
+    assert_eq!(snap.brownout_level, 0);
+    assert!(snap.shed > 0, "the crowd's sheds land in the lifetime ledger");
     engine.shutdown();
 }
 

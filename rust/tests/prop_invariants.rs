@@ -1,7 +1,9 @@
 //! Property-based invariants over the coordinator-side logic (selection,
-//! routing policy, simulator physics, dataset encoding) using the in-tree
-//! prop harness — the proptest-equivalent coverage of DESIGN.md §4 row 11.
+//! routing policy, retry backoff, simulator physics, dataset encoding)
+//! using the in-tree prop harness — the proptest-equivalent coverage of
+//! DESIGN.md §4 row 11.
 
+use mtnn::coordinator::{DecorrelatedJitter, RetryPolicy};
 use mtnn::dataset::collect_paper_dataset;
 use mtnn::gemm::blocked;
 use mtnn::gemm::cpu::{matmul_nn, matmul_nt, matmul_tnn, Matrix};
@@ -13,6 +15,7 @@ use mtnn::selector::{features, SelectionReason, Selector};
 use mtnn::testutil::assert_allclose;
 use mtnn::testutil::prop::check;
 use std::sync::OnceLock;
+use std::time::Duration;
 
 fn selector() -> &'static Selector {
     static SEL: OnceLock<Selector> = OnceLock::new();
@@ -247,6 +250,55 @@ fn prop_selection_cache_is_transparent() {
         assert_eq!(cached.select(gpu, m, n, k), direct, "warm lookup");
     });
     assert!(cached.hits() > 0, "warm lookups must hit");
+}
+
+#[test]
+fn prop_decorrelated_backoff_bounded_deterministic_and_saturating() {
+    // The retry layer's safety contract: every sleep falls in
+    // [base, cap], the attempt ladder's upper bound is exactly
+    // min(cap, 3^k·base) — monotone non-decreasing, saturating at cap —
+    // and the whole schedule replays bit-identically under its seed
+    // (the chaos proofs depend on that). Degenerate policies (zero
+    // base, cap below base) must coerce, not panic.
+    check("decorrelated backoff", 300, |g| {
+        let base_us = g.i64_in(0, 5_000) as u64;
+        let cap_us = g.i64_in(0, 100_000) as u64;
+        let seed = g.i64_in(0, 1 << 62) as u64;
+        let steps = g.usize_in(1, 24);
+        let policy = RetryPolicy {
+            max_retries: 8,
+            base: Duration::from_micros(base_us),
+            cap: Duration::from_micros(cap_us),
+        };
+        let eff_base = base_us.max(1);
+        let eff_cap = cap_us.max(eff_base);
+        let mut a = DecorrelatedJitter::new(&policy, seed);
+        let mut b = DecorrelatedJitter::new(&policy, seed);
+        assert_eq!(a.upper_us(), eff_base, "the ladder starts at base");
+        let mut prev_upper = a.upper_us();
+        for i in 0..steps {
+            let x = a.next_us();
+            assert_eq!(x, b.next_us(), "same seed must replay the exact schedule");
+            assert!(
+                x >= eff_base && x <= eff_cap,
+                "sleep {x}µs outside [{eff_base}, {eff_cap}]µs"
+            );
+            assert!(x <= a.upper_us(), "sleep above the attempt's upper bound");
+            assert!(a.upper_us() >= prev_upper, "upper bound must never shrink");
+            assert_eq!(
+                a.upper_us(),
+                prev_upper.saturating_mul(3).min(eff_cap),
+                "upper ladder must be exactly min(cap, 3^k·base) at attempt {i}"
+            );
+            prev_upper = a.upper_us();
+        }
+        // A different seed changes the draws, never the bounds.
+        let mut c = DecorrelatedJitter::new(&policy, seed ^ 0x9E37_79B9);
+        for _ in 0..steps {
+            let x = c.next_us();
+            assert!(x >= eff_base && x <= eff_cap);
+        }
+    });
 }
 
 #[test]
