@@ -54,6 +54,16 @@
 //! runs with the observability layer on (request-path tracing, windowed
 //! rates, flight recorder) and prints a `flight-recorder dump` notice
 //! for every chaos-triggered span dump.
+//!
+//! `--fleet <spec,spec,...>` runs the heterogeneous fleet scheduler
+//! instead: one sim-backed engine + router stack per named GPU spec
+//! (`gtx1080,titanx,simapex,simeco`, case-insensitive), a mixed trace
+//! replayed through joint (device, algorithm) placement, and a
+//! per-device placement/latency table plus per-device AND fleet-wide
+//! conservation checks printed at the end:
+//!
+//!     cargo run --release --example serve_gemm -- \
+//!         --fleet gtx1080,titanx,simapex,simeco --requests 200
 
 use mtnn::coordinator::{
     AdmissionControl, BreakerConfig, BreakerState, Engine, EngineConfig, ExecBackend, GemmRequest,
@@ -594,6 +604,94 @@ fn breaker_demo() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Heterogeneous fleet smoke: one sim-backed serving stack per named
+/// spec, a mixed trace replayed through joint (device, algorithm)
+/// placement, and a per-device placement/latency table plus the
+/// conservation checks printed at the end.
+fn run_fleet(spec_list: &str, requests: usize, clients: usize) -> anyhow::Result<()> {
+    use mtnn::coordinator::{Fleet, FleetConfig, PlacementPolicy};
+    use mtnn::gpusim::GpuSpec;
+    use mtnn::workload::{replay_fleet, Phase, PhaseKind, ReplayClock, ReplayOptions, Trace};
+
+    let mut specs: Vec<&'static GpuSpec> = Vec::new();
+    for name in spec_list.split(',') {
+        let name = name.trim();
+        specs.push(GpuSpec::by_name(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "unknown GPU spec '{name}' in --fleet (gtx1080, titanx, gtx1070, simapex, simeco)"
+            )
+        })?);
+    }
+    println!(
+        "placing ~{requests} requests from {clients} concurrent clients across a {}-device \
+         heterogeneous sim fleet ({}), joint (device, algorithm) placement",
+        specs.len(),
+        specs.iter().map(|s| s.name).collect::<Vec<_>>().join(", "),
+    );
+    let fleet = Fleet::new(
+        &specs,
+        FleetConfig {
+            policy: PlacementPolicy::Joint,
+            ..FleetConfig::default()
+        },
+    )?;
+
+    // A shape mix spanning both regimes: small cubes where every part
+    // prefers NT, plus deep-k shapes where the small-L2 parts flip to
+    // TNN — so the table shows the *same trace* landing on different
+    // (device, algorithm) pairs.
+    let shapes: Vec<GemmShape> = [
+        (128u64, 128u64, 128u64),
+        (256, 256, 256),
+        (192, 192, 192),
+        (128, 1024, 256),
+        (256, 256, 2048),
+    ]
+    .into_iter()
+    .map(|(m, n, k)| GemmShape::new(m, n, k))
+    .collect();
+    let rps = 400.0;
+    let trace = Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: specs[0],
+            shapes,
+            rps,
+            duration: Duration::from_secs_f64((requests as f64 / rps).max(0.25)),
+        }],
+        0xF1EE7,
+    );
+
+    let t0 = Instant::now();
+    let report = replay_fleet(
+        &fleet,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Afap,
+            clients: clients.max(1),
+            seed: 0x5EED,
+        },
+        None,
+    )?;
+    let wall = t0.elapsed();
+    report.verify_conservation().map_err(anyhow::Error::msg)?;
+    fleet.conservation().map_err(anyhow::Error::msg)?;
+    println!(
+        "     fleet: {} trace events replayed in {wall:.2?} ({:.0} req/s), modeled completion \
+         {:.1}ms",
+        trace.len(),
+        report.submitted as f64 / wall.as_secs_f64(),
+        fleet.modeled_completion_us() as f64 / 1000.0,
+    );
+    print!("{}", fleet.render());
+    println!(
+        "conservation OK: completed={} + failed={} + shed={} + timed_out={} == submitted={}",
+        report.completed, report.failed, report.shed, report.timed_out, report.submitted
+    );
+    fleet.shutdown();
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env(false);
     let requests: usize = args.get_num("requests", 64);
@@ -619,11 +717,14 @@ fn main() -> anyhow::Result<()> {
     let metrics_prom = args.flag("metrics-prom");
     let metrics_json = args.flag("metrics-json");
     let trace_mode = args.get("trace", "");
+    let fleet_spec = args.get("fleet", "");
     let deadline_ms: u64 = args.get_num("deadline-ms", 0);
     let retries: u64 = args.get_num("retries", 0);
     args.finish()?;
     let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
-    if trace_mode == "chaos" {
+    if !fleet_spec.is_empty() {
+        run_fleet(&fleet_spec, requests, clients)?;
+    } else if trace_mode == "chaos" {
         println!(
             "replaying a seeded ~{requests}-request chaos trace from {clients} concurrent \
              clients on a {}-worker sim engine pool (fault injection + worker kill/restart \

@@ -9,7 +9,8 @@
 //! A-panel packing on a tall-A shape, end-to-end result reuse
 //! (repeat-heavy replay with the engine's output cache on vs off), and
 //! request-path tracing overhead (the observability layer at
-//! sample_every=1 vs off on the same replay).
+//! sample_every=1 vs off on the same replay), and fleet placement
+//! (joint device+algorithm vs round-robin over 4 simulated devices).
 //! Run: `cargo bench --bench perf_hotpath`.
 //!
 //! Besides the human report (`results/perf_hotpath.txt`), every row is
@@ -17,13 +18,16 @@
 //! (`{name, ns_per_op, speedup?, shape?, backend?}`) so the perf
 //! trajectory can be tracked across PRs without parsing prose.
 
-use mtnn::coordinator::{Engine, EngineConfig, GemmRequest, ReuseConfig, Router, RouterConfig};
+use mtnn::coordinator::{
+    Engine, EngineConfig, Fleet, FleetConfig, GemmRequest, PlacementPolicy, ReuseConfig, Router,
+    RouterConfig,
+};
 use mtnn::dataset::{collect_paper_dataset, to_ml_dataset};
 use mtnn::experiments::emit;
 use mtnn::gemm::cpu::Matrix;
 use mtnn::gemm::kernels::{self, KernelKind};
 use mtnn::gemm::{blocked, cpu, pool, GemmShape};
-use mtnn::gpusim::{Simulator, GTX1080};
+use mtnn::gpusim::{Simulator, GTX1080, SIMAPEX, SIMECO, TITANX};
 use mtnn::ml::gbdt::{Gbdt, GbdtParams};
 use mtnn::ml::Classifier;
 use mtnn::obs::{ObsConfig, ObsLayer};
@@ -635,6 +639,82 @@ fn main() {
             .set("req_per_s", trace_on)
             .set("backend", "native")
             .set("overhead_pct", overhead_pct),
+    );
+
+    // 13. Fleet placement: joint (device, algorithm) placement vs
+    //     round-robin-with-per-request-selection on a mixed trace over 4
+    //     heterogeneous simulated devices. Wall-clock req/s and p99
+    //     measure the serving path (placement scoring included); the
+    //     placement *quality* shows in modeled completion time, carried
+    //     on each row — joint should land well above 1.2x over rr.
+    let fleet_bench = |policy: PlacementPolicy| -> (f64, f64, u64) {
+        let fleet = Fleet::new(
+            &[&GTX1080, &TITANX, &SIMAPEX, &SIMECO],
+            FleetConfig {
+                policy,
+                ..FleetConfig::default()
+            },
+        )
+        .expect("fleet");
+        let trace = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::Steady,
+                gpu: &GTX1080,
+                shapes: vec![
+                    GemmShape::new(128, 128, 128),
+                    GemmShape::new(256, 256, 256),
+                    GemmShape::new(128, 1024, 256),
+                ],
+                rps: 800.0,
+                duration: Duration::from_secs_f64(0.25),
+            }],
+            0xF1EE7,
+        );
+        let mut lat_us: Vec<u64> = Vec::with_capacity(trace.len());
+        let t0 = std::time::Instant::now();
+        for ev in &trace.events {
+            let a = Matrix::random(ev.shape.m as usize, ev.shape.k as usize, ev.payload);
+            let b = Matrix::random(ev.shape.n as usize, ev.shape.k as usize, ev.payload ^ 0xBEEF);
+            let s = std::time::Instant::now();
+            fleet.serve(ev.shape, a, b).expect("fleet serve");
+            lat_us.push(s.elapsed().as_micros() as u64);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        fleet.conservation().expect("fleet bench conserves");
+        lat_us.sort_unstable();
+        let p99 = lat_us[(lat_us.len() - 1) * 99 / 100] as f64;
+        let thpt = lat_us.len() as f64 / wall;
+        let modeled = fleet.modeled_completion_us();
+        fleet.shutdown();
+        (thpt, p99, modeled)
+    };
+    let (joint_rps, joint_p99, joint_modeled) = fleet_bench(PlacementPolicy::Joint);
+    let (rr_rps, rr_p99, rr_modeled) = fleet_bench(PlacementPolicy::RoundRobin);
+    report.push_str(&format!(
+        "fleet placement (4 heterogeneous devices, mixed trace): \
+         joint {joint_rps:.0} req/s p99 {joint_p99:.0}us modeled {joint_modeled}us | \
+         rr {rr_rps:.0} req/s p99 {rr_p99:.0}us modeled {rr_modeled}us\n"
+    ));
+    report.push_str(&format!(
+        "  ↳ speedup joint/rr modeled completion: {:.2}x\n",
+        rr_modeled as f64 / joint_modeled as f64
+    ));
+    rows.push(
+        Json::obj()
+            .set("name", "fleet.placement.joint")
+            .set("req_per_s", joint_rps)
+            .set("p99_us", joint_p99)
+            .set("devices", "gtx1080,titanx,simapex,simeco")
+            .set("modeled_completion_us", joint_modeled)
+            .set("modeled_speedup_vs_rr", rr_modeled as f64 / joint_modeled as f64),
+    );
+    rows.push(
+        Json::obj()
+            .set("name", "fleet.placement.rr")
+            .set("req_per_s", rr_rps)
+            .set("p99_us", rr_p99)
+            .set("devices", "gtx1080,titanx,simapex,simeco")
+            .set("modeled_completion_us", rr_modeled),
     );
 
     emit("perf_hotpath.txt", &report);

@@ -1,0 +1,734 @@
+//! The fleet scheduler: joint (device, algorithm) placement across N
+//! heterogeneous simulated GPUs.
+//!
+//! The single-engine [`Router`] assumes one backend, one model, one
+//! breaker registry. A [`Fleet`] lifts that whole stack per device: each
+//! [`FleetDevice`] owns an [`Engine`] whose workers run a
+//! [`SimExecutor`] built from that device's *current* [`GpuSpec`]
+//! (rebuilt through [`Engine::restartable`]'s factory on a mid-run spec
+//! swap), plus its own `Router` — so per-device metrics/conservation,
+//! per-device online specialization (a challenger promoted on device A
+//! never touches device B's model), per-device decision-cache epochs,
+//! and per-(device, artifact) breakers all fall out of ownership rather
+//! than new locking.
+//!
+//! ```text
+//!   clients ──► Fleet::serve(shape, a, b)
+//!                 │ place(): score every (device, algo) candidate
+//!                 │   est = pending_us + wait_ewma_us + modeled_exec_us
+//!                 │   skip: workspace unfit, breaker Open (healable)
+//!                 ▼ argmin
+//!          ┌─ device 0 ─┐  ┌─ device 1 ─┐  ┌─ device N ─┐
+//!          │ Router     │  │ Router     │  │ Router     │  each with its
+//!          │ Engine     │  │ Engine     │  │ Engine     │  own selector,
+//!          │ SimExec    │  │ SimExec    │  │ SimExec    │  hub, breakers,
+//!          │ (spec i)   │  │ (spec j)   │  │ (spec k)   │  metrics
+//!          └────────────┘  └────────────┘  └────────────┘
+//! ```
+//!
+//! **Placement** ([`PlacementPolicy::Joint`]) estimates completion time
+//! per candidate from three terms the scheduler can know without asking
+//! the device: the modeled execution cost of *this* request under the
+//! candidate algorithm (the same calibrated [`TimingModel`] the
+//! `SimExecutor` reports, so the estimate is exact for sim fleets), the
+//! device's in-flight modeled backlog (`pending_us`, added at dispatch
+//! and removed at resolve), and an EWMA of observed queue-wait (wall
+//! latency minus the modeled estimate). Round-robin and random policies
+//! are kept as baselines; both leave the algorithm choice to the
+//! device's own live selector.
+//!
+//! **Breaker drain + heal**: a candidate whose per-device breaker is
+//! Open for the candidate artifact is skipped, so a sick device's
+//! traffic drains to siblings. Skipping forever would also starve the
+//! breaker of the `admit()` calls that drive its Open→HalfOpen cooldown
+//! transition, so every `breaker_drain_recheck`-th placement ignores
+//! Open-skips: the argmin then routes one request at the sick candidate
+//! and the router's breaker admission either coerces it (pre-cooldown)
+//! or serves the half-open probe that heals the breaker. When *every*
+//! candidate is Open-skipped the skip set is ignored entirely —
+//! placement never deadlocks.
+//!
+//! **Conservation**: each device's router keeps the invariant
+//! `completed + failed + shed + timed_out == requests` per device;
+//! [`Fleet::conservation`] additionally rolls all device snapshots into
+//! a fleet-wide [`ConservationTotals`] check.
+
+use super::engine::{Engine, EngineConfig};
+use super::lifecycle::BreakerState;
+use super::metrics::{ConservationTotals, MetricsSnapshot};
+use super::router::{GemmRequest, GemmResponse, Router, RouterConfig};
+use crate::coordinator::ExecBackend;
+use crate::gemm::cpu::Matrix;
+use crate::gemm::xla::XlaBackend;
+use crate::gemm::{Algorithm, GemmShape};
+use crate::gpusim::{GpuSpec, SimExecutor, Simulator, TimingModel};
+use crate::selector::{Selector, TrainedModel};
+use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Wraps each freshly built per-worker backend — `(inner, device_idx,
+/// worker_idx)` — before the engine takes it. The chaos tests use this
+/// to interpose a `ChaosBackend` on exactly one device.
+pub type BackendWrap =
+    Arc<dyn Fn(Box<dyn ExecBackend>, usize, usize) -> Box<dyn ExecBackend> + Send + Sync>;
+
+/// How the fleet maps a request onto a device.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// Score every (device, algorithm) candidate by estimated completion
+    /// time and take the argmin — device and algorithm chosen jointly.
+    #[default]
+    Joint,
+    /// Deal devices in rotation; the device's own selector picks the
+    /// algorithm per request (the strongest non-joint baseline).
+    RoundRobin,
+    /// Seeded uniform device choice; selector picks the algorithm.
+    Random,
+}
+
+/// Fleet configuration. `router` is cloned into every device, so the
+/// online loop, breakers, deadlines, and admission policy are uniform
+/// across the fleet while their *state* stays per-device.
+#[derive(Clone)]
+pub struct FleetConfig {
+    pub policy: PlacementPolicy,
+    /// Engine workers per device.
+    pub workers_per_device: usize,
+    /// Per-worker queue depth per device.
+    pub queue_depth: usize,
+    /// Per-device router configuration (online loop, breakers, deadline,
+    /// admission, obs) — instantiated independently per device.
+    pub router: RouterConfig,
+    /// Every Nth placement re-admits breaker-Open candidates so a
+    /// tripped breaker still sees the admit() traffic it needs to reach
+    /// half-open and heal (0 disables recovery placements).
+    pub breaker_drain_recheck: u64,
+    /// Seed for the [`PlacementPolicy::Random`] baseline.
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            policy: PlacementPolicy::default(),
+            workers_per_device: 1,
+            queue_depth: 64,
+            router: RouterConfig::default(),
+            breaker_drain_recheck: 16,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+/// One placement decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    /// Index into the fleet's device list.
+    pub device: usize,
+    /// The jointly chosen algorithm (`None` for the baseline policies,
+    /// which leave the choice to the device's selector).
+    pub algo: Option<Algorithm>,
+    /// Estimated completion µs at decision time (backlog + wait + exec).
+    pub est_us: u64,
+    /// The modeled-exec component of `est_us` alone — what the dispatch
+    /// charges against the device's `pending_us` (charging the full
+    /// score would double-count the backlog already inside it).
+    pub exec_us: u64,
+}
+
+/// One device of the fleet: a spec cell (read by the engine's worker
+/// factory at every (re)build, written by [`Fleet::swap_spec`]), the
+/// engine, the device's own router stack, the placement cost state, and
+/// placement counters.
+pub struct FleetDevice {
+    spec: Arc<Mutex<&'static GpuSpec>>,
+    engine: Mutex<Option<Engine>>,
+    router: Router,
+    /// Calibrated timing model of the *current* spec — the modeled-exec
+    /// term of the placement score. Rebuilt on spec swap.
+    cost: Mutex<TimingModel>,
+    /// Modeled µs of work dispatched to this device and not yet resolved.
+    pending_us: AtomicU64,
+    /// EWMA (α = 1/8) of observed wait: wall latency beyond the modeled
+    /// estimate, clamped at zero and sampled as zero for uncontended
+    /// dispatches (no modeled work was queued ahead, so any overshoot is
+    /// host oracle/channel overhead, not queueing — counting it would
+    /// let wall-clock noise swamp the µs-scale modeled scores). Captures
+    /// genuine queueing the timing model cannot see, and decays back
+    /// toward zero as uncontended completions stream through.
+    wait_ewma_us: AtomicU64,
+    placed: AtomicU64,
+    placed_nt: AtomicU64,
+    placed_tnn: AtomicU64,
+}
+
+/// A point-in-time per-device report for tables and assertions.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    pub device: usize,
+    pub name: &'static str,
+    pub gpu_id: u64,
+    pub placed: u64,
+    pub placed_nt: u64,
+    pub placed_tnn: u64,
+    pub pending_us: u64,
+    pub wait_ewma_us: u64,
+    pub snapshot: MetricsSnapshot,
+}
+
+/// The fleet scheduler. Share via `&Fleet` across client threads;
+/// serving is thread-safe (placement state is atomic, the per-device
+/// cost model sits behind a short lock).
+pub struct Fleet {
+    devices: Vec<FleetDevice>,
+    config: FleetConfig,
+    rr_tick: AtomicU64,
+    heal_tick: AtomicU64,
+    rand: Mutex<SplitMix64>,
+    /// Σ (backlog at dispatch + modeled exec of the executed algorithm)
+    /// over completed requests — the total modeled completion time the
+    /// acceptance benchmarks compare across policies.
+    modeled_completion_us: AtomicU64,
+}
+
+impl Fleet {
+    /// Build a fleet over `specs` with the paper's production selector
+    /// (GBDT trained once on the full dataset, cloned per device — each
+    /// device still owns its copy, so online promotion stays local).
+    pub fn new(specs: &[&'static GpuSpec], config: FleetConfig) -> anyhow::Result<Fleet> {
+        let base = Selector::train_default(&crate::dataset::collect_paper_dataset());
+        let g = base
+            .model
+            .as_gbdt()
+            .cloned()
+            .expect("train_default yields a GBDT");
+        Fleet::with_selectors(specs, config, |_| Selector::new(TrainedModel::Gbdt(g.clone())))
+    }
+
+    /// Build a fleet with an explicit selector per device.
+    pub fn with_selectors(
+        specs: &[&'static GpuSpec],
+        config: FleetConfig,
+        selector_for: impl FnMut(usize) -> Selector,
+    ) -> anyhow::Result<Fleet> {
+        Fleet::with_backend_wrap(specs, config, selector_for, None)
+    }
+
+    /// Full-control constructor: explicit selectors plus an optional
+    /// backend wrap applied to every worker backend (chaos injection).
+    pub fn with_backend_wrap(
+        specs: &[&'static GpuSpec],
+        config: FleetConfig,
+        mut selector_for: impl FnMut(usize) -> Selector,
+        wrap: Option<BackendWrap>,
+    ) -> anyhow::Result<Fleet> {
+        anyhow::ensure!(!specs.is_empty(), "fleet needs at least one device");
+        let ecfg = EngineConfig {
+            workers: config.workers_per_device.max(1),
+            queue_depth: config.queue_depth,
+            ..EngineConfig::default()
+        };
+        let mut devices = Vec::with_capacity(specs.len());
+        for (idx, &spec) in specs.iter().enumerate() {
+            let cell = Arc::new(Mutex::new(spec));
+            let factory_cell = Arc::clone(&cell);
+            let factory_wrap = wrap.clone();
+            let engine = Engine::restartable(ecfg, move |w| {
+                let spec = *factory_cell.lock().unwrap();
+                let base: Box<dyn ExecBackend> = Box::new(SimExecutor::new(spec));
+                Ok(match &factory_wrap {
+                    Some(f) => f(base, idx, w),
+                    None => base,
+                })
+            })?;
+            let router = Router::new(selector_for(idx), engine.handle(), config.router.clone());
+            devices.push(FleetDevice {
+                spec: cell,
+                engine: Mutex::new(Some(engine)),
+                router,
+                cost: Mutex::new(TimingModel::new(spec)),
+                pending_us: AtomicU64::new(0),
+                wait_ewma_us: AtomicU64::new(0),
+                placed: AtomicU64::new(0),
+                placed_nt: AtomicU64::new(0),
+                placed_tnn: AtomicU64::new(0),
+            });
+        }
+        let seed = config.seed;
+        Ok(Fleet {
+            devices,
+            config,
+            rr_tick: AtomicU64::new(0),
+            heal_tick: AtomicU64::new(0),
+            rand: Mutex::new(SplitMix64::new(seed)),
+            modeled_completion_us: AtomicU64::new(0),
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// The device's router — per-device metrics, online hub, breakers.
+    pub fn router(&self, device: usize) -> &Router {
+        &self.devices[device].router
+    }
+
+    /// The device's *current* spec (swaps change it mid-run).
+    pub fn spec(&self, device: usize) -> &'static GpuSpec {
+        *self.devices[device].spec.lock().unwrap()
+    }
+
+    /// Total modeled completion µs accrued by completed requests.
+    pub fn modeled_completion_us(&self) -> u64 {
+        self.modeled_completion_us.load(Ordering::Relaxed)
+    }
+
+    /// Modeled execution µs of `algo` on device `device` for `shape`,
+    /// under the device's current calibrated model.
+    fn modeled_exec_us(&self, device: usize, shape: GemmShape, algo: Algorithm) -> u64 {
+        let cost = self.devices[device].cost.lock().unwrap();
+        let GemmShape { m, n, k } = shape;
+        let secs = match algo {
+            Algorithm::Tnn => cost.t_tnn(m, n, k),
+            _ => cost.t_nt(m, n, k),
+        };
+        (secs * 1e6) as u64
+    }
+
+    /// Whether `algo`'s workspace fits the device's current memory.
+    fn fits(&self, device: usize, shape: GemmShape, algo: Algorithm) -> bool {
+        let GemmShape { m, n, k } = shape;
+        let bytes = match algo {
+            Algorithm::Tnn => Simulator::tnn_workspace_bytes(m, n, k),
+            _ => Simulator::nt_workspace_bytes(m, n, k),
+        };
+        bytes <= self.spec(device).global_mem_bytes()
+    }
+
+    /// Is the device's breaker Open for the candidate artifact? A pure
+    /// read — admission (and the Open→HalfOpen transition) stays with
+    /// the router on the serve path.
+    fn breaker_open(&self, device: usize, shape: GemmShape, algo: Algorithm) -> bool {
+        let Some(reg) = self.devices[device].router.breakers() else {
+            return false;
+        };
+        reg.state(&XlaBackend::artifact_name(shape, algo)) == BreakerState::Open
+    }
+
+    /// The device's current completion-time floor: modeled backlog plus
+    /// observed queue-wait EWMA.
+    fn backlog_us(&self, device: usize) -> u64 {
+        let d = &self.devices[device];
+        d.pending_us.load(Ordering::Relaxed) + d.wait_ewma_us.load(Ordering::Relaxed)
+    }
+
+    /// Decide where (and for Joint, how) to run `shape`.
+    pub fn place(&self, shape: GemmShape) -> Placement {
+        match self.config.policy {
+            PlacementPolicy::Joint => self.place_joint(shape),
+            PlacementPolicy::RoundRobin => {
+                let device =
+                    (self.rr_tick.fetch_add(1, Ordering::Relaxed) as usize) % self.devices.len();
+                let exec_us = self.baseline_exec_us(device, shape);
+                Placement {
+                    device,
+                    algo: None,
+                    est_us: self.backlog_us(device) + exec_us,
+                    exec_us,
+                }
+            }
+            PlacementPolicy::Random => {
+                let device = {
+                    let mut rng = self.rand.lock().unwrap();
+                    rng.next_u64() as usize % self.devices.len()
+                };
+                let exec_us = self.baseline_exec_us(device, shape);
+                Placement {
+                    device,
+                    algo: None,
+                    est_us: self.backlog_us(device) + exec_us,
+                    exec_us,
+                }
+            }
+        }
+    }
+
+    /// The exec-cost estimate when the algorithm is left to the device's
+    /// selector: the cheaper fitting algorithm (what a well-trained
+    /// selector converges to).
+    fn baseline_exec_us(&self, device: usize, shape: GemmShape) -> u64 {
+        let nt = self.modeled_exec_us(device, shape, Algorithm::Nt);
+        if self.fits(device, shape, Algorithm::Tnn) {
+            nt.min(self.modeled_exec_us(device, shape, Algorithm::Tnn))
+        } else {
+            nt
+        }
+    }
+
+    fn place_joint(&self, shape: GemmShape) -> Placement {
+        let recheck = self.config.breaker_drain_recheck;
+        let heal = recheck > 0
+            && (self.heal_tick.fetch_add(1, Ordering::Relaxed) + 1) % recheck == 0;
+        // Two passes: the first respects breaker-Open skips (sick
+        // candidates drain to siblings); if that empties the candidate
+        // set — or this is a recovery placement — Open candidates are
+        // back in, so the breaker keeps seeing admissions and can heal.
+        // Memory-unfit candidates are never admitted by either pass.
+        for respect_open in [!heal, false] {
+            let mut best: Option<Placement> = None;
+            for device in 0..self.devices.len() {
+                for algo in [Algorithm::Nt, Algorithm::Tnn] {
+                    if !self.fits(device, shape, algo) {
+                        continue;
+                    }
+                    if respect_open && self.breaker_open(device, shape, algo) {
+                        continue;
+                    }
+                    let exec_us = self.modeled_exec_us(device, shape, algo);
+                    let est_us = self.backlog_us(device) + exec_us;
+                    if best.map_or(true, |b| est_us < b.est_us) {
+                        best = Some(Placement {
+                            device,
+                            algo: Some(algo),
+                            est_us,
+                            exec_us,
+                        });
+                    }
+                }
+            }
+            if let Some(p) = best {
+                return p;
+            }
+        }
+        // Nothing fits anywhere: fall through to device 0 / NT and let
+        // the router surface the memory error.
+        Placement {
+            device: 0,
+            algo: Some(Algorithm::Nt),
+            est_us: self.backlog_us(0),
+            exec_us: 0,
+        }
+    }
+
+    /// Serve one request through the fleet: place, dispatch to the
+    /// placed device's router (the placement algorithm riding along as
+    /// an execution override that never blinds the device's online
+    /// loop — see [`Router::serve_with`]), and settle the cost state.
+    pub fn serve(&self, shape: GemmShape, a: Matrix, b: Matrix) -> anyhow::Result<GemmResponse> {
+        let p = self.place(shape);
+        let dev = &self.devices[p.device];
+        let gpu = *dev.spec.lock().unwrap();
+        // Charge only the modeled exec of *this* request — `est_us`
+        // already contains the backlog, and re-adding it would compound
+        // queued work quadratically under concurrency.
+        let backlog = dev.pending_us.fetch_add(p.exec_us, Ordering::Relaxed);
+        dev.placed.fetch_add(1, Ordering::Relaxed);
+        let t0 = Instant::now();
+        let res = dev.router.serve_with(GemmRequest { gpu, shape, a, b }, p.algo);
+        dev.pending_us.fetch_sub(p.exec_us, Ordering::Relaxed);
+        if let Ok(resp) = &res {
+            match resp.algorithm {
+                Algorithm::Nt => dev.placed_nt.fetch_add(1, Ordering::Relaxed),
+                Algorithm::Tnn => dev.placed_tnn.fetch_add(1, Ordering::Relaxed),
+                Algorithm::Nn => 0,
+            };
+            // Modeled completion: what the fleet "cost" in simulated
+            // time — queue ahead at dispatch plus the modeled exec of
+            // the algorithm that actually ran.
+            let exec = self.modeled_exec_us(p.device, shape, resp.algorithm);
+            self.modeled_completion_us
+                .fetch_add(backlog + exec, Ordering::Relaxed);
+            // Observed wait: wall time beyond the modeled estimate, but
+            // only when modeled work was actually queued ahead — an
+            // uncontended dispatch's overshoot is host oracle/channel
+            // overhead, not queueing, and counting it would let wall
+            // noise swamp the µs-scale modeled scores. Uncontended
+            // completions instead sample zero, decaying the EWMA.
+            let wait = if backlog > 0 {
+                (t0.elapsed().as_micros() as u64).saturating_sub(exec)
+            } else {
+                0
+            };
+            let old = dev.wait_ewma_us.load(Ordering::Relaxed);
+            dev.wait_ewma_us
+                .store((old * 7 + wait) / 8, Ordering::Relaxed);
+        }
+        res
+    }
+
+    /// Swap a device's spec mid-run: the spec cell and cost model flip
+    /// first, then every engine worker is killed and restarted so the
+    /// restartable factory rebuilds its `SimExecutor` against the new
+    /// spec. Requests placed after this see the new device; the decision
+    /// cache needs no flush because it is keyed by gpu id. Only this
+    /// device's online loop will observe the drift and retrain.
+    pub fn swap_spec(&self, device: usize, to: &'static GpuSpec) -> anyhow::Result<()> {
+        let dev = &self.devices[device];
+        *dev.spec.lock().unwrap() = to;
+        *dev.cost.lock().unwrap() = TimingModel::new(to);
+        let mut guard = dev.engine.lock().unwrap();
+        let engine = guard
+            .as_mut()
+            .ok_or_else(|| anyhow::anyhow!("fleet device {device} already shut down"))?;
+        for w in 0..self.config.workers_per_device.max(1) {
+            engine.kill_worker(w)?;
+            engine.restart_worker(w)?;
+        }
+        Ok(())
+    }
+
+    /// One device's report.
+    pub fn device_report(&self, device: usize) -> DeviceReport {
+        let d = &self.devices[device];
+        let spec = *d.spec.lock().unwrap();
+        DeviceReport {
+            device,
+            name: spec.name,
+            gpu_id: spec.id,
+            placed: d.placed.load(Ordering::Relaxed),
+            placed_nt: d.placed_nt.load(Ordering::Relaxed),
+            placed_tnn: d.placed_tnn.load(Ordering::Relaxed),
+            pending_us: d.pending_us.load(Ordering::Relaxed),
+            wait_ewma_us: d.wait_ewma_us.load(Ordering::Relaxed),
+            snapshot: d.router.metrics.snapshot(),
+        }
+    }
+
+    /// All device reports, in device order.
+    pub fn reports(&self) -> Vec<DeviceReport> {
+        (0..self.devices.len())
+            .map(|i| self.device_report(i))
+            .collect()
+    }
+
+    /// Per-device AND fleet-wide conservation at quiescence.
+    pub fn conservation(&self) -> Result<(), String> {
+        let mut totals = ConservationTotals::default();
+        for (i, r) in self.reports().iter().enumerate() {
+            r.snapshot
+                .verify_conservation()
+                .map_err(|e| format!("device {i} ({}): {e}", r.name))?;
+            totals.absorb(&r.snapshot);
+        }
+        totals.verify_conservation()
+    }
+
+    /// Human-readable per-device placement/latency table — one
+    /// `fleet device …` line per device (the CI smoke greps these) plus
+    /// a fleet summary line.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let mut totals = ConservationTotals::default();
+        for r in self.reports() {
+            totals.absorb(&r.snapshot);
+            out.push_str(&format!(
+                "fleet device {} ({}): placed={} nt={} tnn={} wait_ewma_us={} | {}\n",
+                r.device,
+                r.name,
+                r.placed,
+                r.placed_nt,
+                r.placed_tnn,
+                r.wait_ewma_us,
+                r.snapshot.render()
+            ));
+        }
+        out.push_str(&format!(
+            "fleet total: devices={} requests={} completed={} failed={} shed={} timed_out={} modeled_completion_us={}\n",
+            self.devices.len(),
+            totals.requests,
+            totals.completed,
+            totals.failed,
+            totals.shed,
+            totals.timed_out,
+            self.modeled_completion_us()
+        ));
+        out
+    }
+
+    /// Graceful stop: drain and join every device's engine. Routers (and
+    /// their trainer threads) are dropped with the fleet itself.
+    pub fn shutdown(mut self) {
+        for dev in &mut self.devices {
+            if let Some(engine) = dev.engine.get_mut().unwrap().take() {
+                engine.shutdown();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::cpu::matmul_nt;
+    use crate::gpusim::{GTX1080, SIMAPEX, SIMECO, TITANX};
+    use crate::ml::gbdt::{Gbdt, GbdtParams};
+    use crate::ml::Classifier;
+    use crate::testutil::assert_allclose;
+
+    /// A selector that always predicts `label`: a 0-estimator GBDT's
+    /// base score carries the training labels' sign.
+    fn constant_selector(label: i8) -> Selector {
+        let p = GbdtParams {
+            n_estimators: 0,
+            ..GbdtParams::default()
+        };
+        let mut g = Gbdt::new(p);
+        g.fit(
+            &[vec![0.0; 8], vec![1.0; 8]],
+            &[label as f64, label as f64],
+        );
+        Selector::new(TrainedModel::Gbdt(g))
+    }
+
+    fn request_mats(m: u64, n: u64, k: u64, seed: u64) -> (Matrix, Matrix) {
+        (
+            Matrix::random(m as usize, k as usize, seed),
+            Matrix::random(n as usize, k as usize, seed ^ 0xBEEF),
+        )
+    }
+
+    #[test]
+    fn joint_placement_prefers_the_fastest_device() {
+        let fleet = Fleet::with_selectors(
+            &[&SIMECO, &SIMAPEX],
+            FleetConfig::default(),
+            |_| constant_selector(1),
+        )
+        .unwrap();
+        let shape = GemmShape::new(32, 32, 32);
+        for i in 0..4u64 {
+            let (a, b) = request_mats(32, 32, 32, i);
+            let expect = matmul_nt(&a, &b);
+            let resp = fleet.serve(shape, a, b).unwrap();
+            assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        }
+        let reports = fleet.reports();
+        assert_eq!(reports[0].placed, 0, "SimEco never wins the argmin");
+        assert_eq!(reports[1].placed, 4);
+        assert_eq!(reports[1].snapshot.completed, 4);
+        fleet.conservation().unwrap();
+        let table = fleet.render();
+        assert!(table.contains("fleet device 1 (SimApex): placed=4"), "{table}");
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn round_robin_deals_devices_in_rotation() {
+        let fleet = Fleet::with_selectors(
+            &[&SIMECO, &SIMAPEX],
+            FleetConfig {
+                policy: PlacementPolicy::RoundRobin,
+                ..FleetConfig::default()
+            },
+            |_| constant_selector(1),
+        )
+        .unwrap();
+        for i in 0..6u64 {
+            let (a, b) = request_mats(16, 16, 16, i);
+            fleet.serve(GemmShape::new(16, 16, 16), a, b).unwrap();
+        }
+        let reports = fleet.reports();
+        assert_eq!(reports[0].placed, 3);
+        assert_eq!(reports[1].placed, 3);
+        assert!(
+            fleet.modeled_completion_us() > 0,
+            "modeled completion accrues"
+        );
+        fleet.conservation().unwrap();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn random_policy_is_seeded_and_conserves() {
+        let run = |seed| {
+            let fleet = Fleet::with_selectors(
+                &[&GTX1080, &TITANX],
+                FleetConfig {
+                    policy: PlacementPolicy::Random,
+                    seed,
+                    ..FleetConfig::default()
+                },
+                |_| constant_selector(1),
+            )
+            .unwrap();
+            for i in 0..8u64 {
+                let (a, b) = request_mats(16, 16, 16, i);
+                fleet.serve(GemmShape::new(16, 16, 16), a, b).unwrap();
+            }
+            fleet.conservation().unwrap();
+            let placed: Vec<u64> = fleet.reports().iter().map(|r| r.placed).collect();
+            fleet.shutdown();
+            placed
+        };
+        assert_eq!(run(7), run(7), "same seed, same placements");
+        assert_eq!(run(7).iter().sum::<u64>(), 8);
+    }
+
+    #[test]
+    fn swap_spec_redirects_placement_and_still_serves() {
+        let fleet = Fleet::with_selectors(
+            &[&SIMAPEX, &GTX1080],
+            FleetConfig::default(),
+            |_| constant_selector(1),
+        )
+        .unwrap();
+        let shape = GemmShape::new(32, 32, 32);
+        let (a, b) = request_mats(32, 32, 32, 1);
+        fleet.serve(shape, a, b).unwrap();
+        assert_eq!(fleet.reports()[0].placed, 1, "SimApex wins before the swap");
+        // Demote device 0 to the slowest part; the worker restarts and
+        // rebuilds its SimExecutor against the new spec.
+        fleet.swap_spec(0, &SIMECO).unwrap();
+        assert_eq!(fleet.spec(0).id, SIMECO.id);
+        for i in 2..6u64 {
+            let (a, b) = request_mats(32, 32, 32, i);
+            let expect = matmul_nt(&a, &b);
+            let resp = fleet.serve(shape, a, b).unwrap();
+            assert_allclose(&resp.output.data, &expect.data, 1e-4, 1e-4);
+        }
+        let reports = fleet.reports();
+        assert_eq!(reports[0].placed, 1, "post-swap traffic avoids the slow part");
+        assert_eq!(reports[1].placed, 4);
+        fleet.conservation().unwrap();
+        fleet.shutdown();
+    }
+
+    #[test]
+    fn joint_beats_round_robin_on_modeled_completion() {
+        // The in-crate miniature of the acceptance benchmark: identical
+        // sequential traffic over a heterogeneous pair, compared on
+        // total modeled completion time.
+        let drive = |policy| {
+            let fleet = Fleet::with_selectors(
+                &[&SIMECO, &SIMAPEX],
+                FleetConfig {
+                    policy,
+                    ..FleetConfig::default()
+                },
+                |_| constant_selector(1),
+            )
+            .unwrap();
+            for i in 0..8u64 {
+                let (a, b) = request_mats(64, 64, 64, i);
+                fleet.serve(GemmShape::new(64, 64, 64), a, b).unwrap();
+            }
+            fleet.conservation().unwrap();
+            let us = fleet.modeled_completion_us();
+            fleet.shutdown();
+            us
+        };
+        let joint = drive(PlacementPolicy::Joint);
+        let rr = drive(PlacementPolicy::RoundRobin);
+        assert!(
+            rr as f64 >= 1.2 * joint as f64,
+            "joint {joint}µs should beat round-robin {rr}µs by ≥1.2×"
+        );
+    }
+}

@@ -221,9 +221,12 @@ pub struct CoordinatorMetrics {
     pub shadow_probes: AtomicU64,
     /// Probe decisions fired by the adaptive drift-interpolated schedule.
     pub probes_scheduled: AtomicU64,
-    /// Probe decisions fired by the epsilon-greedy bandit floor (the
-    /// schedule had declined the request).
+    /// Probe decisions fired by the UCB exploration floor (the schedule
+    /// had declined the request).
     pub probes_bandit: AtomicU64,
+    /// Probe decisions (scheduled or floor) denied by the per-GPU probe
+    /// budget (`OnlineConfig::probe_budget`).
+    pub probes_budget_denied: AtomicU64,
     /// Gauge: the effective probe interval (1-in-N) in force when the
     /// adaptive schedule last fired a probe; 0 until the first scheduled
     /// probe. Written only on scheduled fires, so declined hot-path
@@ -282,9 +285,11 @@ pub struct MetricsSnapshot {
     pub online_samples: u64,
     pub online_dropped: u64,
     pub shadow_probes: u64,
-    /// Probe decisions from the adaptive schedule vs the bandit floor.
+    /// Probe decisions from the adaptive schedule vs the UCB floor.
     pub probes_scheduled: u64,
     pub probes_bandit: u64,
+    /// Probe decisions denied by the per-GPU probe budget.
+    pub probes_budget_denied: u64,
     /// The effective probe interval (1-in-N) at the last *scheduled*
     /// probe (0 until one fires). Per-bucket intervals differ; this is
     /// the last-probed bucket's.
@@ -469,6 +474,7 @@ impl CoordinatorMetrics {
             shadow_probes,
             probes_scheduled: self.probes_scheduled.load(Ordering::Relaxed),
             probes_bandit: self.probes_bandit.load(Ordering::Relaxed),
+            probes_budget_denied: self.probes_budget_denied.load(Ordering::Relaxed),
             probe_interval,
             probe_rate: if probe_interval == 0 {
                 0.0
@@ -557,7 +563,7 @@ impl MetricsSnapshot {
                 "n/a".to_string() // no probes yet — don't print NaN%
             };
             s.push_str(&format!(
-                " | online samples={} dropped={} probes={} (sched={} bandit={}) \
+                " | online samples={} dropped={} probes={} (sched={} bandit={} budget_denied={}) \
                  probe_interval={} mispredicts={} rate={rate} \
                  retrains={} promotions={} rollbacks={}",
                 self.online_samples,
@@ -565,6 +571,7 @@ impl MetricsSnapshot {
                 self.shadow_probes,
                 self.probes_scheduled,
                 self.probes_bandit,
+                self.probes_budget_denied,
                 self.probe_interval,
                 self.shadow_mispredicts,
                 self.retrains,
@@ -976,6 +983,48 @@ impl MetricsSnapshot {
     }
 }
 
+/// Fleet-wide conservation roll-up. Each device in a fleet owns its own
+/// `CoordinatorMetrics`, so per-device conservation is just that
+/// device's [`MetricsSnapshot::verify_conservation`]; this accumulator
+/// sums outcome counters across devices and checks the widened
+/// invariant `Σ completed + Σ failed + Σ shed + Σ timed_out ==
+/// Σ requests` fleet-wide. A request double-counted across devices (or
+/// dropped between placement and dispatch) violates the sum even when
+/// every individual device balances.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ConservationTotals {
+    pub requests: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub shed: u64,
+    pub timed_out: u64,
+}
+
+impl ConservationTotals {
+    /// Fold one device's snapshot into the fleet totals.
+    pub fn absorb(&mut self, s: &MetricsSnapshot) {
+        self.requests += s.requests;
+        self.completed += s.completed;
+        self.failed += s.failed;
+        self.shed += s.shed;
+        self.timed_out += s.timed_out;
+    }
+
+    /// Fleet-wide conservation at quiescence; same caveat as the
+    /// per-device check (only meaningful with no serve call in flight).
+    pub fn verify_conservation(&self) -> Result<(), String> {
+        let resolved = self.completed + self.failed + self.shed + self.timed_out;
+        if resolved == self.requests {
+            Ok(())
+        } else {
+            Err(format!(
+                "fleet conservation violated: completed={} + failed={} + shed={} + timed_out={} = {resolved} != requests={}",
+                self.completed, self.failed, self.shed, self.timed_out, self.requests
+            ))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1095,6 +1144,31 @@ mod tests {
     }
 
     #[test]
+    fn fleet_totals_absorb_per_device_snapshots() {
+        let a = CoordinatorMetrics::default();
+        a.requests.fetch_add(4, Ordering::Relaxed);
+        a.completed.fetch_add(3, Ordering::Relaxed);
+        a.shed.fetch_add(1, Ordering::Relaxed);
+        let b = CoordinatorMetrics::default();
+        b.requests.fetch_add(2, Ordering::Relaxed);
+        b.failed.fetch_add(1, Ordering::Relaxed);
+        b.timed_out.fetch_add(1, Ordering::Relaxed);
+        let mut fleet = ConservationTotals::default();
+        fleet.absorb(&a.snapshot());
+        fleet.absorb(&b.snapshot());
+        assert_eq!(fleet.requests, 6);
+        fleet.verify_conservation().unwrap();
+        // An extra unresolved request on either device breaks the sum
+        // fleet-wide even though it is a per-device imbalance.
+        b.requests.fetch_add(1, Ordering::Relaxed);
+        let mut broken = ConservationTotals::default();
+        broken.absorb(&a.snapshot());
+        broken.absorb(&b.snapshot());
+        let err = broken.verify_conservation().unwrap_err();
+        assert!(err.contains("fleet conservation"), "{err}");
+    }
+
+    #[test]
     fn lifecycle_counters_flow_through_every_renderer() {
         let m = CoordinatorMetrics::default();
         let terse = m.snapshot().render();
@@ -1171,6 +1245,7 @@ mod tests {
         m.shadow_probes.fetch_add(4, Ordering::Relaxed);
         m.probes_scheduled.fetch_add(3, Ordering::Relaxed);
         m.probes_bandit.fetch_add(1, Ordering::Relaxed);
+        m.probes_budget_denied.fetch_add(2, Ordering::Relaxed);
         m.probe_interval_gauge.store(16, Ordering::Relaxed);
         m.shadow_mispredicts.fetch_add(1, Ordering::Relaxed);
         m.retrains.fetch_add(2, Ordering::Relaxed);
@@ -1180,6 +1255,7 @@ mod tests {
         assert_eq!(s.shadow_probes, 4);
         assert_eq!(s.probes_scheduled, 3);
         assert_eq!(s.probes_bandit, 1);
+        assert_eq!(s.probes_budget_denied, 2);
         assert_eq!(s.probe_interval, 16);
         assert!((s.probe_rate - 1.0 / 16.0).abs() < 1e-12);
         assert!((s.mispredict_rate - 0.25).abs() < 1e-12);
@@ -1188,6 +1264,7 @@ mod tests {
             "probes=4",
             "sched=3",
             "bandit=1",
+            "budget_denied=2",
             "probe_interval=16",
             "mispredicts=1",
             "rate=25.0%",

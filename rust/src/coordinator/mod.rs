@@ -1,10 +1,35 @@
-//! L3 coordinator: the serving layer that turns MTNN into a GEMM service.
+//! L3 coordinator: the serving layer that turns MTNN into a GEMM service
+//! — and, one level up, into a *fleet* of services over heterogeneous
+//! devices.
+//!
+//! Two layers of scheduling. At the top, the [`Fleet`]
+//! ([`fleet`]) owns one complete serving stack per simulated device —
+//! engine, router, selector, online loop, breakers, metrics — and
+//! places each request by scoring every (device, algorithm) candidate
+//! on estimated completion time: the device's modeled in-flight backlog,
+//! its observed queue-wait EWMA, and the calibrated
+//! [`crate::gpusim::TimingModel`]'s execution cost for that algorithm
+//! on that device's spec
+//! ([`PlacementPolicy::Joint`]; round-robin and random baselines ride
+//! the same plumbing). Placement is where the paper's per-GPU features
+//! finally act at runtime: the same shape routes to a different device
+//! *and* a different algorithm depending on who is fast, who is
+//! backlogged, and whose breaker is open. A device whose breaker trips
+//! for an artifact drains that traffic to siblings (with periodic
+//! recovery placements so the breaker can still heal), and a mid-run
+//! spec swap ([`Fleet::swap_spec`]) rebuilds only that device's
+//! backends — only that device's online loop sees the drift and
+//! retrains. Everything below this paragraph describes the per-device
+//! stack the fleet instantiates N times.
 //!
 //! The decision layer (router + selector) is separated from a pluggable,
 //! concurrent execution layer behind the [`ExecBackend`] trait:
 //!
 //! ```text
-//!   clients ──► Router (Send + Sync; share via Arc)
+//!   clients ──► Fleet::serve — joint (device, algo) placement ──┐
+//!                 │ argmin est. completion over devices × algos │ per
+//!                 ▼                                             ▼ device
+//!               Router (Send + Sync; share via Arc)
 //!                 │  per-request: Algorithm 2 (GBDT + memory fallback),
 //!                 │  memoized in a lock-free shape-keyed DecisionCache
 //!                 │  admission control: block (backpressure) or
@@ -45,12 +70,15 @@
 //! recorded into a lock-free sample ring; an adaptive slice of predicted
 //! requests is shadow-probed (both algorithms run, the measured winner
 //! becomes a labeled example) — densely for shape buckets whose decayed
-//! mispredict window is drifting, sparsely for stable ones, with an
-//! epsilon-greedy bandit floor so no bucket starves; the drift tracker
-//! trips a background trainer that refits the GBDT on a bounded
-//! reservoir of the labeled history and promotes the challenger only if
-//! it beats the incumbent on held-out data, atomically invalidating the
-//! decision cache on swap.
+//! mispredict window is drifting, sparsely for stable ones, with a UCB
+//! exploration floor so under-sampled buckets are probed sooner and a
+//! per-GPU probe budget so one drifting device cannot starve siblings
+//! of exploration; the drift tracker trips a background trainer that
+//! refits the GBDT on a bounded reservoir of the labeled history and
+//! promotes the challenger only if it beats the incumbent on held-out
+//! data, atomically invalidating the decision cache on swap. Under the
+//! fleet, each device runs this loop independently — specialization is
+//! per-device by construction.
 //!
 //! **Observability** comes in two complementary layers:
 //!
@@ -112,10 +140,11 @@
 //! ```
 //!
 //! So `completed + failed + shed + timed_out == requests` at quiescence
-//! — [`CoordinatorMetrics`]`::verify_conservation` checks it, the
-//! adversarial workload lab (`crate::workload`) hammers it, and backend
-//! panics are contained per-job (the worker survives) so chaos can't
-//! break it. Deadlines ([`lifecycle::Deadline`]) ride inside the engine
+//! — [`CoordinatorMetrics`]`::verify_conservation` checks it per
+//! device, [`metrics::ConservationTotals`] rolls the device snapshots
+//! into the same check fleet-wide, the adversarial workload lab
+//! (`crate::workload`) hammers both, and backend panics are contained
+//! per-job (the worker survives) so chaos can't break it. Deadlines ([`lifecycle::Deadline`]) ride inside the engine
 //! job so queue-expired work is dropped unexecuted; retries use
 //! deterministic decorrelated jitter ([`lifecycle::DecorrelatedJitter`])
 //! and never touch deny-listed artifacts; per-artifact circuit breakers
@@ -132,6 +161,7 @@
 
 pub mod backend;
 pub mod engine;
+pub mod fleet;
 pub mod lifecycle;
 pub mod metrics;
 pub mod reuse;
@@ -142,10 +172,13 @@ pub use backend::{
     TransientFault,
 };
 pub use engine::{Engine, EngineConfig, EngineHandle, EngineJob, ExecReply};
+pub use fleet::{
+    BackendWrap, DeviceReport, Fleet, FleetConfig, FleetDevice, Placement, PlacementPolicy,
+};
 pub use lifecycle::{
     BreakerConfig, BreakerDecision, BreakerEvent, BreakerRegistry, BreakerState, BrownoutConfig,
     BrownoutController, Deadline, DecorrelatedJitter, RetryPolicy, BROWNOUT_MAX_LEVEL,
 };
-pub use metrics::{BatchGauge, CoordinatorMetrics, MetricsSnapshot};
+pub use metrics::{BatchGauge, ConservationTotals, CoordinatorMetrics, MetricsSnapshot};
 pub use reuse::{ReuseConfig, ReuseLayer, ReuseStats, ReuseTicket};
 pub use router::{AdmissionControl, GemmRequest, GemmResponse, Router, RouterConfig};

@@ -515,6 +515,21 @@ impl Router {
         self.serve_with_deadline(req, self.config.deadline.map(Deadline::after))
     }
 
+    /// Serve under the default deadline with an optional
+    /// placement-chosen algorithm. The fleet's joint (device, algorithm)
+    /// policy lands here: `placed` overrides the live model's pick for
+    /// *execution* (reported as [`SelectionReason::Forced`] when they
+    /// disagree), but the online loop keeps scoring the model's own
+    /// prediction — a placement override must not blind drift detection
+    /// the way breaker coercion deliberately does.
+    pub fn serve_with(
+        &self,
+        req: GemmRequest,
+        placed: Option<Algorithm>,
+    ) -> anyhow::Result<GemmResponse> {
+        self.serve_inner(req, self.config.deadline.map(Deadline::after), placed)
+    }
+
     /// Serve one request synchronously with an explicit per-call
     /// deadline (overriding [`RouterConfig::deadline`]; `None` means no
     /// expiry). The full lifecycle state machine:
@@ -535,6 +550,15 @@ impl Router {
         req: GemmRequest,
         deadline: Option<Deadline>,
     ) -> anyhow::Result<GemmResponse> {
+        self.serve_inner(req, deadline, None)
+    }
+
+    fn serve_inner(
+        &self,
+        req: GemmRequest,
+        deadline: Option<Deadline>,
+        placed: Option<Algorithm>,
+    ) -> anyhow::Result<GemmResponse> {
         let t0 = Instant::now();
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         self.brownout_tick();
@@ -553,7 +577,14 @@ impl Router {
             o.mark_request();
         }
         let t_entry = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
-        let (decided_algo, decided_reason) = self.decide(&req);
+        let (model_algo, model_reason) = self.decide(&req);
+        // A placement override that agrees with the model keeps the
+        // model's reason (so per-device selection counters still reflect
+        // predictions); a disagreeing override executes as Forced.
+        let (decided_algo, decided_reason) = match placed {
+            Some(p) if p != model_algo => (p, SelectionReason::Forced),
+            _ => (model_algo, model_reason),
+        };
         let t_select = span.as_ref().map(|c| c.now_us()).unwrap_or(0);
         // Close out one request-ending error: ledger + window marks +
         // span outcome, all from the same error classification.
@@ -593,7 +624,15 @@ impl Router {
             }
         };
         self.metrics.record_selection(algo, reason);
-        let predicted = Router::predicted_label(reason);
+        // The model's own prediction drives the online loop even when a
+        // placement override forced the executed algorithm; breaker
+        // coercion (the algorithm changed underneath the decision) still
+        // blinds it — never learn from or probe coerced traffic.
+        let predicted = if algo == decided_algo {
+            Router::predicted_label(model_reason)
+        } else {
+            0
+        };
 
         // Shadow probe: run the *other* algorithm's artifact alongside the
         // chosen one (suppressed from brownout level 1). Best-effort — a

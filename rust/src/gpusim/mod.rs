@@ -12,7 +12,7 @@ pub mod spec;
 
 pub use exec::SimExecutor;
 pub use model::{ModelParams, TimingModel};
-pub use spec::{GpuSpec, ALL_GPUS, GTX1070, GTX1080, PAPER_GPUS, TITANX};
+pub use spec::{GpuSpec, ALL_GPUS, GTX1070, GTX1080, PAPER_GPUS, SIMAPEX, SIMECO, TITANX};
 
 /// The paper's benchmark size grid S = {2^7, 2^8, ..., 2^16}.
 pub const SIZE_GRID: [u64; 10] = [128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536];

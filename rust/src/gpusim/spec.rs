@@ -76,11 +76,47 @@ pub const GTX1070: GpuSpec = GpuSpec {
     l2_cache_kb: 2048,
 };
 
+/// Imagined next-generation part — NOT a real product. Faster than
+/// everything in the paper's testbed (more SMs, more cores, higher
+/// clocks, a wider bus, a bigger L2), it anchors the fast end of the
+/// heterogeneous fleet the placement tests schedule across.
+pub const SIMAPEX: GpuSpec = GpuSpec {
+    name: "SimApex",
+    id: 4,
+    compute_capability: 7.0,
+    global_mem_gib: 16,
+    sms: 40,
+    cuda_cores: 5120,
+    core_clock_mhz: 1800.0,
+    mem_clock_mhz: 6000.0, // 12 Gbps effective → 576 GB/s on a 384-bit bus
+    mem_bus_width_bits: 384,
+    l2_cache_kb: 4096,
+};
+
+/// Imagined low-power part — NOT a real product. Far slower than the
+/// testbed (few SMs, low clocks, a narrow bus) with a deliberately tiny
+/// 256 KiB L2: the NT layout spills L2 at k depths the Pascal parts
+/// shrug off, so the NT/TNN crossover sits somewhere genuinely
+/// different. The fleet's device-swap drift tests rely on that flip.
+pub const SIMECO: GpuSpec = GpuSpec {
+    name: "SimEco",
+    id: 5,
+    compute_capability: 6.2,
+    global_mem_gib: 4,
+    sms: 5,
+    cuda_cores: 640,
+    core_clock_mhz: 1000.0,
+    mem_clock_mhz: 1500.0, // 3 Gbps effective → 48 GB/s on a 128-bit bus
+    mem_bus_width_bits: 128,
+    l2_cache_kb: 256,
+};
+
 /// Both GPUs of the paper's testbed, in paper order.
 pub const PAPER_GPUS: [&GpuSpec; 2] = [&GTX1080, &TITANX];
 
-/// Testbed + the held-out GPU for the generalization study.
-pub const ALL_GPUS: [&GpuSpec; 3] = [&GTX1080, &TITANX, &GTX1070];
+/// Testbed + the held-out GPU for the generalization study + the two
+/// imagined parts bounding the heterogeneous fleet (fast and slow).
+pub const ALL_GPUS: [&GpuSpec; 5] = [&GTX1080, &TITANX, &GTX1070, &SIMAPEX, &SIMECO];
 
 impl GpuSpec {
     /// Theoretical single-precision peak in GFLOPS (2 FLOPs/core/cycle FMA).
@@ -154,9 +190,17 @@ mod tests {
 
     #[test]
     fn ids_are_distinct() {
-        assert_ne!(GTX1080.id, TITANX.id);
-        assert_ne!(GTX1070.id, GTX1080.id);
-        assert_ne!(GTX1070.id, TITANX.id);
+        for (i, a) in ALL_GPUS.iter().enumerate() {
+            for b in &ALL_GPUS[i + 1..] {
+                assert_ne!(a.id, b.id, "{} vs {}", a.name, b.name);
+                assert!(
+                    !a.name.eq_ignore_ascii_case(b.name),
+                    "names must be unique for by_name: {} vs {}",
+                    a.name,
+                    b.name
+                );
+            }
+        }
     }
 
     #[test]
@@ -165,5 +209,24 @@ mod tests {
         assert!((GTX1070.peak_sp_gflops() - 5783.0).abs() < 5.0);
         assert!((GTX1070.peak_bw_gbs() - 256.3).abs() < 1.0);
         assert!(GpuSpec::by_name("gtx1070").is_some());
+    }
+
+    #[test]
+    fn imagined_parts_bound_the_fleet() {
+        // SimApex must be the fastest part in the process; SimEco the
+        // slowest — the fleet placement tests assume that ordering.
+        for g in ALL_GPUS {
+            assert!(SIMAPEX.peak_sp_gflops() >= g.peak_sp_gflops(), "{}", g.name);
+            assert!(SIMECO.peak_sp_gflops() <= g.peak_sp_gflops(), "{}", g.name);
+        }
+        // 2×5120×1.8 GHz ≈ 18432 GFLOPS; 2×640×1.0 GHz = 1280 GFLOPS.
+        assert!((SIMAPEX.peak_sp_gflops() - 18432.0).abs() < 1.0);
+        assert!((SIMECO.peak_sp_gflops() - 1280.0).abs() < 1.0);
+        assert!((SIMAPEX.peak_bw_gbs() - 576.0).abs() < 1.0);
+        assert!((SIMECO.peak_bw_gbs() - 48.0).abs() < 1.0);
+        // SimEco's tiny L2 is load-bearing for the NT/TNN crossover flip.
+        assert_eq!(SIMECO.l2_cache_kb, 256);
+        assert_eq!(GpuSpec::by_name("simapex").unwrap().id, 4);
+        assert_eq!(GpuSpec::by_name("SimEco").unwrap().id, 5);
     }
 }

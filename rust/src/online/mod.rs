@@ -14,8 +14,9 @@
 //!                 │    │ label = measured winner. Interval per   │
 //!                 │    │ shape bucket: probe_every_min when the  │
 //!                 │    │ bucket is drifting ⇄ probe_every_max    │
-//!                 │    │ when stable, + an epsilon bandit floor  │
-//!                 │    │ so stable buckets never starve          │
+//!                 │    │ when stable, + a UCB exploration floor  │
+//!                 │    │ so under-sampled buckets never starve,  │
+//!                 │    │ all capped by a per-GPU probe budget    │
 //!                 └────┼─────────────────────────────────────────┘
 //!                      ▼ lock-free SampleRing (never blocks serving)
 //!               DriftTracker ── per-(gpu, shape-bucket) decayed
@@ -47,10 +48,17 @@
 //!   (bucket at/above `drift_threshold`) and
 //!   [`OnlineConfig::probe_every_max`] (no drift evidence), per shape
 //!   bucket, firing at ticks n−1, 2n−1, … so a cold start never probes
-//!   its first request. A deterministic epsilon-greedy floor
-//!   ([`OnlineConfig::probe_epsilon`]) probes 1-in-⌈1/ε⌉ of the requests
-//!   the schedule declined — bandit-style exploration that keeps
-//!   long-stable buckets from starving.
+//!   its first request. Requests the schedule declines feed a
+//!   deterministic UCB-style exploration floor: each bucket accumulates
+//!   probe credit at `ε + √(ln(1+t) / 4(n_b+1))` per declined request
+//!   (`t` = total declined, `n_b` = that bucket's floor probes) and
+//!   fires when the credit reaches 1 — an under-sampled bucket is
+//!   probed within a couple of requests instead of waiting out the flat
+//!   1-in-⌈1/ε⌉ epsilon schedule, and a well-sampled bucket's rate
+//!   converges back down to ε. Every probe decision (scheduled or
+//!   floor) then passes the per-GPU token budget
+//!   ([`OnlineConfig::probe_budget`]), so one drifting device cannot
+//!   starve its fleet siblings of exploration.
 //! * **Reservoir-bounded trainer** ([`Accumulator`]): once `max_examples`
 //!   is hit, seeded reservoir sampling ([`ReservoirPolicy`]) bounds
 //!   retrain cost regardless of uptime — recency-biased by default so a
@@ -59,6 +67,14 @@
 //!   than adaptation speed. Independently, the drift window ages on a
 //!   wall-clock half-life ([`OnlineConfig::drift_half_life`]) every
 //!   trainer poll, decoupled from retrain cadence.
+//!
+//! Under the fleet scheduler (`coordinator::fleet`) this whole loop is
+//! instantiated **per device**: each fleet device owns its own
+//! [`OnlineHub`], [`LiveSelector`], decision cache, and trainer thread,
+//! so a challenger promoted for device A never touches device B's model
+//! and a spec swap on one device retrains only that device. The per-GPU
+//! probe budget is what keeps the fleet's shared exploration appetite
+//! fair when one device starts drifting.
 //!
 //! The hot path stays lock-free: `Router::decide` consults the
 //! [`crate::selector::cache::DecisionCache`] (epoch-checked — a swap
@@ -92,7 +108,8 @@ use std::time::Duration;
 /// |---|---|
 /// | `probe_every_min` | probe interval while a bucket is drifting (densest) |
 /// | `probe_every_max` | probe interval with no drift evidence (sparsest; 0 disables probing) |
-/// | `probe_epsilon` | bandit floor: probe 1-in-⌈1/ε⌉ of schedule-declined requests |
+/// | `probe_epsilon` | base rate of the UCB exploration floor over schedule-declined requests |
+/// | `probe_budget` / `probe_budget_window` | per-GPU token budget: at most `budget` probes per `window` requests per device |
 /// | `drift_threshold` | mispredict rate that (a) trips a retrain, (b) pins the interval at `min` |
 /// | `drift_min_probes` | decayed probe weight required before drift may trigger |
 /// | `drift_decay` | fraction of drift evidence retained after each retrain |
@@ -114,11 +131,25 @@ pub struct OnlineConfig {
     /// with the bucket's drift rate. 0 disables probing entirely
     /// (including the epsilon floor).
     pub probe_every_max: u64,
-    /// Epsilon-greedy exploration floor: of the predicted requests the
-    /// adaptive schedule declines, deterministically probe 1 in ⌈1/ε⌉, so
-    /// a long-stable bucket still gets occasional labeled evidence and
-    /// cannot starve (0 disables the floor).
+    /// Base rate of the UCB-style exploration floor over the predicted
+    /// requests the adaptive schedule declines. Each shape bucket
+    /// accrues probe credit at `ε + √(ln(1+t) / 4(n_b+1))` per declined
+    /// request (`t` = total declined requests, `n_b` = the bucket's
+    /// floor probes so far) and probes when the credit reaches 1:
+    /// an under-sampled bucket is explored within its first couple of
+    /// declined requests, while a well-sampled bucket's rate converges
+    /// down to ε. 0 disables the floor.
     pub probe_epsilon: f64,
+    /// Per-GPU probe token budget: at most this many shadow probes per
+    /// `probe_budget_window` requests seen for a device, applied to
+    /// *every* probe decision (scheduled or exploration floor). Keeps a
+    /// single drifting device from consuming the whole fleet's probe
+    /// overhead headroom. 0 disables the cap.
+    pub probe_budget: u64,
+    /// Request window the probe budget is measured against (the budget
+    /// line is `probes · window ≤ budget · (requests + window)`, i.e.
+    /// one window's worth of burst is allowed up front).
+    pub probe_budget_window: u64,
     /// Fraction of every drift-window weight retained after a retrain
     /// (applied via [`DriftTracker::decay`]); 0 reproduces the old
     /// hard-reset behavior, 1 never forgets. Clamped to `[0, 1]`.
@@ -168,6 +199,8 @@ impl Default for OnlineConfig {
             probe_every_min: 4,
             probe_every_max: 64,
             probe_epsilon: 0.02,
+            probe_budget: 0,
+            probe_budget_window: 64,
             drift_decay: 0.5,
             drift_half_life: Duration::from_secs(30),
             ring_capacity: 4096,
@@ -242,14 +275,37 @@ pub struct OnlineHub {
     /// Per-shape-bucket request counters for the adaptive schedule (keyed
     /// exactly like the drift tracker's buckets).
     sched_ticks: Box<[AtomicU64]>,
-    /// Counter of schedule-declined requests, driving the epsilon floor.
+    /// Counter of schedule-declined requests — the `t` in the UCB bonus.
     bandit_tick: AtomicU64,
+    /// Per-bucket exploration-floor probe counts — the `n_b` in the UCB
+    /// bonus (keyed like the drift tracker's buckets).
+    bandit_counts: Box<[AtomicU64]>,
+    /// Per-bucket fixed-point probe-credit accumulators (error
+    /// diffusion: fire when a bucket's accrued rate crosses 1.0), so the
+    /// UCB floor stays deterministic without floats in shared state.
+    bandit_accum: Box<[AtomicU64]>,
+    /// Per-GPU probe-budget ledgers, keyed `gpu_id % BUDGET_SLOTS`
+    /// (collisions share a budget — acceptable for a cap).
+    budget: Box<[BudgetSlot]>,
     /// Callbacks run after every promotion (after the decision-cache
     /// invalidation). The router registers the engine reuse layer's epoch
     /// bump here so a hot-swap also retires cross-request cached results.
     promotion_hooks: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
     shutdown: AtomicBool,
 }
+
+/// One GPU's probe-budget ledger: requests seen vs probes granted.
+#[derive(Default)]
+struct BudgetSlot {
+    requests: AtomicU64,
+    probes: AtomicU64,
+}
+
+/// Fixed array of per-GPU budget ledgers (gpu ids hash in by modulo).
+const BUDGET_SLOTS: usize = 32;
+
+/// Fixed-point scale for the UCB probe-credit accumulators.
+const BANDIT_SCALE: u64 = 1 << 32;
 
 impl OnlineHub {
     pub fn new(
@@ -267,6 +323,9 @@ impl OnlineHub {
             metrics,
             sched_ticks: (0..drift::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
             bandit_tick: AtomicU64::new(0),
+            bandit_counts: (0..drift::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            bandit_accum: (0..drift::BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            budget: (0..BUDGET_SLOTS).map(|_| BudgetSlot::default()).collect(),
             promotion_hooks: Mutex::new(Vec::new()),
             shutdown: AtomicBool::new(false),
         }
@@ -311,20 +370,52 @@ impl OnlineHub {
         (interval.round() as u64).clamp(min_n, max_n)
     }
 
+    /// Whether `gpu_id` has probe-budget headroom for one more probe.
+    /// Grants (and charges) a token when the line
+    /// `probes · window ≤ budget · (requests + window)` holds — i.e. at
+    /// most `probe_budget` probes per `probe_budget_window` requests,
+    /// with one window's worth of burst allowed up front. Denials count
+    /// in `probes_budget_denied`. Budget 0 = uncapped.
+    fn budget_admits(&self, slot: &BudgetSlot) -> bool {
+        let budget = self.config.probe_budget;
+        if budget == 0 {
+            return true;
+        }
+        let window = self.config.probe_budget_window.max(1);
+        let requests = slot.requests.load(Ordering::Relaxed);
+        let probes = slot.probes.load(Ordering::Relaxed);
+        if probes.saturating_mul(window) < budget.saturating_mul(requests.saturating_add(window)) {
+            slot.probes.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            self.metrics
+                .probes_budget_denied
+                .fetch_add(1, Ordering::Relaxed);
+            false
+        }
+    }
+
     /// Adaptive probe schedule over *predicted* requests, per shape
     /// bucket. With the bucket's effective interval `n`, fires at that
     /// bucket's ticks n−1, 2n−1, … (never tick 0, so a cold-started or
     /// restarted service does not double the latency of its first
-    /// request). Requests the schedule declines feed the deterministic
-    /// epsilon floor: every ⌈1/ε⌉-th declined request probes anyway, so
-    /// stable buckets keep a trickle of exploration. Per-cause counters
+    /// request). Requests the schedule declines feed a deterministic
+    /// UCB-style exploration floor: the bucket accrues probe credit at
+    /// `ε + √(ln(1+t) / 4(n_b+1))` per declined request and fires when
+    /// the credit reaches 1, so a bucket with few floor probes (`n_b`
+    /// small) is explored almost immediately while a well-probed one
+    /// settles back to the ε base rate. Every fire — scheduled or floor
+    /// — must then clear the per-GPU probe budget. Per-cause counters
     /// and the last effective interval land in [`CoordinatorMetrics`].
     pub fn should_probe(&self, gpu_id: u64, m: u64, n: u64, k: u64) -> bool {
         let interval = self.effective_probe_interval(gpu_id, m, n, k);
         if interval == 0 {
             return false;
         }
-        let tick = &self.sched_ticks[drift::bucket_of(gpu_id, m, n, k)];
+        let slot = &self.budget[gpu_id as usize % BUDGET_SLOTS];
+        slot.requests.fetch_add(1, Ordering::Relaxed);
+        let bucket = drift::bucket_of(gpu_id, m, n, k);
+        let tick = &self.sched_ticks[bucket];
         let mut cur = tick.load(Ordering::Relaxed);
         loop {
             let fires = cur + 1 >= interval;
@@ -332,6 +423,9 @@ impl OnlineHub {
             match tick.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
                 Ok(_) => {
                     if fires {
+                        if !self.budget_admits(slot) {
+                            return false;
+                        }
                         // The gauge records the interval in effect at the
                         // last *scheduled* fire — written only here, so
                         // declined hot-path requests never touch the
@@ -347,12 +441,21 @@ impl OnlineHub {
                 Err(seen) => cur = seen,
             }
         }
-        // Bandit floor: deterministic epsilon-greedy exploration over the
-        // requests the adaptive schedule declined.
+        // UCB exploration floor over the requests the schedule declined.
         let eps = self.config.probe_epsilon;
         if eps > 0.0 {
-            let every = (1.0 / eps.min(1.0)).ceil() as u64;
-            if self.bandit_tick.fetch_add(1, Ordering::Relaxed) % every == every - 1 {
+            let t = self.bandit_tick.fetch_add(1, Ordering::Relaxed) + 1;
+            let pulls = self.bandit_counts[bucket].load(Ordering::Relaxed);
+            let bonus = (((1 + t) as f64).ln() / (4.0 * (pulls + 1) as f64)).sqrt();
+            let rate = (eps.min(1.0) + bonus).min(1.0);
+            let credit = (rate * BANDIT_SCALE as f64) as u64;
+            let prev = self.bandit_accum[bucket].fetch_add(credit, Ordering::Relaxed);
+            if prev + credit >= BANDIT_SCALE {
+                self.bandit_accum[bucket].fetch_sub(BANDIT_SCALE, Ordering::Relaxed);
+                if !self.budget_admits(slot) {
+                    return false;
+                }
+                self.bandit_counts[bucket].fetch_add(1, Ordering::Relaxed);
                 self.metrics.probes_bandit.fetch_add(1, Ordering::Relaxed);
                 return true;
             }
@@ -608,26 +711,88 @@ mod tests {
     }
 
     #[test]
-    fn epsilon_floor_keeps_stable_buckets_explored() {
-        // Schedule so sparse it never fires in this window; epsilon 0.25
-        // probes every 4th declined request — deterministic, nonzero.
+    fn ucb_floor_probes_undersampled_buckets_sooner_than_flat_epsilon() {
+        // Schedule so sparse it never fires in this window; the UCB
+        // floor is the only probe source. Everything is deterministic:
+        // single thread, pure counter arithmetic.
         let h = hub(
             OnlineConfig {
                 probe_every_min: 1000,
                 probe_every_max: 1000,
-                probe_epsilon: 0.25,
+                probe_epsilon: 0.1,
                 ..OnlineConfig::default()
             },
             constant_selector(1),
         );
-        let fired: Vec<bool> = (0..12).map(|_| h.should_probe(1, 128, 128, 128)).collect();
-        assert_eq!(
-            fired,
-            vec![false, false, false, true, false, false, false, true, false, false, false, true]
+        // A never-probed bucket accrues ε + √(ln(1+t)/4) ≈ 0.52, 0.62 …
+        // per declined request, so it fires on its 2nd declined request.
+        // The old flat ε = 0.1 floor fired on the 10th (index 9).
+        let first = (0..32)
+            .position(|_| h.should_probe(1, 128, 128, 128))
+            .expect("floor must fire");
+        assert_eq!(first, 1, "under-sampled bucket probed sooner than flat ε");
+        assert!(first < 9, "beats the flat 1-in-⌈1/ε⌉ schedule");
+        // A *fresh* bucket arriving late is explored almost immediately
+        // too (its own n_b is 0; the global t only grows the bonus),
+        // instead of inheriting the stream's 1-in-10 cadence.
+        let fresh = (0..32)
+            .position(|_| h.should_probe(1, 4096, 4096, 4096))
+            .expect("fresh bucket must fire");
+        assert!(fresh <= 1, "fresh bucket fired at declined #{fresh}");
+        // And the rate anneals: with n_b growing, the bonus decays
+        // toward ε, so late-stream exploration is sparser than early.
+        let fires = |n: usize| {
+            (0..n)
+                .filter(|_| h.should_probe(1, 128, 128, 128))
+                .count()
+        };
+        let early = fires(100);
+        let late = {
+            let _ = fires(200); // burn the middle of the stream
+            fires(100)
+        };
+        assert!(
+            late < early,
+            "exploration must anneal: early={early} late={late}"
         );
         let snap = h.metrics.snapshot();
-        assert_eq!(snap.probes_bandit, 3, "bandit floor is live and nonzero");
+        assert!(snap.probes_bandit > 0, "floor probes counted");
         assert_eq!(snap.probes_scheduled, 0);
+        assert_eq!(snap.probes_budget_denied, 0, "no budget configured");
+    }
+
+    #[test]
+    fn probe_budget_caps_per_gpu_and_counts_denials() {
+        // Dense schedule (1-in-2) against a tight budget: 1 probe per 16
+        // requests per GPU. Of the 32 scheduled fires in 64 requests the
+        // budget may admit at most (64+16)/16 = 5.
+        let h = hub(
+            OnlineConfig {
+                probe_every_min: 2,
+                probe_every_max: 2,
+                probe_epsilon: 0.0,
+                probe_budget: 1,
+                probe_budget_window: 16,
+                ..OnlineConfig::default()
+            },
+            constant_selector(1),
+        );
+        let fired_a = (0..64).filter(|_| h.should_probe(1, 128, 128, 128)).count();
+        assert!(fired_a >= 1, "budget must not silence probing entirely");
+        assert!(fired_a <= 5, "budget line exceeded: {fired_a}");
+        // A second GPU draws on its own ledger — sibling exploration is
+        // not starved by GPU 1 having spent its tokens.
+        let fired_b = (0..64).filter(|_| h.should_probe(2, 128, 128, 128)).count();
+        assert!(fired_b >= 1);
+        assert!(fired_b <= 5);
+        // Every scheduled fire was either admitted or counted as denied.
+        let snap = h.metrics.snapshot();
+        assert_eq!(
+            snap.probes_budget_denied as usize + fired_a + fired_b,
+            64,
+            "32 scheduled fires per GPU must all be accounted for"
+        );
+        assert_eq!(snap.probes_scheduled as usize, fired_a + fired_b);
     }
 
     #[test]

@@ -26,7 +26,11 @@
 //!   additionally kills and restarts an engine worker mid-trace
 //!   ([`Engine::kill_worker`] / [`Engine::restart_worker`]), triggered
 //!   by submitted-request counts, elapsed trace time, or both
-//!   ([`WorkerChaos`]).
+//!   ([`WorkerChaos`]). [`replay_fleet`] drives the same traces through
+//!   a whole [`Fleet`] — placement, not the event's `gpu`, decides the
+//!   device — and a [`FleetSwap`] schedule (derivable from a
+//!   `DeviceSwap` phase via [`FleetSwap::from_trace`]) performs the
+//!   real mid-run spec swap the phase describes.
 //! * [`chaos`] — [`ChaosBackend`], a fault-injecting [`ExecBackend`]
 //!   wrapper: per-call seeded rolls inject typed transient failures
 //!   (retryable by the router's bounded-retry policy), panics
@@ -41,6 +45,7 @@
 //! trace, the deadlines, or the chaos does.
 //!
 //! [`Router`]: crate::coordinator::Router
+//! [`Fleet`]: crate::coordinator::Fleet
 //! [`EngineBusy`]: crate::coordinator::EngineBusy
 //! [`DeadlineExceeded`]: crate::coordinator::DeadlineExceeded
 //! [`ExecBackend`]: crate::coordinator::ExecBackend
@@ -54,5 +59,6 @@ pub mod replay;
 pub use chaos::{ChaosBackend, ChaosConfig, ChaosStats};
 pub use generator::{Phase, PhaseKind, Trace, TraceEvent};
 pub use replay::{
-    replay, replay_with_chaos, ReplayClock, ReplayOptions, ReplayReport, WorkerChaos,
+    replay, replay_fleet, replay_with_chaos, FleetSwap, ReplayClock, ReplayOptions, ReplayReport,
+    WorkerChaos,
 };

@@ -14,8 +14,9 @@
 //! returning at all is the zero-hung-clients check.
 
 use super::generator::Trace;
-use crate::coordinator::{DeadlineExceeded, Engine, EngineBusy, GemmRequest, Router};
+use crate::coordinator::{DeadlineExceeded, Engine, EngineBusy, Fleet, GemmRequest, Router};
 use crate::gemm::cpu::Matrix;
+use crate::gpusim::GpuSpec;
 use crate::util::rng::mix_parts;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -295,6 +296,130 @@ pub fn replay_with_chaos(
     Ok(counters.report(t0.elapsed()))
 }
 
+/// Mid-replay device-spec swap schedule for [`replay_fleet`]: once
+/// `after` requests have been submitted, [`Fleet::swap_spec`] flips
+/// `device` to `to` — the real engine-worker rebuild behind the trace
+/// generator's `DeviceSwap` phase.
+#[derive(Debug, Clone, Copy)]
+pub struct FleetSwap {
+    /// Which fleet device swaps.
+    pub device: usize,
+    /// The spec it swaps to.
+    pub to: &'static GpuSpec,
+    /// Swap once this many requests have been submitted.
+    pub after: u64,
+}
+
+impl FleetSwap {
+    /// Derive a schedule from a trace containing a `DeviceSwap` phase:
+    /// the swap fires at the first event whose gpu differs from the
+    /// trace's opening gpu, and targets that gpu. `None` when the trace
+    /// never changes gpu.
+    pub fn from_trace(trace: &Trace, device: usize) -> Option<FleetSwap> {
+        let first = trace.events.first()?.gpu;
+        trace.events.iter().enumerate().find_map(|(i, ev)| {
+            (ev.gpu.id != first.id).then_some(FleetSwap {
+                device,
+                to: ev.gpu,
+                after: i as u64,
+            })
+        })
+    }
+}
+
+/// One client's share of the trace, served through the fleet scheduler
+/// (the fleet picks the device, so the event's own `gpu` is ignored —
+/// placement is the thing under test).
+fn fleet_client_run(
+    fleet: &Fleet,
+    trace: &Trace,
+    opts: &ReplayOptions,
+    counters: &Counters,
+    start: Instant,
+    client: usize,
+) {
+    let stride = opts.clients.max(1);
+    let mut i = client;
+    while i < trace.events.len() {
+        let ev = &trace.events[i];
+        if let ReplayClock::Paced { speedup } = opts.clock {
+            let due = start + ev.at.div_f64(speedup.max(1e-9));
+            let now = Instant::now();
+            if due > now {
+                std::thread::sleep(due - now);
+            }
+        }
+        let s = mix_parts(&[opts.seed, ev.payload]);
+        let a = Matrix::random(ev.shape.m as usize, ev.shape.k as usize, s);
+        let b = Matrix::random(ev.shape.n as usize, ev.shape.k as usize, s ^ 1);
+        counters.submitted.fetch_add(1, Ordering::Relaxed);
+        match fleet.serve(ev.shape, a, b) {
+            Ok(_) => counters.completed.fetch_add(1, Ordering::Relaxed),
+            Err(e) if EngineBusy::is(&e) => counters.shed.fetch_add(1, Ordering::Relaxed),
+            Err(e) if DeadlineExceeded::is(&e) => counters.timed_out.fetch_add(1, Ordering::Relaxed),
+            Err(_) => counters.failed.fetch_add(1, Ordering::Relaxed),
+        };
+        i += stride;
+    }
+}
+
+/// Replay `trace` through a [`Fleet`], optionally swapping one device's
+/// spec mid-run per `swap`. Chaos injection rides the fleet's backend
+/// wrap (set at construction), so unlike [`replay_with_chaos`] no
+/// `&mut Engine` is needed — [`Fleet::swap_spec`] restarts workers
+/// behind its own locks. The returned [`ReplayReport`] is the
+/// client-side ledger; cross-check the server side per device AND
+/// fleet-wide with [`Fleet::conservation`].
+pub fn replay_fleet(
+    fleet: &Fleet,
+    trace: &Trace,
+    opts: &ReplayOptions,
+    swap: Option<&FleetSwap>,
+) -> anyhow::Result<ReplayReport> {
+    let counters = Counters::default();
+    let done = AtomicBool::new(false);
+    let t0 = Instant::now();
+    let ctl_result = std::thread::scope(|s| {
+        let (counters_ref, done_ref) = (&counters, &done);
+        let ctl = swap.map(|swap| {
+            s.spawn(move || -> anyhow::Result<()> {
+                let mut swapped = false;
+                loop {
+                    let n = counters_ref.submitted.load(Ordering::Relaxed);
+                    if !swapped && n >= swap.after {
+                        fleet.swap_spec(swap.device, swap.to)?;
+                        swapped = true;
+                    }
+                    if done_ref.load(Ordering::Relaxed) {
+                        // The trace ended before the edge: still swap, so
+                        // a schedule is never silently skipped.
+                        if !swapped {
+                            fleet.swap_spec(swap.device, swap.to)?;
+                        }
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+            })
+        });
+        let mut clients = Vec::with_capacity(opts.clients.max(1));
+        for c in 0..opts.clients.max(1) {
+            let counters = &counters;
+            clients.push(s.spawn(move || fleet_client_run(fleet, trace, opts, counters, t0, c)));
+        }
+        for c in clients {
+            let _ = c.join();
+        }
+        done.store(true, Ordering::Relaxed);
+        match ctl {
+            Some(h) => h.join().expect("fleet swap controller panicked"),
+            None => Ok(()),
+        }
+    });
+    ctl_result?;
+    Ok(counters.report(t0.elapsed()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -356,6 +481,44 @@ mod tests {
         assert!(c.kill_due(1, Duration::from_millis(50)));
         // Neither crossed.
         assert!(!c.kill_due(99, Duration::from_millis(49)));
+    }
+
+    #[test]
+    fn fleet_swap_schedule_derives_from_a_device_swap_trace() {
+        use crate::gemm::GemmShape;
+        use crate::gpusim::{GTX1080, SIMECO};
+        use crate::workload::generator::{Phase, PhaseKind};
+        let trace = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::DeviceSwap {
+                    to: &SIMECO,
+                    at_frac: 0.5,
+                },
+                gpu: &GTX1080,
+                shapes: vec![GemmShape::new(16, 16, 16)],
+                rps: 100.0,
+                duration: Duration::from_secs(1),
+            }],
+            42,
+        );
+        let swap = FleetSwap::from_trace(&trace, 0).expect("trace swaps gpus");
+        assert_eq!(swap.device, 0);
+        assert_eq!(swap.to.id, SIMECO.id);
+        assert!(swap.after > 0, "swap fires mid-trace");
+        assert_eq!(trace.events[swap.after as usize].gpu.id, SIMECO.id);
+        assert_eq!(trace.events[swap.after as usize - 1].gpu.id, GTX1080.id);
+        // A trace that never swaps yields no schedule.
+        let steady = Trace::generate(
+            &[Phase {
+                kind: PhaseKind::Steady,
+                gpu: &GTX1080,
+                shapes: vec![GemmShape::new(16, 16, 16)],
+                rps: 100.0,
+                duration: Duration::from_secs(1),
+            }],
+            42,
+        );
+        assert!(FleetSwap::from_trace(&steady, 0).is_none());
     }
 
     #[test]

@@ -1,0 +1,340 @@
+//! Integration: the heterogeneous device fleet end to end — the mixed-
+//! fleet acceptance criteria from ROADMAP item #2.
+//!
+//! * On a seeded heterogeneous trace over 4 devices with distinct specs,
+//!   joint (device, algorithm) placement must beat round-robin-with-
+//!   per-request-selection by ≥ 1.2× on total modeled completion time.
+//! * A mid-trace device-spec swap ([`Fleet::swap_spec`] riding
+//!   `Engine::restartable`) must retrain *only* the affected device:
+//!   the swapped device's online loop sees the drift, retrains, and
+//!   promotes, while the sibling's retrain/promotion counters stay 0.
+//! * Under chaos (a ChaosBackend `sick_prefix` making one device's NT
+//!   artifacts fail), conservation holds per device AND fleet-wide, the
+//!   sick device's breaker-open drains its traffic to siblings, and
+//!   only the sick device's model retrains.
+
+use mtnn::coordinator::{
+    BackendWrap, BreakerConfig, Fleet, FleetConfig, PlacementPolicy, RouterConfig,
+};
+use mtnn::gemm::cpu::Matrix;
+use mtnn::gemm::GemmShape;
+use mtnn::gpusim::{GpuSpec, GTX1080, SIMAPEX, SIMECO, TITANX};
+use mtnn::ml::gbdt::{Gbdt, GbdtParams};
+use mtnn::ml::Classifier;
+use mtnn::online::OnlineConfig;
+use mtnn::selector::{Selector, TrainedModel};
+use mtnn::workload::{
+    replay_fleet, ChaosBackend, ChaosConfig, ChaosStats, Phase, PhaseKind, ReplayClock,
+    ReplayOptions, Trace,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// A selector that always predicts `label` (+1 = NT, -1 = TNN): a
+/// 0-estimator GBDT's base score carries the training labels' sign.
+/// Constant models make every placement/probe outcome deterministic —
+/// the modeled timings decide, never classifier wobble.
+fn constant_selector(label: i8) -> Selector {
+    let p = GbdtParams {
+        n_estimators: 0,
+        ..GbdtParams::default()
+    };
+    let mut g = Gbdt::new(p);
+    g.fit(&[vec![0.0; 8], vec![1.0; 8]], &[label as f64, label as f64]);
+    Selector::new(TrainedModel::Gbdt(g))
+}
+
+fn mats(shape: GemmShape, seed: u64) -> (Matrix, Matrix) {
+    (
+        Matrix::random(shape.m as usize, shape.k as usize, seed),
+        Matrix::random(shape.n as usize, shape.k as usize, seed ^ 0xBEEF),
+    )
+}
+
+fn heterogeneous_trace(seed: u64) -> Trace {
+    // Shapes sized so the modeled spread between the fastest and the
+    // slowest part is wide (launch overhead does not dominate) while the
+    // CPU oracle cost per request stays small.
+    Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: &GTX1080,
+            shapes: vec![
+                GemmShape::new(128, 128, 128),
+                GemmShape::new(256, 256, 256),
+                GemmShape::new(128, 256, 128),
+            ],
+            rps: 400.0,
+            duration: Duration::from_secs_f64(0.08),
+        }],
+        seed,
+    )
+}
+
+fn run_policy_on(trace: &Trace, policy: PlacementPolicy) -> u64 {
+    let fleet = Fleet::with_selectors(
+        &[&GTX1080, &TITANX, &SIMAPEX, &SIMECO],
+        FleetConfig {
+            policy,
+            ..FleetConfig::default()
+        },
+        |_| constant_selector(1),
+    )
+    .expect("fleet");
+    for ev in &trace.events {
+        let (a, b) = mats(ev.shape, ev.payload);
+        fleet.serve(ev.shape, a, b).expect("serve");
+    }
+    fleet.conservation().expect("conservation");
+    let total = fleet.modeled_completion_us();
+    fleet.shutdown();
+    total
+}
+
+/// Acceptance: joint placement ≥ 1.2× better than round-robin with
+/// per-request selection on total modeled completion time, same seeded
+/// trace, 4 distinct device specs.
+#[test]
+fn joint_placement_beats_round_robin_by_1_2x_on_modeled_completion() {
+    let trace = heterogeneous_trace(0xF1EE7);
+    assert!(trace.len() >= 24, "trace too small: {}", trace.len());
+    let joint = run_policy_on(&trace, PlacementPolicy::Joint);
+    let rr = run_policy_on(&trace, PlacementPolicy::RoundRobin);
+    assert!(joint > 0 && rr > 0);
+    let ratio = rr as f64 / joint as f64;
+    assert!(
+        ratio >= 1.2,
+        "joint must beat round-robin ≥1.2×: joint={joint}µs rr={rr}µs ratio={ratio:.2}"
+    );
+}
+
+/// Acceptance: a mid-run spec swap retrains only the affected device.
+/// Two identical GTX 1080 devices serve a deep-K shape whose winner is
+/// NT on a GTX 1080 but TNN on the small-L2 SimEco; after device 0
+/// swaps to SimEco, its shadow probes mispredict, its online loop
+/// retrains and promotes — and device 1's counters never move.
+#[test]
+fn device_spec_swap_retrains_only_the_affected_device() {
+    let online = OnlineConfig {
+        probe_every_min: 2,
+        probe_every_max: 2,
+        probe_epsilon: 0.0,
+        retrain_min_labeled: 6,
+        retrain_every_labeled: 0, // drift is the only retrain tripwire
+        drift_threshold: 0.2,
+        drift_min_probes: 3,
+        poll_interval: Duration::from_millis(5),
+        ..OnlineConfig::default()
+    };
+    let fleet = Fleet::with_selectors(
+        &[&GTX1080, &GTX1080],
+        FleetConfig {
+            // Round-robin keeps both devices fed deterministically, so
+            // the sibling provably *had* traffic and still never retrained.
+            policy: PlacementPolicy::RoundRobin,
+            router: RouterConfig::online(online),
+            ..FleetConfig::default()
+        },
+        |_| constant_selector(1),
+    )
+    .expect("fleet");
+    let shape = GemmShape::new(128, 256, 2048);
+    let mut seq = 0u64;
+    let mut serve_round = |fleet: &Fleet, n: u64| {
+        for _ in 0..n {
+            let (a, b) = mats(shape, seq);
+            seq += 1;
+            fleet.serve(shape, a, b).expect("serve");
+        }
+    };
+    // Warmup on the homogeneous fleet: predictions (NT) are correct on
+    // both devices, so nobody drifts.
+    serve_round(&fleet, 8);
+    fleet.swap_spec(0, &SIMECO).expect("swap");
+    assert_eq!(fleet.spec(0).id, SIMECO.id);
+    // Post-swap traffic: device 0's probes now measure TNN as the
+    // winner while its model keeps saying NT. Keep feeding until its
+    // trainer retrains and promotes a corrected challenger.
+    let deadline = Instant::now() + Duration::from_secs(90);
+    loop {
+        serve_round(&fleet, 10);
+        let s0 = fleet.router(0).metrics.snapshot();
+        if s0.retrains >= 1 && s0.promotions >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "device 0 never retrained+promoted after its spec swap: {}",
+            s0.render()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let s0 = fleet.router(0).metrics.snapshot();
+    let s1 = fleet.router(1).metrics.snapshot();
+    assert!(s0.shadow_mispredicts >= 3, "{}", s0.render());
+    assert_eq!(s1.retrains, 0, "sibling must not retrain: {}", s1.render());
+    assert_eq!(s1.promotions, 0, "sibling must not promote: {}", s1.render());
+    assert!(s1.requests > 0, "sibling did receive traffic");
+    fleet.conservation().expect("conservation");
+    fleet.shutdown();
+}
+
+/// Satellite: fleet conservation under chaos. One fast sick device
+/// (SimApex behind a ChaosBackend whose `nt_` artifacts fail for the
+/// first calls) in front of three slow healthy SimEcos:
+///
+/// 1. early traffic lands on (SimApex, NT) and fails, tripping the
+///    per-(device, artifact) breakers;
+/// 2. small shapes then drain to the healthy siblings;
+/// 3. the deep-K shape stays on the sick device as (SimApex, TNN) —
+///    which matches its deliberately mistrained constant-TNN model, so
+///    its shadow probes run, measure NT as the real winner, and drive
+///    drift → retrain → promotion on the sick device alone;
+/// 4. conservation holds per device and fleet-wide throughout.
+#[test]
+fn fleet_conserves_under_chaos_with_a_sick_device_and_drains_to_siblings() {
+    let stats = Arc::new(ChaosStats::default());
+    let chaos_cfg = ChaosConfig {
+        seed: 0x51C,
+        fail_prob: 0.0,
+        panic_prob: 0.0,
+        spike_prob: 0.0,
+        // Enough sick calls that both NT artifacts in the trace fail
+        // twice (tripping each breaker), then the backend heals.
+        sick_prefix: "nt_".into(),
+        sick_calls: 8,
+        ..ChaosConfig::default()
+    };
+    let stats_wrap = Arc::clone(&stats);
+    let wrap: BackendWrap = Arc::new(move |inner, device, worker| {
+        if device == 0 {
+            Box::new(ChaosBackend::new(
+                inner,
+                chaos_cfg.clone(),
+                worker,
+                Arc::clone(&stats_wrap),
+            ))
+        } else {
+            inner
+        }
+    });
+    let online = OnlineConfig {
+        probe_every_min: 1,
+        probe_every_max: 1,
+        probe_epsilon: 0.0,
+        retrain_min_labeled: 4,
+        retrain_every_labeled: 0,
+        drift_threshold: 0.2,
+        drift_min_probes: 2,
+        poll_interval: Duration::from_millis(5),
+        ..OnlineConfig::default()
+    };
+    let specs: [&'static GpuSpec; 4] = [&SIMAPEX, &SIMECO, &SIMECO, &SIMECO];
+    let fleet = Fleet::with_backend_wrap(
+        &specs,
+        FleetConfig {
+            policy: PlacementPolicy::Joint,
+            router: RouterConfig {
+                breaker: Some(BreakerConfig {
+                    window: 8,
+                    min_samples: 2,
+                    failure_threshold: 0.5,
+                    // Long cooldown: the breakers stay open for the whole
+                    // test, so the drain is what the assertions observe.
+                    open_cooldown: Duration::from_secs(60),
+                }),
+                ..RouterConfig::online(online)
+            },
+            ..FleetConfig::default()
+        },
+        |device| constant_selector(if device == 0 { -1 } else { 1 }),
+        Some(wrap),
+    )
+    .expect("fleet");
+
+    // Two regimes: a small cube that drains to the SimEcos once the sick
+    // NT breaker opens, and a deep-K rectangle for which even TNN on the
+    // fast sick part beats NT on a SimEco — keeping probed traffic (and
+    // the drift signal) on the sick device.
+    let small = GemmShape::new(128, 128, 128);
+    let deep = GemmShape::new(512, 384, 256);
+    let trace = Trace::generate(
+        &[Phase {
+            kind: PhaseKind::Steady,
+            gpu: &SIMAPEX,
+            shapes: vec![small, deep],
+            rps: 400.0,
+            duration: Duration::from_secs_f64(0.15),
+        }],
+        0xC4A05,
+    );
+    let report = replay_fleet(
+        &fleet,
+        &trace,
+        &ReplayOptions {
+            clock: ReplayClock::Afap,
+            clients: 1, // sequential: breaker trip order is deterministic
+            seed: 0x5EED,
+        },
+        None,
+    )
+    .expect("replay");
+    report.verify_conservation().expect("client-side ledger");
+    fleet.conservation().expect("per-device + fleet conservation");
+
+    let s0 = fleet.router(0).metrics.snapshot();
+    assert!(
+        s0.breaker_opens >= 1,
+        "sick device's breaker must trip: {}",
+        s0.render()
+    );
+    assert!(s0.failed >= 2, "sick NT failures surface: {}", s0.render());
+    assert!(
+        stats.injected_sick_failures.load(std::sync::atomic::Ordering::Relaxed) >= 2,
+        "chaos actually injected sickness"
+    );
+    let reports = fleet.reports();
+    let drained: u64 = reports[1..].iter().map(|r| r.placed).sum();
+    assert!(drained > 0, "siblings must absorb the drained traffic");
+    assert!(
+        reports[0].placed_tnn > 0,
+        "deep-K traffic stays on the sick device as TNN: {}",
+        fleet.render()
+    );
+
+    // Only the sick device's model retrains. Keep feeding the deep-K
+    // shape until its trainer promotes, then check the siblings.
+    let deadline = Instant::now() + Duration::from_secs(90);
+    let mut seq = 0x7000u64;
+    loop {
+        for _ in 0..6 {
+            let (a, b) = mats(deep, seq);
+            seq += 1;
+            fleet.serve(deep, a, b).expect("serve");
+        }
+        let s0 = fleet.router(0).metrics.snapshot();
+        if s0.retrains >= 1 && s0.promotions >= 1 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "sick device never retrained: {}",
+            s0.render()
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    for (i, r) in fleet.reports().iter().enumerate().skip(1) {
+        assert_eq!(
+            r.snapshot.retrains, 0,
+            "healthy device {i} must not retrain: {}",
+            r.snapshot.render()
+        );
+        assert_eq!(
+            r.snapshot.promotions, 0,
+            "healthy device {i} must not promote: {}",
+            r.snapshot.render()
+        );
+    }
+    fleet.conservation().expect("conservation after the retrain phase");
+    fleet.shutdown();
+}

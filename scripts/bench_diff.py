@@ -29,9 +29,16 @@ import json
 import sys
 
 REGRESSION_WARN_PCT = 25.0
-# Lower is better for per-op latencies and overhead fractions; higher is
-# better for throughput.
-VALUE_KEYS = (("ns_per_op", False), ("req_per_s", True), ("probe_fraction", False))
+# Lower is better for per-op latencies, tail latencies, and overhead
+# fractions; higher is better for throughput. Rows carrying several of
+# these (the fleet.placement.* rows emit req_per_s + p99_us) diff on the
+# first match in this order.
+VALUE_KEYS = (
+    ("ns_per_op", False),
+    ("req_per_s", True),
+    ("p99_us", False),
+    ("probe_fraction", False),
+)
 # Rows promoted from soft-diff to gating (matched by name, any
 # shape/backend): (name, metric, higher_is_better).
 GATED_ROWS = (
